@@ -1,0 +1,95 @@
+"""AOT lowering: jit → StableHLO → XlaComputation → **HLO text** under
+``artifacts/``, plus ``manifest.txt`` for the rust runtime.
+
+HLO *text* is the interchange format (NOT ``.serialize()``): jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (from ``python/``).
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(kernel: str, dims):
+    """Lower one manifest entry; returns HLO text."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if kernel in ("gemm", "gemm_bias", "gemm_bias_relu"):
+        rows, d_in, d_out = dims
+        x = jax.ShapeDtypeStruct((rows, d_in), f32)
+        w = jax.ShapeDtypeStruct((d_in, d_out), f32)
+        if kernel == "gemm":
+            lowered = jax.jit(model.gemm).lower(x, w)
+        else:
+            b = jax.ShapeDtypeStruct((d_out,), f32)
+            fn = model.gemm_bias if kernel == "gemm_bias" else model.gemm_bias_relu
+            lowered = jax.jit(fn).lower(x, w, b)
+    elif kernel == "spmm":
+        edges, segs, d = dims
+        feats = jax.ShapeDtypeStruct((edges, d), f32)
+        w = jax.ShapeDtypeStruct((edges,), f32)
+        seg = jax.ShapeDtypeStruct((edges,), i32)
+        fn = functools.partial(model.spmm, num_segments=segs)
+        lowered = jax.jit(fn).lower(feats, w, seg)
+    elif kernel == "sddmm":
+        edges, d = dims
+        a = jax.ShapeDtypeStruct((edges, d), f32)
+        lowered = jax.jit(model.sddmm).lower(a, a)
+    else:
+        raise ValueError(f"unknown kernel {kernel}")
+    return to_hlo_text(lowered)
+
+
+def entry_filename(kernel: str, dims) -> str:
+    return f"{kernel}_{'x'.join(str(d) for d in dims)}.hlo.txt"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--only", default="", help="comma list of kernels to regenerate (default all)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(filter(None, args.only.split(",")))
+    manifest_lines = []
+    for kernel, dims, _ in shapes.manifest_entries():
+        fname = entry_filename(kernel, dims)
+        path = os.path.join(args.out, fname)
+        dims_s = ",".join(str(d) for d in dims)
+        manifest_lines.append(f"kernel={kernel} file={fname} dims={dims_s}")
+        if only and kernel not in only:
+            continue
+        if os.path.exists(path):
+            continue  # make-style: artifacts are immutable per shape
+        text = lower_entry(kernel, dims)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"lowered {kernel} dims=[{dims_s}] -> {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("# kernel artifacts (HLO text) — see python/compile/aot.py\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(manifest_lines)} entries")
+
+
+if __name__ == "__main__":
+    main()

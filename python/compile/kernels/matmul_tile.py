@@ -1,0 +1,77 @@
+"""Layer-1 Pallas kernel: blocked matmul tile (the GNN projection GEMM).
+
+The tile is blocked over the row dimension via ``BlockSpec`` so each grid
+step streams one ``(BLOCK_R, K)`` slab from HBM into VMEM, multiplies it
+against the resident ``(K, N)`` weight, and writes one ``(BLOCK_R, N)``
+output slab — the standard MXU-friendly schedule (see DESIGN.md
+§Hardware-Adaptation for the VMEM budget).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom calls; interpret mode lowers to plain HLO, which is exactly what the
+AOT artifacts need.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row block per grid step. 128 matches the MXU systolic dimension.
+BLOCK_R = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _bias_act_kernel(x_ref, w_ref, b_ref, o_ref, *, act):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if act == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def matmul(x, w):
+    """``x @ w`` as a row-blocked Pallas call. ``x.shape[0]`` must be a
+    multiple of ``BLOCK_R`` or small enough to be a single block."""
+    rows, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    block_r = BLOCK_R if rows % BLOCK_R == 0 else rows
+    grid = (rows // block_r,)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def matmul_bias_act(x, w, b, act="none"):
+    """``act(x @ w + b)`` fused projection tile (GCN layer §2.1)."""
+    rows, k = x.shape
+    _, n = w.shape
+    block_r = BLOCK_R if rows % BLOCK_R == 0 else rows
+    grid = (rows // block_r,)
+    kernel = functools.partial(_bias_act_kernel, act=act)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_r, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)

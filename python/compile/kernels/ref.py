@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth
+pytest sweeps against (and the semantics the rust NativeBackend mirrors)."""
+
+import jax.numpy as jnp
+
+
+def matmul(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def matmul_bias_act(x, w, b, act="none"):
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def spmm_tile(feats, w, seg, num_segments):
+    weighted = feats * w[:, None]
+    return jnp.zeros((num_segments + 1, feats.shape[1]), jnp.float32).at[seg].add(
+        weighted
+    )
+
+
+def sddmm_tile(dst, src):
+    return jnp.sum(dst * src, axis=1)
+
+
+def gat_edge_tile(u_dst, v_src, slope=0.2):
+    x = u_dst + v_src
+    return jnp.where(x >= 0, x, slope * x)

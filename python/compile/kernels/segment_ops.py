@@ -1,0 +1,76 @@
+"""Layer-1 Pallas kernels: SPMM aggregation and SDDMM scoring tiles.
+
+TPU-shaped reformulation of the sparse primitives (DESIGN.md
+§Hardware-Adaptation): instead of GPU scatter-atomics, the SPMM tile takes
+*pre-gathered* edge rows plus a segment-id vector and performs a weighted
+segment-sum — no atomics, static shapes, pure VPU reductions. Padding edges
+carry weight 0 and segment id ``num_segments`` (a sink row the caller
+slices off), so padding never perturbs numerics.
+
+The SDDMM tile takes pre-gathered dst/src rows and emits row-wise dots.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_kernel(feats_ref, w_ref, seg_ref, o_ref, *, num_segments):
+    feats = feats_ref[...]              # (E, D)
+    w = w_ref[...]                      # (E,)
+    seg = seg_ref[...]                  # (E,) int32, sink = num_segments
+    weighted = feats * w[:, None]
+    # one-hot matmul segment-sum: (S+1, E) @ (E, D). Dense, static-shape,
+    # MXU-friendly — the TPU idiom for moderate segment counts.
+    onehot = (
+        seg[None, :] == jnp.arange(num_segments + 1, dtype=jnp.int32)[:, None]
+    ).astype(jnp.float32)
+    o_ref[...] = jnp.dot(onehot, weighted, preferred_element_type=jnp.float32)
+
+
+def spmm_tile(feats, w, seg, num_segments):
+    """Weighted segment-sum of pre-gathered rows.
+
+    Returns ``(num_segments + 1, D)``; the last row is the padding sink.
+    """
+    e, d = feats.shape
+    assert w.shape == (e,) and seg.shape == (e,)
+    kernel = functools.partial(_spmm_kernel, num_segments=num_segments)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((num_segments + 1, d), jnp.float32),
+        interpret=True,
+    )(feats, w, seg)
+
+
+def _sddmm_kernel(dst_ref, src_ref, o_ref):
+    o_ref[...] = jnp.sum(dst_ref[...] * src_ref[...], axis=1)
+
+
+def sddmm_tile(dst, src):
+    """Row-wise dot products of pre-gathered row blocks → ``(E,)``."""
+    assert dst.shape == src.shape
+    e, _ = dst.shape
+    return pl.pallas_call(
+        _sddmm_kernel,
+        out_shape=jax.ShapeDtypeStruct((e,), jnp.float32),
+        interpret=True,
+    )(dst, src)
+
+
+def _gat_edge_kernel(u_ref, v_ref, o_ref, *, slope):
+    x = u_ref[...] + v_ref[...]
+    o_ref[...] = jnp.where(x >= 0, x, slope * x)
+
+
+def gat_edge_tile(u_dst, v_src, slope=0.2):
+    """LeakyReLU(u[dst] + v[src]) for pre-gathered per-edge head logits."""
+    assert u_dst.shape == v_src.shape
+    kernel = functools.partial(_gat_edge_kernel, slope=slope)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(u_dst.shape, jnp.float32),
+        interpret=True,
+    )(u_dst, v_src)

@@ -1,0 +1,118 @@
+"""Layer-2 JAX model functions — the per-tile dense compute of a GNN layer,
+calling the Layer-1 Pallas kernels. These are what `aot.py` lowers to HLO
+text for the rust runtime; they are also used directly (jitted) by
+`train.py`'s full-graph forward pass, so the trained weights and the rust
+inference share one definition of the math.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_tile, segment_ops
+
+# ---------------------------------------------------------------- tiles
+
+
+def gemm(x, w):
+    """Projection tile: ``x @ w`` (Pallas blocked matmul)."""
+    return (matmul_tile.matmul(x, w),)
+
+
+def gemm_bias(x, w, b):
+    return (matmul_tile.matmul_bias_act(x, w, b, act="none"),)
+
+
+def gemm_bias_relu(x, w, b):
+    return (matmul_tile.matmul_bias_act(x, w, b, act="relu"),)
+
+
+def spmm(feats, w, seg, *, num_segments):
+    """Weighted segment-sum aggregation tile (+1 sink row)."""
+    return (segment_ops.spmm_tile(feats, w, seg, num_segments),)
+
+
+def sddmm(dst, src):
+    """Row-wise dot scoring tile."""
+    return (segment_ops.sddmm_tile(dst, src),)
+
+
+# ------------------------------------------------- full-graph reference
+
+def gcn_layer_full(h, adj_rows, adj_cols, adj_w, self_w, w, b, act):
+    """Full-graph GCN layer (training path): mean aggregation with
+    self-loops, matching `rust/src/model/gcn.rs` semantics.
+
+    adj_rows/adj_cols/adj_w: COO edges (dst, src, 1/(deg+1)); self_w:
+    per-node 1/(deg+1).
+    """
+    # NOTE: the *_full training path uses plain jnp (interpret-mode
+    # pallas_call does not support reverse-mode autodiff); the AOT tile
+    # functions above are the Pallas versions, and pytest asserts both
+    # agree numerically.
+    hw = jnp.dot(h, w, preferred_element_type=jnp.float32)
+    gathered = hw[adj_cols] * adj_w[:, None]
+    agg = jnp.zeros_like(hw).at[adj_rows].add(gathered)
+    out = agg + hw * self_w[:, None] + b[None, :]
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def gat_layer_full(h, adj_rows, adj_cols, w, b, a_src, a_dst, heads, act):
+    """Full-graph GAT layer (training path), matching
+    `rust/src/model/gat.rs`: additive attention, LeakyReLU(0.2), self edge
+    in the softmax."""
+    n = h.shape[0]
+    d = w.shape[1]
+    head_dim = d // heads
+    z = jnp.dot(h, w, preferred_element_type=jnp.float32)
+    u = jnp.dot(z, a_dst)  # (n, heads)
+    v = jnp.dot(z, a_src)
+
+    def lrelu(x):
+        return jnp.where(x >= 0, x, 0.2 * x)
+
+    scores = lrelu(u[adj_rows] + v[adj_cols])  # (E, heads)
+    self_scores = lrelu(u + v)  # (n, heads)
+    # segment softmax per dst per head (self edge included)
+    neg = jnp.float32(-1e30)
+    mx = jnp.full((n, heads), neg).at[adj_rows].max(scores)
+    mx = jnp.maximum(mx, self_scores)
+    ex = jnp.exp(scores - mx[adj_rows])
+    ex_self = jnp.exp(self_scores - mx)
+    denom = jnp.zeros((n, heads)).at[adj_rows].add(ex) + ex_self
+    alpha = ex / denom[adj_rows]
+    alpha_self = ex_self / denom
+    # aggregate per head
+    zh = z.reshape(n, heads, head_dim)
+    msg = zh[adj_cols] * alpha[:, :, None]
+    agg = jnp.zeros((n, heads, head_dim)).at[adj_rows].add(msg)
+    agg = agg + zh * alpha_self[:, :, None]
+    out = agg.reshape(n, d) + b[None, :]
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def gcn_forward_full(params, h, adj_rows, adj_cols, adj_w, self_w):
+    """k-layer full-graph GCN forward. params = [(w, b), ...]."""
+    k = len(params)
+    for l, (w, b) in enumerate(params):
+        act = "none" if l + 1 == k else "relu"
+        h = gcn_layer_full(h, adj_rows, adj_cols, adj_w, self_w, w, b, act)
+    return h
+
+
+def gat_forward_full(params, h, adj_rows, adj_cols, heads):
+    """k-layer full-graph GAT forward. params = [(w, b, a_src, a_dst)...]."""
+    k = len(params)
+    for l, (w, b, a_src, a_dst) in enumerate(params):
+        act = "none" if l + 1 == k else "relu"
+        h = gat_layer_full(h, adj_rows, adj_cols, w, b, a_src, a_dst, heads, act)
+    return h
+
+
+def softmax_cross_entropy(logits, labels, mask):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

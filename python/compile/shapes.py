@@ -1,0 +1,58 @@
+"""The AOT artifact grid: every (kernel, shape) pair the rust runtime may
+dispatch (`rust/src/runtime/service.rs` looks artifacts up by these dims).
+
+The ring GEMM multiplies *feature-part slices* against weight row slices,
+so `d_in` must cover every part width `d/M` for the supported datasets
+(d ∈ {100, 128}), the labelled study set (d = 32) and the test dims, with
+M ∈ {1, 2, 4}; `d_out` covers the hidden dim and the GAT head count.
+
+SPMM artifacts have a fixed segment capacity; the rust runtime row-blocks
+larger outputs over it (`XlaHandle::spmm_tile`).
+"""
+
+ROW_TILE = 256
+EDGE_TILE = 1024
+SEG_CAP = 256
+
+# hidden dims of the supported models/datasets (+ small test dims)
+HIDDEN_DIMS = [32, 100, 128]
+TEST_DIMS = [8, 16]
+HEADS = 4
+PART_FACTORS = [1, 2, 4]
+
+
+def _gemm_dims():
+    dims = set()
+    for d in HIDDEN_DIMS:
+        for m in PART_FACTORS:
+            if d % m == 0:
+                w = d // m
+                dims.add((w, d))      # projection slice
+                dims.add((w, HEADS))  # GAT attention logits slice
+    for d in TEST_DIMS:
+        dims.add((d, d))
+        dims.add((16, 8))
+        dims.add((d, HEADS))
+    return sorted(dims)
+
+
+GEMM_DIMS = _gemm_dims()
+# bias-fused variants only for the test dims (the distributed models fuse
+# bias natively after aggregation; these prove the artifact path)
+GEMM_BIAS_DIMS = [(8, 8), (16, 16), (32, 32)]
+
+# feature widths for the SPMM/SDDMM tiles: all part widths + test dims
+SPARSE_DIMS = sorted({d // m for d in HIDDEN_DIMS for m in PART_FACTORS if d % m == 0}
+                     | set(TEST_DIMS))
+
+
+def manifest_entries():
+    """Yield (kernel, dims, fn_name) for aot.py."""
+    for d_in, d_out in GEMM_DIMS:
+        yield ("gemm", [ROW_TILE, d_in, d_out], None)
+    for d_in, d_out in GEMM_BIAS_DIMS:
+        yield ("gemm_bias", [ROW_TILE, d_in, d_out], None)
+        yield ("gemm_bias_relu", [ROW_TILE, d_in, d_out], None)
+    for d in SPARSE_DIMS:
+        yield ("spmm", [EDGE_TILE, SEG_CAP, d], None)
+        yield ("sddmm", [EDGE_TILE, d], None)

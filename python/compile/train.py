@@ -1,0 +1,193 @@
+"""Train the small GCN / GAT models for the accuracy study (paper Table 6)
+and the serving example — build-time only; the trained weights are
+exported in the `rust/src/runtime/weights.rs` interchange format and
+applied by the rust inference engines.
+
+Reads the labelled SBM study set written by ``deal gen-labelled`` (or
+generates it by invoking the deal binary if missing), trains with plain
+full-graph gradient descent + Adam on the train mask, and writes
+``weights_gcn.bin`` / ``weights_gat.bin`` plus an accuracy log.
+
+Usage: ``python -m compile.train --data ../data/labelled --out ../artifacts``
+"""
+
+import argparse
+import os
+import struct
+import subprocess
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+
+HEADS = 4
+
+
+# ---------------------------------------------------------- interchange IO
+
+def read_edges(path):
+    with open(path, "rb") as f:
+        n_nodes, n_edges = struct.unpack("<QQ", f.read(16))
+        buf = np.frombuffer(f.read(n_edges * 8), dtype="<u4").reshape(n_edges, 2)
+    return n_nodes, buf[:, 0].astype(np.int32), buf[:, 1].astype(np.int32)
+
+
+def read_tensors(path):
+    out = []
+    with open(path, "rb") as f:
+        (n,) = struct.unpack("<Q", f.read(8))
+        for _ in range(n):
+            rows, cols = struct.unpack("<QQ", f.read(16))
+            data = np.frombuffer(f.read(rows * cols * 4), dtype="<f4")
+            out.append(data.reshape(rows, cols).copy())
+    return out
+
+
+def write_tensors(path, tensors):
+    with open(path, "wb") as f:
+        f.write(struct.pack("<Q", len(tensors)))
+        for t in tensors:
+            t = np.asarray(t, dtype="<f4")
+            if t.ndim == 1:
+                t = t.reshape(1, -1)
+            f.write(struct.pack("<QQ", t.shape[0], t.shape[1]))
+            f.write(t.tobytes())
+
+
+def read_labels(path):
+    with open(path, "rb") as f:
+        n, n_classes = struct.unpack("<QQ", f.read(16))
+        labels = np.frombuffer(f.read(n * 4), dtype="<u4").astype(np.int32)
+    return labels, int(n_classes)
+
+
+def read_mask(path):
+    with open(path, "rb") as f:
+        (n,) = struct.unpack("<Q", f.read(8))
+        return np.frombuffer(f.read(n), dtype=np.uint8).astype(bool)
+
+
+# ----------------------------------------------------------------- training
+
+def init_params(kind, layers, d_in, d_out, key):
+    params = []
+    dims = [d_in] + [d_in] * (layers - 1)
+    outs = dims[1:] + [d_out]
+    for l in range(layers):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        di, do = dims[l], outs[l]
+        scale = (2.0 / di) ** 0.5
+        w = jax.random.normal(k1, (di, do)) * scale
+        b = jnp.zeros((do,))
+        if kind == "gat":
+            a_src = jax.random.normal(k2, (do, HEADS)) * scale
+            a_dst = jax.random.normal(k3, (do, HEADS)) * scale
+            params.append((w, b, a_src, a_dst))
+        else:
+            params.append((w, b))
+    return params
+
+
+def train(kind, feats, labels, n_classes, train_mask, rows, cols, epochs, seed):
+    n = feats.shape[0]
+    deg = np.zeros(n, dtype=np.float32)
+    np.add.at(deg, rows, 1.0)
+    adj_w = jnp.asarray(1.0 / (deg[rows] + 1.0))
+    self_w = jnp.asarray(1.0 / (deg + 1.0))
+    rows_j = jnp.asarray(rows)
+    cols_j = jnp.asarray(cols)
+    h = jnp.asarray(feats)
+    labels_j = jnp.asarray(labels)
+    mask_j = jnp.asarray(train_mask, dtype=jnp.float32)
+    # NOTE: the last layer maps hidden → hidden; a trailing linear head
+    # maps to classes so the GNN output stays `dim`-wide (the shape the
+    # rust engines produce). The head is exported as an extra tensor pair.
+    key = jax.random.PRNGKey(seed)
+    params = init_params(kind, 3, feats.shape[1], feats.shape[1], key)
+    key, hk = jax.random.split(key)
+    head_w = jax.random.normal(hk, (feats.shape[1], n_classes)) * 0.1
+    head_b = jnp.zeros((n_classes,))
+
+    def forward(params, head_w, head_b):
+        if kind == "gat":
+            emb = model.gat_forward_full(params, h, rows_j, cols_j, HEADS)
+        else:
+            emb = model.gcn_forward_full(params, h, rows_j, cols_j, adj_w, self_w)
+        return emb @ head_w + head_b[None, :]
+
+    def loss_fn(all_params):
+        params, head_w, head_b = all_params
+        logits = forward(params, head_w, head_b)
+        return model.softmax_cross_entropy(logits, labels_j, mask_j)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    all_params = (params, head_w, head_b)
+    m = jax.tree.map(jnp.zeros_like, all_params)
+    v = jax.tree.map(jnp.zeros_like, all_params)
+    for step in range(1, epochs + 1):
+        loss, grads = grad_fn(all_params)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, grads)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, grads)
+        mhat = jax.tree.map(lambda a: a / (1 - 0.9**step), m)
+        vhat = jax.tree.map(lambda a: a / (1 - 0.999**step), v)
+        all_params = jax.tree.map(
+            lambda p, mh, vh: p - 1e-2 * mh / (jnp.sqrt(vh) + 1e-8),
+            all_params,
+            mhat,
+            vhat,
+        )
+        if step % 50 == 0 or step == 1:
+            logits = forward(*all_params)
+            pred = jnp.argmax(logits, axis=1)
+            test = ~np.asarray(train_mask)
+            acc = float(jnp.mean((pred == labels_j)[jnp.asarray(test)]))
+            print(f"[{kind}] step {step:4d} loss {float(loss):.4f} test-acc {acc:.3f}")
+    return all_params
+
+
+def export(kind, all_params, out_dir):
+    params, head_w, head_b = all_params
+    tensors = []
+    for layer in params:
+        for t in layer:
+            tensors.append(np.asarray(t))
+    path = os.path.join(out_dir, f"weights_{kind}.bin")
+    write_tensors(path, tensors)
+    write_tensors(
+        os.path.join(out_dir, f"head_{kind}.bin"), [np.asarray(head_w), np.asarray(head_b)]
+    )
+    print(f"exported {path} ({len(tensors)} tensors)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--data", default="../data/labelled")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--models", default="gcn,gat")
+    args = ap.parse_args()
+
+    if not os.path.exists(os.path.join(args.data, "edges.bin")):
+        # generate via the deal CLI so rust and python share one dataset
+        deal = os.path.join(os.path.dirname(__file__), "../../target/release/deal")
+        subprocess.run([deal, "gen-labelled", "--out", args.data], check=True)
+
+    n_nodes, srcs, dsts = read_edges(os.path.join(args.data, "edges.bin"))
+    feats = read_tensors(os.path.join(args.data, "features.bin"))[0]
+    labels, n_classes = read_labels(os.path.join(args.data, "labels.bin"))
+    train_mask = read_mask(os.path.join(args.data, "train_mask.bin"))
+    assert feats.shape[0] == n_nodes
+    os.makedirs(args.out, exist_ok=True)
+    # COO with dst as the segment (row) index, matching the rust CSR.
+    for kind in args.models.split(","):
+        all_params = train(
+            kind, feats, labels, n_classes, train_mask, dsts, srcs, args.epochs, args.seed
+        )
+        export(kind, all_params, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Layer-1 correctness: every Pallas kernel vs the pure-jnp oracle,
+hypothesis-swept over shapes and values."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_tile, ref, segment_ops
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rng_arr(seed, shape, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-scale, scale, size=shape).astype(np.float32))
+
+
+# ------------------------------------------------------------- matmul
+
+
+@given(
+    rows=st.sampled_from([1, 3, 16, 128, 256]),
+    k=st.integers(1, 48),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(rows, k, n, seed):
+    x = rng_arr(seed, (rows, k))
+    w = rng_arr(seed + 1, (k, n))
+    got = matmul_tile.matmul(x, w)
+    want = ref.matmul(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    rows=st.sampled_from([2, 7, 128]),
+    k=st.integers(1, 32),
+    n=st.integers(1, 24),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_bias_act_matches_ref(rows, k, n, act, seed):
+    x = rng_arr(seed, (rows, k))
+    w = rng_arr(seed + 1, (k, n))
+    b = rng_arr(seed + 2, (n,))
+    got = matmul_tile.matmul_bias_act(x, w, b, act=act)
+    want = ref.matmul_bias_act(x, w, b, act=act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_blocked_path_used_for_multiple_blocks():
+    # 256 rows = 2 blocks of BLOCK_R; exercises the grid path.
+    x = rng_arr(0, (256, 16))
+    w = rng_arr(1, (16, 8))
+    np.testing.assert_allclose(
+        matmul_tile.matmul(x, w), ref.matmul(x, w), rtol=1e-5, atol=1e-5
+    )
+
+
+# ------------------------------------------------------------- spmm
+
+
+@given(
+    e=st.integers(1, 96),
+    d=st.integers(1, 32),
+    segs=st.integers(1, 24),
+    seed=st.integers(0, 2**16),
+)
+def test_spmm_tile_matches_ref(e, d, segs, seed):
+    rng = np.random.default_rng(seed)
+    feats = rng_arr(seed, (e, d))
+    w = rng_arr(seed + 1, (e,))
+    seg = jnp.asarray(rng.integers(0, segs + 1, size=e).astype(np.int32))
+    got = segment_ops.spmm_tile(feats, w, seg, segs)
+    want = ref.spmm_tile(feats, w, seg, segs)
+    assert got.shape == (segs + 1, d)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_spmm_padding_sink_isolated():
+    # padding edges (w=0, seg=segs) must leave real segments untouched
+    feats = jnp.ones((4, 3), jnp.float32)
+    w = jnp.asarray([1.0, 1.0, 0.0, 0.0], jnp.float32)
+    seg = jnp.asarray([0, 1, 2, 2], jnp.int32)  # 2 == sink for segs=2
+    out = segment_ops.spmm_tile(feats, w, seg, 2)
+    np.testing.assert_allclose(out[0], jnp.ones(3))
+    np.testing.assert_allclose(out[1], jnp.ones(3))
+    np.testing.assert_allclose(out[2], jnp.zeros(3))  # sink got zero weight
+
+
+# ------------------------------------------------------------- sddmm
+
+
+@given(e=st.integers(1, 128), d=st.integers(1, 48), seed=st.integers(0, 2**16))
+def test_sddmm_tile_matches_ref(e, d, seed):
+    a = rng_arr(seed, (e, d))
+    b = rng_arr(seed + 1, (e, d))
+    np.testing.assert_allclose(
+        segment_ops.sddmm_tile(a, b), ref.sddmm_tile(a, b), rtol=1e-4, atol=1e-5
+    )
+
+
+# ------------------------------------------------------------- gat edge
+
+
+@given(e=st.integers(1, 64), h=st.integers(1, 8), seed=st.integers(0, 2**16))
+def test_gat_edge_tile_matches_ref(e, h, seed):
+    u = rng_arr(seed, (e, h), scale=3.0)
+    v = rng_arr(seed + 1, (e, h), scale=3.0)
+    np.testing.assert_allclose(
+        segment_ops.gat_edge_tile(u, v), ref.gat_edge_tile(u, v), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_gat_edge_negative_slope():
+    u = jnp.asarray([[-1.0]], jnp.float32)
+    v = jnp.asarray([[-1.0]], jnp.float32)
+    out = segment_ops.gat_edge_tile(u, v)
+    np.testing.assert_allclose(out, [[-0.4]], rtol=1e-6)

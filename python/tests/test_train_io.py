@@ -1,0 +1,70 @@
+"""Interchange-format round trips between train.py and the rust runtime."""
+
+import os
+import struct
+import tempfile
+
+import numpy as np
+
+from compile import train
+
+
+def test_tensor_roundtrip():
+    tensors = [
+        np.arange(12, dtype="<f4").reshape(3, 4),
+        np.ones((1, 5), dtype="<f4"),
+    ]
+    path = os.path.join(tempfile.mkdtemp(), "w.bin")
+    train.write_tensors(path, tensors)
+    back = train.read_tensors(path)
+    assert len(back) == 2
+    np.testing.assert_array_equal(back[0], tensors[0])
+    np.testing.assert_array_equal(back[1], tensors[1])
+
+
+def test_1d_tensor_written_as_row():
+    path = os.path.join(tempfile.mkdtemp(), "v.bin")
+    train.write_tensors(path, [np.arange(4, dtype="<f4")])
+    back = train.read_tensors(path)
+    assert back[0].shape == (1, 4)
+
+
+def test_edges_reader_matches_rust_writer_format():
+    # format: u64 n_nodes, u64 n_edges, then (u32 src, u32 dst) pairs
+    path = os.path.join(tempfile.mkdtemp(), "e.bin")
+    with open(path, "wb") as f:
+        f.write(struct.pack("<QQ", 5, 3))
+        for s, d in [(0, 1), (4, 2), (3, 3)]:
+            f.write(struct.pack("<II", s, d))
+    n, srcs, dsts = train.read_edges(path)
+    assert n == 5
+    np.testing.assert_array_equal(srcs, [0, 4, 3])
+    np.testing.assert_array_equal(dsts, [1, 2, 3])
+
+
+def test_labels_and_mask_readers():
+    d = tempfile.mkdtemp()
+    lp = os.path.join(d, "labels.bin")
+    with open(lp, "wb") as f:
+        f.write(struct.pack("<QQ", 4, 3))
+        f.write(np.asarray([0, 2, 1, 2], dtype="<u4").tobytes())
+    labels, n_classes = train.read_labels(lp)
+    assert n_classes == 3
+    np.testing.assert_array_equal(labels, [0, 2, 1, 2])
+    mp = os.path.join(d, "mask.bin")
+    with open(mp, "wb") as f:
+        f.write(struct.pack("<Q", 4))
+        f.write(bytes([1, 0, 0, 1]))
+    mask = train.read_mask(mp)
+    np.testing.assert_array_equal(mask, [True, False, False, True])
+
+
+def test_init_params_shapes():
+    import jax
+
+    key = jax.random.PRNGKey(0)
+    gcn = train.init_params("gcn", 3, 16, 16, key)
+    assert len(gcn) == 3 and len(gcn[0]) == 2
+    gat = train.init_params("gat", 2, 16, 16, key)
+    assert len(gat) == 2 and len(gat[0]) == 4
+    assert gat[0][2].shape == (16, train.HEADS)

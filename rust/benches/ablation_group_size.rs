@@ -1,0 +1,55 @@
+//! Ablation (DESIGN.md design-choice study): the §3.5 communication-group
+//! size knob. Small groups bound peak memory but pay more round trips;
+//! large groups approach monolithic behaviour. Sweeps `group_cols` for the
+//! pipelined SPMM and reports time + peak memory — the trade-off the
+//! paper's partitioned communication balances.
+
+mod common;
+
+use std::sync::Arc;
+
+use deal::cluster::Cluster;
+use deal::primitives::spmm::{deal_spmm, EdgeValues, SpmmInput};
+use deal::primitives::ExecMode;
+use deal::util::bench::{BenchArgs, Report, Table};
+
+fn main() {
+    let args = BenchArgs::parse();
+    let mut report = Report::new("ablation_group_size");
+    let sweeps = [64usize, 256, 1024, 4096, 16384];
+    let mut table = Table::new(
+        "pipelined SPMM vs group size (products-sim, 4 machines)",
+        &["group_cols", "sim ms", "groups/machine (≈)", "peak mem"],
+    );
+    let setup = common::prim_setup("products-sim", args.quick, 2, 2, Some(128));
+    for &gc in &sweeps {
+        let plan = setup.plan.clone();
+        let tiles = Arc::clone(&setup.tiles);
+        let subs = Arc::clone(&setup.subs);
+        let cluster = Cluster::new(plan.world(), common::net());
+        let (_, rep) = cluster
+            .run(move |ctx| {
+                let (p_idx, _) = plan.coords_of(ctx.rank);
+                let (sub, svals) = &subs[p_idx];
+                let input = SpmmInput {
+                    plan: &plan,
+                    g: sub,
+                    vals: EdgeValues::Scalar(svals),
+                    h: &tiles[ctx.rank],
+                };
+                deal_spmm(ctx, &input, &deal::runtime::Native, ExecMode::Pipelined, gc, 7)
+            })
+            .unwrap();
+        let approx_groups =
+            (setup.plan.rows_of(0) as f64 / gc as f64).ceil() as usize + 1;
+        table.row(&[
+            gc.to_string(),
+            common::fmt_ms(rep.makespan()),
+            approx_groups.to_string(),
+            deal::util::human_bytes(rep.max_peak_mem()),
+        ]);
+    }
+    report.add_table(table);
+    report.note("small groups bound memory, large groups amortize latency — pick per machine-RAM budget".to_string());
+    report.finish();
+}

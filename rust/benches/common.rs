@@ -1,0 +1,87 @@
+//! Shared bench helpers (each bench binary does `mod common;`).
+#![allow(dead_code)]
+
+use std::sync::Arc;
+
+use deal::cluster::{ClusterReport, NetConfig};
+use deal::config::DealConfig;
+use deal::graph::{datasets, Csr};
+use deal::partition::PartitionPlan;
+use deal::primitives::scatter;
+use deal::tensor::Matrix;
+use deal::util::rng::Rng;
+
+pub const DATASETS: [&str; 3] = ["products-sim", "spammer-sim", "papers-sim"];
+
+/// Dataset scale per profile: quick keeps graphs around 2–8k nodes.
+pub fn ds_scale(quick: bool) -> f64 {
+    if quick {
+        1.0 / 16.0
+    } else {
+        1.0
+    }
+}
+
+/// Load a registry dataset and its CSR.
+pub fn load(name: &str, quick: bool) -> (Csr, Matrix) {
+    let ds = datasets::load(name, ds_scale(quick)).expect("dataset");
+    (Csr::from(&ds.edges), ds.features)
+}
+
+/// Base config for pipeline benches.
+pub fn base_cfg(name: &str, quick: bool) -> DealConfig {
+    let mut cfg = DealConfig::default();
+    cfg.dataset.name = name.into();
+    cfg.dataset.scale = ds_scale(quick);
+    cfg.model.fanout = if quick { 10 } else { 50 };
+    cfg
+}
+
+/// Scatter features + per-partition sub-CSRs for primitive benches.
+pub struct PrimSetup {
+    pub plan: PartitionPlan,
+    pub tiles: Arc<Vec<Matrix>>,
+    pub subs: Arc<Vec<(Csr, Vec<f32>)>>,
+    pub g: Csr,
+}
+
+pub fn prim_setup(name: &str, quick: bool, p: usize, m: usize, d_override: Option<usize>) -> PrimSetup {
+    let (g, mut feats) = load(name, quick);
+    if let Some(d) = d_override {
+        let mut rng = Rng::new(1);
+        feats = Matrix::random(g.n_rows, d, 1.0, &mut rng);
+    }
+    let plan = PartitionPlan::new(g.n_rows, feats.cols, p, m);
+    let tiles = Arc::new(scatter(&plan, &feats));
+    let vals = deal::primitives::mean_weights(&g);
+    let mut subs = Vec::new();
+    for pi in 0..p {
+        let (lo, hi) = plan.node_range(pi);
+        let sub = g.slice_rows(lo, hi);
+        let svals = vals[g.indptr[lo] as usize..g.indptr[hi] as usize].to_vec();
+        subs.push((sub, svals));
+    }
+    PrimSetup { plan, tiles, subs: Arc::new(subs), g }
+}
+
+pub fn net() -> NetConfig {
+    NetConfig::default()
+}
+
+pub fn fmt_ms(secs: f64) -> String {
+    format!("{:.2}", secs * 1e3)
+}
+
+pub fn speedup(base: f64, new: f64) -> String {
+    format!("{:.2}x", base / new.max(1e-12))
+}
+
+pub fn comm_compute(rep: &ClusterReport) -> (f64, f64) {
+    let comm = rep.max_comm_wait();
+    let comp = rep
+        .machines
+        .iter()
+        .map(|m| m.sim_compute_secs)
+        .fold(0.0, f64::max);
+    (comm, comp)
+}

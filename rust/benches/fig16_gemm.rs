@@ -1,0 +1,66 @@
+//! Fig. 16: distributed GEMM — Deal's ring GEMM vs CAGNET's all-reduce
+//! GEMM on products-sim features, hidden dims 256 and 1024, 2–8 machines.
+
+mod common;
+
+use std::sync::Arc;
+
+use deal::cluster::Cluster;
+use deal::primitives::gemm::{cagnet_gemm, deal_gemm};
+use deal::tensor::Matrix;
+use deal::util::bench::{BenchArgs, Report, Table};
+use deal::util::rng::Rng;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let mut report = Report::new("fig16_gemm");
+    report.note(format!("profile: {}", if args.quick { "quick" } else { "full" }));
+    let dims = args.pick(vec![256usize], vec![256, 1024]);
+    let machines = args.pick(vec![2usize, 4, 8], vec![2, 4, 8, 16]);
+    let mut table = Table::new(
+        "distributed GEMM, products-sim (sim makespan, ms)",
+        &["hidden", "machines (P×M)", "CAGNET", "Deal", "speedup", "bytes CAGNET", "bytes Deal"],
+    );
+    for &d in &dims {
+        for &w in &machines {
+            // feature-partition heavy split: M = machines/2 (min 2)
+            let m = (w / 2).max(2);
+            let p = w / m;
+            let setup = common::prim_setup("products-sim", args.quick, p, m, Some(d));
+            let mut rng = Rng::new(9);
+            let weight = Arc::new(Matrix::random(d, d, 0.1, &mut rng));
+            let mut times = Vec::new();
+            let mut bytes = Vec::new();
+            for deal_algo in [false, true] {
+                let plan = setup.plan.clone();
+                let tiles = Arc::clone(&setup.tiles);
+                let weight = Arc::clone(&weight);
+                let cluster = Cluster::new(plan.world(), common::net());
+                let (_, rep) = cluster
+                    .run(move |ctx| {
+                        let backend = deal::runtime::Native;
+                        if deal_algo {
+                            deal_gemm(ctx, &plan, &tiles[ctx.rank], &weight, &backend, 1).unwrap()
+                        } else {
+                            cagnet_gemm(ctx, &plan, &tiles[ctx.rank], &weight, &backend, 1).unwrap()
+                        }
+                    })
+                    .unwrap();
+                times.push(rep.makespan());
+                bytes.push(rep.total_bytes());
+            }
+            table.row(&[
+                d.to_string(),
+                format!("{} ({}x{})", w, p, m),
+                common::fmt_ms(times[0]),
+                common::fmt_ms(times[1]),
+                common::speedup(times[0], times[1]),
+                deal::util::human_bytes(bytes[0]),
+                deal::util::human_bytes(bytes[1]),
+            ]);
+        }
+    }
+    report.add_table(table);
+    report.note("paper: Deal GEMM 1.52x / 1.47x faster than CAGNET on average; gap grows with machines".to_string());
+    report.finish();
+}

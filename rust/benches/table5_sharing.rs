@@ -1,0 +1,43 @@
+//! Table 5: the sharing ratio achieved by DGI, P³ and SALIENT++ on the
+//! three datasets (3-layer model, fanout 10).
+
+mod common;
+
+use deal::baselines::sharing::{occ_batched, occ_full, occ_no_sharing, occ_p3, occ_salient, sharing_ratio};
+use deal::util::bench::{BenchArgs, Report, Table};
+
+fn main() {
+    let args = BenchArgs::parse();
+    let mut report = Report::new("table5_sharing");
+    let k = 3;
+    let fanout = args.pick(5, 10);
+    let mut table = Table::new(
+        "sharing ratio (Deal = 100% by construction)",
+        &["approach", "products-sim", "spammer-sim", "papers-sim"],
+    );
+    let mut rows: Vec<Vec<String>> = vec![
+        vec!["DGI".into()],
+        vec!["P3".into()],
+        vec!["SALIENT++".into()],
+    ];
+    for name in common::DATASETS {
+        let (g, _) = common::load(name, true);
+        // memory-bound batch *fraction* (see fig14 note)
+        let batch = (g.n_rows / 256).max(16);
+        let cache = (g.n_rows / 8).max(64);
+        let ns = occ_no_sharing(&g, k, fanout, 3);
+        let full = occ_full(&g, k, fanout, 3);
+        let dgi = sharing_ratio(ns, full, occ_batched(&g, batch, k, fanout, 3));
+        let p3 = sharing_ratio(ns, full, occ_p3(&g, batch, k, fanout, 3));
+        let sal = sharing_ratio(ns, full, occ_salient(&g, batch, cache, k, fanout, 3));
+        rows[0].push(format!("{:.1}%", dgi * 100.0));
+        rows[1].push(format!("{:.1}%", p3 * 100.0));
+        rows[2].push(format!("{:.1}%", sal * 100.0));
+    }
+    for r in rows {
+        table.row(&r);
+    }
+    report.add_table(table);
+    report.note("paper: DGI 60.1/87.0/63.9%, P3 33.3/46.1/28.6%, SALIENT++ 66.4/77.9/70.3%".to_string());
+    report.finish();
+}

@@ -1,0 +1,157 @@
+//! Tables 1–3: the closed-form per-machine memory/communication models vs
+//! the byte counters measured on the simulated cluster.
+
+mod common;
+
+use std::sync::Arc;
+
+use deal::cluster::Cluster;
+use deal::partition::PartitionPlan;
+use deal::primitives::costs::{self, CostParams};
+use deal::primitives::gemm::{cagnet_gemm, deal_gemm};
+use deal::primitives::sddmm::{sddmm, SddmmAlgo, SddmmInput};
+use deal::primitives::spmm::{deal_spmm, exchange_g0_spmm, spmm_2d, EdgeValues, SpmmInput};
+use deal::primitives::{scatter, ExecMode};
+use deal::tensor::Matrix;
+use deal::util::bench::{BenchArgs, Report, Table};
+use deal::util::rng::Rng;
+
+fn payload_sent(rep: &deal::cluster::ClusterReport) -> f64 {
+    // strip 64-byte envelopes, average per machine
+    let total: u64 = rep
+        .machines
+        .iter()
+        .map(|m| m.bytes_sent.saturating_sub(64 * m.msgs_sent))
+        .sum();
+    total as f64 / rep.machines.len() as f64
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let mut report = Report::new("tables_cost_model");
+    let (n, d) = args.pick((1024usize, 32usize), (8192, 128));
+    let (p, m) = (2usize, 4usize);
+    let plan = PartitionPlan::new(n, d, p, m);
+    let mut rng = Rng::new(4);
+    let h = Matrix::random(n, d, 1.0, &mut rng);
+    let w = Matrix::random(d, d, 1.0, &mut rng);
+    let tiles = Arc::new(scatter(&plan, &h));
+    // synthetic graph with known Z
+    let z_target = 12usize;
+    let el = deal::graph::rmat::rmat(n.ilog2(), n * z_target, deal::graph::rmat::RmatParams::paper(), 5);
+    let g = deal::graph::Csr::from(&el);
+    let vals = deal::primitives::mean_weights(&g);
+    let mut subs = Vec::new();
+    for pi in 0..p {
+        let (lo, hi) = plan.node_range(pi);
+        subs.push((
+            g.slice_rows(lo, hi),
+            vals[g.indptr[lo] as usize..g.indptr[hi] as usize].to_vec(),
+        ));
+    }
+    let subs = Arc::new(subs);
+    let c = CostParams::new(n, d, p, m, z_target as f64);
+
+    // ---- Table 1: GEMM
+    let mut table = Table::new(
+        "Table 1: GEMM per-machine comm + peak memory (measured vs model)",
+        &["method", "comm meas", "comm model", "mem meas", "mem model"],
+    );
+    for (label, deal_algo, comm_f, mem_f) in [
+        ("SOTA (CAGNET)", false, costs::gemm_sota_comm(&c), costs::gemm_sota_memory(&c)),
+        ("Ours (ring)", true, costs::gemm_ours_comm(&c), costs::gemm_ours_memory(&c)),
+    ] {
+        let plan2 = plan.clone();
+        let tiles2 = Arc::clone(&tiles);
+        let w2 = w.clone();
+        let cluster = Cluster::new(plan.world(), common::net());
+        let (_, rep) = cluster
+            .run(move |ctx| {
+                let b = deal::runtime::Native;
+                if deal_algo {
+                    deal_gemm(ctx, &plan2, &tiles2[ctx.rank], &w2, &b, 1).unwrap()
+                } else {
+                    cagnet_gemm(ctx, &plan2, &tiles2[ctx.rank], &w2, &b, 1).unwrap()
+                }
+            })
+            .unwrap();
+        table.row(&[
+            label.into(),
+            deal::util::human_bytes(payload_sent(&rep) as u64),
+            deal::util::human_bytes((comm_f * 4.0) as u64),
+            deal::util::human_bytes(rep.max_peak_mem()),
+            deal::util::human_bytes((mem_f * 4.0) as u64),
+        ]);
+    }
+    report.add_table(table);
+
+    // ---- Table 2: SPMM
+    let mut table = Table::new(
+        "Table 2: SPMM per-machine comm (measured vs model)",
+        &["method", "comm meas", "comm model"],
+    );
+    for (label, which, model) in [
+        ("Ours (feature exch)", 0, costs::spmm_ours_comm(&c)),
+        ("Exchange G0", 1, costs::spmm_exchange_g0_comm(&c)),
+        ("2D-based", 2, costs::spmm_2d_comm(&c)),
+    ] {
+        let plan2 = plan.clone();
+        let tiles2 = Arc::clone(&tiles);
+        let subs2 = Arc::clone(&subs);
+        let cluster = Cluster::new(plan.world(), common::net());
+        let (_, rep) = cluster
+            .run(move |ctx| {
+                let (p_idx, _) = plan2.coords_of(ctx.rank);
+                let (sub, svals) = &subs2[p_idx];
+                let input = SpmmInput {
+                    plan: &plan2,
+                    g: sub,
+                    vals: EdgeValues::Scalar(svals),
+                    h: &tiles2[ctx.rank],
+                };
+                match which {
+                    0 => deal_spmm(ctx, &input, &deal::runtime::Native, ExecMode::Monolithic, 0, 7),
+                    1 => exchange_g0_spmm(ctx, &input, 7),
+                    _ => spmm_2d(ctx, &input, 7),
+                }
+            })
+            .unwrap();
+        table.row(&[
+            label.into(),
+            deal::util::human_bytes(payload_sent(&rep) as u64),
+            deal::util::human_bytes((model * 4.0) as u64),
+        ]);
+    }
+    report.add_table(table);
+
+    // ---- Table 3: SDDMM
+    let mut table = Table::new(
+        "Table 3: SDDMM per-machine comm (measured vs model)",
+        &["method", "comm meas", "comm model"],
+    );
+    for (label, algo, model) in [
+        ("Approach (i) duplicate", SddmmAlgo::Duplicate, costs::sddmm_dup_comm(&c)),
+        ("Approach (ii) split", SddmmAlgo::Split, costs::sddmm_split_comm(&c)),
+    ] {
+        let plan2 = plan.clone();
+        let tiles2 = Arc::clone(&tiles);
+        let subs2 = Arc::clone(&subs);
+        let cluster = Cluster::new(plan.world(), common::net());
+        let (_, rep) = cluster
+            .run(move |ctx| {
+                let (p_idx, _) = plan2.coords_of(ctx.rank);
+                let input = SddmmInput { plan: &plan2, g: &subs2[p_idx].0, h: &tiles2[ctx.rank] };
+                sddmm(ctx, &input, algo, ExecMode::Monolithic, 0, 11)
+            })
+            .unwrap();
+        table.row(&[
+            label.into(),
+            deal::util::human_bytes(payload_sent(&rep) as u64),
+            deal::util::human_bytes((model * 4.0) as u64),
+        ]);
+    }
+    report.add_table(table);
+    report.note(format!("params: N={} D={} P={} M={} Z≈{}", n, d, p, m, z_target));
+    report.note("models count unique-column expectations; measured values include duplicate-column effects, so agreement within ~2x validates the shape".to_string());
+    report.finish();
+}

@@ -1,0 +1,154 @@
+//! Merged multi-hop ego networks ("message-flow graphs", DGL's MFG): the
+//! unit of work for the ego-centric baselines, built by expanding a batch
+//! of roots hop by hop with per-layer dedup — exactly the structure whose
+//! construction cost and cross-batch redundancy Deal eliminates.
+
+use std::collections::HashMap;
+
+use crate::graph::{Csr, NodeId};
+use crate::util::rng::Rng;
+
+/// A merged ego network for a batch of roots.
+///
+/// `layer_nodes[0]` is the innermost (hop-k) node set; `layer_nodes[k]`
+/// are the roots. `layer_edges[l][(src_pos, dst_pos)]` connects positions
+/// in `layer_nodes[l]` to positions in `layer_nodes[l+1]`. Because the
+/// models use self-loop aggregation, every `layer_nodes[l+1]` node is also
+/// present in `layer_nodes[l]` (its own position recorded in
+/// `self_pos[l]`).
+#[derive(Clone, Debug)]
+pub struct Mfg {
+    pub layer_nodes: Vec<Vec<NodeId>>,
+    pub layer_edges: Vec<Vec<(u32, u32)>>,
+    /// `self_pos[l][i]` = position of `layer_nodes[l+1][i]` inside
+    /// `layer_nodes[l]`.
+    pub self_pos: Vec<Vec<u32>>,
+}
+
+impl Mfg {
+    /// Total node occurrences (the sharing-accounting denominator).
+    pub fn node_occurrences(&self) -> usize {
+        self.layer_nodes.iter().map(|l| l.len()).sum()
+    }
+}
+
+/// Build the merged ego network of `roots` over `g` (global CSR), `k`
+/// hops, `fanout` samples per hop (0 = all neighbors), deduplicating
+/// frontier nodes per layer *within this batch*.
+pub fn build_mfg(g: &Csr, roots: &[NodeId], k: usize, fanout: usize, rng: &mut Rng) -> Mfg {
+    let mut layer_nodes: Vec<Vec<NodeId>> = Vec::with_capacity(k + 1);
+    let mut layer_edges: Vec<Vec<(u32, u32)>> = Vec::with_capacity(k);
+    layer_nodes.push(roots.to_vec());
+    // expand from roots inwards
+    for _ in 0..k {
+        let frontier = layer_nodes.last().unwrap();
+        let mut next: Vec<NodeId> = Vec::new();
+        let mut pos: HashMap<NodeId, u32> = HashMap::new();
+        // self-loops: every frontier node appears in the next layer
+        for &v in frontier {
+            pos.entry(v).or_insert_with(|| {
+                next.push(v);
+                (next.len() - 1) as u32
+            });
+        }
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for (dst_pos, &v) in frontier.iter().enumerate() {
+            let row = g.row(v as usize);
+            if row.is_empty() {
+                continue;
+            }
+            let take = if fanout == 0 { row.len() } else { fanout.min(row.len()) };
+            let mut pool: Vec<NodeId> = row.to_vec();
+            // partial Fisher–Yates
+            let n = pool.len();
+            for i in 0..take.min(n.saturating_sub(1)) {
+                let j = rng.range(i, n);
+                pool.swap(i, j);
+            }
+            for &s in &pool[..take] {
+                let sp = *pos.entry(s).or_insert_with(|| {
+                    next.push(s);
+                    (next.len() - 1) as u32
+                });
+                edges.push((sp, dst_pos as u32));
+            }
+        }
+        layer_nodes.push(next);
+        layer_edges.push(edges);
+    }
+    // flip to innermost-first
+    layer_nodes.reverse();
+    layer_edges.reverse();
+    // self positions: node layer l+1 position i → its position in layer l
+    let mut self_pos: Vec<Vec<u32>> = Vec::with_capacity(k);
+    for l in 0..k {
+        let inner: HashMap<NodeId, u32> = layer_nodes[l]
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v, i as u32))
+            .collect();
+        self_pos.push(
+            layer_nodes[l + 1]
+                .iter()
+                .map(|v| *inner.get(v).expect("self node missing from inner layer"))
+                .collect(),
+        );
+    }
+    Mfg { layer_nodes, layer_edges, self_pos }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{rmat, RmatParams};
+
+    fn g() -> Csr {
+        Csr::from(&rmat(8, 3000, RmatParams::paper(), 3))
+    }
+
+    #[test]
+    fn mfg_structure() {
+        let g = g();
+        let mut rng = Rng::new(1);
+        let roots: Vec<NodeId> = (0..16).collect();
+        let mfg = build_mfg(&g, &roots, 2, 4, &mut rng);
+        assert_eq!(mfg.layer_nodes.len(), 3);
+        assert_eq!(*mfg.layer_nodes.last().unwrap(), roots);
+        // layers are dedup'd
+        for layer in &mfg.layer_nodes {
+            let mut d = layer.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), layer.len());
+        }
+        // every outer node present in inner layer (self loop)
+        for l in 0..2 {
+            for (i, &v) in mfg.layer_nodes[l + 1].iter().enumerate() {
+                let p = mfg.self_pos[l][i] as usize;
+                assert_eq!(mfg.layer_nodes[l][p], v);
+            }
+        }
+        // edges reference valid positions
+        for l in 0..2 {
+            for &(s, d) in &mfg.layer_edges[l] {
+                assert!((s as usize) < mfg.layer_nodes[l].len());
+                assert!((d as usize) < mfg.layer_nodes[l + 1].len());
+            }
+        }
+    }
+
+    #[test]
+    fn batching_shares_within_batch() {
+        // one batch of 32 roots must have fewer occurrences than 32
+        // separate singleton batches.
+        let g = g();
+        let mut rng = Rng::new(2);
+        let roots: Vec<NodeId> = (0..32).collect();
+        let merged = build_mfg(&g, &roots, 2, 8, &mut rng).node_occurrences();
+        let mut separate = 0;
+        for &r in &roots {
+            separate += build_mfg(&g, &[r], 2, 8, &mut rng).node_occurrences();
+        }
+        assert!(merged < separate, "merged {} !< separate {}", merged, separate);
+    }
+}

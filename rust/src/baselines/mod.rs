@@ -1,0 +1,39 @@
+//! Baseline inference systems reimplemented from their papers' algorithmic
+//! descriptions (P³ is closed source; the paper also reimplements its
+//! baselines — §4.1):
+//!
+//! - [`engines::dgi_inference`] — DGI-style layerwise inference over
+//!   *batches* of merged ego networks: full sharing within a batch, none
+//!   across batches.
+//! - [`engines::salient_inference`] — SALIENT++-style per-batch ego
+//!   network execution with an LRU feature cache; sharing is bounded by
+//!   the hit ratio and cache maintenance costs real time.
+//! - [`sharing`] — the pure-counting studies: leveraged sharing vs batch
+//!   size (Fig. 5) and the DGI / P³ / SALIENT++ sharing ratios (Table 5).
+//!
+//! Simulation note (DESIGN.md §Substitutions): baseline machines sample
+//! ego networks against a shared read-only CSR (DistDGL samples via RPC;
+//! not charging that communication *favors the baselines*, making Deal's
+//! measured speedups conservative). Feature traffic is fully charged.
+
+pub mod engines;
+pub mod mfg;
+pub mod sharing;
+
+/// Options shared by the baseline engines.
+#[derive(Clone, Copy, Debug)]
+pub struct BaselineOpts {
+    /// Ego-network batch size per machine.
+    pub batch_size: usize,
+    /// Neighbors sampled per hop (0 = full neighborhood).
+    pub fanout: usize,
+    /// LRU feature-cache capacity in rows (SALIENT++ only).
+    pub cache_rows: usize,
+    pub seed: u64,
+}
+
+impl Default for BaselineOpts {
+    fn default() -> Self {
+        BaselineOpts { batch_size: 1024, fanout: 50, cache_rows: 4096, seed: 0xBA5E }
+    }
+}

@@ -1,0 +1,180 @@
+//! Sharing-opportunity accounting (Fig. 5, Table 5).
+//!
+//! All quantities are node *occurrence* counts over sampled ego networks:
+//! without sharing, every occurrence is one projection + one aggregation
+//! input. Definitions:
+//!
+//! - `no_sharing` — Σ over roots of per-ego occurrences (per-ego dedup
+//!   only, which any MFG builder performs).
+//! - `full` — occurrences of one merged batch containing *all* roots (what
+//!   Deal's layerwise execution achieves by construction).
+//! - an approach's **leveraged sharing ratio** is
+//!   `(no_sharing − occ_approach) / (no_sharing − full)` — the fraction of
+//!   the total sharing opportunity it captures (1.0 = Deal).
+//!
+//! Approaches (per the paper's §5 descriptions):
+//! - **DGI**: merged batches → within-batch dedup at every layer.
+//! - **P³**: the layer consuming `H^(0)` is computed collectively for all
+//!   nodes (full dedup there); the remaining layers run per ego network.
+//! - **SALIENT++**: DGI-style batches plus an LRU feature cache that
+//!   additionally dedups innermost-layer occurrences across batches.
+
+use crate::graph::{Csr, NodeId};
+use crate::util::rng::Rng;
+
+use super::mfg::build_mfg;
+
+/// Occurrences for per-ego execution (the no-sharing denominator).
+pub fn occ_no_sharing(g: &Csr, k: usize, fanout: usize, seed: u64) -> usize {
+    let mut rng = Rng::new(seed);
+    let mut total = 0usize;
+    for v in 0..g.n_rows {
+        let mfg = build_mfg(g, &[v as NodeId], k, fanout, &mut rng);
+        total += mfg.node_occurrences();
+    }
+    total
+}
+
+/// Occurrences under batched merged execution (batch size in roots).
+pub fn occ_batched(g: &Csr, batch: usize, k: usize, fanout: usize, seed: u64) -> usize {
+    let mut rng = Rng::new(seed);
+    let roots: Vec<NodeId> = (0..g.n_rows as NodeId).collect();
+    roots
+        .chunks(batch.max(1))
+        .map(|c| build_mfg(g, c, k, fanout, &mut rng).node_occurrences())
+        .sum()
+}
+
+/// Occurrences of the single all-node batch (full sharing — Deal).
+pub fn occ_full(g: &Csr, k: usize, fanout: usize, seed: u64) -> usize {
+    occ_batched(g, g.n_rows.max(1), k, fanout, seed)
+}
+
+/// P³: within each batch, its hybrid parallelism computes the *first GNN
+/// layer* (the outermost hop's aggregation into hop-(k−1) nodes) with
+/// model parallelism — full sharing of the innermost layer inside the
+/// batch — then every ego network finishes its remaining layers
+/// individually ("the outermost hop alone only contributes limited
+/// sharings", §4.2: upper layers, which DGI also dedups, get none).
+pub fn occ_p3(g: &Csr, batch: usize, k: usize, fanout: usize, seed: u64) -> usize {
+    let mut rng = Rng::new(seed);
+    let roots: Vec<NodeId> = (0..g.n_rows as NodeId).collect();
+    let mut total = 0usize;
+    for chunk in roots.chunks(batch.max(1)) {
+        // innermost layer: batch-merged (model-parallel first layer)
+        let merged = build_mfg(g, chunk, k, fanout, &mut rng);
+        total += merged.layer_nodes[0].len();
+        // upper layers: per ego, no sharing
+        for &v in chunk {
+            let ego = build_mfg(g, &[v], k, fanout, &mut rng);
+            for l in 1..=k {
+                total += ego.layer_nodes[l].len();
+            }
+        }
+    }
+    total
+}
+
+/// SALIENT++: DGI batches + an LRU cache (capacity in rows) that saves
+/// repeated innermost-layer occurrences across batches.
+pub fn occ_salient(
+    g: &Csr,
+    batch: usize,
+    cache_rows: usize,
+    k: usize,
+    fanout: usize,
+    seed: u64,
+) -> usize {
+    let mut rng = Rng::new(seed);
+    let roots: Vec<NodeId> = (0..g.n_rows as NodeId).collect();
+    let mut total = 0usize;
+    let mut cache = super::engines::LruCache::new(cache_rows, 0);
+    for c in roots.chunks(batch.max(1)) {
+        let mfg = build_mfg(g, c, k, fanout, &mut rng);
+        let mut occ = mfg.node_occurrences();
+        for &v in &mfg.layer_nodes[0] {
+            if cache.get(v).is_some() {
+                occ -= 1; // cached: innermost occurrence saved
+            } else {
+                cache.insert(v, &[]);
+            }
+        }
+        total += occ;
+    }
+    total
+}
+
+/// Leveraged sharing ratio given an approach's occurrence count.
+pub fn sharing_ratio(no_sharing: usize, full: usize, approach: usize) -> f64 {
+    let potential = no_sharing.saturating_sub(full);
+    if potential == 0 {
+        return 1.0;
+    }
+    no_sharing.saturating_sub(approach) as f64 / potential as f64
+}
+
+/// Fig. 5 curve: leveraged sharing vs batch size (fraction of all nodes).
+pub fn fig5_curve(g: &Csr, fractions: &[f64], k: usize, fanout: usize, seed: u64) -> Vec<(f64, f64)> {
+    let no_share = occ_no_sharing(g, k, fanout, seed);
+    let full = occ_full(g, k, fanout, seed);
+    fractions
+        .iter()
+        .map(|&f| {
+            let batch = ((g.n_rows as f64 * f).round() as usize).max(1);
+            let occ = occ_batched(g, batch, k, fanout, seed);
+            (f, sharing_ratio(no_share, full, occ))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{rmat, RmatParams};
+
+    fn g() -> Csr {
+        Csr::from(&rmat(9, 6000, RmatParams::paper(), 61))
+    }
+
+    #[test]
+    fn ordering_no_sharing_ge_batched_ge_full() {
+        let g = g();
+        let ns = occ_no_sharing(&g, 2, 5, 1);
+        let b = occ_batched(&g, 64, 2, 5, 1);
+        let f = occ_full(&g, 2, 5, 1);
+        assert!(ns >= b, "{} >= {}", ns, b);
+        assert!(b >= f, "{} >= {}", b, f);
+        assert!(f > 0);
+    }
+
+    #[test]
+    fn ratios_in_unit_interval_and_monotone_in_batch() {
+        let g = g();
+        let curve = fig5_curve(&g, &[0.01, 0.1, 0.5, 1.0], 2, 5, 2);
+        for &(_, r) in &curve {
+            assert!((0.0..=1.0001).contains(&r), "ratio {}", r);
+        }
+        // full batch == full sharing
+        assert!((curve.last().unwrap().1 - 1.0).abs() < 1e-9);
+        // larger batches never reduce sharing (monotone up to noise)
+        for w in curve.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 0.05, "curve not monotone: {:?}", curve);
+        }
+    }
+
+    #[test]
+    fn table5_shape_dgi_beats_p3_salient_beats_dgi() {
+        let g = g();
+        let (k, fanout, seed) = (3, 10, 3);
+        let ns = occ_no_sharing(&g, k, fanout, seed);
+        let full = occ_full(&g, k, fanout, seed);
+        let dgi = sharing_ratio(ns, full, occ_batched(&g, 64, k, fanout, seed));
+        let p3 = sharing_ratio(ns, full, occ_p3(&g, 64, k, fanout, seed));
+        let sal = sharing_ratio(ns, full, occ_salient(&g, 64, 1 << 20, k, fanout, seed));
+        // Paper Table 5 ordering: SALIENT++ ≥ DGI > P³, all < 100%.
+        assert!(sal >= dgi, "salient {} >= dgi {}", sal, dgi);
+        assert!(dgi > p3, "dgi {} > p3 {}", dgi, p3);
+        assert!(sal < 1.0);
+        assert!(p3 > 0.0);
+    }
+}

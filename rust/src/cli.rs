@@ -1,0 +1,272 @@
+//! Command-line interface (hand-rolled: no `clap` offline).
+//!
+//! ```text
+//! deal run        [--config FILE] [--set section.key=value ...]
+//! deal gen-dataset --name NAME --scale S --out PATH
+//! deal gen-labelled --nodes N --classes C --degree D --dim F --out DIR
+//! deal datasets
+//! deal help
+//! ```
+
+use std::path::PathBuf;
+
+use crate::config::DealConfig;
+use crate::coordinator::Pipeline;
+use crate::graph::datasets;
+use crate::util::{human_bytes, human_secs};
+use crate::Result;
+
+const USAGE: &str = "deal — Distributed End-to-End GNN Inference for All Nodes
+
+USAGE:
+  deal run [--config FILE] [--set section.key=value]...   run the pipeline
+  deal gen-dataset --name NAME [--scale S] --out PATH     write an edge file
+  deal gen-labelled [--nodes N] [--classes C] [--degree D]
+                    [--dim F] [--seed S] --out DIR        write the SBM study set
+  deal datasets                                           list the registry
+  deal help                                               this message
+
+Config keys (see rust/src/config.rs): dataset.name, dataset.scale,
+cluster.machines, cluster.feature_parts, cluster.bandwidth_gbps,
+cluster.latency_us, model.kind, model.layers, model.fanout, model.weights,
+exec.mode, exec.group_cols, exec.backend, exec.feature_prep, exec.seed
+";
+
+/// Entry point used by `main.rs`. Exits the process on error.
+pub fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {:#}", e);
+        std::process::exit(1);
+    }
+}
+
+/// Dispatch a command line (testable).
+pub fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("gen-dataset") => cmd_gen_dataset(&args[1..]),
+        Some("gen-labelled") => cmd_gen_labelled(&args[1..]),
+        Some("datasets") => cmd_datasets(),
+        Some("help") | None => {
+            println!("{}", USAGE);
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown command '{}'\n{}", other, USAGE),
+    }
+}
+
+/// Pull `--flag value` pairs out of an arg list.
+pub fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let mut cfg = match flag_value(args, "--config") {
+        Some(path) => DealConfig::from_file(std::path::Path::new(path))?,
+        None => DealConfig::default(),
+    };
+    // apply every --set k=v in order
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--set" {
+            let kv = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("--set needs key=value"))?;
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{}'", kv))?;
+            cfg.set(k, v)?;
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    println!(
+        "deal run: dataset={} scale={} machines={} (P×M = {:?}) model={} fanout={} mode={} backend={} prep={}",
+        cfg.dataset.name,
+        cfg.dataset.scale,
+        cfg.cluster.machines,
+        cfg.parts()?,
+        cfg.model.kind,
+        cfg.model.fanout,
+        cfg.exec.mode,
+        cfg.exec.backend,
+        cfg.exec.feature_prep,
+    );
+    let report = Pipeline::new(cfg).run()?;
+    println!("\nstage breakdown (simulated cluster time):");
+    for s in &report.stages.0 {
+        println!(
+            "  {:<12} {:>12}   (wall {:>12})",
+            s.name,
+            human_secs(s.sim_secs),
+            human_secs(s.wall_secs)
+        );
+    }
+    println!(
+        "  {:<12} {:>12}   pre-processing fraction {:.1}%",
+        "TOTAL",
+        human_secs(report.stages.total()),
+        report.stages.preprocessing_fraction() * 100.0
+    );
+    println!("  peak tracked memory (max machine): {}", human_bytes(report.max_peak_mem));
+    if let Some(e) = &report.embeddings {
+        println!("  embeddings: {} × {}", e.rows, e.cols);
+    }
+    Ok(())
+}
+
+fn cmd_gen_dataset(args: &[String]) -> Result<()> {
+    let name = flag_value(args, "--name").ok_or_else(|| anyhow::anyhow!("--name required"))?;
+    let scale: f64 = flag_value(args, "--scale").unwrap_or("1.0").parse()?;
+    let out = PathBuf::from(
+        flag_value(args, "--out").ok_or_else(|| anyhow::anyhow!("--out required"))?,
+    );
+    let ds = datasets::load(name, scale)?;
+    ds.edges.write_binary(&out)?;
+    println!(
+        "wrote {} ({} nodes, {} edges, {})",
+        out.display(),
+        ds.edges.n_nodes,
+        ds.edges.n_edges(),
+        human_bytes(ds.edges.binary_size())
+    );
+    Ok(())
+}
+
+fn cmd_gen_labelled(args: &[String]) -> Result<()> {
+    let nodes: usize = flag_value(args, "--nodes").unwrap_or("4096").parse()?;
+    let classes: usize = flag_value(args, "--classes").unwrap_or("8").parse()?;
+    let degree: usize = flag_value(args, "--degree").unwrap_or("12").parse()?;
+    let dim: usize = flag_value(args, "--dim").unwrap_or("32").parse()?;
+    let seed: u64 = flag_value(args, "--seed").unwrap_or("42").parse()?;
+    let out = PathBuf::from(
+        flag_value(args, "--out").ok_or_else(|| anyhow::anyhow!("--out required"))?,
+    );
+    write_labelled(nodes, classes, degree, dim, seed, &out)
+}
+
+/// Generate and persist the labelled SBM study set (shared with the
+/// python training script and the Table 6 bench).
+pub fn write_labelled(
+    nodes: usize,
+    classes: usize,
+    degree: usize,
+    dim: usize,
+    seed: u64,
+    out: &std::path::Path,
+) -> Result<()> {
+    use std::io::Write;
+    let ds = datasets::labelled_sbm(nodes, classes, degree, dim, 0.8, seed);
+    std::fs::create_dir_all(out)?;
+    ds.edges.write_binary(&out.join("edges.bin"))?;
+    crate::runtime::save_weights(&out.join("features.bin"), &[ds.features.clone()])?;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(out.join("labels.bin"))?);
+    f.write_all(&(ds.labels.len() as u64).to_le_bytes())?;
+    f.write_all(&(ds.n_classes as u64).to_le_bytes())?;
+    for &l in &ds.labels {
+        f.write_all(&l.to_le_bytes())?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(out.join("train_mask.bin"))?);
+    f.write_all(&(ds.train_mask.len() as u64).to_le_bytes())?;
+    for &m in &ds.train_mask {
+        f.write_all(&[u8::from(m)])?;
+    }
+    println!(
+        "wrote labelled set to {} ({} nodes, {} classes, {} edges, dim {})",
+        out.display(),
+        nodes,
+        classes,
+        ds.edges.n_edges(),
+        dim
+    );
+    Ok(())
+}
+
+/// Load the labelled study set written by `write_labelled`.
+pub fn read_labelled(dir: &std::path::Path) -> Result<datasets::LabelledDataset> {
+    use std::io::Read;
+    let edges = crate::graph::EdgeList::read_binary(&dir.join("edges.bin"))?;
+    let features = crate::runtime::load_weights(&dir.join("features.bin"))?
+        .pop()
+        .ok_or_else(|| anyhow::anyhow!("empty features.bin"))?;
+    let mut f = std::fs::File::open(dir.join("labels.bin"))?;
+    let mut b8 = [0u8; 8];
+    f.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    f.read_exact(&mut b8)?;
+    let n_classes = u64::from_le_bytes(b8) as usize;
+    let mut buf = vec![0u8; n * 4];
+    f.read_exact(&mut buf)?;
+    let labels: Vec<u32> = buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let mut f = std::fs::File::open(dir.join("train_mask.bin"))?;
+    f.read_exact(&mut b8)?;
+    let nm = u64::from_le_bytes(b8) as usize;
+    let mut mask = vec![0u8; nm];
+    f.read_exact(&mut mask)?;
+    Ok(datasets::LabelledDataset {
+        edges,
+        features,
+        labels,
+        n_classes,
+        train_mask: mask.into_iter().map(|b| b != 0).collect(),
+    })
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("{:<14} {:>10} {:>8} {:>6}  stands in for", "name", "nodes", "avg deg", "dim");
+    for s in datasets::REGISTRY {
+        println!(
+            "{:<14} {:>10} {:>8} {:>6}  {}",
+            s.name,
+            1usize << s.scale_log2,
+            s.avg_degree,
+            s.feature_dim,
+            s.stands_in_for
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_value_extracts() {
+        let args: Vec<String> = ["--name", "x", "--scale", "0.5"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(flag_value(&args, "--name"), Some("x"));
+        assert_eq!(flag_value(&args, "--scale"), Some("0.5"));
+        assert_eq!(flag_value(&args, "--out"), None);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(dispatch(&["bogus".into()]).is_err());
+        assert!(dispatch(&["help".into()]).is_ok());
+        assert!(dispatch(&[]).is_ok());
+    }
+
+    #[test]
+    fn labelled_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("deal-lab-{}", std::process::id()));
+        write_labelled(200, 4, 6, 8, 7, &dir).unwrap();
+        let ds = read_labelled(&dir).unwrap();
+        assert_eq!(ds.labels.len(), 200);
+        assert_eq!(ds.n_classes, 4);
+        assert_eq!(ds.features.rows, 200);
+        assert_eq!(ds.features.cols, 8);
+        assert_eq!(ds.train_mask.len(), 200);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

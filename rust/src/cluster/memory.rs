@@ -1,0 +1,119 @@
+//! Per-machine peak-memory accounting.
+//!
+//! The paper's Fig. 3b argument — graph partitioning alone blows past
+//! machine memory; Deal's collaborative partition bounds it — is validated
+//! by explicit byte tracking: primitives register tensor allocations and
+//! frees, and the tracker records the high-water mark per labelled stage.
+
+use std::collections::HashMap;
+
+/// Tracks current and peak tracked bytes, with optional per-stage peaks.
+#[derive(Clone, Debug, Default)]
+pub struct MemTracker {
+    current: u64,
+    peak: u64,
+    stage: Option<String>,
+    stage_peaks: HashMap<String, u64>,
+}
+
+impl MemTracker {
+    /// Register an allocation of `bytes`.
+    pub fn alloc(&mut self, bytes: u64) {
+        self.current += bytes;
+        if self.current > self.peak {
+            self.peak = self.current;
+        }
+        if let Some(stage) = &self.stage {
+            let e = self.stage_peaks.entry(stage.clone()).or_insert(0);
+            if self.current > *e {
+                *e = self.current;
+            }
+        }
+    }
+
+    /// Register a free of `bytes`.
+    pub fn free(&mut self, bytes: u64) {
+        debug_assert!(bytes <= self.current, "freeing more than allocated");
+        self.current = self.current.saturating_sub(bytes);
+    }
+
+    /// Run `f` accounting a transient buffer of `bytes` for its duration.
+    pub fn with_transient<T>(&mut self, bytes: u64, f: impl FnOnce() -> T) -> T {
+        self.alloc(bytes);
+        let v = f();
+        self.free(bytes);
+        v
+    }
+
+    /// Enter a named stage; subsequent peaks are also recorded under it.
+    pub fn enter_stage(&mut self, name: &str) {
+        self.stage = Some(name.to_string());
+        let cur = self.current;
+        let e = self.stage_peaks.entry(name.to_string()).or_insert(0);
+        if cur > *e {
+            *e = cur;
+        }
+    }
+
+    pub fn exit_stage(&mut self) {
+        self.stage = None;
+    }
+
+    pub fn current(&self) -> u64 {
+        self.current
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn stage_peak(&self, name: &str) -> u64 {
+        self.stage_peaks.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn stage_peaks(&self) -> &HashMap<String, u64> {
+        &self.stage_peaks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut m = MemTracker::default();
+        m.alloc(100);
+        m.alloc(50);
+        m.free(120);
+        m.alloc(10);
+        assert_eq!(m.current(), 40);
+        assert_eq!(m.peak(), 150);
+    }
+
+    #[test]
+    fn transient_restores_current() {
+        let mut m = MemTracker::default();
+        m.alloc(10);
+        let v = m.with_transient(1000, || 42);
+        assert_eq!(v, 42);
+        assert_eq!(m.current(), 10);
+        assert_eq!(m.peak(), 1010);
+    }
+
+    #[test]
+    fn stage_peaks_are_separate() {
+        let mut m = MemTracker::default();
+        m.enter_stage("gemm");
+        m.alloc(100);
+        m.free(100);
+        m.exit_stage();
+        m.enter_stage("spmm");
+        m.alloc(30);
+        m.exit_stage();
+        assert_eq!(m.stage_peak("gemm"), 100);
+        assert_eq!(m.stage_peak("spmm"), 30);
+        assert_eq!(m.stage_peak("missing"), 0);
+        assert_eq!(m.peak(), 100);
+    }
+}

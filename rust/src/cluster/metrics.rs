@@ -1,0 +1,158 @@
+//! Per-machine and cluster-level metrics: simulated time split into compute
+//! and communication wait, byte/message counters, and peak memory. Benches
+//! read these to print the paper's comm/compute split (Figs. 17–19) and the
+//! Table 1–3 byte validations.
+
+use super::memory::MemTracker;
+use crate::util::{human_bytes, human_secs};
+
+/// Counters accumulated by one simulated machine.
+#[derive(Clone, Debug, Default)]
+pub struct MachineMetrics {
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    pub msgs_sent: u64,
+    pub msgs_recv: u64,
+    /// Simulated seconds spent blocked in `recv` (after overlap credit).
+    pub sim_comm_wait_secs: f64,
+    /// Simulated seconds of computation (thread-CPU measured).
+    pub sim_compute_secs: f64,
+    /// Simulated seconds the feature-server thread spent gathering
+    /// (concurrent with `sim_compute_secs` — a different core).
+    pub sim_serve_secs: f64,
+}
+
+/// Result of one `Cluster::run`.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub machines: Vec<MachineMetrics>,
+    pub final_clocks: Vec<f64>,
+    pub peak_mem: Vec<u64>,
+    pub mem: Vec<MemTracker>,
+}
+
+impl ClusterReport {
+    pub fn new(world: usize) -> Self {
+        ClusterReport {
+            machines: vec![MachineMetrics::default(); world],
+            final_clocks: vec![0.0; world],
+            peak_mem: vec![0; world],
+            mem: vec![MemTracker::default(); world],
+        }
+    }
+
+    pub fn record(&mut self, rank: usize, clock: f64, metrics: MachineMetrics, mem: MemTracker) {
+        self.final_clocks[rank] = clock;
+        self.peak_mem[rank] = mem.peak();
+        self.machines[rank] = metrics;
+        self.mem[rank] = mem;
+    }
+
+    /// Simulated makespan: the slowest machine's final clock.
+    pub fn makespan(&self) -> f64 {
+        self.final_clocks.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Total bytes moved over the network (sum of sends; excludes local).
+    pub fn total_bytes(&self) -> u64 {
+        self.machines.iter().map(|m| m.bytes_sent).sum()
+    }
+
+    /// Maximum bytes received by any single machine (the per-machine
+    /// communication size the paper's tables bound).
+    pub fn max_bytes_recv(&self) -> u64 {
+        self.machines.iter().map(|m| m.bytes_recv).max().unwrap_or(0)
+    }
+
+    /// Maximum peak tracked memory on any machine.
+    pub fn max_peak_mem(&self) -> u64 {
+        self.peak_mem.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Total simulated compute across machines.
+    pub fn total_compute(&self) -> f64 {
+        self.machines.iter().map(|m| m.sim_compute_secs).sum()
+    }
+
+    /// Maximum communication wait across machines.
+    pub fn max_comm_wait(&self) -> f64 {
+        self.machines
+            .iter()
+            .map(|m| m.sim_comm_wait_secs)
+            .fold(0.0, f64::max)
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "makespan={} comm={} compute(max)={} wait(max)={} peak_mem(max)={}",
+            human_secs(self.makespan()),
+            human_bytes(self.total_bytes()),
+            human_secs(
+                self.machines
+                    .iter()
+                    .map(|m| m.sim_compute_secs)
+                    .fold(0.0, f64::max)
+            ),
+            human_secs(self.max_comm_wait()),
+            human_bytes(self.max_peak_mem()),
+        )
+    }
+
+    /// Merge another report stage-wise (sequential composition of stages:
+    /// clocks add, bytes add, peaks max). Used by the coordinator to
+    /// aggregate per-stage cluster runs into an end-to-end report.
+    pub fn chain(&mut self, other: &ClusterReport) {
+        assert_eq!(self.machines.len(), other.machines.len());
+        for i in 0..self.machines.len() {
+            self.final_clocks[i] += other.final_clocks[i];
+            self.peak_mem[i] = self.peak_mem[i].max(other.peak_mem[i]);
+            let a = &mut self.machines[i];
+            let b = &other.machines[i];
+            a.bytes_sent += b.bytes_sent;
+            a.bytes_recv += b.bytes_recv;
+            a.msgs_sent += b.msgs_sent;
+            a.msgs_recv += b.msgs_recv;
+            a.sim_comm_wait_secs += b.sim_comm_wait_secs;
+            a.sim_compute_secs += b.sim_compute_secs;
+            a.sim_serve_secs += b.sim_serve_secs;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn makespan_is_max_clock() {
+        let mut r = ClusterReport::new(3);
+        r.final_clocks = vec![1.0, 5.0, 2.0];
+        assert_eq!(r.makespan(), 5.0);
+    }
+
+    #[test]
+    fn chain_adds_clocks_and_maxes_mem() {
+        let mut a = ClusterReport::new(2);
+        a.final_clocks = vec![1.0, 2.0];
+        a.peak_mem = vec![100, 10];
+        a.machines[0].bytes_sent = 5;
+        let mut b = ClusterReport::new(2);
+        b.final_clocks = vec![3.0, 1.0];
+        b.peak_mem = vec![50, 80];
+        b.machines[0].bytes_sent = 7;
+        a.chain(&b);
+        assert_eq!(a.final_clocks, vec![4.0, 3.0]);
+        assert_eq!(a.peak_mem, vec![100, 80]);
+        assert_eq!(a.machines[0].bytes_sent, 12);
+        assert_eq!(a.makespan(), 4.0);
+    }
+
+    #[test]
+    fn summary_contains_fields() {
+        let r = ClusterReport::new(1);
+        let s = r.summary();
+        assert!(s.contains("makespan="));
+        assert!(s.contains("peak_mem"));
+    }
+}

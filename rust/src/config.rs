@@ -1,0 +1,277 @@
+//! Configuration system: a typed `DealConfig` loadable from a TOML-subset
+//! file (`[section]` headers, `key = value` pairs, `#` comments — no
+//! serde in the offline build environment) with CLI-style `section.key=v`
+//! overrides. Every knob the benches and examples sweep lives here.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::cluster::NetConfig;
+use crate::model::{ModelConfig, ModelKind};
+use crate::primitives::ExecMode;
+use crate::Result;
+
+/// Dataset selection.
+#[derive(Clone, Debug)]
+pub struct DatasetCfg {
+    /// Registry name (`products-sim`, `spammer-sim`, `papers-sim`) or a
+    /// path to an `.edges.bin`/`.edges.txt` file.
+    pub name: String,
+    /// Size multiplier for registry datasets (power of two recommended).
+    pub scale: f64,
+}
+
+/// Cluster / partitioning.
+#[derive(Clone, Debug)]
+pub struct ClusterCfg {
+    /// Total simulated machines (`graph_parts * feature_parts`).
+    pub machines: usize,
+    /// Graph (row) partitions P; 0 = auto (machines / feature_parts).
+    pub graph_parts: usize,
+    /// Feature (column) partitions M per graph partition.
+    pub feature_parts: usize,
+    pub bandwidth_gbps: f64,
+    pub latency_us: f64,
+    /// Cores per simulated machine (compute-time divisor).
+    pub cores: f64,
+}
+
+/// Model + sampling.
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub kind: String,
+    pub layers: usize,
+    pub heads: usize,
+    /// Neighbors sampled per layer; 0 = full neighborhood.
+    pub fanout: usize,
+    /// Weights file (empty = deterministic random init).
+    pub weights: String,
+}
+
+/// Execution strategy (§3.5 knobs).
+#[derive(Clone, Debug)]
+pub struct ExecCfg {
+    /// monolithic | grouped | pipelined
+    pub mode: String,
+    /// Max distinct columns per communication group (0 = unsplit).
+    pub group_cols: usize,
+    /// native | xla
+    pub backend: String,
+    pub artifacts_dir: String,
+    /// scan | redistribute | fused (Fig. 21 feature preparation)
+    pub feature_prep: String,
+    /// distributed | single (Fig. 20 graph construction strategy)
+    pub construction: String,
+    pub seed: u64,
+}
+
+/// Root configuration.
+#[derive(Clone, Debug)]
+pub struct DealConfig {
+    pub dataset: DatasetCfg,
+    pub cluster: ClusterCfg,
+    pub model: ModelCfg,
+    pub exec: ExecCfg,
+}
+
+impl Default for DealConfig {
+    fn default() -> Self {
+        DealConfig {
+            dataset: DatasetCfg { name: "products-sim".into(), scale: 1.0 },
+            cluster: ClusterCfg {
+                machines: 4,
+                graph_parts: 0,
+                feature_parts: 2,
+                bandwidth_gbps: 25.0,
+                latency_us: 100.0,
+                cores: 64.0,
+            },
+            model: ModelCfg {
+                kind: "gcn".into(),
+                layers: 3,
+                heads: 4,
+                fanout: 50,
+                weights: String::new(),
+            },
+            exec: ExecCfg {
+                mode: "pipelined".into(),
+                group_cols: 4096,
+                backend: "native".into(),
+                artifacts_dir: "artifacts".into(),
+                feature_prep: "fused".into(),
+                construction: "distributed".into(),
+                seed: 0xDEA1,
+            },
+        }
+    }
+}
+
+impl DealConfig {
+    /// Load from a TOML-subset file.
+    pub fn from_file(path: &Path) -> Result<DealConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let mut cfg = DealConfig::default();
+        for (key, value) in parse_toml_subset(&text)? {
+            cfg.set(&key, &value)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one `section.key=value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim().trim_matches('"');
+        match key {
+            "dataset.name" => self.dataset.name = v.into(),
+            "dataset.scale" => self.dataset.scale = v.parse()?,
+            "cluster.machines" => self.cluster.machines = v.parse()?,
+            "cluster.graph_parts" => self.cluster.graph_parts = v.parse()?,
+            "cluster.feature_parts" => self.cluster.feature_parts = v.parse()?,
+            "cluster.bandwidth_gbps" => self.cluster.bandwidth_gbps = v.parse()?,
+            "cluster.latency_us" => self.cluster.latency_us = v.parse()?,
+            "cluster.cores" => self.cluster.cores = v.parse()?,
+            "model.kind" => self.model.kind = v.into(),
+            "model.layers" => self.model.layers = v.parse()?,
+            "model.heads" => self.model.heads = v.parse()?,
+            "model.fanout" => self.model.fanout = v.parse()?,
+            "model.weights" => self.model.weights = v.into(),
+            "exec.mode" => self.exec.mode = v.into(),
+            "exec.group_cols" => self.exec.group_cols = v.parse()?,
+            "exec.backend" => self.exec.backend = v.into(),
+            "exec.artifacts_dir" => self.exec.artifacts_dir = v.into(),
+            "exec.feature_prep" => self.exec.feature_prep = v.into(),
+            "exec.construction" => self.exec.construction = v.into(),
+            "exec.seed" => self.exec.seed = v.parse()?,
+            other => anyhow::bail!("unknown config key '{}'", other),
+        }
+        Ok(())
+    }
+
+    // ---- derived views -------------------------------------------------
+
+    pub fn net(&self) -> NetConfig {
+        NetConfig {
+            bandwidth_gbps: self.cluster.bandwidth_gbps,
+            latency_secs: self.cluster.latency_us * 1e-6,
+        }
+    }
+
+    /// (P, M) resolved from machines / feature_parts.
+    pub fn parts(&self) -> Result<(usize, usize)> {
+        let m = self.cluster.feature_parts.max(1);
+        let p = if self.cluster.graph_parts > 0 {
+            self.cluster.graph_parts
+        } else {
+            anyhow::ensure!(
+                self.cluster.machines % m == 0,
+                "machines {} not divisible by feature_parts {}",
+                self.cluster.machines,
+                m
+            );
+            self.cluster.machines / m
+        };
+        Ok((p, m))
+    }
+
+    pub fn exec_mode(&self) -> Result<ExecMode> {
+        match self.exec.mode.as_str() {
+            "naive" => Ok(ExecMode::Naive),
+            "monolithic" => Ok(ExecMode::Monolithic),
+            "grouped" => Ok(ExecMode::Grouped),
+            "pipelined" => Ok(ExecMode::Pipelined),
+            other => anyhow::bail!("unknown exec.mode '{}'", other),
+        }
+    }
+
+    pub fn model_config(&self, dim: usize) -> Result<ModelConfig> {
+        let kind = ModelKind::parse(&self.model.kind)?;
+        Ok(match kind {
+            ModelKind::Gcn => ModelConfig::gcn(self.model.layers, dim),
+            ModelKind::Gat => ModelConfig::gat(self.model.layers, dim, self.model.heads),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> PathBuf {
+        PathBuf::from(&self.exec.artifacts_dir)
+    }
+}
+
+/// Parse the TOML subset into flat `section.key -> value` pairs.
+pub fn parse_toml_subset(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", ln + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{}.{}", section, k.trim())
+        };
+        out.insert(key, v.trim().to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_resolve() {
+        let cfg = DealConfig::default();
+        assert_eq!(cfg.parts().unwrap(), (2, 2));
+        assert_eq!(cfg.exec_mode().unwrap(), ExecMode::Pipelined);
+        assert!((cfg.net().latency_secs - 100e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn toml_subset_parses() {
+        let text = "
+# comment
+[dataset]
+name = \"spammer-sim\"   # trailing comment
+scale = 0.5
+
+[cluster]
+machines = 8
+feature_parts = 4
+";
+        let kv = parse_toml_subset(text).unwrap();
+        assert_eq!(kv["dataset.name"], "\"spammer-sim\"");
+        assert_eq!(kv["cluster.machines"], "8");
+        let mut cfg = DealConfig::default();
+        for (k, v) in &kv {
+            cfg.set(k, v).unwrap();
+        }
+        assert_eq!(cfg.dataset.name, "spammer-sim");
+        assert_eq!(cfg.parts().unwrap(), (2, 4));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let p = std::env::temp_dir().join(format!("deal-cfg-{}.toml", std::process::id()));
+        std::fs::write(&p, "[model]\nkind = \"gat\"\nfanout = 10\n").unwrap();
+        let cfg = DealConfig::from_file(&p).unwrap();
+        assert_eq!(cfg.model.kind, "gat");
+        assert_eq!(cfg.model.fanout, 10);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn bad_key_and_indivisible_parts_error() {
+        let mut cfg = DealConfig::default();
+        assert!(cfg.set("nope.key", "1").is_err());
+        cfg.cluster.machines = 5;
+        cfg.cluster.feature_parts = 2;
+        assert!(cfg.parts().is_err());
+    }
+}

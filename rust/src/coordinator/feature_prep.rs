@@ -1,0 +1,285 @@
+//! Feature preparation (paper §3.5 "Fusing feature preparation with the
+//! first GNN primitive", Fig. 13, Fig. 21).
+//!
+//! Node features arrive as unsorted shard files on a shared filesystem.
+//! Three strategies bring them into the collaborative layout:
+//!
+//! - **scan** (baseline): every machine reads *all* feature files and
+//!   keeps its own tile — `O(M·N)` filesystem traffic; the shared-FS
+//!   aggregate bandwidth caps it, so adding machines does not help.
+//! - **redistribute**: each machine reads `1/world` of the rows, then an
+//!   all-to-all moves every row to its `(p, m)` owners — FS traffic drops
+//!   `world×`, network pays `O(N·(world-1)/world)` rows.
+//! - **fused** (Deal): each machine reads `1/world` of the rows and *no
+//!   redistribution happens*. The loader shard computes the first-layer
+//!   projection locally (row-wise independent), serves `(HW)` rows to the
+//!   first SPMM by a location table, and the SPMM's output-oriented
+//!   assignment lands `H^(1)` already in the collaborative layout.
+//!
+//! The shared filesystem is modeled like a network link with a fixed
+//! *aggregate* bandwidth (EFS-style, per the paper's [60] citation):
+//! concurrent readers serialize on it.
+
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::{Ctx, Payload, Tag};
+use crate::partition::PartitionPlan;
+use crate::tensor::Matrix;
+use crate::util::even_ranges;
+
+/// Feature preparation strategy (Fig. 21 series).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeaturePrep {
+    Scan,
+    Redistribute,
+    Fused,
+}
+
+impl FeaturePrep {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "scan" => Ok(FeaturePrep::Scan),
+            "redistribute" => Ok(FeaturePrep::Redistribute),
+            "fused" => Ok(FeaturePrep::Fused),
+            other => anyhow::bail!("unknown feature_prep '{}' (scan|redistribute|fused)", other),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            FeaturePrep::Scan => "scan",
+            FeaturePrep::Redistribute => "redistribute",
+            FeaturePrep::Fused => "fused",
+        }
+    }
+}
+
+/// Shared-filesystem model: serializes reads on an aggregate-bandwidth
+/// "link" and returns each read's completion time.
+pub struct SimFs {
+    aggregate_gbps: f64,
+    busy_until: Mutex<f64>,
+}
+
+impl SimFs {
+    /// EFS-like default: 4 Gbps aggregate throughput.
+    pub fn new(aggregate_gbps: f64) -> Arc<SimFs> {
+        Arc::new(SimFs { aggregate_gbps, busy_until: Mutex::new(0.0) })
+    }
+
+    /// Schedule a read of `bytes` starting at `now`; returns completion.
+    pub fn read(&self, now: f64, bytes: u64) -> f64 {
+        let mut busy = self.busy_until.lock().unwrap();
+        let start = busy.max(now);
+        let done = start + bytes as f64 * 8.0 / (self.aggregate_gbps * 1e9);
+        *busy = done;
+        done
+    }
+
+    /// Reset between stages/benches.
+    pub fn reset(&self) {
+        *self.busy_until.lock().unwrap() = 0.0;
+    }
+}
+
+/// The "unsorted feature files": a row permutation standing in for the
+/// arbitrary on-disk order, plus the location table (which loader shard
+/// holds each node's features — Fig. 13's table).
+pub struct FeatureStore {
+    /// `file_order[i]` = node whose features sit at file position `i`.
+    pub file_order: Vec<u32>,
+    /// `loader_of[v]` = rank whose shard contains node `v` (fused mode).
+    pub loader_of: Vec<u32>,
+    /// shard boundaries over file positions (world + 1 entries).
+    pub shard_bounds: Vec<usize>,
+}
+
+impl FeatureStore {
+    pub fn new(n_nodes: usize, world: usize, seed: u64) -> FeatureStore {
+        let mut order: Vec<u32> = (0..n_nodes as u32).collect();
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0xF11E);
+        rng.shuffle(&mut order);
+        let shard_bounds = even_ranges(n_nodes, world);
+        let mut loader_of = vec![0u32; n_nodes];
+        for w in 0..world {
+            for i in shard_bounds[w]..shard_bounds[w + 1] {
+                loader_of[order[i] as usize] = w as u32;
+            }
+        }
+        FeatureStore { file_order: order, loader_of, shard_bounds }
+    }
+
+    /// Nodes in rank `w`'s loader shard, in file order.
+    pub fn shard_nodes(&self, w: usize) -> &[u32] {
+        &self.file_order[self.shard_bounds[w]..self.shard_bounds[w + 1]]
+    }
+}
+
+const PREP_PHASE: u32 = 0xFEA7;
+
+/// Per-machine: run `scan` or `redistribute` preparation, returning this
+/// rank's collaborative tile of `H^(0)`. (`Fused` skips this stage
+/// entirely — see `fused_first_layer` in `coordinator`.)
+pub fn prepare_features(
+    ctx: &mut Ctx,
+    plan: &PartitionPlan,
+    store: &FeatureStore,
+    features: &Matrix, // the "on-disk" content, globally indexed
+    fs: &SimFs,
+    strategy: FeaturePrep,
+) -> Matrix {
+    let (p_idx, m_idx) = plan.coords_of(ctx.rank);
+    let (rlo, rhi) = plan.node_range(p_idx);
+    let (flo, fhi) = plan.feat_range(m_idx);
+    let row_bytes = (features.cols * 4) as u64;
+
+    match strategy {
+        FeaturePrep::Scan => {
+            // Read every shard file, keep own rows/cols.
+            let done = fs.read(ctx.now(), row_bytes * features.rows as u64);
+            ctx.advance((done - ctx.now()).max(0.0));
+            let mut tile = Matrix::zeros(rhi - rlo, fhi - flo);
+            ctx.mem.alloc(tile.nbytes());
+            ctx.compute(|| {
+                for r in rlo..rhi {
+                    tile.row_mut(r - rlo)
+                        .copy_from_slice(&features.row(r)[flo..fhi]);
+                }
+            });
+            tile
+        }
+        FeaturePrep::Redistribute => {
+            // Read my loader shard...
+            let mine = store.shard_nodes(ctx.rank);
+            let done = fs.read(ctx.now(), row_bytes * mine.len() as u64);
+            ctx.advance((done - ctx.now()).max(0.0));
+            // ...then all-to-all: send each row's column slice to each of
+            // its owners (one message per (dst_rank) carrying ids + data).
+            for dst in 0..plan.world() {
+                let (dp, dm) = plan.coords_of(dst);
+                let (dlo, dhi) = plan.node_range(dp);
+                let (dflo, dfhi) = plan.feat_range(dm);
+                let ids: Vec<u32> = mine
+                    .iter()
+                    .copied()
+                    .filter(|&v| (v as usize) >= dlo && (v as usize) < dhi)
+                    .collect();
+                let mut block = Matrix::zeros(ids.len(), dfhi - dflo);
+                for (i, &v) in ids.iter().enumerate() {
+                    block
+                        .row_mut(i)
+                        .copy_from_slice(&features.row(v as usize)[dflo..dfhi]);
+                }
+                if dst == ctx.rank {
+                    // keep local rows aside via self-send (free link)
+                }
+                ctx.send(dst, Tag::of(PREP_PHASE, ctx.rank as u32), Payload::U32(ids));
+                ctx.send(dst, Tag::of(PREP_PHASE + 1, ctx.rank as u32), Payload::Matrix(block));
+            }
+            let mut tile = Matrix::zeros(rhi - rlo, fhi - flo);
+            ctx.mem.alloc(tile.nbytes());
+            for src in 0..plan.world() {
+                let ids = ctx.recv(src, Tag::of(PREP_PHASE, src as u32)).into_u32();
+                let block = ctx.recv(src, Tag::of(PREP_PHASE + 1, src as u32)).into_matrix();
+                for (i, &v) in ids.iter().enumerate() {
+                    tile.row_mut(v as usize - rlo).copy_from_slice(block.row(i));
+                }
+            }
+            tile
+        }
+        FeaturePrep::Fused => {
+            panic!("fused preparation is part of the first layer — use coordinator::fused_first_layer")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, NetConfig};
+    use crate::primitives::scatter;
+    use crate::util::rng::Rng;
+    use std::sync::Arc as StdArc;
+
+    #[test]
+    fn fs_serializes_aggregate_bandwidth() {
+        let fs = SimFs::new(1.0); // 1 Gbps
+        let t1 = fs.read(0.0, 125_000_000); // 1 second of bytes
+        let t2 = fs.read(0.0, 125_000_000);
+        assert!((t1 - 1.0).abs() < 1e-9);
+        assert!((t2 - 2.0).abs() < 1e-9, "reads must serialize");
+        fs.reset();
+        assert!((fs.read(0.0, 125_000_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn store_covers_all_nodes() {
+        let store = FeatureStore::new(100, 4, 7);
+        let mut seen = vec![false; 100];
+        for w in 0..4 {
+            for &v in store.shard_nodes(w) {
+                assert!(!seen[v as usize]);
+                seen[v as usize] = true;
+                assert_eq!(store.loader_of[v as usize], w as u32);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn scan_and_redistribute_produce_collaborative_layout() {
+        let mut rng = Rng::new(12);
+        let n = 24;
+        let d = 8;
+        let features = Matrix::random(n, d, 1.0, &mut rng);
+        let plan = PartitionPlan::new(n, d, 2, 2);
+        let expect = scatter(&plan, &features);
+        for strategy in [FeaturePrep::Scan, FeaturePrep::Redistribute] {
+            let store = StdArc::new(FeatureStore::new(n, plan.world(), 3));
+            let fs = SimFs::new(4.0);
+            let plan2 = plan.clone();
+            let feats = StdArc::new(features.clone());
+            let cluster = Cluster::new(plan.world(), NetConfig::default());
+            let (tiles, report) = cluster
+                .run(move |ctx| prepare_features(ctx, &plan2, &store, &feats, &fs, strategy))
+                .unwrap();
+            for (rank, tile) in tiles.iter().enumerate() {
+                assert_eq!(tile, &expect[rank], "{:?} rank {}", strategy, rank);
+            }
+            assert!(report.makespan() > 0.0);
+        }
+    }
+
+    #[test]
+    fn scan_costs_more_fs_time_than_redistribute() {
+        let mut rng = Rng::new(13);
+        let n = 64;
+        let d = 16;
+        let features = Matrix::random(n, d, 1.0, &mut rng);
+        let plan = PartitionPlan::new(n, d, 2, 2);
+        let mut makespans = Vec::new();
+        for strategy in [FeaturePrep::Scan, FeaturePrep::Redistribute] {
+            let store = StdArc::new(FeatureStore::new(n, plan.world(), 3));
+            let fs = SimFs::new(0.001); // slow FS so it dominates
+            let plan2 = plan.clone();
+            let feats = StdArc::new(features.clone());
+            let cluster = Cluster::new(plan.world(), NetConfig::default());
+            let (_, report) = cluster
+                .run(move |ctx| prepare_features(ctx, &plan2, &store, &feats, &fs, strategy))
+                .unwrap();
+            makespans.push(report.makespan());
+        }
+        assert!(
+            makespans[0] > makespans[1] * 2.0,
+            "scan {} should dwarf redistribute {}",
+            makespans[0],
+            makespans[1]
+        );
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(FeaturePrep::parse("fused").unwrap(), FeaturePrep::Fused);
+        assert!(FeaturePrep::parse("x").is_err());
+        assert_eq!(FeaturePrep::Scan.name(), "scan");
+    }
+}

@@ -1,0 +1,301 @@
+//! Graph construction: edge list → partitioned CSRs (paper Fig. 2 stages
+//! 1–3, evaluated in Fig. 20).
+//!
+//! Two implementations:
+//!
+//! - **Distributed (Deal)**: each of the K machines reads an equal shard of
+//!   the binary edge file, buckets its edges by destination partition,
+//!   exchanges the buckets all-to-all, and each partition owner builds its
+//!   rectangular CSR with a counting sort. Wall-parallel and
+//!   network-pipelined; this is what "Deal fully distributes the
+//!   construction" refers to.
+//! - **Single-worker baseline (DistDGL-like)**: one machine reads the whole
+//!   edge list, builds the global CSR, then slices and ships partitions —
+//!   "DistDGL can only process the edge list using one machine".
+
+use std::path::{Path, PathBuf};
+
+use super::csr::Csr;
+use super::edgelist::EdgeList;
+use super::NodeId;
+use crate::cluster::{Cluster, ClusterReport, Ctx, NetConfig, Payload, Tag};
+use crate::util::even_ranges;
+use crate::Result;
+
+/// A 1-D partition of the graph produced by construction: machine-local
+/// rows (re-based to 0) with global column ids, plus the owning row range.
+#[derive(Clone, Debug)]
+pub struct GraphPartition {
+    pub row_lo: usize,
+    pub row_hi: usize,
+    pub csr: Csr,
+}
+
+impl GraphPartition {
+    pub fn n_local_rows(&self) -> usize {
+        self.row_hi - self.row_lo
+    }
+}
+
+const TAG_EDGES: u32 = 0x6B1D;
+
+/// Distributed construction on a `world`-machine cluster producing `parts`
+/// partitions (machines beyond `parts` help read/shuffle; each of the
+/// first `parts` machines owns one partition). Returns the partitions and
+/// the cluster report (construction time = report.makespan()).
+pub fn build_distributed(
+    path: &Path,
+    world: usize,
+    parts: usize,
+    net: NetConfig,
+) -> Result<(Vec<GraphPartition>, ClusterReport)> {
+    assert!(parts >= 1 && world >= parts, "world {} must be >= parts {}", world, parts);
+    let (n_nodes, n_edges) = EdgeList::read_binary_header(path)?;
+    let path: PathBuf = path.to_path_buf();
+    let cluster = Cluster::new(world, net);
+    let (mut results, report) = cluster.run(move |ctx| {
+        build_shard(ctx, &path, n_nodes, n_edges, parts)
+    })?;
+    // Collect owner results in partition order.
+    let mut partitions = Vec::with_capacity(parts);
+    for r in results.drain(..) {
+        let r = r?;
+        if let Some(p) = r {
+            partitions.push(p);
+        }
+    }
+    partitions.sort_by_key(|p| p.row_lo);
+    assert_eq!(partitions.len(), parts);
+    Ok((partitions, report))
+}
+
+fn build_shard(
+    ctx: &mut Ctx,
+    path: &Path,
+    n_nodes: usize,
+    n_edges: usize,
+    parts: usize,
+) -> Result<Option<GraphPartition>> {
+    let world = ctx.world;
+    let rank = ctx.rank;
+    let shard_bounds = even_ranges(n_edges, world);
+    let node_bounds = even_ranges(n_nodes, parts);
+
+    // Stage 1: sharded read of the edge file. The read itself is real I/O;
+    // it also advances the simulated clock via compute().
+    let (lo, hi) = (shard_bounds[rank], shard_bounds[rank + 1]);
+    let shard = ctx.compute(|| EdgeList::read_binary_range(path, lo, hi))?;
+    ctx.mem.alloc(8 * shard.len() as u64);
+
+    // Stage 2: bucket by destination partition.
+    let buckets: Vec<Vec<(NodeId, NodeId)>> = ctx.compute(|| {
+        let mut buckets: Vec<Vec<(NodeId, NodeId)>> = vec![Vec::new(); parts];
+        for &(s, d) in &shard {
+            let p = owner_of(d as usize, &node_bounds);
+            buckets[p].push((s, d));
+        }
+        buckets
+    });
+    ctx.mem.free(8 * shard.len() as u64);
+    drop(shard);
+
+    // Stage 3: all-to-all bucket exchange. Every machine sends bucket p to
+    // machine p (owners are machines 0..parts); owners receive from all.
+    for (p, bucket) in buckets.iter().enumerate() {
+        let flat: Vec<u32> = bucket.iter().flat_map(|&(s, d)| [s, d]).collect();
+        ctx.send(p, Tag::of(TAG_EDGES, rank as u32), Payload::U32(flat));
+    }
+    drop(buckets);
+
+    if rank >= parts {
+        return Ok(None);
+    }
+
+    let mut my_edges: Vec<(NodeId, NodeId)> = Vec::new();
+    for src in 0..world {
+        let flat = ctx.recv(src, Tag::of(TAG_EDGES, src as u32)).into_u32();
+        my_edges.extend(flat.chunks_exact(2).map(|c| (c[0], c[1])));
+    }
+    ctx.mem.alloc(8 * my_edges.len() as u64);
+
+    // Stage 4: owner builds its rectangular CSR (rows re-based).
+    let (row_lo, row_hi) = (node_bounds[rank], node_bounds[rank + 1]);
+    let csr = ctx.compute(|| {
+        let rebased: Vec<(NodeId, NodeId)> = my_edges
+            .iter()
+            .map(|&(s, d)| (s, d - row_lo as NodeId))
+            .collect();
+        Csr::from_edges_rect(row_hi - row_lo, n_nodes, &rebased)
+    });
+    ctx.mem.free(8 * my_edges.len() as u64);
+    ctx.mem.alloc(csr.nbytes());
+    Ok(Some(GraphPartition { row_lo, row_hi, csr }))
+}
+
+/// Single-worker baseline: machine 0 reads everything, builds the global
+/// CSR, slices partitions, ships them to owners. Other machines idle until
+/// the partition arrives (exactly the serialization Fig. 20 punishes).
+pub fn build_single_worker(
+    path: &Path,
+    world: usize,
+    parts: usize,
+    net: NetConfig,
+) -> Result<(Vec<GraphPartition>, ClusterReport)> {
+    assert!(parts >= 1 && world >= parts);
+    let (n_nodes, _) = EdgeList::read_binary_header(path)?;
+    let path: PathBuf = path.to_path_buf();
+    let cluster = Cluster::new(world, net);
+    let (mut results, report) = cluster.run(move |ctx| -> Result<Option<GraphPartition>> {
+        let node_bounds = even_ranges(n_nodes, parts);
+        if ctx.rank == 0 {
+            let el = ctx.compute(|| EdgeList::read_binary(&path))?;
+            ctx.mem.alloc(el.binary_size());
+            let global = ctx.compute(|| Csr::from(&el));
+            ctx.mem.alloc(global.nbytes());
+            // Ship each partition's rows (CSR indptr deltas + indices).
+            let mut mine = None;
+            for p in 0..parts {
+                let (lo, hi) = (node_bounds[p], node_bounds[p + 1]);
+                let sub = ctx.compute(|| global.slice_rows(lo, hi));
+                if p == 0 {
+                    mine = Some(GraphPartition { row_lo: lo, row_hi: hi, csr: sub });
+                } else {
+                    let indptr: Vec<u32> = sub.indptr.iter().map(|&x| x as u32).collect();
+                    ctx.send(p, Tag::of(TAG_EDGES, 1), Payload::U32(indptr));
+                    ctx.send(p, Tag::of(TAG_EDGES, 2), Payload::U32(sub.indices.clone()));
+                }
+            }
+            Ok(mine)
+        } else if ctx.rank < parts {
+            let (lo, hi) = (node_bounds[ctx.rank], node_bounds[ctx.rank + 1]);
+            let indptr: Vec<u64> = ctx
+                .recv(0, Tag::of(TAG_EDGES, 1))
+                .into_u32()
+                .into_iter()
+                .map(|x| x as u64)
+                .collect();
+            let indices = ctx.recv(0, Tag::of(TAG_EDGES, 2)).into_u32();
+            let csr = Csr { n_rows: hi - lo, n_cols: n_nodes, indptr, indices };
+            ctx.mem.alloc(csr.nbytes());
+            Ok(Some(GraphPartition { row_lo: lo, row_hi: hi, csr }))
+        } else {
+            Ok(None)
+        }
+    })?;
+    let mut partitions = Vec::with_capacity(parts);
+    for r in results.drain(..) {
+        if let Some(p) = r? {
+            partitions.push(p);
+        }
+    }
+    partitions.sort_by_key(|p| p.row_lo);
+    Ok((partitions, report))
+}
+
+/// In-memory construction (no cluster): build partitions directly from an
+/// `EdgeList`. The reference for correctness tests and the fast path for
+/// unit-scale workloads.
+pub fn build_in_memory(el: &EdgeList, parts: usize) -> Vec<GraphPartition> {
+    let global = Csr::from(el);
+    let node_bounds = even_ranges(el.n_nodes, parts);
+    (0..parts)
+        .map(|p| {
+            let (lo, hi) = (node_bounds[p], node_bounds[p + 1]);
+            GraphPartition { row_lo: lo, row_hi: hi, csr: global.slice_rows(lo, hi) }
+        })
+        .collect()
+}
+
+/// Which partition owns global node `v` given partition boundary offsets.
+#[inline]
+pub fn owner_of(v: usize, bounds: &[usize]) -> usize {
+    // bounds is small (≤ #partitions+1); binary search.
+    match bounds.binary_search(&v) {
+        Ok(i) => i.min(bounds.len() - 2),
+        Err(i) => i - 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{rmat, RmatParams};
+    use crate::util::prop::{run, Config};
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("deal-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}-{}", name, std::process::id()))
+    }
+
+    #[test]
+    fn owner_of_boundaries() {
+        let bounds = vec![0, 4, 8];
+        assert_eq!(owner_of(0, &bounds), 0);
+        assert_eq!(owner_of(3, &bounds), 0);
+        assert_eq!(owner_of(4, &bounds), 1);
+        assert_eq!(owner_of(7, &bounds), 1);
+    }
+
+    #[test]
+    fn distributed_matches_in_memory() {
+        let el = rmat(8, 3000, RmatParams::paper(), 5);
+        let p = tmpfile("dist");
+        el.write_binary(&p).unwrap();
+        for parts in [1usize, 2, 4] {
+            let (dist, report) =
+                build_distributed(&p, 4, parts, NetConfig::default()).unwrap();
+            let mem = build_in_memory(&el, parts);
+            assert_eq!(dist.len(), mem.len());
+            for (d, m) in dist.iter().zip(mem.iter()) {
+                assert_eq!((d.row_lo, d.row_hi), (m.row_lo, m.row_hi));
+                assert_eq!(d.csr, m.csr, "partition rows {}..{}", d.row_lo, d.row_hi);
+            }
+            assert!(report.makespan() > 0.0);
+        }
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn single_worker_matches_in_memory() {
+        let el = rmat(7, 1500, RmatParams::paper(), 6);
+        let p = tmpfile("single");
+        el.write_binary(&p).unwrap();
+        let (sw, report) = build_single_worker(&p, 4, 4, NetConfig::default()).unwrap();
+        let mem = build_in_memory(&el, 4);
+        for (a, b) in sw.iter().zip(mem.iter()) {
+            assert_eq!(a.csr, b.csr);
+        }
+        // machine 0 did all the compute
+        let c0 = report.machines[0].sim_compute_secs;
+        for m in &report.machines[1..] {
+            assert!(m.sim_compute_secs <= c0);
+        }
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn partitions_cover_all_edges_property() {
+        run(Config::default().cases(12), |rng| {
+            let n = rng.range(2, 80);
+            let m = rng.range(1, 400);
+            let edges: Vec<(NodeId, NodeId)> = (0..m)
+                .map(|_| (rng.next_below(n) as NodeId, rng.next_below(n) as NodeId))
+                .collect();
+            let el = EdgeList::new(n, edges);
+            let parts = rng.range(1, 6.min(n));
+            let ps = build_in_memory(&el, parts);
+            let total: usize = ps.iter().map(|p| p.csr.n_edges()).sum();
+            if total != m {
+                return Err(format!("edges lost: {} != {}", total, m));
+            }
+            for p in &ps {
+                p.csr.validate()?;
+                if p.csr.n_rows != p.row_hi - p.row_lo {
+                    return Err("row count mismatch".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

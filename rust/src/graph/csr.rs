@@ -1,0 +1,267 @@
+//! Compressed Sparse Row graph storage.
+//!
+//! Rows are *destination* nodes and the column list of row `d` holds the
+//! in-neighbors of `d` — the orientation GNN aggregation wants (paper §2.1:
+//! the ego network of a target node contains its in-neighbors). `G_l`
+//! sampled layer graphs, partition sub-graphs, and the full input graph all
+//! use this structure.
+
+use super::{EdgeList, NodeId};
+
+/// CSR over destination rows: `indptr[d]..indptr[d+1]` indexes the
+/// in-neighbors (`indices`) and per-edge values (`values`, optional edge
+/// weights — empty means unweighted).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub indptr: Vec<u64>,
+    pub indices: Vec<NodeId>,
+}
+
+impl Csr {
+    /// Build from an edge list (`src -> dst` becomes entry `(row=dst,
+    /// col=src)`). Two-pass counting sort: O(E) time, no per-row Vecs.
+    pub fn from_edges(n_nodes: usize, edges: &[(NodeId, NodeId)]) -> Csr {
+        Self::from_edges_rect(n_nodes, n_nodes, edges)
+    }
+
+    /// Rectangular variant used by partitioned sub-graphs: `n_rows`
+    /// destination rows, `n_cols` possible source columns.
+    pub fn from_edges_rect(n_rows: usize, n_cols: usize, edges: &[(NodeId, NodeId)]) -> Csr {
+        let mut counts = vec![0u64; n_rows + 1];
+        for &(_, d) in edges {
+            counts[d as usize + 1] += 1;
+        }
+        for i in 0..n_rows {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0 as NodeId; edges.len()];
+        for &(s, d) in edges {
+            let at = cursor[d as usize];
+            indices[at as usize] = s;
+            cursor[d as usize] += 1;
+        }
+        // Sort each row's columns for deterministic iteration and to enable
+        // the sorted-column group partitioning of §3.5.
+        let mut csr = Csr { n_rows, n_cols, indptr, indices };
+        csr.sort_rows();
+        csr
+    }
+
+    /// Sort the column indices within every row.
+    pub fn sort_rows(&mut self) {
+        for r in 0..self.n_rows {
+            let (lo, hi) = (self.indptr[r] as usize, self.indptr[r + 1] as usize);
+            self.indices[lo..hi].sort_unstable();
+        }
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// In-neighbors of row `d`.
+    #[inline]
+    pub fn row(&self, d: usize) -> &[NodeId] {
+        &self.indices[self.indptr[d] as usize..self.indptr[d + 1] as usize]
+    }
+
+    /// In-degree of row `d`.
+    #[inline]
+    pub fn degree(&self, d: usize) -> usize {
+        (self.indptr[d + 1] - self.indptr[d]) as usize
+    }
+
+    /// Bytes of backing storage (memory accounting).
+    pub fn nbytes(&self) -> u64 {
+        (self.indptr.len() * 8 + self.indices.len() * 4) as u64
+    }
+
+    /// Check structural invariants (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.n_rows + 1 {
+            return Err(format!(
+                "indptr len {} != n_rows+1 {}",
+                self.indptr.len(),
+                self.n_rows + 1
+            ));
+        }
+        if self.indptr[0] != 0 {
+            return Err("indptr[0] != 0".into());
+        }
+        for r in 0..self.n_rows {
+            if self.indptr[r] > self.indptr[r + 1] {
+                return Err(format!("indptr not monotone at row {}", r));
+            }
+        }
+        if *self.indptr.last().unwrap() as usize != self.indices.len() {
+            return Err("indptr tail != indices len".into());
+        }
+        if let Some(&bad) = self.indices.iter().find(|&&c| (c as usize) >= self.n_cols) {
+            return Err(format!("column {} out of bounds {}", bad, self.n_cols));
+        }
+        Ok(())
+    }
+
+    /// Convert back to an edge list (test helper).
+    pub fn to_edges(&self) -> Vec<(NodeId, NodeId)> {
+        let mut edges = Vec::with_capacity(self.n_edges());
+        for d in 0..self.n_rows {
+            for &s in self.row(d) {
+                edges.push((s, d as NodeId));
+            }
+        }
+        edges
+    }
+
+    /// Extract the row range `[row_lo, row_hi)` as a rectangular sub-CSR
+    /// whose rows are re-based to 0 but whose columns stay global — the 1-D
+    /// partition sub-graph each machine holds.
+    pub fn slice_rows(&self, row_lo: usize, row_hi: usize) -> Csr {
+        assert!(row_lo <= row_hi && row_hi <= self.n_rows);
+        let lo = self.indptr[row_lo] as usize;
+        let hi = self.indptr[row_hi] as usize;
+        let indptr: Vec<u64> = self.indptr[row_lo..=row_hi]
+            .iter()
+            .map(|&x| x - self.indptr[row_lo])
+            .collect();
+        Csr {
+            n_rows: row_hi - row_lo,
+            n_cols: self.n_cols,
+            indptr,
+            indices: self.indices[lo..hi].to_vec(),
+        }
+    }
+
+    /// The set of distinct columns referenced by rows, sorted ascending.
+    /// During SPMM this is "the non-zero column IDs machine p sends to the
+    /// feature owners" (paper Fig. 8 step 2).
+    pub fn distinct_columns(&self) -> Vec<NodeId> {
+        let mut cols: Vec<NodeId> = self.indices.to_vec();
+        cols.sort_unstable();
+        cols.dedup();
+        cols
+    }
+
+    /// Distinct columns restricted to the global range `[lo, hi)`.
+    pub fn distinct_columns_in(&self, lo: NodeId, hi: NodeId) -> Vec<NodeId> {
+        let mut cols: Vec<NodeId> = self
+            .indices
+            .iter()
+            .copied()
+            .filter(|&c| c >= lo && c < hi)
+            .collect();
+        cols.sort_unstable();
+        cols.dedup();
+        cols
+    }
+
+    /// Average non-zeros per column (the paper's `Z` in Tables 2–3).
+    pub fn avg_nnz_per_column(&self) -> f64 {
+        if self.n_cols == 0 {
+            0.0
+        } else {
+            self.n_edges() as f64 / self.n_cols as f64
+        }
+    }
+}
+
+/// Build a CSR directly from an `EdgeList`.
+impl From<&EdgeList> for Csr {
+    fn from(el: &EdgeList) -> Csr {
+        Csr::from_edges(el.n_nodes, &el.edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run, Config};
+    use crate::util::rng::Rng;
+
+    fn toy() -> Csr {
+        // edges src->dst: 0->1, 2->1, 1->0, 0->2, 2->2
+        Csr::from_edges(3, &[(0, 1), (2, 1), (1, 0), (0, 2), (2, 2)])
+    }
+
+    #[test]
+    fn from_edges_rows() {
+        let g = toy();
+        assert_eq!(g.row(0), &[1]);
+        assert_eq!(g.row(1), &[0, 2]);
+        assert_eq!(g.row(2), &[0, 2]);
+        assert_eq!(g.degree(1), 2);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_edges() {
+        let g = toy();
+        let mut edges = g.to_edges();
+        edges.sort_unstable();
+        let mut orig = vec![(0, 1), (2, 1), (1, 0), (0, 2), (2, 2)];
+        orig.sort_unstable();
+        assert_eq!(edges, orig);
+    }
+
+    #[test]
+    fn slice_rows_rebased() {
+        let g = toy();
+        let s = g.slice_rows(1, 3);
+        assert_eq!(s.n_rows, 2);
+        assert_eq!(s.n_cols, 3);
+        assert_eq!(s.row(0), &[0, 2]); // old row 1
+        assert_eq!(s.row(1), &[0, 2]); // old row 2
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn distinct_columns_sorted_dedup() {
+        let g = toy();
+        assert_eq!(g.distinct_columns(), vec![0, 1, 2]);
+        assert_eq!(g.distinct_columns_in(1, 3), vec![1, 2]);
+        assert_eq!(g.slice_rows(0, 1).distinct_columns(), vec![1]);
+    }
+
+    #[test]
+    fn random_graphs_validate_property() {
+        run(Config::default().cases(32), |rng| {
+            let n = rng.range(1, 60);
+            let m = rng.range(0, 300);
+            let edges: Vec<(NodeId, NodeId)> = (0..m)
+                .map(|_| (rng.next_below(n) as NodeId, rng.next_below(n) as NodeId))
+                .collect();
+            let g = Csr::from_edges(n, &edges);
+            g.validate()?;
+            if g.n_edges() != m {
+                return Err("edge count changed".into());
+            }
+            // row slicing covers all edges exactly once
+            let cut = rng.range(0, n + 1);
+            let top = g.slice_rows(0, cut);
+            let bot = g.slice_rows(cut, n);
+            if top.n_edges() + bot.n_edges() != m {
+                return Err("slice lost edges".into());
+            }
+            top.validate()?;
+            bot.validate()?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn avg_nnz() {
+        let g = toy();
+        assert!((g.avg_nnz_per_column() - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rng_smoke_for_coverage() {
+        // ensure Rng import used in non-property context
+        let mut r = Rng::new(1);
+        assert!(r.next_below(10) < 10);
+    }
+}

@@ -1,0 +1,206 @@
+//! Edge lists: the on-disk input format for end-to-end inference
+//! (paper §3.1: "the input graph is stored as an edge list on disk, and
+//! graph generation entails reading the edge list and converting it to the
+//! graph data structure").
+//!
+//! Two formats:
+//! - **binary** (`.edges.bin`): `u64 n_nodes, u64 n_edges`, then
+//!   `n_edges × (u32 src, u32 dst)` little-endian — what the construction
+//!   benchmarks read, sharded by byte ranges exactly like a distributed
+//!   filesystem read would be.
+//! - **text** (`.edges.txt`): `src<TAB>dst` per line, `#` comments — for
+//!   human-made toy graphs in examples/tests.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::NodeId;
+use crate::Result;
+
+/// An in-memory edge list with a known node-count bound.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EdgeList {
+    pub n_nodes: usize,
+    /// `(src, dst)` pairs; an edge `src -> dst` means `src` is an
+    /// in-neighbor of `dst` (messages flow src → dst).
+    pub edges: Vec<(NodeId, NodeId)>,
+}
+
+impl EdgeList {
+    pub fn new(n_nodes: usize, edges: Vec<(NodeId, NodeId)>) -> Self {
+        debug_assert!(edges
+            .iter()
+            .all(|&(s, d)| (s as usize) < n_nodes && (d as usize) < n_nodes));
+        EdgeList { n_nodes, edges }
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Serialized size in bytes of the binary format.
+    pub fn binary_size(&self) -> u64 {
+        16 + 8 * self.edges.len() as u64
+    }
+
+    /// Write the binary format.
+    pub fn write_binary(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(&(self.n_nodes as u64).to_le_bytes())?;
+        w.write_all(&(self.edges.len() as u64).to_le_bytes())?;
+        for &(s, d) in &self.edges {
+            w.write_all(&s.to_le_bytes())?;
+            w.write_all(&d.to_le_bytes())?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read the full binary file.
+    pub fn read_binary(path: &Path) -> Result<EdgeList> {
+        let mut r = BufReader::new(File::open(path)?);
+        let mut hdr = [0u8; 16];
+        r.read_exact(&mut hdr)?;
+        let n_nodes = u64::from_le_bytes(hdr[0..8].try_into().unwrap()) as usize;
+        let n_edges = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
+        let mut buf = vec![0u8; n_edges * 8];
+        r.read_exact(&mut buf)?;
+        let edges = parse_edge_bytes(&buf);
+        Ok(EdgeList { n_nodes, edges })
+    }
+
+    /// Read only the header `(n_nodes, n_edges)` of a binary file.
+    pub fn read_binary_header(path: &Path) -> Result<(usize, usize)> {
+        let mut r = File::open(path)?;
+        let mut hdr = [0u8; 16];
+        r.read_exact(&mut hdr)?;
+        Ok((
+            u64::from_le_bytes(hdr[0..8].try_into().unwrap()) as usize,
+            u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize,
+        ))
+    }
+
+    /// Read the edge range `[lo, hi)` of a binary file — the sharded read
+    /// each machine performs during distributed construction.
+    pub fn read_binary_range(path: &Path, lo: usize, hi: usize) -> Result<Vec<(NodeId, NodeId)>> {
+        use std::io::{Seek, SeekFrom};
+        let mut f = File::open(path)?;
+        f.seek(SeekFrom::Start(16 + 8 * lo as u64))?;
+        let mut buf = vec![0u8; (hi - lo) * 8];
+        f.read_exact(&mut buf)?;
+        Ok(parse_edge_bytes(&buf))
+    }
+
+    /// Write the text format.
+    pub fn write_text(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "# nodes: {}", self.n_nodes)?;
+        for &(s, d) in &self.edges {
+            writeln!(w, "{}\t{}", s, d)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read the text format. Node count is `max id + 1` unless a
+    /// `# nodes: N` header is present.
+    pub fn read_text(path: &Path) -> Result<EdgeList> {
+        let r = BufReader::new(File::open(path)?);
+        let mut edges = Vec::new();
+        let mut n_nodes = 0usize;
+        for line in r.lines() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('#') {
+                if let Some(v) = rest.trim().strip_prefix("nodes:") {
+                    n_nodes = v.trim().parse()?;
+                }
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let s: NodeId = it.next().ok_or_else(|| anyhow::anyhow!("bad line: {line}"))?.parse()?;
+            let d: NodeId = it.next().ok_or_else(|| anyhow::anyhow!("bad line: {line}"))?.parse()?;
+            n_nodes = n_nodes.max(s as usize + 1).max(d as usize + 1);
+            edges.push((s, d));
+        }
+        Ok(EdgeList { n_nodes, edges })
+    }
+}
+
+fn parse_edge_bytes(buf: &[u8]) -> Vec<(NodeId, NodeId)> {
+    buf.chunks_exact(8)
+        .map(|c| {
+            (
+                u32::from_le_bytes(c[0..4].try_into().unwrap()),
+                u32::from_le_bytes(c[4..8].try_into().unwrap()),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("deal-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}-{}", name, std::process::id()))
+    }
+
+    fn sample() -> EdgeList {
+        EdgeList::new(5, vec![(0, 1), (1, 2), (3, 4), (4, 0), (2, 2)])
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let el = sample();
+        let p = tmpfile("bin");
+        el.write_binary(&p).unwrap();
+        let got = EdgeList::read_binary(&p).unwrap();
+        assert_eq!(got, el);
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), el.binary_size());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn binary_header_and_range() {
+        let el = sample();
+        let p = tmpfile("range");
+        el.write_binary(&p).unwrap();
+        let (n, m) = EdgeList::read_binary_header(&p).unwrap();
+        assert_eq!((n, m), (5, 5));
+        let mid = EdgeList::read_binary_range(&p, 1, 4).unwrap();
+        assert_eq!(mid, vec![(1, 2), (3, 4), (4, 0)]);
+        // sharded ranges reassemble to the full list
+        let a = EdgeList::read_binary_range(&p, 0, 2).unwrap();
+        let b = EdgeList::read_binary_range(&p, 2, 5).unwrap();
+        let all: Vec<_> = a.into_iter().chain(b).collect();
+        assert_eq!(all, el.edges);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn text_roundtrip_with_header() {
+        let el = EdgeList::new(10, vec![(0, 9), (3, 3)]);
+        let p = tmpfile("txt");
+        el.write_text(&p).unwrap();
+        let got = EdgeList::read_text(&p).unwrap();
+        assert_eq!(got, el);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn text_infers_node_count_without_header() {
+        let p = tmpfile("txt2");
+        std::fs::write(&p, "0 7\n2 1\n").unwrap();
+        let got = EdgeList::read_text(&p).unwrap();
+        assert_eq!(got.n_nodes, 8);
+        assert_eq!(got.edges, vec![(0, 7), (2, 1)]);
+        std::fs::remove_file(&p).unwrap();
+    }
+}

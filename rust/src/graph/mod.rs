@@ -1,0 +1,18 @@
+//! Graph substrate: edge-list IO, CSR, RMAT generation, distributed graph
+//! construction (the paper's §3.5 "graph construction" stage, Fig. 20), and
+//! the named synthetic dataset registry standing in for the paper's
+//! ogbn-products / social-spammer / ogbn-papers100M (see DESIGN.md
+//! Substitutions).
+
+pub mod builder;
+pub mod csr;
+pub mod datasets;
+pub mod edgelist;
+pub mod rmat;
+
+pub use csr::Csr;
+pub use edgelist::EdgeList;
+
+/// Node identifier. 32 bits covers the scaled datasets with headroom; the
+/// paper's 111M-node graphs would also fit.
+pub type NodeId = u32;

@@ -1,0 +1,107 @@
+//! RMAT synthetic graph generator (Chakrabarti et al., SDM'04).
+//!
+//! The paper evaluates scalability on RMAT graphs with edge probabilities
+//! `{0.57, 0.19, 0.19, 0.05}` and average degree 20 (§4.1); the dataset
+//! registry also uses RMAT (with different skew) to build the scaled
+//! stand-ins for ogbn-products / social-spammer / ogbn-papers100M.
+
+use super::{EdgeList, NodeId};
+use crate::util::rng::Rng;
+
+/// RMAT quadrant probabilities.
+#[derive(Clone, Copy, Debug)]
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    // d = 1 - a - b - c
+}
+
+impl RmatParams {
+    /// The paper's scalability parameters {0.57, 0.19, 0.19, 0.05}.
+    pub fn paper() -> Self {
+        RmatParams { a: 0.57, b: 0.19, c: 0.19 }
+    }
+
+    /// Milder skew — degree distribution closer to a co-purchase network.
+    pub fn mild() -> Self {
+        RmatParams { a: 0.45, b: 0.22, c: 0.22 }
+    }
+}
+
+/// Generate an RMAT graph with `2^scale` nodes and `n_edges` edges.
+/// Multi-edges and self-loops are kept (as in the reference generator);
+/// node ids are permuted so that low ids are not systematically hubs,
+/// which would make contiguous 1-D range partitions artificially easy.
+pub fn rmat(scale: u32, n_edges: usize, params: RmatParams, seed: u64) -> EdgeList {
+    let n = 1usize << scale;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(n_edges);
+    let (a, b, c) = (params.a, params.b, params.c);
+    let ab = a + b;
+    let abc = a + b + c;
+    for _ in 0..n_edges {
+        let (mut src, mut dst) = (0usize, 0usize);
+        for _ in 0..scale {
+            src <<= 1;
+            dst <<= 1;
+            let r = rng.next_f64();
+            if r < a {
+                // top-left: nothing set
+            } else if r < ab {
+                dst |= 1;
+            } else if r < abc {
+                src |= 1;
+            } else {
+                src |= 1;
+                dst |= 1;
+            }
+        }
+        edges.push((src as NodeId, dst as NodeId));
+    }
+    // Random relabel to decorrelate id ranges from degree.
+    let mut perm: Vec<NodeId> = (0..n as NodeId).collect();
+    rng.shuffle(&mut perm);
+    for e in &mut edges {
+        e.0 = perm[e.0 as usize];
+        e.1 = perm[e.1 as usize];
+    }
+    EdgeList::new(n, edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_shape() {
+        let el = rmat(8, 2000, RmatParams::paper(), 7);
+        assert_eq!(el.n_nodes, 256);
+        assert_eq!(el.n_edges(), 2000);
+        assert!(el.edges.iter().all(|&(s, d)| (s as usize) < 256 && (d as usize) < 256));
+    }
+
+    #[test]
+    fn rmat_deterministic() {
+        let a = rmat(7, 500, RmatParams::paper(), 3);
+        let b = rmat(7, 500, RmatParams::paper(), 3);
+        assert_eq!(a, b);
+        let c = rmat(7, 500, RmatParams::paper(), 4);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        // With a=0.57 skew, max in-degree should be far above the average.
+        let el = rmat(10, 20_000, RmatParams::paper(), 11);
+        let g = crate::graph::Csr::from(&el);
+        let avg = 20_000.0 / 1024.0;
+        let max_deg = (0..g.n_rows).map(|r| g.degree(r)).max().unwrap();
+        assert!(
+            (max_deg as f64) > 4.0 * avg,
+            "max_deg={} avg={} — not skewed?",
+            max_deg,
+            avg
+        );
+    }
+}

@@ -1,0 +1,36 @@
+//! # Deal — Distributed End-to-End GNN Inference for All Nodes
+//!
+//! A reproduction of the CS.DC 2025 paper "Deal: Distributed End-to-End GNN
+//! Inference for All Nodes" as a three-layer rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the distributed coordinator: graph
+//!   construction, 1-D graph + feature collaborative partitioning, layerwise
+//!   1-hop all-node sampling, the communication-efficient distributed
+//!   primitives (GEMM / SPMM / SDDMM), partitioned + pipelined communication,
+//!   fused feature preparation, and the end-to-end inference driver.
+//! - **Layer 2** — JAX per-tile model functions (`python/compile/model.py`),
+//!   AOT-lowered to HLO text.
+//! - **Layer 1** — Pallas kernels (`python/compile/kernels/`) inside those
+//!   functions, validated against a pure-jnp oracle.
+//!
+//! Python never runs on the inference path: `runtime::XlaBackend` loads the
+//! AOT artifacts through the PJRT CPU client and the entire request path is
+//! rust. See `DESIGN.md` for the architecture and the experiment index.
+
+pub mod baselines;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod model;
+pub mod partition;
+pub mod primitives;
+pub mod runtime;
+pub mod sampling;
+pub mod serve;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,314 @@
+//! Distributed GAT forward pass.
+//!
+//! GAT's additive attention is *separable*: the raw score of edge `(s, d)`
+//! for head `h` is `LeakyReLU(u[d,h] + v[s,h])` with `u = Z·a_dst`,
+//! `v = Z·a_src` — so attention never needs the full SDDMM dot product,
+//! only an exchange of the per-node `v` scalars (heads-wide), after which
+//! the softmax is entirely local (the 1-D partition keeps every
+//! destination's full edge list on its machines). The aggregation is the
+//! paper's *three-tensor SPMM* (`E[i][] ⊙ H'[][i]`): per-edge per-head α
+//! weights multiplying the feature columns of their head
+//! (`EdgeValues::PerHead`).
+//!
+//! Layout requirement: `dim % M == 0` and `heads % M == 0` so feature-part
+//! boundaries align with head boundaries (checked at entry). The paper's
+//! configuration (4 heads, M ∈ {1,2,4}) satisfies it.
+//!
+//! (The full SDDMM primitive is still exercised — Fig. 18's bench and
+//! models with non-separable attention use `primitives::sddmm`.)
+
+use crate::cluster::{Ctx, Payload, Tag};
+use crate::partition::PartitionPlan;
+use crate::primitives::gemm::deal_gemm;
+use crate::primitives::groups::build_groups;
+use crate::primitives::spmm::{deal_spmm, feature_server, EdgeValues, SpmmInput};
+use crate::runtime::{Act, Backend};
+use crate::tensor::{leaky_relu, Matrix};
+use crate::util::even_ranges;
+use crate::Result;
+
+use super::{ExecOpts, LayerPart, ModelWeights};
+
+const COUNT_SEQ: u32 = u32::MAX;
+const RESP_BIT: u32 = 0x8000_0000;
+
+/// One machine's full GAT forward. Same contract as `gcn_forward`.
+pub fn gat_forward(
+    ctx: &mut Ctx,
+    plan: &PartitionPlan,
+    parts: &[LayerPart],
+    h: Matrix,
+    weights: &ModelWeights,
+    backend: &dyn Backend,
+    opts: &ExecOpts,
+) -> Result<Matrix> {
+    let heads = weights.config.heads;
+    let d = weights.config.dim;
+    anyhow::ensure!(
+        d % plan.m == 0 && heads % plan.m == 0,
+        "GAT needs dim ({}) and heads ({}) divisible by feature parts ({})",
+        d,
+        heads,
+        plan.m
+    );
+    let (p_idx, m_idx) = plan.coords_of(ctx.rank);
+    let row_lo = plan.node_range(p_idx).0;
+    let (flo, fhi) = plan.feat_range(m_idx);
+    let head_dim = d / heads;
+    // my heads and the local column→local-head map
+    let head_bounds = even_ranges(heads, plan.m);
+    let (hlo, hhi) = (head_bounds[m_idx], head_bounds[m_idx + 1]);
+    let my_heads = hhi - hlo;
+    let col_head: Vec<u8> = (flo..fhi).map(|c| (c / head_dim - hlo) as u8).collect();
+
+    let mut h = h;
+    ctx.mem.alloc(h.nbytes()); // register the input tile
+    let n_layers = weights.config.layers;
+    for (l, part) in parts.iter().enumerate() {
+        let phase = opts.phase + (l as u32) * 0x10;
+        // 1. Projection Z = H W.
+        let z = deal_gemm(ctx, plan, &h, weights.layer_w(l), backend, phase)?;
+        ctx.mem.free(h.nbytes());
+        drop(h);
+        // 2. Attention scalars u (dst role), v (src role) — tiles hold my
+        //    heads' columns.
+        let u = deal_gemm(ctx, plan, &z, weights.layer_a_dst(l), backend, phase + 1)?;
+        let v = deal_gemm(ctx, plan, &z, weights.layer_a_src(l), backend, phase + 2)?;
+        debug_assert_eq!(u.cols, my_heads);
+        // 3. Fetch v rows for remote sources, then compute α locally.
+        let v_remote = fetch_v(ctx, plan, part, &v, phase + 3);
+        let alpha = ctx.compute(|| {
+            compute_alpha(part, &u, &v, &v_remote, row_lo, my_heads)
+        });
+        ctx.mem.alloc((alpha.0.len() * 4) as u64);
+        ctx.mem.free(u.nbytes() + v.nbytes() + v_remote.1.nbytes());
+        drop(u);
+        drop(v);
+        drop(v_remote);
+        // 4. Three-tensor SPMM aggregation with α as edge features.
+        let input = SpmmInput {
+            plan,
+            g: &part.csr,
+            vals: EdgeValues::PerHead { vals: &alpha.0, heads: my_heads, col_head: &col_head },
+            h: &z,
+        };
+        let mut agg = deal_spmm(ctx, &input, backend, opts.mode, opts.group_cols, phase + 4);
+        // 5. Self-edge term + bias + activation.
+        let act = if l + 1 == n_layers { Act::None } else { Act::Relu };
+        let bias = &weights.layer_b(l)[flo..fhi];
+        ctx.compute(|| {
+            for r in 0..agg.rows {
+                let self_a = &alpha.1[r * my_heads..(r + 1) * my_heads];
+                let zrow = z.row(r);
+                let row = agg.row_mut(r);
+                for j in 0..row.len() {
+                    let val = row[j] + self_a[col_head[j] as usize] * zrow[j] + bias[j];
+                    row[j] = match act {
+                        Act::None => val,
+                        Act::Relu => val.max(0.0),
+                    };
+                }
+            }
+        });
+        ctx.mem.free((alpha.0.len() * 4) as u64);
+        ctx.mem.free(z.nbytes());
+        h = agg;
+    }
+    Ok(h)
+}
+
+/// Fetch `v` rows (my heads) for every remote source referenced by the
+/// partition: one monolithic exchange (v is `heads/M` floats per node, two
+/// orders of magnitude lighter than the feature exchange). Returns
+/// `(sorted remote ids, stacked rows)` per source partition flattened into
+/// lookup vectors.
+fn fetch_v(
+    ctx: &mut Ctx,
+    plan: &PartitionPlan,
+    part: &LayerPart,
+    v: &Matrix,
+    phase: u32,
+) -> (Vec<u32>, Matrix) {
+    let (p_idx, m_idx) = plan.coords_of(ctx.rank);
+    let row_lo = plan.node_range(p_idx).0;
+    let ones = vec![1.0f32; part.csr.n_edges()];
+    let groups = build_groups(&part.csr, &ones, plan, p_idx, 0);
+    // counts to my column group peers
+    let mut per_peer = vec![0u32; plan.p];
+    for g in &groups {
+        if !g.local {
+            per_peer[g.src_part] += 1;
+        }
+    }
+    for q in 0..plan.p {
+        if q != p_idx {
+            ctx.send_service(
+                plan.rank_of(q, m_idx),
+                Tag::of(phase, COUNT_SEQ),
+                Payload::U32(vec![per_peer[q]]),
+            );
+        }
+    }
+    let expected_peers = plan.p - 1;
+    ctx.with_server(
+        |sctx| feature_server(sctx, v, row_lo, expected_peers, phase),
+        |ctx| {
+            let mut ids: Vec<u32> = Vec::new();
+            let mut rows: Vec<Matrix> = Vec::new();
+            for (seq, g) in groups.iter().enumerate() {
+                if g.local {
+                    continue;
+                }
+                let server = plan.rank_of(g.src_part, m_idx);
+                ctx.send_service(server, Tag::of(phase, seq as u32), Payload::U32(g.cols.clone()));
+            }
+            for (seq, g) in groups.iter().enumerate() {
+                if g.local {
+                    continue;
+                }
+                let server = plan.rank_of(g.src_part, m_idx);
+                let block = ctx.recv(server, Tag::of(phase, seq as u32 | RESP_BIT)).into_matrix();
+                ids.extend_from_slice(&g.cols);
+                rows.push(block);
+            }
+            let stacked = if rows.is_empty() {
+                Matrix::zeros(0, v.cols)
+            } else {
+                Matrix::vcat(&rows.iter().collect::<Vec<_>>())
+            };
+            ctx.mem.alloc(stacked.nbytes());
+            // ids arrive sorted per group but groups may interleave ranges;
+            // sort the combined index for binary-search lookup.
+            let mut order: Vec<usize> = (0..ids.len()).collect();
+            order.sort_by_key(|&i| ids[i]);
+            let sorted_ids: Vec<u32> = order.iter().map(|&i| ids[i]).collect();
+            let mut sorted_rows = Matrix::zeros(stacked.rows, stacked.cols);
+            for (to, &from) in order.iter().enumerate() {
+                sorted_rows.row_mut(to).copy_from_slice(stacked.row(from));
+            }
+            (sorted_ids, sorted_rows)
+        },
+    )
+}
+
+/// Compute per-edge per-head softmax weights and the self-edge weights.
+/// Returns `(alpha_edges [n_edges × my_heads], alpha_self [rows × my_heads])`.
+fn compute_alpha(
+    part: &LayerPart,
+    u: &Matrix,
+    v: &Matrix,
+    v_remote: &(Vec<u32>, Matrix),
+    row_lo: usize,
+    my_heads: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let csr = &part.csr;
+    let n_local = v.rows;
+    let v_of = |s: usize| -> &[f32] {
+        if s >= row_lo && s < row_lo + n_local {
+            v.row(s - row_lo)
+        } else {
+            let i = v_remote.0.binary_search(&(s as u32)).expect("v row not fetched");
+            v_remote.1.row(i)
+        }
+    };
+    let mut alpha = vec![0.0f32; csr.n_edges() * my_heads];
+    let mut alpha_self = vec![0.0f32; csr.n_rows * my_heads];
+    for r in 0..csr.n_rows {
+        let (lo, hi) = (csr.indptr[r] as usize, csr.indptr[r + 1] as usize);
+        let urow = u.row(r);
+        for h in 0..my_heads {
+            // raw scores
+            let self_score = leaky_relu(urow[h] + v.row(r)[h]);
+            let mut mx = self_score;
+            for e in lo..hi {
+                let s = csr.indices[e] as usize;
+                let sc = leaky_relu(urow[h] + v_of(s)[h]);
+                alpha[e * my_heads + h] = sc;
+                if sc > mx {
+                    mx = sc;
+                }
+            }
+            // softmax
+            let mut sum = (self_score - mx).exp();
+            let self_e = sum;
+            for e in lo..hi {
+                let x = (alpha[e * my_heads + h] - mx).exp();
+                alpha[e * my_heads + h] = x;
+                sum += x;
+            }
+            for e in lo..hi {
+                alpha[e * my_heads + h] /= sum;
+            }
+            alpha_self[r * my_heads + h] = self_e / sum;
+        }
+    }
+    (alpha, alpha_self)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, NetConfig};
+    use crate::graph::rmat::{rmat, RmatParams};
+    use crate::graph::Csr;
+    use crate::model::reference::gat_reference;
+    use crate::model::ModelConfig;
+    use crate::primitives::{gather_tiles, scatter, ExecMode};
+    use crate::sampling::sample_all_layers;
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn distributed_gat_matches_dense_reference() {
+        let el = rmat(7, 700, RmatParams::paper(), 41);
+        let g = Csr::from(&el);
+        let d = 16;
+        let heads = 4;
+        let mut rng = Rng::new(19);
+        let h0 = Matrix::random(g.n_rows, d, 1.0, &mut rng);
+        let layers = sample_all_layers(&g, 2, 4, 78);
+        let cfg = ModelConfig::gat(2, d, heads);
+        let weights = ModelWeights::random(&cfg, 13);
+        let expect = gat_reference(&layers, &h0, &weights);
+
+        for (p, m) in [(2usize, 2usize), (2, 1), (1, 4), (4, 2)] {
+            let plan = crate::partition::PartitionPlan::new(g.n_rows, d, p, m);
+            let tiles = Arc::new(scatter(&plan, &h0));
+            let mut parts_by_p: Vec<Vec<LayerPart>> = Vec::new();
+            for pi in 0..plan.p {
+                let (lo, hi) = plan.node_range(pi);
+                parts_by_p.push(
+                    layers
+                        .layers
+                        .iter()
+                        .map(|lg| LayerPart::new(lg.slice_rows(lo, hi)))
+                        .collect(),
+                );
+            }
+            let parts_by_p = Arc::new(parts_by_p);
+            let plan2 = plan.clone();
+            let weights2 = Arc::new(weights.clone());
+            let cluster = Cluster::new(plan.world(), NetConfig::default());
+            let (outs, _) = cluster
+                .run(move |ctx| {
+                    let (pi, _) = plan2.coords_of(ctx.rank);
+                    let opts = ExecOpts { mode: ExecMode::Pipelined, group_cols: 8, phase: 0x40 };
+                    gat_forward(
+                        ctx,
+                        &plan2,
+                        &parts_by_p[pi],
+                        tiles[ctx.rank].clone(),
+                        &weights2,
+                        &crate::runtime::Native,
+                        &opts,
+                    )
+                    .unwrap()
+                })
+                .unwrap();
+            let got = gather_tiles(&plan, d, &outs);
+            assert_close(&got.data, &expect.data, 2e-3, 2e-3)
+                .unwrap_or_else(|e| panic!("plan ({},{}): {}", p, m, e));
+        }
+    }
+}

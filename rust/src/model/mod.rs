@@ -1,0 +1,205 @@
+//! GNN models assembled from the distributed primitives: GCN (mean
+//! aggregation with self-loops) and GAT (4-head additive attention), the
+//! two models the paper evaluates (§4.1).
+//!
+//! Both are expressed as *per-machine* forward functions over the
+//! collaborative partition; single-machine dense references live in
+//! [`reference`] and anchor the correctness tests (distributed output must
+//! equal the dense oracle on the same sampled layer graphs).
+
+pub mod gat;
+pub mod gcn;
+pub mod reference;
+
+use crate::graph::Csr;
+use crate::primitives::ExecMode;
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Which model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Gcn,
+    Gat,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> crate::Result<ModelKind> {
+        match s {
+            "gcn" => Ok(ModelKind::Gcn),
+            "gat" => Ok(ModelKind::Gat),
+            other => anyhow::bail!("unknown model '{}' (gcn|gat)", other),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Gcn => "gcn",
+            ModelKind::Gat => "gat",
+        }
+    }
+}
+
+/// Model hyper-parameters. The paper sets hidden = input feature dim,
+/// 3 layers, 4 GAT heads, fanout 50.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub kind: ModelKind,
+    pub layers: usize,
+    /// Input = hidden = output dimension.
+    pub dim: usize,
+    /// GAT heads (must divide `dim`; ignored for GCN).
+    pub heads: usize,
+}
+
+impl ModelConfig {
+    pub fn gcn(layers: usize, dim: usize) -> Self {
+        ModelConfig { kind: ModelKind::Gcn, layers, dim, heads: 1 }
+    }
+
+    pub fn gat(layers: usize, dim: usize, heads: usize) -> Self {
+        assert!(dim % heads == 0, "dim {} must be divisible by heads {}", dim, heads);
+        ModelConfig { kind: ModelKind::Gat, layers, dim, heads }
+    }
+
+    /// Tensors per layer in the weights file.
+    pub fn tensors_per_layer(&self) -> usize {
+        match self.kind {
+            ModelKind::Gcn => 2,              // W, b
+            ModelKind::Gat => 4,              // W, b, a_src, a_dst
+        }
+    }
+}
+
+/// Model weights, replicated on every machine (they are small relative to
+/// features — the paper's GEMM design relies on this).
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub config: ModelConfig,
+    /// Flat list in layer order (see `runtime::weights`).
+    pub tensors: Vec<Matrix>,
+}
+
+impl ModelWeights {
+    /// Deterministic random initialization (Glorot-ish scale).
+    pub fn random(config: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let d = config.dim;
+        let scale = (1.0 / d as f32).sqrt();
+        let mut tensors = Vec::new();
+        for _ in 0..config.layers {
+            tensors.push(Matrix::random(d, d, scale, &mut rng)); // W
+            tensors.push(Matrix::zeros(1, d)); // b
+            if config.kind == ModelKind::Gat {
+                tensors.push(Matrix::random(d, config.heads, scale, &mut rng)); // a_src
+                tensors.push(Matrix::random(d, config.heads, scale, &mut rng)); // a_dst
+            }
+        }
+        ModelWeights { config: config.clone(), tensors }
+    }
+
+    /// Load from the python-trained interchange file.
+    pub fn load(config: &ModelConfig, path: &std::path::Path) -> crate::Result<Self> {
+        let tensors = crate::runtime::load_weights(path)?;
+        let expect = config.layers * config.tensors_per_layer();
+        anyhow::ensure!(
+            tensors.len() == expect,
+            "{} tensors in {}, expected {} for {:?}",
+            tensors.len(),
+            path.display(),
+            expect,
+            config.kind
+        );
+        Ok(ModelWeights { config: config.clone(), tensors })
+    }
+
+    pub fn layer_w(&self, l: usize) -> &Matrix {
+        &self.tensors[l * self.config.tensors_per_layer()]
+    }
+    pub fn layer_b(&self, l: usize) -> &[f32] {
+        &self.tensors[l * self.config.tensors_per_layer() + 1].data
+    }
+    pub fn layer_a_src(&self, l: usize) -> &Matrix {
+        assert_eq!(self.config.kind, ModelKind::Gat);
+        &self.tensors[l * 4 + 2]
+    }
+    pub fn layer_a_dst(&self, l: usize) -> &Matrix {
+        assert_eq!(self.config.kind, ModelKind::Gat);
+        &self.tensors[l * 4 + 3]
+    }
+}
+
+/// Execution options threaded through the distributed forward passes.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecOpts {
+    pub mode: ExecMode,
+    /// Max distinct columns per communication group (§3.5), 0 = unsplit.
+    pub group_cols: usize,
+    /// Base phase for message tags (layers offset from it).
+    pub phase: u32,
+}
+
+impl Default for ExecOpts {
+    fn default() -> Self {
+        ExecOpts { mode: ExecMode::Pipelined, group_cols: 4096, phase: 0x100 }
+    }
+}
+
+/// One machine's slice of the sampled layer graphs: for each GNN layer,
+/// the partition's rows of `G_l` plus the GCN mean weights (1/(deg+1),
+/// self-loop included as the `+1`).
+#[derive(Clone, Debug)]
+pub struct LayerPart {
+    pub csr: Csr,
+    /// Mean weights per edge: `1 / (deg(d) + 1)`.
+    pub mean_w: Vec<f32>,
+    /// Per local row self weight: `1 / (deg(d) + 1)`.
+    pub self_w: Vec<f32>,
+}
+
+impl LayerPart {
+    /// Build from a partition slice of a sampled layer graph.
+    pub fn new(csr: Csr) -> Self {
+        let mut mean_w = vec![0.0f32; csr.n_edges()];
+        let mut self_w = vec![0.0f32; csr.n_rows];
+        for d in 0..csr.n_rows {
+            let (lo, hi) = (csr.indptr[d] as usize, csr.indptr[d + 1] as usize);
+            let w = 1.0 / ((hi - lo) as f32 + 1.0);
+            self_w[d] = w;
+            for e in lo..hi {
+                mean_w[e] = w;
+            }
+        }
+        LayerPart { csr, mean_w, self_w }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_layout() {
+        let cfg = ModelConfig::gat(2, 8, 4);
+        let w = ModelWeights::random(&cfg, 1);
+        assert_eq!(w.tensors.len(), 8);
+        assert_eq!(w.layer_w(1).rows, 8);
+        assert_eq!(w.layer_a_src(1).cols, 4);
+        assert_eq!(w.layer_b(0).len(), 8);
+    }
+
+    #[test]
+    fn layer_part_weights() {
+        let csr = Csr::from_edges_rect(2, 4, &[(0, 0), (3, 0), (2, 1)]);
+        let lp = LayerPart::new(csr);
+        assert!((lp.mean_w[0] - 1.0 / 3.0).abs() < 1e-6);
+        assert!((lp.self_w[0] - 1.0 / 3.0).abs() < 1e-6);
+        assert!((lp.self_w[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn model_kind_parse() {
+        assert_eq!(ModelKind::parse("gcn").unwrap(), ModelKind::Gcn);
+        assert_eq!(ModelKind::parse("gat").unwrap(), ModelKind::Gat);
+        assert!(ModelKind::parse("mlp").is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! Topology + feature collaborative partitioning (paper §3.3, Fig. 6).
+//!
+//! The graph is 1-D partitioned into `P` contiguous destination-row ranges;
+//! the feature tensor of each graph partition is further split column-wise
+//! across `M` machines. Machine `(p, m)` (rank `p*M + m`) holds:
+//!
+//! - a full copy of partition `p`'s edges (rows `node_bounds[p] ..
+//!   node_bounds[p+1]`, global columns), and
+//! - feature columns `feat_bounds[m] .. feat_bounds[m+1]` of those rows.
+//!
+//! This is deliberately *lightweight* (pure index arithmetic — the paper's
+//! Observation #1: advanced partitioners cost more than they save in a
+//! single forward pass) and is what bounds both the memory and the
+//! communication of the distributed primitives (§3.4, Tables 1–3).
+
+use crate::graph::NodeId;
+use crate::util::even_ranges;
+
+/// The collaborative partition plan shared by every machine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionPlan {
+    pub n_nodes: usize,
+    pub feature_dim: usize,
+    /// Number of graph (row) partitions.
+    pub p: usize,
+    /// Number of feature (column) partitions per graph partition.
+    pub m: usize,
+    /// `p + 1` node range boundaries.
+    pub node_bounds: Vec<usize>,
+    /// `m + 1` feature column boundaries.
+    pub feat_bounds: Vec<usize>,
+}
+
+impl PartitionPlan {
+    pub fn new(n_nodes: usize, feature_dim: usize, p: usize, m: usize) -> Self {
+        assert!(p >= 1 && m >= 1);
+        assert!(
+            feature_dim >= m,
+            "feature dim {} must be >= feature parts {}",
+            feature_dim,
+            m
+        );
+        PartitionPlan {
+            n_nodes,
+            feature_dim,
+            p,
+            m,
+            node_bounds: even_ranges(n_nodes, p),
+            feat_bounds: even_ranges(feature_dim, m),
+        }
+    }
+
+    /// Total machines in the plan.
+    pub fn world(&self) -> usize {
+        self.p * self.m
+    }
+
+    /// Rank of machine at (graph part, feature part).
+    #[inline]
+    pub fn rank_of(&self, p_idx: usize, m_idx: usize) -> usize {
+        debug_assert!(p_idx < self.p && m_idx < self.m);
+        p_idx * self.m + m_idx
+    }
+
+    /// (graph part, feature part) of a rank.
+    #[inline]
+    pub fn coords_of(&self, rank: usize) -> (usize, usize) {
+        debug_assert!(rank < self.world());
+        (rank / self.m, rank % self.m)
+    }
+
+    /// Node (row) range of graph partition `p_idx`.
+    #[inline]
+    pub fn node_range(&self, p_idx: usize) -> (usize, usize) {
+        (self.node_bounds[p_idx], self.node_bounds[p_idx + 1])
+    }
+
+    /// Number of rows in graph partition `p_idx`.
+    #[inline]
+    pub fn rows_of(&self, p_idx: usize) -> usize {
+        self.node_bounds[p_idx + 1] - self.node_bounds[p_idx]
+    }
+
+    /// Feature column range of feature partition `m_idx`.
+    #[inline]
+    pub fn feat_range(&self, m_idx: usize) -> (usize, usize) {
+        (self.feat_bounds[m_idx], self.feat_bounds[m_idx + 1])
+    }
+
+    /// Width of feature partition `m_idx`.
+    #[inline]
+    pub fn feat_width(&self, m_idx: usize) -> usize {
+        self.feat_bounds[m_idx + 1] - self.feat_bounds[m_idx]
+    }
+
+    /// Graph partition owning global node `v`.
+    #[inline]
+    pub fn node_owner(&self, v: NodeId) -> usize {
+        crate::graph::builder::owner_of(v as usize, &self.node_bounds)
+    }
+
+    /// Ranks sharing graph partition `p_idx` (Fig. 6: "machines hosting the
+    /// same partition"), in feature-part order.
+    pub fn row_group(&self, p_idx: usize) -> Vec<usize> {
+        (0..self.m).map(|m_idx| self.rank_of(p_idx, m_idx)).collect()
+    }
+
+    /// Ranks holding feature part `m_idx` across all graph partitions (the
+    /// machines a feature-exchange SPMM talks to), in graph-part order.
+    pub fn col_group(&self, m_idx: usize) -> Vec<usize> {
+        (0..self.p).map(|p_idx| self.rank_of(p_idx, m_idx)).collect()
+    }
+
+    /// A plan with the same machines reinterpreted with a different (p, m)
+    /// factorization — Fig. 18 sweeps these configurations.
+    pub fn refactor(&self, p: usize, m: usize) -> PartitionPlan {
+        assert_eq!(p * m, self.world(), "must keep machine count");
+        PartitionPlan::new(self.n_nodes, self.feature_dim, p, m)
+    }
+
+    /// Structural invariants (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.node_bounds.len() != self.p + 1 || self.feat_bounds.len() != self.m + 1 {
+            return Err("bounds arity".into());
+        }
+        if self.node_bounds[0] != 0 || *self.node_bounds.last().unwrap() != self.n_nodes {
+            return Err("node bounds must cover [0, n)".into());
+        }
+        if self.feat_bounds[0] != 0 || *self.feat_bounds.last().unwrap() != self.feature_dim {
+            return Err("feature bounds must cover [0, D)".into());
+        }
+        // every rank appears exactly once across row groups
+        let mut seen = vec![false; self.world()];
+        for p_idx in 0..self.p {
+            for r in self.row_group(p_idx) {
+                if seen[r] {
+                    return Err(format!("rank {} in two row groups", r));
+                }
+                seen[r] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("rank missing from row groups".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run, Config};
+
+    #[test]
+    fn figure6_layout() {
+        // The paper's toy example: 8 nodes, P=2, M=2, 4 machines.
+        let plan = PartitionPlan::new(8, 4, 2, 2);
+        assert_eq!(plan.world(), 4);
+        assert_eq!(plan.node_range(0), (0, 4));
+        assert_eq!(plan.node_range(1), (4, 8));
+        assert_eq!(plan.feat_range(0), (0, 2));
+        assert_eq!(plan.feat_range(1), (2, 4));
+        // machines 0,1 host partition 0; machines 2,3 host partition 1
+        assert_eq!(plan.row_group(0), vec![0, 1]);
+        assert_eq!(plan.row_group(1), vec![2, 3]);
+        assert_eq!(plan.col_group(0), vec![0, 2]);
+        assert_eq!(plan.col_group(1), vec![1, 3]);
+        assert_eq!(plan.coords_of(3), (1, 1));
+        assert_eq!(plan.node_owner(5), 1);
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn refactor_preserves_world() {
+        let plan = PartitionPlan::new(100, 64, 4, 2);
+        let r = plan.refactor(2, 4);
+        assert_eq!(r.world(), plan.world());
+        assert_eq!(r.p, 2);
+        r.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "must keep machine count")]
+    fn refactor_rejects_different_world() {
+        PartitionPlan::new(100, 64, 4, 2).refactor(3, 2);
+    }
+
+    #[test]
+    fn plan_invariants_property() {
+        run(Config::default().cases(32), |rng| {
+            let p = rng.range(1, 6);
+            let m = rng.range(1, 6);
+            let n = rng.range(p.max(2), 500);
+            let d = rng.range(m.max(4), 300);
+            let plan = PartitionPlan::new(n, d, p, m);
+            plan.validate()?;
+            // node_owner is consistent with node_range
+            for _ in 0..20 {
+                let v = rng.next_below(n) as NodeId;
+                let owner = plan.node_owner(v);
+                let (lo, hi) = plan.node_range(owner);
+                if !(lo..hi).contains(&(v as usize)) {
+                    return Err(format!("node {} not in range of owner {}", v, owner));
+                }
+            }
+            // coords round-trip
+            for r in 0..plan.world() {
+                let (pi, mi) = plan.coords_of(r);
+                if plan.rank_of(pi, mi) != r {
+                    return Err("coords round trip".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,262 @@
+//! Distributed GEMM: `H' = H @ W` with `H` collaboratively partitioned and
+//! `W` replicated (paper §3.4, Fig. 7, Table 1; bench `fig16_gemm`).
+//!
+//! **Deal's ring GEMM** (Fig. 7b) avoids CAGNET's full-size intermediate:
+//! within a row group (the `M` machines sharing one graph partition), each
+//! machine re-shards its `rows × D/M` tile *row-wise* into `M` blocks and
+//! ring-exchanges them (step 1), so machine `m` temporarily owns sub-rows
+//! `m` across the full feature width. It multiplies each arriving block
+//! with the matching rows of `W` and accumulates — the intermediate is one
+//! `rows/M × D/M` block plus the `rows/M × D_out` accumulator, never
+//! `rows × D_out`. A reverse ring exchange (step 3) restores the
+//! column-partitioned layout. Communication: `2·(M-1)·rows·D/M²` per
+//! machine (Table 1 "Ours").
+//!
+//! **CAGNET baseline** (Fig. 7a): every machine computes the full partial
+//! `rows × D_out` from its column slice (memory `N·D_out/P`), then the row
+//! group reduce-scatters — each machine ships `(M-1)` blocks of
+//! `rows × D_out/M` (Table 1 "SOTA").
+
+use crate::cluster::{Ctx, Payload, Tag};
+use crate::partition::PartitionPlan;
+use crate::runtime::Backend;
+use crate::tensor::Matrix;
+use crate::util::even_ranges;
+
+/// Deal ring GEMM, per-machine. `local` is this rank's `rows_of(p) ×
+/// feat_width(m)` tile; `w` is the replicated `feature_dim × d_out`
+/// weight. Returns this rank's `rows_of(p) × out_width(m)` tile of `H@W`
+/// (output columns split by `even_ranges(d_out, plan.m)`).
+pub fn deal_gemm(
+    ctx: &mut Ctx,
+    plan: &PartitionPlan,
+    local: &Matrix,
+    w: &Matrix,
+    backend: &dyn Backend,
+    phase: u32,
+) -> crate::Result<Matrix> {
+    let (p_idx, m_idx) = plan.coords_of(ctx.rank);
+    let rows = plan.rows_of(p_idx);
+    let mm = plan.m;
+    let d_out = w.cols;
+    assert_eq!(local.rows, rows);
+    assert_eq!(local.cols, plan.feat_width(m_idx));
+    assert_eq!(w.rows, plan.feature_dim);
+    let group = plan.row_group(p_idx);
+    let sub = even_ranges(rows, mm);
+    let out_bounds = even_ranges(d_out, mm);
+
+    if mm == 1 {
+        // Degenerate: the whole feature width is local.
+        let out = ctx.compute(|| backend.gemm(local, w))?;
+        ctx.mem.alloc(out.nbytes());
+        return Ok(out);
+    }
+
+    // ---- Step 1: row-wise re-shard via ring all-to-all (sends up front,
+    // non-blocking; receives interleaved with compute below).
+    for s in 1..mm {
+        let j = (m_idx + s) % mm;
+        let block = local.slice_rows(sub[j], sub[j + 1]);
+        ctx.send(group[j], Tag::of(phase, s as u32), Payload::Matrix(block));
+    }
+
+    // Accumulator for my sub-rows across the full output width: this is
+    // the *only* sizeable intermediate (rows/M × D_out).
+    let my_rows = sub[m_idx + 1] - sub[m_idx];
+    let mut acc = Matrix::zeros(my_rows, d_out);
+    ctx.mem.alloc(acc.nbytes());
+
+    // Local contribution first — overlaps the in-flight transfers.
+    let (flo, fhi) = plan.feat_range(m_idx);
+    {
+        let my_block = local.slice_rows(sub[m_idx], sub[m_idx + 1]);
+        let w_rows = w.slice_rows(flo, fhi);
+        let part = ctx.compute(|| backend.gemm(&my_block, &w_rows))?;
+        add_assign(&mut acc, &part);
+    }
+
+    // Ring stages: receive block from (m - s) mod M, multiply with the
+    // matching W rows, accumulate.
+    for s in 1..mm {
+        let src_pos = (m_idx + mm - s) % mm;
+        let block = ctx.recv(group[src_pos], Tag::of(phase, s as u32)).into_matrix();
+        ctx.mem.with_transient(block.nbytes(), || ());
+        let (slo, shi) = plan.feat_range(src_pos);
+        let w_rows = w.slice_rows(slo, shi);
+        let part = ctx.compute(|| backend.gemm(&block, &w_rows))?;
+        add_assign(&mut acc, &part);
+    }
+
+    // ---- Step 3: reverse exchange to restore column partitioning.
+    let phase2 = phase ^ 0x8000_0000;
+    for s in 1..mm {
+        let j = (m_idx + s) % mm;
+        let block = acc.slice_cols(out_bounds[j], out_bounds[j + 1]);
+        ctx.send(group[j], Tag::of(phase2, s as u32), Payload::Matrix(block));
+    }
+    let my_width = out_bounds[m_idx + 1] - out_bounds[m_idx];
+    let mut out = Matrix::zeros(rows, my_width);
+    ctx.mem.alloc(out.nbytes());
+    {
+        let mine = acc.slice_cols(out_bounds[m_idx], out_bounds[m_idx + 1]);
+        out.set_rows(sub[m_idx], &mine);
+    }
+    for s in 1..mm {
+        let src_pos = (m_idx + mm - s) % mm;
+        let block = ctx.recv(group[src_pos], Tag::of(phase2, s as u32)).into_matrix();
+        out.set_rows(sub[src_pos], &block);
+    }
+    ctx.mem.free(acc.nbytes());
+    Ok(out)
+}
+
+/// CAGNET-style all-reduce GEMM, per-machine (the Table 1 "SOTA"
+/// baseline): full-size partial + reduce-scatter within the row group.
+pub fn cagnet_gemm(
+    ctx: &mut Ctx,
+    plan: &PartitionPlan,
+    local: &Matrix,
+    w: &Matrix,
+    backend: &dyn Backend,
+    phase: u32,
+) -> crate::Result<Matrix> {
+    let (p_idx, m_idx) = plan.coords_of(ctx.rank);
+    let _rows = plan.rows_of(p_idx);
+    let mm = plan.m;
+    let d_out = w.cols;
+    let group = plan.row_group(p_idx);
+    let out_bounds = even_ranges(d_out, mm);
+    let (flo, fhi) = plan.feat_range(m_idx);
+
+    // Full-size partial result: rows × d_out — the memory cost Table 1
+    // charges CAGNET for.
+    let w_rows = w.slice_rows(flo, fhi);
+    let partial = ctx.compute(|| backend.gemm(local, &w_rows))?;
+    ctx.mem.alloc(partial.nbytes());
+
+    // Reduce-scatter: send every other member its output-column slice.
+    for (j, &rank) in group.iter().enumerate() {
+        if j != m_idx {
+            let block = partial.slice_cols(out_bounds[j], out_bounds[j + 1]);
+            ctx.send(rank, Tag::of(phase, m_idx as u32), Payload::Matrix(block));
+        }
+    }
+    let mut out = partial.slice_cols(out_bounds[m_idx], out_bounds[m_idx + 1]);
+    ctx.mem.alloc(out.nbytes());
+    for (j, &rank) in group.iter().enumerate() {
+        if j != m_idx {
+            let block = ctx.recv(rank, Tag::of(phase, j as u32)).into_matrix();
+            add_assign(&mut out, &block);
+        }
+    }
+    ctx.mem.free(partial.nbytes());
+    Ok(out)
+}
+
+fn add_assign(acc: &mut Matrix, other: &Matrix) {
+    assert_eq!((acc.rows, acc.cols), (other.rows, other.cols));
+    for (a, &b) in acc.data.iter_mut().zip(&other.data) {
+        *a += b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, NetConfig};
+    use crate::primitives::{gather_tiles, scatter};
+    use crate::util::prop::{assert_close, run, Config};
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn run_gemm(
+        plan: &PartitionPlan,
+        h: &Matrix,
+        w: &Matrix,
+        deal: bool,
+    ) -> (Matrix, crate::cluster::ClusterReport) {
+        let tiles = Arc::new(scatter(plan, h));
+        let plan2 = plan.clone();
+        let w2 = Arc::new(w.clone());
+        let cluster = Cluster::new(plan.world(), NetConfig::default());
+        let (outs, report) = cluster
+            .run(move |ctx| {
+                let local = &tiles[ctx.rank];
+                let backend = crate::runtime::Native;
+                if deal {
+                    deal_gemm(ctx, &plan2, local, &w2, &backend, 1).unwrap()
+                } else {
+                    cagnet_gemm(ctx, &plan2, local, &w2, &backend, 1).unwrap()
+                }
+            })
+            .unwrap();
+        (gather_tiles(plan, w.cols, &outs), report)
+    }
+
+    #[test]
+    fn deal_gemm_matches_dense_oracle() {
+        let mut rng = Rng::new(8);
+        let plan = PartitionPlan::new(24, 8, 2, 2);
+        let h = Matrix::random(24, 8, 1.0, &mut rng);
+        let w = Matrix::random(8, 6, 1.0, &mut rng);
+        let (got, _) = run_gemm(&plan, &h, &w, true);
+        let expect = h.matmul(&w);
+        assert_close(&got.data, &expect.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn cagnet_gemm_matches_dense_oracle() {
+        let mut rng = Rng::new(9);
+        let plan = PartitionPlan::new(20, 9, 2, 3);
+        let h = Matrix::random(20, 9, 1.0, &mut rng);
+        let w = Matrix::random(9, 5, 1.0, &mut rng);
+        let (got, _) = run_gemm(&plan, &h, &w, false);
+        let expect = h.matmul(&w);
+        assert_close(&got.data, &expect.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn gemm_property_random_plans() {
+        run(Config::default().cases(10), |rng| {
+            let p = rng.range(1, 4);
+            let m = rng.range(1, 4);
+            let n = rng.range(p * m * 2, 60);
+            let d = rng.range(m * 2, 24);
+            let d_out = rng.range(2, 20);
+            let plan = PartitionPlan::new(n, d, p, m);
+            let h = Matrix::random(n, d, 1.0, rng);
+            let w = Matrix::random(d, d_out, 1.0, rng);
+            let expect = h.matmul(&w);
+            for deal in [true, false] {
+                let (got, _) = run_gemm(&plan, &h, &w, deal);
+                assert_close(&got.data, &expect.data, 1e-3, 1e-3)
+                    .map_err(|e| format!("deal={}: {}", deal, e))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deal_moves_fewer_bytes_and_less_memory_than_cagnet() {
+        let mut rng = Rng::new(10);
+        // Need M > 2 for the M/2 communication advantage to show.
+        let plan = PartitionPlan::new(128, 64, 2, 4);
+        let h = Matrix::random(128, 64, 1.0, &mut rng);
+        let w = Matrix::random(64, 64, 1.0, &mut rng);
+        let (_, deal_rep) = run_gemm(&plan, &h, &w, true);
+        let (_, cag_rep) = run_gemm(&plan, &h, &w, false);
+        assert!(
+            deal_rep.total_bytes() < cag_rep.total_bytes(),
+            "deal bytes {} !< cagnet bytes {}",
+            deal_rep.total_bytes(),
+            cag_rep.total_bytes()
+        );
+        assert!(
+            deal_rep.max_peak_mem() < cag_rep.max_peak_mem(),
+            "deal mem {} !< cagnet mem {}",
+            deal_rep.max_peak_mem(),
+            cag_rep.max_peak_mem()
+        );
+    }
+}

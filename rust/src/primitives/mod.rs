@@ -1,0 +1,153 @@
+//! Deal's distributed GNN primitives (paper §3.4) and their baselines.
+//!
+//! All primitives operate on the collaborative partition of `partition::
+//! PartitionPlan`: machine `(p, m)` holds graph partition `p` (rows, global
+//! columns) and feature columns `m` of those rows. Every primitive is
+//! written as a *per-machine* function called inside a `cluster::Ctx`
+//! closure, moving real bytes through the simulated network:
+//!
+//! - [`gemm`] — Deal's ring GEMM vs. CAGNET's all-reduce GEMM (Fig. 7,
+//!   Table 1; bench `fig16_gemm`).
+//! - [`spmm`] — Deal's feature-exchange SPMM vs. exchange-G0 vs.
+//!   2-D-style SPMM (Figs. 8–9, Table 2; bench `fig17_spmm`), with the
+//!   §3.5 execution modes (monolithic / partitioned groups / pipelined,
+//!   Figs. 11–12; bench `fig19_pipeline`).
+//! - [`sddmm`] — output-oriented SDDMM, approach (ii) vs. (i) (Fig. 10,
+//!   Table 3; bench `fig18_sddmm`).
+//! - [`groups`] — the §3.5 non-zero group partitioning shared by SPMM and
+//!   SDDMM.
+//! - [`costs`] — the closed-form memory/communication models of
+//!   Tables 1–3, validated against measured byte counters.
+
+pub mod costs;
+pub mod gemm;
+pub mod groups;
+pub mod sddmm;
+pub mod spmm;
+
+use crate::partition::PartitionPlan;
+use crate::tensor::Matrix;
+
+/// Execution mode for the sparse primitives (§3.5 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Per-edge fetch: one feature row per non-zero, duplicates and all —
+    /// the unoptimized baseline Fig. 19's "partitioned communication"
+    /// speedup is measured against.
+    Naive,
+    /// Fetch every remote feature (distinct columns) in one exchange,
+    /// then compute.
+    Monolithic,
+    /// Partitioned communication: group-by-group fetch + compute.
+    Grouped,
+    /// Grouped with pipelined prefetch (Fig. 12(b,c) reorderings).
+    Pipelined,
+}
+
+impl ExecMode {
+    pub const ALL: [ExecMode; 4] = [
+        ExecMode::Naive,
+        ExecMode::Monolithic,
+        ExecMode::Grouped,
+        ExecMode::Pipelined,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Naive => "naive",
+            ExecMode::Monolithic => "monolithic",
+            ExecMode::Grouped => "grouped",
+            ExecMode::Pipelined => "pipelined",
+        }
+    }
+}
+
+/// Scatter a full `N × D` matrix into per-rank tiles according to the plan
+/// (rank `(p, m)` gets rows of partition `p`, columns of feature part `m`).
+/// Test/driver helper — production feature loading uses
+/// `coordinator::feature_prep`.
+pub fn scatter(plan: &PartitionPlan, full: &Matrix) -> Vec<Matrix> {
+    assert_eq!(full.rows, plan.n_nodes);
+    assert_eq!(full.cols, plan.feature_dim);
+    (0..plan.world())
+        .map(|rank| {
+            let (p, m) = plan.coords_of(rank);
+            let (rlo, rhi) = plan.node_range(p);
+            let (clo, chi) = plan.feat_range(m);
+            full.slice_rows(rlo, rhi).slice_cols(clo, chi)
+        })
+        .collect()
+}
+
+/// Reassemble per-rank tiles into the full matrix (inverse of `scatter`).
+/// `out_dim` is the feature dimension of the tiles' plan (which may differ
+/// from `plan.feature_dim` after a GEMM changed the width).
+pub fn gather_tiles(plan: &PartitionPlan, out_dim: usize, tiles: &[Matrix]) -> Matrix {
+    assert_eq!(tiles.len(), plan.world());
+    let out_bounds = crate::util::even_ranges(out_dim, plan.m);
+    let mut full = Matrix::zeros(plan.n_nodes, out_dim);
+    for rank in 0..plan.world() {
+        let (p, m) = plan.coords_of(rank);
+        let (rlo, _rhi) = plan.node_range(p);
+        let (clo, chi) = (out_bounds[m], out_bounds[m + 1]);
+        let t = &tiles[rank];
+        assert_eq!(t.rows, plan.rows_of(p), "rank {} row mismatch", rank);
+        assert_eq!(t.cols, chi - clo, "rank {} col mismatch", rank);
+        for r in 0..t.rows {
+            full.row_mut(rlo + r)[clo..chi].copy_from_slice(t.row(r));
+        }
+    }
+    full
+}
+
+/// Mean-aggregation edge weights for a (sub-)CSR: `w(e into d) = 1/deg(d)`.
+/// The GCN aggregation the paper's workflow example uses.
+pub fn mean_weights(csr: &crate::graph::Csr) -> Vec<f32> {
+    let mut w = vec![0.0f32; csr.n_edges()];
+    for d in 0..csr.n_rows {
+        let (lo, hi) = (csr.indptr[d] as usize, csr.indptr[d + 1] as usize);
+        let deg = (hi - lo) as f32;
+        for e in lo..hi {
+            w[e] = 1.0 / deg;
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Csr;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let mut rng = Rng::new(4);
+        let plan = PartitionPlan::new(10, 6, 2, 3);
+        let full = Matrix::random(10, 6, 1.0, &mut rng);
+        let tiles = scatter(&plan, &full);
+        assert_eq!(tiles.len(), 6);
+        let back = gather_tiles(&plan, 6, &tiles);
+        assert_eq!(back, full);
+    }
+
+    #[test]
+    fn mean_weights_sum_to_one_per_row() {
+        let g = Csr::from_edges(4, &[(0, 1), (2, 1), (3, 1), (1, 0)]);
+        let w = mean_weights(&g);
+        for d in 0..g.n_rows {
+            let (lo, hi) = (g.indptr[d] as usize, g.indptr[d + 1] as usize);
+            if hi > lo {
+                let s: f32 = w[lo..hi].iter().sum();
+                assert!((s - 1.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn exec_mode_names() {
+        for m in ExecMode::ALL {
+            assert!(!m.name().is_empty());
+        }
+    }
+}

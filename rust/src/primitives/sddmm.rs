@@ -1,0 +1,405 @@
+//! Distributed SDDMM: `attn = G ⊙ (H_dst · H_src^T)` (paper §3.4 Fig. 10,
+//! Table 3; benches `fig18_sddmm`, `fig19_pipeline`).
+//!
+//! Every non-zero `(s, d)` needs the *full-width* dot product of rows `d`
+//! and `s` of `H` — under the collaborative partition both rows are
+//! scattered across feature parts, so the computation is assigned
+//! **output-oriented**: results land where the sparse matrix lives.
+//!
+//! - **Approach (ii) — Deal**: the row group splits partition `p`'s rows
+//!   into `M` sub-ranges; machine `(p, m)` computes the non-zeros of
+//!   sub-range `m` only (fetching `1/M` of the dst rows and only its
+//!   sub-range's src rows), then the group all-exchanges the scores
+//!   (`NZ(M-1)/PM` result traffic, Table 3).
+//! - **Approach (i) — baseline**: every machine computes *all* of
+//!   partition `p`'s non-zeros, duplicating compute and fetching the full
+//!   dst range + full src set (`(M + MP − 2)·ND/MP` traffic).
+//!
+//! Fetches use the same concurrent feature server as SPMM; the §3.5
+//! execution modes (monolithic / grouped / pipelined) schedule the
+//! per-source-partition column groups.
+
+use crate::cluster::{Ctx, Payload, Tag};
+use crate::graph::Csr;
+use crate::partition::PartitionPlan;
+use crate::tensor::Matrix;
+use crate::util::even_ranges;
+
+use super::groups::build_groups;
+use super::spmm::feature_server;
+use super::ExecMode;
+
+const COUNT_SEQ: u32 = u32::MAX;
+const RESP_BIT: u32 = 0x8000_0000;
+
+/// Inputs for one machine's SDDMM call.
+pub struct SddmmInput<'a> {
+    /// Plan whose `feature_dim` equals `H`'s width.
+    pub plan: &'a PartitionPlan,
+    /// Local partition of the graph (`rows_of(p)` rows, global columns).
+    pub g: &'a Csr,
+    /// Local feature tile `rows_of(p) × feat_width(m)` (src and dst roles
+    /// both read from `H^{(l-1)}`, as in GAT attention).
+    pub h: &'a Matrix,
+}
+
+/// Which SDDMM algorithm (Table 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SddmmAlgo {
+    /// Approach (i): duplicate the computation across the row group.
+    Duplicate,
+    /// Approach (ii): split non-zeros among the row group, exchange results.
+    Split,
+}
+
+/// Distributed SDDMM (per machine). Returns the full attention vector for
+/// this machine's partition, aligned with `input.g`'s edge order — every
+/// row-group member ends with the complete vector (both approaches
+/// guarantee it; that is the co-location property §3.4 wants for the
+/// following SPMM).
+pub fn sddmm(
+    ctx: &mut Ctx,
+    input: &SddmmInput,
+    algo: SddmmAlgo,
+    mode: ExecMode,
+    max_cols_per_group: usize,
+    phase: u32,
+) -> Vec<f32> {
+    let plan = input.plan;
+    let (p_idx, m_idx) = plan.coords_of(ctx.rank);
+    let rows = plan.rows_of(p_idx);
+    let row_lo = plan.node_range(p_idx).0;
+    assert_eq!(input.g.n_rows, rows);
+
+    // ---- Responsibility split.
+    let sub = even_ranges(rows, plan.m);
+    let (my_rlo, my_rhi) = match algo {
+        SddmmAlgo::Split => (sub[m_idx], sub[m_idx + 1]),
+        SddmmAlgo::Duplicate => (0, rows),
+    };
+    // Sub-CSR of my responsible rows (rows rebased; edge ids offset by
+    // indptr[my_rlo]).
+    let my_g = input.g.slice_rows(my_rlo, my_rhi);
+    let eid_base = input.g.indptr[my_rlo] as usize;
+
+    // ---- Build fetch groups over my responsible edges.
+    let ones = vec![1.0f32; my_g.n_edges()];
+    let groups = ctx.compute(|| match mode {
+        ExecMode::Naive => {
+            super::groups::build_naive_groups(&my_g, &ones, plan, p_idx)
+        }
+        ExecMode::Monolithic => build_groups(&my_g, &ones, plan, p_idx, 0),
+        _ => build_groups(&my_g, &ones, plan, p_idx, max_cols_per_group),
+    });
+
+    // ---- Count messages to every machine's server.
+    // Requests to server (q, j):
+    //  - src fetches: one per group per feature part j (incl. j == m for
+    //    remote partitions; for the own partition, j == m is local).
+    //  - dst fetches: one to each row-group peer (p, j), j != m.
+    let mut counts = vec![0u32; plan.world()];
+    for g in &groups {
+        for j in 0..plan.m {
+            if g.local && j == m_idx {
+                continue; // fully local slice
+            }
+            counts[plan.rank_of(g.src_part, j)] += 1;
+        }
+    }
+    if my_rhi > my_rlo {
+        for j in 0..plan.m {
+            if j != m_idx {
+                counts[plan.rank_of(p_idx, j)] += 1; // dst fetch
+            }
+        }
+    }
+    for rank in 0..plan.world() {
+        if rank != ctx.rank {
+            ctx.send_service(rank, Tag::of(phase, COUNT_SEQ), Payload::U32(vec![counts[rank]]));
+        }
+    }
+
+    let h = input.h;
+    let expected_peers = plan.world() - 1;
+    let scores_mine = ctx.with_server(
+        |sctx| feature_server(sctx, h, row_lo, expected_peers, phase),
+        |ctx| {
+            // ---- Fetch the dst rows (my responsible sub-range, all parts).
+            let mut seq: u32 = 0;
+            let mut dst_reqs: Vec<(usize, u32)> = Vec::new(); // (rank, seq) per part j
+            if my_rhi > my_rlo {
+                let dst_ids: Vec<u32> = (my_rlo..my_rhi).map(|r| (r + row_lo) as u32).collect();
+                for j in 0..plan.m {
+                    if j != m_idx {
+                        let rank = plan.rank_of(p_idx, j);
+                        ctx.send_service(rank, Tag::of(phase, seq), Payload::U32(dst_ids.clone()));
+                        dst_reqs.push((rank, seq));
+                        seq += 1;
+                    }
+                }
+            }
+            // Assemble full-width dst features for my sub-range.
+            let mut dst_full = Matrix::zeros(my_rhi - my_rlo, plan.feature_dim);
+            ctx.mem.alloc(dst_full.nbytes());
+            {
+                let (flo, fhi) = plan.feat_range(m_idx);
+                for r in my_rlo..my_rhi {
+                    dst_full.row_mut(r - my_rlo)[flo..fhi].copy_from_slice(h.row(r));
+                }
+            }
+            for (i, &(rank, s)) in dst_reqs.iter().enumerate() {
+                let j = if i < m_idx { i } else { i + 1 }; // part index of this response
+                let block = ctx.recv(rank, Tag::of(phase, s | RESP_BIT)).into_matrix();
+                let (flo, fhi) = plan.feat_range(j);
+                for r in 0..block.rows {
+                    dst_full.row_mut(r)[flo..fhi].copy_from_slice(block.row(r));
+                }
+            }
+
+            // ---- Schedule src fetch groups per execution mode.
+            let mut scores = vec![0.0f32; input.g.n_edges()];
+            ctx.mem.alloc((scores.len() * 4) as u64);
+            // order: pipelined puts own-partition (cheapest) groups first
+            let order: Vec<usize> = match mode {
+                ExecMode::Pipelined => {
+                    let mut o: Vec<usize> = (0..groups.len()).filter(|&i| groups[i].local).collect();
+                    o.extend((0..groups.len()).filter(|&i| !groups[i].local));
+                    o
+                }
+                _ => (0..groups.len()).collect(),
+            };
+            let lookahead = match mode {
+                ExecMode::Naive | ExecMode::Monolithic => groups.len(),
+                ExecMode::Grouped => 1,
+                ExecMode::Pipelined => 2,
+            };
+            // send requests with lookahead; each group needs M slices
+            // (minus the local slice for own-partition groups)
+            let mut req_seq: Vec<Vec<(usize, u32, usize)>> = vec![Vec::new(); groups.len()];
+            fn send_group(
+                ctx: &mut Ctx,
+                plan: &PartitionPlan,
+                groups: &[super::groups::EdgeGroup],
+                m_idx: usize,
+                phase: u32,
+                gi: usize,
+                seq: &mut u32,
+                req_seq: &mut [Vec<(usize, u32, usize)>],
+            ) {
+                let g = &groups[gi];
+                for j in 0..plan.m {
+                    if g.local && j == m_idx {
+                        continue;
+                    }
+                    let rank = plan.rank_of(g.src_part, j);
+                    ctx.send_service(rank, Tag::of(phase, *seq), Payload::U32(g.cols.clone()));
+                    req_seq[gi].push((rank, *seq, j));
+                    *seq += 1;
+                }
+            }
+            for &gi in order.iter().take(lookahead) {
+                send_group(ctx, plan, &groups, m_idx, phase, gi, &mut seq, &mut req_seq);
+            }
+            for (pos, &gi) in order.iter().enumerate() {
+                if pos + lookahead < order.len() {
+                    send_group(ctx, plan, &groups, m_idx, phase, order[pos + lookahead], &mut seq, &mut req_seq);
+                }
+                let g = &groups[gi];
+                // assemble full-width src features for this group's cols
+                let mut src_full = Matrix::zeros(g.cols.len(), plan.feature_dim);
+                let sb = src_full.nbytes();
+                ctx.mem.alloc(sb);
+                if g.local {
+                    let (flo, fhi) = plan.feat_range(m_idx);
+                    for (i, &c) in g.cols.iter().enumerate() {
+                        src_full.row_mut(i)[flo..fhi].copy_from_slice(h.row(c as usize - row_lo));
+                    }
+                }
+                for &(rank, s, j) in &req_seq[gi] {
+                    let block = ctx.recv(rank, Tag::of(phase, s | RESP_BIT)).into_matrix();
+                    let (flo, fhi) = plan.feat_range(j);
+                    for r in 0..block.rows {
+                        src_full.row_mut(r)[flo..fhi].copy_from_slice(block.row(r));
+                    }
+                }
+                // dot products
+                ctx.compute(|| {
+                    for (e, &(r, ci)) in g.edges.iter().enumerate() {
+                        let d = dst_full.row(r as usize);
+                        let s = src_full.row(ci as usize);
+                        let mut acc = 0.0f32;
+                        for (a, b) in d.iter().zip(s) {
+                            acc += a * b;
+                        }
+                        scores[eid_base + g.eids[e] as usize] = acc;
+                    }
+                });
+                ctx.mem.free(sb);
+            }
+            ctx.mem.free(dst_full.nbytes());
+            scores
+        },
+    );
+
+    // ---- Result exchange (approach ii only): all-gather scores within the
+    // row group so everyone holds the full attention vector.
+    match algo {
+        SddmmAlgo::Duplicate => scores_mine,
+        SddmmAlgo::Split => {
+            let group = plan.row_group(p_idx);
+            let phase2 = phase ^ 0x2000_0000;
+            let my_scores = scores_mine[input.g.indptr[my_rlo] as usize
+                ..input.g.indptr[my_rhi] as usize]
+                .to_vec();
+            for (j, &rank) in group.iter().enumerate() {
+                if j != m_idx {
+                    ctx.send(rank, Tag::of(phase2, m_idx as u32), Payload::F32(my_scores.clone()));
+                }
+            }
+            let mut full = scores_mine;
+            for (j, &rank) in group.iter().enumerate() {
+                if j != m_idx {
+                    let part = ctx.recv(rank, Tag::of(phase2, j as u32)).into_f32();
+                    let (lo, hi) = (sub[j], sub[j + 1]);
+                    let (elo, ehi) = (input.g.indptr[lo] as usize, input.g.indptr[hi] as usize);
+                    assert_eq!(part.len(), ehi - elo);
+                    full[elo..ehi].copy_from_slice(&part);
+                }
+            }
+            full
+        }
+    }
+}
+
+/// Dense single-machine oracle: `scores[e=(s,d)] = dot(H[d], H[s])`.
+pub fn sddmm_reference(g: &Csr, h: &Matrix) -> Vec<f32> {
+    assert_eq!(h.rows, g.n_cols);
+    let mut out = vec![0.0f32; g.n_edges()];
+    for d in 0..g.n_rows {
+        let (lo, hi) = (g.indptr[d] as usize, g.indptr[d + 1] as usize);
+        let drow = h.row(d);
+        for e in lo..hi {
+            let srow = h.row(g.indices[e] as usize);
+            let mut acc = 0.0f32;
+            for (a, b) in drow.iter().zip(srow) {
+                acc += a * b;
+            }
+            out[e] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterReport, NetConfig};
+    use crate::graph::rmat::{rmat, RmatParams};
+    use crate::graph::NodeId;
+    use crate::primitives::scatter;
+    use crate::util::prop::{assert_close, run, Config};
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn run_sddmm(
+        plan: &PartitionPlan,
+        g: &Csr,
+        h: &Matrix,
+        algo: SddmmAlgo,
+        mode: ExecMode,
+        max_cols: usize,
+    ) -> (Vec<Vec<f32>>, ClusterReport) {
+        let tiles = Arc::new(scatter(plan, h));
+        let mut subs: Vec<Csr> = Vec::new();
+        for p in 0..plan.p {
+            let (lo, hi) = plan.node_range(p);
+            subs.push(g.slice_rows(lo, hi));
+        }
+        let subs = Arc::new(subs);
+        let plan2 = plan.clone();
+        let cluster = Cluster::new(plan.world(), NetConfig::default());
+        let (outs, report) = cluster
+            .run(move |ctx| {
+                let (p_idx, _m) = plan2.coords_of(ctx.rank);
+                let input = SddmmInput { plan: &plan2, g: &subs[p_idx], h: &tiles[ctx.rank] };
+                sddmm(ctx, &input, algo, mode, max_cols, 11)
+            })
+            .unwrap();
+        (outs, report)
+    }
+
+    fn check_all(plan: &PartitionPlan, g: &Csr, h: &Matrix, outs: &[Vec<f32>]) -> Result<(), String> {
+        let expect = sddmm_reference(g, h);
+        for rank in 0..plan.world() {
+            let (p_idx, _) = plan.coords_of(rank);
+            let (lo, hi) = plan.node_range(p_idx);
+            let (elo, ehi) = (g.indptr[lo] as usize, g.indptr[hi] as usize);
+            // NOTE: partition sub-CSR re-sorts rows identically (columns
+            // already sorted), so edge order matches the global CSR slice.
+            assert_close(&outs[rank], &expect[elo..ehi], 1e-4, 1e-4)
+                .map_err(|e| format!("rank {}: {}", rank, e))?;
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn both_approaches_match_reference() {
+        let el = rmat(6, 400, RmatParams::paper(), 17);
+        let g = Csr::from(&el);
+        let mut rng = Rng::new(5);
+        let h = Matrix::random(g.n_cols, 8, 1.0, &mut rng);
+        let plan = PartitionPlan::new(g.n_rows, 8, 2, 2);
+        for algo in [SddmmAlgo::Split, SddmmAlgo::Duplicate] {
+            for mode in ExecMode::ALL {
+                let (outs, _) = run_sddmm(&plan, &g, &h, algo, mode, 8);
+                check_all(&plan, &g, &h, &outs)
+                    .unwrap_or_else(|e| panic!("{:?}/{:?}: {}", algo, mode, e));
+            }
+        }
+    }
+
+    #[test]
+    fn sddmm_property_random_plans() {
+        run(Config::default().cases(5), |rng| {
+            let p = rng.range(1, 4);
+            let m = rng.range(1, 4);
+            let n = rng.range(p * m * 4, 60);
+            let d = rng.range(m.max(2) * 2, 16);
+            let ne = rng.range(1, n * 4);
+            let edges: Vec<(NodeId, NodeId)> = (0..ne)
+                .map(|_| (rng.next_below(n) as NodeId, rng.next_below(n) as NodeId))
+                .collect();
+            let g = Csr::from_edges(n, &edges);
+            let h = Matrix::random(n, d, 1.0, rng);
+            let plan = PartitionPlan::new(n, d, p, m);
+            let maxc = [0usize, 4, 16][rng.next_below(3)];
+            for algo in [SddmmAlgo::Split, SddmmAlgo::Duplicate] {
+                let mode = ExecMode::ALL[rng.next_below(3)];
+                let (outs, _) = run_sddmm(&plan, &g, &h, algo, mode, maxc);
+                check_all(&plan, &g, &h, &outs)
+                    .map_err(|e| format!("{:?}/{:?}: {}", algo, mode, e))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn split_moves_fewer_input_bytes_than_duplicate() {
+        let el = rmat(8, 3000, RmatParams::paper(), 23);
+        let g = Csr::from(&el);
+        let mut rng = Rng::new(6);
+        let h = Matrix::random(g.n_cols, 32, 1.0, &mut rng);
+        // M large relative to Z makes approach (ii) win (Table 3).
+        let plan = PartitionPlan::new(g.n_rows, 32, 2, 4);
+        let (_, split) = run_sddmm(&plan, &g, &h, SddmmAlgo::Split, ExecMode::Monolithic, 0);
+        let (_, dup) = run_sddmm(&plan, &g, &h, SddmmAlgo::Duplicate, ExecMode::Monolithic, 0);
+        assert!(
+            split.total_bytes() < dup.total_bytes(),
+            "split {} !< dup {}",
+            split.total_bytes(),
+            dup.total_bytes()
+        );
+        // and duplicates compute: dup's total compute must exceed split's
+        assert!(dup.total_compute() > split.total_compute());
+    }
+}

@@ -1,0 +1,797 @@
+//! Distributed SPMM: `H1 = G · H'` (element-weighted aggregation) under the
+//! collaborative partition (paper §3.4 Fig. 8, §3.5 Figs. 11–12; Table 2;
+//! benches `fig17_spmm`, `fig19_pipeline`).
+//!
+//! **Deal (feature exchange)**: machine `(p, m)` computes `H1[R_p, F_m]`
+//! from its local `G_p` and `H'[·, F_m]` fetched by column id from the
+//! machines `(q, m)` owning remote source rows. Fetches go through each
+//! machine's *feature server* (a concurrent thread, as in any RPC-based
+//! GNN system); the requester's schedule implements the §3.5 execution
+//! modes:
+//!
+//! - `Monolithic`: all ids out, all features in, then compute — the
+//!   peak-memory blowup of Fig. 3b.
+//! - `Grouped` (Fig. 12a): non-zeros split into column groups; ids for
+//!   group g+1 go out right before features for g are consumed — partial
+//!   overlap, bounded memory, but an ids→features serialization bubble.
+//! - `Pipelined` (Fig. 12b+c): ids run two groups ahead and the local
+//!   (no-communication) group is computed first to cover the pipe fill.
+//!
+//! **Exchange-G0 baseline**: ship the sparse tile + edge values to the
+//! feature owners and get partial results back (its second phase moves
+//! dense partials, which is why Table 2 ranks it worse).
+//!
+//! **2-D-style baseline**: each row-group member aggregates only its
+//! column chunk of sources, then the row group all-exchanges full-size
+//! partials (the `ND(M-1)/PM` aggregation term of Table 2).
+
+use crate::cluster::{Ctx, Payload, ServerCtx, Tag};
+use crate::graph::{Csr, NodeId};
+use crate::partition::PartitionPlan;
+use crate::runtime::Backend;
+use crate::tensor::Matrix;
+use crate::util::even_ranges;
+
+use super::groups::{build_groups, EdgeGroup};
+use super::ExecMode;
+
+/// Request seq used for the count message.
+const COUNT_SEQ: u32 = u32::MAX;
+/// Response tags set the top bit of the seq.
+const RESP_BIT: u32 = 0x8000_0000;
+
+/// Per-edge values for the three-tensor SPMM (paper §3.4: `H1[][i] =
+/// multiply_G(E[i][], H'[][i])` — edge features multiply feature columns).
+pub enum EdgeValues<'a> {
+    /// One weight per edge (GCN mean aggregation).
+    Scalar(&'a [f32]),
+    /// Per-edge per-head weights (GAT attention): `vals[eid * heads + h]`,
+    /// with `col_head[j]` mapping this machine's local feature column `j`
+    /// to its head.
+    PerHead {
+        vals: &'a [f32],
+        heads: usize,
+        col_head: &'a [u8],
+    },
+}
+
+impl<'a> EdgeValues<'a> {
+    /// Scalar weights used for group construction (ones for per-head).
+    fn group_vals(&self, n_edges: usize) -> std::borrow::Cow<'a, [f32]> {
+        match self {
+            EdgeValues::Scalar(v) => std::borrow::Cow::Borrowed(v),
+            EdgeValues::PerHead { .. } => std::borrow::Cow::Owned(vec![1.0; n_edges]),
+        }
+    }
+}
+
+/// Inputs for one machine's SPMM call.
+pub struct SpmmInput<'a> {
+    /// Plan whose `feature_dim` equals `H'`'s width.
+    pub plan: &'a PartitionPlan,
+    /// Local partition of the (sampled) graph: `rows_of(p)` rows, global
+    /// columns.
+    pub g: &'a Csr,
+    /// Per-edge aggregation values aligned with `g`.
+    pub vals: EdgeValues<'a>,
+    /// Local feature tile `rows_of(p) × feat_width(m)`.
+    pub h: &'a Matrix,
+}
+
+impl<'a> SpmmInput<'a> {
+    fn scalar_vals(&self) -> &'a [f32] {
+        match self.vals {
+            EdgeValues::Scalar(v) => v,
+            _ => panic!("this SPMM path supports scalar edge values only"),
+        }
+    }
+}
+
+/// Run the feature-server side: answer `expected_peers` peers' gather
+/// requests against `h` (rows are this machine's partition, `row_lo`
+/// global offset). Each peer first sends a COUNT message (its number of
+/// requests), then that many id lists; the server replies with the
+/// gathered rows.
+pub fn feature_server(sctx: &mut ServerCtx, h: &Matrix, row_lo: usize, expected_peers: usize, phase: u32) {
+    let mut counts_pending = expected_peers;
+    let mut to_serve: u64 = 0;
+    let mut served: u64 = 0;
+    while counts_pending > 0 || served < to_serve {
+        let msg = sctx.recv_any(phase);
+        let seq = (msg.tag & 0xFFFF_FFFF) as u32;
+        if seq == COUNT_SEQ {
+            let c = msg.payload.into_u32();
+            to_serve += c[0] as u64;
+            counts_pending -= 1;
+            continue;
+        }
+        let ids = msg.payload.into_u32();
+        let gathered = sctx.compute(|| {
+            let idx: Vec<usize> = ids.iter().map(|&c| c as usize - row_lo).collect();
+            h.gather_rows(&idx)
+        });
+        sctx.send(msg.src, Tag::of(phase, seq | RESP_BIT), Payload::Matrix(gathered));
+        served += 1;
+    }
+}
+
+/// Deal's distributed SPMM (per machine). Returns `H1[R_p, F_m]`.
+pub fn deal_spmm(
+    ctx: &mut Ctx,
+    input: &SpmmInput,
+    backend: &dyn Backend,
+    mode: ExecMode,
+    max_cols_per_group: usize,
+    phase: u32,
+) -> Matrix {
+    let plan = input.plan;
+    let (p_idx, m_idx) = plan.coords_of(ctx.rank);
+    let width = plan.feat_width(m_idx);
+    let rows = plan.rows_of(p_idx);
+    assert_eq!(input.h.rows, rows);
+    assert_eq!(input.h.cols, width);
+
+    // Single graph partition: everything is local — aggregate straight
+    // off the CSR, no grouping, no communication (§Perf fast path).
+    if plan.p == 1 {
+        let row_lo = plan.node_range(p_idx).0;
+        let mut out = Matrix::zeros(rows, width);
+        ctx.mem.alloc(out.nbytes());
+        ctx.compute(|| match &input.vals {
+            EdgeValues::Scalar(vals) => {
+                for r in 0..input.g.n_rows {
+                    let (lo, hi) = (input.g.indptr[r] as usize, input.g.indptr[r + 1] as usize);
+                    let orow = out.row_mut(r);
+                    for e in lo..hi {
+                        let src = input.h.row(input.g.indices[e] as usize - row_lo);
+                        let v = vals[e];
+                        for (o, &x) in orow.iter_mut().zip(src) {
+                            *o += v * x;
+                        }
+                    }
+                }
+            }
+            EdgeValues::PerHead { vals, heads, col_head } => {
+                for r in 0..input.g.n_rows {
+                    let (lo, hi) = (input.g.indptr[r] as usize, input.g.indptr[r + 1] as usize);
+                    let orow = out.row_mut(r);
+                    for e in lo..hi {
+                        let src = input.h.row(input.g.indices[e] as usize - row_lo);
+                        let ev = &vals[e * heads..(e + 1) * heads];
+                        for j in 0..orow.len() {
+                            orow[j] += ev[col_head[j] as usize] * src[j];
+                        }
+                    }
+                }
+            }
+        });
+        return out;
+    }
+
+    // Group construction (Monolithic uses one group per source partition;
+    // Naive skips the sort/dedup entirely — per-edge fetch).
+    let gvals = input.vals.group_vals(input.g.n_edges());
+    let groups = ctx.compute(|| match mode {
+        ExecMode::Naive => super::groups::build_naive_groups(input.g, &gvals, plan, p_idx),
+        ExecMode::Monolithic => build_groups(input.g, &gvals, plan, p_idx, 0),
+        _ => build_groups(input.g, &gvals, plan, p_idx, max_cols_per_group),
+    });
+
+    // Count messages so every peer's server knows how many requests to
+    // expect from us (0 is a valid count).
+    let mut per_peer: Vec<u32> = vec![0; plan.p];
+    for g in &groups {
+        if !g.local {
+            per_peer[g.src_part] += 1;
+        }
+    }
+    for q in 0..plan.p {
+        if q != p_idx {
+            ctx.send_service(
+                plan.rank_of(q, m_idx),
+                Tag::of(phase, COUNT_SEQ),
+                Payload::U32(vec![per_peer[q]]),
+            );
+        }
+    }
+
+    let h = input.h;
+    let row_lo = plan.node_range(p_idx).0;
+    let expected_peers = plan.p - 1;
+    ctx.with_server(
+        |sctx| feature_server(sctx, h, row_lo, expected_peers, phase),
+        |ctx| {
+            let mut out = Matrix::zeros(rows, width);
+            ctx.mem.alloc(out.nbytes());
+            let acc = Accum { values: &input.vals, backend };
+            match mode {
+                ExecMode::Naive | ExecMode::Monolithic => {
+                    run_monolithic(ctx, plan, m_idx, &groups, h, row_lo, &mut out, &acc, phase)
+                }
+                ExecMode::Grouped => {
+                    run_grouped(ctx, plan, m_idx, &groups, h, row_lo, &mut out, &acc, phase, 1, false)
+                }
+                ExecMode::Pipelined => {
+                    run_grouped(ctx, plan, m_idx, &groups, h, row_lo, &mut out, &acc, phase, 2, true)
+                }
+            }
+            out
+        },
+    )
+}
+
+/// Monolithic: all requests, all responses, then all compute.
+#[allow(clippy::too_many_arguments)]
+fn run_monolithic(
+    ctx: &mut Ctx,
+    plan: &PartitionPlan,
+    m_idx: usize,
+    groups: &[EdgeGroup],
+    h: &Matrix,
+    row_lo: usize,
+    out: &mut Matrix,
+    acc: &Accum,
+    phase: u32,
+) {
+    for (seq, g) in groups.iter().enumerate() {
+        if !g.local {
+            let server = plan.rank_of(g.src_part, m_idx);
+            ctx.send_service(server, Tag::of(phase, seq as u32), Payload::U32(g.cols.clone()));
+        }
+    }
+    let mut feats: Vec<Option<Matrix>> = vec![None; groups.len()];
+    let mut held_bytes = 0u64;
+    for (seq, g) in groups.iter().enumerate() {
+        if !g.local {
+            let server = plan.rank_of(g.src_part, m_idx);
+            let m = ctx.recv(server, Tag::of(phase, seq as u32 | RESP_BIT)).into_matrix();
+            held_bytes += m.nbytes();
+            ctx.mem.alloc(m.nbytes());
+            feats[seq] = Some(m);
+        }
+    }
+    for (seq, g) in groups.iter().enumerate() {
+        let feats_ref = feats[seq].as_ref();
+        ctx.compute(|| acc.accumulate_group(g, feats_ref, h, row_lo, out));
+    }
+    ctx.mem.free(held_bytes);
+}
+
+/// Grouped / pipelined: `lookahead` groups of ids in flight; optionally
+/// compute the local group first (Fig. 12c).
+#[allow(clippy::too_many_arguments)]
+fn run_grouped(
+    ctx: &mut Ctx,
+    plan: &PartitionPlan,
+    m_idx: usize,
+    groups: &[EdgeGroup],
+    h: &Matrix,
+    row_lo: usize,
+    out: &mut Matrix,
+    acc: &Accum,
+    phase: u32,
+    lookahead: usize,
+    local_first: bool,
+) {
+    // Split group indices into local and remote, preserving order.
+    let local_idx: Vec<usize> = (0..groups.len()).filter(|&i| groups[i].local).collect();
+    let remote_idx: Vec<usize> = (0..groups.len()).filter(|&i| !groups[i].local).collect();
+
+    let send_ids = |ctx: &mut Ctx, gi: usize| {
+        let g = &groups[gi];
+        let server = plan.rank_of(g.src_part, m_idx);
+        ctx.send_service(server, Tag::of(phase, gi as u32), Payload::U32(g.cols.clone()));
+    };
+
+    // Prime the pipeline.
+    for &gi in remote_idx.iter().take(lookahead) {
+        send_ids(ctx, gi);
+    }
+    if local_first {
+        // Fig. 12(c): the no-communication group covers the fill time.
+        for &gi in &local_idx {
+            ctx.compute(|| acc.accumulate_group(&groups[gi], None, h, row_lo, out));
+        }
+    }
+    for (pos, &gi) in remote_idx.iter().enumerate() {
+        if pos + lookahead < remote_idx.len() {
+            send_ids(ctx, remote_idx[pos + lookahead]);
+        }
+        let g = &groups[gi];
+        let server = plan.rank_of(g.src_part, m_idx);
+        let feats = ctx.recv(server, Tag::of(phase, gi as u32 | RESP_BIT)).into_matrix();
+        let fb = feats.nbytes();
+        ctx.mem.alloc(fb);
+        ctx.compute(|| acc.accumulate_group(g, Some(&feats), h, row_lo, out));
+        ctx.mem.free(fb);
+    }
+    if !local_first {
+        // Fig. 12(a): local group last (as drawn: group 6 at the end).
+        for &gi in &local_idx {
+            ctx.compute(|| acc.accumulate_group(&groups[gi], None, h, row_lo, out));
+        }
+    }
+}
+
+/// Group accumulation: `out[row] += E[edge] * feat_row`. Local groups read
+/// from the local tile (`h`), remote groups from the fetched buffer (rows
+/// aligned with `group.cols`). Scalar edge values on an accelerated
+/// backend are routed through its `spmm_tile` (gather + weighted
+/// segment-sum — the AOT-compiled Pallas kernel); the per-head (GAT
+/// three-tensor) form and the native backend use the in-place loop.
+struct Accum<'a> {
+    values: &'a EdgeValues<'a>,
+    backend: &'a dyn Backend,
+}
+
+impl<'a> Accum<'a> {
+    fn accumulate_group(
+        &self,
+        group: &EdgeGroup,
+        fetched: Option<&Matrix>,
+        h: &Matrix,
+        row_lo: usize,
+        out: &mut Matrix,
+    ) {
+        match self.values {
+            EdgeValues::Scalar(_) if self.backend.name() != "native" => {
+                // Gather per-edge source rows, then one tile call.
+                let mut feats = Matrix::zeros(group.n_edges(), out.cols);
+                let mut seg: Vec<u32> = Vec::with_capacity(group.n_edges());
+                for (e, &(r, ci)) in group.edges.iter().enumerate() {
+                    let src_row = match fetched {
+                        None => h.row(group.cols[ci as usize] as usize - row_lo),
+                        Some(f) => f.row(ci as usize),
+                    };
+                    feats.row_mut(e).copy_from_slice(src_row);
+                    seg.push(r);
+                }
+                let partial = self
+                    .backend
+                    .spmm_tile(&feats, &group.vals, &seg, out.rows)
+                    .expect("backend spmm_tile failed");
+                for (o, &v) in out.data.iter_mut().zip(&partial.data) {
+                    *o += v;
+                }
+            }
+            EdgeValues::Scalar(_) => {
+                for (e, &(r, ci)) in group.edges.iter().enumerate() {
+                    let v = group.vals[e];
+                    let src_row = match fetched {
+                        None => h.row(group.cols[ci as usize] as usize - row_lo),
+                        Some(f) => f.row(ci as usize),
+                    };
+                    let out_row = out.row_mut(r as usize);
+                    for (o, &x) in out_row.iter_mut().zip(src_row) {
+                        *o += v * x;
+                    }
+                }
+            }
+            EdgeValues::PerHead { vals, heads, col_head } => {
+                for (e, &(r, ci)) in group.edges.iter().enumerate() {
+                    let eid = group.eids[e] as usize;
+                    let ev = &vals[eid * heads..(eid + 1) * heads];
+                    let src_row = match fetched {
+                        None => h.row(group.cols[ci as usize] as usize - row_lo),
+                        Some(f) => f.row(ci as usize),
+                    };
+                    let out_row = out.row_mut(r as usize);
+                    for j in 0..out_row.len() {
+                        out_row[j] += ev[col_head[j] as usize] * src_row[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Exchange-G0 baseline (per machine): send the sparse sub-tile + values
+/// to each feature owner, which computes a dense partial *on its main
+/// compute path* (the duplicated aggregation work is exactly what Table 2
+/// charges this approach for) and returns it.
+///
+/// Protocol (deadlock-free, no server thread): every machine first sends
+/// its tiles to all peers (non-blocking), then receives peers' tiles and
+/// computes their partials, then receives its own partials back.
+pub fn exchange_g0_spmm(ctx: &mut Ctx, input: &SpmmInput, phase: u32) -> Matrix {
+    let plan = input.plan;
+    let (p_idx, m_idx) = plan.coords_of(ctx.rank);
+    let width = plan.feat_width(m_idx);
+    let rows = plan.rows_of(p_idx);
+    let row_lo = plan.node_range(p_idx).0;
+    let rows_by_rank: Vec<usize> =
+        (0..plan.world()).map(|r| plan.rows_of(plan.coords_of(r).0)).collect();
+
+    // Partition the edges by source partition (triplets, global cols).
+    let vals = input.scalar_vals();
+    let by_part = ctx.compute(|| {
+        let mut by_part: Vec<(Vec<u32>, Vec<f32>)> = vec![(Vec::new(), Vec::new()); plan.p];
+        for r in 0..input.g.n_rows {
+            let (lo, hi) = (input.g.indptr[r] as usize, input.g.indptr[r + 1] as usize);
+            for e in lo..hi {
+                let c = input.g.indices[e];
+                let q = plan.node_owner(c);
+                by_part[q].0.extend_from_slice(&[r as u32, c]);
+                by_part[q].1.push(vals[e]);
+            }
+        }
+        by_part
+    });
+
+    // Phase A: ship tiles to their feature owners (empty tiles included so
+    // receive counts stay symmetric).
+    for q in 0..plan.p {
+        if q == p_idx {
+            continue;
+        }
+        let server = plan.rank_of(q, m_idx);
+        ctx.send(server, Tag::of(phase, 0), Payload::U32(by_part[q].0.clone()));
+        ctx.send(server, Tag::of(phase, 1), Payload::F32(by_part[q].1.clone()));
+    }
+
+    // Phase B: local partial while the tiles fly.
+    let h = input.h;
+    let mut out = Matrix::zeros(rows, width);
+    ctx.mem.alloc(out.nbytes());
+    ctx.compute(|| {
+        let (ids, vals) = &by_part[p_idx];
+        for (e, pair) in ids.chunks_exact(2).enumerate() {
+            let (r, c) = (pair[0] as usize, pair[1] as usize - row_lo);
+            let v = vals[e];
+            let src = h.row(c);
+            let o = out.row_mut(r);
+            for (a, &x) in o.iter_mut().zip(src) {
+                *a += v * x;
+            }
+        }
+    });
+
+    // Phase C: compute peers' partials on the MAIN compute path.
+    for q in 0..plan.p {
+        if q == p_idx {
+            continue;
+        }
+        let peer = plan.rank_of(q, m_idx);
+        let ids = ctx.recv(peer, Tag::of(phase, 0)).into_u32();
+        let pvals = ctx.recv(peer, Tag::of(phase, 1)).into_f32();
+        let partial = ctx.compute(|| {
+            let mut partial = Matrix::zeros(rows_by_rank[peer], width);
+            for (e, pair) in ids.chunks_exact(2).enumerate() {
+                let (r, c) = (pair[0] as usize, pair[1] as usize - row_lo);
+                let v = pvals[e];
+                let src = h.row(c);
+                let o = partial.row_mut(r);
+                for (a, &x) in o.iter_mut().zip(src) {
+                    *a += v * x;
+                }
+            }
+            partial
+        });
+        ctx.send(peer, Tag::of(phase, 2), Payload::Matrix(partial));
+    }
+
+    // Phase D: accumulate returned partials.
+    for q in 0..plan.p {
+        if q == p_idx || by_part[q].1.is_empty() {
+            continue;
+        }
+        let peer = plan.rank_of(q, m_idx);
+        let partial = ctx.recv(peer, Tag::of(phase, 2)).into_matrix();
+        let pb = partial.nbytes();
+        ctx.mem.alloc(pb);
+        for (o, &v) in out.data.iter_mut().zip(&partial.data) {
+            *o += v;
+        }
+        ctx.mem.free(pb);
+    }
+    out
+}
+
+/// 2-D-style baseline (per machine): row-group member `m` aggregates its
+/// column *chunk* of sources across the **full feature width** (fetching
+/// every feature part of each chunk source), producing a full-width
+/// partial `R_p x D`; the row group then reduce-scatters - each member
+/// ships `(M-1)` slices of `R_p x D/M`, the `ND(M-1)/PM` aggregation term
+/// Table 2 charges 2-D SPMM.
+pub fn spmm_2d(ctx: &mut Ctx, input: &SpmmInput, phase: u32) -> Matrix {
+    let plan = input.plan;
+    let (p_idx, m_idx) = plan.coords_of(ctx.rank);
+    let width = plan.feat_width(m_idx);
+    let rows = plan.rows_of(p_idx);
+    let row_lo = plan.node_range(p_idx).0;
+    let d = plan.feature_dim;
+    let chunk_bounds = even_ranges(plan.n_nodes, plan.m);
+    let (clo, chi) = (chunk_bounds[m_idx] as NodeId, chunk_bounds[m_idx + 1] as NodeId);
+
+    // Edges whose source is in my column chunk, bucketed by owner part.
+    let vals = input.scalar_vals();
+    let mine = ctx.compute(|| {
+        let mut mine: Vec<Vec<(u32, NodeId, f32)>> = vec![Vec::new(); plan.p];
+        for r in 0..input.g.n_rows {
+            let (lo, hi) = (input.g.indptr[r] as usize, input.g.indptr[r + 1] as usize);
+            for e in lo..hi {
+                let c = input.g.indices[e];
+                if c >= clo && c < chi {
+                    mine[plan.node_owner(c)].push((r as u32, c, vals[e]));
+                }
+            }
+        }
+        mine
+    });
+    // Distinct chunk sources per owner partition.
+    let cols_by_part: Vec<Vec<NodeId>> = (0..plan.p)
+        .map(|q| {
+            let mut cols: Vec<NodeId> = mine[q].iter().map(|&(_, c, _)| c).collect();
+            cols.sort_unstable();
+            cols.dedup();
+            cols
+        })
+        .collect();
+
+    // Counts: I request slice j of partition q's sources from (q, j) -
+    // every feature part, including my own partition's other parts.
+    for rank in 0..plan.world() {
+        if rank == ctx.rank {
+            continue;
+        }
+        let (q, _j) = plan.coords_of(rank);
+        let n = u32::from(!cols_by_part[q].is_empty());
+        ctx.send_service(rank, Tag::of(phase, COUNT_SEQ), Payload::U32(vec![n]));
+    }
+
+    let h = input.h;
+    let expected_peers = plan.world() - 1;
+    ctx.with_server(
+        |sctx| feature_server(sctx, h, row_lo, expected_peers, phase),
+        |ctx| {
+            // Full-width partial - the 2-D baseline's memory cost.
+            let mut partial = Matrix::zeros(rows, d);
+            ctx.mem.alloc(partial.nbytes());
+            let mut seq = 0u32;
+            for q in 0..plan.p {
+                if cols_by_part[q].is_empty() {
+                    continue;
+                }
+                let cols = &cols_by_part[q];
+                // Assemble full-width features for this partition's sources.
+                let mut src_full = Matrix::zeros(cols.len(), d);
+                let sb = src_full.nbytes();
+                ctx.mem.alloc(sb);
+                let mut reqs: Vec<(usize, u32, usize)> = Vec::new();
+                for j in 0..plan.m {
+                    let rank = plan.rank_of(q, j);
+                    if rank == ctx.rank {
+                        let (flo, fhi) = plan.feat_range(j);
+                        for (i, &c) in cols.iter().enumerate() {
+                            src_full.row_mut(i)[flo..fhi]
+                                .copy_from_slice(h.row(c as usize - row_lo));
+                        }
+                    } else {
+                        ctx.send_service(rank, Tag::of(phase, seq), Payload::U32(cols.clone()));
+                        reqs.push((rank, seq, j));
+                        seq += 1;
+                    }
+                }
+                for &(rank, s, j) in &reqs {
+                    let block = ctx.recv(rank, Tag::of(phase, s | RESP_BIT)).into_matrix();
+                    let (flo, fhi) = plan.feat_range(j);
+                    for r in 0..block.rows {
+                        src_full.row_mut(r)[flo..fhi].copy_from_slice(block.row(r));
+                    }
+                }
+                ctx.compute(|| {
+                    for &(r, c, v) in &mine[q] {
+                        let fi = cols.binary_search(&c).unwrap();
+                        let src = src_full.row(fi);
+                        let o = partial.row_mut(r as usize);
+                        for (a, &x) in o.iter_mut().zip(src) {
+                            *a += v * x;
+                        }
+                    }
+                });
+                ctx.mem.free(sb);
+            }
+            // Reduce-scatter within the row group: ship slice F_j of my
+            // partial to member j; sum received slices into F_m.
+            let group = plan.row_group(p_idx);
+            let phase2 = phase ^ 0x4000_0000;
+            for (j, &rank) in group.iter().enumerate() {
+                if j != m_idx {
+                    let (flo, fhi) = plan.feat_range(j);
+                    let slice = partial.slice_cols(flo, fhi);
+                    ctx.send(rank, Tag::of(phase2, m_idx as u32), Payload::Matrix(slice));
+                }
+            }
+            let (flo, fhi) = plan.feat_range(m_idx);
+            let mut out = partial.slice_cols(flo, fhi);
+            ctx.mem.alloc(out.nbytes());
+            for (j, &rank) in group.iter().enumerate() {
+                if j != m_idx {
+                    let p = ctx.recv(rank, Tag::of(phase2, j as u32)).into_matrix();
+                    let pb = p.nbytes();
+                    ctx.mem.alloc(pb);
+                    for (o, &v) in out.data.iter_mut().zip(&p.data) {
+                        *o += v;
+                    }
+                    ctx.mem.free(pb);
+                }
+            }
+            ctx.mem.free(partial.nbytes());
+            debug_assert_eq!(out.cols, width);
+            out
+        },
+    )
+}
+
+/// Dense single-machine oracle: `out = G · H` with per-edge weights.
+pub fn spmm_reference(g: &Csr, vals: &[f32], h: &Matrix) -> Matrix {
+    assert_eq!(vals.len(), g.n_edges());
+    assert_eq!(h.rows, g.n_cols);
+    let mut out = Matrix::zeros(g.n_rows, h.cols);
+    for r in 0..g.n_rows {
+        let (lo, hi) = (g.indptr[r] as usize, g.indptr[r + 1] as usize);
+        for e in lo..hi {
+            let src = h.row(g.indices[e] as usize);
+            let v = vals[e];
+            let o = out.row_mut(r);
+            for (a, &x) in o.iter_mut().zip(src) {
+                *a += v * x;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterReport, NetConfig};
+    use crate::graph::rmat::{rmat, RmatParams};
+    use crate::primitives::{gather_tiles, mean_weights, scatter};
+    use crate::util::prop::{assert_close, run, Config};
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    #[derive(Clone, Copy)]
+    enum Algo {
+        Deal(ExecMode, usize),
+        ExchangeG0,
+        TwoD,
+    }
+
+    fn run_spmm(
+        plan: &PartitionPlan,
+        g: &Csr,
+        vals: &[f32],
+        h: &Matrix,
+        algo: Algo,
+    ) -> (Matrix, ClusterReport) {
+        let tiles = Arc::new(scatter(plan, h));
+        // per-partition sub-CSRs + aligned vals
+        let mut subs: Vec<(Csr, Vec<f32>)> = Vec::new();
+        for p in 0..plan.p {
+            let (lo, hi) = plan.node_range(p);
+            let sub = g.slice_rows(lo, hi);
+            let vlo = g.indptr[lo] as usize;
+            let vhi = g.indptr[hi] as usize;
+            subs.push((sub, vals[vlo..vhi].to_vec()));
+        }
+        let subs = Arc::new(subs);
+        let plan2 = plan.clone();
+        let cluster = Cluster::new(plan.world(), NetConfig::default());
+        let (outs, report) = cluster
+            .run(move |ctx| {
+                let (p_idx, _m) = plan2.coords_of(ctx.rank);
+                let (sub, svals) = &subs[p_idx];
+                let input = SpmmInput {
+                    plan: &plan2,
+                    g: sub,
+                    vals: EdgeValues::Scalar(svals),
+                    h: &tiles[ctx.rank],
+                };
+                let backend = crate::runtime::Native;
+                match algo {
+                    Algo::Deal(mode, maxc) => deal_spmm(ctx, &input, &backend, mode, maxc, 7),
+                    Algo::ExchangeG0 => exchange_g0_spmm(ctx, &input, 7),
+                    Algo::TwoD => spmm_2d(ctx, &input, 7),
+                }
+            })
+            .unwrap();
+        (gather_tiles(plan, h.cols, &outs), report)
+    }
+
+    fn setup(n: usize, d: usize, deg: usize, seed: u64) -> (Csr, Vec<f32>, Matrix) {
+        let scale = (n as f64).log2().ceil() as u32;
+        let el = rmat(scale, n * deg, RmatParams::paper(), seed);
+        let g = Csr::from(&el);
+        let vals = mean_weights(&g);
+        let mut rng = Rng::new(seed ^ 1);
+        let h = Matrix::random(g.n_cols, d, 1.0, &mut rng);
+        (g, vals, h)
+    }
+
+    #[test]
+    fn all_algorithms_match_reference() {
+        let (g, vals, h) = setup(64, 8, 6, 3);
+        let expect = spmm_reference(&g, &vals, &h);
+        let plan = PartitionPlan::new(g.n_rows, h.cols, 2, 2);
+        let algos = [
+            ("mono", Algo::Deal(ExecMode::Monolithic, 0)),
+            ("grouped", Algo::Deal(ExecMode::Grouped, 8)),
+            ("pipelined", Algo::Deal(ExecMode::Pipelined, 8)),
+            ("xg0", Algo::ExchangeG0),
+            ("2d", Algo::TwoD),
+        ];
+        for (name, algo) in algos {
+            let (got, _) = run_spmm(&plan, &g, &vals, &h, algo);
+            assert_close(&got.data, &expect.data, 1e-4, 1e-4)
+                .unwrap_or_else(|e| panic!("{}: {}", name, e));
+        }
+    }
+
+    #[test]
+    fn spmm_property_random_plans() {
+        run(Config::default().cases(6), |rng| {
+            let p = rng.range(1, 4);
+            let m = rng.range(1, 4);
+            let n = rng.range(p * m * 4, 80);
+            let d = rng.range(m * 2, 20);
+            let ne = rng.range(1, n * 6);
+            let edges: Vec<(NodeId, NodeId)> = (0..ne)
+                .map(|_| (rng.next_below(n) as NodeId, rng.next_below(n) as NodeId))
+                .collect();
+            let g = Csr::from_edges(n, &edges);
+            let vals: Vec<f32> = (0..g.n_edges()).map(|_| rng.next_f32() + 0.1).collect();
+            let h = Matrix::random(n, d, 1.0, rng);
+            let expect = spmm_reference(&g, &vals, &h);
+            let plan = PartitionPlan::new(n, d, p, m);
+            let maxc = [0usize, 4, 32][rng.next_below(3)];
+            for algo in [
+                Algo::Deal(ExecMode::Monolithic, 0),
+                Algo::Deal(ExecMode::Grouped, maxc),
+                Algo::Deal(ExecMode::Pipelined, maxc),
+                Algo::ExchangeG0,
+                Algo::TwoD,
+            ] {
+                let (got, _) = run_spmm(&plan, &g, &vals, &h, algo);
+                assert_close(&got.data, &expect.data, 1e-3, 1e-3)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grouped_bounds_peak_memory_vs_monolithic() {
+        let (g, vals, h) = setup(256, 32, 16, 9);
+        let plan = PartitionPlan::new(g.n_rows, h.cols, 2, 2);
+        let (_, mono) = run_spmm(&plan, &g, &vals, &h, Algo::Deal(ExecMode::Monolithic, 0));
+        let (_, grouped) = run_spmm(&plan, &g, &vals, &h, Algo::Deal(ExecMode::Grouped, 16));
+        assert!(
+            grouped.max_peak_mem() < mono.max_peak_mem(),
+            "grouped {} !< mono {}",
+            grouped.max_peak_mem(),
+            mono.max_peak_mem()
+        );
+    }
+
+    #[test]
+    fn deal_moves_fewer_bytes_than_exchange_g0() {
+        let (g, vals, h) = setup(256, 32, 16, 10);
+        let plan = PartitionPlan::new(g.n_rows, h.cols, 2, 2);
+        let (_, deal) = run_spmm(&plan, &g, &vals, &h, Algo::Deal(ExecMode::Pipelined, 64));
+        let (_, xg0) = run_spmm(&plan, &g, &vals, &h, Algo::ExchangeG0);
+        let (_, twod) = run_spmm(&plan, &g, &vals, &h, Algo::TwoD);
+        assert!(
+            deal.total_bytes() < xg0.total_bytes(),
+            "deal {} !< xg0 {}",
+            deal.total_bytes(),
+            xg0.total_bytes()
+        );
+        assert!(
+            deal.total_bytes() < twod.total_bytes(),
+            "deal {} !< 2d {}",
+            deal.total_bytes(),
+            twod.total_bytes()
+        );
+    }
+}

@@ -1,0 +1,155 @@
+//! Runtime: the AOT-compiled XLA compute path and its native reference.
+//!
+//! `python/compile/aot.py` lowers the Layer-2 JAX functions (which call the
+//! Layer-1 Pallas kernels) to **HLO text** under `artifacts/`, with a plain
+//! `manifest.txt` index. At startup the coordinator builds an
+//! [`XlaService`]: a dedicated thread owning the PJRT CPU client (the `xla`
+//! crate's client is `Rc`-based and not `Send`, and a real deployment pins
+//! the accelerator runtime to a device thread anyway) plus a compilation
+//! cache. Simulated machines talk to it through the cloneable
+//! [`XlaHandle`] — so Python never runs at inference time, and the dense
+//! tile math on the request path executes inside XLA.
+//!
+//! [`Backend`] abstracts the tile ops the model layer needs; `Native` is
+//! the pure-rust oracle used by tests and as the perf comparison baseline.
+
+pub mod service;
+mod weights;
+
+pub use service::{XlaHandle, XlaService};
+pub use weights::{load_weights, save_weights};
+
+use crate::tensor::{self, Matrix};
+use crate::Result;
+
+/// Activation applied by fused projection kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+}
+
+/// The dense/segment tile operations the model layer dispatches.
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// `h @ w`.
+    fn gemm(&self, h: &Matrix, w: &Matrix) -> Result<Matrix>;
+
+    /// `act(h @ w + b)` — the GNN projection (paper §2.1's GEMM step).
+    fn gemm_bias_act(&self, h: &Matrix, w: &Matrix, b: &[f32], act: Act) -> Result<Matrix>;
+
+    /// Weighted segment-sum of pre-gathered rows: `out[seg[i]] += w[i] *
+    /// feats[i]` with `num_segments` output rows (the SPMM aggregation
+    /// tile; `seg` must be in-range).
+    fn spmm_tile(&self, feats: &Matrix, w: &[f32], seg: &[u32], num_segments: usize)
+        -> Result<Matrix>;
+
+    /// Row-wise dot of two pre-gathered row blocks (the SDDMM tile).
+    fn sddmm_tile(&self, dst: &Matrix, src: &Matrix) -> Result<Vec<f32>>;
+}
+
+/// Pure-rust reference backend.
+#[derive(Debug, Default, Clone)]
+pub struct Native;
+
+impl Backend for Native {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn gemm(&self, h: &Matrix, w: &Matrix) -> Result<Matrix> {
+        Ok(tensor::matmul(h, w))
+    }
+
+    fn gemm_bias_act(&self, h: &Matrix, w: &Matrix, b: &[f32], act: Act) -> Result<Matrix> {
+        anyhow::ensure!(b.len() == w.cols, "bias width {} != {}", b.len(), w.cols);
+        let mut out = tensor::matmul(h, w);
+        for r in 0..out.rows {
+            let row = out.row_mut(r);
+            for (x, &bb) in row.iter_mut().zip(b) {
+                let v = *x + bb;
+                *x = match act {
+                    Act::None => v,
+                    Act::Relu => v.max(0.0),
+                };
+            }
+        }
+        Ok(out)
+    }
+
+    fn spmm_tile(&self, feats: &Matrix, w: &[f32], seg: &[u32], num_segments: usize) -> Result<Matrix> {
+        anyhow::ensure!(feats.rows == w.len() && w.len() == seg.len(), "spmm tile arity");
+        let seg_usize: Vec<usize> = seg.iter().map(|&s| s as usize).collect();
+        Ok(tensor::segment_sum_scaled(feats, w, &seg_usize, num_segments))
+    }
+
+    fn sddmm_tile(&self, dst: &Matrix, src: &Matrix) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            dst.rows == src.rows && dst.cols == src.cols,
+            "sddmm tile shape mismatch"
+        );
+        let mut out = vec![0.0f32; dst.rows];
+        for r in 0..dst.rows {
+            let (a, b) = (dst.row(r), src.row(r));
+            out[r] = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        }
+        Ok(out)
+    }
+}
+
+/// Select a backend by name: `native`, or `xla` (requires built artifacts).
+pub fn backend_from_config(name: &str, artifacts_dir: &std::path::Path) -> Result<std::sync::Arc<dyn Backend>> {
+    match name {
+        "native" => Ok(std::sync::Arc::new(Native)),
+        "xla" => {
+            let svc = XlaService::start(artifacts_dir)?;
+            Ok(std::sync::Arc::new(svc))
+        }
+        other => anyhow::bail!("unknown backend '{}' (native|xla)", other),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_gemm_bias_act() {
+        let h = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let w = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let out = Native.gemm_bias_act(&h, &w, &[-5.0, 1.0], Act::Relu).unwrap();
+        assert_eq!(out.data, vec![0.0, 3.0]);
+        let out2 = Native.gemm_bias_act(&h, &w, &[-5.0, 1.0], Act::None).unwrap();
+        assert_eq!(out2.data, vec![-4.0, 3.0]);
+    }
+
+    #[test]
+    fn native_spmm_tile() {
+        let feats = Matrix::from_vec(3, 2, vec![1.0, 1.0, 2.0, 2.0, 4.0, 4.0]);
+        let out = Native
+            .spmm_tile(&feats, &[1.0, 0.5, 2.0], &[1, 1, 0], 2)
+            .unwrap();
+        assert_eq!(out.data, vec![8.0, 8.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn native_sddmm_tile() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::random(5, 4, 1.0, &mut rng);
+        let b = Matrix::random(5, 4, 1.0, &mut rng);
+        let out = Native.sddmm_tile(&a, &b).unwrap();
+        for r in 0..5 {
+            let expect: f32 = a.row(r).iter().zip(b.row(r)).map(|(x, y)| x * y).sum();
+            assert!((out[r] - expect).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn backend_from_config_native() {
+        let b = backend_from_config("native", std::path::Path::new("/nonexistent")).unwrap();
+        assert_eq!(b.name(), "native");
+        assert!(backend_from_config("bogus", std::path::Path::new("/nonexistent")).is_err());
+    }
+}

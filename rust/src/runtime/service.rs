@@ -1,0 +1,470 @@
+//! The XLA compute service: one thread owns the PJRT CPU client and all
+//! compiled executables; machines submit tile jobs through a channel.
+//!
+//! Artifacts are HLO *text* (see `/opt/xla-example/README.md`: serialized
+//! jax≥0.5 protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids). Each artifact is compiled once
+//! on first use and cached.
+//!
+//! Shape policy: artifacts are fixed-shape (AOT), so callers are padded to
+//! the artifact grid — rows up to the row tile for GEMM (extra rows are
+//! sliced off), edges up to the edge tile for SPMM/SDDMM (padding edges
+//! carry weight 0 and segment id = `num_segments`, a sink row the kernel
+//! allocates and the service slices off; see DESIGN.md
+//! §Hardware-Adaptation).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Mutex;
+
+use crate::tensor::Matrix;
+use crate::Result;
+
+use super::{Act, Backend};
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub kernel: String,
+    pub file: PathBuf,
+    /// Key dims, kernel-specific:
+    /// gemm/gemm_bias_relu/gemm_bias: [rows, d_in, d_out]
+    /// spmm: [edges, segments, d]
+    /// sddmm: [edges, d]
+    pub dims: Vec<usize>,
+}
+
+/// Parse `artifacts/manifest.txt`: one `key=value ...` line per artifact.
+pub fn parse_manifest(dir: &Path) -> Result<Vec<ManifestEntry>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("cannot read {} (run `make artifacts`): {}", path.display(), e))?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut kernel = String::new();
+        let mut file = String::new();
+        let mut dims = Vec::new();
+        for tok in line.split_whitespace() {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad manifest token '{}'", tok))?;
+            match k {
+                "kernel" => kernel = v.to_string(),
+                "file" => file = v.to_string(),
+                "dims" => {
+                    dims = v
+                        .split(',')
+                        .map(|x| x.parse::<usize>())
+                        .collect::<std::result::Result<_, _>>()?;
+                }
+                _ => {} // forward-compatible
+            }
+        }
+        anyhow::ensure!(!kernel.is_empty() && !file.is_empty(), "bad manifest line: {}", line);
+        out.push(ManifestEntry { kernel, file: dir.join(file), dims });
+    }
+    Ok(out)
+}
+
+enum Job {
+    Run {
+        /// Manifest index of the artifact to execute.
+        entry: usize,
+        /// Inputs: (dims, f32 data) for f32 tensors; i32 tensors encoded
+        /// separately.
+        f32_inputs: Vec<(Vec<usize>, Vec<f32>)>,
+        i32_inputs: Vec<(Vec<usize>, Vec<i32>)>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle implementing [`Backend`] over the service thread.
+pub struct XlaHandle {
+    tx: Sender<Job>,
+    manifest: Vec<ManifestEntry>,
+    /// (kernel, dims-key) -> manifest index
+    index: HashMap<(String, Vec<usize>), usize>,
+}
+
+/// The service owner; dropping it shuts the thread down.
+pub struct XlaService {
+    handle: XlaHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+    tx: Sender<Job>,
+}
+
+impl XlaService {
+    /// Start the service thread over the artifacts directory.
+    pub fn start(dir: &Path) -> Result<XlaService> {
+        let manifest = parse_manifest(dir)?;
+        let mut index = HashMap::new();
+        for (i, e) in manifest.iter().enumerate() {
+            index.insert((e.kernel.clone(), e.dims.clone()), i);
+        }
+        let (tx, rx) = std::sync::mpsc::channel::<Job>();
+        let thread_manifest = manifest.clone();
+        let join = std::thread::Builder::new()
+            .name("xla-service".into())
+            .spawn(move || service_main(thread_manifest, rx))?;
+        Ok(XlaService {
+            handle: XlaHandle { tx: tx.clone(), manifest, index },
+            join: Some(join),
+            tx,
+        })
+    }
+
+    pub fn handle(&self) -> XlaHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Clone for XlaHandle {
+    fn clone(&self) -> Self {
+        XlaHandle { tx: self.tx.clone(), manifest: self.manifest.clone(), index: self.index.clone() }
+    }
+}
+
+fn service_main(manifest: Vec<ManifestEntry>, rx: Receiver<Job>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Drain jobs with errors.
+            for job in rx {
+                match job {
+                    Job::Run { reply, .. } => {
+                        let _ = reply.send(Err(anyhow::anyhow!("PJRT client failed: {}", e)));
+                    }
+                    Job::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let mut compiled: HashMap<usize, xla::PjRtLoadedExecutable> = HashMap::new();
+    for job in rx {
+        match job {
+            Job::Shutdown => break,
+            Job::Run { entry, f32_inputs, i32_inputs, reply } => {
+                let result = run_one(&client, &manifest, &mut compiled, entry, f32_inputs, i32_inputs);
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn run_one(
+    client: &xla::PjRtClient,
+    manifest: &[ManifestEntry],
+    compiled: &mut HashMap<usize, xla::PjRtLoadedExecutable>,
+    entry: usize,
+    f32_inputs: Vec<(Vec<usize>, Vec<f32>)>,
+    i32_inputs: Vec<(Vec<usize>, Vec<i32>)>,
+) -> Result<Vec<f32>> {
+    if !compiled.contains_key(&entry) {
+        let e = &manifest[entry];
+        let proto = xla::HloModuleProto::from_text_file(&e.file)
+            .map_err(|err| anyhow::anyhow!("load {}: {}", e.file.display(), err))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|err| anyhow::anyhow!("compile {}: {}", e.file.display(), err))?;
+        compiled.insert(entry, exe);
+    }
+    let exe = &compiled[&entry];
+    let mut literals: Vec<xla::Literal> = Vec::new();
+    for (dims, data) in &f32_inputs {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        literals.push(
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+                .map_err(|e| anyhow::anyhow!("literal: {}", e))?,
+        );
+    }
+    for (dims, data) in &i32_inputs {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        literals.push(
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
+                .map_err(|e| anyhow::anyhow!("literal: {}", e))?,
+        );
+    }
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow::anyhow!("execute: {}", e))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("to_literal: {}", e))?;
+    // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+    let out = lit.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {}", e))?;
+    out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {}", e))
+}
+
+impl XlaHandle {
+    fn submit(
+        &self,
+        entry: usize,
+        f32_inputs: Vec<(Vec<usize>, Vec<f32>)>,
+        i32_inputs: Vec<(Vec<usize>, Vec<i32>)>,
+    ) -> Result<Vec<f32>> {
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(Job::Run { entry, f32_inputs, i32_inputs, reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("xla service is down"))?;
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("xla service dropped the job"))?
+    }
+
+    /// Find the smallest artifact of `kernel` whose first dim (tile size)
+    /// can hold `need` and whose remaining dims equal `rest`.
+    fn lookup_tiled(&self, kernel: &str, need: usize, rest: &[usize]) -> Result<(usize, usize)> {
+        let mut best: Option<(usize, usize)> = None; // (tile, idx)
+        for (i, e) in self.manifest.iter().enumerate() {
+            if e.kernel == kernel && e.dims.len() == rest.len() + 1 && e.dims[1..] == *rest {
+                let tile = e.dims[0];
+                let better = match best {
+                    // prefer the smallest tile that fits; if none fits,
+                    // keep the largest available (we will chunk).
+                    Some((t, _)) => {
+                        if t >= need {
+                            tile >= need && tile < t
+                        } else {
+                            tile > t
+                        }
+                    }
+                    None => true,
+                };
+                if better {
+                    best = Some((tile, i));
+                }
+            }
+        }
+        best.map(|(t, i)| (i, t)).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no '{}' artifact for dims {:?} (have: {:?}) — extend python/compile/shapes.py",
+                kernel,
+                rest,
+                self.manifest
+                    .iter()
+                    .filter(|e| e.kernel == kernel)
+                    .map(|e| e.dims.clone())
+                    .collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Run a GEMM-family artifact over row chunks of `h`.
+    fn gemm_family(&self, kernel: &str, h: &Matrix, w: &Matrix, b: Option<&[f32]>) -> Result<Matrix> {
+        let (entry, tile) = self.lookup_tiled(kernel, h.rows, &[w.rows, w.cols])?;
+        let mut out = Matrix::zeros(h.rows, w.cols);
+        let mut r = 0;
+        while r < h.rows {
+            let hi = (r + tile).min(h.rows);
+            let take = hi - r;
+            // pad chunk to the tile
+            let mut chunk = vec![0.0f32; tile * h.cols];
+            chunk[..take * h.cols].copy_from_slice(&h.data[r * h.cols..hi * h.cols]);
+            let mut inputs = vec![(vec![tile, h.cols], chunk), (vec![w.rows, w.cols], w.data.clone())];
+            if let Some(bias) = b {
+                inputs.push((vec![w.cols], bias.to_vec()));
+            }
+            let res = self.submit(entry, inputs, vec![])?;
+            anyhow::ensure!(res.len() == tile * w.cols, "bad output len");
+            out.data[r * w.cols..hi * w.cols].copy_from_slice(&res[..take * w.cols]);
+            r = hi;
+        }
+        Ok(out)
+    }
+}
+
+/// Global gate used by tests to assert the XLA path really ran.
+pub static XLA_CALLS: Mutex<u64> = Mutex::new(0);
+
+impl Backend for XlaService {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+    fn gemm(&self, h: &Matrix, w: &Matrix) -> Result<Matrix> {
+        self.handle.gemm(h, w)
+    }
+    fn gemm_bias_act(&self, h: &Matrix, w: &Matrix, b: &[f32], act: Act) -> Result<Matrix> {
+        self.handle.gemm_bias_act(h, w, b, act)
+    }
+    fn spmm_tile(&self, feats: &Matrix, w: &[f32], seg: &[u32], num_segments: usize) -> Result<Matrix> {
+        self.handle.spmm_tile(feats, w, seg, num_segments)
+    }
+    fn sddmm_tile(&self, dst: &Matrix, src: &Matrix) -> Result<Vec<f32>> {
+        self.handle.sddmm_tile(dst, src)
+    }
+}
+
+impl Backend for XlaHandle {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn gemm(&self, h: &Matrix, w: &Matrix) -> Result<Matrix> {
+        *XLA_CALLS.lock().unwrap() += 1;
+        self.gemm_family("gemm", h, w, None)
+    }
+
+    fn gemm_bias_act(&self, h: &Matrix, w: &Matrix, b: &[f32], act: Act) -> Result<Matrix> {
+        *XLA_CALLS.lock().unwrap() += 1;
+        let kernel = match act {
+            Act::None => "gemm_bias",
+            Act::Relu => "gemm_bias_relu",
+        };
+        self.gemm_family(kernel, h, w, Some(b))
+    }
+
+    fn spmm_tile(&self, feats: &Matrix, w: &[f32], seg: &[u32], num_segments: usize) -> Result<Matrix> {
+        *XLA_CALLS.lock().unwrap() += 1;
+        anyhow::ensure!(feats.rows == w.len() && w.len() == seg.len(), "spmm tile arity");
+        // Artifact dims: [edge_tile, seg_cap, d]. Outputs larger than the
+        // artifact's segment capacity are row-blocked: edges are bucketed
+        // by segment block (stable sort by segment), each block runs
+        // through the kernel with rebased segment ids, and the block's
+        // rows accumulate into the output slice.
+        let (entry, edge_tile) = self.lookup_spmm(feats.cols)?;
+        let segs_cap = self.manifest[entry].dims[1];
+        let d = feats.cols;
+        let mut out = Matrix::zeros(num_segments, d);
+        if feats.rows == 0 {
+            return Ok(out);
+        }
+        // order edge indices by segment so each block's edges are contiguous
+        let mut order: Vec<u32> = (0..feats.rows as u32).collect();
+        order.sort_by_key(|&i| seg[i as usize]);
+        let mut pos = 0usize;
+        let mut block_lo = 0usize;
+        while block_lo < num_segments {
+            let block_hi = (block_lo + segs_cap).min(num_segments);
+            let start = pos;
+            while pos < order.len() && (seg[order[pos] as usize] as usize) < block_hi {
+                pos += 1;
+            }
+            let idx = &order[start..pos];
+            let mut e0 = 0usize;
+            while e0 < idx.len() {
+                let e1 = (e0 + edge_tile).min(idx.len());
+                let take = e1 - e0;
+                let mut f = vec![0.0f32; edge_tile * d];
+                let mut ww = vec![0.0f32; edge_tile];
+                // padding edges go to the sink segment (index segs_cap)
+                let mut ss = vec![segs_cap as i32; edge_tile];
+                for (i, &ei) in idx[e0..e1].iter().enumerate() {
+                    let ei = ei as usize;
+                    f[i * d..(i + 1) * d].copy_from_slice(feats.row(ei));
+                    ww[i] = w[ei];
+                    ss[i] = (seg[ei] as usize - block_lo) as i32;
+                }
+                let res = self.submit(
+                    entry,
+                    vec![(vec![edge_tile, d], f), (vec![edge_tile], ww)],
+                    vec![(vec![edge_tile], ss)],
+                )?;
+                anyhow::ensure!(res.len() == (segs_cap + 1) * d, "bad spmm output len");
+                for s in 0..(block_hi - block_lo) {
+                    let orow = out.row_mut(block_lo + s);
+                    for (o, &v) in orow.iter_mut().zip(&res[s * d..(s + 1) * d]) {
+                        *o += v;
+                    }
+                }
+                let _ = take;
+                e0 = e1;
+            }
+            block_lo = block_hi;
+        }
+        Ok(out)
+    }
+
+    fn sddmm_tile(&self, dst: &Matrix, src: &Matrix) -> Result<Vec<f32>> {
+        *XLA_CALLS.lock().unwrap() += 1;
+        anyhow::ensure!(dst.rows == src.rows && dst.cols == src.cols, "sddmm shape");
+        let d = dst.cols;
+        let (entry, edge_tile) = self.lookup_tiled("sddmm", dst.rows, &[d])?;
+        let mut out = vec![0.0f32; dst.rows];
+        let mut e0 = 0;
+        while e0 < dst.rows {
+            let e1 = (e0 + edge_tile).min(dst.rows);
+            let take = e1 - e0;
+            let mut a = vec![0.0f32; edge_tile * d];
+            a[..take * d].copy_from_slice(&dst.data[e0 * d..e1 * d]);
+            let mut b = vec![0.0f32; edge_tile * d];
+            b[..take * d].copy_from_slice(&src.data[e0 * d..e1 * d]);
+            let res = self.submit(
+                entry,
+                vec![(vec![edge_tile, d], a), (vec![edge_tile, d], b)],
+                vec![],
+            )?;
+            out[e0..e1].copy_from_slice(&res[..take]);
+            e0 = e1;
+        }
+        Ok(out)
+    }
+}
+
+impl XlaHandle {
+    /// SPMM artifacts are keyed `[edge_tile, seg_cap, d]`; pick the one
+    /// matching `d` with the largest segment capacity (outputs beyond it
+    /// are row-blocked by the caller).
+    fn lookup_spmm(&self, d: usize) -> Result<(usize, usize)> {
+        let mut best: Option<(usize, usize, usize)> = None; // (segcap, tile, idx)
+        for (i, e) in self.manifest.iter().enumerate() {
+            if e.kernel == "spmm" && e.dims.len() == 3 && e.dims[2] == d {
+                let (tile, segcap) = (e.dims[0], e.dims[1]);
+                if best.map_or(true, |(bs, _, _)| segcap > bs) {
+                    best = Some((segcap, tile, i));
+                }
+            }
+        }
+        best.map(|(_, t, i)| (i, t)).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no 'spmm' artifact with d={} — extend python/compile/shapes.py",
+                d
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join(format!("deal-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# comment\nkernel=gemm file=g.hlo.txt dims=256,100,100\nkernel=spmm file=s.hlo.txt dims=1024,257,50\n",
+        )
+        .unwrap();
+        let m = parse_manifest(&dir).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].kernel, "gemm");
+        assert_eq!(m[0].dims, vec![256, 100, 100]);
+        assert_eq!(m[1].dims, vec![1024, 257, 50]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        assert!(parse_manifest(Path::new("/definitely/not/here")).is_err());
+    }
+}

@@ -1,0 +1,73 @@
+//! Trained-weight interchange with the Python training script.
+//!
+//! `python/compile/train.py` writes `artifacts/weights_<model>.bin` in this
+//! format (little-endian): `u64 n_tensors`, then per tensor `u64 rows,
+//! u64 cols, rows*cols f32`. Vectors (biases) use `rows = 1`. Tensor order
+//! is fixed by the model definition: `[W0, b0, W1, b1, ...]` for GCN;
+//! `[W_l, b_l, a_src_l, a_dst_l, ...]` per layer for GAT.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::tensor::Matrix;
+use crate::Result;
+
+/// Read all tensors from a weights file.
+pub fn load_weights(path: &Path) -> Result<Vec<Matrix>> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut buf8 = [0u8; 8];
+    f.read_exact(&mut buf8)?;
+    let n = u64::from_le_bytes(buf8) as usize;
+    anyhow::ensure!(n < 10_000, "implausible tensor count {}", n);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        f.read_exact(&mut buf8)?;
+        let rows = u64::from_le_bytes(buf8) as usize;
+        f.read_exact(&mut buf8)?;
+        let cols = u64::from_le_bytes(buf8) as usize;
+        let mut data = vec![0u8; rows * cols * 4];
+        f.read_exact(&mut data)?;
+        let floats: Vec<f32> = data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        out.push(Matrix::from_vec(rows, cols, floats));
+    }
+    Ok(out)
+}
+
+/// Write tensors in the interchange format (tests and the rust-side
+/// random-init path use this; training uses the python writer).
+pub fn save_weights(path: &Path, tensors: &[Matrix]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(&(tensors.len() as u64).to_le_bytes())?;
+    for t in tensors {
+        f.write_all(&(t.rows as u64).to_le_bytes())?;
+        f.write_all(&(t.cols as u64).to_le_bytes())?;
+        for v in &t.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let tensors = vec![
+            Matrix::random(3, 4, 1.0, &mut rng),
+            Matrix::random(1, 4, 1.0, &mut rng),
+        ];
+        let p = std::env::temp_dir().join(format!("deal-w-{}.bin", std::process::id()));
+        save_weights(&p, &tensors).unwrap();
+        let back = load_weights(&p).unwrap();
+        assert_eq!(back, tensors);
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,172 @@
+//! Embedding serving front end — the downstream consumer of end-to-end
+//! all-node inference (paper §1: recommendation / fraud detection serve
+//! the daily-refreshed embedding table).
+//!
+//! `EmbeddingServer` holds the refreshed all-node embedding matrix and
+//! answers two request kinds:
+//! - `Embed`: fetch embeddings for a batch of node ids;
+//! - `Similar`: top-k nearest nodes by inner product, computed as a GEMM
+//!   against the table — routed through `runtime::Backend`, so with the
+//!   XLA backend the scoring matmul runs inside an AOT-compiled artifact.
+//!
+//! `examples/serve_embeddings.rs` drives this after a full pipeline run
+//! and reports p50/p99 latency + throughput (EXPERIMENTS.md §E2E).
+
+use std::time::Instant;
+
+use crate::runtime::Backend;
+use crate::tensor::Matrix;
+use crate::util::stats::Summary;
+use crate::Result;
+
+/// A request against the embedding table.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Fetch embeddings of these nodes.
+    Embed(Vec<u32>),
+    /// Top-k similar nodes to each of these query nodes.
+    Similar { ids: Vec<u32>, k: usize },
+}
+
+/// A response.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Embeddings(Matrix),
+    /// Per query: (node id, score), best first.
+    Similar(Vec<Vec<(u32, f32)>>),
+}
+
+/// The serving table.
+pub struct EmbeddingServer {
+    pub embeddings: Matrix,
+}
+
+impl EmbeddingServer {
+    pub fn new(embeddings: Matrix) -> Self {
+        EmbeddingServer { embeddings }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.embeddings.cols
+    }
+
+    /// Answer one request.
+    pub fn handle(&self, req: &Request, backend: &dyn Backend) -> Result<Response> {
+        match req {
+            Request::Embed(ids) => {
+                let idx: Vec<usize> = ids.iter().map(|&v| v as usize).collect();
+                Ok(Response::Embeddings(self.embeddings.gather_rows(&idx)))
+            }
+            Request::Similar { ids, k } => {
+                // scores = table @ queriesᵀ  (N × B) through the backend
+                let idx: Vec<usize> = ids.iter().map(|&v| v as usize).collect();
+                let queries = self.embeddings.gather_rows(&idx); // B × d
+                let qt = queries.transpose(); // d × B
+                let scores = backend.gemm(&self.embeddings, &qt)?;
+                let mut out = Vec::with_capacity(ids.len());
+                for (b, &qid) in ids.iter().enumerate() {
+                    let mut ranked: Vec<(u32, f32)> = (0..scores.rows)
+                        .filter(|&r| r as u32 != qid)
+                        .map(|r| (r as u32, scores.get(r, b)))
+                        .collect();
+                    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                    ranked.truncate(*k);
+                    out.push(ranked);
+                }
+                Ok(Response::Similar(out))
+            }
+        }
+    }
+}
+
+/// Serving statistics.
+#[derive(Debug)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub latency: Summary,
+    /// Requests per second over the whole workload.
+    pub throughput: f64,
+}
+
+/// Run a request workload sequentially (one serving thread), collecting
+/// per-request latency and overall throughput.
+pub fn serve_workload(
+    server: &EmbeddingServer,
+    requests: &[Request],
+    backend: &dyn Backend,
+) -> Result<ServeStats> {
+    let mut latencies = Vec::with_capacity(requests.len());
+    let t0 = Instant::now();
+    for req in requests {
+        let r0 = Instant::now();
+        let _resp = server.handle(req, backend)?;
+        latencies.push(r0.elapsed().as_secs_f64());
+    }
+    let total = t0.elapsed().as_secs_f64();
+    Ok(ServeStats {
+        requests: requests.len(),
+        latency: Summary::of(&latencies).expect("no requests"),
+        throughput: requests.len() as f64 / total.max(1e-12),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Native;
+    use crate::util::rng::Rng;
+
+    fn server() -> EmbeddingServer {
+        let mut rng = Rng::new(5);
+        EmbeddingServer::new(Matrix::random(20, 8, 1.0, &mut rng))
+    }
+
+    #[test]
+    fn embed_fetches_rows() {
+        let s = server();
+        let resp = s.handle(&Request::Embed(vec![3, 7]), &Native).unwrap();
+        match resp {
+            Response::Embeddings(m) => {
+                assert_eq!(m.rows, 2);
+                assert_eq!(m.row(0), s.embeddings.row(3));
+            }
+            _ => panic!("wrong response"),
+        }
+    }
+
+    #[test]
+    fn similar_excludes_self_and_ranks() {
+        let s = server();
+        let resp = s
+            .handle(&Request::Similar { ids: vec![0, 5], k: 3 }, &Native)
+            .unwrap();
+        match resp {
+            Response::Similar(lists) => {
+                assert_eq!(lists.len(), 2);
+                for (q, list) in lists.iter().enumerate() {
+                    let qid = [0u32, 5][q];
+                    assert_eq!(list.len(), 3);
+                    assert!(list.iter().all(|&(id, _)| id != qid));
+                    for w in list.windows(2) {
+                        assert!(w[0].1 >= w[1].1, "not sorted");
+                    }
+                }
+            }
+            _ => panic!("wrong response"),
+        }
+    }
+
+    #[test]
+    fn workload_stats() {
+        let s = server();
+        let reqs = vec![
+            Request::Embed(vec![1]),
+            Request::Similar { ids: vec![2], k: 2 },
+            Request::Embed(vec![0, 1, 2]),
+        ];
+        let stats = serve_workload(&s, &reqs, &Native).unwrap();
+        assert_eq!(stats.requests, 3);
+        assert!(stats.throughput > 0.0);
+        assert!(stats.latency.p99 >= stats.latency.p50);
+    }
+}

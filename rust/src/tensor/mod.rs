@@ -1,0 +1,381 @@
+//! Dense row-major `f32` matrices and the handful of linear-algebra
+//! operations the coordinator needs outside the XLA artifacts: blocked
+//! matmul (the `NativeBackend` reference path), row gather/scatter for
+//! feature exchange, and segment reductions for aggregation oracles.
+//!
+//! Kept deliberately small: the *hot* dense math on the request path runs
+//! through `runtime::Backend` (AOT-compiled XLA tiles); this module is the
+//! substrate + correctness oracle.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major `rows × cols` matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Deterministic random matrix with entries uniform in `[-scale, scale]`.
+    pub fn random(rows: usize, cols: usize, scale: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols)
+            .map(|_| (rng.next_f32() * 2.0 - 1.0) * scale)
+            .collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Size in bytes of the backing storage (memory accounting).
+    pub fn nbytes(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<f32>()) as u64
+    }
+
+    /// Extract rows `[lo, hi)` as a new matrix.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.rows);
+        Matrix {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    /// Extract columns `[lo, hi)` as a new matrix (the feature partition).
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.cols);
+        let w = hi - lo;
+        let mut out = Matrix::zeros(self.rows, w);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[lo..hi]);
+        }
+        out
+    }
+
+    /// Gather rows by index into a new matrix (`out[i] = self[idx[i]]`).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            debug_assert!(r < self.rows, "gather index {} out of {} rows", r, self.rows);
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Write `block`'s rows into `self` starting at row `at`.
+    pub fn set_rows(&mut self, at: usize, block: &Matrix) {
+        assert_eq!(block.cols, self.cols);
+        assert!(at + block.rows <= self.rows);
+        self.data[at * self.cols..(at + block.rows) * self.cols].copy_from_slice(&block.data);
+    }
+
+    /// Write `block` into the column window `[col_lo, col_lo + block.cols)`.
+    pub fn set_cols(&mut self, col_lo: usize, block: &Matrix) {
+        assert_eq!(block.rows, self.rows);
+        assert!(col_lo + block.cols <= self.cols);
+        for r in 0..self.rows {
+            self.row_mut(r)[col_lo..col_lo + block.cols].copy_from_slice(block.row(r));
+        }
+    }
+
+    /// Horizontally concatenate column blocks (inverse of the M-way feature
+    /// partition).
+    pub fn hcat(blocks: &[&Matrix]) -> Matrix {
+        assert!(!blocks.is_empty());
+        let rows = blocks[0].rows;
+        let cols = blocks.iter().map(|b| b.cols).sum();
+        let mut out = Matrix::zeros(rows, cols);
+        let mut at = 0;
+        for b in blocks {
+            assert_eq!(b.rows, rows);
+            out.set_cols(at, b);
+            at += b.cols;
+        }
+        out
+    }
+
+    /// Vertically concatenate row blocks (inverse of the P-way 1-D partition).
+    pub fn vcat(blocks: &[&Matrix]) -> Matrix {
+        assert!(!blocks.is_empty());
+        let cols = blocks[0].cols;
+        let rows = blocks.iter().map(|b| b.rows).sum();
+        let mut out = Matrix::zeros(rows, cols);
+        let mut at = 0;
+        for b in blocks {
+            assert_eq!(b.cols, cols);
+            out.set_rows(at, b);
+            at += b.rows;
+        }
+        out
+    }
+
+    /// `self @ other` with a cache-blocked i-k-j loop order.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        matmul(self, other)
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Element-wise maximum absolute difference against another matrix.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Apply `f` to every element in place.
+    pub fn map_inplace<F: Fn(f32) -> f32>(&mut self, f: F) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+}
+
+/// Blocked matmul `a @ b`. i-k-j order with a 64-wide k block keeps the
+/// inner loop a contiguous FMA over `b`'s rows, which the compiler
+/// auto-vectorizes; this is the native-backend hot loop.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Matrix::zeros(m, n);
+    const KB: usize = 64;
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        for i in 0..m {
+            let a_row = a.row(i);
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let av = a_row[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let b_row = &b.data[kk * n..(kk + 1) * n];
+                for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `out[seg[i]] += x[i]` row-wise segment sum with `num_segments` output
+/// rows. The oracle for the SPMM aggregation (and the shape the Pallas
+/// kernel implements with a sink row for padding).
+pub fn segment_sum(x: &Matrix, seg: &[usize], num_segments: usize) -> Matrix {
+    assert_eq!(x.rows, seg.len());
+    let mut out = Matrix::zeros(num_segments, x.cols);
+    for (i, &s) in seg.iter().enumerate() {
+        debug_assert!(s < num_segments);
+        let row = x.row(i);
+        let orow = out.row_mut(s);
+        for (o, &v) in orow.iter_mut().zip(row.iter()) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Row-wise scaled segment sum: `out[seg[i]] += w[i] * x[i]`.
+pub fn segment_sum_scaled(x: &Matrix, w: &[f32], seg: &[usize], num_segments: usize) -> Matrix {
+    assert_eq!(x.rows, seg.len());
+    assert_eq!(x.rows, w.len());
+    let mut out = Matrix::zeros(num_segments, x.cols);
+    for (i, &s) in seg.iter().enumerate() {
+        let wi = w[i];
+        let row = x.row(i);
+        let orow = out.row_mut(s);
+        for (o, &v) in orow.iter_mut().zip(row.iter()) {
+            *o += wi * v;
+        }
+    }
+    out
+}
+
+/// Per-segment max over scalars (used by segment-softmax for GAT).
+pub fn segment_max_scalar(x: &[f32], seg: &[usize], num_segments: usize) -> Vec<f32> {
+    let mut out = vec![f32::NEG_INFINITY; num_segments];
+    for (i, &s) in seg.iter().enumerate() {
+        if x[i] > out[s] {
+            out[s] = x[i];
+        }
+    }
+    out
+}
+
+/// Per-segment sum over scalars.
+pub fn segment_sum_scalar(x: &[f32], seg: &[usize], num_segments: usize) -> Vec<f32> {
+    let mut out = vec![0.0; num_segments];
+    for (i, &s) in seg.iter().enumerate() {
+        out[s] += x[i];
+    }
+    out
+}
+
+/// LeakyReLU with the GAT-standard 0.2 negative slope.
+#[inline]
+pub fn leaky_relu(x: f32) -> f32 {
+    if x >= 0.0 {
+        x
+    } else {
+        0.2 * x
+    }
+}
+
+/// ReLU.
+#[inline]
+pub fn relu(x: f32) -> f32 {
+    x.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, run, Config};
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_property() {
+        run(Config::default().cases(16), |rng| {
+            let m = rng.range(1, 20);
+            let k = rng.range(1, 20);
+            let n = rng.range(1, 20);
+            let a = Matrix::random(m, k, 1.0, rng);
+            let b = Matrix::random(k, n, 1.0, rng);
+            let fast = a.matmul(&b);
+            // naive triple loop oracle
+            let mut naive = Matrix::zeros(m, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        acc += a.get(i, kk) * b.get(kk, j);
+                    }
+                    naive.set(i, j, acc);
+                }
+            }
+            assert_close(&fast.data, &naive.data, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn slice_and_cat_roundtrip() {
+        run(Config::default().cases(16), |rng| {
+            let r = rng.range(1, 12);
+            let c = rng.range(2, 12);
+            let m = Matrix::random(r, c, 1.0, rng);
+            let split = rng.range(1, c);
+            let left = m.slice_cols(0, split);
+            let right = m.slice_cols(split, c);
+            let rebuilt = Matrix::hcat(&[&left, &right]);
+            if rebuilt != m {
+                return Err("hcat(slice_cols) != identity".into());
+            }
+            let rsplit = rng.range(0, r);
+            let top = m.slice_rows(0, rsplit);
+            let bottom = m.slice_rows(rsplit, r);
+            let rebuilt2 = if rsplit == 0 {
+                bottom.clone()
+            } else {
+                Matrix::vcat(&[&top, &bottom])
+            };
+            if rebuilt2 != m {
+                return Err("vcat(slice_rows) != identity".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gather_rows_matches_manual() {
+        let m = Matrix::from_vec(3, 2, vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0]);
+        let g = m.gather_rows(&[2, 0, 2]);
+        assert_eq!(g.data, vec![20.0, 21.0, 0.0, 1.0, 20.0, 21.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(11);
+        let m = Matrix::random(5, 7, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn segment_sum_basic() {
+        let x = Matrix::from_vec(3, 2, vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        let out = segment_sum(&x, &[0, 1, 0], 2);
+        assert_eq!(out.data, vec![4.0, 4.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn segment_sum_scaled_matches_unscaled_with_unit_weights() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::random(10, 4, 1.0, &mut rng);
+        let seg: Vec<usize> = (0..10).map(|i| i % 3).collect();
+        let w = vec![1.0f32; 10];
+        assert_eq!(segment_sum(&x, &seg, 3), segment_sum_scaled(&x, &w, &seg, 3));
+    }
+
+    #[test]
+    fn segment_scalar_ops() {
+        let x = [1.0, 5.0, -2.0, 3.0];
+        let seg = [0, 0, 1, 1];
+        assert_eq!(segment_max_scalar(&x, &seg, 2), vec![5.0, 3.0]);
+        assert_eq!(segment_sum_scalar(&x, &seg, 2), vec![6.0, 1.0]);
+    }
+
+    #[test]
+    fn activations() {
+        assert_eq!(leaky_relu(2.0), 2.0);
+        assert!((leaky_relu(-1.0) + 0.2).abs() < 1e-7);
+        assert_eq!(relu(-3.0), 0.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Zero-dependency benchmark harness.
+//!
+//! The offline build environment has no `criterion`, so the `benches/`
+//! binaries (declared with `harness = false`) use this module instead. It
+//! provides warmup + repeated timed runs, summary statistics, aligned table
+//! printing in the shape of the paper's figures, and writes each bench's
+//! output under `target/bench_results/` so EXPERIMENTS.md can quote it.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// One timed measurement series.
+pub struct Measurement {
+    pub label: String,
+    pub secs: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.secs).expect("empty measurement")
+    }
+    pub fn mean(&self) -> f64 {
+        self.summary().mean
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs followed by `reps` measured runs.
+pub fn time_fn<F: FnMut()>(label: &str, warmup: usize, reps: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut secs = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        secs.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement { label: label.to_string(), secs }
+}
+
+/// Time a fallible closure once, returning (value, seconds).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64())
+}
+
+/// A bench report: a titled collection of rows that renders as an aligned
+/// table and is persisted under `target/bench_results/<name>.txt`.
+pub struct Report {
+    name: String,
+    lines: Vec<String>,
+    tables: Vec<Table>,
+}
+
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for i in 0..ncol {
+                let _ = write!(line, "{:width$} | ", cells[i], width = widths[i]);
+            }
+            line.trim_end().to_string()
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "{}", fmt_row(&sep, &widths));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+impl Report {
+    pub fn new(name: &str) -> Self {
+        Report { name: name.to_string(), lines: Vec::new(), tables: Vec::new() }
+    }
+
+    /// Add a free-form note line.
+    pub fn note(&mut self, line: impl Into<String>) {
+        self.lines.push(line.into());
+    }
+
+    pub fn add_table(&mut self, table: Table) {
+        self.tables.push(table);
+    }
+
+    fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "# bench: {}", self.name);
+        for l in &self.lines {
+            let _ = writeln!(out, "{}", l);
+        }
+        for t in &self.tables {
+            let _ = writeln!(out);
+            out.push_str(&t.render());
+        }
+        out
+    }
+
+    /// Print to stdout and persist under `target/bench_results/<name>.txt`.
+    pub fn finish(self) {
+        let text = self.render();
+        println!("{}", text);
+        let dir = PathBuf::from("target/bench_results");
+        if fs::create_dir_all(&dir).is_ok() {
+            let path = dir.join(format!("{}.txt", self.name));
+            if let Ok(mut f) = fs::File::create(&path) {
+                let _ = f.write_all(text.as_bytes());
+                eprintln!("[bench] wrote {}", path.display());
+            }
+        }
+    }
+}
+
+/// Parse the standard bench CLI: `--quick` shrinks workloads for smoke runs
+/// (`cargo bench` in CI), `--full` restores paper-scale parameters.
+pub struct BenchArgs {
+    pub quick: bool,
+}
+
+impl BenchArgs {
+    pub fn parse() -> Self {
+        let args: Vec<String> = std::env::args().collect();
+        // `cargo bench` passes `--bench`; honor DEAL_BENCH_QUICK too.
+        let quick = !args.iter().any(|a| a == "--full")
+            && (args.iter().any(|a| a == "--quick")
+                || std::env::var("DEAL_BENCH_QUICK").map_or(true, |v| v != "0"));
+        BenchArgs { quick }
+    }
+
+    /// Pick `q` when quick, else `f`.
+    pub fn pick<T>(&self, q: T, f: T) -> T {
+        if self.quick { q } else { f }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "speedup"]);
+        t.row(&["x".into(), "1.5".into()]);
+        t.row(&["longer".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("## demo"));
+        assert!(r.contains("| longer | 2"));
+    }
+
+    #[test]
+    fn time_fn_counts_reps() {
+        let m = time_fn("noop", 1, 5, || {});
+        assert_eq!(m.secs.len(), 5);
+        assert!(m.mean() >= 0.0);
+    }
+}

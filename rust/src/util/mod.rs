@@ -1,0 +1,107 @@
+//! Zero-dependency utilities: deterministic RNG, statistics, formatting,
+//! a bench harness (used by `benches/`, which run with `harness = false`),
+//! and a small property-testing harness (used across unit and integration
+//! tests — the offline build environment has no `proptest`).
+
+pub mod bench;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count as a human-readable string (`1.50 GiB`).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", bytes, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration in seconds as a human-readable string.
+pub fn human_secs(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.2} s", secs)
+    } else {
+        format!("{:.1} min", secs / 60.0)
+    }
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Split `n` items into `parts` contiguous ranges as evenly as possible.
+/// The first `n % parts` ranges get one extra item. Returns `parts + 1`
+/// boundary offsets (`bounds[p]..bounds[p+1]` is range `p`).
+pub fn even_ranges(n: usize, parts: usize) -> Vec<usize> {
+    assert!(parts > 0, "cannot split into zero parts");
+    let base = n / parts;
+    let extra = n % parts;
+    let mut bounds = Vec::with_capacity(parts + 1);
+    let mut acc = 0;
+    bounds.push(0);
+    for p in 0..parts {
+        acc += base + usize::from(p < extra);
+        bounds.push(acc);
+    }
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_secs_units() {
+        assert_eq!(human_secs(0.5e-9 * 20.0), "10.0 ns");
+        assert_eq!(human_secs(2.5e-3), "2.50 ms");
+        assert_eq!(human_secs(3.0), "3.00 s");
+    }
+
+    #[test]
+    fn div_ceil_basic() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(1, 3), 1);
+        assert_eq!(div_ceil(0, 3), 0);
+    }
+
+    #[test]
+    fn even_ranges_cover_and_balance() {
+        for n in [0usize, 1, 7, 16, 100] {
+            for parts in 1..=8usize {
+                let b = even_ranges(n, parts);
+                assert_eq!(b.len(), parts + 1);
+                assert_eq!(b[0], 0);
+                assert_eq!(*b.last().unwrap(), n);
+                let sizes: Vec<usize> = (0..parts).map(|p| b[p + 1] - b[p]).collect();
+                let min = sizes.iter().min().unwrap();
+                let max = sizes.iter().max().unwrap();
+                assert!(max - min <= 1, "unbalanced: {:?}", sizes);
+            }
+        }
+    }
+}

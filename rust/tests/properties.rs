@@ -1,0 +1,157 @@
+//! Cross-module property tests on coordinator invariants (DESIGN.md
+//! testing strategy): random graphs × random plans ⇒ distributed results
+//! equal dense oracles; cost formulas track measured bytes; sampling is a
+//! bounded subgraph.
+
+use std::sync::Arc;
+
+use deal::cluster::{Cluster, NetConfig};
+use deal::graph::{Csr, NodeId};
+use deal::partition::PartitionPlan;
+use deal::primitives::costs::{self, CostParams};
+use deal::primitives::gemm::deal_gemm;
+use deal::primitives::spmm::{deal_spmm, spmm_reference, EdgeValues, SpmmInput};
+use deal::primitives::{gather_tiles, mean_weights, scatter, ExecMode};
+use deal::tensor::Matrix;
+use deal::util::prop::{assert_close, run, Config};
+use deal::util::rng::Rng;
+
+#[test]
+fn random_pipeline_primitives_match_oracles() {
+    run(Config::default().cases(8), |rng| {
+        let p = rng.range(1, 4);
+        let m = rng.range(1, 4);
+        let n = rng.range(p * m * 4, 64);
+        let d = rng.range(m * 2, 24);
+        let ne = rng.range(1, n * 5);
+        let edges: Vec<(NodeId, NodeId)> = (0..ne)
+            .map(|_| (rng.next_below(n) as NodeId, rng.next_below(n) as NodeId))
+            .collect();
+        let g = Csr::from_edges(n, &edges);
+        let h = Matrix::random(n, d, 1.0, rng);
+        // GEMM output plan needs w.cols >= m feature parts
+        let w = Matrix::random(d, rng.range(m.max(2), 16), 1.0, rng);
+        let plan = PartitionPlan::new(n, d, p, m);
+        let vals = mean_weights(&g);
+
+        // chained: GEMM then SPMM over the GEMM output, distributed
+        let plan2 = plan.clone();
+        let tiles = Arc::new(scatter(&plan, &h));
+        let g2 = Arc::new(g.clone());
+        let w2 = Arc::new(w.clone());
+        let vals2 = Arc::new(vals.clone());
+        let mode = ExecMode::ALL[rng.next_below(3)];
+        let maxc = [0usize, 8, 64][rng.next_below(3)];
+        let cluster = Cluster::new(plan.world(), NetConfig::default());
+        let (outs, _) = cluster
+            .run(move |ctx| {
+                let backend = deal::runtime::Native;
+                let hw = deal_gemm(ctx, &plan2, &tiles[ctx.rank], &w2, &backend, 3).unwrap();
+                // build a plan for the GEMM output width
+                let plan_out = PartitionPlan::new(plan2.n_nodes, w2.cols, plan2.p, plan2.m);
+                let (p_idx, _) = plan_out.coords_of(ctx.rank);
+                let (lo, hi) = plan_out.node_range(p_idx);
+                let sub = g2.slice_rows(lo, hi);
+                let svals =
+                    vals2[g2.indptr[lo] as usize..g2.indptr[hi] as usize].to_vec();
+                let input = SpmmInput {
+                    plan: &plan_out,
+                    g: &sub,
+                    vals: EdgeValues::Scalar(&svals),
+                    h: &hw,
+                };
+                deal_spmm(ctx, &input, &backend, mode, maxc, 5)
+            })
+            .unwrap();
+        let plan_out = PartitionPlan::new(plan.n_nodes, w.cols, plan.p, plan.m);
+        let got = gather_tiles(&plan_out, w.cols, &outs);
+        let expect = spmm_reference(&g, &vals, &h.matmul(&w));
+        assert_close(&got.data, &expect.data, 2e-3, 2e-3)
+    });
+}
+
+#[test]
+fn gemm_cost_model_tracks_measured_bytes() {
+    // measured sent bytes per machine must match Table 1's formula within
+    // the envelope overhead (64 B/message).
+    run(Config::default().cases(6), |rng| {
+        let p = rng.range(1, 3);
+        let m = rng.range(2, 5);
+        let n = p * m * rng.range(4, 16);
+        let d = m * rng.range(2, 8);
+        let plan = PartitionPlan::new(n, d, p, m);
+        let h = Matrix::random(n, d, 1.0, rng);
+        let w = Matrix::random(d, d, 1.0, rng);
+        let tiles = Arc::new(scatter(&plan, &h));
+        let plan2 = plan.clone();
+        let w2 = Arc::new(w.clone());
+        let cluster = Cluster::new(plan.world(), NetConfig::default());
+        let (_, report) = cluster
+            .run(move |ctx| {
+                deal_gemm(ctx, &plan2, &tiles[ctx.rank], &w2, &deal::runtime::Native, 3).unwrap()
+            })
+            .unwrap();
+        let c = CostParams::new(n, d, p, m, 0.0);
+        let predicted_elems = costs::gemm_ours_comm(&c); // per machine
+        for (rank, mm) in report.machines.iter().enumerate() {
+            let payload = mm.bytes_sent.saturating_sub(64 * mm.msgs_sent); // strip envelopes
+            let lo = predicted_elems * 4.0 * 0.5;
+            let hi = predicted_elems * 4.0 * 1.5 + 64.0;
+            let ok = (lo..=hi).contains(&(payload as f64));
+            if !ok {
+                return Err(format!(
+                    "rank {}: measured {} B predicted {} B (n={} d={} p={} m={})",
+                    rank,
+                    payload,
+                    predicted_elems * 4.0,
+                    n,
+                    d,
+                    p,
+                    m
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sampling_layer_graphs_are_bounded_subgraphs() {
+    run(Config::default().cases(12), |rng| {
+        let n = rng.range(4, 120);
+        let e = rng.range(n, n * 6);
+        let edges: Vec<(NodeId, NodeId)> = (0..e)
+            .map(|_| (rng.next_below(n) as NodeId, rng.next_below(n) as NodeId))
+            .collect();
+        let g = Csr::from_edges(n, &edges);
+        let k = rng.range(1, 4);
+        let fanout = rng.range(1, 6);
+        let lg = deal::sampling::sample_all_layers(&g, k, fanout, rng.next_u64());
+        for layer in &lg.layers {
+            layer.validate()?;
+            if layer.n_edges() > g.n_edges() {
+                return Err("sampled more edges than exist".into());
+            }
+            for v in 0..n {
+                if layer.degree(v) > fanout.min(g.degree(v)).max(g.degree(v).min(fanout)) {
+                    return Err(format!("degree bound violated at {}", v));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partition_plans_compose_with_rng() {
+    // smoke: plans built from random configs always validate
+    let mut rng = Rng::new(1);
+    for _ in 0..50 {
+        let p = rng.range(1, 9);
+        let m = rng.range(1, 9);
+        let n = rng.range(p.max(m) * 2, 2000);
+        let d = rng.range(m, 256).max(m);
+        let plan = PartitionPlan::new(n, d, p, m);
+        plan.validate().unwrap();
+    }
+}

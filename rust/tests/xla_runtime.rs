@@ -1,0 +1,108 @@
+//! Integration: the XLA backend (AOT HLO artifacts through PJRT) computes
+//! exactly what the native backend computes, and the end-to-end pipeline
+//! over the XLA backend matches the native pipeline.
+//!
+//! Requires `make artifacts`; tests self-skip when artifacts are absent so
+//! plain `cargo test` works in a fresh checkout.
+
+use deal::config::DealConfig;
+use deal::coordinator::Pipeline;
+use deal::runtime::{backend_from_config, Act, Backend, Native};
+use deal::tensor::Matrix;
+use deal::util::prop::assert_close;
+use deal::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let p = std::path::PathBuf::from("artifacts");
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.txt missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn xla_gemm_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = backend_from_config("xla", &dir).unwrap();
+    let mut rng = Rng::new(1);
+    // row counts exercise both the pad (<256) and multi-chunk (>256) paths
+    for rows in [5usize, 256, 300] {
+        for (k, n) in [(8usize, 8usize), (16, 16), (32, 4)] {
+            let h = Matrix::random(rows, k, 1.0, &mut rng);
+            let w = Matrix::random(k, n, 1.0, &mut rng);
+            let got = xla.gemm(&h, &w).unwrap();
+            let want = Native.gemm(&h, &w).unwrap();
+            assert_close(&got.data, &want.data, 1e-4, 1e-4)
+                .unwrap_or_else(|e| panic!("rows={} {}x{}: {}", rows, k, n, e));
+        }
+    }
+}
+
+#[test]
+fn xla_gemm_bias_act_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = backend_from_config("xla", &dir).unwrap();
+    let mut rng = Rng::new(2);
+    for act in [Act::None, Act::Relu] {
+        let h = Matrix::random(40, 16, 1.0, &mut rng);
+        let w = Matrix::random(16, 16, 1.0, &mut rng);
+        let b: Vec<f32> = (0..16).map(|_| rng.next_f32() - 0.5).collect();
+        let got = xla.gemm_bias_act(&h, &w, &b, act).unwrap();
+        let want = Native.gemm_bias_act(&h, &w, &b, act).unwrap();
+        assert_close(&got.data, &want.data, 1e-4, 1e-4).unwrap();
+    }
+}
+
+#[test]
+fn xla_spmm_tile_matches_native_incl_row_blocking() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = backend_from_config("xla", &dir).unwrap();
+    let mut rng = Rng::new(3);
+    // num_segments > SEG_CAP (256) exercises the row-blocking path;
+    // edges > EDGE_TILE (1024) exercises edge chunking.
+    for (edges, segs) in [(50usize, 10usize), (1500, 40), (700, 600)] {
+        let d = 16;
+        let feats = Matrix::random(edges, d, 1.0, &mut rng);
+        let w: Vec<f32> = (0..edges).map(|_| rng.next_f32()).collect();
+        let seg: Vec<u32> = (0..edges).map(|_| rng.next_below(segs) as u32).collect();
+        let got = xla.spmm_tile(&feats, &w, &seg, segs).unwrap();
+        let want = Native.spmm_tile(&feats, &w, &seg, segs).unwrap();
+        assert_close(&got.data, &want.data, 1e-3, 1e-3)
+            .unwrap_or_else(|e| panic!("edges={} segs={}: {}", edges, segs, e));
+    }
+}
+
+#[test]
+fn xla_sddmm_tile_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = backend_from_config("xla", &dir).unwrap();
+    let mut rng = Rng::new(4);
+    let a = Matrix::random(1300, 8, 1.0, &mut rng);
+    let b = Matrix::random(1300, 8, 1.0, &mut rng);
+    let got = xla.sddmm_tile(&a, &b).unwrap();
+    let want = Native.sddmm_tile(&a, &b).unwrap();
+    assert_close(&got, &want, 1e-4, 1e-4).unwrap();
+}
+
+#[test]
+fn pipeline_xla_matches_native() {
+    let Some(_dir) = artifacts_dir() else { return };
+    let mut outs = Vec::new();
+    for backend in ["native", "xla"] {
+        let mut cfg = DealConfig::default();
+        cfg.dataset.scale = 1.0 / 256.0;
+        cfg.model.layers = 2;
+        cfg.model.fanout = 6;
+        cfg.exec.backend = backend.into();
+        let before = *deal::runtime::service::XLA_CALLS.lock().unwrap();
+        outs.push(Pipeline::new(cfg).run().unwrap().embeddings.unwrap());
+        if backend == "xla" {
+            let after = *deal::runtime::service::XLA_CALLS.lock().unwrap();
+            assert!(after > before, "xla path did not execute any artifacts");
+        }
+    }
+    let diff = outs[0].max_abs_diff(&outs[1]);
+    assert!(diff < 1e-2, "xla vs native diverged: {}", diff);
+}
