@@ -2,12 +2,14 @@
 //! load a real *trained* GCN (exported by `python/compile/train.py`),
 //! refresh all-node embeddings through the full Deal pipeline with the
 //! **XLA backend** (every dense tile runs inside an AOT-compiled
-//! artifact via PJRT — python never runs here), then serve batched
-//! embedding + similarity requests against the refreshed table, reporting
-//! p50/p99 latency and throughput.
+//! artifact via PJRT — python never runs here), then serve embedding +
+//! similarity traffic two ways — the sequential single-copy baseline and
+//! the sharded, batched worker pool — swap in a second epoch mid-load,
+//! and report p50/p99 latency and throughput for both.
 //!
-//! Requires `make artifacts` (HLO artifacts + trained weights).
-//! Run: `cargo run --release --example serve_embeddings`
+//! Requires `make artifacts` (HLO artifacts + trained weights) and a
+//! build with the `xla` feature.
+//! Run: `cargo run --release --features xla --example serve_embeddings`
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -18,8 +20,11 @@ use deal::model::{gcn::gcn_forward, ExecOpts, LayerPart, ModelConfig, ModelWeigh
 use deal::partition::PartitionPlan;
 use deal::primitives::{gather_tiles, scatter};
 use deal::runtime::backend_from_config;
+use deal::serve::{
+    serve_workload, serve_workload_pooled, synthetic_workload, EmbeddingServer, PoolOpts,
+    Request, ServePool, ShardedTable, TableCell,
+};
 use deal::sampling::sample_all_layers;
-use deal::serve::{serve_workload, EmbeddingServer, Request};
 use deal::tensor::Matrix;
 use deal::util::rng::Rng;
 use deal::util::{human_bytes, human_secs};
@@ -95,29 +100,47 @@ fn main() -> deal::Result<()> {
     let acc = deal::model::reference::accuracy(&logits, &ds.labels, |r| !ds.train_mask[r]);
     println!("test accuracy from served embeddings: {:.1}%", acc * 100.0);
 
-    // ---- serve a batched request workload
-    let server = EmbeddingServer::new(embeddings);
+    // ---- serve a request workload: sequential baseline first
     let mut rng = Rng::new(7);
     let n = ds.edges.n_nodes;
-    let requests: Vec<Request> = (0..500)
-        .map(|i| {
-            if i % 4 == 0 {
-                Request::Similar {
-                    ids: (0..4).map(|_| rng.next_below(n) as u32).collect(),
-                    k: 10,
-                }
-            } else {
-                Request::Embed((0..32).map(|_| rng.next_below(n) as u32).collect())
-            }
-        })
-        .collect();
+    let requests: Vec<Request> = synthetic_workload(&mut rng, n, 500, false);
+    let table = ShardedTable::from_inference_plan(&plan, &embeddings, 0);
+    let server = EmbeddingServer::new(embeddings);
     let stats = serve_workload(&server, &requests, backend.as_ref())?;
     println!(
-        "served {} requests: p50 {} | p99 {} | throughput {:.0} req/s",
+        "sequential baseline : {} req | p50 {} | p99 {} | {:.0} req/s",
         stats.requests,
         human_secs(stats.latency.p50),
         human_secs(stats.latency.p99),
         stats.throughput
     );
+
+    // ---- sharded batched pool (serving layout = inference layout), with
+    // a second epoch swapped in while the workload is in flight
+    let cell = Arc::new(TableCell::new(table));
+    let opts = PoolOpts { workers: 4, queue_capacity: requests.len(), ..PoolOpts::default() };
+    let pool = ServePool::spawn(Arc::clone(&cell), Arc::clone(&backend), opts);
+    let next_epoch = ShardedTable::from_inference_plan(&plan, &server.embeddings, 0);
+    let (pooled, swapped_at) = std::thread::scope(|scope| {
+        let cell2 = Arc::clone(&cell);
+        let swap = scope.spawn(move || cell2.publish(next_epoch));
+        let pooled = serve_workload_pooled(&pool, &requests);
+        (pooled, swap.join().expect("swap thread panicked"))
+    });
+    let (_responses, pstats) = pooled?;
+    println!(
+        "sharded batched pool: {} req | p50 {} | p99 {} | {:.0} req/s  ({:.2}x)",
+        pstats.requests,
+        human_secs(pstats.latency.p50),
+        human_secs(pstats.latency.p99),
+        pstats.throughput,
+        pstats.throughput / stats.throughput.max(1e-12),
+    );
+    let totals = pool.shutdown();
+    println!(
+        "epoch swap → {} mid-load: served={} rejected={} failed={} batches={} max_batch={}",
+        swapped_at, totals.served, totals.rejected, totals.failed, totals.batches, totals.max_batch_seen,
+    );
+    anyhow::ensure!(totals.failed == 0, "refresh swap dropped {} requests", totals.failed);
     Ok(())
 }

@@ -1,0 +1,157 @@
+//! Serving throughput (EXPERIMENTS.md §E2E): the sharded, batched worker
+//! pool vs the sequential single-copy baseline on the same workload, with
+//! a result-equality audit and a mid-load refresh swap.
+//!
+//! What the speedup comes from, at equal results:
+//! - coalescing: one `rows_s × d @ d × Q` GEMM per shard per batch streams
+//!   the table out of memory once per batch instead of once per request;
+//! - selection: per-query top-k is O(N + k log k) quickselect instead of
+//!   the baseline's O(N log N) full sort;
+//! - parallelism: worker threads serve independent batches concurrently.
+//!
+//! Run: `cargo bench --bench serving_throughput [-- --full]`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use deal::runtime::Native;
+use deal::serve::{
+    serve_workload, serve_workload_pooled, synthetic_workload, EmbeddingServer, PoolOpts,
+    Request, Response, ServePool, ShardedTable, TableCell,
+};
+use deal::tensor::Matrix;
+use deal::util::bench::{BenchArgs, Report, Table};
+use deal::util::human_secs;
+use deal::util::rng::Rng;
+
+/// Responses must match the sequential reference exactly (ids; scores to
+/// float tolerance).
+fn assert_equal_results(server: &EmbeddingServer, reqs: &[Request], got: &[Response]) {
+    assert_eq!(reqs.len(), got.len(), "response count");
+    for (req, g) in reqs.iter().zip(got) {
+        let want = server.handle(req, &Native).expect("reference handle");
+        match (&want, g) {
+            (Response::Embeddings(w), Response::Embeddings(m)) => {
+                assert_eq!(w, m, "embed rows differ");
+            }
+            (Response::Similar(w), Response::Similar(m)) => {
+                assert_eq!(w.len(), m.len());
+                for (wl, ml) in w.iter().zip(m) {
+                    let wi: Vec<u32> = wl.iter().map(|x| x.0).collect();
+                    let mi: Vec<u32> = ml.iter().map(|x| x.0).collect();
+                    assert_eq!(wi, mi, "ranked ids differ");
+                    for (a, b) in wl.iter().zip(ml) {
+                        assert!((a.1 - b.1).abs() <= 1e-5, "score {} vs {}", a.1, b.1);
+                    }
+                }
+            }
+            _ => panic!("response kind mismatch"),
+        }
+    }
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let (n, d, n_reqs) = args.pick((4096usize, 64usize, 400usize), (30_000, 128, 2000));
+    let (shards, workers, max_batch) = (4usize, 4usize, 64usize);
+    let mut report = Report::new("serving_throughput");
+    report.note(format!(
+        "table {} × {} | {} requests | {} shards | {} workers | max_batch {}",
+        n, d, n_reqs, shards, workers, max_batch
+    ));
+
+    let mut rng = Rng::new(0x5EE1);
+    let full = Matrix::random(n, d, 1.0, &mut rng);
+    let server = EmbeddingServer::new(full.clone());
+    let mut table = Table::new(
+        "sequential single-copy vs sharded batched pool (equal results)",
+        &["workload", "seq req/s", "pool req/s", "speedup", "pool p50", "pool p99", "max batch"],
+    );
+
+    let mut similar_speedup = 0.0;
+    for (label, similar_only) in [("similar-only", true), ("mixed 3:1 embed:similar", false)] {
+        let reqs = synthetic_workload(&mut rng, n, n_reqs, similar_only);
+        let seq = serve_workload(&server, &reqs, &Native).expect("sequential workload");
+
+        let cell = Arc::new(TableCell::new(ShardedTable::from_full(&full, shards, 0)));
+        let opts = PoolOpts {
+            workers,
+            queue_capacity: n_reqs,
+            max_batch,
+            start_paused: false,
+        };
+        let pool = ServePool::spawn(Arc::clone(&cell), Arc::new(Native), opts);
+        let (responses, pooled) = serve_workload_pooled(&pool, &reqs).expect("pooled workload");
+        let stats = pool.shutdown();
+        assert_eq!(stats.rejected, 0, "bench queue sized for the whole workload");
+        assert_eq!(stats.failed, 0, "no request may fail");
+        assert_equal_results(&server, &reqs, &responses);
+
+        let speedup = pooled.throughput / seq.throughput.max(1e-12);
+        if similar_only {
+            similar_speedup = speedup;
+        }
+        table.row(&[
+            label.to_string(),
+            format!("{:.0}", seq.throughput),
+            format!("{:.0}", pooled.throughput),
+            format!("{:.2}x", speedup),
+            human_secs(pooled.latency.p50),
+            human_secs(pooled.latency.p99),
+            format!("{}", stats.max_batch_seen),
+        ]);
+    }
+    report.add_table(table);
+
+    // ---- refresh swap under load: publish a new epoch mid-flight; every
+    // in-flight request must complete from a consistent snapshot.
+    let reqs = synthetic_workload(&mut rng, n, n_reqs / 2, false);
+    let cell = Arc::new(TableCell::new(ShardedTable::from_full(&full, shards, 0)));
+    let opts = PoolOpts { workers, queue_capacity: reqs.len(), max_batch, start_paused: false };
+    let pool = ServePool::spawn(Arc::clone(&cell), Arc::new(Native), opts);
+    let mut next = full.clone();
+    next.map_inplace(|v| v * 0.5);
+    let t0 = Instant::now();
+    let (pooled, epoch) = std::thread::scope(|scope| {
+        let c = Arc::clone(&cell);
+        let swap = scope.spawn(move || c.publish(ShardedTable::from_full(&next, shards, 0)));
+        let pooled = serve_workload_pooled(&pool, &reqs);
+        (pooled, swap.join().expect("swap thread"))
+    });
+    let (_responses, rstats) = pooled.expect("workload under refresh");
+    let stats = pool.shutdown();
+    report.note(format!(
+        "refresh swap → epoch {} in-flight over {} requests ({}): served={} failed={} rejected={}",
+        epoch,
+        rstats.requests,
+        human_secs(t0.elapsed().as_secs_f64()),
+        stats.served,
+        stats.failed,
+        stats.rejected,
+    ));
+    assert_eq!(epoch, 1);
+    assert_eq!(stats.failed, 0, "refresh swap must not drop in-flight requests");
+    assert_eq!(stats.rejected, 0);
+
+    report.note(format!(
+        "similar-only speedup {:.2}x (acceptance floor 2.00x)",
+        similar_speedup
+    ));
+    // DEAL_SERVING_BENCH_LAX=1 downgrades the floor to a warning for
+    // smoke runs on contended CI runners; acceptance runs leave it unset.
+    if std::env::var("DEAL_SERVING_BENCH_LAX").is_ok() {
+        if similar_speedup < 2.0 {
+            eprintln!(
+                "[lax] below the 2x acceptance floor: {:.2}x (contended runner?)",
+                similar_speedup
+            );
+        }
+    } else {
+        assert!(
+            similar_speedup >= 2.0,
+            "batched sharded serving below the 2x acceptance floor: {:.2}x",
+            similar_speedup
+        );
+    }
+    report.finish();
+}

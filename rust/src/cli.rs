@@ -20,11 +20,19 @@ const USAGE: &str = "deal — Distributed End-to-End GNN Inference for All Nodes
 
 USAGE:
   deal run [--config FILE] [--set section.key=value]...   run the pipeline
+  deal serve [--config FILE] [--set section.key=value]...
+             [--requests N] [--workers W] [--batch B] [--refresh R]
+                                                          refresh + serve the table
   deal gen-dataset --name NAME [--scale S] --out PATH     write an edge file
   deal gen-labelled [--nodes N] [--classes C] [--degree D]
                     [--dim F] [--seed S] --out DIR        write the SBM study set
   deal datasets                                           list the registry
   deal help                                               this message
+
+`serve` runs the inference pipeline once, shards the refreshed embedding
+table with the inference layout, then drives a synthetic Embed/Similar
+workload through both the sequential baseline and the batched sharded
+worker pool (with R mid-load refresh swaps), reporting p50/p99/throughput.
 
 Config keys (see rust/src/config.rs): dataset.name, dataset.scale,
 cluster.machines, cluster.feature_parts, cluster.bandwidth_gbps,
@@ -45,6 +53,7 @@ pub fn main() {
 pub fn dispatch(args: &[String]) -> Result<()> {
     match args.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("gen-dataset") => cmd_gen_dataset(&args[1..]),
         Some("gen-labelled") => cmd_gen_labelled(&args[1..]),
         Some("datasets") => cmd_datasets(),
@@ -64,7 +73,9 @@ pub fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
         .map(|s| s.as_str())
 }
 
-fn cmd_run(args: &[String]) -> Result<()> {
+/// Build a config from `--config FILE` plus `--set k=v` overrides (shared
+/// by `run` and `serve`).
+fn cfg_from_args(args: &[String]) -> Result<DealConfig> {
     let mut cfg = match flag_value(args, "--config") {
         Some(path) => DealConfig::from_file(std::path::Path::new(path))?,
         None => DealConfig::default(),
@@ -85,6 +96,11 @@ fn cmd_run(args: &[String]) -> Result<()> {
             i += 1;
         }
     }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
     println!(
         "deal run: dataset={} scale={} machines={} (P×M = {:?}) model={} fanout={} mode={} backend={} prep={}",
         cfg.dataset.name,
@@ -117,6 +133,113 @@ fn cmd_run(args: &[String]) -> Result<()> {
     if let Some(e) = &report.embeddings {
         println!("  embeddings: {} × {}", e.rows, e.cols);
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    use crate::runtime::backend_from_config;
+    use crate::serve::{
+        serve_workload, serve_workload_pooled, synthetic_workload, EmbeddingServer, PoolOpts,
+        Refresher, ServePool, TableCell,
+    };
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    let cfg = cfg_from_args(args)?;
+    let requests: usize = flag_value(args, "--requests").unwrap_or("400").parse()?;
+    let workers: usize = flag_value(args, "--workers").unwrap_or("4").parse()?;
+    let max_batch: usize = flag_value(args, "--batch").unwrap_or("64").parse()?;
+    let refreshes: usize = flag_value(args, "--refresh").unwrap_or("1").parse()?;
+    anyhow::ensure!(requests > 0, "--requests must be > 0");
+    anyhow::ensure!(workers > 0, "--workers must be > 0");
+    anyhow::ensure!(max_batch > 0, "--batch must be > 0");
+
+    println!(
+        "deal serve: dataset={} scale={} machines={} backend={} workers={} max_batch={}",
+        cfg.dataset.name, cfg.dataset.scale, cfg.cluster.machines, cfg.exec.backend, workers, max_batch,
+    );
+
+    // ---- epoch 0: refresh the table through the inference pipeline
+    let pipeline = Pipeline::new(cfg.clone());
+    let report = pipeline.run()?;
+    let embeddings = report
+        .embeddings
+        .clone()
+        .ok_or_else(|| anyhow::anyhow!("pipeline kept no embeddings"))?;
+    let table = report.serving_table().expect("embeddings kept");
+    println!(
+        "refreshed {} × {} embeddings into {} shards (pipeline sim {})",
+        table.n_nodes(),
+        table.dim(),
+        table.num_shards(),
+        human_secs(report.stages.total()),
+    );
+    let cell = Arc::new(TableCell::new(table));
+    let backend = backend_from_config(&cfg.exec.backend, &cfg.artifacts_dir())?;
+
+    // ---- synthetic workload: 3/4 Embed(32), 1/4 Similar(4, k=10)
+    let n = embeddings.rows;
+    let mut rng = Rng::new(cfg.exec.seed ^ 0x5E55);
+    let reqs = synthetic_workload(&mut rng, n, requests, false);
+
+    // ---- sequential single-copy baseline
+    let server = EmbeddingServer::new(embeddings);
+    let base = serve_workload(&server, &reqs, backend.as_ref())?;
+    println!(
+        "sequential baseline : {} req | p50 {} | p99 {} | {:.0} req/s",
+        base.requests,
+        human_secs(base.latency.p50),
+        human_secs(base.latency.p99),
+        base.throughput,
+    );
+
+    // ---- batched sharded pool, with mid-load refresh swaps
+    let opts = PoolOpts { workers, queue_capacity: requests, max_batch, start_paused: false };
+    let pool = ServePool::spawn(Arc::clone(&cell), Arc::clone(&backend), opts);
+    let refresher = Refresher::new(pipeline);
+    let (pooled, refresh_reports) = std::thread::scope(|scope| {
+        let handle = (refreshes > 0).then(|| {
+            let cell = Arc::clone(&cell);
+            let refresher = &refresher;
+            scope.spawn(move || {
+                (0..refreshes).map(|_| refresher.refresh(&cell)).collect::<Vec<_>>()
+            })
+        });
+        let pooled = serve_workload_pooled(&pool, &reqs);
+        let reports = handle.map(|h| h.join().expect("refresher panicked")).unwrap_or_default();
+        (pooled, reports)
+    });
+    let (_responses, stats) = pooled?;
+    println!(
+        "sharded batched pool: {} req | p50 {} | p99 {} | {:.0} req/s  ({:.2}x)",
+        stats.requests,
+        human_secs(stats.latency.p50),
+        human_secs(stats.latency.p99),
+        stats.throughput,
+        stats.throughput / base.throughput.max(1e-12),
+    );
+    for rep in refresh_reports {
+        let rep = rep?;
+        println!(
+            "refresh swap → epoch {} ({} × {}, sim {}, {} over the wire) with zero dropped requests",
+            rep.epoch,
+            rep.nodes,
+            rep.dim,
+            human_secs(rep.sim_secs),
+            human_bytes(rep.net_bytes),
+        );
+    }
+    let final_stats = pool.shutdown();
+    println!(
+        "pool totals: served={} rejected={} failed={} batches={} max_batch={} coalesced_similar={}",
+        final_stats.served,
+        final_stats.rejected,
+        final_stats.failed,
+        final_stats.batches,
+        final_stats.max_batch_seen,
+        final_stats.coalesced_similar,
+    );
+    anyhow::ensure!(final_stats.failed == 0, "{} requests failed", final_stats.failed);
     Ok(())
 }
 
@@ -255,6 +378,31 @@ mod tests {
         assert!(dispatch(&["bogus".into()]).is_err());
         assert!(dispatch(&["help".into()]).is_ok());
         assert!(dispatch(&[]).is_ok());
+    }
+
+    #[test]
+    fn serve_smoke() {
+        // tiny end-to-end: refresh a 256-node table, serve 40 requests
+        // through the pool with one mid-load refresh swap
+        let args: Vec<String> = [
+            "serve",
+            "--requests",
+            "40",
+            "--workers",
+            "2",
+            "--refresh",
+            "1",
+            "--set",
+            "dataset.scale=0.00390625",
+            "--set",
+            "model.layers=2",
+            "--set",
+            "model.fanout=5",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        dispatch(&args).unwrap();
     }
 
     #[test]

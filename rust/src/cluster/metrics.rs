@@ -64,6 +64,12 @@ impl ClusterReport {
         self.machines.iter().map(|m| m.bytes_recv).max().unwrap_or(0)
     }
 
+    /// Total messages sent over the network (the per-refresh message
+    /// count `serve::RefreshReport` surfaces).
+    pub fn total_msgs(&self) -> u64 {
+        self.machines.iter().map(|m| m.msgs_sent).sum()
+    }
+
     /// Maximum peak tracked memory on any machine.
     pub fn max_peak_mem(&self) -> u64 {
         self.peak_mem.iter().copied().max().unwrap_or(0)
@@ -85,9 +91,10 @@ impl ClusterReport {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "makespan={} comm={} compute(max)={} wait(max)={} peak_mem(max)={}",
+            "makespan={} comm={} msgs={} compute(max)={} wait(max)={} peak_mem(max)={}",
             human_secs(self.makespan()),
             human_bytes(self.total_bytes()),
+            self.total_msgs(),
             human_secs(
                 self.machines
                     .iter()
@@ -146,6 +153,14 @@ mod tests {
         assert_eq!(a.peak_mem, vec![100, 80]);
         assert_eq!(a.machines[0].bytes_sent, 12);
         assert_eq!(a.makespan(), 4.0);
+    }
+
+    #[test]
+    fn total_msgs_sums_sends() {
+        let mut r = ClusterReport::new(2);
+        r.machines[0].msgs_sent = 3;
+        r.machines[1].msgs_sent = 4;
+        assert_eq!(r.total_msgs(), 7);
     }
 
     #[test]

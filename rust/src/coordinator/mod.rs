@@ -69,6 +69,17 @@ pub struct RunReport {
     pub max_peak_mem: u64,
 }
 
+impl RunReport {
+    /// Shard the refreshed embeddings for the serving tier, reusing this
+    /// run's partition row ownership (`PartitionPlan::serving`). `None`
+    /// when the run was configured with `keep_embeddings = false`.
+    pub fn serving_table(&self) -> Option<crate::serve::ShardedTable> {
+        self.embeddings
+            .as_ref()
+            .map(|e| crate::serve::ShardedTable::from_inference_plan(&self.plan, e, 0))
+    }
+}
+
 /// The end-to-end pipeline.
 pub struct Pipeline {
     pub cfg: DealConfig,
@@ -524,5 +535,14 @@ mod tests {
         let report = Pipeline::new(small_cfg("scan", "gcn")).run().unwrap();
         let frac = report.stages.preprocessing_fraction();
         assert!(frac > 0.0 && frac < 1.0, "frac={}", frac);
+    }
+
+    #[test]
+    fn run_report_yields_serving_table() {
+        let report = Pipeline::new(small_cfg("scan", "gcn")).run().unwrap();
+        let table = report.serving_table().expect("embeddings kept");
+        assert_eq!(table.n_nodes(), 256);
+        assert_eq!(table.num_shards(), report.plan.p);
+        assert_eq!(table.to_full(), *report.embeddings.as_ref().unwrap());
     }
 }

@@ -111,6 +111,16 @@ impl PartitionPlan {
         (0..self.p).map(|p_idx| self.rank_of(p_idx, m_idx)).collect()
     }
 
+    /// The serving-tier layout derived from this inference plan: the same
+    /// `P` contiguous row ranges (identical `node_bounds`, so the machine
+    /// that computed a node's embedding owns serving it), a single feature
+    /// part of the embedding width `out_dim` (the GNN output width usually
+    /// differs from the input feature width). Used by
+    /// `serve::ShardedTable::from_inference_plan`.
+    pub fn serving(&self, out_dim: usize) -> PartitionPlan {
+        PartitionPlan::new(self.n_nodes, out_dim.max(1), self.p, 1)
+    }
+
     /// A plan with the same machines reinterpreted with a different (p, m)
     /// factorization — Fig. 18 sweeps these configurations.
     pub fn refactor(&self, p: usize, m: usize) -> PartitionPlan {
@@ -183,6 +193,19 @@ mod tests {
     #[should_panic(expected = "must keep machine count")]
     fn refactor_rejects_different_world() {
         PartitionPlan::new(100, 64, 4, 2).refactor(3, 2);
+    }
+
+    #[test]
+    fn serving_plan_keeps_row_ownership() {
+        let plan = PartitionPlan::new(100, 64, 4, 2);
+        let s = plan.serving(16);
+        assert_eq!(s.p, 4);
+        assert_eq!(s.m, 1);
+        assert_eq!(s.feature_dim, 16);
+        assert_eq!(s.node_bounds, plan.node_bounds);
+        s.validate().unwrap();
+        // zero-width embeddings still produce a valid layout
+        assert_eq!(plan.serving(0).feature_dim, 1);
     }
 
     #[test]

@@ -98,14 +98,22 @@ impl Backend for Native {
     }
 }
 
-/// Select a backend by name: `native`, or `xla` (requires built artifacts).
+/// Select a backend by name: `native`, or `xla` (requires built artifacts
+/// and a binary compiled with the `xla` cargo feature).
 pub fn backend_from_config(name: &str, artifacts_dir: &std::path::Path) -> Result<std::sync::Arc<dyn Backend>> {
     match name {
         "native" => Ok(std::sync::Arc::new(Native)),
+        #[cfg(feature = "xla")]
         "xla" => {
             let svc = XlaService::start(artifacts_dir)?;
             Ok(std::sync::Arc::new(svc))
         }
+        #[cfg(not(feature = "xla"))]
+        "xla" => anyhow::bail!(
+            "backend 'xla' needs a build with `--features xla` (artifacts dir: {}); \
+             see DESIGN.md §Runtime",
+            artifacts_dir.display()
+        ),
         other => anyhow::bail!("unknown backend '{}' (native|xla)", other),
     }
 }

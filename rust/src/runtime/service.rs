@@ -139,6 +139,25 @@ impl Clone for XlaHandle {
     }
 }
 
+/// Without the `xla` cargo feature there is no PJRT client to own; the
+/// service thread still runs so the channel protocol is identical, but
+/// every job is answered with an error (DESIGN.md §Runtime). The `native`
+/// backend is unaffected.
+#[cfg(not(feature = "xla"))]
+fn service_main(_manifest: Vec<ManifestEntry>, rx: Receiver<Job>) {
+    for job in rx {
+        match job {
+            Job::Run { reply, .. } => {
+                let _ = reply.send(Err(anyhow::anyhow!(
+                    "this build has no XLA support — rebuild with `cargo build --features xla`"
+                )));
+            }
+            Job::Shutdown => break,
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
 fn service_main(manifest: Vec<ManifestEntry>, rx: Receiver<Job>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
@@ -167,6 +186,7 @@ fn service_main(manifest: Vec<ManifestEntry>, rx: Receiver<Job>) {
     }
 }
 
+#[cfg(feature = "xla")]
 fn run_one(
     client: &xla::PjRtClient,
     manifest: &[ManifestEntry],

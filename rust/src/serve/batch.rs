@@ -1,0 +1,208 @@
+//! Request batching / coalescing (DESIGN.md §Serving).
+//!
+//! Concurrent `Similar` queries are merged into **one GEMM per shard**:
+//! the union of query ids (deduplicated, first-seen order) becomes a
+//! single `d × Q` right-hand side, and each shard scores all `Q` queries
+//! in one `rows_s × d @ d × Q` matmul through `runtime::Backend` — so an
+//! AOT-compiled artifact sees full tiles instead of per-request slivers,
+//! and the table is streamed from memory once per batch instead of once
+//! per request. Top-k selection then scatter-gathers per-query results
+//! back to the originating requests.
+//!
+//! Result contract: for every request in the batch the response is
+//! identical to the sequential `EmbeddingServer::handle` path — same
+//! candidate scores (the dot products are computed row-by-row either
+//! way), same ordering (descending score, ties broken by ascending node
+//! id, exactly what a stable descending sort over id-ordered candidates
+//! produces), same self-exclusion.
+
+use std::cmp::Ordering;
+
+use crate::runtime::Backend;
+use crate::tensor::Matrix;
+use crate::Result;
+
+use super::shard::ShardedTable;
+
+/// Ranking order shared by the sequential and batched paths: descending
+/// score, ascending node id on ties.
+#[inline]
+fn rank_cmp(a: &(u32, f32), b: &(u32, f32)) -> Ordering {
+    b.1.partial_cmp(&a.1)
+        .unwrap_or(Ordering::Equal)
+        .then_with(|| a.0.cmp(&b.0))
+}
+
+/// Keep the `k` best candidates under [`rank_cmp`], sorted. `O(n + k log
+/// k)` via quickselect — the sequential baseline's full sort is `O(n log
+/// n)`, so batched serving is cheaper even at batch size 1.
+pub fn top_k(mut cands: Vec<(u32, f32)>, k: usize) -> Vec<(u32, f32)> {
+    if k == 0 {
+        return Vec::new();
+    }
+    if cands.len() > k {
+        cands.select_nth_unstable_by(k - 1, rank_cmp);
+        cands.truncate(k);
+    }
+    cands.sort_by(rank_cmp);
+    cands
+}
+
+/// One coalesced `Similar` group: the queries of many requests, merged.
+pub struct SimilarBatch {
+    /// Deduplicated query node ids, first-seen order.
+    pub qids: Vec<u32>,
+    /// For each original (request, query) pair: the column in `qids`.
+    cols: Vec<Vec<usize>>,
+    /// Per-request `k`.
+    ks: Vec<usize>,
+}
+
+impl SimilarBatch {
+    /// Coalesce `(ids, k)` query lists into one deduplicated batch.
+    pub fn coalesce(requests: &[(&[u32], usize)]) -> SimilarBatch {
+        let mut qids: Vec<u32> = Vec::new();
+        let mut col_of = std::collections::HashMap::new();
+        let mut cols = Vec::with_capacity(requests.len());
+        let mut ks = Vec::with_capacity(requests.len());
+        for (ids, k) in requests {
+            let mut req_cols = Vec::with_capacity(ids.len());
+            for &v in ids.iter() {
+                let c = *col_of.entry(v).or_insert_with(|| {
+                    qids.push(v);
+                    qids.len() - 1
+                });
+                req_cols.push(c);
+            }
+            cols.push(req_cols);
+            ks.push(*k);
+        }
+        SimilarBatch { qids, cols, ks }
+    }
+
+    /// Number of coalesced requests.
+    pub fn len(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty()
+    }
+
+    /// Execute the batch: one GEMM per shard over all queries, then
+    /// per-request top-k. Returns, per request, the per-query ranked
+    /// `(node, score)` lists.
+    pub fn execute(
+        &self,
+        table: &ShardedTable,
+        backend: &dyn Backend,
+    ) -> Result<Vec<Vec<Vec<(u32, f32)>>>> {
+        if self.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Q × d query block gathered from the owning shards, then d × Q.
+        let queries = table.try_gather(&self.qids)?;
+        let qt = queries.transpose();
+        // One full-tile GEMM per shard: rows_s × Q score panels.
+        let mut panels: Vec<Matrix> = Vec::with_capacity(table.num_shards());
+        for s in 0..table.num_shards() {
+            panels.push(backend.gemm(table.shard(s), &qt)?);
+        }
+        // Per-request scatter-gather: select top-k per query column.
+        let k_max = self.ks.iter().copied().max().unwrap_or(0);
+        let mut column_top: Vec<Option<Vec<(u32, f32)>>> = vec![None; self.qids.len()];
+        let mut out = Vec::with_capacity(self.len());
+        for (req_cols, &k) in self.cols.iter().zip(&self.ks) {
+            let mut req_out = Vec::with_capacity(req_cols.len());
+            for &c in req_cols {
+                // Cache the k_max ranking per distinct query column so a
+                // query repeated across coalesced requests is selected once.
+                if column_top[c].is_none() {
+                    let qid = self.qids[c];
+                    let mut cands = Vec::with_capacity(table.n_nodes().saturating_sub(1));
+                    for s in 0..table.num_shards() {
+                        let (lo, _) = table.shard_range(s);
+                        let panel = &panels[s];
+                        for r in 0..panel.rows {
+                            let v = (lo + r) as u32;
+                            if v != qid {
+                                cands.push((v, panel.get(r, c)));
+                            }
+                        }
+                    }
+                    column_top[c] = Some(top_k(cands, k_max));
+                }
+                let ranked = column_top[c].as_ref().unwrap();
+                req_out.push(ranked[..k.min(ranked.len())].to_vec());
+            }
+            out.push(req_out);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Native;
+    use crate::serve::{EmbeddingServer, Request, Response};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn top_k_orders_and_breaks_ties_by_id() {
+        let cands = vec![(3u32, 1.0f32), (1, 2.0), (7, 2.0), (0, 0.5), (5, 2.0)];
+        let got = top_k(cands, 3);
+        assert_eq!(got, vec![(1, 2.0), (5, 2.0), (7, 2.0)]);
+        assert_eq!(top_k(vec![(1, 1.0)], 0), vec![]);
+        assert_eq!(top_k(vec![(1, 1.0)], 5), vec![(1, 1.0)]);
+    }
+
+    #[test]
+    fn coalesce_dedups_queries() {
+        let a: Vec<u32> = vec![4, 2, 4];
+        let b: Vec<u32> = vec![2, 9];
+        let batch = SimilarBatch::coalesce(&[(&a, 3), (&b, 5)]);
+        assert_eq!(batch.qids, vec![4, 2, 9]);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch.ks, vec![3, 5]);
+        assert_eq!(batch.cols[0], vec![0, 1, 0]);
+        assert_eq!(batch.cols[1], vec![1, 2]);
+    }
+
+    #[test]
+    fn batched_matches_sequential_handle() {
+        let mut rng = Rng::new(9);
+        let full = Matrix::random(60, 8, 1.0, &mut rng);
+        let server = EmbeddingServer::new(full.clone());
+        let table = ShardedTable::from_full(&full, 3, 0);
+
+        let reqs: Vec<(Vec<u32>, usize)> = vec![
+            (vec![0, 5, 17], 4),
+            (vec![5, 59], 7),
+            (vec![30], 1),
+        ];
+        let views: Vec<(&[u32], usize)> =
+            reqs.iter().map(|(ids, k)| (ids.as_slice(), *k)).collect();
+        let batch = SimilarBatch::coalesce(&views);
+        let got = batch.execute(&table, &Native).unwrap();
+
+        for ((ids, k), got_req) in reqs.iter().zip(&got) {
+            let resp = server
+                .handle(&Request::Similar { ids: ids.clone(), k: *k }, &Native)
+                .unwrap();
+            let want = match resp {
+                Response::Similar(lists) => lists,
+                _ => panic!("wrong response"),
+            };
+            assert_eq!(got_req.len(), want.len());
+            for (g, w) in got_req.iter().zip(&want) {
+                let g_ids: Vec<u32> = g.iter().map(|&(v, _)| v).collect();
+                let w_ids: Vec<u32> = w.iter().map(|&(v, _)| v).collect();
+                assert_eq!(g_ids, w_ids);
+                for (&(_, gs), &(_, ws)) in g.iter().zip(w) {
+                    assert!((gs - ws).abs() <= 1e-6, "score mismatch {} vs {}", gs, ws);
+                }
+            }
+        }
+    }
+}

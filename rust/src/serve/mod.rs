@@ -1,16 +1,38 @@
-//! Embedding serving front end — the downstream consumer of end-to-end
+//! Embedding-serving subsystem — the downstream consumer of end-to-end
 //! all-node inference (paper §1: recommendation / fraud detection serve
-//! the daily-refreshed embedding table).
+//! the daily-refreshed embedding table). See DESIGN.md §Serving.
 //!
-//! `EmbeddingServer` holds the refreshed all-node embedding matrix and
-//! answers two request kinds:
+//! Two request kinds against the table:
 //! - `Embed`: fetch embeddings for a batch of node ids;
 //! - `Similar`: top-k nearest nodes by inner product, computed as a GEMM
 //!   against the table — routed through `runtime::Backend`, so with the
 //!   XLA backend the scoring matmul runs inside an AOT-compiled artifact.
 //!
-//! `examples/serve_embeddings.rs` drives this after a full pipeline run
-//! and reports p50/p99 latency + throughput (EXPERIMENTS.md §E2E).
+//! Two serving paths:
+//! - [`EmbeddingServer`] — the single-copy, synchronous reference path
+//!   (one request, one GEMM). Kept as the correctness oracle and the
+//!   baseline the `serving_throughput` bench measures against.
+//! - [`ServePool`] over a [`ShardedTable`] in a [`TableCell`] — the
+//!   production-shaped path: the table is 1-D row-sharded with the
+//!   inference partition layout ([`shard`]), concurrent `Similar`
+//!   queries coalesce into one GEMM per shard ([`batch`]), a bounded
+//!   queue + worker pool sheds overload and reports p50/p99/throughput
+//!   ([`pool`]), and `coordinator::Pipeline` refreshes publish new
+//!   epochs without dropping in-flight requests ([`refresh`]).
+//!
+//! `examples/serve_embeddings.rs` drives both after a full pipeline run
+//! (EXPERIMENTS.md §E2E); `benches/serving_throughput.rs` measures the
+//! batched/sharded speedup.
+
+pub mod batch;
+pub mod pool;
+pub mod refresh;
+pub mod shard;
+
+pub use batch::{top_k, SimilarBatch};
+pub use pool::{PoolOpts, PoolStats, ServePool, StatsMark, Ticket};
+pub use refresh::{RefreshReport, Refresher, TableCell};
+pub use shard::ShardedTable;
 
 use std::time::Instant;
 
@@ -36,7 +58,7 @@ pub enum Response {
     Similar(Vec<Vec<(u32, f32)>>),
 }
 
-/// The serving table.
+/// The single-copy reference serving table.
 pub struct EmbeddingServer {
     pub embeddings: Matrix,
 }
@@ -79,6 +101,30 @@ impl EmbeddingServer {
     }
 }
 
+/// The canonical synthetic serving workload shared by `deal serve`, the
+/// `serving_throughput` bench, and the serving example: a 3:1 mix of
+/// `Embed` (32 ids) and `Similar` (4 ids, k = 10) over `n` nodes;
+/// `similar_only` keeps just the GEMM-bound requests.
+pub fn synthetic_workload(
+    rng: &mut crate::util::rng::Rng,
+    n: usize,
+    count: usize,
+    similar_only: bool,
+) -> Vec<Request> {
+    (0..count)
+        .map(|i| {
+            if similar_only || i % 4 == 0 {
+                Request::Similar {
+                    ids: (0..4).map(|_| rng.next_below(n) as u32).collect(),
+                    k: 10,
+                }
+            } else {
+                Request::Embed((0..32).map(|_| rng.next_below(n) as u32).collect())
+            }
+        })
+        .collect()
+}
+
 /// Serving statistics.
 #[derive(Debug)]
 pub struct ServeStats {
@@ -89,7 +135,7 @@ pub struct ServeStats {
 }
 
 /// Run a request workload sequentially (one serving thread), collecting
-/// per-request latency and overall throughput.
+/// per-request latency and overall throughput — the baseline path.
 pub fn serve_workload(
     server: &EmbeddingServer,
     requests: &[Request],
@@ -108,6 +154,36 @@ pub fn serve_workload(
         latency: Summary::of(&latencies).expect("no requests"),
         throughput: requests.len() as f64 / total.max(1e-12),
     })
+}
+
+/// Submit a whole workload to a pool (admission-controlled), wait for
+/// every accepted response, and fold the outcome into [`ServeStats`] plus
+/// the responses (accepted requests only, in submission order).
+pub fn serve_workload_pooled(
+    pool: &ServePool,
+    requests: &[Request],
+) -> Result<(Vec<Response>, ServeStats)> {
+    let mark = pool.mark();
+    let t0 = Instant::now();
+    let tickets: Vec<Option<Ticket>> =
+        requests.iter().map(|r| pool.submit(r.clone()).ok()).collect();
+    let mut responses = Vec::with_capacity(requests.len());
+    for t in tickets.into_iter().flatten() {
+        responses.push(t.wait()?);
+    }
+    let total = t0.elapsed().as_secs_f64();
+    // only this workload's counters, even on a reused pool
+    let stats = pool.stats_since(&mark);
+    Ok((
+        responses,
+        ServeStats {
+            requests: stats.served as usize,
+            latency: stats
+                .latency
+                .ok_or_else(|| anyhow::anyhow!("no requests completed"))?,
+            throughput: stats.served as f64 / total.max(1e-12),
+        },
+    ))
 }
 
 #[cfg(test)]
@@ -168,5 +244,26 @@ mod tests {
         assert_eq!(stats.requests, 3);
         assert!(stats.throughput > 0.0);
         assert!(stats.latency.p99 >= stats.latency.p50);
+    }
+
+    #[test]
+    fn pooled_workload_matches_request_count() {
+        use std::sync::Arc;
+        let s = server();
+        let cell = Arc::new(TableCell::new(ShardedTable::from_full(&s.embeddings, 2, 0)));
+        let pool = ServePool::spawn(cell, Arc::new(Native), PoolOpts::default());
+        let reqs = vec![
+            Request::Embed(vec![1]),
+            Request::Similar { ids: vec![2], k: 2 },
+            Request::Embed(vec![0, 1, 2]),
+        ];
+        let (responses, stats) = serve_workload_pooled(&pool, &reqs).unwrap();
+        assert_eq!(responses.len(), 3);
+        assert_eq!(stats.requests, 3);
+        assert!(stats.throughput > 0.0);
+        // a reused pool attributes only the new workload, not the lifetime
+        let (r2, s2) = serve_workload_pooled(&pool, &reqs).unwrap();
+        assert_eq!(r2.len(), 3);
+        assert_eq!(s2.requests, 3);
     }
 }

@@ -1,0 +1,518 @@
+//! Multi-threaded serving front end (DESIGN.md §Serving).
+//!
+//! Requests enter a **bounded** queue (`PoolOpts::queue_capacity`);
+//! `try_send` admission control sheds load instead of building unbounded
+//! latency. Worker threads pop the queue one at a time; the popping
+//! worker greedily drains whatever else is already queued (up to
+//! `max_batch`), so batches form *exactly when there is queue depth*:
+//! under light load every request is its own batch (no added latency),
+//! under heavy load `Similar` queries coalesce into full-tile GEMMs
+//! (`batch::SimilarBatch`). Each batch pins one epoch snapshot of the
+//! table (`refresh::TableCell::load`), which is what makes mid-flight
+//! refresh swaps tear-free.
+
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::runtime::Backend;
+use crate::util::stats::Summary;
+use crate::Result;
+
+use super::batch::SimilarBatch;
+use super::refresh::TableCell;
+use super::{Request, Response};
+
+/// Worker-pool configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolOpts {
+    /// Worker threads answering requests.
+    pub workers: usize,
+    /// Bounded front-end queue; a full queue rejects (`submit` errors).
+    pub queue_capacity: usize,
+    /// Maximum requests coalesced into one batch.
+    pub max_batch: usize,
+    /// Start with workers gated; call `ServePool::resume` to begin
+    /// draining (deterministic tests, warm-up control).
+    pub start_paused: bool,
+}
+
+impl Default for PoolOpts {
+    fn default() -> Self {
+        PoolOpts { workers: 4, queue_capacity: 1024, max_batch: 64, start_paused: false }
+    }
+}
+
+struct Job {
+    req: Request,
+    reply: Sender<Result<Response>>,
+    enqueued: Instant,
+}
+
+/// In-flight response handle; `wait` blocks for the worker's reply.
+pub struct Ticket {
+    rx: Receiver<Result<Response>>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("serving pool dropped the request"))?
+    }
+}
+
+#[derive(Default)]
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn wait_open(&self) {
+        let mut g = self.open.lock().unwrap();
+        while !*g {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn open(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Hard cap on retained latency samples: a long-lived pool must not grow
+/// memory without bound, and `Summary::of` cost stays bounded. Once hit,
+/// percentiles describe the first `LATENCY_CAP` replies of the pool's
+/// lifetime; counters keep counting.
+const LATENCY_CAP: usize = 1 << 20;
+
+#[derive(Default)]
+struct MetricsInner {
+    served: u64,
+    failed: u64,
+    batches: u64,
+    max_batch_seen: u64,
+    coalesced_similar: u64,
+    latencies: Vec<f64>,
+}
+
+/// Counter snapshot delimiting a workload on a long-lived pool (see
+/// `ServePool::mark` / `stats_since`).
+#[derive(Clone, Copy, Debug)]
+pub struct StatsMark {
+    served: u64,
+    failed: u64,
+    rejected: u64,
+    batches: u64,
+    coalesced_similar: u64,
+    latency_idx: usize,
+}
+
+/// Serving statistics snapshot.
+#[derive(Clone, Debug)]
+pub struct PoolStats {
+    pub served: u64,
+    /// Requests shed by admission control (queue full).
+    pub rejected: u64,
+    /// Requests answered with an error.
+    pub failed: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Largest coalesced batch observed.
+    pub max_batch_seen: u64,
+    /// `Similar` requests that shared a batch with at least one other.
+    pub coalesced_similar: u64,
+    /// Enqueue-to-reply latency summary (None before any reply).
+    pub latency: Option<Summary>,
+}
+
+struct Shared {
+    table: Arc<TableCell>,
+    backend: Arc<dyn Backend>,
+    queue: Mutex<Receiver<Job>>,
+    gate: Gate,
+    metrics: Mutex<MetricsInner>,
+    rejected: AtomicU64,
+    max_batch: usize,
+}
+
+/// The serving worker pool.
+pub struct ServePool {
+    tx: Option<SyncSender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    shared: Arc<Shared>,
+}
+
+impl ServePool {
+    /// Spawn `opts.workers` threads serving the table in `cell` through
+    /// `backend`.
+    pub fn spawn(cell: Arc<TableCell>, backend: Arc<dyn Backend>, opts: PoolOpts) -> ServePool {
+        assert!(opts.workers >= 1, "pool needs at least one worker");
+        assert!(opts.queue_capacity >= 1, "queue capacity must be >= 1");
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Job>(opts.queue_capacity);
+        let shared = Arc::new(Shared {
+            table: cell,
+            backend,
+            queue: Mutex::new(rx),
+            gate: Gate::default(),
+            metrics: Mutex::new(MetricsInner::default()),
+            rejected: AtomicU64::new(0),
+            max_batch: opts.max_batch.max(1),
+        });
+        if !opts.start_paused {
+            shared.gate.open();
+        }
+        let workers = (0..opts.workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{}", i))
+                    .spawn(move || worker_main(&shared))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        ServePool { tx: Some(tx), workers, shared }
+    }
+
+    /// Open the gate of a `start_paused` pool.
+    pub fn resume(&self) {
+        self.shared.gate.open();
+    }
+
+    /// Non-blocking admission: validate, then enqueue or reject.
+    pub fn submit(&self, req: Request) -> Result<Ticket> {
+        let table = self.shared.table.load();
+        let n = table.n_nodes();
+        let ids = match &req {
+            Request::Embed(ids) => ids,
+            Request::Similar { ids, .. } => ids,
+        };
+        if let Some(&bad) = ids.iter().find(|&&v| v as usize >= n) {
+            self.shared.rejected.fetch_add(1, AtomicOrdering::Relaxed);
+            anyhow::bail!("rejected: node id {} out of range ({} nodes)", bad, n);
+        }
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let job = Job { req, reply: reply_tx, enqueued: Instant::now() };
+        match self.tx.as_ref().expect("pool is shut down").try_send(job) {
+            Ok(()) => Ok(Ticket { rx: reply_rx }),
+            Err(TrySendError::Full(_)) => {
+                self.shared.rejected.fetch_add(1, AtomicOrdering::Relaxed);
+                anyhow::bail!("rejected: serving queue full")
+            }
+            Err(TrySendError::Disconnected(_)) => anyhow::bail!("serving pool is down"),
+        }
+    }
+
+    /// Blocking call: submit and wait for the response.
+    pub fn call(&self, req: Request) -> Result<Response> {
+        self.submit(req)?.wait()
+    }
+
+    /// Current table epoch (what a request submitted now would see).
+    pub fn epoch(&self) -> u64 {
+        self.shared.table.load().epoch()
+    }
+
+    /// Statistics snapshot (cumulative over the pool's lifetime).
+    pub fn stats(&self) -> PoolStats {
+        self.stats_from(0, 0, 0, 0, 0, 0)
+    }
+
+    /// Mark the current counters so a later `stats_since` attributes only
+    /// the work in between (per-workload stats on a long-lived pool).
+    pub fn mark(&self) -> StatsMark {
+        let m = self.shared.metrics.lock().unwrap();
+        StatsMark {
+            served: m.served,
+            failed: m.failed,
+            rejected: self.shared.rejected.load(AtomicOrdering::Relaxed),
+            batches: m.batches,
+            coalesced_similar: m.coalesced_similar,
+            latency_idx: m.latencies.len(),
+        }
+    }
+
+    /// Statistics accumulated since `mark`. Latency covers exactly the
+    /// replies recorded after the mark (interleaved foreign clients, if
+    /// any, are attributed too — marks delimit time, not requests).
+    /// `max_batch_seen` remains the pool-lifetime maximum (a windowed max
+    /// is not reconstructible from counters).
+    pub fn stats_since(&self, mark: &StatsMark) -> PoolStats {
+        self.stats_from(
+            mark.served,
+            mark.rejected,
+            mark.failed,
+            mark.batches,
+            mark.coalesced_similar,
+            mark.latency_idx,
+        )
+    }
+
+    fn stats_from(
+        &self,
+        served0: u64,
+        rejected0: u64,
+        failed0: u64,
+        batches0: u64,
+        coalesced0: u64,
+        latency_idx: usize,
+    ) -> PoolStats {
+        // Copy the window out under the lock; sort/scan outside it so a
+        // stats poll never stalls worker batch accounting.
+        let (served, failed, batches, max_batch_seen, coalesced, lats) = {
+            let m = self.shared.metrics.lock().unwrap();
+            (
+                m.served - served0,
+                m.failed - failed0,
+                m.batches - batches0,
+                m.max_batch_seen,
+                m.coalesced_similar - coalesced0,
+                m.latencies[latency_idx.min(m.latencies.len())..].to_vec(),
+            )
+        };
+        PoolStats {
+            served,
+            rejected: self.shared.rejected.load(AtomicOrdering::Relaxed) - rejected0,
+            failed,
+            batches,
+            max_batch_seen,
+            coalesced_similar: coalesced,
+            latency: Summary::of(&lats),
+        }
+    }
+
+    /// Drain and stop: close the queue, join workers, return final stats.
+    pub fn shutdown(mut self) -> PoolStats {
+        self.stop();
+        self.stats()
+    }
+
+    fn stop(&mut self) {
+        // Closing the sender makes worker `recv` fail once the queue is
+        // empty; open the gate so paused workers can observe it.
+        self.tx.take();
+        self.shared.gate.open();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServePool {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn worker_main(shared: &Shared) {
+    loop {
+        shared.gate.wait_open();
+        // One worker at a time forms a batch: pop one job (blocking),
+        // then drain whatever else is already queued.
+        let batch: Vec<Job> = {
+            let rx = match shared.queue.lock() {
+                Ok(rx) => rx,
+                Err(_) => return, // a sibling worker panicked
+            };
+            let first = match rx.recv() {
+                Ok(j) => j,
+                Err(_) => return, // queue closed and empty: shutdown
+            };
+            let mut batch = vec![first];
+            while batch.len() < shared.max_batch {
+                match rx.try_recv() {
+                    Ok(j) => batch.push(j),
+                    Err(_) => break,
+                }
+            }
+            batch
+        };
+        serve_batch(shared, batch);
+    }
+}
+
+/// Answer one coalesced batch against a single epoch snapshot.
+fn serve_batch(shared: &Shared, batch: Vec<Job>) {
+    let table = shared.table.load(); // pinned for the whole batch
+    let n = table.n_nodes();
+
+    // Re-check admission against the pinned snapshot: ids validated at
+    // submit time may be stale if a refresh changed the node count. Such
+    // requests are *rejections* (the client raced a shrink), not serving
+    // failures — the zero-failures refresh guarantee stays intact.
+    let (batch, stale): (Vec<Job>, Vec<Job>) = batch.into_iter().partition(|job| {
+        let ids = match &job.req {
+            Request::Embed(ids) => ids,
+            Request::Similar { ids, .. } => ids,
+        };
+        ids.iter().all(|&v| (v as usize) < n)
+    });
+    for job in stale {
+        shared.rejected.fetch_add(1, AtomicOrdering::Relaxed);
+        let _ = job.reply.send(Err(anyhow::anyhow!(
+            "rejected: node id out of range for epoch {} ({} nodes)",
+            table.epoch(),
+            n
+        )));
+    }
+    if batch.is_empty() {
+        return;
+    }
+    let n_jobs = batch.len() as u64;
+
+    // Split: Embed jobs answer directly; Similar jobs coalesce.
+    let mut similar_jobs: Vec<usize> = Vec::new();
+    let mut similar_views: Vec<(&[u32], usize)> = Vec::new();
+    for (i, job) in batch.iter().enumerate() {
+        if let Request::Similar { ids, k } = &job.req {
+            similar_jobs.push(i);
+            similar_views.push((ids.as_slice(), *k));
+        }
+    }
+    let sim_results = if similar_views.is_empty() {
+        Ok(Vec::new())
+    } else {
+        SimilarBatch::coalesce(&similar_views).execute(&table, shared.backend.as_ref())
+    };
+    drop(similar_views); // release the borrows of `batch` before moving it
+
+    let mut replies: Vec<Option<Result<Response>>> = Vec::with_capacity(batch.len());
+    for job in &batch {
+        match &job.req {
+            Request::Embed(ids) => {
+                replies.push(Some(table.try_gather(ids).map(Response::Embeddings)));
+            }
+            Request::Similar { .. } => replies.push(None), // filled below
+        }
+    }
+    match sim_results {
+        Ok(mut lists) => {
+            // `execute` returns per coalesced request, in `similar_jobs`
+            // order; scatter back.
+            for i in similar_jobs.iter().rev() {
+                let lists_i = lists.pop().expect("similar result arity");
+                replies[*i] = Some(Ok(Response::Similar(lists_i)));
+            }
+        }
+        Err(e) => {
+            let msg = format!("batched similar failed: {:#}", e);
+            for &i in &similar_jobs {
+                replies[i] = Some(Err(anyhow::anyhow!(msg.clone())));
+            }
+        }
+    }
+
+    let coalesced = if similar_jobs.len() > 1 { similar_jobs.len() as u64 } else { 0 };
+    let mut served = 0u64;
+    let mut failed = 0u64;
+    let mut lats = Vec::with_capacity(batch.len());
+    let mut to_send = Vec::with_capacity(batch.len());
+    for (job, reply) in batch.into_iter().zip(replies) {
+        let reply = reply.expect("reply filled");
+        if reply.is_err() {
+            failed += 1;
+        } else {
+            served += 1;
+        }
+        lats.push(job.enqueued.elapsed().as_secs_f64());
+        to_send.push((job.reply, reply));
+    }
+    // Account *before* replying: a caller that has observed the last
+    // response must also observe it in `stats()`.
+    {
+        let mut m = shared.metrics.lock().unwrap();
+        m.served += served;
+        m.failed += failed;
+        m.batches += 1;
+        m.max_batch_seen = m.max_batch_seen.max(n_jobs);
+        m.coalesced_similar += coalesced;
+        let room = LATENCY_CAP.saturating_sub(m.latencies.len());
+        m.latencies.extend(lats.into_iter().take(room));
+    }
+    for (tx, reply) in to_send {
+        // The requester may have given up (dropped its Ticket); ignore.
+        let _ = tx.send(reply);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Native;
+    use crate::serve::shard::ShardedTable;
+    use crate::serve::EmbeddingServer;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, d: usize, shards: usize) -> (Matrix, Arc<TableCell>) {
+        let mut rng = Rng::new(77);
+        let full = Matrix::random(n, d, 1.0, &mut rng);
+        let cell = Arc::new(TableCell::new(ShardedTable::from_full(&full, shards, 0)));
+        (full, cell)
+    }
+
+    #[test]
+    fn pool_answers_embed_and_similar() {
+        let (full, cell) = setup(40, 6, 2);
+        let pool = ServePool::spawn(cell, Arc::new(Native), PoolOpts::default());
+        let server = EmbeddingServer::new(full);
+
+        let resp = pool.call(Request::Embed(vec![3, 9])).unwrap();
+        match resp {
+            Response::Embeddings(m) => {
+                assert_eq!(m.rows, 2);
+                assert_eq!(m.row(0), server.embeddings.row(3));
+            }
+            _ => panic!("wrong response"),
+        }
+        let req = Request::Similar { ids: vec![1, 20], k: 5 };
+        let got = pool.call(req.clone()).unwrap();
+        let want = server.handle(&req, &Native).unwrap();
+        match (got, want) {
+            (Response::Similar(g), Response::Similar(w)) => {
+                for (gl, wl) in g.iter().zip(&w) {
+                    let gi: Vec<u32> = gl.iter().map(|x| x.0).collect();
+                    let wi: Vec<u32> = wl.iter().map(|x| x.0).collect();
+                    assert_eq!(gi, wi);
+                }
+            }
+            _ => panic!("wrong response kind"),
+        }
+        let stats = pool.shutdown();
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.failed, 0);
+    }
+
+    #[test]
+    fn out_of_range_ids_are_rejected_at_admission() {
+        let (_, cell) = setup(10, 4, 2);
+        let pool = ServePool::spawn(cell, Arc::new(Native), PoolOpts::default());
+        assert!(pool.submit(Request::Embed(vec![10])).is_err());
+        assert!(pool.submit(Request::Similar { ids: vec![99], k: 1 }).is_err());
+        assert_eq!(pool.stats().rejected, 2);
+    }
+
+    #[test]
+    fn paused_pool_coalesces_the_backlog() {
+        let (_, cell) = setup(64, 8, 2);
+        let opts = PoolOpts { workers: 1, queue_capacity: 64, max_batch: 64, start_paused: true };
+        let pool = ServePool::spawn(cell, Arc::new(Native), opts);
+        let tickets: Vec<Ticket> = (0..10)
+            .map(|i| pool.submit(Request::Similar { ids: vec![i as u32], k: 3 }).unwrap())
+            .collect();
+        pool.resume();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let stats = pool.stats();
+        assert_eq!(stats.served, 10);
+        // the whole backlog should land in one batch
+        assert_eq!(stats.batches, 1, "stats: {:?}", stats);
+        assert_eq!(stats.max_batch_seen, 10);
+        assert_eq!(stats.coalesced_similar, 10);
+    }
+}

@@ -1,0 +1,176 @@
+//! Double-buffered table refresh (DESIGN.md §Serving).
+//!
+//! The paper's deployment refreshes the all-node embedding table daily:
+//! the inference tier recomputes every embedding, then the serving tier
+//! must start answering from the new table **without dropping in-flight
+//! traffic**. [`TableCell`] is the swap point: readers (`ServePool`
+//! workers) pin an `Arc` snapshot per batch, the publisher swaps the
+//! `Arc` atomically under a short write lock, and the old epoch's memory
+//! is freed when its last in-flight batch finishes — classic
+//! double-buffering with reference counts instead of a fixed pair of
+//! buffers, so overlapping refreshes are also safe.
+//!
+//! [`Refresher`] drives the whole loop end to end: run the
+//! `coordinator::Pipeline` (construct → partition → sample → infer),
+//! shard the gathered embeddings with the inference plan's row
+//! ownership, and publish.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::coordinator::Pipeline;
+use crate::Result;
+
+use super::shard::ShardedTable;
+
+/// The atomically swappable serving table.
+pub struct TableCell {
+    current: RwLock<Arc<ShardedTable>>,
+    epoch: AtomicU64,
+}
+
+impl TableCell {
+    /// Install an initial table; its epoch stamp becomes the cell's.
+    pub fn new(table: ShardedTable) -> TableCell {
+        let epoch = table.epoch();
+        TableCell { current: RwLock::new(Arc::new(table)), epoch: AtomicU64::new(epoch) }
+    }
+
+    /// Snapshot the current epoch's table. The returned `Arc` stays valid
+    /// (and unchanged) across any number of concurrent `publish` calls.
+    pub fn load(&self) -> Arc<ShardedTable> {
+        Arc::clone(&self.current.read().unwrap())
+    }
+
+    /// Current epoch number.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Publish `table` as the next epoch and return its epoch number.
+    /// In-flight readers keep their snapshot; new loads see the new table.
+    pub fn publish(&self, mut table: ShardedTable) -> u64 {
+        let mut slot = self.current.write().unwrap();
+        let next = self.epoch.load(Ordering::Acquire) + 1;
+        table.set_epoch(next);
+        *slot = Arc::new(table);
+        self.epoch.store(next, Ordering::Release);
+        next
+    }
+}
+
+/// Outcome of one refresh cycle.
+#[derive(Clone, Debug)]
+pub struct RefreshReport {
+    /// Epoch the new table was published at.
+    pub epoch: u64,
+    pub nodes: usize,
+    pub dim: usize,
+    /// Simulated cluster time of the inference pipeline.
+    pub sim_secs: f64,
+    /// Wall-clock time of the refresh on this host.
+    pub wall_secs: f64,
+    /// Bytes moved over the simulated network during the refresh.
+    pub net_bytes: u64,
+    /// Messages over the simulated network during the refresh.
+    pub net_msgs: u64,
+}
+
+/// Periodic refresh driver: one inference pipeline feeding one cell.
+pub struct Refresher {
+    pipeline: Pipeline,
+}
+
+impl Refresher {
+    pub fn new(mut pipeline: Pipeline) -> Refresher {
+        // the refresher exists to harvest the embeddings
+        pipeline.keep_embeddings = true;
+        Refresher { pipeline }
+    }
+
+    pub fn pipeline(&self) -> &Pipeline {
+        &self.pipeline
+    }
+
+    /// Run the full pipeline and atomically publish the new epoch into
+    /// `cell`. In-flight requests keep being served from the old epoch
+    /// throughout.
+    pub fn refresh(&self, cell: &TableCell) -> Result<RefreshReport> {
+        let t0 = std::time::Instant::now();
+        let report = self.pipeline.run()?;
+        let embeddings = report
+            .embeddings
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("pipeline kept no embeddings"))?;
+        let table = ShardedTable::from_inference_plan(&report.plan, embeddings, 0);
+        let (nodes, dim) = (table.n_nodes(), table.dim());
+        let epoch = cell.publish(table);
+        let (mut net_bytes, mut net_msgs) = (0u64, 0u64);
+        for stage in &report.stages.0 {
+            if let Some(c) = &stage.cluster {
+                net_bytes += c.total_bytes();
+                net_msgs += c.total_msgs();
+            }
+        }
+        Ok(RefreshReport {
+            epoch,
+            nodes,
+            dim,
+            sim_secs: report.stages.total(),
+            wall_secs: t0.elapsed().as_secs_f64(),
+            net_bytes,
+            net_msgs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DealConfig;
+    use crate::tensor::Matrix;
+
+    fn constant_table(n: usize, d: usize, value: f32) -> ShardedTable {
+        let full = Matrix::from_vec(n, d, vec![value; n * d]);
+        ShardedTable::from_full(&full, 2, 0)
+    }
+
+    #[test]
+    fn publish_bumps_epoch_and_keeps_snapshots() {
+        let cell = TableCell::new(constant_table(8, 2, 1.0));
+        assert_eq!(cell.epoch(), 0);
+        let old = cell.load();
+        let e1 = cell.publish(constant_table(8, 2, 2.0));
+        assert_eq!(e1, 1);
+        assert_eq!(cell.epoch(), 1);
+        // the pinned snapshot still reads epoch-0 data
+        assert_eq!(old.row(0)[0], 1.0);
+        assert_eq!(old.epoch(), 0);
+        let new = cell.load();
+        assert_eq!(new.row(0)[0], 2.0);
+        assert_eq!(new.epoch(), 1);
+        let e2 = cell.publish(constant_table(8, 2, 3.0));
+        assert_eq!(e2, 2);
+    }
+
+    #[test]
+    fn refresher_publishes_pipeline_embeddings() {
+        let mut cfg = DealConfig::default();
+        cfg.dataset.scale = 1.0 / 256.0; // 256 nodes
+        cfg.cluster.machines = 4;
+        cfg.model.layers = 2;
+        cfg.model.fanout = 5;
+        let refresher = Refresher::new(Pipeline::new(cfg));
+        let cell = TableCell::new(constant_table(4, 2, 0.0));
+        let rep = refresher.refresh(&cell).unwrap();
+        assert_eq!(rep.epoch, 1);
+        assert_eq!(rep.nodes, 256);
+        assert!(rep.sim_secs > 0.0);
+        assert!(rep.net_msgs > 0);
+        let t = cell.load();
+        assert_eq!(t.n_nodes(), 256);
+        assert_eq!(t.epoch(), 1);
+        // serving shards mirror the inference plan (P=2 for 4 machines, M=2)
+        assert_eq!(t.num_shards(), 2);
+    }
+}

@@ -1,0 +1,187 @@
+//! 1-D sharded embedding table (DESIGN.md §Serving).
+//!
+//! The refreshed `N × d` all-node embedding matrix is split into `S`
+//! contiguous row shards with the *same* row bounds as the inference
+//! partition plan (`PartitionPlan::serving`), so the machine that computed
+//! a node's embedding is the machine that serves it — no re-layout between
+//! the inference tier and the serving tier. A [`ShardedTable`] is an
+//! immutable epoch snapshot: refresh publishes a whole new table and the
+//! worker pool pins the old one per batch (`refresh::TableCell`).
+
+use crate::partition::PartitionPlan;
+use crate::tensor::Matrix;
+use crate::Result;
+
+/// One immutable epoch of the serving table, row-sharded `S` ways.
+#[derive(Clone, Debug)]
+pub struct ShardedTable {
+    /// Serving layout: `p` row shards, one feature part (see
+    /// `PartitionPlan::serving`).
+    pub plan: PartitionPlan,
+    /// `plan.p` row blocks; shard `s` holds rows `plan.node_range(s)`.
+    shards: Vec<Matrix>,
+    /// Refresh epoch this table was published at (0 = initial load).
+    epoch: u64,
+}
+
+impl ShardedTable {
+    /// Shard a full `N × d` matrix `s` ways (contiguous, balanced rows).
+    pub fn from_full(full: &Matrix, shards: usize, epoch: u64) -> ShardedTable {
+        assert!(shards >= 1 && shards <= full.rows.max(1), "bad shard count {}", shards);
+        let plan = PartitionPlan::new(full.rows, full.cols.max(1), shards, 1);
+        let blocks = (0..shards)
+            .map(|s| {
+                let (lo, hi) = plan.node_range(s);
+                full.slice_rows(lo, hi)
+            })
+            .collect();
+        ShardedTable { plan, shards: blocks, epoch }
+    }
+
+    /// Shard a full matrix with the row ownership of an *inference* plan,
+    /// so serving layout matches inference layout (the paper's daily
+    /// refresh hands each inference partition's rows to the same serving
+    /// shard).
+    pub fn from_inference_plan(plan: &PartitionPlan, full: &Matrix, epoch: u64) -> ShardedTable {
+        assert_eq!(full.rows, plan.n_nodes, "embedding rows != plan nodes");
+        let serving = plan.serving(full.cols);
+        let blocks = (0..serving.p)
+            .map(|s| {
+                let (lo, hi) = serving.node_range(s);
+                full.slice_rows(lo, hi)
+            })
+            .collect();
+        ShardedTable { plan: serving, shards: blocks, epoch }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.plan.n_nodes
+    }
+
+    pub fn dim(&self) -> usize {
+        if let Some(s) = self.shards.first() {
+            s.cols
+        } else {
+            0
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Stamp the epoch (used by `TableCell::publish`).
+    pub(crate) fn set_epoch(&mut self, epoch: u64) {
+        self.epoch = epoch;
+    }
+
+    /// Shard `s`'s row block.
+    pub fn shard(&self, s: usize) -> &Matrix {
+        &self.shards[s]
+    }
+
+    /// Global row range `[lo, hi)` held by shard `s`.
+    pub fn shard_range(&self, s: usize) -> (usize, usize) {
+        self.plan.node_range(s)
+    }
+
+    /// Embedding of global node `v` (panics if out of range).
+    pub fn row(&self, v: u32) -> &[f32] {
+        let s = self.plan.node_owner(v);
+        let (lo, _) = self.plan.node_range(s);
+        self.shards[s].row(v as usize - lo)
+    }
+
+    /// Gather rows by global node id, routing each id to its owning shard.
+    /// Errors (rather than panicking a worker) on out-of-range ids.
+    pub fn try_gather(&self, ids: &[u32]) -> Result<Matrix> {
+        let mut out = Matrix::zeros(ids.len(), self.dim());
+        for (i, &v) in ids.iter().enumerate() {
+            anyhow::ensure!(
+                (v as usize) < self.n_nodes(),
+                "node id {} out of range (table has {} nodes)",
+                v,
+                self.n_nodes()
+            );
+            out.row_mut(i).copy_from_slice(self.row(v));
+        }
+        Ok(out)
+    }
+
+    /// Reassemble the full matrix (tests / debugging).
+    pub fn to_full(&self) -> Matrix {
+        let refs: Vec<&Matrix> = self.shards.iter().collect();
+        Matrix::vcat(&refs)
+    }
+
+    /// Total bytes across shards (capacity accounting).
+    pub fn nbytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.nbytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn table(n: usize, d: usize, s: usize) -> (Matrix, ShardedTable) {
+        let mut rng = Rng::new(42);
+        let full = Matrix::random(n, d, 1.0, &mut rng);
+        let t = ShardedTable::from_full(&full, s, 3);
+        (full, t)
+    }
+
+    #[test]
+    fn shards_cover_and_roundtrip() {
+        let (full, t) = table(103, 7, 4);
+        assert_eq!(t.num_shards(), 4);
+        assert_eq!(t.n_nodes(), 103);
+        assert_eq!(t.dim(), 7);
+        assert_eq!(t.epoch(), 3);
+        assert_eq!(t.to_full(), full);
+        let mut covered = 0;
+        for s in 0..4 {
+            let (lo, hi) = t.shard_range(s);
+            assert_eq!(t.shard(s).rows, hi - lo);
+            covered += hi - lo;
+        }
+        assert_eq!(covered, 103);
+    }
+
+    #[test]
+    fn row_and_gather_match_full() {
+        let (full, t) = table(50, 5, 3);
+        for v in [0u32, 16, 17, 33, 49] {
+            assert_eq!(t.row(v), full.row(v as usize));
+        }
+        let got = t.try_gather(&[49, 0, 25]).unwrap();
+        assert_eq!(got.row(0), full.row(49));
+        assert_eq!(got.row(1), full.row(0));
+        assert_eq!(got.row(2), full.row(25));
+    }
+
+    #[test]
+    fn gather_rejects_out_of_range() {
+        let (_, t) = table(10, 3, 2);
+        assert!(t.try_gather(&[9]).is_ok());
+        assert!(t.try_gather(&[10]).is_err());
+    }
+
+    #[test]
+    fn inference_plan_layout_is_reused() {
+        let plan = PartitionPlan::new(64, 16, 4, 2);
+        let mut rng = Rng::new(1);
+        // embedding width differs from input feature width after the GNN
+        let emb = Matrix::random(64, 6, 1.0, &mut rng);
+        let t = ShardedTable::from_inference_plan(&plan, &emb, 1);
+        assert_eq!(t.num_shards(), plan.p);
+        for s in 0..plan.p {
+            assert_eq!(t.shard_range(s), plan.node_range(s));
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Integration tests for the serving subsystem (DESIGN.md §Serving):
+//! the sharded/batched/pooled path is result-identical to the sequential
+//! single-copy baseline under concurrent mixed load, refresh swaps never
+//! serve a torn table, and admission control sheds overload instead of
+//! queueing it.
+
+use std::sync::Arc;
+
+use deal::runtime::Native;
+use deal::serve::{
+    serve_workload_pooled, EmbeddingServer, PoolOpts, Request, Response, ServePool, ShardedTable,
+    TableCell,
+};
+use deal::tensor::Matrix;
+use deal::util::rng::Rng;
+
+fn random_table(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::random(n, d, 1.0, &mut rng)
+}
+
+fn mixed_request(rng: &mut Rng, n: usize) -> Request {
+    if rng.next_below(4) == 0 {
+        Request::Similar {
+            ids: (0..rng.range(1, 5)).map(|_| rng.next_below(n) as u32).collect(),
+            k: rng.range(1, 12),
+        }
+    } else {
+        Request::Embed((0..rng.range(1, 17)).map(|_| rng.next_below(n) as u32).collect())
+    }
+}
+
+/// Pooled response == sequential `handle` response (ids exact, scores to
+/// float tolerance, embeddings exact).
+fn assert_same(want: &Response, got: &Response) {
+    match (want, got) {
+        (Response::Embeddings(w), Response::Embeddings(g)) => assert_eq!(w, g),
+        (Response::Similar(w), Response::Similar(g)) => {
+            assert_eq!(w.len(), g.len());
+            for (wl, gl) in w.iter().zip(g) {
+                let wi: Vec<u32> = wl.iter().map(|x| x.0).collect();
+                let gi: Vec<u32> = gl.iter().map(|x| x.0).collect();
+                assert_eq!(wi, gi, "ranked ids differ");
+                for (a, b) in wl.iter().zip(gl) {
+                    assert!((a.1 - b.1).abs() <= 1e-6, "score {} vs {}", a.1, b.1);
+                }
+            }
+        }
+        _ => panic!("response kind mismatch"),
+    }
+}
+
+#[test]
+fn concurrent_mixed_load_matches_sequential_handle() {
+    let n = 300;
+    let full = random_table(n, 16, 11);
+    let server = Arc::new(EmbeddingServer::new(full.clone()));
+    let cell = Arc::new(TableCell::new(ShardedTable::from_full(&full, 3, 0)));
+    let opts = PoolOpts { workers: 3, queue_capacity: 256, max_batch: 32, start_paused: false };
+    let pool = Arc::new(ServePool::spawn(cell, Arc::new(Native), opts));
+
+    let clients = 6;
+    let per_client = 30;
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let pool = Arc::clone(&pool);
+            let server = Arc::clone(&server);
+            scope.spawn(move || {
+                let mut rng = Rng::new(1000 + c as u64);
+                for _ in 0..per_client {
+                    let req = mixed_request(&mut rng, n);
+                    let got = pool.call(req.clone()).expect("pooled call");
+                    let want = server.handle(&req, &Native).expect("sequential handle");
+                    assert_same(&want, &got);
+                }
+            });
+        }
+    });
+    let stats = pool.stats();
+    assert_eq!(stats.served, (clients * per_client) as u64);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.rejected, 0);
+}
+
+#[test]
+fn coalesced_duplicate_queries_match_sequential_handle() {
+    // duplicate query ids within and across coalesced requests exercise
+    // the batcher's dedup + per-column top-k cache
+    let n = 120;
+    let full = random_table(n, 8, 23);
+    let server = EmbeddingServer::new(full.clone());
+    let cell = Arc::new(TableCell::new(ShardedTable::from_full(&full, 4, 0)));
+    let opts = PoolOpts { workers: 1, queue_capacity: 64, max_batch: 64, start_paused: true };
+    let pool = ServePool::spawn(cell, Arc::new(Native), opts);
+
+    let reqs: Vec<Request> = vec![
+        Request::Similar { ids: vec![7, 7, 30], k: 5 },
+        Request::Similar { ids: vec![30, 7], k: 9 },
+        Request::Embed(vec![0, 7, 30, 119]),
+        Request::Similar { ids: vec![119], k: 200 }, // k > n clamps like the baseline
+    ];
+    let tickets: Vec<_> = reqs.iter().map(|r| pool.submit(r.clone()).unwrap()).collect();
+    pool.resume();
+    for (req, t) in reqs.iter().zip(tickets) {
+        let got = t.wait().expect("pooled response");
+        let want = server.handle(req, &Native).unwrap();
+        assert_same(&want, &got);
+    }
+    let stats = pool.shutdown();
+    assert_eq!(stats.batches, 1, "backlog should coalesce into one batch");
+    assert_eq!(stats.coalesced_similar, 3);
+}
+
+#[test]
+fn mid_flight_refresh_never_serves_a_torn_table() {
+    // Every epoch's table is a distinct constant, so any mixed-epoch read
+    // is detectable: an Embed row must be uniformly one epoch's constant,
+    // and a Similar score must be d * c^2 for a published constant c.
+    let n = 200;
+    let d = 8;
+    let epochs = 8u32;
+    let constant = |c: f32| Matrix::from_vec(n, d, vec![c; n * d]);
+    let cell = Arc::new(TableCell::new(ShardedTable::from_full(&constant(1.0), 4, 0)));
+    let opts = PoolOpts { workers: 3, queue_capacity: 512, max_batch: 16, start_paused: false };
+    let pool = Arc::new(ServePool::spawn(Arc::clone(&cell), Arc::new(Native), opts));
+
+    let valid_constants: Vec<f32> = (1..=epochs).map(|c| c as f32).collect();
+    std::thread::scope(|scope| {
+        // publisher: epochs 2..=8 swapped in while clients hammer the pool
+        let pub_cell = Arc::clone(&cell);
+        scope.spawn(move || {
+            for c in 2..=epochs {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                let e = pub_cell.publish(ShardedTable::from_full(&constant(c as f32), 4, 0));
+                assert_eq!(e, (c - 1) as u64);
+            }
+        });
+        for t in 0..4 {
+            let pool = Arc::clone(&pool);
+            let valid = valid_constants.clone();
+            scope.spawn(move || {
+                let mut rng = Rng::new(900 + t as u64);
+                for i in 0..60 {
+                    if i % 3 == 0 {
+                        let req = Request::Similar { ids: vec![rng.next_below(n) as u32], k: 4 };
+                        match pool.call(req).expect("similar during refresh") {
+                            Response::Similar(lists) => {
+                                for list in &lists {
+                                    assert_eq!(list.len(), 4);
+                                    let s0 = list[0].1;
+                                    let epoch_ok = valid
+                                        .iter()
+                                        .any(|&c| (s0 - d as f32 * c * c).abs() < 1e-3);
+                                    assert!(epoch_ok, "torn/unknown score {}", s0);
+                                    assert!(list.iter().all(|&(_, s)| s == s0), "torn scores");
+                                }
+                            }
+                            _ => panic!("wrong response"),
+                        }
+                    } else {
+                        let ids: Vec<u32> =
+                            (0..8).map(|_| rng.next_below(n) as u32).collect();
+                        match pool.call(Request::Embed(ids)).expect("embed during refresh") {
+                            Response::Embeddings(m) => {
+                                let c = m.get(0, 0);
+                                assert!(valid.contains(&c), "unknown constant {}", c);
+                                assert!(
+                                    m.data.iter().all(|&v| v == c),
+                                    "torn table: saw {} and {}",
+                                    c,
+                                    m.data.iter().find(|&&v| v != c).unwrap()
+                                );
+                            }
+                            _ => panic!("wrong response"),
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let stats = pool.stats();
+    assert_eq!(stats.failed, 0, "refresh swaps must not fail in-flight requests");
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.served, 4 * 60);
+    assert_eq!(pool.epoch(), (epochs - 1) as u64);
+}
+
+#[test]
+fn admission_control_rejects_only_when_queue_is_full() {
+    let full = random_table(32, 4, 5);
+    let cell = Arc::new(TableCell::new(ShardedTable::from_full(&full, 2, 0)));
+    let opts = PoolOpts { workers: 1, queue_capacity: 4, max_batch: 8, start_paused: true };
+    let pool = ServePool::spawn(cell, Arc::new(Native), opts);
+
+    // gated workers drain nothing: exactly `queue_capacity` admissions
+    let tickets: Vec<_> = (0..4)
+        .map(|i| pool.submit(Request::Embed(vec![i as u32])).expect("within capacity"))
+        .collect();
+    let err = pool.submit(Request::Embed(vec![9])).unwrap_err();
+    assert!(err.to_string().contains("queue full"), "got: {}", err);
+
+    pool.resume();
+    for t in tickets {
+        t.wait().expect("queued requests still complete");
+    }
+    let stats = pool.shutdown();
+    assert_eq!(stats.served, 4);
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.failed, 0);
+}
+
+#[test]
+fn pooled_workload_drops_rejected_requests() {
+    // serve_workload_pooled must shed what admission control rejects and
+    // still return every accepted response. Workers start gated, so the
+    // first `queue_capacity` submissions are accepted and the remaining
+    // 24 deterministically hit a full queue.
+    let full = random_table(64, 4, 6);
+    let cell = Arc::new(TableCell::new(ShardedTable::from_full(&full, 2, 0)));
+    let opts = PoolOpts { workers: 1, queue_capacity: 8, max_batch: 8, start_paused: true };
+    let pool = Arc::new(ServePool::spawn(cell, Arc::new(Native), opts));
+    let mut rng = Rng::new(3);
+    let reqs: Vec<Request> = (0..32).map(|_| mixed_request(&mut rng, 64)).collect();
+
+    let result = std::thread::scope(|scope| {
+        let p = Arc::clone(&pool);
+        let reqs2 = reqs.clone();
+        let h = scope.spawn(move || serve_workload_pooled(&p, &reqs2));
+        // submissions all happen while the workers are gated; resume once
+        // the 24 overflow rejections are on the books
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while pool.stats().rejected < 24 && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        pool.resume();
+        h.join().expect("workload thread panicked")
+    });
+    let (responses, stats) = result.unwrap();
+    assert_eq!(responses.len(), 8, "only admitted requests produce responses");
+    assert_eq!(stats.requests, 8);
+    assert!(stats.throughput > 0.0);
+    let totals = pool.stats();
+    assert_eq!(totals.rejected, 24);
+    assert_eq!(totals.served, 8);
+    assert_eq!(totals.failed, 0);
+}

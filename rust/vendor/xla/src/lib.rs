@@ -1,0 +1,132 @@
+//! **Offline stub** of the `xla` crate (xla-rs PJRT bindings) API surface
+//! used by `deal::runtime::service` — the real crate lives on GitHub, not
+//! crates.io, and its native `xla_extension` libraries are not part of
+//! this image. This stub lets the `xla` cargo feature *compile* anywhere;
+//! every entry point returns an error at runtime, which the service
+//! thread reports per job exactly like any other backend failure
+//! (DESIGN.md §Runtime).
+//!
+//! To run on real XLA, point the dependency at the actual bindings, e.g.
+//! in `rust/Cargo.toml`:
+//!
+//! ```toml
+//! [patch."crates-io"]            # or replace the path dependency
+//! # xla = { git = "https://github.com/LaurentMazare/xla-rs" }
+//! ```
+//!
+//! The stub mirrors only what `service.rs` calls: client construction,
+//! HLO-text loading, compilation, literal construction, and execution.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: carries a message, `Display`s like the real crate's error.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn stub_err(what: &str) -> Error {
+    Error(format!(
+        "{}: xla stub build — link the real xla-rs bindings to execute artifacts",
+        what
+    ))
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the service constructs literals with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(stub_err("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err("PjRtClient::compile"))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(stub_err("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(stub_err("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(stub_err("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(stub_err("Literal::to_vec"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_stub() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nope").is_err());
+        let comp = XlaComputation::from_proto(&HloModuleProto);
+        let _ = comp; // constructible so compile() call sites typecheck
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0; 8])
+            .is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("stub"));
+    }
+}
