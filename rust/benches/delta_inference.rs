@@ -1,0 +1,149 @@
+//! Delta inference vs full recompute under streaming churn (EXPERIMENTS.md
+//! §Delta): sweep the per-batch edge-churn rate and compare one
+//! incremental refresh (`coordinator::delta::DeltaState::apply`) against a
+//! from-scratch pipeline run (`Pipeline::run`) on the *same* updated
+//! graph.
+//!
+//! The primary metric is **simulated cluster time** — the repo's currency
+//! for every paper-figure bench (construction, sampling, preparation and
+//! inference all advance the Lamport clocks; the delta path charges its
+//! coordinator-side staging at the same cores-scaled rate). Wall-clock is
+//! reported alongside. Acceptance: at 1% edge churn the delta refresh
+//! must be ≥ 3× faster (simulated) than the full recompute;
+//! `DEAL_DELTA_BENCH_LAX=1` downgrades the assert to a warning for smoke
+//! runs on contended machines.
+//!
+//! Run: `cargo bench --bench delta_inference [-- --full]`
+
+use std::time::Instant;
+
+use deal::config::DealConfig;
+use deal::coordinator::delta::DeltaState;
+use deal::coordinator::Pipeline;
+use deal::util::bench::{BenchArgs, Report, Table};
+use deal::util::human_secs;
+use deal::util::rng::Rng;
+
+const ACCEPTANCE_CHURN: f64 = 0.01;
+const ACCEPTANCE_FLOOR: f64 = 3.0;
+
+fn bench_cfg(scale: f64) -> DealConfig {
+    let mut cfg = DealConfig::default();
+    cfg.dataset.name = "papers-sim".into();
+    cfg.dataset.scale = scale;
+    cfg.cluster.machines = 4;
+    cfg.cluster.feature_parts = 2;
+    cfg.model.kind = "gcn".into();
+    cfg.model.layers = 2;
+    cfg.model.fanout = 5;
+    cfg
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    // papers-sim: the paper's lowest-density twin — churn batches touch
+    // the smallest row fraction, the regime delta inference targets.
+    let scale = args.pick(1.0 / 32.0, 1.0 / 8.0); // 4096 / 16384 nodes
+    let churns = [0.001f64, 0.005, 0.01, 0.02];
+
+    let mut report = Report::new("delta_inference");
+    let cfg = bench_cfg(scale);
+    report.note(format!(
+        "dataset={} scale={} machines={} layers={} fanout={} | churn split half adds / half removes",
+        cfg.dataset.name,
+        cfg.dataset.scale,
+        cfg.cluster.machines,
+        cfg.model.layers,
+        cfg.model.fanout,
+    ));
+
+    let mut table = Table::new(
+        "delta refresh vs full recompute per churn rate (simulated cluster time)",
+        &[
+            "churn",
+            "dirty rows",
+            "frontier",
+            "delta sim",
+            "full sim",
+            "sim speedup",
+            "delta wall",
+            "full wall",
+            "wall speedup",
+        ],
+    );
+
+    let mut acceptance_speedup = None;
+    for (i, &churn) in churns.iter().enumerate() {
+        // fresh baseline per churn rate: apples-to-apples single batches
+        let mut state = DeltaState::init(bench_cfg(scale)).expect("delta state init");
+        let mut rng = Rng::new(0xC0FE + i as u64);
+        let half = (state.n_edges() as f64 * churn / 2.0).round() as usize;
+        let batch = state.synth_batch(&mut rng, half, half, 0);
+
+        let t0 = Instant::now();
+        let rep = state.apply(&batch).expect("delta apply");
+        let delta_wall = t0.elapsed().as_secs_f64();
+        let delta_sim = rep.sim_secs;
+
+        // full recompute over the *updated* graph
+        let tag = format!("delta-bench-{}-{}", std::process::id(), i);
+        let pipeline = Pipeline::with_dataset(
+            bench_cfg(scale),
+            &tag,
+            state.edge_list(),
+            state.features().clone(),
+        );
+        let t1 = Instant::now();
+        let full = pipeline.run().expect("full pipeline");
+        let full_wall = t1.elapsed().as_secs_f64();
+        let full_sim = full.stages.total();
+
+        // parity audit: the bench only counts if both paths agree
+        let diff = state
+            .embeddings()
+            .max_abs_diff(full.embeddings.as_ref().expect("embeddings kept"));
+        assert!(diff < 5e-3, "delta and full recompute disagree: {}", diff);
+
+        let sim_speedup = full_sim / delta_sim.max(1e-12);
+        let wall_speedup = full_wall / delta_wall.max(1e-12);
+        if (churn - ACCEPTANCE_CHURN).abs() < 1e-12 {
+            acceptance_speedup = Some(sim_speedup);
+        }
+        table.row(&[
+            format!("{:.1}%", churn * 100.0),
+            format!("{}", rep.dirty_rows),
+            format!("{:?}", rep.frontier),
+            human_secs(delta_sim),
+            human_secs(full_sim),
+            format!("{:.2}x", sim_speedup),
+            human_secs(delta_wall),
+            human_secs(full_wall),
+            format!("{:.2}x", wall_speedup),
+        ]);
+    }
+    report.add_table(table);
+
+    let speedup = acceptance_speedup.expect("1% churn row present");
+    report.note(format!(
+        "sim speedup at {:.0}% churn: {:.2}x (acceptance floor {:.2}x)",
+        ACCEPTANCE_CHURN * 100.0,
+        speedup,
+        ACCEPTANCE_FLOOR,
+    ));
+    if std::env::var("DEAL_DELTA_BENCH_LAX").is_ok() {
+        if speedup < ACCEPTANCE_FLOOR {
+            eprintln!(
+                "[lax] below the {:.0}x acceptance floor: {:.2}x (contended runner?)",
+                ACCEPTANCE_FLOOR, speedup
+            );
+        }
+    } else {
+        assert!(
+            speedup >= ACCEPTANCE_FLOOR,
+            "delta refresh below the {:.0}x acceptance floor at 1% churn: {:.2}x",
+            ACCEPTANCE_FLOOR,
+            speedup
+        );
+    }
+    report.finish();
+}

@@ -78,7 +78,7 @@ fn main() {
             workers,
             queue_capacity: n_reqs,
             max_batch,
-            start_paused: false,
+            ..PoolOpts::default()
         };
         let pool = ServePool::spawn(Arc::clone(&cell), Arc::new(Native), opts);
         let (responses, pooled) = serve_workload_pooled(&pool, &reqs).expect("pooled workload");
@@ -107,7 +107,7 @@ fn main() {
     // in-flight request must complete from a consistent snapshot.
     let reqs = synthetic_workload(&mut rng, n, n_reqs / 2, false);
     let cell = Arc::new(TableCell::new(ShardedTable::from_full(&full, shards, 0)));
-    let opts = PoolOpts { workers, queue_capacity: reqs.len(), max_batch, start_paused: false };
+    let opts = PoolOpts { workers, queue_capacity: reqs.len(), max_batch, ..PoolOpts::default() };
     let pool = ServePool::spawn(Arc::clone(&cell), Arc::new(Native), opts);
     let mut next = full.clone();
     next.map_inplace(|v| v * 0.5);

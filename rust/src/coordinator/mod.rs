@@ -3,6 +3,7 @@
 //! inference (paper Fig. 2 / Fig. 4), with per-stage time/memory/byte
 //! accounting (Fig. 3) and the fused first layer (§3.5, Fig. 13).
 
+pub mod delta;
 pub mod feature_prep;
 
 use std::collections::HashMap;
@@ -12,7 +13,7 @@ use std::sync::Arc;
 use crate::cluster::{Cluster, ClusterReport, Ctx, Payload, Tag};
 use crate::config::DealConfig;
 use crate::graph::builder::{build_distributed, GraphPartition};
-use crate::graph::datasets;
+use crate::graph::{datasets, EdgeList};
 use crate::model::{gat::gat_forward, gcn::gcn_forward, ExecOpts, LayerPart, ModelKind, ModelWeights};
 use crate::partition::PartitionPlan;
 use crate::runtime::{backend_from_config, Act, Backend};
@@ -85,19 +86,54 @@ pub struct Pipeline {
     pub cfg: DealConfig,
     /// Keep the gathered embeddings in the report (disable for large runs).
     pub keep_embeddings: bool,
+    /// In-memory dataset override (delta-parity tests, `deal stream
+    /// --verify`): the edge list is still staged to
+    /// `data/<tag>.edges.bin` so construction reads a real file.
+    dataset_override: Option<(String, EdgeList, Matrix)>,
 }
 
 impl Pipeline {
     pub fn new(cfg: DealConfig) -> Self {
-        Pipeline { cfg, keep_embeddings: true }
+        Pipeline { cfg, keep_embeddings: true, dataset_override: None }
+    }
+
+    /// A pipeline over an explicit in-memory graph + features instead of
+    /// the registry dataset named in `cfg`. `tag` names the staged edge
+    /// file; callers running concurrently must pick distinct tags.
+    pub fn with_dataset(cfg: DealConfig, tag: &str, edges: EdgeList, features: Matrix) -> Self {
+        Pipeline {
+            cfg,
+            keep_embeddings: true,
+            dataset_override: Some((tag.to_string(), edges, features)),
+        }
     }
 
     /// Stage the dataset's edge file on "disk" (not counted — the input is
     /// assumed to exist, as in the paper).
     fn stage_dataset(&self) -> Result<(PathBuf, datasets::Dataset)> {
-        let ds = datasets::load(&self.cfg.dataset.name, self.cfg.dataset.scale)?;
         let dir = PathBuf::from("data");
         std::fs::create_dir_all(&dir)?;
+        if let Some((tag, edges, features)) = &self.dataset_override {
+            anyhow::ensure!(
+                edges.n_nodes == features.rows,
+                "override features have {} rows for {} nodes",
+                features.rows,
+                edges.n_nodes
+            );
+            let path = dir.join(format!("{}.edges.bin", tag));
+            // always rewrite: the override's content changes between runs
+            edges.write_binary(&path)?;
+            // cloning keeps `run(&self)` repeatable (Refresher re-runs the
+            // same pipeline); override graphs are test/bench scale
+            let ds = datasets::Dataset {
+                name: tag.clone(),
+                edges: edges.clone(),
+                features: features.clone(),
+                feature_dim: features.cols,
+            };
+            return Ok((path, ds));
+        }
+        let ds = datasets::load(&self.cfg.dataset.name, self.cfg.dataset.scale)?;
         let path = dir.join(format!(
             "{}-x{}.edges.bin",
             ds.name,
@@ -137,6 +173,11 @@ impl Pipeline {
             sim_secs: construct_rep.makespan(),
             cluster: Some(construct_rep),
         });
+        if self.dataset_override.is_some() {
+            // override stagings are per-run scratch (tagged per caller);
+            // registry stagings stay cached for reuse
+            let _ = std::fs::remove_file(&path);
+        }
 
         // ---- Stage 2: partition planning (lightweight by design —
         // Observation #1).

@@ -1,0 +1,448 @@
+//! Streaming graph updates: batched edge/node deltas against the
+//! partitioned CSRs, and the k-hop *affected set* frontier that drives
+//! incremental re-inference (DESIGN.md §Delta).
+//!
+//! Real recommendation/ads graphs churn continuously; re-running the full
+//! all-node pipeline per epoch (PR 1's `serve::refresh::Refresher`) wastes
+//! work when only a small fraction of edges moved. This module provides
+//! the graph-side half of the delta path:
+//!
+//! - [`UpdateBatch`] — one batch of edge insertions/removals and node
+//!   feature updates (node count is fixed; growing the graph would shift
+//!   the 1-D partition bounds and invalidate every cached sample).
+//! - [`PartitionDelta`] — per-partition staging: updates append into
+//!   per-row logs, then [`PartitionDelta::compact`] merges them into a
+//!   fresh CSR in one pass, keeping rows sorted (the invariant
+//!   `Csr::from_edges_rect` establishes, which per-row resampling parity
+//!   depends on).
+//! - [`affected_frontier`] — given the *updated* sampled layer graphs,
+//!   derive for each GNN level the set of nodes whose activations can
+//!   change: feature-updated nodes seed level 0; a row is affected at
+//!   level `l+1` iff its sampled row changed (dirty), it was affected at
+//!   level `l` (self loop), or any sampled in-neighbor was affected at
+//!   level `l`.
+//! - [`restrict_rows`] / [`replace_rows`] / [`stack_partitions`] — CSR
+//!   surgery helpers: frontier-restricted layer graphs (empty rows for
+//!   unaffected destinations, so the SPMM group machinery naturally
+//!   communicates only frontier columns), patched layer graphs after
+//!   resampling, and global stitching of partition CSRs.
+
+use std::collections::BTreeMap;
+
+use super::csr::Csr;
+use super::NodeId;
+use crate::Result;
+
+/// One batch of streaming updates. Node count is fixed: `remove_edges`
+/// resolve against the pre-batch graph (removing one instance of the edge
+/// if present), `add_edges` are appended afterwards, and
+/// `feature_updates` replace whole feature rows.
+#[derive(Clone, Debug, Default)]
+pub struct UpdateBatch {
+    /// `(src, dst)` insertions (src becomes an in-neighbor of dst).
+    pub add_edges: Vec<(NodeId, NodeId)>,
+    /// `(src, dst)` removals; absent edges are ignored.
+    pub remove_edges: Vec<(NodeId, NodeId)>,
+    /// `(node, new feature row)` replacements.
+    pub feature_updates: Vec<(NodeId, Vec<f32>)>,
+}
+
+impl UpdateBatch {
+    /// Total staged operations.
+    pub fn len(&self) -> usize {
+        self.add_edges.len() + self.remove_edges.len() + self.feature_updates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Check every id is in range and every feature row has width `dim`.
+    pub fn validate(&self, n_nodes: usize, dim: usize) -> Result<()> {
+        for &(s, d) in self.add_edges.iter().chain(&self.remove_edges) {
+            anyhow::ensure!(
+                (s as usize) < n_nodes && (d as usize) < n_nodes,
+                "edge ({}, {}) out of range ({} nodes)",
+                s,
+                d,
+                n_nodes
+            );
+        }
+        for (v, row) in &self.feature_updates {
+            anyhow::ensure!((*v as usize) < n_nodes, "feature update node {} out of range", v);
+            anyhow::ensure!(
+                row.len() == dim,
+                "feature update for node {} has width {}, expected {}",
+                v,
+                row.len(),
+                dim
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Per-partition staged updates: append logs keyed by local row, merged
+/// into the base CSR by one `compact` pass.
+pub struct PartitionDelta {
+    row_lo: usize,
+    row_hi: usize,
+    /// Appended in-neighbors per local row.
+    adds: BTreeMap<usize, Vec<NodeId>>,
+    /// Tombstoned in-neighbors per local row (each entry removes one
+    /// instance from the base row, if present).
+    removes: BTreeMap<usize, Vec<NodeId>>,
+}
+
+impl PartitionDelta {
+    /// Staging area for the partition owning global rows `[row_lo, row_hi)`.
+    pub fn new(row_lo: usize, row_hi: usize) -> PartitionDelta {
+        assert!(row_lo <= row_hi);
+        PartitionDelta { row_lo, row_hi, adds: BTreeMap::new(), removes: BTreeMap::new() }
+    }
+
+    /// Stage the slice of `batch` whose destination falls in this
+    /// partition; edges owned by other partitions are skipped. Returns the
+    /// number of staged (adds, removes).
+    pub fn stage(&mut self, batch: &UpdateBatch) -> (usize, usize) {
+        let mut staged = (0usize, 0usize);
+        for &(s, d) in &batch.add_edges {
+            let d = d as usize;
+            if d >= self.row_lo && d < self.row_hi {
+                self.adds.entry(d - self.row_lo).or_default().push(s);
+                staged.0 += 1;
+            }
+        }
+        for &(s, d) in &batch.remove_edges {
+            let d = d as usize;
+            if d >= self.row_lo && d < self.row_hi {
+                self.removes.entry(d - self.row_lo).or_default().push(s);
+                staged.1 += 1;
+            }
+        }
+        staged
+    }
+
+    /// Nothing staged?
+    pub fn is_empty(&self) -> bool {
+        self.adds.is_empty() && self.removes.is_empty()
+    }
+
+    /// Merge the staged updates into `base` (this partition's CSR: local
+    /// rows, global columns), producing the updated CSR (rows stay sorted)
+    /// and the sorted list of local rows whose neighbor list actually
+    /// changed. Tombstones for absent edges are dropped silently; a row
+    /// touched only by such no-ops is *not* reported dirty. The staging
+    /// area is consumed.
+    pub fn compact(&mut self, base: &Csr) -> (Csr, Vec<usize>) {
+        assert_eq!(base.n_rows, self.row_hi - self.row_lo, "base CSR / partition mismatch");
+        let adds = std::mem::take(&mut self.adds);
+        let removes = std::mem::take(&mut self.removes);
+        let extra: usize = adds.values().map(|v| v.len()).sum();
+        let mut indptr: Vec<u64> = Vec::with_capacity(base.n_rows + 1);
+        indptr.push(0);
+        let mut indices: Vec<NodeId> = Vec::with_capacity(base.n_edges() + extra);
+        let mut dirty: Vec<usize> = Vec::new();
+        for r in 0..base.n_rows {
+            let row_adds = adds.get(&r);
+            let row_removes = removes.get(&r);
+            if row_adds.is_none() && row_removes.is_none() {
+                indices.extend_from_slice(base.row(r));
+            } else {
+                let mut row: Vec<NodeId> = base.row(r).to_vec();
+                let mut changed = false;
+                if let Some(rm) = row_removes {
+                    for &s in rm {
+                        // base rows are sorted; removal keeps them sorted
+                        if let Ok(pos) = row.binary_search(&s) {
+                            row.remove(pos);
+                            changed = true;
+                        }
+                    }
+                }
+                if let Some(ad) = row_adds {
+                    row.extend_from_slice(ad);
+                    row.sort_unstable();
+                    changed = true;
+                }
+                if changed {
+                    dirty.push(r);
+                }
+                indices.extend_from_slice(&row);
+            }
+            indptr.push(indices.len() as u64);
+        }
+        let csr = Csr { n_rows: base.n_rows, n_cols: base.n_cols, indptr, indices };
+        (csr, dirty)
+    }
+}
+
+/// Keep only the rows in `keep` (sorted local row ids); every other row
+/// becomes empty. Shapes are preserved, so the result drops into the
+/// existing SPMM machinery: aggregation and communication then touch only
+/// the kept (frontier) rows' columns.
+pub fn restrict_rows(csr: &Csr, keep: &[usize]) -> Csr {
+    debug_assert!(keep.windows(2).all(|w| w[0] < w[1]), "keep must be sorted unique");
+    let mut indptr: Vec<u64> = Vec::with_capacity(csr.n_rows + 1);
+    indptr.push(0);
+    let total: usize = keep.iter().map(|&r| csr.degree(r)).sum();
+    let mut indices: Vec<NodeId> = Vec::with_capacity(total);
+    let mut cursor = 0usize;
+    for r in 0..csr.n_rows {
+        if cursor < keep.len() && keep[cursor] == r {
+            indices.extend_from_slice(csr.row(r));
+            cursor += 1;
+        }
+        indptr.push(indices.len() as u64);
+    }
+    debug_assert_eq!(cursor, keep.len(), "keep row out of bounds");
+    Csr { n_rows: csr.n_rows, n_cols: csr.n_cols, indptr, indices }
+}
+
+/// Rebuild `csr` with the rows named in `updates` replaced by new
+/// (pre-sorted) neighbor lists. `updates` must be sorted by row id.
+pub fn replace_rows(csr: &Csr, updates: &[(usize, Vec<NodeId>)]) -> Csr {
+    debug_assert!(updates.windows(2).all(|w| w[0].0 < w[1].0), "updates must be sorted unique");
+    let mut indptr: Vec<u64> = Vec::with_capacity(csr.n_rows + 1);
+    indptr.push(0);
+    let mut indices: Vec<NodeId> = Vec::with_capacity(csr.n_edges());
+    let mut cursor = 0usize;
+    for r in 0..csr.n_rows {
+        if cursor < updates.len() && updates[cursor].0 == r {
+            indices.extend_from_slice(&updates[cursor].1);
+            cursor += 1;
+        } else {
+            indices.extend_from_slice(csr.row(r));
+        }
+        indptr.push(indices.len() as u64);
+    }
+    debug_assert_eq!(cursor, updates.len(), "update row out of bounds");
+    Csr { n_rows: csr.n_rows, n_cols: csr.n_cols, indptr, indices }
+}
+
+/// Stitch per-partition CSRs (contiguous local row blocks, shared global
+/// columns) back into one global CSR.
+pub fn stack_partitions(parts: &[&Csr]) -> Csr {
+    assert!(!parts.is_empty());
+    let n_cols = parts[0].n_cols;
+    let n_rows: usize = parts.iter().map(|c| c.n_rows).sum();
+    let n_edges: usize = parts.iter().map(|c| c.n_edges()).sum();
+    let mut indptr: Vec<u64> = Vec::with_capacity(n_rows + 1);
+    indptr.push(0);
+    let mut indices: Vec<NodeId> = Vec::with_capacity(n_edges);
+    for part in parts {
+        assert_eq!(part.n_cols, n_cols, "partition column spaces differ");
+        let base = *indptr.last().unwrap();
+        indptr.extend(part.indptr[1..].iter().map(|&x| base + x));
+        indices.extend_from_slice(&part.indices);
+    }
+    Csr { n_rows, n_cols, indptr, indices }
+}
+
+/// Per-level affected sets for a k-layer GNN over the *updated* sampled
+/// layer graphs. Level 0 is seeded by feature-updated nodes; level `l+1`
+/// contains every destination whose layer-`l` aggregation inputs changed:
+/// dirty rows (their sampled row itself changed — at every level), rows
+/// affected at level `l` (the self-loop term), and rows with an affected
+/// sampled in-neighbor. Returns `k + 1` sorted global-id lists
+/// (`levels[l]` = nodes whose `H^(l)` may differ).
+pub fn affected_frontier(
+    layers_by_partition: &[Vec<Csr>],
+    row_offsets: &[usize],
+    n_nodes: usize,
+    k: usize,
+    dirty: &[NodeId],
+    feat_changed: &[NodeId],
+) -> Vec<Vec<NodeId>> {
+    assert_eq!(layers_by_partition.len(), row_offsets.len());
+    let mut levels: Vec<Vec<NodeId>> = Vec::with_capacity(k + 1);
+    let mut cur = vec![false; n_nodes];
+    for &v in feat_changed {
+        cur[v as usize] = true;
+    }
+    levels.push(mask_to_ids(&cur));
+    for l in 0..k {
+        let mut next = vec![false; n_nodes];
+        for &v in dirty {
+            next[v as usize] = true;
+        }
+        for (p, layers) in layers_by_partition.iter().enumerate() {
+            let g = &layers[l];
+            let off = row_offsets[p];
+            for r in 0..g.n_rows {
+                let gr = off + r;
+                if next[gr] {
+                    continue;
+                }
+                if cur[gr] || g.row(r).iter().any(|&s| cur[s as usize]) {
+                    next[gr] = true;
+                }
+            }
+        }
+        levels.push(mask_to_ids(&next));
+        cur = next;
+    }
+    levels
+}
+
+fn mask_to_ids(mask: &[bool]) -> Vec<NodeId> {
+    mask.iter()
+        .enumerate()
+        .filter(|(_, &m)| m)
+        .map(|(v, _)| v as NodeId)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Csr {
+        // rows (dst): 0 <- {1, 2}, 1 <- {0}, 2 <- {}, 3 <- {1, 1, 3}
+        Csr::from_edges(4, &[(1, 0), (2, 0), (0, 1), (1, 3), (1, 3), (3, 3)])
+    }
+
+    #[test]
+    fn compact_applies_adds_and_removes() {
+        let g = base();
+        let mut delta = PartitionDelta::new(0, 4);
+        let batch = UpdateBatch {
+            add_edges: vec![(3, 2), (0, 0)],
+            remove_edges: vec![(2, 0), (1, 3), (3, 1)], // (3,1) absent: no-op
+            feature_updates: vec![],
+        };
+        batch.validate(4, 1).unwrap();
+        let (staged_adds, staged_removes) = delta.stage(&batch);
+        assert_eq!((staged_adds, staged_removes), (2, 3));
+        let (updated, dirty) = delta.compact(&g);
+        updated.validate().unwrap();
+        assert_eq!(updated.row(0), &[0, 1]); // removed 2, added 0
+        assert_eq!(updated.row(1), &[0]); // tombstone for absent edge: unchanged
+        assert_eq!(updated.row(2), &[3]);
+        assert_eq!(updated.row(3), &[1, 3]); // one of the two (1,3) instances removed
+        assert_eq!(dirty, vec![0, 2, 3]);
+        assert!(delta.is_empty(), "compaction consumes the staging area");
+    }
+
+    #[test]
+    fn compact_matches_from_scratch_rebuild() {
+        // The compacted CSR must equal Csr::from_edges over the edited
+        // edge multiset — rows sorted, multi-edges preserved.
+        let g = base();
+        let mut delta = PartitionDelta::new(0, 4);
+        let batch = UpdateBatch {
+            add_edges: vec![(2, 2), (0, 3)],
+            remove_edges: vec![(1, 0)],
+            feature_updates: vec![],
+        };
+        delta.stage(&batch);
+        let (updated, _) = delta.compact(&g);
+        let rebuilt = Csr::from_edges(
+            4,
+            &[(2, 0), (0, 1), (1, 3), (1, 3), (3, 3), (2, 2), (0, 3)],
+        );
+        assert_eq!(updated, rebuilt);
+    }
+
+    #[test]
+    fn stage_filters_by_row_range() {
+        let mut delta = PartitionDelta::new(2, 4);
+        let batch = UpdateBatch {
+            add_edges: vec![(0, 1), (0, 2), (0, 3)],
+            remove_edges: vec![(1, 0), (1, 3)],
+            feature_updates: vec![],
+        };
+        assert_eq!(delta.stage(&batch), (2, 1));
+    }
+
+    #[test]
+    fn restrict_keeps_only_frontier_rows() {
+        let g = base();
+        let r = restrict_rows(&g, &[0, 3]);
+        r.validate().unwrap();
+        assert_eq!(r.n_rows, g.n_rows);
+        assert_eq!(r.row(0), g.row(0));
+        assert_eq!(r.degree(1), 0);
+        assert_eq!(r.degree(2), 0);
+        assert_eq!(r.row(3), g.row(3));
+        assert_eq!(restrict_rows(&g, &[]).n_edges(), 0);
+    }
+
+    #[test]
+    fn replace_swaps_named_rows() {
+        let g = base();
+        let r = replace_rows(&g, &[(1, vec![2, 3]), (2, vec![0])]);
+        r.validate().unwrap();
+        assert_eq!(r.row(0), g.row(0));
+        assert_eq!(r.row(1), &[2, 3]);
+        assert_eq!(r.row(2), &[0]);
+        assert_eq!(r.row(3), g.row(3));
+    }
+
+    #[test]
+    fn stack_round_trips_slices() {
+        let g = base();
+        let top = g.slice_rows(0, 2);
+        let bot = g.slice_rows(2, 4);
+        assert_eq!(stack_partitions(&[&top, &bot]), g);
+    }
+
+    #[test]
+    fn frontier_seeds_and_propagates() {
+        // layer graph (both layers): 0 <- {1}, 1 <- {}, 2 <- {0}, 3 <- {3}
+        let g = Csr::from_edges(4, &[(1, 0), (0, 2), (3, 3)]);
+        let layers = vec![vec![g.clone(), g.clone()]];
+        // feature change at node 1 only
+        let levels = affected_frontier(&layers, &[0], 4, 2, &[], &[1]);
+        assert_eq!(levels.len(), 3);
+        assert_eq!(levels[0], vec![1]);
+        // level 1: node 0 (neighbor 1 changed) and node 1 (self loop)
+        assert_eq!(levels[1], vec![0, 1]);
+        // level 2: 0, 1 (self), 2 (neighbor 0 changed)
+        assert_eq!(levels[2], vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn frontier_dirty_rows_affect_every_level() {
+        let g = Csr::from_edges(4, &[(1, 0), (0, 2), (3, 3)]);
+        let layers = vec![vec![g.clone(), g.clone()]];
+        let levels = affected_frontier(&layers, &[0], 4, 2, &[3], &[]);
+        assert_eq!(levels[0], Vec::<NodeId>::new());
+        assert_eq!(levels[1], vec![3]);
+        assert_eq!(levels[2], vec![3]); // 3's only out-edge is its self edge
+    }
+
+    #[test]
+    fn frontier_respects_partition_offsets() {
+        // two partitions of 2 rows each; partition 1 rows are global 2..4
+        let g = Csr::from_edges(4, &[(1, 0), (0, 2), (3, 3)]);
+        let parts = vec![
+            vec![g.slice_rows(0, 2), g.slice_rows(0, 2)],
+            vec![g.slice_rows(2, 4), g.slice_rows(2, 4)],
+        ];
+        let split = affected_frontier(&parts, &[0, 2], 4, 2, &[], &[1]);
+        let whole_layers = vec![vec![g.clone(), g.clone()]];
+        let whole = affected_frontier(&whole_layers, &[0], 4, 2, &[], &[1]);
+        assert_eq!(split, whole);
+    }
+
+    #[test]
+    fn batch_validation() {
+        let ok = UpdateBatch {
+            add_edges: vec![(0, 1)],
+            remove_edges: vec![],
+            feature_updates: vec![(1, vec![0.0, 1.0])],
+        };
+        assert!(ok.validate(2, 2).is_ok());
+        assert!(!ok.is_empty());
+        assert_eq!(ok.len(), 2);
+        let bad_node = UpdateBatch { add_edges: vec![(0, 5)], ..Default::default() };
+        assert!(bad_node.validate(2, 2).is_err());
+        let bad_dim = UpdateBatch {
+            feature_updates: vec![(0, vec![0.0])],
+            ..Default::default()
+        };
+        assert!(bad_dim.validate(2, 2).is_err());
+        assert!(UpdateBatch::default().is_empty());
+    }
+}

@@ -7,6 +7,7 @@
 pub mod builder;
 pub mod csr;
 pub mod datasets;
+pub mod delta;
 pub mod edgelist;
 pub mod rmat;
 

@@ -1,11 +1,48 @@
 //! Single-machine dense oracles for the GCN and GAT forward passes —
 //! the ground truth the distributed implementations must reproduce
 //! bit-for-bit up to float-accumulation order.
+//!
+//! The per-layer functions ([`gcn_layer`], [`gat_layer`]) are exposed
+//! separately so the delta-inference state (`coordinator::delta`) can
+//! cache every intermediate `H^(l)`; [`gat_layer_rows`] recomputes just a
+//! set of destination rows — the affected-set fallback path for GAT —
+//! with arithmetic identical to the full layer (projection and attention
+//! are row-independent).
 
+use crate::graph::{Csr, NodeId};
 use crate::sampling::LayerGraphs;
 use crate::tensor::{leaky_relu, Matrix};
 
 use super::{ModelKind, ModelWeights};
+
+/// One dense GCN layer over sampled graph `g`: mean aggregation with a
+/// self loop, bias, and optional ReLU.
+pub fn gcn_layer(g: &Csr, h: &Matrix, weights: &ModelWeights, l: usize, relu: bool) -> Matrix {
+    let hw = h.matmul(weights.layer_w(l));
+    let b = weights.layer_b(l);
+    let mut out = Matrix::zeros(h.rows, hw.cols);
+    for r in 0..g.n_rows {
+        let row_nodes = g.row(r);
+        let w = 1.0 / (row_nodes.len() as f32 + 1.0);
+        let orow = out.row_mut(r);
+        for &s in row_nodes {
+            for (o, &x) in orow.iter_mut().zip(hw.row(s as usize)) {
+                *o += w * x;
+            }
+        }
+        // self loop
+        for (o, &x) in orow.iter_mut().zip(hw.row(r)) {
+            *o += w * x;
+        }
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o += b[j];
+            if relu {
+                *o = o.max(0.0);
+            }
+        }
+    }
+    out
+}
 
 /// Dense GCN forward over the sampled layer graphs.
 pub fn gcn_reference(layers: &LayerGraphs, h0: &Matrix, weights: &ModelWeights) -> Matrix {
@@ -14,33 +51,152 @@ pub fn gcn_reference(layers: &LayerGraphs, h0: &Matrix, weights: &ModelWeights) 
     assert_eq!(layers.k(), n_layers);
     let mut h = h0.clone();
     for l in 0..n_layers {
-        let g = &layers.layers[l];
-        let hw = h.matmul(weights.layer_w(l));
-        let b = weights.layer_b(l);
-        let mut out = Matrix::zeros(h.rows, hw.cols);
-        for r in 0..g.n_rows {
-            let row_nodes = g.row(r);
-            let w = 1.0 / (row_nodes.len() as f32 + 1.0);
-            let orow = out.row_mut(r);
-            for &s in row_nodes {
-                for (o, &x) in orow.iter_mut().zip(hw.row(s as usize)) {
-                    *o += w * x;
-                }
-            }
-            // self loop
-            for (o, &x) in orow.iter_mut().zip(hw.row(r)) {
-                *o += w * x;
-            }
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o += b[j];
-                if l + 1 != n_layers {
-                    *o = o.max(0.0);
-                }
-            }
-        }
-        h = out;
+        h = gcn_layer(&layers.layers[l], &h, weights, l, l + 1 != n_layers);
     }
     h
+}
+
+/// One dense GAT layer (additive attention, LeakyReLU(0.2), self-loop in
+/// the softmax, bias, optional ReLU).
+pub fn gat_layer(g: &Csr, h: &Matrix, weights: &ModelWeights, l: usize, relu: bool) -> Matrix {
+    let heads = weights.config.heads;
+    let z = h.matmul(weights.layer_w(l));
+    let d = z.cols;
+    let head_dim = d / heads;
+    let u = z.matmul(weights.layer_a_dst(l)); // n × heads
+    let v = z.matmul(weights.layer_a_src(l)); // n × heads
+    let b = weights.layer_b(l);
+    let mut out = Matrix::zeros(h.rows, d);
+    for r in 0..g.n_rows {
+        let nbrs = g.row(r);
+        gat_row(
+            nbrs,
+            r,
+            |i| z.row(i),
+            |i, hh| u.get(i, hh),
+            |i, hh| v.get(i, hh),
+            heads,
+            head_dim,
+            b,
+            relu,
+            out.row_mut(r),
+        );
+    }
+    out
+}
+
+/// Recompute only the destination rows in `rows` of [`gat_layer`],
+/// projecting just the sources those rows reference. Output row `i`
+/// equals row `rows[i]` of the full layer (projection and attention
+/// scalars are row-independent, so restricting them changes no
+/// arithmetic).
+pub fn gat_layer_rows(
+    g: &Csr,
+    h: &Matrix,
+    weights: &ModelWeights,
+    l: usize,
+    relu: bool,
+    rows: &[NodeId],
+) -> Matrix {
+    let heads = weights.config.heads;
+    // Distinct sources the requested rows touch (self loops included).
+    let mut needed: Vec<usize> = Vec::new();
+    for &r in rows {
+        needed.push(r as usize);
+        needed.extend(g.row(r as usize).iter().map(|&s| s as usize));
+    }
+    needed.sort_unstable();
+    needed.dedup();
+    let sub = h.gather_rows(&needed);
+    let z = sub.matmul(weights.layer_w(l));
+    let d = z.cols;
+    let head_dim = d / heads;
+    let u = z.matmul(weights.layer_a_dst(l));
+    let v = z.matmul(weights.layer_a_src(l));
+    let b = weights.layer_b(l);
+    let at = |global: usize| -> usize {
+        needed.binary_search(&global).expect("source missing from gather")
+    };
+    let mut out = Matrix::zeros(rows.len(), d);
+    for (i, &r) in rows.iter().enumerate() {
+        let nbrs = g.row(r as usize);
+        gat_row(
+            nbrs,
+            r as usize,
+            |gid| z.row(at(gid)),
+            |gid, hh| u.get(at(gid), hh),
+            |gid, hh| v.get(at(gid), hh),
+            heads,
+            head_dim,
+            b,
+            relu,
+            out.row_mut(i),
+        );
+    }
+    out
+}
+
+/// Shared per-destination GAT arithmetic: score neighbors + self, softmax
+/// per head, aggregate, bias, activation. `z_of`/`u_of`/`v_of` resolve a
+/// *global* node id to its projected row / attention scalars.
+#[allow(clippy::too_many_arguments)]
+fn gat_row<'a>(
+    nbrs: &[NodeId],
+    r: usize,
+    z_of: impl Fn(usize) -> &'a [f32],
+    u_of: impl Fn(usize, usize) -> f32,
+    v_of: impl Fn(usize, usize) -> f32,
+    heads: usize,
+    head_dim: usize,
+    b: &[f32],
+    relu: bool,
+    orow: &mut [f32],
+) {
+    // raw scores per head: neighbors then self
+    let mut scores = vec![0.0f32; (nbrs.len() + 1) * heads];
+    for (i, &s) in nbrs.iter().enumerate() {
+        for hh in 0..heads {
+            scores[i * heads + hh] = leaky_relu(u_of(r, hh) + v_of(s as usize, hh));
+        }
+    }
+    for hh in 0..heads {
+        scores[nbrs.len() * heads + hh] = leaky_relu(u_of(r, hh) + v_of(r, hh));
+    }
+    // softmax per head
+    let mut alpha = scores.clone();
+    for hh in 0..heads {
+        let mut mx = f32::NEG_INFINITY;
+        for i in 0..=nbrs.len() {
+            mx = mx.max(scores[i * heads + hh]);
+        }
+        let mut sum = 0.0;
+        for i in 0..=nbrs.len() {
+            let e = (scores[i * heads + hh] - mx).exp();
+            alpha[i * heads + hh] = e;
+            sum += e;
+        }
+        for i in 0..=nbrs.len() {
+            alpha[i * heads + hh] /= sum;
+        }
+    }
+    // weighted aggregation
+    let d = orow.len();
+    for (i, &s) in nbrs.iter().enumerate() {
+        let zrow = z_of(s as usize);
+        for j in 0..d {
+            orow[j] += alpha[i * heads + j / head_dim] * zrow[j];
+        }
+    }
+    let zr = z_of(r);
+    for j in 0..d {
+        orow[j] += alpha[nbrs.len() * heads + j / head_dim] * zr[j];
+    }
+    for (j, o) in orow.iter_mut().enumerate() {
+        *o += b[j];
+        if relu {
+            *o = o.max(0.0);
+        }
+    }
 }
 
 /// Dense GAT forward over the sampled layer graphs (additive attention,
@@ -49,66 +205,9 @@ pub fn gcn_reference(layers: &LayerGraphs, h0: &Matrix, weights: &ModelWeights) 
 pub fn gat_reference(layers: &LayerGraphs, h0: &Matrix, weights: &ModelWeights) -> Matrix {
     assert_eq!(weights.config.kind, ModelKind::Gat);
     let n_layers = weights.config.layers;
-    let heads = weights.config.heads;
     let mut h = h0.clone();
     for l in 0..n_layers {
-        let g = &layers.layers[l];
-        let z = h.matmul(weights.layer_w(l));
-        let d = z.cols;
-        let head_dim = d / heads;
-        let u = z.matmul(weights.layer_a_dst(l)); // n × heads
-        let v = z.matmul(weights.layer_a_src(l)); // n × heads
-        let b = weights.layer_b(l);
-        let mut out = Matrix::zeros(h.rows, d);
-        for r in 0..g.n_rows {
-            let nbrs = g.row(r);
-            // raw scores per head: neighbors then self
-            let mut scores = vec![0.0f32; (nbrs.len() + 1) * heads];
-            for (i, &s) in nbrs.iter().enumerate() {
-                for hh in 0..heads {
-                    scores[i * heads + hh] = leaky_relu(u.get(r, hh) + v.get(s as usize, hh));
-                }
-            }
-            for hh in 0..heads {
-                scores[nbrs.len() * heads + hh] = leaky_relu(u.get(r, hh) + v.get(r, hh));
-            }
-            // softmax per head
-            let mut alpha = scores.clone();
-            for hh in 0..heads {
-                let mut mx = f32::NEG_INFINITY;
-                for i in 0..=nbrs.len() {
-                    mx = mx.max(scores[i * heads + hh]);
-                }
-                let mut sum = 0.0;
-                for i in 0..=nbrs.len() {
-                    let e = (scores[i * heads + hh] - mx).exp();
-                    alpha[i * heads + hh] = e;
-                    sum += e;
-                }
-                for i in 0..=nbrs.len() {
-                    alpha[i * heads + hh] /= sum;
-                }
-            }
-            // weighted aggregation
-            let orow = out.row_mut(r);
-            for (i, &s) in nbrs.iter().enumerate() {
-                let zrow = z.row(s as usize);
-                for j in 0..d {
-                    orow[j] += alpha[i * heads + j / head_dim] * zrow[j];
-                }
-            }
-            let zr = z.row(r);
-            for j in 0..d {
-                orow[j] += alpha[nbrs.len() * heads + j / head_dim] * zr[j];
-            }
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o += b[j];
-                if l + 1 != n_layers {
-                    *o = o.max(0.0);
-                }
-            }
-        }
-        h = out;
+        h = gat_layer(&layers.layers[l], &h, weights, l, l + 1 != n_layers);
     }
     h
 }
@@ -188,6 +287,22 @@ mod tests {
         let out = gat_reference(&layers, &h0, &w);
         for v in &out.data {
             assert!((v - 1.5).abs() < 1e-5, "convex combination broken: {}", v);
+        }
+    }
+
+    #[test]
+    fn gat_layer_rows_matches_full_layer() {
+        let g = Csr::from(&rmat(6, 400, RmatParams::paper(), 9));
+        let cfg = ModelConfig::gat(1, 8, 4);
+        let w = ModelWeights::random(&cfg, 11);
+        let mut rng = Rng::new(12);
+        let h = Matrix::random(g.n_rows, 8, 1.0, &mut rng);
+        let full = gat_layer(&g, &h, &w, 0, true);
+        let rows: [NodeId; 4] = [0, 5, 17, (g.n_rows - 1) as NodeId];
+        let got = gat_layer_rows(&g, &h, &w, 0, true, &rows);
+        for (i, &r) in rows.iter().enumerate() {
+            // row-independent arithmetic: restriction is bit-exact
+            assert_eq!(got.row(i), full.row(r as usize), "row {} diverged", r);
         }
     }
 

@@ -108,6 +108,56 @@ pub fn sample_rebuild_per_layer(g: &Csr, k: usize, fanout: usize, seed: u64) -> 
     LayerGraphs { layers }
 }
 
+/// One row's `k` per-layer sampled neighbor lists (sorted, as they appear
+/// in the layer CSRs built by [`sample_all_layers`]).
+pub type RowSamples = Vec<Vec<NodeId>>;
+
+/// Re-draw the per-layer samples of the given rows of `g` exactly as
+/// [`sample_all_layers`]`(g, k, fanout, seed)` would: the per-row RNG is
+/// forked from the row id alone, so a row's draw depends only on its own
+/// (current) neighbor list. This is what makes incremental re-sampling
+/// sound (`graph::delta`): after an update batch, re-drawing just the
+/// dirty rows reproduces bit-for-bit the layer graphs a from-scratch
+/// sampling pass over the updated CSR would build.
+///
+/// Returns one [`RowSamples`] per requested row. Each list is sorted —
+/// matching the row order `Csr::from_edges_rect` establishes — so the
+/// results can be patched into layer CSRs with `graph::delta::replace_rows`.
+pub fn resample_rows(
+    g: &Csr,
+    rows: &[usize],
+    k: usize,
+    fanout: usize,
+    seed: u64,
+) -> Vec<RowSamples> {
+    let base = Rng::new(seed);
+    let mut out = Vec::with_capacity(rows.len());
+    for &v in rows {
+        let row = g.row(v);
+        if row.is_empty() {
+            out.push(vec![Vec::new(); k]);
+            continue;
+        }
+        if fanout == 0 {
+            // full-neighborhood mode: every layer is the input graph
+            out.push(vec![row.to_vec(); k]);
+            continue;
+        }
+        let mut rng = base.fork(v as u64);
+        let mut pool: Vec<NodeId> = row.to_vec();
+        let take = fanout.min(pool.len());
+        let mut per_layer: RowSamples = Vec::with_capacity(k);
+        for _ in 0..k {
+            partial_shuffle(&mut pool, take, &mut rng);
+            let mut sample: Vec<NodeId> = pool[..take].to_vec();
+            sample.sort_unstable();
+            per_layer.push(sample);
+        }
+        out.push(per_layer);
+    }
+    out
+}
+
 /// Partial Fisher–Yates: after the call, `pool[..take]` is a uniform
 /// without-replacement sample (any starting permutation works).
 #[inline]
@@ -310,6 +360,32 @@ mod tests {
             shared,
             rebuild
         );
+    }
+
+    #[test]
+    fn resample_rows_matches_full_sampling() {
+        let g = test_graph();
+        let (k, fanout, seed) = (3, 5, 7);
+        let lg = sample_all_layers(&g, k, fanout, seed);
+        let rows = [0usize, 3, 17, 100, g.n_rows - 1];
+        let drawn = resample_rows(&g, &rows, k, fanout, seed);
+        for (i, &v) in rows.iter().enumerate() {
+            for l in 0..k {
+                assert_eq!(
+                    drawn[i][l].as_slice(),
+                    lg.layers[l].row(v),
+                    "row {} layer {} diverged",
+                    v,
+                    l
+                );
+            }
+        }
+        // full-neighborhood mode resamples to the whole (sorted) row
+        let full = resample_rows(&g, &rows, 2, 0, seed);
+        for (i, &v) in rows.iter().enumerate() {
+            assert_eq!(full[i][0].as_slice(), g.row(v));
+            assert_eq!(full[i][1].as_slice(), g.row(v));
+        }
     }
 
     #[test]

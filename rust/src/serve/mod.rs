@@ -31,7 +31,7 @@ pub mod shard;
 
 pub use batch::{top_k, SimilarBatch};
 pub use pool::{PoolOpts, PoolStats, ServePool, StatsMark, Ticket};
-pub use refresh::{RefreshReport, Refresher, TableCell};
+pub use refresh::{refresh_delta, DeltaRefreshReport, RefreshReport, Refresher, TableCell};
 pub use shard::ShardedTable;
 
 use std::time::Instant;
@@ -174,13 +174,23 @@ pub fn serve_workload_pooled(
     let total = t0.elapsed().as_secs_f64();
     // only this workload's counters, even on a reused pool
     let stats = pool.stats_since(&mark);
+    anyhow::ensure!(stats.served > 0, "no requests completed");
+    // The latency reservoir is a uniform sample of the pool's lifetime:
+    // on a long-lived pool a small post-mark window can retain zero
+    // samples. That is sampling thinness, not failure — fall back to the
+    // lifetime summary rather than erroring on a served workload.
+    let latency = match stats.latency {
+        Some(l) => l,
+        None => pool
+            .stats()
+            .latency
+            .ok_or_else(|| anyhow::anyhow!("no requests completed"))?,
+    };
     Ok((
         responses,
         ServeStats {
             requests: stats.served as usize,
-            latency: stats
-                .latency
-                .ok_or_else(|| anyhow::anyhow!("no requests completed"))?,
+            latency,
             throughput: stats.served as f64 / total.max(1e-12),
         },
     ))

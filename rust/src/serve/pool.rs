@@ -17,7 +17,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::runtime::Backend;
-use crate::util::stats::Summary;
+use crate::util::stats::{Reservoir, Summary};
 use crate::Result;
 
 use super::batch::SimilarBatch;
@@ -36,11 +36,21 @@ pub struct PoolOpts {
     /// Start with workers gated; call `ServePool::resume` to begin
     /// draining (deterministic tests, warm-up control).
     pub start_paused: bool,
+    /// Latency reservoir slots: percentiles are computed over a uniform
+    /// sample of this many replies (memory stays O(1) on a long-lived
+    /// pool while p50/p99 keep describing the whole reply stream).
+    pub latency_reservoir: usize,
 }
 
 impl Default for PoolOpts {
     fn default() -> Self {
-        PoolOpts { workers: 4, queue_capacity: 1024, max_batch: 64, start_paused: false }
+        PoolOpts {
+            workers: 4,
+            queue_capacity: 1024,
+            max_batch: 64,
+            start_paused: false,
+            latency_reservoir: 1 << 16,
+        }
     }
 }
 
@@ -83,20 +93,34 @@ impl Gate {
     }
 }
 
-/// Hard cap on retained latency samples: a long-lived pool must not grow
-/// memory without bound, and `Summary::of` cost stays bounded. Once hit,
-/// percentiles describe the first `LATENCY_CAP` replies of the pool's
-/// lifetime; counters keep counting.
-const LATENCY_CAP: usize = 1 << 20;
+/// Seed for the latency reservoir's replacement RNG (sampling noise only;
+/// no security or reproducibility contract rides on it).
+const LATENCY_RNG_SEED: u64 = 0x1A7E9C1;
 
-#[derive(Default)]
 struct MetricsInner {
     served: u64,
     failed: u64,
     batches: u64,
     max_batch_seen: u64,
     coalesced_similar: u64,
-    latencies: Vec<f64>,
+    /// Uniform reservoir over every reply's enqueue-to-reply latency:
+    /// bounded memory, but — unlike the capped prefix this replaced —
+    /// percentiles keep describing the *whole* reply stream, however long
+    /// the pool lives.
+    latencies: Reservoir,
+}
+
+impl MetricsInner {
+    fn new(reservoir_cap: usize) -> MetricsInner {
+        MetricsInner {
+            served: 0,
+            failed: 0,
+            batches: 0,
+            max_batch_seen: 0,
+            coalesced_similar: 0,
+            latencies: Reservoir::new(reservoir_cap, LATENCY_RNG_SEED),
+        }
+    }
 }
 
 /// Counter snapshot delimiting a workload on a long-lived pool (see
@@ -108,7 +132,9 @@ pub struct StatsMark {
     rejected: u64,
     batches: u64,
     coalesced_similar: u64,
-    latency_idx: usize,
+    /// Reply-stream position: replies observed after the mark carry a
+    /// reservoir sequence number `>= latency_seen`.
+    latency_seen: u64,
 }
 
 /// Serving statistics snapshot.
@@ -152,13 +178,14 @@ impl ServePool {
     pub fn spawn(cell: Arc<TableCell>, backend: Arc<dyn Backend>, opts: PoolOpts) -> ServePool {
         assert!(opts.workers >= 1, "pool needs at least one worker");
         assert!(opts.queue_capacity >= 1, "queue capacity must be >= 1");
+        assert!(opts.latency_reservoir >= 1, "latency reservoir needs >= 1 slot");
         let (tx, rx) = std::sync::mpsc::sync_channel::<Job>(opts.queue_capacity);
         let shared = Arc::new(Shared {
             table: cell,
             backend,
             queue: Mutex::new(rx),
             gate: Gate::default(),
-            metrics: Mutex::new(MetricsInner::default()),
+            metrics: Mutex::new(MetricsInner::new(opts.latency_reservoir)),
             rejected: AtomicU64::new(0),
             max_batch: opts.max_batch.max(1),
         });
@@ -231,15 +258,17 @@ impl ServePool {
             rejected: self.shared.rejected.load(AtomicOrdering::Relaxed),
             batches: m.batches,
             coalesced_similar: m.coalesced_similar,
-            latency_idx: m.latencies.len(),
+            latency_seen: m.latencies.seen(),
         }
     }
 
-    /// Statistics accumulated since `mark`. Latency covers exactly the
-    /// replies recorded after the mark (interleaved foreign clients, if
-    /// any, are attributed too — marks delimit time, not requests).
-    /// `max_batch_seen` remains the pool-lifetime maximum (a windowed max
-    /// is not reconstructible from counters).
+    /// Statistics accumulated since `mark`. Latency summarizes the
+    /// reservoir's retained post-mark replies — a uniform (if thinner)
+    /// sample of the window, however many replies preceded the mark
+    /// (interleaved foreign clients, if any, are attributed too — marks
+    /// delimit time, not requests). `max_batch_seen` remains the
+    /// pool-lifetime maximum (a windowed max is not reconstructible from
+    /// counters).
     pub fn stats_since(&self, mark: &StatsMark) -> PoolStats {
         self.stats_from(
             mark.served,
@@ -247,7 +276,7 @@ impl ServePool {
             mark.failed,
             mark.batches,
             mark.coalesced_similar,
-            mark.latency_idx,
+            mark.latency_seen,
         )
     }
 
@@ -258,7 +287,7 @@ impl ServePool {
         failed0: u64,
         batches0: u64,
         coalesced0: u64,
-        latency_idx: usize,
+        latency_seen0: u64,
     ) -> PoolStats {
         // Copy the window out under the lock; sort/scan outside it so a
         // stats poll never stalls worker batch accounting.
@@ -270,7 +299,7 @@ impl ServePool {
                 m.batches - batches0,
                 m.max_batch_seen,
                 m.coalesced_similar - coalesced0,
-                m.latencies[latency_idx.min(m.latencies.len())..].to_vec(),
+                m.latencies.values_since(latency_seen0),
             )
         };
         PoolStats {
@@ -429,8 +458,9 @@ fn serve_batch(shared: &Shared, batch: Vec<Job>) {
         m.batches += 1;
         m.max_batch_seen = m.max_batch_seen.max(n_jobs);
         m.coalesced_similar += coalesced;
-        let room = LATENCY_CAP.saturating_sub(m.latencies.len());
-        m.latencies.extend(lats.into_iter().take(room));
+        for l in lats {
+            m.latencies.push(l);
+        }
     }
     for (tx, reply) in to_send {
         // The requester may have given up (dropped its Ticket); ignore.
@@ -497,9 +527,48 @@ mod tests {
     }
 
     #[test]
+    fn latency_reservoir_observes_late_replies() {
+        // Regression: the old accounting kept only the first LATENCY_CAP
+        // replies, so a mark placed after the cap filled observed an empty
+        // latency window forever (and lifetime percentiles described only
+        // the pool's first minutes). The reservoir keeps admitting late
+        // replies at bounded memory.
+        let (_, cell) = setup(16, 4, 2);
+        let opts = PoolOpts {
+            workers: 1,
+            queue_capacity: 256,
+            max_batch: 1,
+            latency_reservoir: 16,
+            ..PoolOpts::default()
+        };
+        let pool = ServePool::spawn(cell, Arc::new(Native), opts);
+        // fill the reservoir three times over...
+        for _ in 0..48 {
+            pool.call(Request::Embed(vec![1])).unwrap();
+        }
+        let mark = pool.mark();
+        // ...then serve a post-mark workload 3x the pre-mark one
+        for _ in 0..144 {
+            pool.call(Request::Embed(vec![2])).unwrap();
+        }
+        let since = pool.stats_since(&mark);
+        assert_eq!(since.served, 144);
+        let window = since.latency.expect("post-mark replies must stay observable");
+        assert!(window.n >= 1 && window.n <= 16, "window n={}", window.n);
+        let lifetime = pool.shutdown().latency.expect("lifetime latency");
+        assert!(lifetime.n <= 16, "reservoir must stay bounded, n={}", lifetime.n);
+    }
+
+    #[test]
     fn paused_pool_coalesces_the_backlog() {
         let (_, cell) = setup(64, 8, 2);
-        let opts = PoolOpts { workers: 1, queue_capacity: 64, max_batch: 64, start_paused: true };
+        let opts = PoolOpts {
+            workers: 1,
+            queue_capacity: 64,
+            max_batch: 64,
+            start_paused: true,
+            ..PoolOpts::default()
+        };
         let pool = ServePool::spawn(cell, Arc::new(Native), opts);
         let tickets: Vec<Ticket> = (0..10)
             .map(|i| pool.submit(Request::Similar { ids: vec![i as u32], k: 3 }).unwrap())

@@ -8,6 +8,8 @@
 //! immutable epoch snapshot: refresh publishes a whole new table and the
 //! worker pool pins the old one per batch (`refresh::TableCell`).
 
+use std::sync::Arc;
+
 use crate::partition::PartitionPlan;
 use crate::tensor::Matrix;
 use crate::Result;
@@ -19,7 +21,9 @@ pub struct ShardedTable {
     /// `PartitionPlan::serving`).
     pub plan: PartitionPlan,
     /// `plan.p` row blocks; shard `s` holds rows `plan.node_range(s)`.
-    shards: Vec<Matrix>,
+    /// `Arc`-held so a delta epoch (`patched`) shares untouched shards
+    /// with its predecessor and copies only the shards it writes.
+    shards: Vec<Arc<Matrix>>,
     /// Refresh epoch this table was published at (0 = initial load).
     epoch: u64,
 }
@@ -32,7 +36,7 @@ impl ShardedTable {
         let blocks = (0..shards)
             .map(|s| {
                 let (lo, hi) = plan.node_range(s);
-                full.slice_rows(lo, hi)
+                Arc::new(full.slice_rows(lo, hi))
             })
             .collect();
         ShardedTable { plan, shards: blocks, epoch }
@@ -48,7 +52,7 @@ impl ShardedTable {
         let blocks = (0..serving.p)
             .map(|s| {
                 let (lo, hi) = serving.node_range(s);
-                full.slice_rows(lo, hi)
+                Arc::new(full.slice_rows(lo, hi))
             })
             .collect();
         ShardedTable { plan: serving, shards: blocks, epoch }
@@ -81,7 +85,7 @@ impl ShardedTable {
 
     /// Shard `s`'s row block.
     pub fn shard(&self, s: usize) -> &Matrix {
-        &self.shards[s]
+        self.shards[s].as_ref()
     }
 
     /// Global row range `[lo, hi)` held by shard `s`.
@@ -112,9 +116,47 @@ impl ShardedTable {
         Ok(out)
     }
 
+    /// A copy of this table with the named rows replaced — the delta-epoch
+    /// publish path (`refresh::refresh_delta`): instead of rebuilding the
+    /// whole table from a full recompute, only the rows an update batch
+    /// affected are patched into the next double-buffered epoch. Shards
+    /// are copy-on-write: untouched shards are shared with this table, so
+    /// the patch costs O(touched shards), not O(N). `values` holds one
+    /// row per id, in order. The receiver keeps this table's epoch stamp;
+    /// `TableCell::publish` re-stamps on swap.
+    pub fn patched(&self, ids: &[u32], values: &Matrix) -> Result<ShardedTable> {
+        anyhow::ensure!(
+            ids.len() == values.rows,
+            "{} ids for {} value rows",
+            ids.len(),
+            values.rows
+        );
+        anyhow::ensure!(
+            values.cols == self.dim() || ids.is_empty(),
+            "patch width {} != table dim {}",
+            values.cols,
+            self.dim()
+        );
+        let mut next = self.clone();
+        for (i, &v) in ids.iter().enumerate() {
+            anyhow::ensure!(
+                (v as usize) < self.n_nodes(),
+                "patch row {} out of range ({} nodes)",
+                v,
+                self.n_nodes()
+            );
+            let s = next.plan.node_owner(v);
+            let (lo, _) = next.plan.node_range(s);
+            Arc::make_mut(&mut next.shards[s])
+                .row_mut(v as usize - lo)
+                .copy_from_slice(values.row(i));
+        }
+        Ok(next)
+    }
+
     /// Reassemble the full matrix (tests / debugging).
     pub fn to_full(&self) -> Matrix {
-        let refs: Vec<&Matrix> = self.shards.iter().collect();
+        let refs: Vec<&Matrix> = self.shards.iter().map(|s| s.as_ref()).collect();
         Matrix::vcat(&refs)
     }
 
@@ -170,6 +212,39 @@ mod tests {
         let (_, t) = table(10, 3, 2);
         assert!(t.try_gather(&[9]).is_ok());
         assert!(t.try_gather(&[10]).is_err());
+    }
+
+    #[test]
+    fn patched_replaces_only_named_rows() {
+        let (full, t) = table(30, 4, 3);
+        let patch = Matrix::from_vec(2, 4, vec![9.0; 8]);
+        let p = t.patched(&[3, 27], &patch).unwrap();
+        assert_eq!(p.row(3), patch.row(0));
+        assert_eq!(p.row(27), patch.row(1));
+        for v in 0..30u32 {
+            if v != 3 && v != 27 {
+                assert_eq!(p.row(v), full.row(v as usize), "row {} changed", v);
+            }
+        }
+        // the source table is untouched (double buffering)
+        assert_eq!(t.to_full(), full);
+        // copy-on-write: only the shards that were written got copied
+        for s in 0..t.num_shards() {
+            let (lo, hi) = t.shard_range(s);
+            let touched = (lo..hi).contains(&3) || (lo..hi).contains(&27);
+            assert_eq!(
+                Arc::ptr_eq(&t.shards[s], &p.shards[s]),
+                !touched,
+                "shard {} sharing is wrong",
+                s
+            );
+        }
+        // arity and range errors
+        assert!(t.patched(&[0], &Matrix::zeros(2, 4)).is_err());
+        assert!(t.patched(&[30], &Matrix::zeros(1, 4)).is_err());
+        assert!(t.patched(&[0], &Matrix::zeros(1, 3)).is_err());
+        let empty = t.patched(&[], &Matrix::zeros(0, 0)).unwrap();
+        assert_eq!(empty.to_full(), full);
     }
 
     #[test]

@@ -1,5 +1,8 @@
 //! Small statistics helpers shared by the bench harness and the serving
-//! front end (latency percentiles).
+//! front end (latency percentiles), plus a bounded uniform [`Reservoir`]
+//! so long-lived pools report honest percentiles at O(1) memory.
+
+use super::rng::Rng;
 
 /// Summary statistics over a sample of `f64` observations.
 #[derive(Clone, Debug, PartialEq)]
@@ -54,6 +57,73 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Bounded uniform sample of an unbounded observation stream (Vitter's
+/// Algorithm R): after `n` pushes every observation is retained with
+/// probability `cap / n`, so percentiles over the sample estimate the
+/// whole stream's — not just its first `cap` entries. Each retained
+/// sample keeps its arrival sequence number, so a caller can also
+/// summarize just the observations after a mark (`ServePool::stats_since`
+/// windows).
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    /// `(arrival sequence, value)` pairs, at most `cap` of them.
+    samples: Vec<(u64, f64)>,
+    rng: Rng,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        assert!(cap >= 1, "reservoir capacity must be >= 1");
+        Reservoir { cap, seen: 0, samples: Vec::new(), rng: Rng::new(seed) }
+    }
+
+    /// Observe one value.
+    pub fn push(&mut self, v: f64) {
+        let seq = self.seen;
+        if self.samples.len() < self.cap {
+            self.samples.push((seq, v));
+        } else {
+            let j = self.rng.next_below((seq + 1) as usize);
+            if j < self.cap {
+                self.samples[j] = (seq, v);
+            }
+        }
+        self.seen += 1;
+    }
+
+    /// Total observations pushed (not just retained).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Retained sample count.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Retained values whose arrival sequence is `>= mark` (a uniform —
+    /// if thinner — sample of the stream after the mark).
+    pub fn values_since(&self, mark: u64) -> Vec<f64> {
+        self.samples.iter().filter(|&&(s, _)| s >= mark).map(|&(_, v)| v).collect()
+    }
+
+    /// Summary over the whole retained sample.
+    pub fn summary(&self) -> Option<Summary> {
+        self.summary_since(0)
+    }
+
+    /// Summary over the retained post-`mark` observations.
+    pub fn summary_since(&self, mark: u64) -> Option<Summary> {
+        Summary::of(&self.values_since(mark))
+    }
+}
+
 /// Geometric mean of positive values (used for "average speedup" rows).
 pub fn geomean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -88,6 +158,45 @@ mod tests {
         assert!((percentile_sorted(&sorted, 0.5) - 5.0).abs() < 1e-12);
         assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
         assert_eq!(percentile_sorted(&sorted, 1.0), 10.0);
+    }
+
+    #[test]
+    fn reservoir_caps_and_stays_representative() {
+        // Stream 0..10_000 through a 256-slot reservoir: the retained
+        // sample must stay capped and its percentiles must describe the
+        // WHOLE stream, not its first 256 entries (the bug this replaced).
+        let mut r = Reservoir::new(256, 7);
+        for i in 0..10_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 256);
+        assert_eq!(r.seen(), 10_000);
+        let s = r.summary().unwrap();
+        assert_eq!(s.n, 256);
+        // a uniform 256-sample of [0, 10000) concentrates tightly; these
+        // bounds hold for any seed with overwhelming probability
+        assert!(s.p50 > 3_500.0 && s.p50 < 6_500.0, "p50={}", s.p50);
+        assert!(s.max > 7_000.0, "max={}", s.max);
+        // the capped-prefix accounting would have reported p50 ≈ 128
+        assert!(s.p50 > 1_000.0);
+    }
+
+    #[test]
+    fn reservoir_windows_by_sequence() {
+        let mut r = Reservoir::new(8, 3);
+        for i in 0..4 {
+            r.push(i as f64);
+        }
+        let mark = r.seen();
+        for i in 100..104 {
+            r.push(i as f64);
+        }
+        // below capacity: everything retained, window filter is exact
+        let w = r.values_since(mark);
+        assert_eq!(w.len(), 4);
+        assert!(w.iter().all(|&v| v >= 100.0));
+        assert_eq!(r.summary_since(mark).unwrap().n, 4);
+        assert!(r.summary_since(r.seen()).is_none());
     }
 
     #[test]

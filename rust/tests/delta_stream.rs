@@ -1,0 +1,117 @@
+//! Delta-parity integration (DESIGN.md §Delta): after replaying an update
+//! trace through the incremental path, the state's embeddings must match
+//! a from-scratch full-pipeline recompute on the updated graph — for
+//! every feature-preparation strategy and both models.
+//!
+//! Tolerance: the delta state and the distributed pipeline each sit
+//! within the end-to-end parity bound (2e-3, see `tests/end_to_end.rs`)
+//! of the dense reference on the updated graph — unchanged rows because
+//! sampling is per-row deterministic, affected rows because they are
+//! recomputed from cached values. The triangle inequality bounds their
+//! mutual distance by twice that.
+
+use deal::config::DealConfig;
+use deal::coordinator::delta::{DeltaState, UpdateBatch};
+use deal::coordinator::Pipeline;
+use deal::util::prop::assert_close;
+use deal::util::rng::Rng;
+
+/// Twice the end-to-end parity tolerance (triangle inequality; see the
+/// module docs).
+const DELTA_ATOL: f32 = 4e-3;
+const DELTA_RTOL: f32 = 4e-3;
+
+fn stream_cfg(kind: &str, prep: &str) -> DealConfig {
+    let mut cfg = DealConfig::default();
+    cfg.dataset.name = "products-sim".into();
+    cfg.dataset.scale = 1.0 / 256.0; // 256 nodes
+    cfg.cluster.machines = 4;
+    cfg.cluster.feature_parts = 2;
+    cfg.model.kind = kind.into();
+    cfg.model.layers = 2;
+    cfg.model.fanout = 5;
+    cfg.exec.feature_prep = prep.into();
+    cfg
+}
+
+/// Replay `batches` synthetic update batches (edge adds + removes +
+/// feature updates), then check the incremental embeddings against a full
+/// recompute for every feature-prep strategy.
+fn replay_and_check(kind: &str, batches: usize, seed: u64) {
+    let mut state = DeltaState::init(stream_cfg(kind, "redistribute")).unwrap();
+    let mut rng = Rng::new(seed);
+    for _ in 0..batches {
+        let batch = state.synth_batch(&mut rng, 35, 35, 3);
+        let rep = state.apply(&batch).unwrap();
+        assert_eq!(rep.frontier.len(), 3, "2 layers → 3 frontier levels");
+    }
+    let edges = state.edge_list();
+    let features = state.features().clone();
+    for prep in ["scan", "redistribute", "fused"] {
+        let tag = format!("delta-parity-{}-{}-{}", kind, prep, std::process::id());
+        let pipeline =
+            Pipeline::with_dataset(stream_cfg(kind, prep), &tag, edges.clone(), features.clone());
+        let full = pipeline.run().unwrap().embeddings.unwrap();
+        assert_close(&state.embeddings().data, &full.data, DELTA_ATOL, DELTA_RTOL)
+            .unwrap_or_else(|e| {
+                panic!("{} delta vs full recompute ({} prep): {}", kind, prep, e)
+            });
+    }
+}
+
+#[test]
+fn gcn_delta_matches_full_recompute_every_prep() {
+    replay_and_check("gcn", 3, 0xD17A);
+}
+
+#[test]
+fn gat_delta_matches_full_recompute_every_prep() {
+    replay_and_check("gat", 2, 0x6A77);
+}
+
+#[test]
+fn feature_only_trace_matches_full_recompute() {
+    // No topology churn: sampling must stay bit-identical, so parity
+    // reduces to recomputing the feature-update frontier.
+    let mut state = DeltaState::init(stream_cfg("gcn", "fused")).unwrap();
+    let dim = state.plan().feature_dim;
+    let batch = UpdateBatch {
+        feature_updates: (0..6).map(|v| (v * 17, vec![0.1 * v as f32; dim])).collect(),
+        ..Default::default()
+    };
+    let rep = state.apply(&batch).unwrap();
+    assert_eq!(rep.dirty_rows, 0);
+    assert_eq!(rep.frontier[0], 6);
+    let tag = format!("delta-feat-{}", std::process::id());
+    let pipeline = Pipeline::with_dataset(
+        stream_cfg("gcn", "fused"),
+        &tag,
+        state.edge_list(),
+        state.features().clone(),
+    );
+    let full = pipeline.run().unwrap().embeddings.unwrap();
+    assert_close(&state.embeddings().data, &full.data, DELTA_ATOL, DELTA_RTOL).unwrap();
+}
+
+#[test]
+fn growing_only_trace_matches_full_recompute() {
+    // Insertion-only churn (the common production case: new interactions
+    // stream in, nothing is retracted).
+    let mut state = DeltaState::init(stream_cfg("gcn", "redistribute")).unwrap();
+    let mut rng = Rng::new(0x9);
+    let before = state.n_edges();
+    for _ in 0..2 {
+        let batch = state.synth_batch(&mut rng, 60, 0, 0);
+        state.apply(&batch).unwrap();
+    }
+    assert_eq!(state.n_edges(), before + 120);
+    let tag = format!("delta-grow-{}", std::process::id());
+    let pipeline = Pipeline::with_dataset(
+        stream_cfg("gcn", "redistribute"),
+        &tag,
+        state.edge_list(),
+        state.features().clone(),
+    );
+    let full = pipeline.run().unwrap().embeddings.unwrap();
+    assert_close(&state.embeddings().data, &full.data, DELTA_ATOL, DELTA_RTOL).unwrap();
+}

@@ -1,6 +1,12 @@
 //! Integration: the full distributed pipeline reproduces the
-//! single-machine dense reference, across models, partitionings and
-//! feature-preparation strategies.
+//! single-machine dense reference across the whole configuration matrix —
+//! both models × every feature-preparation strategy × every execution
+//! mode — plus cross-partitioning determinism and baseline agreement.
+//!
+//! Tolerances are explicit constants: distributed tiles accumulate floats
+//! in a different order than the dense oracle, so parity is `PARITY_*`;
+//! two *distributed* configurations share arithmetic shape and agree
+//! tighter (`CONFIG_*`).
 
 use std::sync::Arc;
 
@@ -13,7 +19,18 @@ use deal::graph::{datasets, Csr};
 use deal::model::reference::{gat_reference, gcn_reference};
 use deal::model::{ModelConfig, ModelWeights};
 use deal::sampling::{sample_all_layers, LayerGraphs};
+use deal::tensor::Matrix;
 use deal::util::prop::assert_close;
+
+/// Distributed pipeline vs dense reference (absolute / relative): bounds
+/// the float-accumulation-order divergence after `layers` GNN layers.
+/// `tests/delta_stream.rs` derives its delta-parity tolerance from these.
+const PARITY_ATOL: f32 = 2e-3;
+const PARITY_RTOL: f32 = 2e-3;
+
+/// Two distributed runs of the same computation under different schedules
+/// (exec modes, M splits): same arithmetic, tighter agreement.
+const CONFIG_TOL: f32 = 1e-3;
 
 fn small_cfg() -> DealConfig {
     let mut cfg = DealConfig::default();
@@ -32,7 +49,8 @@ fn pipeline_layer_graphs(cfg: &DealConfig, g: &Csr) -> LayerGraphs {
     let mut layers: Vec<Vec<(u32, u32)>> = vec![Vec::new(); cfg.model.layers];
     for pi in 0..p {
         let sub = g.slice_rows(bounds[pi], bounds[pi + 1]);
-        let lg = sample_all_layers(&sub, cfg.model.layers, cfg.model.fanout, cfg.exec.seed ^ pi as u64);
+        let lg =
+            sample_all_layers(&sub, cfg.model.layers, cfg.model.fanout, cfg.exec.seed ^ pi as u64);
         for (l, layer) in lg.layers.iter().enumerate() {
             for r in 0..layer.n_rows {
                 for &s in layer.row(r) {
@@ -49,27 +67,45 @@ fn pipeline_layer_graphs(cfg: &DealConfig, g: &Csr) -> LayerGraphs {
     }
 }
 
+/// The dense oracle for `small_cfg` under a model kind.
+fn reference_embeddings(kind: &str) -> Matrix {
+    let mut cfg = small_cfg();
+    cfg.model.kind = kind.into();
+    let ds = datasets::load(&cfg.dataset.name, cfg.dataset.scale).unwrap();
+    let g = Csr::from(&ds.edges);
+    let layers = pipeline_layer_graphs(&cfg, &g);
+    let model_cfg = match kind {
+        "gcn" => ModelConfig::gcn(cfg.model.layers, ds.feature_dim),
+        _ => ModelConfig::gat(cfg.model.layers, ds.feature_dim, cfg.model.heads),
+    };
+    let weights = ModelWeights::random(&model_cfg, cfg.exec.seed ^ 0xBEEF);
+    match kind {
+        "gcn" => gcn_reference(&layers, &ds.features, &weights),
+        _ => gat_reference(&layers, &ds.features, &weights),
+    }
+}
+
+/// The parity matrix: GCN and GAT × {scan, redistribute, fused} × every
+/// execution mode, each against the dense reference at `PARITY_*`. (For
+/// GAT, `fused` exercises the documented silent fallback to
+/// redistribute.)
 #[test]
-fn pipeline_matches_dense_reference_gcn_and_gat() {
+fn parity_matrix_pipeline_vs_dense_reference() {
     for kind in ["gcn", "gat"] {
-        let mut cfg = small_cfg();
-        cfg.model.kind = kind.into();
-        cfg.exec.feature_prep = "redistribute".into();
-        let ds = datasets::load(&cfg.dataset.name, cfg.dataset.scale).unwrap();
-        let g = Csr::from(&ds.edges);
-        let layers = pipeline_layer_graphs(&cfg, &g);
-        let model_cfg = match kind {
-            "gcn" => ModelConfig::gcn(2, ds.feature_dim),
-            _ => ModelConfig::gat(2, ds.feature_dim, 4),
-        };
-        let weights = ModelWeights::random(&model_cfg, cfg.exec.seed ^ 0xBEEF);
-        let expect = match kind {
-            "gcn" => gcn_reference(&layers, &ds.features, &weights),
-            _ => gat_reference(&layers, &ds.features, &weights),
-        };
-        let got = Pipeline::new(cfg).run().unwrap().embeddings.unwrap();
-        assert_close(&got.data, &expect.data, 2e-3, 2e-3)
-            .unwrap_or_else(|e| panic!("{}: {}", kind, e));
+        let expect = reference_embeddings(kind);
+        for prep in ["scan", "redistribute", "fused"] {
+            for mode in ["monolithic", "grouped", "pipelined"] {
+                let mut cfg = small_cfg();
+                cfg.model.kind = kind.into();
+                cfg.exec.feature_prep = prep.into();
+                cfg.exec.mode = mode.into();
+                cfg.exec.group_cols = 16;
+                let got = Pipeline::new(cfg).run().unwrap().embeddings.unwrap();
+                assert_close(&got.data, &expect.data, PARITY_ATOL, PARITY_RTOL).unwrap_or_else(
+                    |e| panic!("{} × {} × {} diverged from reference: {}", kind, prep, mode, e),
+                );
+            }
+        }
     }
 }
 
@@ -87,7 +123,7 @@ fn pipeline_deterministic_across_partitionings() {
         outs.push(r.embeddings.unwrap());
     }
     let diff = outs[0].max_abs_diff(&outs[1]);
-    assert!(diff < 1e-3, "M=1 vs M=2 diverged: {}", diff);
+    assert!(diff < CONFIG_TOL, "M=1 vs M=2 diverged: {}", diff);
 }
 
 #[test]
@@ -114,13 +150,13 @@ fn deal_and_baselines_agree_at_full_fanout() {
             BaselineOpts { fanout: 0, batch_size: 64, ..Default::default() },
         )
         .unwrap();
-        assert_close(&base_out.data, &deal_out.data, 2e-3, 2e-3)
+        assert_close(&base_out.data, &deal_out.data, PARITY_ATOL, PARITY_RTOL)
             .unwrap_or_else(|e| panic!("{:?}: {}", engine, e));
     }
 }
 
 #[test]
-fn exec_modes_agree() {
+fn exec_modes_agree_with_each_other() {
     let mut outs = Vec::new();
     for mode in ["monolithic", "grouped", "pipelined"] {
         let mut cfg = small_cfg();
@@ -129,6 +165,7 @@ fn exec_modes_agree() {
         outs.push(Pipeline::new(cfg).run().unwrap().embeddings.unwrap());
     }
     for other in &outs[1..] {
-        assert!(outs[0].max_abs_diff(other) < 1e-4);
+        let diff = outs[0].max_abs_diff(other);
+        assert!(diff < CONFIG_TOL, "exec modes diverged: {}", diff);
     }
 }

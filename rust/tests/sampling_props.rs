@@ -1,0 +1,212 @@
+//! Property tests for `sample_all_layers` — the invariants the whole
+//! pipeline leans on but previously never tested directly:
+//!
+//! - per-row degree is exactly `min(deg, fanout)` and sampled edges are a
+//!   subset of the input CSR;
+//! - `fanout == 0` is the identity (every layer is the input graph);
+//! - same-seed determinism, including across `P × M` layouts: the
+//!   pipeline's "row-group machines derive identical samples without
+//!   communicating" assumption (coordinator stage 3) and the delta path's
+//!   "re-sampling only dirty rows reproduces a from-scratch pass"
+//!   assumption (`sampling::resample_rows`).
+
+use deal::graph::delta::stack_partitions;
+use deal::graph::{Csr, NodeId};
+use deal::sampling::{resample_rows, sample_all_layers, LayerGraphs};
+use deal::util::even_ranges;
+use deal::util::prop::{run, Config};
+use deal::util::rng::Rng;
+
+/// Random multigraph with `n` nodes and about `m` edges.
+fn random_graph(rng: &mut Rng, n: usize, m: usize) -> Csr {
+    let edges: Vec<(NodeId, NodeId)> = (0..m)
+        .map(|_| (rng.next_below(n) as NodeId, rng.next_below(n) as NodeId))
+        .collect();
+    Csr::from_edges(n, &edges)
+}
+
+fn is_subgraph(sampled: &Csr, g: &Csr) -> Result<(), String> {
+    for v in 0..g.n_rows {
+        let orig = g.row(v);
+        for &s in sampled.row(v) {
+            if orig.binary_search(&s).is_err() {
+                return Err(format!("sampled edge {}->{} not in input graph", s, v));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Sample each partition slice with the pipeline's per-partition seed and
+/// stitch the results back together — exactly what coordinator stage 3
+/// materializes across the cluster.
+fn pipeline_style_sample(g: &Csr, p: usize, k: usize, fanout: usize, seed: u64) -> LayerGraphs {
+    let bounds = even_ranges(g.n_rows, p);
+    let per_part: Vec<Vec<Csr>> = (0..p)
+        .map(|pi| {
+            let sub = g.slice_rows(bounds[pi], bounds[pi + 1]);
+            sample_all_layers(&sub, k, fanout, seed ^ pi as u64).layers
+        })
+        .collect();
+    let layers = (0..k)
+        .map(|l| {
+            let refs: Vec<&Csr> = per_part.iter().map(|ls| &ls[l]).collect();
+            stack_partitions(&refs)
+        })
+        .collect();
+    LayerGraphs { layers }
+}
+
+#[test]
+fn degree_is_min_of_fanout_and_input_degree() {
+    run(Config::default().cases(24), |rng| {
+        let n = rng.range(2, 120);
+        let g = random_graph(rng, n, rng.range(0, n * 8));
+        let fanout = rng.range(1, 9);
+        let k = rng.range(1, 4);
+        let lg = sample_all_layers(&g, k, fanout, rng.next_u64());
+        if lg.k() != k {
+            return Err(format!("asked for {} layers, got {}", k, lg.k()));
+        }
+        for layer in &lg.layers {
+            layer.validate()?;
+            for v in 0..n {
+                let expect = g.degree(v).min(fanout);
+                if layer.degree(v) != expect {
+                    return Err(format!(
+                        "row {}: degree {} != min(deg {}, fanout {})",
+                        v,
+                        layer.degree(v),
+                        g.degree(v),
+                        fanout
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sampled_edges_are_subset_of_input() {
+    run(Config::default().cases(24), |rng| {
+        let n = rng.range(2, 100);
+        let g = random_graph(rng, n, rng.range(0, n * 6));
+        let lg = sample_all_layers(&g, rng.range(1, 4), rng.range(1, 8), rng.next_u64());
+        for layer in &lg.layers {
+            is_subgraph(layer, &g)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zero_fanout_is_identity() {
+    run(Config::default().cases(16), |rng| {
+        let n = rng.range(1, 80);
+        let g = random_graph(rng, n, rng.range(0, n * 5));
+        let k = rng.range(1, 4);
+        let lg = sample_all_layers(&g, k, 0, rng.next_u64());
+        for layer in &lg.layers {
+            if layer != &g {
+                return Err("fanout 0 must reproduce the input graph per layer".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn same_seed_same_samples() {
+    run(Config::default().cases(16), |rng| {
+        let n = rng.range(2, 100);
+        let g = random_graph(rng, n, rng.range(0, n * 6));
+        let (k, fanout, seed) = (rng.range(1, 4), rng.range(1, 6), rng.next_u64());
+        let a = sample_all_layers(&g, k, fanout, seed);
+        let b = sample_all_layers(&g, k, fanout, seed);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            if la != lb {
+                return Err("same seed produced different layer graphs".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn different_seeds_differ_on_a_selective_graph() {
+    // Dense fixed graph: thousands of rows have degree ≫ fanout, so two
+    // seeds agreeing everywhere is astronomically unlikely.
+    use deal::graph::rmat::{rmat, RmatParams};
+    let g = Csr::from(&rmat(9, 8000, RmatParams::paper(), 21));
+    let a = sample_all_layers(&g, 2, 5, 1);
+    let b = sample_all_layers(&g, 2, 5, 2);
+    let differing = (0..g.n_rows)
+        .filter(|&v| a.layers[0].row(v) != b.layers[0].row(v))
+        .count();
+    assert!(differing > 0, "different seeds produced identical samples");
+}
+
+/// The coordinator assumption: every machine of a row group re-derives its
+/// partition's samples from `(partition CSR, seed ^ p)` alone, so samples
+/// agree across machines *and* across `M` — and for a fixed `P`, stitching
+/// per-partition samples is deterministic.
+#[test]
+fn row_group_machines_derive_identical_samples_across_layouts() {
+    run(Config::default().cases(8), |rng| {
+        let p = rng.range(1, 5);
+        let n = rng.range(p * 3, 150);
+        let g = random_graph(rng, n, rng.range(n, n * 6));
+        let (k, fanout, seed) = (rng.range(1, 4), rng.range(1, 6), rng.next_u64());
+        let bounds = even_ranges(n, p);
+        // every "machine" (p_idx, m_idx) of every M-layout derives the
+        // partition sample independently; all copies must agree
+        for pi in 0..p {
+            let sub = g.slice_rows(bounds[pi], bounds[pi + 1]);
+            let reference = sample_all_layers(&sub, k, fanout, seed ^ pi as u64);
+            for _m_layout in [1usize, 2, 4] {
+                let again = sample_all_layers(&sub, k, fanout, seed ^ pi as u64);
+                for (la, lb) in reference.layers.iter().zip(&again.layers) {
+                    if la != lb {
+                        return Err(format!("partition {} machines diverged", pi));
+                    }
+                }
+            }
+        }
+        // and the stitched whole is reproducible
+        let a = pipeline_style_sample(&g, p, k, fanout, seed);
+        let b = pipeline_style_sample(&g, p, k, fanout, seed);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            if la != lb {
+                return Err("stitched pipeline sampling not deterministic".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The delta-path assumption: re-drawing any subset of rows reproduces
+/// exactly the rows a full sampling pass would give them.
+#[test]
+fn resample_rows_matches_full_pass_property() {
+    run(Config::default().cases(16), |rng| {
+        let n = rng.range(2, 100);
+        let g = random_graph(rng, n, rng.range(0, n * 6));
+        let (k, seed) = (rng.range(1, 4), rng.next_u64());
+        let fanout = [0usize, 1, 3, 7][rng.next_below(4)];
+        let full = sample_all_layers(&g, k, fanout, seed);
+        let mut rows: Vec<usize> = (0..n).filter(|_| rng.next_below(3) == 0).collect();
+        if rows.is_empty() {
+            rows.push(rng.next_below(n));
+        }
+        let drawn = resample_rows(&g, &rows, k, fanout, seed);
+        for (i, &v) in rows.iter().enumerate() {
+            for l in 0..k {
+                if drawn[i][l].as_slice() != full.layers[l].row(v) {
+                    return Err(format!("row {} layer {}: resample != full pass", v, l));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -56,7 +56,7 @@ fn concurrent_mixed_load_matches_sequential_handle() {
     let full = random_table(n, 16, 11);
     let server = Arc::new(EmbeddingServer::new(full.clone()));
     let cell = Arc::new(TableCell::new(ShardedTable::from_full(&full, 3, 0)));
-    let opts = PoolOpts { workers: 3, queue_capacity: 256, max_batch: 32, start_paused: false };
+    let opts = PoolOpts { workers: 3, queue_capacity: 256, max_batch: 32, ..PoolOpts::default() };
     let pool = Arc::new(ServePool::spawn(cell, Arc::new(Native), opts));
 
     let clients = 6;
@@ -90,7 +90,13 @@ fn coalesced_duplicate_queries_match_sequential_handle() {
     let full = random_table(n, 8, 23);
     let server = EmbeddingServer::new(full.clone());
     let cell = Arc::new(TableCell::new(ShardedTable::from_full(&full, 4, 0)));
-    let opts = PoolOpts { workers: 1, queue_capacity: 64, max_batch: 64, start_paused: true };
+    let opts = PoolOpts {
+        workers: 1,
+        queue_capacity: 64,
+        max_batch: 64,
+        start_paused: true,
+        ..PoolOpts::default()
+    };
     let pool = ServePool::spawn(cell, Arc::new(Native), opts);
 
     let reqs: Vec<Request> = vec![
@@ -121,7 +127,7 @@ fn mid_flight_refresh_never_serves_a_torn_table() {
     let epochs = 8u32;
     let constant = |c: f32| Matrix::from_vec(n, d, vec![c; n * d]);
     let cell = Arc::new(TableCell::new(ShardedTable::from_full(&constant(1.0), 4, 0)));
-    let opts = PoolOpts { workers: 3, queue_capacity: 512, max_batch: 16, start_paused: false };
+    let opts = PoolOpts { workers: 3, queue_capacity: 512, max_batch: 16, ..PoolOpts::default() };
     let pool = Arc::new(ServePool::spawn(Arc::clone(&cell), Arc::new(Native), opts));
 
     let valid_constants: Vec<f32> = (1..=epochs).map(|c| c as f32).collect();
@@ -189,7 +195,13 @@ fn mid_flight_refresh_never_serves_a_torn_table() {
 fn admission_control_rejects_only_when_queue_is_full() {
     let full = random_table(32, 4, 5);
     let cell = Arc::new(TableCell::new(ShardedTable::from_full(&full, 2, 0)));
-    let opts = PoolOpts { workers: 1, queue_capacity: 4, max_batch: 8, start_paused: true };
+    let opts = PoolOpts {
+        workers: 1,
+        queue_capacity: 4,
+        max_batch: 8,
+        start_paused: true,
+        ..PoolOpts::default()
+    };
     let pool = ServePool::spawn(cell, Arc::new(Native), opts);
 
     // gated workers drain nothing: exactly `queue_capacity` admissions
@@ -217,7 +229,13 @@ fn pooled_workload_drops_rejected_requests() {
     // 24 deterministically hit a full queue.
     let full = random_table(64, 4, 6);
     let cell = Arc::new(TableCell::new(ShardedTable::from_full(&full, 2, 0)));
-    let opts = PoolOpts { workers: 1, queue_capacity: 8, max_batch: 8, start_paused: true };
+    let opts = PoolOpts {
+        workers: 1,
+        queue_capacity: 8,
+        max_batch: 8,
+        start_paused: true,
+        ..PoolOpts::default()
+    };
     let pool = Arc::new(ServePool::spawn(cell, Arc::new(Native), opts));
     let mut rng = Rng::new(3);
     let reqs: Vec<Request> = (0..32).map(|_| mixed_request(&mut rng, 64)).collect();
