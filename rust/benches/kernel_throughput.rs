@@ -1,0 +1,197 @@
+//! Intra-rank kernel throughput: parallel-over-scalar speedup for the
+//! three hot kernels the `runtime::par` engine sits under — dense matmul,
+//! CSR SpMM, and CSR construction — plus a thread sweep (EXPERIMENTS.md
+//! §Threads).
+//!
+//! Acceptance: at `PAR_THREADS` (4) pool threads each kernel must beat the
+//! single-thread path by `≥ 2×` when the host has ≥ 4 cores; on smaller
+//! hosts the floor scales down to `0.55 × min(4, cores)` (a 4-thread pool
+//! cannot speed up past the physical core count). `DEAL_KERNEL_BENCH_LAX=1`
+//! (the CI smoke profile) reports without asserting. Besides the human
+//! table, the run emits machine-readable
+//! `target/bench_results/BENCH_kernels.json` so the perf trajectory is
+//! tracked across PRs.
+//!
+//! Every comparison first asserts the parallel output is **bit-identical**
+//! to the scalar one — speed never buys a different answer.
+
+use deal::graph::rmat::{rmat, RmatParams};
+use deal::graph::Csr;
+use deal::primitives::{mean_weights, spmm::spmm_reference};
+use deal::runtime::par;
+use deal::tensor::Matrix;
+use deal::util::bench::{time_fn, BenchArgs, Report, Table};
+use deal::util::rng::Rng;
+
+const PAR_THREADS: usize = 4;
+
+struct KernelResult {
+    name: &'static str,
+    serial_secs: f64,
+    parallel_secs: f64,
+}
+
+impl KernelResult {
+    fn speedup(&self) -> f64 {
+        self.serial_secs / self.parallel_secs.max(1e-12)
+    }
+}
+
+/// Time `f` at 1 pool thread and at `PAR_THREADS`, returning best-of-reps
+/// wall times (min is the standard noise-robust choice for throughput).
+fn compare<F: FnMut()>(
+    name: &'static str,
+    reps: usize,
+    mut f: impl FnMut(usize) -> F,
+) -> KernelResult {
+    let serial = par::with_threads(1, || time_fn(name, 1, reps, f(1)));
+    let parallel = par::with_threads(PAR_THREADS, || time_fn(name, 1, reps, f(PAR_THREADS)));
+    KernelResult {
+        name,
+        serial_secs: serial.summary().min,
+        parallel_secs: parallel.summary().min,
+    }
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let lax = std::env::var("DEAL_KERNEL_BENCH_LAX").map_or(false, |v| v != "0");
+    let cores = par::available();
+    let reps = args.pick(3, 5);
+
+    let mut report = Report::new("kernel_throughput");
+    report.note(format!(
+        "pool threads {} | host cores {} | profile {}{}",
+        PAR_THREADS,
+        cores,
+        if args.quick { "quick" } else { "full" },
+        if lax { " | LAX (report only)" } else { "" },
+    ));
+
+    // ---- inputs -----------------------------------------------------------
+    let mut rng = Rng::new(0xBE7C);
+    let mm = args.pick(192, 384);
+    let a = Matrix::random(mm, mm, 1.0, &mut rng);
+    let b = Matrix::random(mm, mm, 1.0, &mut rng);
+
+    let scale = args.pick(12u32, 14u32);
+    let n_edges = args.pick(300_000, 1_500_000);
+    let el = rmat(scale, n_edges, RmatParams::paper(), 7);
+    let g = Csr::from(&el);
+    let vals = mean_weights(&g);
+    let d = 64;
+    let h = Matrix::random(g.n_cols, d, 1.0, &mut rng);
+
+    // ---- bit-equality guard ----------------------------------------------
+    let mm_ref = par::with_threads(1, || a.matmul(&b));
+    let sp_ref = par::with_threads(1, || spmm_reference(&g, &vals, &h));
+    let csr_ref = par::with_threads(1, || Csr::from(&el));
+    par::with_threads(PAR_THREADS, || {
+        assert_eq!(a.matmul(&b), mm_ref, "parallel matmul diverged");
+        assert_eq!(spmm_reference(&g, &vals, &h), sp_ref, "parallel spmm diverged");
+        assert_eq!(Csr::from(&el), csr_ref, "parallel CSR construction diverged");
+    });
+    report.note("bit-equality: parallel == scalar for all three kernels");
+
+    // ---- timings ----------------------------------------------------------
+    let results = [
+        compare("matmul", reps, |_| {
+            let (a, b) = (&a, &b);
+            move || {
+                std::hint::black_box(a.matmul(b));
+            }
+        }),
+        compare("spmm", reps, |_| {
+            let (g, vals, h) = (&g, &vals, &h);
+            move || {
+                std::hint::black_box(spmm_reference(g, vals, h));
+            }
+        }),
+        compare("csr_construction", reps, |_| {
+            let el = &el;
+            move || {
+                std::hint::black_box(Csr::from(el));
+            }
+        }),
+    ];
+
+    let mut table = Table::new(
+        &format!("parallel ({} threads) over scalar", PAR_THREADS),
+        &["kernel", "serial", "parallel", "speedup"],
+    );
+    for r in &results {
+        table.row(&[
+            r.name.to_string(),
+            format!("{:.2} ms", r.serial_secs * 1e3),
+            format!("{:.2} ms", r.parallel_secs * 1e3),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    report.add_table(table);
+
+    // ---- thread sweep (matmul, EXPERIMENTS.md §Threads) -------------------
+    let mut sweep = Table::new("matmul thread sweep", &["threads", "best", "speedup"]);
+    let t1 = par::with_threads(1, || time_fn("t1", 1, reps, || {
+        std::hint::black_box(a.matmul(&b));
+    }))
+    .summary()
+    .min;
+    for t in [1usize, 2, 3, 4, 8] {
+        let tt = par::with_threads(t, || time_fn("t", 1, reps, || {
+            std::hint::black_box(a.matmul(&b));
+        }))
+        .summary()
+        .min;
+        sweep.row(&[
+            format!("{}", t),
+            format!("{:.2} ms", tt * 1e3),
+            format!("{:.2}x", t1 / tt.max(1e-12)),
+        ]);
+    }
+    report.add_table(sweep);
+
+    // ---- machine-readable trajectory --------------------------------------
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str(&format!(
+        "  \"bench\": \"kernel_throughput\",\n  \"threads\": {},\n  \"cores\": {},\n  \"quick\": {},\n  \"kernels\": [\n",
+        PAR_THREADS, cores, args.quick
+    ));
+    for (i, r) in results.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"serial_secs\": {:.6}, \"parallel_secs\": {:.6}, \"speedup\": {:.3}}}{}\n",
+            r.name,
+            r.serial_secs,
+            r.parallel_secs,
+            r.speedup(),
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let dir = std::path::PathBuf::from("target/bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    let json_path = dir.join("BENCH_kernels.json");
+    std::fs::write(&json_path, &json).expect("write BENCH_kernels.json");
+    report.note(format!("wrote {}", json_path.display()));
+
+    // ---- acceptance -------------------------------------------------------
+    // A 4-thread pool cannot scale past the physical cores, so the floor is
+    // 2x on >=4-core hosts and 0.55 x min(4, cores) on smaller ones.
+    let ideal = PAR_THREADS.min(cores) as f64;
+    let floor = if ideal >= 4.0 { 2.0 } else { 0.55 * ideal };
+    report.note(format!("acceptance floor: {:.2}x (ideal {:.0}x)", floor, ideal));
+    report.finish();
+    if !lax {
+        for r in &results {
+            assert!(
+                r.speedup() >= floor,
+                "{}: speedup {:.2}x below floor {:.2}x (serial {:.2} ms, parallel {:.2} ms)",
+                r.name,
+                r.speedup(),
+                floor,
+                r.serial_secs * 1e3,
+                r.parallel_secs * 1e3
+            );
+        }
+    }
+}

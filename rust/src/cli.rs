@@ -45,10 +45,17 @@ affected rows are re-inferred and patched into the serving table.
 `--verify` finishes with a from-scratch full recompute and asserts the
 incremental state matches it.
 
+Every computing command (run, serve, stream, gen-dataset, gen-labelled)
+accepts `--threads N`: the intra-rank pool size for the parallel kernels
+(for config-driven commands, equivalent to `--set exec.threads=N`; 0 or
+unset = auto: the `DEAL_THREADS` env var, else all available cores).
+Results are bit-identical at every thread count.
+
 Config keys (see rust/src/config.rs): dataset.name, dataset.scale,
 cluster.machines, cluster.feature_parts, cluster.bandwidth_gbps,
 cluster.latency_us, model.kind, model.layers, model.fanout, model.weights,
-exec.mode, exec.group_cols, exec.backend, exec.feature_prep, exec.seed
+exec.mode, exec.group_cols, exec.backend, exec.feature_prep, exec.threads,
+exec.seed
 ";
 
 /// Entry point used by `main.rs`. Exits the process on error.
@@ -85,8 +92,9 @@ pub fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
         .map(|s| s.as_str())
 }
 
-/// Build a config from `--config FILE` plus `--set k=v` overrides (shared
-/// by `run` and `serve`).
+/// Build a config from `--config FILE` plus `--set k=v` overrides and the
+/// `--threads` shorthand (shared by `run`, `serve`, and `stream`). Pure
+/// parsing — `apply_threads` commits the pool knob at execution time.
 fn cfg_from_args(args: &[String]) -> Result<DealConfig> {
     let mut cfg = match flag_value(args, "--config") {
         Some(path) => DealConfig::from_file(std::path::Path::new(path))?,
@@ -108,11 +116,23 @@ fn cfg_from_args(args: &[String]) -> Result<DealConfig> {
             i += 1;
         }
     }
+    // `--threads N` is sugar for `--set exec.threads=N`.
+    if let Some(t) = flag_value(args, "--threads") {
+        cfg.exec.threads = t.parse()?;
+    }
     Ok(cfg)
+}
+
+/// Apply the intra-rank pool knob for this process. Called by the command
+/// entry points right before execution starts — parsing a config stays
+/// side-effect free.
+fn apply_threads(cfg: &DealConfig) {
+    crate::runtime::par::set_threads(cfg.exec.threads);
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {
     let cfg = cfg_from_args(args)?;
+    apply_threads(&cfg);
     println!(
         "deal run: dataset={} scale={} machines={} (P×M = {:?}) model={} fanout={} mode={} backend={} prep={}",
         cfg.dataset.name,
@@ -158,6 +178,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     use std::sync::Arc;
 
     let cfg = cfg_from_args(args)?;
+    apply_threads(&cfg);
     let requests: usize = flag_value(args, "--requests").unwrap_or("400").parse()?;
     let workers: usize = flag_value(args, "--workers").unwrap_or("4").parse()?;
     let max_batch: usize = flag_value(args, "--batch").unwrap_or("64").parse()?;
@@ -262,6 +283,7 @@ fn cmd_stream(args: &[String]) -> Result<()> {
     use crate::util::rng::Rng;
 
     let cfg = cfg_from_args(args)?;
+    apply_threads(&cfg);
     let batches: usize = flag_value(args, "--batches").unwrap_or("5").parse()?;
     let churn: f64 = flag_value(args, "--churn").unwrap_or("0.01").parse()?;
     let feat_churn: f64 = flag_value(args, "--feat-churn").unwrap_or("0").parse()?;
@@ -329,7 +351,16 @@ fn cmd_stream(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Honor `--threads` on the config-less generator commands too.
+fn apply_threads_flag(args: &[String]) -> Result<()> {
+    if let Some(t) = flag_value(args, "--threads") {
+        crate::runtime::par::set_threads(t.parse()?);
+    }
+    Ok(())
+}
+
 fn cmd_gen_dataset(args: &[String]) -> Result<()> {
+    apply_threads_flag(args)?;
     let name = flag_value(args, "--name").ok_or_else(|| anyhow::anyhow!("--name required"))?;
     let scale: f64 = flag_value(args, "--scale").unwrap_or("1.0").parse()?;
     let out = PathBuf::from(
@@ -348,6 +379,7 @@ fn cmd_gen_dataset(args: &[String]) -> Result<()> {
 }
 
 fn cmd_gen_labelled(args: &[String]) -> Result<()> {
+    apply_threads_flag(args)?;
     let nodes: usize = flag_value(args, "--nodes").unwrap_or("4096").parse()?;
     let classes: usize = flag_value(args, "--classes").unwrap_or("8").parse()?;
     let degree: usize = flag_value(args, "--degree").unwrap_or("12").parse()?;

@@ -69,12 +69,21 @@ pub struct Ctx {
 }
 
 impl Ctx {
-    /// Run `f`, advancing the simulated clock by the thread-CPU time it
-    /// consumed, scaled by the machine's core count. Returns `f`'s value.
+    /// Run `f`, advancing the simulated clock by the **total** CPU time it
+    /// consumed — the calling thread plus every `runtime::par` pool worker
+    /// it fanned out to — scaled by the machine's core count, plus a
+    /// fork/join overhead term per spawned worker
+    /// (`costs::intra_rank_compute_secs`). Charging total CPU rather than
+    /// caller wall time keeps simulated makespans honest now that the hot
+    /// kernels are intra-rank parallel. Returns `f`'s value.
     pub fn compute<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        crate::runtime::par::take_child_accounting(); // clear stale ledger
         let t0 = thread_cpu_time();
         let v = f();
-        let dt = (thread_cpu_time() - t0).max(0.0) / self.cores;
+        let main = (thread_cpu_time() - t0).max(0.0);
+        let (child, forks) = crate::runtime::par::take_child_accounting();
+        let dt =
+            crate::primitives::costs::intra_rank_compute_secs(main + child, forks, self.cores);
         self.clock += dt;
         self.metrics.sim_compute_secs += dt;
         v
@@ -264,11 +273,16 @@ impl ServerCtx {
         }
     }
 
-    /// Run `f`, advancing the server clock by its scaled thread-CPU time.
+    /// Run `f`, advancing the server clock by its scaled total CPU time
+    /// (same thread-aware accounting as `Ctx::compute`).
     pub fn compute<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        crate::runtime::par::take_child_accounting(); // clear stale ledger
         let t0 = thread_cpu_time();
         let v = f();
-        let dt = (thread_cpu_time() - t0).max(0.0) / self.cores;
+        let main = (thread_cpu_time() - t0).max(0.0);
+        let (child, forks) = crate::runtime::par::take_child_accounting();
+        let dt =
+            crate::primitives::costs::intra_rank_compute_secs(main + child, forks, self.cores);
         self.clock += dt;
         self.metrics.sim_compute_secs += dt;
         v
@@ -348,6 +362,13 @@ impl Cluster {
         }
 
         let mut handles = Vec::with_capacity(world);
+        // Ranks are real OS threads, so each gets an equal slice of the
+        // intra-rank kernel pool (min 1): world-wide fan-out never exceeds
+        // the configured pool size, and a sim with ranks >= cores runs its
+        // kernels serially instead of oversubscribing the host (which
+        // would inflate every measured thread-CPU time). Thread count
+        // never changes results — only scheduling.
+        let rank_pool = (crate::runtime::par::num_threads() / world).max(1);
         for rank in 0..world {
             let senders = senders.clone();
             let service_senders = service_senders.clone();
@@ -378,7 +399,9 @@ impl Cluster {
                 };
                 // A panicking machine would starve its peers (they block in
                 // recv), so announce loudly before unwinding.
-                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut ctx)));
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    crate::runtime::par::with_threads(rank_pool, || f(&mut ctx))
+                }));
                 if result.is_err() {
                     eprintln!("[cluster] machine {} panicked — peers will stall", rank);
                 }

@@ -62,6 +62,11 @@ pub struct ExecCfg {
     pub feature_prep: String,
     /// distributed | single (Fig. 20 graph construction strategy)
     pub construction: String,
+    /// Intra-rank pool threads for the parallel kernels (`runtime::par`);
+    /// 0 = auto (`DEAL_THREADS` env, else `available_parallelism`).
+    /// Applied by the CLI via `runtime::par::set_threads`; results are
+    /// bit-identical at every value.
+    pub threads: usize,
     pub seed: u64,
 }
 
@@ -100,6 +105,7 @@ impl Default for DealConfig {
                 artifacts_dir: "artifacts".into(),
                 feature_prep: "fused".into(),
                 construction: "distributed".into(),
+                threads: 0,
                 seed: 0xDEA1,
             },
         }
@@ -140,6 +146,7 @@ impl DealConfig {
             "exec.artifacts_dir" => self.exec.artifacts_dir = v.into(),
             "exec.feature_prep" => self.exec.feature_prep = v.into(),
             "exec.construction" => self.exec.construction = v.into(),
+            "exec.threads" => self.exec.threads = v.parse()?,
             "exec.seed" => self.exec.seed = v.parse()?,
             other => anyhow::bail!("unknown config key '{}'", other),
         }

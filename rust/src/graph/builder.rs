@@ -87,12 +87,31 @@ fn build_shard(
     let shard = ctx.compute(|| EdgeList::read_binary_range(path, lo, hi))?;
     ctx.mem.alloc(8 * shard.len() as u64);
 
-    // Stage 2: bucket by destination partition.
+    // Stage 2: bucket by destination partition. Edge chunks bucket in
+    // parallel (chunked work queue) and concatenate in chunk order, which
+    // preserves the sequential per-bucket edge order.
     let buckets: Vec<Vec<(NodeId, NodeId)>> = ctx.compute(|| {
+        let cbounds = crate::runtime::par::plan_bands(shard.len(), shard.len() as u64, 32 * 1024);
+        let bucket_range = |lo: usize, hi: usize| {
+            let mut buckets: Vec<Vec<(NodeId, NodeId)>> = vec![Vec::new(); parts];
+            for &(s, d) in &shard[lo..hi] {
+                let p = owner_of(d as usize, &node_bounds);
+                buckets[p].push((s, d));
+            }
+            buckets
+        };
+        if cbounds.len() == 2 {
+            // single chunk: bucket directly, no merge pass
+            return bucket_range(0, shard.len());
+        }
+        let per_chunk = crate::runtime::par::map_indexed(cbounds.len() - 1, |ci| {
+            bucket_range(cbounds[ci], cbounds[ci + 1])
+        });
         let mut buckets: Vec<Vec<(NodeId, NodeId)>> = vec![Vec::new(); parts];
-        for &(s, d) in &shard {
-            let p = owner_of(d as usize, &node_bounds);
-            buckets[p].push((s, d));
+        for chunk in per_chunk {
+            for (p, bucket) in chunk.into_iter().enumerate() {
+                buckets[p].extend(bucket);
+            }
         }
         buckets
     });
@@ -198,12 +217,11 @@ pub fn build_single_worker(
 pub fn build_in_memory(el: &EdgeList, parts: usize) -> Vec<GraphPartition> {
     let global = Csr::from(el);
     let node_bounds = even_ranges(el.n_nodes, parts);
-    (0..parts)
-        .map(|p| {
-            let (lo, hi) = (node_bounds[p], node_bounds[p + 1]);
-            GraphPartition { row_lo: lo, row_hi: hi, csr: global.slice_rows(lo, hi) }
-        })
-        .collect()
+    // Partition slices are independent memcpys — map them over the pool.
+    crate::runtime::par::map_indexed(parts, |p| {
+        let (lo, hi) = (node_bounds[p], node_bounds[p + 1]);
+        GraphPartition { row_lo: lo, row_hi: hi, csr: global.slice_rows(lo, hi) }
+    })
 }
 
 /// Which partition owns global node `v` given partition boundary offsets.

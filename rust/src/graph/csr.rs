@@ -7,6 +7,11 @@
 //! use this structure.
 
 use super::{EdgeList, NodeId};
+use crate::runtime::par;
+use crate::util::even_ranges;
+
+/// Edge-count floor below which CSR construction stays serial.
+const MIN_CSR_EDGES: u64 = 32 * 1024;
 
 /// CSR over destination rows: `indptr[d]..indptr[d+1]` indexes the
 /// in-neighbors (`indices`) and per-edge values (`values`, optional edge
@@ -28,7 +33,18 @@ impl Csr {
 
     /// Rectangular variant used by partitioned sub-graphs: `n_rows`
     /// destination rows, `n_cols` possible source columns.
+    ///
+    /// Above the work floor the build is parallel: edge chunks are
+    /// bucketed by destination row band (chunked work queue), then each
+    /// band counting-sorts its own rows into its disjoint `indptr` /
+    /// `indices` slices and sorts them. Rows end up sorted either way, so
+    /// the result is bit-identical to the sequential two-pass build.
     pub fn from_edges_rect(n_rows: usize, n_cols: usize, edges: &[(NodeId, NodeId)]) -> Csr {
+        let nb =
+            par::plan_bands(n_rows.min(edges.len()), edges.len() as u64, MIN_CSR_EDGES).len() - 1;
+        if nb > 1 {
+            return Self::from_edges_rect_banded(n_rows, n_cols, edges, nb);
+        }
         let mut counts = vec![0u64; n_rows + 1];
         for &(_, d) in edges {
             counts[d as usize + 1] += 1;
@@ -51,12 +67,87 @@ impl Csr {
         csr
     }
 
-    /// Sort the column indices within every row.
-    pub fn sort_rows(&mut self) {
-        for r in 0..self.n_rows {
-            let (lo, hi) = (self.indptr[r] as usize, self.indptr[r + 1] as usize);
-            self.indices[lo..hi].sort_unstable();
+    /// Parallel build over `nb` destination-row bands (see
+    /// [`Csr::from_edges_rect`]).
+    fn from_edges_rect_banded(
+        n_rows: usize,
+        n_cols: usize,
+        edges: &[(NodeId, NodeId)],
+        nb: usize,
+    ) -> Csr {
+        let rbounds = even_ranges(n_rows, nb);
+        let ebounds = even_ranges(edges.len(), nb);
+        // Phase 1: bucket each edge chunk by destination band. Chunks are
+        // contiguous input ranges, so replaying chunk-then-bucket order
+        // reproduces the original edge order within every band.
+        let chunk_buckets: Vec<Vec<Vec<(NodeId, NodeId)>>> = par::map_indexed(nb, |ci| {
+            let mut buckets: Vec<Vec<(NodeId, NodeId)>> = vec![Vec::new(); nb];
+            for &(s, d) in &edges[ebounds[ci]..ebounds[ci + 1]] {
+                let b = rbounds.partition_point(|&x| x <= d as usize) - 1;
+                buckets[b].push((s, d));
+            }
+            buckets
+        });
+        // Per-band edge offsets into the shared `indices` buffer.
+        let mut ibase = vec![0usize; nb + 1];
+        for b in 0..nb {
+            let band_edges: usize = chunk_buckets.iter().map(|c| c[b].len()).sum();
+            ibase[b + 1] = ibase[b] + band_edges;
         }
+        // Phase 2: each band counting-sorts its rows into its disjoint
+        // slices of `indptr[1..]` and `indices`, then sorts each row.
+        let mut indptr = vec![0u64; n_rows + 1];
+        let mut indices = vec![0 as NodeId; edges.len()];
+        let ptr_parts = par::split_rows(&mut indptr[1..], &rbounds, 1);
+        let idx_parts = par::split_at_cuts(&mut indices, &ibase);
+        let parts: Vec<_> = ptr_parts.into_iter().zip(idx_parts).collect();
+        par::run_parts(parts, |b, ((rows, ptr_band), idx_band)| {
+            let (rlo, nr) = (rows.start, rows.len());
+            let mut counts = vec![0u64; nr + 1];
+            for chunk in &chunk_buckets {
+                for &(_, d) in &chunk[b] {
+                    counts[d as usize - rlo + 1] += 1;
+                }
+            }
+            for i in 0..nr {
+                counts[i + 1] += counts[i];
+            }
+            let mut cursor = counts.clone();
+            for chunk in &chunk_buckets {
+                for &(s, d) in &chunk[b] {
+                    let r = d as usize - rlo;
+                    idx_band[cursor[r] as usize] = s;
+                    cursor[r] += 1;
+                }
+            }
+            for r in 0..nr {
+                idx_band[counts[r] as usize..counts[r + 1] as usize].sort_unstable();
+                ptr_band[r] = ibase[b] as u64 + counts[r + 1];
+            }
+        });
+        Csr { n_rows, n_cols, indptr, indices }
+    }
+
+    /// Sort the column indices within every row (degree-balanced parallel
+    /// bands; sorting is per-row, so banding cannot change the result).
+    pub fn sort_rows(&mut self) {
+        let bounds = par::weighted_bands(
+            self.n_rows,
+            |r| self.indptr[r + 1] - self.indptr[r] + 1,
+            MIN_CSR_EDGES,
+        );
+        let cuts: Vec<usize> = bounds.iter().map(|&r| self.indptr[r] as usize).collect();
+        let indptr = &self.indptr;
+        let slices = par::split_at_cuts(&mut self.indices, &cuts);
+        let parts: Vec<_> = bounds[..bounds.len() - 1].iter().copied().zip(slices).collect();
+        par::run_parts(parts, |bi, (rlo, band)| {
+            let rhi = bounds[bi + 1];
+            let elo = indptr[rlo] as usize;
+            for r in rlo..rhi {
+                let (lo, hi) = (indptr[r] as usize - elo, indptr[r + 1] as usize - elo);
+                band[lo..hi].sort_unstable();
+            }
+        });
     }
 
     pub fn n_edges(&self) -> usize {

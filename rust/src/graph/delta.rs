@@ -31,7 +31,11 @@ use std::collections::BTreeMap;
 
 use super::csr::Csr;
 use super::NodeId;
+use crate::runtime::par;
 use crate::Result;
+
+/// Edge floor below which compaction stays serial.
+const MIN_COMPACT_EDGES: u64 = 32 * 1024;
 
 /// One batch of streaming updates. Node count is fixed: `remove_edges`
 /// resolve against the pre-batch graph (removing one instance of the edge
@@ -139,38 +143,64 @@ impl PartitionDelta {
         let adds = std::mem::take(&mut self.adds);
         let removes = std::mem::take(&mut self.removes);
         let extra: usize = adds.values().map(|v| v.len()).sum();
+        // Rows merge independently, so the pass runs over degree-balanced
+        // row bands; each band emits its own (indices, row lengths, dirty)
+        // buffers and the band-order stitch reproduces the sequential
+        // output exactly.
+        let bounds = par::weighted_bands(
+            base.n_rows,
+            |r| base.indptr[r + 1] - base.indptr[r] + 2,
+            MIN_COMPACT_EDGES,
+        );
+        let nb = bounds.len() - 1;
+        let bands: Vec<(Vec<NodeId>, Vec<u32>, Vec<usize>)> = par::map_indexed(nb, |bi| {
+            let (rlo, rhi) = (bounds[bi], bounds[bi + 1]);
+            let base_edges = (base.indptr[rhi] - base.indptr[rlo]) as usize;
+            let mut indices: Vec<NodeId> = Vec::with_capacity(base_edges + extra / nb + 1);
+            let mut lens: Vec<u32> = Vec::with_capacity(rhi - rlo);
+            let mut dirty: Vec<usize> = Vec::new();
+            for r in rlo..rhi {
+                let row_adds = adds.get(&r);
+                let row_removes = removes.get(&r);
+                let before = indices.len();
+                if row_adds.is_none() && row_removes.is_none() {
+                    indices.extend_from_slice(base.row(r));
+                } else {
+                    let mut row: Vec<NodeId> = base.row(r).to_vec();
+                    let mut changed = false;
+                    if let Some(rm) = row_removes {
+                        for &s in rm {
+                            // base rows are sorted; removal keeps them sorted
+                            if let Ok(pos) = row.binary_search(&s) {
+                                row.remove(pos);
+                                changed = true;
+                            }
+                        }
+                    }
+                    if let Some(ad) = row_adds {
+                        row.extend_from_slice(ad);
+                        row.sort_unstable();
+                        changed = true;
+                    }
+                    if changed {
+                        dirty.push(r);
+                    }
+                    indices.extend_from_slice(&row);
+                }
+                lens.push((indices.len() - before) as u32);
+            }
+            (indices, lens, dirty)
+        });
         let mut indptr: Vec<u64> = Vec::with_capacity(base.n_rows + 1);
         indptr.push(0);
         let mut indices: Vec<NodeId> = Vec::with_capacity(base.n_edges() + extra);
         let mut dirty: Vec<usize> = Vec::new();
-        for r in 0..base.n_rows {
-            let row_adds = adds.get(&r);
-            let row_removes = removes.get(&r);
-            if row_adds.is_none() && row_removes.is_none() {
-                indices.extend_from_slice(base.row(r));
-            } else {
-                let mut row: Vec<NodeId> = base.row(r).to_vec();
-                let mut changed = false;
-                if let Some(rm) = row_removes {
-                    for &s in rm {
-                        // base rows are sorted; removal keeps them sorted
-                        if let Ok(pos) = row.binary_search(&s) {
-                            row.remove(pos);
-                            changed = true;
-                        }
-                    }
-                }
-                if let Some(ad) = row_adds {
-                    row.extend_from_slice(ad);
-                    row.sort_unstable();
-                    changed = true;
-                }
-                if changed {
-                    dirty.push(r);
-                }
-                indices.extend_from_slice(&row);
+        for (band_indices, lens, band_dirty) in bands {
+            for len in lens {
+                indptr.push(indptr.last().unwrap() + len as u64);
             }
-            indptr.push(indices.len() as u64);
+            indices.extend(band_indices);
+            dirty.extend(band_dirty);
         }
         let csr = Csr { n_rows: base.n_rows, n_cols: base.n_cols, indptr, indices };
         (csr, dirty)

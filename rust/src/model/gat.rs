@@ -22,7 +22,7 @@ use crate::partition::PartitionPlan;
 use crate::primitives::gemm::deal_gemm;
 use crate::primitives::groups::build_groups;
 use crate::primitives::spmm::{deal_spmm, feature_server, EdgeValues, SpmmInput};
-use crate::runtime::{Act, Backend};
+use crate::runtime::{par, Act, Backend};
 use crate::tensor::{leaky_relu, Matrix};
 use crate::util::even_ranges;
 use crate::Result;
@@ -191,8 +191,16 @@ fn fetch_v(
     )
 }
 
+/// Work floor (edge × head ops) below which attention stays serial.
+const MIN_ALPHA_WORK: u64 = 32 * 1024;
+
 /// Compute per-edge per-head softmax weights and the self-edge weights.
 /// Returns `(alpha_edges [n_edges × my_heads], alpha_self [rows × my_heads])`.
+///
+/// The softmax is per destination row, so rows split into degree-balanced
+/// parallel bands: band `b` owns the contiguous `alpha` slice of its rows'
+/// edges and its `alpha_self` rows, and every row's score/softmax sequence
+/// is exactly the scalar one — bit-identical at any thread count.
 fn compute_alpha(
     part: &LayerPart,
     u: &Matrix,
@@ -202,46 +210,58 @@ fn compute_alpha(
     my_heads: usize,
 ) -> (Vec<f32>, Vec<f32>) {
     let csr = &part.csr;
-    let n_local = v.rows;
-    let v_of = |s: usize| -> &[f32] {
-        if s >= row_lo && s < row_lo + n_local {
-            v.row(s - row_lo)
-        } else {
-            let i = v_remote.0.binary_search(&(s as u32)).expect("v row not fetched");
-            v_remote.1.row(i)
-        }
-    };
     let mut alpha = vec![0.0f32; csr.n_edges() * my_heads];
     let mut alpha_self = vec![0.0f32; csr.n_rows * my_heads];
-    for r in 0..csr.n_rows {
-        let (lo, hi) = (csr.indptr[r] as usize, csr.indptr[r + 1] as usize);
-        let urow = u.row(r);
-        for h in 0..my_heads {
-            // raw scores
-            let self_score = leaky_relu(urow[h] + v.row(r)[h]);
-            let mut mx = self_score;
-            for e in lo..hi {
-                let s = csr.indices[e] as usize;
-                let sc = leaky_relu(urow[h] + v_of(s)[h]);
-                alpha[e * my_heads + h] = sc;
-                if sc > mx {
-                    mx = sc;
+    let bounds = par::weighted_bands(
+        csr.n_rows,
+        |r| (csr.indptr[r + 1] - csr.indptr[r] + 1) * my_heads as u64,
+        MIN_ALPHA_WORK,
+    );
+    let ecuts: Vec<usize> = bounds.iter().map(|&r| csr.indptr[r] as usize * my_heads).collect();
+    let alpha_bands = par::split_at_cuts(&mut alpha, &ecuts);
+    let self_bands = par::split_rows(&mut alpha_self, &bounds, my_heads);
+    let parts: Vec<_> = self_bands.into_iter().zip(alpha_bands).collect();
+    par::run_parts(parts, |_, ((rows, self_band), alpha_band)| {
+        let n_local = v.rows;
+        let v_of = |s: usize| -> &[f32] {
+            if s >= row_lo && s < row_lo + n_local {
+                v.row(s - row_lo)
+            } else {
+                let i = v_remote.0.binary_search(&(s as u32)).expect("v row not fetched");
+                v_remote.1.row(i)
+            }
+        };
+        let elo = csr.indptr[rows.start] as usize;
+        for r in rows.clone() {
+            let (lo, hi) = (csr.indptr[r] as usize, csr.indptr[r + 1] as usize);
+            let urow = u.row(r);
+            for h in 0..my_heads {
+                // raw scores
+                let self_score = leaky_relu(urow[h] + v.row(r)[h]);
+                let mut mx = self_score;
+                for e in lo..hi {
+                    let s = csr.indices[e] as usize;
+                    let sc = leaky_relu(urow[h] + v_of(s)[h]);
+                    alpha_band[(e - elo) * my_heads + h] = sc;
+                    if sc > mx {
+                        mx = sc;
+                    }
                 }
+                // softmax
+                let mut sum = (self_score - mx).exp();
+                let self_e = sum;
+                for e in lo..hi {
+                    let x = (alpha_band[(e - elo) * my_heads + h] - mx).exp();
+                    alpha_band[(e - elo) * my_heads + h] = x;
+                    sum += x;
+                }
+                for e in lo..hi {
+                    alpha_band[(e - elo) * my_heads + h] /= sum;
+                }
+                self_band[(r - rows.start) * my_heads + h] = self_e / sum;
             }
-            // softmax
-            let mut sum = (self_score - mx).exp();
-            let self_e = sum;
-            for e in lo..hi {
-                let x = (alpha[e * my_heads + h] - mx).exp();
-                alpha[e * my_heads + h] = x;
-                sum += x;
-            }
-            for e in lo..hi {
-                alpha[e * my_heads + h] /= sum;
-            }
-            alpha_self[r * my_heads + h] = self_e / sum;
         }
-    }
+    });
     (alpha, alpha_self)
 }
 

@@ -90,6 +90,24 @@ pub fn sddmm_split_comm(c: &CostParams) -> f64 {
     (c.m + c.m * c.p - 2.0) * c.n * c.d / (c.m * c.m * c.p) + c.n * c.z * (c.m - 1.0) / (c.p * c.m)
 }
 
+// ------------------------------------------------- intra-rank parallelism
+
+/// Fork/join cost charged per spawned pool worker (thread spawn + scoped
+/// join on the host, measured at the tens-of-microseconds scale).
+pub const FORK_JOIN_OVERHEAD_SECS: f64 = 25e-6;
+
+/// Simulated seconds for a kernel that consumed `cpu_secs` of **total**
+/// CPU (calling thread + every `runtime::par` worker it fanned out to,
+/// summed) on a machine with `cores` cores, having spawned `forks`
+/// workers. The work term divides total CPU by the machine's core count —
+/// the same capacity model `Ctx::compute` always used, except the work is
+/// now measured across all real threads instead of one — and the fork
+/// term keeps the makespan honest about fan-out overhead: a kernel that
+/// sprays threads at tiny tiles pays for it in simulated time too.
+pub fn intra_rank_compute_secs(cpu_secs: f64, forks: u64, cores: f64) -> f64 {
+    cpu_secs / cores.max(1.0) + FORK_JOIN_OVERHEAD_SECS * forks as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,6 +143,17 @@ mod tests {
         // Larger M: split's input term shrinks M× faster.
         let c4 = CostParams::new(1 << 18, 128, 2, 4, 20.0);
         assert!(sddmm_split_comm(&c4) < sddmm_dup_comm(&c4));
+    }
+
+    #[test]
+    fn intra_rank_term_charges_work_and_forks() {
+        // no forks: pure capacity division, the historical model
+        assert!((intra_rank_compute_secs(6.4, 0, 64.0) - 0.1).abs() < 1e-12);
+        // forks add overhead on top of the divided work
+        let with_forks = intra_rank_compute_secs(6.4, 3, 64.0);
+        assert!((with_forks - (0.1 + 3.0 * FORK_JOIN_OVERHEAD_SECS)).abs() < 1e-12);
+        // degenerate core count clamps to 1
+        assert_eq!(intra_rank_compute_secs(2.0, 0, 0.0), 2.0);
     }
 
     #[test]

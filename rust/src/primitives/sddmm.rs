@@ -22,8 +22,12 @@
 use crate::cluster::{Ctx, Payload, Tag};
 use crate::graph::Csr;
 use crate::partition::PartitionPlan;
+use crate::runtime::par;
 use crate::tensor::Matrix;
 use crate::util::even_ranges;
+
+/// Element-op floor below which the parallel dot loops stay serial.
+const MIN_SDDMM_WORK: u64 = 64 * 1024;
 
 use super::groups::build_groups;
 use super::spmm::feature_server;
@@ -222,16 +226,30 @@ pub fn sddmm(
                         src_full.row_mut(r)[flo..fhi].copy_from_slice(block.row(r));
                     }
                 }
-                // dot products
+                // dot products: band-parallel over this group's edges into
+                // a group-ordered buffer (disjoint contiguous writes), then
+                // a serial O(edges) scatter to global edge ids. One dot per
+                // edge either way — bit-identical to the scalar loop.
                 ctx.compute(|| {
-                    for (e, &(r, ci)) in g.edges.iter().enumerate() {
-                        let d = dst_full.row(r as usize);
-                        let s = src_full.row(ci as usize);
-                        let mut acc = 0.0f32;
-                        for (a, b) in d.iter().zip(s) {
-                            acc += a * b;
+                    let n_e = g.edges.len();
+                    let work = n_e as u64 * plan.feature_dim as u64;
+                    let bounds = par::plan_bands(n_e, work, MIN_SDDMM_WORK);
+                    let mut tmp = vec![0.0f32; n_e];
+                    let parts = par::split_rows(&mut tmp, &bounds, 1);
+                    par::run_parts(parts, |_, (erange, band)| {
+                        for e in erange.clone() {
+                            let (r, ci) = g.edges[e];
+                            let d = dst_full.row(r as usize);
+                            let s = src_full.row(ci as usize);
+                            let mut acc = 0.0f32;
+                            for (a, b) in d.iter().zip(s) {
+                                acc += a * b;
+                            }
+                            band[e - erange.start] = acc;
                         }
-                        scores[eid_base + g.eids[e] as usize] = acc;
+                    });
+                    for (e, &score) in tmp.iter().enumerate() {
+                        scores[eid_base + g.eids[e] as usize] = score;
                     }
                 });
                 ctx.mem.free(sb);
@@ -272,21 +290,41 @@ pub fn sddmm(
 }
 
 /// Dense single-machine oracle: `scores[e=(s,d)] = dot(H[d], H[s])`.
+/// Row-parallel over degree-balanced bands; each destination row's edge
+/// range is contiguous in CSR order, so bands write disjoint slices and
+/// every dot product is computed exactly as the scalar loop would.
 pub fn sddmm_reference(g: &Csr, h: &Matrix) -> Vec<f32> {
     assert_eq!(h.rows, g.n_cols);
+    let width = h.cols;
     let mut out = vec![0.0f32; g.n_edges()];
-    for d in 0..g.n_rows {
-        let (lo, hi) = (g.indptr[d] as usize, g.indptr[d + 1] as usize);
-        let drow = h.row(d);
-        for e in lo..hi {
-            let srow = h.row(g.indices[e] as usize);
-            let mut acc = 0.0f32;
-            for (a, b) in drow.iter().zip(srow) {
-                acc += a * b;
+    let bounds = par::weighted_bands(
+        g.n_rows,
+        |r| (g.indptr[r + 1] - g.indptr[r]) * width as u64 + 1,
+        MIN_SDDMM_WORK,
+    );
+    let cuts: Vec<usize> = bounds.iter().map(|&r| g.indptr[r] as usize).collect();
+    let slices = par::split_at_cuts(&mut out, &cuts);
+    let parts: Vec<(usize, &mut [f32])> = bounds[..bounds.len() - 1]
+        .iter()
+        .copied()
+        .zip(slices)
+        .collect();
+    par::run_parts(parts, |bi, (rlo, band)| {
+        let rhi = bounds[bi + 1];
+        let elo = g.indptr[rlo] as usize;
+        for d in rlo..rhi {
+            let (lo, hi) = (g.indptr[d] as usize, g.indptr[d + 1] as usize);
+            let drow = h.row(d);
+            for e in lo..hi {
+                let srow = h.row(g.indices[e] as usize);
+                let mut acc = 0.0f32;
+                for (a, b) in drow.iter().zip(srow) {
+                    acc += a * b;
+                }
+                band[e - elo] = acc;
             }
-            out[e] = acc;
         }
-    }
+    });
     out
 }
 

@@ -28,9 +28,22 @@
 use crate::cluster::{Ctx, Payload, ServerCtx, Tag};
 use crate::graph::{Csr, NodeId};
 use crate::partition::PartitionPlan;
-use crate::runtime::Backend;
+use crate::runtime::{par, Backend};
 use crate::tensor::Matrix;
 use crate::util::even_ranges;
+
+/// Element-op floor below which the row-parallel CSR kernels stay serial.
+const MIN_SPMM_WORK: u64 = 64 * 1024;
+
+/// Degree-balanced row bands for a CSR aggregation over `width` feature
+/// columns: band weight = row nnz × width plus a constant per-row term.
+fn csr_row_bands(g: &Csr, width: usize) -> Vec<usize> {
+    par::weighted_bands(
+        g.n_rows,
+        |r| (g.indptr[r + 1] - g.indptr[r]) * width as u64 + 1,
+        MIN_SPMM_WORK,
+    )
+}
 
 use super::groups::{build_groups, EdgeGroup};
 use super::ExecMode;
@@ -132,38 +145,47 @@ pub fn deal_spmm(
     assert_eq!(input.h.cols, width);
 
     // Single graph partition: everything is local — aggregate straight
-    // off the CSR, no grouping, no communication (§Perf fast path).
+    // off the CSR with degree-balanced row bands, no grouping, no
+    // communication (§Perf fast path).
     if plan.p == 1 {
         let row_lo = plan.node_range(p_idx).0;
         let mut out = Matrix::zeros(rows, width);
         ctx.mem.alloc(out.nbytes());
-        ctx.compute(|| match &input.vals {
-            EdgeValues::Scalar(vals) => {
-                for r in 0..input.g.n_rows {
-                    let (lo, hi) = (input.g.indptr[r] as usize, input.g.indptr[r + 1] as usize);
-                    let orow = out.row_mut(r);
-                    for e in lo..hi {
-                        let src = input.h.row(input.g.indices[e] as usize - row_lo);
-                        let v = vals[e];
-                        for (o, &x) in orow.iter_mut().zip(src) {
-                            *o += v * x;
+        ctx.compute(|| {
+            let g = input.g;
+            let h = input.h;
+            let bounds = csr_row_bands(g, width);
+            let parts = par::split_rows(&mut out.data, &bounds, width);
+            par::run_parts(parts, |_, (rows, band)| match &input.vals {
+                EdgeValues::Scalar(vals) => {
+                    for r in rows.clone() {
+                        let (lo, hi) = (g.indptr[r] as usize, g.indptr[r + 1] as usize);
+                        let at = (r - rows.start) * width;
+                        let orow = &mut band[at..at + width];
+                        for e in lo..hi {
+                            let src = h.row(g.indices[e] as usize - row_lo);
+                            let v = vals[e];
+                            for (o, &x) in orow.iter_mut().zip(src) {
+                                *o += v * x;
+                            }
                         }
                     }
                 }
-            }
-            EdgeValues::PerHead { vals, heads, col_head } => {
-                for r in 0..input.g.n_rows {
-                    let (lo, hi) = (input.g.indptr[r] as usize, input.g.indptr[r + 1] as usize);
-                    let orow = out.row_mut(r);
-                    for e in lo..hi {
-                        let src = input.h.row(input.g.indices[e] as usize - row_lo);
-                        let ev = &vals[e * heads..(e + 1) * heads];
-                        for j in 0..orow.len() {
-                            orow[j] += ev[col_head[j] as usize] * src[j];
+                EdgeValues::PerHead { vals, heads, col_head } => {
+                    for r in rows.clone() {
+                        let (lo, hi) = (g.indptr[r] as usize, g.indptr[r + 1] as usize);
+                        let at = (r - rows.start) * width;
+                        let orow = &mut band[at..at + width];
+                        for e in lo..hi {
+                            let src = h.row(g.indices[e] as usize - row_lo);
+                            let ev = &vals[e * heads..(e + 1) * heads];
+                            for j in 0..orow.len() {
+                                orow[j] += ev[col_head[j] as usize] * src[j];
+                            }
                         }
                     }
                 }
-            }
+            });
         });
         return out;
     }
@@ -624,21 +646,30 @@ pub fn spmm_2d(ctx: &mut Ctx, input: &SpmmInput, phase: u32) -> Matrix {
 }
 
 /// Dense single-machine oracle: `out = G · H` with per-edge weights.
+/// Row-parallel over degree-balanced bands; each destination row still
+/// accumulates its edges in CSR order, so the result is bit-identical to
+/// the scalar loop at every thread count.
 pub fn spmm_reference(g: &Csr, vals: &[f32], h: &Matrix) -> Matrix {
     assert_eq!(vals.len(), g.n_edges());
     assert_eq!(h.rows, g.n_cols);
-    let mut out = Matrix::zeros(g.n_rows, h.cols);
-    for r in 0..g.n_rows {
-        let (lo, hi) = (g.indptr[r] as usize, g.indptr[r + 1] as usize);
-        for e in lo..hi {
-            let src = h.row(g.indices[e] as usize);
-            let v = vals[e];
-            let o = out.row_mut(r);
-            for (a, &x) in o.iter_mut().zip(src) {
-                *a += v * x;
+    let width = h.cols;
+    let mut out = Matrix::zeros(g.n_rows, width);
+    let bounds = csr_row_bands(g, width);
+    let parts = par::split_rows(&mut out.data, &bounds, width);
+    par::run_parts(parts, |_, (rows, band)| {
+        for r in rows.clone() {
+            let (lo, hi) = (g.indptr[r] as usize, g.indptr[r + 1] as usize);
+            let at = (r - rows.start) * width;
+            let orow = &mut band[at..at + width];
+            for e in lo..hi {
+                let src = h.row(g.indices[e] as usize);
+                let v = vals[e];
+                for (a, &x) in orow.iter_mut().zip(src) {
+                    *a += v * x;
+                }
             }
         }
-    }
+    });
     out
 }
 

@@ -13,6 +13,7 @@
 //! [`Backend`] abstracts the tile ops the model layer needs; `Native` is
 //! the pure-rust oracle used by tests and as the perf comparison baseline.
 
+pub mod par;
 pub mod service;
 mod weights;
 
@@ -89,11 +90,17 @@ impl Backend for Native {
             dst.rows == src.rows && dst.cols == src.cols,
             "sddmm tile shape mismatch"
         );
+        // Row-wise independent dots: band-parallel, bit-identical.
         let mut out = vec![0.0f32; dst.rows];
-        for r in 0..dst.rows {
-            let (a, b) = (dst.row(r), src.row(r));
-            out[r] = a.iter().zip(b).map(|(x, y)| x * y).sum();
-        }
+        let work = (dst.rows as u64) * (dst.cols as u64);
+        let bounds = par::plan_bands(dst.rows, work, 64 * 1024);
+        let parts = par::split_rows(&mut out, &bounds, 1);
+        par::run_parts(parts, |_, (rows, band)| {
+            for r in rows.clone() {
+                let (a, b) = (dst.row(r), src.row(r));
+                band[r - rows.start] = a.iter().zip(b).map(|(x, y)| x * y).sum();
+            }
+        });
         Ok(out)
     }
 }

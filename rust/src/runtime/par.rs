@@ -1,0 +1,402 @@
+//! Intra-rank parallel compute engine: a zero-dependency scoped thread
+//! pool (`std::thread::scope`) under every hot kernel (DESIGN.md
+//! §Intra-rank parallelism).
+//!
+//! The simulated cluster parallelizes *across* ranks; this module
+//! parallelizes *inside* one rank — the blocked GEMM, row-parallel SpMM /
+//! SDDMM, per-row sampling, CSR construction/compaction, and per-shard
+//! serving GEMMs all dispatch through it. Three design rules keep the
+//! engine safe to drop under the whole pipeline:
+//!
+//! 1. **Determinism.** Work is split into *statically planned* contiguous
+//!    bands ([`plan_bands`] / [`weighted_bands`]) whose boundaries depend
+//!    only on the input shape and the thread count, and every kernel
+//!    preserves the scalar path's per-element reduction order inside a
+//!    band. Because bands write disjoint output ranges and no reduction
+//!    crosses a band, results are **bit-identical** to the sequential
+//!    kernel at every thread count (enforced by `tests/properties.rs`).
+//! 2. **Honest cost accounting.** Each spawned worker measures its own
+//!    thread-CPU time; [`run_parts`]/[`map_indexed`] accumulate it into a
+//!    caller-thread-local ledger that `cluster::Ctx::compute` drains, so a
+//!    kernel that fanned out over T real threads is still charged its
+//!    *total* CPU in the simulation (`costs::intra_rank_compute_secs`) —
+//!    simulated makespans don't silently deflate.
+//! 3. **No nested fan-out.** Workers (and the caller while it executes its
+//!    own band) run with an in-pool marker that pins [`num_threads`] to 1,
+//!    so a parallel GEMM inside a parallel per-shard map cannot explode
+//!    into T² threads.
+//!
+//! Thread-count resolution: [`with_threads`] override (thread-local, used
+//! by tests/benches) → [`set_threads`] override (process-global, set from
+//! `DealConfig.exec.threads` / `--threads`) → `DEAL_THREADS` env →
+//! `std::thread::available_parallelism`.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::cluster::thread_cpu_time;
+use crate::util::even_ranges;
+
+/// Process-global thread-count override; `usize::MAX` means "unset".
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+thread_local! {
+    /// Thread-local override (0 = unset); also pinned to 1 inside workers.
+    static LOCAL_THREADS: Cell<usize> = const { Cell::new(0) };
+    /// CPU seconds consumed by pool workers on behalf of this thread since
+    /// the last [`take_child_accounting`] call.
+    static CHILD_CPU_SECS: Cell<f64> = const { Cell::new(0.0) };
+    /// Workers spawned on behalf of this thread since the last drain.
+    static CHILD_FORKS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Physical parallelism of the host (cached `available_parallelism`).
+pub fn available() -> usize {
+    static AVAIL: OnceLock<usize> = OnceLock::new();
+    *AVAIL.get_or_init(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+fn env_default() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        match std::env::var("DEAL_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+            Some(n) if n > 0 => n,
+            _ => available(),
+        }
+    })
+}
+
+/// Set the process-global pool size (`0` = back to auto: `DEAL_THREADS`
+/// env or `available_parallelism`). Wired to `DealConfig.exec.threads`
+/// and the `--threads` CLI flag.
+pub fn set_threads(n: usize) {
+    GLOBAL_THREADS.store(if n == 0 { usize::MAX } else { n }, Ordering::Relaxed);
+}
+
+/// Run `f` with the pool size pinned to `n` on this thread (`0` = auto).
+/// Scoped and race-free — the property tests sweep thread counts with it.
+pub fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    let prev = LOCAL_THREADS.with(|c| c.replace(n));
+    let out = f();
+    LOCAL_THREADS.with(|c| c.set(prev));
+    out
+}
+
+/// Effective pool size for work issued from the current thread. Inside a
+/// pool worker this is pinned to 1 (no nested fan-out).
+pub fn num_threads() -> usize {
+    let local = LOCAL_THREADS.with(|c| c.get());
+    if local > 0 {
+        return local;
+    }
+    let global = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if global != usize::MAX {
+        return global.max(1);
+    }
+    env_default()
+}
+
+/// Drain the (CPU seconds, spawned workers) consumed by pool workers on
+/// behalf of this thread. `cluster::Ctx::compute` calls this around every
+/// kernel so the simulation charges total CPU, not just the main thread's.
+pub fn take_child_accounting() -> (f64, u64) {
+    let secs = CHILD_CPU_SECS.with(|c| c.replace(0.0));
+    let forks = CHILD_FORKS.with(|c| c.replace(0));
+    (secs, forks)
+}
+
+fn record_children(secs: f64, forks: u64) {
+    if forks > 0 {
+        CHILD_CPU_SECS.with(|c| c.set(c.get() + secs));
+        CHILD_FORKS.with(|c| c.set(c.get() + forks));
+    }
+}
+
+/// Static band plan for `n_items` of uniform cost: `t` contiguous ranges
+/// with `t = min(num_threads, n_items, total_work / min_work_per_band)`,
+/// so small inputs stay on the calling thread (spawning costs ~tens of
+/// microseconds). Returns `t + 1` boundary offsets.
+pub fn plan_bands(n_items: usize, total_work: u64, min_work_per_band: u64) -> Vec<usize> {
+    let mut t = num_threads().min(n_items.max(1));
+    if min_work_per_band > 0 {
+        t = t.min((total_work / min_work_per_band).max(1) as usize);
+    }
+    even_ranges(n_items, t.max(1))
+}
+
+/// Static band plan for `n_items` of *non-uniform* cost: boundaries are
+/// chosen so each band carries ≈ equal total weight (degree-balanced
+/// chunking for CSR kernels). Deterministic in the inputs and thread
+/// count; collapses to one band below the work floor.
+pub fn weighted_bands(
+    n_items: usize,
+    weight: impl Fn(usize) -> u64,
+    min_work_per_band: u64,
+) -> Vec<usize> {
+    let total: u128 = (0..n_items).map(|i| weight(i) as u128).sum();
+    let mut t = num_threads().min(n_items.max(1));
+    if min_work_per_band > 0 {
+        t = t.min((total / min_work_per_band.max(1) as u128).max(1) as usize);
+    }
+    let t = t.max(1);
+    if t == 1 {
+        return vec![0, n_items];
+    }
+    let mut bounds = Vec::with_capacity(t + 1);
+    bounds.push(0);
+    let mut acc: u128 = 0;
+    for i in 0..n_items {
+        acc += weight(i) as u128;
+        let cut = bounds.len(); // next boundary index in 1..t
+        if cut < t && acc * t as u128 >= total * cut as u128 {
+            bounds.push(i + 1);
+        }
+    }
+    bounds.push(n_items);
+    // Back-loaded weight can leave fewer than `t` cuts (a heavy tail item
+    // crosses several thresholds at once); dedup rather than padding with
+    // zero-width bands, so no worker is ever spawned for an empty band.
+    bounds.dedup();
+    bounds
+}
+
+/// Split `data` at item `bounds` (each item spanning `stride` elements)
+/// into per-band `(item_range, band_slice)` parts for [`run_parts`].
+pub fn split_rows<'a, T>(
+    mut data: &'a mut [T],
+    bounds: &[usize],
+    stride: usize,
+) -> Vec<(Range<usize>, &'a mut [T])> {
+    let mut parts = Vec::with_capacity(bounds.len().saturating_sub(1));
+    for w in bounds.windows(2) {
+        let (band, rest) = std::mem::take(&mut data).split_at_mut((w[1] - w[0]) * stride);
+        parts.push((w[0]..w[1], band));
+        data = rest;
+    }
+    parts
+}
+
+/// Split `data` at explicit element offsets `cuts` (monotone, starting at
+/// the slice origin) into per-band slices — the CSR-shaped variant where
+/// band `i` owns elements `cuts[i]..cuts[i+1]`.
+pub fn split_at_cuts<'a, T>(mut data: &'a mut [T], cuts: &[usize]) -> Vec<&'a mut [T]> {
+    let mut parts = Vec::with_capacity(cuts.len().saturating_sub(1));
+    for w in cuts.windows(2) {
+        let (band, rest) = std::mem::take(&mut data).split_at_mut(w[1] - w[0]);
+        parts.push(band);
+        data = rest;
+    }
+    parts
+}
+
+/// Execute `f(band_index, part)` for every part: part 0 on the calling
+/// thread, the rest on scoped worker threads. Parts carry whatever a band
+/// needs (typically a row range plus its disjoint output slice), so no
+/// two bands alias and the borrow checker proves it.
+pub fn run_parts<T: Send, F: Fn(usize, T) + Sync>(parts: Vec<T>, f: F) {
+    let n = parts.len();
+    if n == 0 {
+        return;
+    }
+    let mut iter = parts.into_iter();
+    let first = iter.next().unwrap();
+    if n == 1 {
+        f(0, first);
+        return;
+    }
+    let cpu_ns = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for (off, part) in iter.enumerate() {
+            let f = &f;
+            let cpu_ns = &cpu_ns;
+            scope.spawn(move || {
+                let t0 = thread_cpu_time();
+                LOCAL_THREADS.with(|c| c.set(1)); // no nested fan-out
+                f(off + 1, part);
+                let dt = (thread_cpu_time() - t0).max(0.0);
+                cpu_ns.fetch_add((dt * 1e9) as u64, Ordering::Relaxed);
+            });
+        }
+        // The caller works its own band while the pool drains the rest.
+        let prev = LOCAL_THREADS.with(|c| c.replace(1));
+        f(0, first);
+        LOCAL_THREADS.with(|c| c.set(prev));
+    });
+    record_children(cpu_ns.load(Ordering::Relaxed) as f64 * 1e-9, (n - 1) as u64);
+}
+
+/// Run `f(i)` for `i in 0..n` through a chunked work queue (one atomic
+/// counter, one index per pull) and return the results **in index order**
+/// — the load-balancing shape for irregular owned-result tasks (per-shard
+/// GEMMs, per-chunk edge bucketing).
+pub fn map_indexed<R: Send, F: Fn(usize) -> R + Sync>(n: usize, f: F) -> Vec<R> {
+    let t = num_threads().min(n.max(1)).max(1);
+    if t == 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let cpu_ns = AtomicU64::new(0);
+    let mut tagged: Vec<(usize, R)> = std::thread::scope(|scope| {
+        let worker = |measure: bool| {
+            let f = &f;
+            let next = &next;
+            let cpu_ns = &cpu_ns;
+            move || {
+                let t0 = thread_cpu_time();
+                let mut out: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    out.push((i, f(i)));
+                }
+                if measure {
+                    let dt = (thread_cpu_time() - t0).max(0.0);
+                    cpu_ns.fetch_add((dt * 1e9) as u64, Ordering::Relaxed);
+                }
+                out
+            }
+        };
+        let handles: Vec<_> = (1..t)
+            .map(|_| {
+                let w = worker(true);
+                scope.spawn(move || {
+                    LOCAL_THREADS.with(|c| c.set(1));
+                    w()
+                })
+            })
+            .collect();
+        let prev = LOCAL_THREADS.with(|c| c.replace(1));
+        let mut all = worker(false)();
+        LOCAL_THREADS.with(|c| c.set(prev));
+        for h in handles {
+            all.extend(h.join().expect("pool worker panicked"));
+        }
+        all
+    });
+    record_children(cpu_ns.load(Ordering::Relaxed) as f64 * 1e-9, (t - 1) as u64);
+    tagged.sort_unstable_by_key(|&(i, _)| i);
+    tagged.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_resolution_order() {
+        with_threads(3, || {
+            assert_eq!(num_threads(), 3);
+            with_threads(0, || assert!(num_threads() >= 1));
+        });
+    }
+
+    #[test]
+    fn plan_bands_respects_work_floor() {
+        with_threads(8, || {
+            // tiny work → one band regardless of pool size
+            assert_eq!(plan_bands(100, 10, 1000), vec![0, 100]);
+            // big work → pool-wide bands
+            let b = plan_bands(100, 1_000_000, 1000);
+            assert_eq!(b.len(), 9);
+            assert_eq!((b[0], *b.last().unwrap()), (0, 100));
+        });
+    }
+
+    #[test]
+    fn weighted_bands_balance_skewed_loads() {
+        with_threads(4, || {
+            // one heavy item at the front, uniform tail
+            let w = |i: usize| if i == 0 { 1000u64 } else { 10 };
+            let b = weighted_bands(401, w, 1);
+            assert_eq!(b[0], 0);
+            assert_eq!(*b.last().unwrap(), 401);
+            assert_eq!(b.len(), 5);
+            // the heavy item sits alone-ish in band 0
+            assert!(b[1] <= 110, "heavy band too wide: {:?}", b);
+            for win in b.windows(2) {
+                assert!(win[0] <= win[1]);
+            }
+        });
+    }
+
+    #[test]
+    fn weighted_bands_drop_empty_tail_bands() {
+        with_threads(4, || {
+            // all weight on the last item: one real band, no zero-width tails
+            let b = weighted_bands(4, |i| if i == 3 { 1000 } else { 0 }, 1);
+            assert_eq!(*b.last().unwrap(), 4);
+            assert!(b.windows(2).all(|w| w[0] < w[1]), "empty band in {:?}", b);
+        });
+    }
+
+    #[test]
+    fn run_parts_covers_all_bands_deterministically() {
+        let mut data = vec![0u64; 1000];
+        with_threads(4, || {
+            let bounds = plan_bands(1000, 1_000_000, 1);
+            let parts = split_rows(&mut data, &bounds, 1);
+            run_parts(parts, |_, (range, band)| {
+                for (off, v) in band.iter_mut().enumerate() {
+                    *v = (range.start + off) as u64;
+                }
+            });
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn map_indexed_returns_index_order() {
+        with_threads(4, || {
+            let out = map_indexed(37, |i| i * i);
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn split_at_cuts_covers() {
+        let mut data = vec![1u8; 10];
+        let parts = split_at_cuts(&mut data, &[0, 4, 4, 10]);
+        assert_eq!(parts.iter().map(|p| p.len()).collect::<Vec<_>>(), vec![4, 0, 6]);
+    }
+
+    #[test]
+    fn workers_do_not_nest() {
+        with_threads(4, || {
+            let mut seen = vec![0usize; 4];
+            let parts = split_rows(&mut seen, &[0, 1, 2, 3, 4], 1);
+            run_parts(parts, |_, (_, band)| {
+                band[0] = num_threads(); // pinned to 1 inside the pool
+            });
+            assert_eq!(seen, vec![1, 1, 1, 1]);
+        });
+    }
+
+    #[test]
+    fn child_cpu_is_accounted() {
+        take_child_accounting(); // clear
+        with_threads(4, || {
+            let mut out = vec![0.0f64; 4];
+            let parts = split_rows(&mut out, &[0, 1, 2, 3, 4], 1);
+            run_parts(parts, |_, (_, band)| {
+                let mut acc = 0f64;
+                for i in 0..200_000 {
+                    acc += (i as f64).sqrt();
+                }
+                band[0] = acc;
+            });
+        });
+        let (secs, forks) = take_child_accounting();
+        assert_eq!(forks, 3);
+        assert!(secs >= 0.0);
+        // drained: second take is empty
+        assert_eq!(take_child_accounting(), (0.0, 0));
+    }
+}

@@ -20,7 +20,39 @@
 //! are defined over ego networks.
 
 use crate::graph::{Csr, NodeId};
+use crate::runtime::par;
 use crate::util::rng::Rng;
+
+/// Work floor (Σ degree + per-row constant) below which sampling stays
+/// serial; parallelism never changes the output (per-row RNG streams).
+const MIN_SAMPLE_WORK: u64 = 32 * 1024;
+
+/// Degree-balanced row bands for the samplers (`k` draws per row, pool
+/// copy ∝ degree, plus a constant per-row fork/bookkeeping term).
+fn sample_bands(g: &Csr, k: usize) -> Vec<usize> {
+    par::weighted_bands(
+        g.n_rows,
+        |v| (g.indptr[v + 1] - g.indptr[v]) * k.max(1) as u64 + 16,
+        MIN_SAMPLE_WORK,
+    )
+}
+
+/// Concatenate per-band per-layer edge buffers in band order — identical
+/// to the row-ascending order the sequential loop emits.
+fn merge_band_edges(
+    k: usize,
+    bands: Vec<Vec<Vec<(NodeId, NodeId)>>>,
+) -> Vec<Vec<(NodeId, NodeId)>> {
+    let mut layer_edges: Vec<Vec<(NodeId, NodeId)>> = (0..k)
+        .map(|l| Vec::with_capacity(bands.iter().map(|b| b[l].len()).sum()))
+        .collect();
+    for band in bands {
+        for (l, edges) in band.into_iter().enumerate() {
+            layer_edges[l].extend(edges);
+        }
+    }
+    layer_edges
+}
 
 /// The `k` sampled layer graphs. `layers[l]` is `G_l`: row = destination
 /// node, columns = its sampled in-neighbors for GNN layer `l`.
@@ -45,29 +77,37 @@ pub fn sample_all_layers(g: &Csr, k: usize, fanout: usize, seed: u64) -> LayerGr
         return LayerGraphs { layers: vec![g.clone(); k] };
     }
     let base = Rng::new(seed);
-    // Per-layer edge buffers.
-    let mut layer_edges: Vec<Vec<(NodeId, NodeId)>> =
-        (0..k).map(|_| Vec::with_capacity(g.n_rows * fanout.min(8))).collect();
-    let mut pool: Vec<NodeId> = Vec::new();
-    for v in 0..g.n_rows {
-        let row = g.row(v);
-        if row.is_empty() {
-            continue;
-        }
-        let mut rng = base.fork(v as u64);
-        // Build the sampling structure ONCE per node...
-        pool.clear();
-        pool.extend_from_slice(row);
-        let take = fanout.min(pool.len());
-        // ...and draw k independent without-replacement samples from it.
-        for edges in layer_edges.iter_mut() {
-            partial_shuffle(&mut pool, take, &mut rng);
-            for &s in &pool[..take] {
-                edges.push((s, v as NodeId));
+    // Each row's RNG is forked from the row id alone, so rows are
+    // independent draws: degree-balanced row bands sample in parallel and
+    // band-order concatenation reproduces the sequential edge order
+    // bit-for-bit (the delta path's resample parity also leans on this).
+    let bounds = sample_bands(g, k);
+    let bands = par::map_indexed(bounds.len() - 1, |bi| {
+        let mut layer_edges: Vec<Vec<(NodeId, NodeId)>> = (0..k)
+            .map(|_| Vec::with_capacity((bounds[bi + 1] - bounds[bi]) * fanout.min(8)))
+            .collect();
+        let mut pool: Vec<NodeId> = Vec::new();
+        for v in bounds[bi]..bounds[bi + 1] {
+            let row = g.row(v);
+            if row.is_empty() {
+                continue;
+            }
+            let mut rng = base.fork(v as u64);
+            // Build the sampling structure ONCE per node...
+            pool.clear();
+            pool.extend_from_slice(row);
+            let take = fanout.min(pool.len());
+            // ...and draw k independent without-replacement samples from it.
+            for edges in layer_edges.iter_mut() {
+                partial_shuffle(&mut pool, take, &mut rng);
+                for &s in &pool[..take] {
+                    edges.push((s, v as NodeId));
+                }
             }
         }
-    }
-    let layers = layer_edges
+        layer_edges
+    });
+    let layers = merge_band_edges(k, bands)
         .into_iter()
         .map(|e| Csr::from_edges_rect(g.n_rows, g.n_cols, &e))
         .collect();
@@ -83,25 +123,32 @@ pub fn sample_rebuild_per_layer(g: &Csr, k: usize, fanout: usize, seed: u64) -> 
         return LayerGraphs { layers: vec![g.clone(); k] };
     }
     let base = Rng::new(seed);
-    let mut layer_edges: Vec<Vec<(NodeId, NodeId)>> =
-        (0..k).map(|_| Vec::with_capacity(g.n_rows * fanout.min(8))).collect();
-    for v in 0..g.n_rows {
-        let row = g.row(v);
-        if row.is_empty() {
-            continue;
-        }
-        let mut rng = base.fork(v as u64);
-        let take = fanout.min(row.len());
-        for edges in layer_edges.iter_mut() {
-            // rebuild the pool for every layer — the shared-structure cost
-            let mut pool: Vec<NodeId> = row.to_vec();
-            partial_shuffle(&mut pool, take, &mut rng);
-            for &s in &pool[..take] {
-                edges.push((s, v as NodeId));
+    // Same band-parallel harness as `sample_all_layers` so the comparison
+    // isolates structure sharing, not threading.
+    let bounds = sample_bands(g, k);
+    let bands = par::map_indexed(bounds.len() - 1, |bi| {
+        let mut layer_edges: Vec<Vec<(NodeId, NodeId)>> = (0..k)
+            .map(|_| Vec::with_capacity((bounds[bi + 1] - bounds[bi]) * fanout.min(8)))
+            .collect();
+        for v in bounds[bi]..bounds[bi + 1] {
+            let row = g.row(v);
+            if row.is_empty() {
+                continue;
+            }
+            let mut rng = base.fork(v as u64);
+            let take = fanout.min(row.len());
+            for edges in layer_edges.iter_mut() {
+                // rebuild the pool for every layer — the shared-structure cost
+                let mut pool: Vec<NodeId> = row.to_vec();
+                partial_shuffle(&mut pool, take, &mut rng);
+                for &s in &pool[..take] {
+                    edges.push((s, v as NodeId));
+                }
             }
         }
-    }
-    let layers = layer_edges
+        layer_edges
+    });
+    let layers = merge_band_edges(k, bands)
         .into_iter()
         .map(|e| Csr::from_edges_rect(g.n_rows, g.n_cols, &e))
         .collect();

@@ -103,11 +103,14 @@ impl SimilarBatch {
         // Q × d query block gathered from the owning shards, then d × Q.
         let queries = table.try_gather(&self.qids)?;
         let qt = queries.transpose();
-        // One full-tile GEMM per shard: rows_s × Q score panels.
-        let mut panels: Vec<Matrix> = Vec::with_capacity(table.num_shards());
-        for s in 0..table.num_shards() {
-            panels.push(backend.gemm(table.shard(s), &qt)?);
-        }
+        // One full-tile GEMM per shard, shards mapped over the intra-rank
+        // pool (each GEMM runs serial inside a worker — no nested fan-out).
+        let panels: Vec<Matrix> =
+            crate::runtime::par::map_indexed(table.num_shards(), |s| {
+                backend.gemm(table.shard(s), &qt)
+            })
+            .into_iter()
+            .collect::<Result<_>>()?;
         // Per-request scatter-gather: select top-k per query column.
         let k_max = self.ks.iter().copied().max().unwrap_or(0);
         let mut column_top: Vec<Option<Vec<(u32, f32)>>> = vec![None; self.qids.len()];

@@ -192,12 +192,20 @@ impl ServePool {
         if !opts.start_paused {
             shared.gate.open();
         }
+        // Worker-level concurrency IS this pool's parallelism: with more
+        // than one worker, pin the intra-rank kernel pool to 1 inside each
+        // worker so concurrent batches don't multiply OS threads
+        // (workers × cores). A single-worker pool keeps the kernel
+        // fan-out (0 = auto).
+        let kernel_threads = if opts.workers > 1 { 1 } else { 0 };
         let workers = (0..opts.workers)
             .map(|i| {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("serve-worker-{}", i))
-                    .spawn(move || worker_main(&shared))
+                    .spawn(move || {
+                        crate::runtime::par::with_threads(kernel_threads, || worker_main(&shared))
+                    })
                     .expect("spawn serve worker")
             })
             .collect();

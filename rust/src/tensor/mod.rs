@@ -7,7 +7,16 @@
 //! through `runtime::Backend` (AOT-compiled XLA tiles); this module is the
 //! substrate + correctness oracle.
 
+use crate::runtime::par;
 use crate::util::rng::Rng;
+
+/// Work floors (in element-ops) below which kernels stay on the calling
+/// thread — fork/join costs tens of microseconds, so tiny tiles must not
+/// fan out. Thresholds only affect scheduling, never results: parallel
+/// and serial paths are bit-identical by construction.
+const MIN_GEMM_WORK: u64 = 256 * 1024;
+const MIN_SEG_WORK: u64 = 64 * 1024;
+const MIN_TRANSPOSE_WORK: u64 = 128 * 1024;
 
 /// Dense row-major `rows × cols` matrix of `f32`.
 #[derive(Clone, Debug, PartialEq)]
@@ -143,14 +152,31 @@ impl Matrix {
         matmul(self, other)
     }
 
-    /// Transpose.
+    /// Cache-blocked tiled transpose: both matrices are walked one
+    /// `TB × TB` tile at a time so reads and writes each stay within a
+    /// tile-sized working set instead of striding a full row/column per
+    /// element. Output rows (= input columns) are band-parallel.
     pub fn transpose(&self) -> Matrix {
-        let mut out = Matrix::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+        const TB: usize = 32;
+        let (rows, cols) = (self.rows, self.cols);
+        let mut out = Matrix::zeros(cols, rows);
+        let bounds = par::plan_bands(cols, (rows * cols) as u64, MIN_TRANSPOSE_WORK);
+        let parts = par::split_rows(&mut out.data, &bounds, rows);
+        par::run_parts(parts, |_, (crange, band)| {
+            let (clo, chi) = (crange.start, crange.end);
+            for r0 in (0..rows).step_by(TB) {
+                let r1 = (r0 + TB).min(rows);
+                for c0 in (clo..chi).step_by(TB) {
+                    let c1 = (c0 + TB).min(chi);
+                    for c in c0..c1 {
+                        let orow = &mut band[(c - clo) * rows..(c - clo + 1) * rows];
+                        for r in r0..r1 {
+                            orow[r] = self.data[r * cols + c];
+                        }
+                    }
+                }
             }
-        }
+        });
         out
     }
 
@@ -172,24 +198,39 @@ impl Matrix {
     }
 }
 
-/// Blocked matmul `a @ b`. i-k-j order with a 64-wide k block keeps the
-/// inner loop a contiguous FMA over `b`'s rows, which the compiler
-/// auto-vectorizes; this is the native-backend hot loop.
+/// Blocked parallel matmul `a @ b`: the output is split into row bands
+/// (one per pool thread, `runtime::par`), and each band runs the k-blocked
+/// i-k-j loop — a 64-wide k block keeps the inner loop a contiguous FMA
+/// over `b`'s (already densely packed row-major) rows, which the compiler
+/// auto-vectorizes. Every `out[i][j]` accumulates in ascending-k order in
+/// every band layout, so the result is bit-identical at any thread count.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut out = Matrix::zeros(m, n);
+    let flops = (m as u64) * (k as u64) * (n as u64);
+    let bounds = par::plan_bands(m, flops, MIN_GEMM_WORK);
+    let parts = par::split_rows(&mut out.data, &bounds, n);
+    par::run_parts(parts, |_, (rows, out_band)| {
+        matmul_rows(a, b, rows, out_band);
+    });
+    out
+}
+
+/// One row band of the blocked matmul; `out_band` holds rows `rows` of the
+/// output. No `a == 0` skip in the inner loop: the branch defeats
+/// auto-vectorization on dense inputs (sparse aggregation goes through the
+/// SpMM kernels, not here).
+fn matmul_rows(a: &Matrix, b: &Matrix, rows: std::ops::Range<usize>, out_band: &mut [f32]) {
     const KB: usize = 64;
+    let (k, n) = (a.cols, b.cols);
     for k0 in (0..k).step_by(KB) {
         let k1 = (k0 + KB).min(k);
-        for i in 0..m {
+        for i in rows.clone() {
             let a_row = a.row(i);
-            let out_row = &mut out.data[i * n..(i + 1) * n];
+            let out_row = &mut out_band[(i - rows.start) * n..(i - rows.start + 1) * n];
             for kk in k0..k1 {
                 let av = a_row[kk];
-                if av == 0.0 {
-                    continue;
-                }
                 let b_row = &b.data[kk * n..(kk + 1) * n];
                 for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
                     *o += av * bv;
@@ -197,39 +238,109 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
             }
         }
     }
-    out
+}
+
+/// Parallel plan for the segment sums: nnz-balanced *output* segment
+/// bands plus, per band, the list of input rows that land in it (one
+/// O(nnz) histogram + one O(nnz) bucketing pass — no band ever re-scans
+/// the whole segment list). Indices stay ascending within each band, so
+/// every segment accumulates its rows in the scalar order and results are
+/// bit-identical. Returns `None` when the kernel should stay serial.
+#[allow(clippy::type_complexity)]
+fn segment_plan(
+    seg: &[usize],
+    num_segments: usize,
+    cols: usize,
+) -> Option<(Vec<usize>, Vec<Vec<u32>>)> {
+    let work = (seg.len() as u64) * (cols as u64);
+    if num_segments == 0 || work < MIN_SEG_WORK || par::num_threads() == 1 {
+        return None;
+    }
+    let mut counts = vec![0u32; num_segments];
+    for &s in seg {
+        // out-of-range ids must panic exactly as the scalar row_mut(s) does
+        assert!(s < num_segments, "segment id {} out of range {}", s, num_segments);
+        counts[s] += 1;
+    }
+    let bounds =
+        par::weighted_bands(num_segments, |s| counts[s] as u64 * cols as u64 + 1, MIN_SEG_WORK);
+    if bounds.len() <= 2 {
+        return None;
+    }
+    let mut idx_by_band: Vec<Vec<u32>> = vec![Vec::new(); bounds.len() - 1];
+    for (i, &s) in seg.iter().enumerate() {
+        let b = bounds.partition_point(|&x| x <= s) - 1;
+        idx_by_band[b].push(i as u32);
+    }
+    Some((bounds, idx_by_band))
 }
 
 /// `out[seg[i]] += x[i]` row-wise segment sum with `num_segments` output
 /// rows. The oracle for the SPMM aggregation (and the shape the Pallas
-/// kernel implements with a sink row for padding).
+/// kernel implements with a sink row for padding). Parallel over
+/// nnz-balanced segment bands.
 pub fn segment_sum(x: &Matrix, seg: &[usize], num_segments: usize) -> Matrix {
     assert_eq!(x.rows, seg.len());
-    let mut out = Matrix::zeros(num_segments, x.cols);
-    for (i, &s) in seg.iter().enumerate() {
-        debug_assert!(s < num_segments);
-        let row = x.row(i);
-        let orow = out.row_mut(s);
-        for (o, &v) in orow.iter_mut().zip(row.iter()) {
-            *o += v;
+    let cols = x.cols;
+    let mut out = Matrix::zeros(num_segments, cols);
+    let Some((bounds, idx_by_band)) = segment_plan(seg, num_segments, cols) else {
+        for (i, &s) in seg.iter().enumerate() {
+            let row = x.row(i);
+            let orow = out.row_mut(s);
+            for (o, &v) in orow.iter_mut().zip(row.iter()) {
+                *o += v;
+            }
         }
-    }
+        return out;
+    };
+    let parts: Vec<_> =
+        par::split_rows(&mut out.data, &bounds, cols).into_iter().zip(&idx_by_band).collect();
+    par::run_parts(parts, |_, ((srange, band), idx)| {
+        for &i in idx {
+            let (i, s) = (i as usize, seg[i as usize]);
+            let row = x.row(i);
+            let at = (s - srange.start) * cols;
+            let orow = &mut band[at..at + cols];
+            for (o, &v) in orow.iter_mut().zip(row.iter()) {
+                *o += v;
+            }
+        }
+    });
     out
 }
 
-/// Row-wise scaled segment sum: `out[seg[i]] += w[i] * x[i]`.
+/// Row-wise scaled segment sum: `out[seg[i]] += w[i] * x[i]`. Parallel
+/// over nnz-balanced segment bands (same plan as [`segment_sum`]).
 pub fn segment_sum_scaled(x: &Matrix, w: &[f32], seg: &[usize], num_segments: usize) -> Matrix {
     assert_eq!(x.rows, seg.len());
     assert_eq!(x.rows, w.len());
-    let mut out = Matrix::zeros(num_segments, x.cols);
-    for (i, &s) in seg.iter().enumerate() {
-        let wi = w[i];
-        let row = x.row(i);
-        let orow = out.row_mut(s);
-        for (o, &v) in orow.iter_mut().zip(row.iter()) {
-            *o += wi * v;
+    let cols = x.cols;
+    let mut out = Matrix::zeros(num_segments, cols);
+    let Some((bounds, idx_by_band)) = segment_plan(seg, num_segments, cols) else {
+        for (i, &s) in seg.iter().enumerate() {
+            let wi = w[i];
+            let row = x.row(i);
+            let orow = out.row_mut(s);
+            for (o, &v) in orow.iter_mut().zip(row.iter()) {
+                *o += wi * v;
+            }
         }
-    }
+        return out;
+    };
+    let parts: Vec<_> =
+        par::split_rows(&mut out.data, &bounds, cols).into_iter().zip(&idx_by_band).collect();
+    par::run_parts(parts, |_, ((srange, band), idx)| {
+        for &i in idx {
+            let (i, s) = (i as usize, seg[i as usize]);
+            let wi = w[i];
+            let row = x.row(i);
+            let at = (s - srange.start) * cols;
+            let orow = &mut band[at..at + cols];
+            for (o, &v) in orow.iter_mut().zip(row.iter()) {
+                *o += wi * v;
+            }
+        }
+    });
     out
 }
 

@@ -142,6 +142,192 @@ fn sampling_layer_graphs_are_bounded_subgraphs() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Intra-rank parallelism: every kernel `runtime::par` sits under must be
+// **bit-identical** to its scalar path at every pool size (the determinism
+// contract of DESIGN.md §Intra-rank parallelism). Shapes deliberately
+// straddle the serial/parallel work thresholds so both scheduling paths run.
+
+const THREAD_SWEEP: [usize; 3] = [2, 3, 8];
+
+#[test]
+fn parallel_dense_kernels_bit_identical_across_thread_counts() {
+    use deal::runtime::par;
+    run(Config::default().cases(6), |rng| {
+        let m = rng.range(1, 140);
+        let k = rng.range(1, 140);
+        let n = rng.range(1, 140);
+        let a = Matrix::random(m, k, 1.0, rng);
+        let b = Matrix::random(k, n, 1.0, rng);
+        let reference = par::with_threads(1, || (a.matmul(&b), a.transpose()));
+        for t in THREAD_SWEEP {
+            let got = par::with_threads(t, || (a.matmul(&b), a.transpose()));
+            if got != reference {
+                return Err(format!("matmul/transpose diverged at {} threads", t));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_sparse_kernels_bit_identical_across_thread_counts() {
+    use deal::primitives::sddmm::sddmm_reference;
+    use deal::runtime::{par, Backend, Native};
+    use deal::tensor::{segment_sum, segment_sum_scaled};
+    run(Config::default().cases(6), |rng| {
+        let n = rng.range(2, 1200);
+        let ne = rng.range(1, n * 12);
+        let edges: Vec<(NodeId, NodeId)> = (0..ne)
+            .map(|_| (rng.next_below(n) as NodeId, rng.next_below(n) as NodeId))
+            .collect();
+        let g = par::with_threads(1, || Csr::from_edges(n, &edges));
+        let d = rng.range(1, 80);
+        let h = Matrix::random(n, d, 1.0, rng);
+        let vals: Vec<f32> = (0..g.n_edges()).map(|_| rng.next_f32() + 0.1).collect();
+        // spmm_tile inputs: pre-gathered per-edge rows + destination segments
+        let mut seg: Vec<u32> = Vec::with_capacity(g.n_edges());
+        let mut gathered: Vec<usize> = Vec::with_capacity(g.n_edges());
+        for r in 0..g.n_rows {
+            for &s in g.row(r) {
+                seg.push(r as u32);
+                gathered.push(s as usize);
+            }
+        }
+        let feats = h.gather_rows(&gathered);
+        let seg_usize: Vec<usize> = seg.iter().map(|&s| s as usize).collect();
+        let snapshot = || -> (Matrix, Vec<f32>, Matrix, Vec<f32>, Matrix, Matrix) {
+            (
+                spmm_reference(&g, &vals, &h),
+                sddmm_reference(&g, &h),
+                Native.spmm_tile(&feats, &vals, &seg, g.n_rows).unwrap(),
+                Native.sddmm_tile(&feats, &feats).unwrap(),
+                segment_sum(&feats, &seg_usize, g.n_rows),
+                segment_sum_scaled(&feats, &vals, &seg_usize, g.n_rows),
+            )
+        };
+        let reference = par::with_threads(1, snapshot);
+        for t in THREAD_SWEEP {
+            let got = par::with_threads(t, snapshot);
+            if got != reference {
+                return Err(format!("sparse kernel diverged at {} threads", t));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_csr_build_and_compaction_bit_identical_across_thread_counts() {
+    use deal::graph::delta::{PartitionDelta, UpdateBatch};
+    use deal::runtime::par;
+    run(Config::default().cases(6), |rng| {
+        let n = rng.range(2, 2000);
+        let ne = rng.range(1, 60_000);
+        let edges: Vec<(NodeId, NodeId)> = (0..ne)
+            .map(|_| (rng.next_below(n) as NodeId, rng.next_below(n) as NodeId))
+            .collect();
+        let reference = par::with_threads(1, || Csr::from_edges(n, &edges));
+        reference.validate()?;
+        for t in THREAD_SWEEP {
+            let got = par::with_threads(t, || Csr::from_edges(n, &edges));
+            if got != reference {
+                return Err(format!("CSR construction diverged at {} threads", t));
+            }
+        }
+        // delta compaction over the same base
+        let n_ops = rng.range(1, 2000);
+        let batch = UpdateBatch {
+            add_edges: (0..n_ops)
+                .map(|_| (rng.next_below(n) as NodeId, rng.next_below(n) as NodeId))
+                .collect(),
+            remove_edges: (0..n_ops)
+                .map(|_| (rng.next_below(n) as NodeId, rng.next_below(n) as NodeId))
+                .collect(),
+            feature_updates: vec![],
+        };
+        let compact_at = |threads: usize| {
+            par::with_threads(threads, || {
+                let mut delta = PartitionDelta::new(0, n);
+                delta.stage(&batch);
+                delta.compact(&reference)
+            })
+        };
+        let (base_csr, base_dirty) = compact_at(1);
+        base_csr.validate()?;
+        for t in THREAD_SWEEP {
+            let (csr, dirty) = compact_at(t);
+            if csr != base_csr || dirty != base_dirty {
+                return Err(format!("compaction diverged at {} threads", t));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn distributed_pipeline_bit_identical_across_pool_sizes() {
+    // End-to-end over the simulated cluster: same chained GEMM → SPMM as
+    // `random_pipeline_primitives_match_oracles`, fixed inputs, global pool
+    // size swept — results must match **exactly** (the pool is process
+    // global here because cluster ranks are their own threads).
+    use deal::runtime::par;
+    let mut rng = Rng::new(0x7EA1);
+    let n = 96;
+    let d = 16;
+    let edges: Vec<(NodeId, NodeId)> = (0..n * 5)
+        .map(|_| (rng.next_below(n) as NodeId, rng.next_below(n) as NodeId))
+        .collect();
+    let g = Csr::from_edges(n, &edges);
+    let h = Matrix::random(n, d, 1.0, &mut rng);
+    let w = Matrix::random(d, 12, 1.0, &mut rng);
+    let vals = mean_weights(&g);
+    let plan = PartitionPlan::new(n, d, 2, 2);
+
+    let run_once = || {
+        let plan2 = plan.clone();
+        let tiles = Arc::new(scatter(&plan, &h));
+        let g2 = Arc::new(g.clone());
+        let w2 = Arc::new(w.clone());
+        let vals2 = Arc::new(vals.clone());
+        let cluster = Cluster::new(plan.world(), NetConfig::default());
+        let (outs, _) = cluster
+            .run(move |ctx| {
+                let backend = deal::runtime::Native;
+                let hw = deal_gemm(ctx, &plan2, &tiles[ctx.rank], &w2, &backend, 3).unwrap();
+                let plan_out = PartitionPlan::new(plan2.n_nodes, w2.cols, plan2.p, plan2.m);
+                let (p_idx, _) = plan_out.coords_of(ctx.rank);
+                let (lo, hi) = plan_out.node_range(p_idx);
+                let sub = g2.slice_rows(lo, hi);
+                let svals = vals2[g2.indptr[lo] as usize..g2.indptr[hi] as usize].to_vec();
+                let input = SpmmInput {
+                    plan: &plan_out,
+                    g: &sub,
+                    vals: EdgeValues::Scalar(&svals),
+                    h: &hw,
+                };
+                deal_spmm(ctx, &input, &backend, ExecMode::Pipelined, 16, 5)
+            })
+            .unwrap();
+        let plan_out = PartitionPlan::new(plan.n_nodes, w.cols, plan.p, plan.m);
+        gather_tiles(&plan_out, w.cols, &outs)
+    };
+
+    // Restore the auto pool even if an assert below panics.
+    struct RestorePool;
+    impl Drop for RestorePool {
+        fn drop(&mut self) {
+            deal::runtime::par::set_threads(0);
+        }
+    }
+    let _restore = RestorePool;
+    par::set_threads(1);
+    let serial = run_once();
+    par::set_threads(4);
+    let parallel = run_once();
+    assert_eq!(serial, parallel, "cluster pipeline diverged across pool sizes");
+}
+
 #[test]
 fn partition_plans_compose_with_rng() {
     // smoke: plans built from random configs always validate

@@ -210,3 +210,42 @@ fn resample_rows_matches_full_pass_property() {
         Ok(())
     });
 }
+
+/// Intra-rank parallelism contract: the band-parallel sampler reproduces
+/// the scalar draw bit-for-bit at every pool size (each row's RNG stream
+/// is forked from its id alone, so banding cannot change any draw), and
+/// re-sampling parity survives at every pool size too.
+#[test]
+fn sampling_bit_identical_across_thread_counts() {
+    use deal::runtime::par;
+    run(Config::default().cases(4), |rng| {
+        let n = rng.range(50, 4000);
+        let g = random_graph(rng, n, rng.range(n, n * 10));
+        let k = rng.range(1, 4);
+        let fanout = rng.range(1, 8);
+        let seed = rng.next_u64();
+        let reference = par::with_threads(1, || sample_all_layers(&g, k, fanout, seed));
+        for t in [2usize, 3, 8] {
+            let got = par::with_threads(t, || sample_all_layers(&g, k, fanout, seed));
+            for l in 0..k {
+                if got.layers[l] != reference.layers[l] {
+                    return Err(format!("layer {} diverged at {} threads", l, t));
+                }
+            }
+            // delta-path parity holds against the parallel sampler as well
+            let rows = [0usize, n / 2, n - 1];
+            let drawn = par::with_threads(t, || resample_rows(&g, &rows, k, fanout, seed));
+            for (i, &v) in rows.iter().enumerate() {
+                for l in 0..k {
+                    if drawn[i][l].as_slice() != reference.layers[l].row(v) {
+                        return Err(format!(
+                            "resample row {} layer {} diverged at {} threads",
+                            v, l, t
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
