@@ -170,7 +170,7 @@ fn machine_main(
                     if q == ctx.rank {
                         continue;
                     }
-                    let block = ctx.recv(q, Tag::of(PHASE, bi as u32 | RESP_BIT)).into_matrix();
+                    let block = ctx.recv_matrix(q, Tag::of(PHASE, bi as u32 | RESP_BIT));
                     for (j, &i) in missing_pos[q].iter().enumerate() {
                         feats.row_mut(i).copy_from_slice(block.row(j));
                     }

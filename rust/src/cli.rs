@@ -51,11 +51,18 @@ accepts `--threads N`: the intra-rank pool size for the parallel kernels
 unset = auto: the `DEAL_THREADS` env var, else all available cores).
 Results are bit-identical at every thread count.
 
+The config-driven commands (run, serve, stream) also accept
+`--chunk-rows N` (sugar for `--set pipeline.chunk_rows=N`): the row-band
+granularity of pipelined tensor transfers — receivers compute on early
+bands while later bands are in flight. 0 = monolithic transfers; library
+and test runs can use the `DEAL_CHUNK_ROWS` env instead. Results are
+bit-identical at every chunk size.
+
 Config keys (see rust/src/config.rs): dataset.name, dataset.scale,
 cluster.machines, cluster.feature_parts, cluster.bandwidth_gbps,
 cluster.latency_us, model.kind, model.layers, model.fanout, model.weights,
 exec.mode, exec.group_cols, exec.backend, exec.feature_prep, exec.threads,
-exec.seed
+exec.seed, pipeline.chunk_rows
 ";
 
 /// Entry point used by `main.rs`. Exits the process on error.
@@ -120,14 +127,19 @@ fn cfg_from_args(args: &[String]) -> Result<DealConfig> {
     if let Some(t) = flag_value(args, "--threads") {
         cfg.exec.threads = t.parse()?;
     }
+    // `--chunk-rows N` is sugar for `--set pipeline.chunk_rows=N`.
+    if let Some(c) = flag_value(args, "--chunk-rows") {
+        cfg.pipeline.chunk_rows = c.parse()?;
+    }
     Ok(cfg)
 }
 
-/// Apply the intra-rank pool knob for this process. Called by the command
-/// entry points right before execution starts — parsing a config stays
-/// side-effect free.
+/// Apply the process-wide runtime knobs (intra-rank pool size, pipelined
+/// chunk granularity). Called by the command entry points right before
+/// execution starts — parsing a config stays side-effect free.
 fn apply_threads(cfg: &DealConfig) {
     crate::runtime::par::set_threads(cfg.exec.threads);
+    crate::cluster::net::set_chunk_rows(cfg.pipeline.chunk_rows);
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {

@@ -23,9 +23,13 @@ use crate::tensor::Matrix;
 /// (`blocks[my_pos]` stays local). Returns the received blocks indexed by
 /// source subgroup position, with `out[my_pos] = blocks[my_pos]`.
 ///
-/// `on_stage(stage, recv_pos, block)` fires as each remote block arrives,
-/// letting callers fold compute into the ring (Deal GEMM multiplies while
-/// the next stage is in flight).
+/// Transfers are **chunk-granular** (paper §4): every block ships as
+/// row-band chunks via `Ctx::send_chunked`, each stamped with its own
+/// link-completion time, and is reassembled with `Ctx::recv_matrix` — so
+/// the wire schedule matches the pipelined primitives even when the
+/// caller wants whole blocks. `deal_gemm` goes further and folds its
+/// per-band compute into the ring inline (`Ctx::recv_stream`), which is
+/// the Fig. 7b compute/communication overlap.
 pub fn ring_all_to_all(
     ctx: &mut Ctx,
     group: &[usize],
@@ -41,14 +45,13 @@ pub fn ring_all_to_all(
     for s in 1..m {
         let dst_pos = (my_pos + s) % m;
         let block = std::mem::replace(&mut blocks[dst_pos], Matrix::zeros(0, 0));
-        ctx.send(group[dst_pos], Tag::of(phase, s as u32), Payload::Matrix(block));
+        ctx.send_chunked(group[dst_pos], Tag::of(phase, s as u32), block);
     }
     out[my_pos] = Some(std::mem::replace(&mut blocks[my_pos], Matrix::zeros(0, 0)));
     // Receive stage by stage: at stage s we hear from (pos-s) mod m.
     for s in 1..m {
         let src_pos = (my_pos + m - s) % m;
-        let payload = ctx.recv(group[src_pos], Tag::of(phase, s as u32));
-        out[src_pos] = Some(payload.into_matrix());
+        out[src_pos] = Some(ctx.recv_matrix(group[src_pos], Tag::of(phase, s as u32)));
     }
     out.into_iter().map(|b| b.unwrap()).collect()
 }
@@ -126,6 +129,40 @@ mod tests {
             let expect: Vec<usize> = (0..world).map(|src| src * 10 + rank).collect();
             assert_eq!(got, &expect, "rank {}", rank);
         }
+    }
+
+    #[test]
+    fn ring_all_to_all_chunked_matches_monolithic() {
+        // 20-row blocks at 6-row chunks (4 chunks each): results must be
+        // bit-identical to the monolithic ring, with chunked wire traffic.
+        fn blocks_for(rank: usize, world: usize) -> Vec<Matrix> {
+            (0..world)
+                .map(|j| {
+                    let mut m = Matrix::zeros(20, 4);
+                    for (i, v) in m.data.iter_mut().enumerate() {
+                        *v = (rank * 1000 + j * 100 + i) as f32;
+                    }
+                    m
+                })
+                .collect()
+        }
+        let run = |chunk: usize| {
+            crate::cluster::net::with_chunk_rows(chunk, || {
+                Cluster::new(3, NetConfig::default())
+                    .run(|ctx| {
+                        let group: Vec<usize> = (0..ctx.world).collect();
+                        let blocks = blocks_for(ctx.rank, ctx.world);
+                        ring_all_to_all(ctx, &group, ctx.rank, blocks, 5)
+                    })
+                    .unwrap()
+            })
+        };
+        let (mono, mono_rep) = run(0);
+        let (chunked, rep) = run(6);
+        assert_eq!(mono, chunked);
+        assert_eq!(mono_rep.total_chunks(), 0);
+        // each rank sends 2 remote blocks of 4 chunks each
+        assert_eq!(rep.total_chunks(), 3 * 2 * 4);
     }
 
     #[test]

@@ -55,22 +55,27 @@ impl MemTracker {
         }
     }
 
+    /// Leave the current stage (subsequent peaks are global-only).
     pub fn exit_stage(&mut self) {
         self.stage = None;
     }
 
+    /// Currently tracked bytes.
     pub fn current(&self) -> u64 {
         self.current
     }
 
+    /// High-water mark over the tracker's lifetime, in bytes.
     pub fn peak(&self) -> u64 {
         self.peak
     }
 
+    /// Peak bytes recorded while `name` was the active stage (0 if never).
     pub fn stage_peak(&self, name: &str) -> u64 {
         self.stage_peaks.get(name).copied().unwrap_or(0)
     }
 
+    /// All recorded per-stage peaks.
     pub fn stage_peaks(&self) -> &HashMap<String, u64> {
         &self.stage_peaks
     }

@@ -9,10 +9,19 @@ use crate::util::{human_bytes, human_secs};
 /// Counters accumulated by one simulated machine.
 #[derive(Clone, Debug, Default)]
 pub struct MachineMetrics {
+    /// Bytes put on the wire (payload + per-message envelope).
     pub bytes_sent: u64,
+    /// Bytes received off the wire.
     pub bytes_recv: u64,
+    /// Messages sent (a chunked transfer counts one per chunk + header).
     pub msgs_sent: u64,
+    /// Messages received.
     pub msgs_recv: u64,
+    /// Row-band chunks sent by pipelined transfers (`Ctx::send_chunked`);
+    /// monolithic-fallback sends don't count.
+    pub chunks_sent: u64,
+    /// Row-band chunks received from pipelined transfers.
+    pub chunks_recv: u64,
     /// Simulated seconds spent blocked in `recv` (after overlap credit).
     pub sim_comm_wait_secs: f64,
     /// Simulated seconds of computation (thread-CPU measured).
@@ -25,13 +34,18 @@ pub struct MachineMetrics {
 /// Result of one `Cluster::run`.
 #[derive(Clone, Debug)]
 pub struct ClusterReport {
+    /// Per-machine counters, indexed by rank.
     pub machines: Vec<MachineMetrics>,
+    /// Each machine's simulated clock at the end of the run.
     pub final_clocks: Vec<f64>,
+    /// Each machine's peak tracked memory in bytes.
     pub peak_mem: Vec<u64>,
+    /// Full per-machine memory trackers (stage peaks included).
     pub mem: Vec<MemTracker>,
 }
 
 impl ClusterReport {
+    /// An empty report for a `world`-machine run.
     pub fn new(world: usize) -> Self {
         ClusterReport {
             machines: vec![MachineMetrics::default(); world],
@@ -41,6 +55,7 @@ impl ClusterReport {
         }
     }
 
+    /// Record one machine's final clock, counters, and memory tracker.
     pub fn record(&mut self, rank: usize, clock: f64, metrics: MachineMetrics, mem: MemTracker) {
         self.final_clocks[rank] = clock;
         self.peak_mem[rank] = mem.peak();
@@ -70,6 +85,12 @@ impl ClusterReport {
         self.machines.iter().map(|m| m.msgs_sent).sum()
     }
 
+    /// Total row-band chunks moved by pipelined transfers (0 when every
+    /// transfer fell back to a single monolithic message).
+    pub fn total_chunks(&self) -> u64 {
+        self.machines.iter().map(|m| m.chunks_sent).sum()
+    }
+
     /// Maximum peak tracked memory on any machine.
     pub fn max_peak_mem(&self) -> u64 {
         self.peak_mem.iter().copied().max().unwrap_or(0)
@@ -91,10 +112,11 @@ impl ClusterReport {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "makespan={} comm={} msgs={} compute(max)={} wait(max)={} peak_mem(max)={}",
+            "makespan={} comm={} msgs={} chunks={} compute(max)={} wait(max)={} peak_mem(max)={}",
             human_secs(self.makespan()),
             human_bytes(self.total_bytes()),
             self.total_msgs(),
+            self.total_chunks(),
             human_secs(
                 self.machines
                     .iter()
@@ -120,6 +142,8 @@ impl ClusterReport {
             a.bytes_recv += b.bytes_recv;
             a.msgs_sent += b.msgs_sent;
             a.msgs_recv += b.msgs_recv;
+            a.chunks_sent += b.chunks_sent;
+            a.chunks_recv += b.chunks_recv;
             a.sim_comm_wait_secs += b.sim_comm_wait_secs;
             a.sim_compute_secs += b.sim_compute_secs;
             a.sim_serve_secs += b.sim_serve_secs;
@@ -161,6 +185,19 @@ mod tests {
         r.machines[0].msgs_sent = 3;
         r.machines[1].msgs_sent = 4;
         assert_eq!(r.total_msgs(), 7);
+    }
+
+    #[test]
+    fn total_chunks_sums_and_chains() {
+        let mut a = ClusterReport::new(1);
+        a.machines[0].chunks_sent = 5;
+        a.machines[0].chunks_recv = 2;
+        let mut b = ClusterReport::new(1);
+        b.machines[0].chunks_sent = 3;
+        a.chain(&b);
+        assert_eq!(a.total_chunks(), 8);
+        assert_eq!(a.machines[0].chunks_recv, 2);
+        assert!(a.summary().contains("chunks=8"));
     }
 
     #[test]

@@ -21,28 +21,43 @@
 //!   while the transfer was in flight pays nothing extra (pipelining), and
 //!   a machine that waited sees the wait. This is exactly the mechanism
 //!   that reproduces the Fig. 12 pipeline schedules.
+//! - `Ctx::send_chunked` / `Ctx::recv_stream` split a large matrix into
+//!   row-band chunks, each with its own link-completion stamp, so the
+//!   receiver's per-band compute overlaps the tail of the transfer at
+//!   *chunk* granularity (paper §4 "partitioned, pipelined communication";
+//!   DESIGN.md §Pipelined-communication). Granularity: `net::chunk_rows`.
 //!
 //! The simulated makespan (`ClusterReport::makespan`) is the maximum final
 //! clock; per-machine byte counters feed the Table 1–3 validations.
 
+/// Collectives (ring all-to-all, all-gather, all-reduce) over the
+/// point-to-point substrate.
 pub mod collectives;
+/// Per-machine peak-memory accounting.
 pub mod memory;
+/// Per-machine and cluster-level counters and reports.
 pub mod metrics;
+/// The LogP-ish link model, payloads, and the chunk-granularity knob.
 pub mod net;
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex};
 
+use crate::tensor::Matrix;
 use crate::Result;
 pub use memory::MemTracker;
 pub use metrics::{ClusterReport, MachineMetrics};
-pub use net::{LinkTable, Message, NetConfig, Payload, Tag};
+pub use net::{
+    chunk_rows, set_chunk_rows, with_chunk_rows, LinkTable, Message, NetConfig, Payload, Tag,
+};
 
 /// Per-machine execution context handed to the closure running on each
 /// simulated machine.
 pub struct Ctx {
+    /// This machine's rank in `0..world`.
     pub rank: usize,
+    /// Number of simulated machines in the cluster.
     pub world: usize,
     /// Simulated local clock, seconds.
     clock: f64,
@@ -145,6 +160,112 @@ impl Ctx {
         }
     }
 
+    /// Send a control message that consumes no link time: stamped ready
+    /// at the sender's current clock. Models in-band frame metadata (a
+    /// real wire carries the chunk count inside the first frame's
+    /// header); its bytes still land in the counters.
+    fn send_control(&mut self, dst: usize, tag: Tag, payload: Payload) {
+        let bytes = payload.nbytes();
+        self.metrics.bytes_sent += bytes;
+        self.metrics.msgs_sent += 1;
+        let msg = Message { src: self.rank, tag: tag.0, ready_at: self.clock, payload };
+        self.senders[dst].send(msg).expect("receiver hung up");
+    }
+
+    /// Send `m` to `dst` as a pipelined sequence of row-band chunks (the
+    /// paper's §4 "partitioned, pipelined communication"): each chunk is
+    /// scheduled on the link separately and carries its own completion
+    /// stamp, so a receiver using [`Ctx::recv_stream`] /
+    /// [`Ctx::open_stream`] computes on early bands while later bands are
+    /// still in flight. Granularity comes from [`net::chunk_rows`]; `0`,
+    /// or a matrix at most one chunk tall, falls back to one monolithic
+    /// message (exactly the pre-pipelining behavior). Chunks ride the
+    /// same `(src, tag)` FIFO the link already serializes; a zero-link-
+    /// time header announces the chunk count (in-band metadata), so the
+    /// receive side is self-describing, never needs to agree on the knob,
+    /// and the wire time is exactly `k·lat + bytes/bw`
+    /// (`NetConfig::chunked_transfer_secs`).
+    pub fn send_chunked(&mut self, dst: usize, tag: Tag, m: Matrix) {
+        match net::chunk_plan(m.rows, m.cols) {
+            None => self.send(dst, tag, Payload::Matrix(m)),
+            Some((header, bounds)) => {
+                self.metrics.chunks_sent += (bounds.len() - 1) as u64;
+                self.send_control(dst, tag, Payload::U32(header));
+                for w in bounds.windows(2) {
+                    self.send(dst, tag, Payload::Matrix(m.slice_rows(w[0], w[1])));
+                }
+            }
+        }
+    }
+
+    /// Begin receiving a (possibly chunked) matrix transfer from `src`
+    /// under `tag` — the receive side of [`Ctx::send_chunked`]. Pulls the
+    /// header (or the sole monolithic payload) immediately; chunks are
+    /// then drawn one at a time with [`MatrixStream::next`], advancing
+    /// this machine's clock to each chunk's own link-completion stamp.
+    /// The stream holds no borrow of the context, so callers can
+    /// interleave several concurrent streams (the distributed SDDMM
+    /// completes one row band across `M` column-slice streams before
+    /// computing on it).
+    pub fn open_stream(&mut self, src: usize, tag: Tag) -> MatrixStream {
+        match self.recv(src, tag) {
+            Payload::Matrix(m) => MatrixStream {
+                src,
+                tag,
+                rows: m.rows,
+                cols: m.cols,
+                next_row: 0,
+                chunks_left: 0,
+                whole: Some(m),
+            },
+            Payload::U32(hdr) => {
+                assert_eq!(hdr.len(), 3, "malformed chunk header");
+                let (n, rows, cols) = (hdr[0] as usize, hdr[1] as usize, hdr[2] as usize);
+                self.metrics.chunks_recv += n as u64;
+                MatrixStream { src, tag, rows, cols, next_row: 0, chunks_left: n, whole: None }
+            }
+            other => panic!("expected Matrix or chunk header, got {:?}", other.kind()),
+        }
+    }
+
+    /// Receive a chunked transfer, invoking `f` on every row band as it
+    /// completes (with the band's row range in the full matrix). Feeding
+    /// each band straight into a kernel makes the step cost
+    /// `max(comm, compute) + fill` instead of `comm + compute`
+    /// (`primitives::costs::pipelined_step_secs`). Returns the transfer's
+    /// `(rows, cols)`.
+    pub fn recv_stream(
+        &mut self,
+        src: usize,
+        tag: Tag,
+        mut f: impl FnMut(&mut Ctx, std::ops::Range<usize>, Matrix),
+    ) -> (usize, usize) {
+        let mut s = self.open_stream(src, tag);
+        while let Some((band, chunk)) = s.next(self) {
+            f(self, band, chunk);
+        }
+        (s.rows, s.cols)
+    }
+
+    /// Receive a chunked transfer fully assembled — the drop-in
+    /// replacement for `recv(..).into_matrix()` wherever the consumer
+    /// needs the whole matrix before computing. The assembly copy is
+    /// free, like a monolithic receive's buffer hand-off; the clock still
+    /// advances chunk by chunk, so the wire-time accounting matches the
+    /// sender's per-chunk stamps.
+    pub fn recv_matrix(&mut self, src: usize, tag: Tag) -> Matrix {
+        let mut s = self.open_stream(src, tag);
+        let mut full: Option<Matrix> = None;
+        while let Some((band, chunk)) = s.next(self) {
+            if band.start == 0 && band.end == s.rows {
+                return chunk;
+            }
+            let buf = full.get_or_insert_with(|| Matrix::zeros(s.rows, s.cols));
+            buf.set_rows(band.start, &chunk);
+        }
+        full.unwrap_or_else(|| Matrix::zeros(s.rows, s.cols))
+    }
+
     /// Send a request to machine `dst`'s *service plane* (its feature
     /// server thread, if one is running — see `spawn_server`).
     pub fn send_service(&mut self, dst: usize, tag: Tag, payload: Payload) {
@@ -175,6 +296,10 @@ impl Ctx {
             .service_inbox
             .take()
             .expect("service plane already taken (nested with_server?)");
+        // The server thread inherits the caller's chunk granularity so
+        // its responses follow the same pipelining knob (thread-locals do
+        // not cross the spawn on their own).
+        let chunk = net::chunk_rows();
         let mut sctx = ServerCtx {
             rank: self.rank,
             world: self.world,
@@ -188,7 +313,7 @@ impl Ctx {
         };
         let (out, sctx) = std::thread::scope(|scope| {
             let handle = scope.spawn(move || {
-                server(&mut sctx);
+                net::with_chunk_rows(chunk, || server(&mut sctx));
                 sctx
             });
             let out = body(self);
@@ -200,6 +325,8 @@ impl Ctx {
         self.metrics.bytes_recv += sctx.metrics.bytes_recv;
         self.metrics.msgs_sent += sctx.metrics.msgs_sent;
         self.metrics.msgs_recv += sctx.metrics.msgs_recv;
+        self.metrics.chunks_sent += sctx.metrics.chunks_sent;
+        self.metrics.chunks_recv += sctx.metrics.chunks_recv;
         self.metrics.sim_serve_secs += sctx.metrics.sim_compute_secs;
         self.service_inbox = Some(sctx.inbox);
         self.service_stash = sctx.stash;
@@ -226,12 +353,73 @@ impl Ctx {
     }
 }
 
+/// A chunked matrix transfer being received (see [`Ctx::open_stream`]).
+///
+/// Tracks how many chunks remain and which row the next band starts at;
+/// the data itself is pulled through the owning [`Ctx`] so clocks and
+/// byte counters stay on the machine doing the receiving.
+pub struct MatrixStream {
+    src: usize,
+    tag: Tag,
+    /// Total rows the transfer delivers.
+    rows: usize,
+    /// Column count of every chunk.
+    cols: usize,
+    next_row: usize,
+    chunks_left: usize,
+    /// Monolithic payload already pulled from the inbox by `open_stream`.
+    whole: Option<Matrix>,
+}
+
+impl MatrixStream {
+    /// Total rows the stream will deliver.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count of every chunk.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// True once every chunk has been delivered by [`MatrixStream::next`].
+    pub fn done(&self) -> bool {
+        self.whole.is_none() && self.chunks_left == 0
+    }
+
+    /// Pull the next chunk, advancing `ctx`'s clock to its completion
+    /// stamp: returns the row band it covers in the full matrix plus its
+    /// data, or `None` when the transfer is complete.
+    pub fn next(&mut self, ctx: &mut Ctx) -> Option<(std::ops::Range<usize>, Matrix)> {
+        if let Some(m) = self.whole.take() {
+            self.next_row = self.rows;
+            return Some((0..self.rows, m));
+        }
+        if self.chunks_left == 0 {
+            return None;
+        }
+        let m = ctx.recv(self.src, self.tag).into_matrix();
+        let lo = self.next_row;
+        let hi = lo + m.rows;
+        assert!(hi <= self.rows, "chunk overruns transfer ({} > {})", hi, self.rows);
+        assert_eq!(m.cols, self.cols, "chunk width changed mid-transfer");
+        self.next_row = hi;
+        self.chunks_left -= 1;
+        if self.chunks_left == 0 {
+            assert_eq!(self.next_row, self.rows, "chunked transfer under-delivered");
+        }
+        Some((lo..hi, m))
+    }
+}
+
 /// The context a feature-server thread runs on (see `Ctx::with_server`):
 /// it receives requests in arrival order from the machine's service plane,
 /// performs gathers (clocked like `Ctx::compute`), and replies on the data
 /// plane.
 pub struct ServerCtx {
+    /// Rank of the machine this server thread belongs to.
     pub rank: usize,
+    /// Number of simulated machines in the cluster.
     pub world: usize,
     clock: f64,
     cores: f64,
@@ -240,6 +428,7 @@ pub struct ServerCtx {
     /// Early messages belonging to later phases.
     stash: std::collections::VecDeque<Message>,
     links: Arc<LinkTable>,
+    /// Counters merged into the owning machine's after the server joins.
     pub metrics: MachineMetrics,
 }
 
@@ -298,6 +487,36 @@ impl ServerCtx {
         self.senders[dst].send(msg).expect("receiver hung up");
     }
 
+    /// Reply with `m` as a pipelined chunk sequence — the server-side
+    /// twin of [`Ctx::send_chunked`] (one shared protocol definition,
+    /// `net::chunk_plan`); requesters consume the bands with
+    /// [`Ctx::recv_stream`] / [`Ctx::recv_matrix`]. This is how the
+    /// feature servers stream gathered rows so the requester's per-band
+    /// aggregation overlaps the rest of the response.
+    pub fn send_chunked(&mut self, dst: usize, tag: Tag, m: Matrix) {
+        match net::chunk_plan(m.rows, m.cols) {
+            None => self.send(dst, tag, Payload::Matrix(m)),
+            Some((header, bounds)) => {
+                self.metrics.chunks_sent += (bounds.len() - 1) as u64;
+                self.send_control(dst, tag, Payload::U32(header));
+                for w in bounds.windows(2) {
+                    self.send(dst, tag, Payload::Matrix(m.slice_rows(w[0], w[1])));
+                }
+            }
+        }
+    }
+
+    /// Send a control message that consumes no link time (see
+    /// `Ctx::send_control`): in-band frame metadata, bytes still counted.
+    fn send_control(&mut self, dst: usize, tag: Tag, payload: Payload) {
+        let bytes = payload.nbytes();
+        self.metrics.bytes_sent += bytes;
+        self.metrics.msgs_sent += 1;
+        let msg = Message { src: self.rank, tag: tag.0, ready_at: self.clock, payload };
+        self.senders[dst].send(msg).expect("receiver hung up");
+    }
+
+    /// Current simulated time on this server thread.
     pub fn now(&self) -> f64 {
         self.clock
     }
@@ -315,19 +534,23 @@ pub fn thread_cpu_time() -> f64 {
 /// A simulated cluster: spawns one thread per machine, runs `f` on each,
 /// and collects results plus per-machine metrics into a `ClusterReport`.
 pub struct Cluster {
+    /// Number of simulated machines.
     pub world: usize,
+    /// Link model shared by every machine pair.
     pub net: NetConfig,
-    /// Cores per simulated machine (compute-time divisor). Default 16 —
-    /// conservative for the paper's 64-vCPU R5.16xlarge machines.
+    /// Cores per simulated machine (compute-time divisor). Default 64 —
+    /// the paper's 64-vCPU R5.16xlarge machines.
     pub cores: f64,
 }
 
 impl Cluster {
+    /// A cluster of `world` machines over `net`-modeled links.
     pub fn new(world: usize, net: NetConfig) -> Self {
         assert!(world >= 1);
         Cluster { world, net, cores: 64.0 }
     }
 
+    /// Override the per-machine core count (compute-time divisor).
     pub fn with_cores(mut self, cores: f64) -> Self {
         assert!(cores >= 1.0);
         self.cores = cores;
@@ -369,6 +592,10 @@ impl Cluster {
         // would inflate every measured thread-CPU time). Thread count
         // never changes results — only scheduling.
         let rank_pool = (crate::runtime::par::num_threads() / world).max(1);
+        // Rank threads inherit the caller's chunk granularity (thread
+        // locals don't cross spawns), so `net::with_chunk_rows` sweeps in
+        // tests/benches reach every simulated machine.
+        let chunk = net::chunk_rows();
         for rank in 0..world {
             let senders = senders.clone();
             let service_senders = service_senders.clone();
@@ -400,7 +627,9 @@ impl Cluster {
                 // A panicking machine would starve its peers (they block in
                 // recv), so announce loudly before unwinding.
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    crate::runtime::par::with_threads(rank_pool, || f(&mut ctx))
+                    net::with_chunk_rows(chunk, || {
+                        crate::runtime::par::with_threads(rank_pool, || f(&mut ctx))
+                    })
                 }));
                 if result.is_err() {
                     eprintln!("[cluster] machine {} panicked — peers will stall", rank);
@@ -535,6 +764,83 @@ mod tests {
         for c in &clocks {
             assert!((c - 3.0).abs() < 1e-9, "clocks={:?}", clocks);
         }
+    }
+
+    #[test]
+    fn chunked_send_recv_roundtrip() {
+        // 100 rows at 16-row chunks → 7 chunks behind a header message.
+        net::with_chunk_rows(16, || {
+            let cluster = Cluster::new(2, small_net());
+            let (vals, report) = cluster
+                .run(|ctx| {
+                    if ctx.rank == 0 {
+                        let mut m = Matrix::zeros(100, 8);
+                        for (i, v) in m.data.iter_mut().enumerate() {
+                            *v = i as f32;
+                        }
+                        ctx.send_chunked(1, Tag(9), m.clone());
+                        m
+                    } else {
+                        ctx.recv_matrix(0, Tag(9))
+                    }
+                })
+                .unwrap();
+            assert_eq!(vals[0], vals[1], "assembled receive must be bit-identical");
+            assert_eq!(report.machines[0].chunks_sent, 7);
+            assert_eq!(report.machines[1].chunks_recv, 7);
+            assert_eq!(report.machines[1].msgs_recv, 8, "header + 7 chunks");
+        });
+    }
+
+    #[test]
+    fn monolithic_fallback_sends_one_message() {
+        net::with_chunk_rows(0, || {
+            let cluster = Cluster::new(2, small_net());
+            let (_, report) = cluster
+                .run(|ctx| {
+                    if ctx.rank == 0 {
+                        ctx.send_chunked(1, Tag(3), Matrix::zeros(100, 8));
+                    } else {
+                        let m = ctx.recv_matrix(0, Tag(3));
+                        assert_eq!((m.rows, m.cols), (100, 8));
+                    }
+                })
+                .unwrap();
+            assert_eq!(report.machines[0].msgs_sent, 1);
+            assert_eq!(report.machines[0].chunks_sent, 0);
+        });
+    }
+
+    #[test]
+    fn chunked_overlap_beats_monolithic() {
+        // Deterministic overlap check: the receiver charges exactly one
+        // row's wire time of compute per row (`advance`), so at chunk
+        // granularity the step pipelines to ~max(comm, compute) while the
+        // monolithic path serializes to comm + compute.
+        let rows = 64usize;
+        let cols = 256usize;
+        let net_cfg = NetConfig { bandwidth_gbps: 1.0, latency_secs: 1e-6 };
+        let per_row = (cols as f64 * 4.0 * 8.0) / 1e9;
+        let run = |chunk: usize| -> f64 {
+            net::with_chunk_rows(chunk, || {
+                let cluster = Cluster::new(2, net_cfg);
+                let (_, rep) = cluster
+                    .run(move |ctx| {
+                        if ctx.rank == 0 {
+                            ctx.send_chunked(1, Tag(1), Matrix::zeros(rows, cols));
+                        } else {
+                            ctx.recv_stream(0, Tag(1), |ctx, band, _m| {
+                                ctx.advance(band.len() as f64 * per_row);
+                            });
+                        }
+                    })
+                    .unwrap();
+                rep.makespan()
+            })
+        };
+        let mono = run(0);
+        let piped = run(8);
+        assert!(piped < mono * 0.75, "piped={} mono={}", piped, mono);
     }
 
     #[test]

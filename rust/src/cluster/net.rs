@@ -5,17 +5,133 @@
 //! `max(t, link_busy) + latency + b / bandwidth`; `link_busy` advances to
 //! that completion time. This is the standard LogP-ish model and is the
 //! entire source of "simulated time" on the communication side.
+//!
+//! **Chunked, pipelined transfers** (paper §4, DESIGN.md
+//! §Pipelined-communication): a large matrix can be sent as a sequence of
+//! row-band chunks (`Ctx::send_chunked`), each scheduled on the link as
+//! its own transfer with its own completion stamp. The receiver consumes
+//! bands as they land (`Ctx::recv_stream`), so compute on early rows
+//! overlaps the tail of the transfer. The granularity knob lives here:
+//! [`chunk_rows`] resolves `with_chunk_rows` scope → `set_chunk_rows`
+//! global (`pipeline.chunk_rows` config / `--chunk-rows` CLI) →
+//! `DEAL_CHUNK_ROWS` env → [`DEFAULT_CHUNK_ROWS`]; `0` disables chunking
+//! (monolithic single-message transfers, the pre-pipelining behavior).
 
-use std::sync::Mutex;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
 
 use crate::tensor::Matrix;
+
+/// Default rows per chunk for pipelined matrix transfers (see
+/// [`chunk_rows`]): a compromise between fill-time reduction and the
+/// per-chunk latency the link model charges — 256 rows of a 128-wide f32
+/// tile is 128 KiB, a handful of chunks for typical tile exchanges, near
+/// the `k* = sqrt(overlap/latency)` optimum of
+/// `primitives::costs::optimal_chunks` at bench scales.
+pub const DEFAULT_CHUNK_ROWS: usize = 256;
+
+/// Sentinel for "no override" in the chunk-rows resolution chain (`0` is a
+/// meaningful value — monolithic — so unset needs its own marker).
+const CHUNK_UNSET: usize = usize::MAX;
+
+/// Process-global chunk-rows override; `CHUNK_UNSET` means "not set".
+static GLOBAL_CHUNK_ROWS: AtomicUsize = AtomicUsize::new(CHUNK_UNSET);
+
+thread_local! {
+    /// Thread-local chunk-rows override (`CHUNK_UNSET` = no override).
+    static LOCAL_CHUNK_ROWS: Cell<usize> = const { Cell::new(CHUNK_UNSET) };
+}
+
+/// Set the process-global pipelined-transfer granularity in rows (`0` =
+/// monolithic). Wired to `DealConfig.pipeline.chunk_rows` and the
+/// `--chunk-rows` CLI flag; `usize::MAX` resets to auto (env or default).
+pub fn set_chunk_rows(n: usize) {
+    GLOBAL_CHUNK_ROWS.store(n, Ordering::Relaxed);
+}
+
+/// Run `f` with the chunk granularity pinned to `n` rows on this thread
+/// (`0` = monolithic). `Cluster::run` and `Ctx::with_server` capture the
+/// caller's effective value, so a pinned sweep reaches every simulated
+/// machine and its feature-server thread — the chunk-size property tests
+/// rely on this.
+pub fn with_chunk_rows<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    let prev = LOCAL_CHUNK_ROWS.with(|c| c.replace(n));
+    let out = f();
+    LOCAL_CHUNK_ROWS.with(|c| c.set(prev));
+    out
+}
+
+fn env_chunk_default() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("DEAL_CHUNK_ROWS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_CHUNK_ROWS)
+    })
+}
+
+/// Effective rows-per-chunk for pipelined transfers issued from this
+/// thread: [`with_chunk_rows`] scope → [`set_chunk_rows`] global
+/// (config/CLI) → `DEAL_CHUNK_ROWS` env → [`DEFAULT_CHUNK_ROWS`].
+/// `0` means monolithic (no chunking). Chunk size never changes results —
+/// only simulated schedules (DESIGN.md §Pipelined-communication).
+pub fn chunk_rows() -> usize {
+    let local = LOCAL_CHUNK_ROWS.with(|c| c.get());
+    if local != CHUNK_UNSET {
+        return local;
+    }
+    let global = GLOBAL_CHUNK_ROWS.load(Ordering::Relaxed);
+    if global != CHUNK_UNSET {
+        return global;
+    }
+    env_chunk_default()
+}
+
+/// Row-band boundaries for a `rows`-row transfer at granularity `chunk`
+/// (`0` = one monolithic band). Always returns at least `[0, rows]`, so an
+/// empty matrix is one (empty) chunk. Boundaries depend only on the shape
+/// and the knob — sender and receiver never need to negotiate.
+pub fn chunk_bounds_for(rows: usize, chunk: usize) -> Vec<usize> {
+    if chunk == 0 || rows <= chunk {
+        return vec![0, rows];
+    }
+    let mut b: Vec<usize> = (0..rows).step_by(chunk).collect();
+    b.push(rows);
+    b
+}
+
+/// [`chunk_bounds_for`] at this thread's effective [`chunk_rows`].
+pub fn chunk_bounds(rows: usize) -> Vec<usize> {
+    chunk_bounds_for(rows, chunk_rows())
+}
+
+/// The send-side chunking decision for a `rows × cols` matrix, shared by
+/// `Ctx::send_chunked` and `ServerCtx::send_chunked` so the wire protocol
+/// has exactly one definition: `None` = send monolithically (zero
+/// overhead vs. a plain send), `Some((header, bounds))` = announce
+/// `bounds.len() - 1` chunks with the 3-word header `[n, rows, cols]`,
+/// then ship one row band per entry.
+pub(crate) fn chunk_plan(rows: usize, cols: usize) -> Option<(Vec<u32>, Vec<usize>)> {
+    let bounds = chunk_bounds(rows);
+    let n = bounds.len() - 1;
+    if n <= 1 {
+        return None;
+    }
+    Some((vec![n as u32, rows as u32, cols as u32], bounds))
+}
 
 /// Network parameters. Defaults mirror the paper's testbed (25 Gbps
 /// Ethernet between EC2 instances; 100 µs is a typical same-AZ RTT/2 plus
 /// stack overhead).
 #[derive(Clone, Copy, Debug)]
 pub struct NetConfig {
+    /// Link bandwidth in gigabits per second.
     pub bandwidth_gbps: f64,
+    /// Per-transfer latency in seconds (applied once per message — a
+    /// chunked transfer therefore pays it once per chunk; see
+    /// [`chunked_transfer_secs`](NetConfig::chunked_transfer_secs)).
     pub latency_secs: f64,
 }
 
@@ -29,6 +145,17 @@ impl NetConfig {
     /// Seconds to move `bytes` over one link, excluding queueing.
     pub fn transfer_secs(&self, bytes: u64) -> f64 {
         self.latency_secs + (bytes as f64 * 8.0) / (self.bandwidth_gbps * 1e9)
+    }
+
+    /// Seconds until the *last* chunk of a `bytes` payload split into `k`
+    /// link transfers completes, excluding queueing and per-chunk envelope
+    /// bytes: `k · latency + bytes / bandwidth`. Equals
+    /// [`transfer_secs`](NetConfig::transfer_secs) at `k = 1`; the
+    /// `(k − 1) · latency` surplus is the honest price of pipelining,
+    /// which the overlap with compute must buy back
+    /// (`primitives::costs::pipelined_step_secs`).
+    pub fn chunked_transfer_secs(&self, bytes: u64, k: u64) -> f64 {
+        self.latency_secs * k.max(1) as f64 + (bytes as f64 * 8.0) / (self.bandwidth_gbps * 1e9)
     }
 }
 
@@ -61,6 +188,9 @@ pub enum Payload {
 }
 
 impl Payload {
+    /// Wire size in bytes: data plus a fixed 64-byte envelope (src, tag,
+    /// shape, lengths). Every message pays the envelope, so a chunked
+    /// transfer is honestly charged one envelope per chunk.
     pub fn nbytes(&self) -> u64 {
         const HEADER: u64 = 64; // envelope: src, tag, shape, lengths
         HEADER
@@ -73,44 +203,51 @@ impl Payload {
             }
     }
 
+    /// Unwrap a [`Payload::Matrix`]; panics on any other variant.
     pub fn into_matrix(self) -> Matrix {
         match self {
             Payload::Matrix(m) => m,
-            other => panic!("expected Matrix payload, got {:?}", payload_kind(&other)),
+            other => panic!("expected Matrix payload, got {:?}", other.kind()),
         }
     }
 
+    /// Unwrap a [`Payload::U32`]; panics on any other variant.
     pub fn into_u32(self) -> Vec<u32> {
         match self {
             Payload::U32(v) => v,
-            other => panic!("expected U32 payload, got {:?}", payload_kind(&other)),
+            other => panic!("expected U32 payload, got {:?}", other.kind()),
         }
     }
 
+    /// Unwrap a [`Payload::F32`]; panics on any other variant.
     pub fn into_f32(self) -> Vec<f32> {
         match self {
             Payload::F32(v) => v,
-            other => panic!("expected F32 payload, got {:?}", payload_kind(&other)),
+            other => panic!("expected F32 payload, got {:?}", other.kind()),
         }
     }
-}
 
-fn payload_kind(p: &Payload) -> &'static str {
-    match p {
-        Payload::Bytes(_) => "Bytes",
-        Payload::U32(_) => "U32",
-        Payload::F32(_) => "F32",
-        Payload::Matrix(_) => "Matrix",
-        Payload::Empty => "Empty",
+    /// Variant name, for protocol-mismatch diagnostics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::Bytes(_) => "Bytes",
+            Payload::U32(_) => "U32",
+            Payload::F32(_) => "F32",
+            Payload::Matrix(_) => "Matrix",
+            Payload::Empty => "Empty",
+        }
     }
 }
 
 /// A message in flight.
 pub struct Message {
+    /// Sending machine's rank.
     pub src: usize,
+    /// Raw tag bits ([`Tag`] phase/sequence composition).
     pub tag: u64,
     /// Simulated time at which the payload is fully received.
     pub ready_at: f64,
+    /// The data being moved.
     pub payload: Payload,
 }
 
@@ -122,6 +259,7 @@ pub struct LinkTable {
 }
 
 impl LinkTable {
+    /// A table for `world` machines over pairwise `net`-modeled links.
     pub fn new(world: usize, net: NetConfig) -> Self {
         LinkTable { world, net, busy_until: Mutex::new(vec![0.0; world * world]) }
     }
@@ -187,5 +325,52 @@ mod tests {
         let t = Tag::of(3, 7);
         assert_eq!(t.0, (3u64 << 32) | 7);
         assert_ne!(Tag::of(3, 7), Tag::of(7, 3));
+    }
+
+    #[test]
+    fn chunk_bounds_shapes() {
+        assert_eq!(chunk_bounds_for(10, 0), vec![0, 10]);
+        assert_eq!(chunk_bounds_for(10, 16), vec![0, 10]);
+        assert_eq!(chunk_bounds_for(10, 10), vec![0, 10]);
+        assert_eq!(chunk_bounds_for(10, 4), vec![0, 4, 8, 10]);
+        assert_eq!(chunk_bounds_for(10, 1).len(), 11);
+        assert_eq!(chunk_bounds_for(0, 4), vec![0, 0]);
+    }
+
+    #[test]
+    fn chunk_rows_resolution_order() {
+        with_chunk_rows(7, || {
+            assert_eq!(chunk_rows(), 7);
+            with_chunk_rows(0, || assert_eq!(chunk_rows(), 0));
+            assert_eq!(chunk_rows(), 7);
+        });
+        // outside any scope: global/env/default, all >= 0 by construction
+        let _ = chunk_rows();
+    }
+
+    #[test]
+    fn per_chunk_completion_times_sum_to_monolithic_plus_latency() {
+        // Splitting a payload into k link transfers must cost exactly the
+        // monolithic transfer time plus (k - 1) extra latency terms — the
+        // LogP model keeps byte time linear, so only the fixed per-message
+        // cost multiplies.
+        let net = NetConfig { bandwidth_gbps: 10.0, latency_secs: 50e-6 };
+        let links = LinkTable::new(2, net);
+        let payload_bytes: u64 = 1 << 20;
+        let bounds = chunk_bounds_for(1024, 128); // 8 chunks
+        let k = (bounds.len() - 1) as u64;
+        let per_chunk = payload_bytes / k;
+        let mut last = 0.0;
+        let mut prev = 0.0;
+        for _ in 0..k {
+            last = links.schedule(0, 1, 0.0, per_chunk);
+            assert!(last > prev, "chunk stamps must be strictly increasing");
+            prev = last;
+        }
+        let mono = net.transfer_secs(payload_bytes);
+        let expect = mono + (k - 1) as f64 * net.latency_secs;
+        assert!((last - expect).abs() < 1e-12, "last={} expect={}", last, expect);
+        assert!((net.chunked_transfer_secs(payload_bytes, k) - expect).abs() < 1e-12);
+        assert!((net.chunked_transfer_secs(payload_bytes, 1) - mono).abs() < 1e-15);
     }
 }

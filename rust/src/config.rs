@@ -70,6 +70,20 @@ pub struct ExecCfg {
     pub seed: u64,
 }
 
+/// Chunked, pipelined communication (paper §4; DESIGN.md
+/// §Pipelined-communication).
+#[derive(Clone, Debug)]
+pub struct PipelineCfg {
+    /// Rows per chunk for large matrix transfers (`Ctx::send_chunked`):
+    /// receivers compute on early row bands while later bands are in
+    /// flight. `0` = monolithic single-message transfers (the
+    /// pre-pipelining behavior). Applied by the CLI via
+    /// `cluster::net::set_chunk_rows` (`--chunk-rows`, or the
+    /// `DEAL_CHUNK_ROWS` env for library/test use); results are
+    /// bit-identical at every value.
+    pub chunk_rows: usize,
+}
+
 /// Root configuration.
 #[derive(Clone, Debug)]
 pub struct DealConfig {
@@ -77,6 +91,7 @@ pub struct DealConfig {
     pub cluster: ClusterCfg,
     pub model: ModelCfg,
     pub exec: ExecCfg,
+    pub pipeline: PipelineCfg,
 }
 
 impl Default for DealConfig {
@@ -108,6 +123,7 @@ impl Default for DealConfig {
                 threads: 0,
                 seed: 0xDEA1,
             },
+            pipeline: PipelineCfg { chunk_rows: crate::cluster::net::DEFAULT_CHUNK_ROWS },
         }
     }
 }
@@ -148,6 +164,7 @@ impl DealConfig {
             "exec.construction" => self.exec.construction = v.into(),
             "exec.threads" => self.exec.threads = v.parse()?,
             "exec.seed" => self.exec.seed = v.parse()?,
+            "pipeline.chunk_rows" => self.pipeline.chunk_rows = v.parse()?,
             other => anyhow::bail!("unknown config key '{}'", other),
         }
         Ok(())
@@ -238,6 +255,17 @@ mod tests {
         assert_eq!(cfg.parts().unwrap(), (2, 2));
         assert_eq!(cfg.exec_mode().unwrap(), ExecMode::Pipelined);
         assert!((cfg.net().latency_secs - 100e-6).abs() < 1e-12);
+        assert_eq!(cfg.pipeline.chunk_rows, crate::cluster::net::DEFAULT_CHUNK_ROWS);
+    }
+
+    #[test]
+    fn chunk_rows_key_parses() {
+        let mut cfg = DealConfig::default();
+        cfg.set("pipeline.chunk_rows", "64").unwrap();
+        assert_eq!(cfg.pipeline.chunk_rows, 64);
+        cfg.set("pipeline.chunk_rows", "0").unwrap();
+        assert_eq!(cfg.pipeline.chunk_rows, 0, "0 = monolithic fallback");
+        assert!(cfg.set("pipeline.chunk_rows", "x").is_err());
     }
 
     #[test]

@@ -365,6 +365,13 @@ fn gcn_rest(
 /// *from loader locations* via a location table, and the output-oriented
 /// aggregation lands `H^(1)` in the collaborative layout — no
 /// redistribution round.
+///
+/// Loader responses stream as row-band chunks and are assembled on
+/// arrival; the aggregation itself stays whole-buffer because each
+/// destination row mixes sources from *several* loader blocks, so
+/// chunk-wise accumulation would make the float-add order depend on the
+/// chunk size — forbidden by the determinism contract (DESIGN.md
+/// §Pipelined-communication).
 #[allow(clippy::too_many_arguments)]
 pub fn fused_first_layer(
     ctx: &mut Ctx,
@@ -450,7 +457,9 @@ pub fn fused_first_layer(
                     }
                     out
                 });
-                sctx.send(msg.src, Tag::of(phase, seq | 0x8000_0000), Payload::Matrix(gathered));
+                // streamed response: the requester's staging copy starts
+                // on the first band while the rest is still in flight
+                sctx.send_chunked(msg.src, Tag::of(phase, seq | 0x8000_0000), gathered);
                 served += 1;
             }
         },
@@ -483,7 +492,7 @@ pub fn fused_first_layer(
                 pending.push((rank, rank as u32, 0));
             }
             for &(rank, seq, _) in &pending {
-                let block = ctx.recv(rank, Tag::of(phase, seq | 0x8000_0000)).into_matrix();
+                let block = ctx.recv_matrix(rank, Tag::of(phase, seq | 0x8000_0000));
                 ctx.mem.alloc(block.nbytes());
                 rows.push(block);
                 let bucket = rows.len() - 1;

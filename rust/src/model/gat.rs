@@ -167,7 +167,7 @@ fn fetch_v(
                     continue;
                 }
                 let server = plan.rank_of(g.src_part, m_idx);
-                let block = ctx.recv(server, Tag::of(phase, seq as u32 | RESP_BIT)).into_matrix();
+                let block = ctx.recv_matrix(server, Tag::of(phase, seq as u32 | RESP_BIT));
                 ids.extend_from_slice(&g.cols);
                 rows.push(block);
             }

@@ -10,15 +10,21 @@
 /// Inputs to the cost model.
 #[derive(Clone, Copy, Debug)]
 pub struct CostParams {
+    /// Node count `N`.
     pub n: f64,
+    /// Feature dimension `D`.
     pub d: f64,
+    /// Graph (row) partitions `P`.
     pub p: f64,
+    /// Feature (column) partitions `M`.
     pub m: f64,
     /// Average non-zeros per column of `G_0`.
     pub z: f64,
 }
 
 impl CostParams {
+    /// Parameters for an `N × D` feature matrix over a `P × M` machine
+    /// grid with `z` average non-zeros per `G_0` column.
     pub fn new(n: usize, d: usize, p: usize, m: usize, z: f64) -> Self {
         CostParams { n: n as f64, d: d as f64, p: p as f64, m: m as f64, z }
     }
@@ -108,6 +114,45 @@ pub fn intra_rank_compute_secs(cpu_secs: f64, forks: u64, cores: f64) -> f64 {
     cpu_secs / cores.max(1.0) + FORK_JOIN_OVERHEAD_SECS * forks as f64
 }
 
+// ---------------------------------------- pipelined chunked communication
+
+/// Simulated time for one communication/computation step when a transfer
+/// of `comm` seconds is split into `k` equal chunks overlapped with
+/// `compute` seconds of chunk-local work (paper §4; DESIGN.md
+/// §Pipelined-communication): the slower side sets the pace and one chunk
+/// of the faster side sticks out as fill (or drain), giving
+/// `max(comm, compute) + min(comm, compute) / k`. At `k ≤ 1` the step
+/// serializes to `comm + compute` — the monolithic `Ctx::recv` behavior.
+/// Per-chunk latency overhead is modeled separately by
+/// [`chunking_overhead_secs`]; fold it into `comm` before calling.
+pub fn pipelined_step_secs(comm: f64, compute: f64, k: u64) -> f64 {
+    if k <= 1 {
+        return comm + compute;
+    }
+    comm.max(compute) + comm.min(compute) / k as f64
+}
+
+/// Extra wire time a `k`-chunk transfer pays over a monolithic one: every
+/// chunk is its own link transfer, so `(k − 1)` additional latency terms.
+/// (Per-chunk envelope bytes are charged by `Payload::nbytes` and already
+/// sit in the byte counters.)
+pub fn chunking_overhead_secs(latency_secs: f64, k: u64) -> f64 {
+    latency_secs * k.saturating_sub(1) as f64
+}
+
+/// Chunk count minimizing fill + per-chunk latency,
+/// `argmin_k [min(comm, compute)/k + (k − 1)·latency]`:
+/// `k* = sqrt(min(comm, compute) / latency)`, at least 1. The
+/// `pipeline.chunk_rows` knob is this in row units; the
+/// `pipeline_overlap` bench sweeps around it.
+pub fn optimal_chunks(comm: f64, compute: f64, latency_secs: f64) -> u64 {
+    let overlap = comm.min(compute);
+    if overlap <= 0.0 {
+        return 1;
+    }
+    (overlap / latency_secs.max(1e-9)).sqrt().round().max(1.0) as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +199,39 @@ mod tests {
         assert!((with_forks - (0.1 + 3.0 * FORK_JOIN_OVERHEAD_SECS)).abs() < 1e-12);
         // degenerate core count clamps to 1
         assert_eq!(intra_rank_compute_secs(2.0, 0, 0.0), 2.0);
+    }
+
+    #[test]
+    fn pipelined_step_overlaps() {
+        // k = 1 serializes; k → ∞ approaches max(comm, compute).
+        assert_eq!(pipelined_step_secs(2.0, 1.0, 1), 3.0);
+        assert!((pipelined_step_secs(2.0, 1.0, 4) - 2.25).abs() < 1e-12);
+        assert!((pipelined_step_secs(1.0, 2.0, 4) - 2.25).abs() < 1e-12);
+        assert!(pipelined_step_secs(2.0, 1.0, 1000) < 2.01);
+        // monotone non-increasing in k
+        let mut prev = f64::INFINITY;
+        for k in 1..=64 {
+            let t = pipelined_step_secs(3.0, 2.0, k);
+            assert!(t <= prev + 1e-12);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn chunking_overhead_and_optimum() {
+        assert_eq!(chunking_overhead_secs(100e-6, 1), 0.0);
+        assert!((chunking_overhead_secs(100e-6, 8) - 700e-6).abs() < 1e-12);
+        // 10 ms of overlap at 100 µs latency → k* = sqrt(100) = 10
+        assert_eq!(optimal_chunks(10e-3, 20e-3, 100e-6), 10);
+        assert_eq!(optimal_chunks(0.0, 1.0, 100e-6), 1);
+        // the optimum beats both endpoints once overhead is folded in
+        let (c, x, lat) = (10e-3, 10e-3, 100e-6);
+        let total = |k: u64| {
+            pipelined_step_secs(c + chunking_overhead_secs(lat, k), x, k)
+        };
+        let kstar = optimal_chunks(c, x, lat);
+        assert!(total(kstar) < total(1));
+        assert!(total(kstar) < total(10_000));
     }
 
     #[test]

@@ -27,6 +27,13 @@ use crate::util::even_ranges;
 /// feat_width(m)` tile; `w` is the replicated `feature_dim × d_out`
 /// weight. Returns this rank's `rows_of(p) × out_width(m)` tile of `H@W`
 /// (output columns split by `even_ranges(d_out, plan.m)`).
+///
+/// Ring transfers are chunked (`pipeline.chunk_rows`, paper §4): each
+/// arriving row band is multiplied with its `W` rows while later bands
+/// are still in flight, so a stage costs `max(comm, compute) + fill`
+/// instead of `comm + compute`. Results are bit-identical at every chunk
+/// size (row-band GEMM preserves per-row dot order; each accumulator row
+/// is added to once per stage either way).
 pub fn deal_gemm(
     ctx: &mut Ctx,
     plan: &PartitionPlan,
@@ -53,12 +60,12 @@ pub fn deal_gemm(
         return Ok(out);
     }
 
-    // ---- Step 1: row-wise re-shard via ring all-to-all (sends up front,
-    // non-blocking; receives interleaved with compute below).
+    // ---- Step 1: row-wise re-shard via ring all-to-all (chunked sends up
+    // front, non-blocking; receives interleaved with compute below).
     for s in 1..mm {
         let j = (m_idx + s) % mm;
         let block = local.slice_rows(sub[j], sub[j + 1]);
-        ctx.send(group[j], Tag::of(phase, s as u32), Payload::Matrix(block));
+        ctx.send_chunked(group[j], Tag::of(phase, s as u32), block);
     }
 
     // Accumulator for my sub-rows across the full output width: this is
@@ -76,24 +83,40 @@ pub fn deal_gemm(
         add_assign(&mut acc, &part);
     }
 
-    // Ring stages: receive block from (m - s) mod M, multiply with the
-    // matching W rows, accumulate.
+    // Ring stages: stream each block from (m - s) mod M as row-band
+    // chunks, multiplying every band with the matching W rows as it lands
+    // (§4 chunk-level overlap: the tail of the transfer hides behind the
+    // band GEMMs). Row-band GEMM keeps each output row's dot products —
+    // and the once-per-stage row adds — in the monolithic order, so the
+    // result is bit-identical at every chunk size.
     for s in 1..mm {
         let src_pos = (m_idx + mm - s) % mm;
-        let block = ctx.recv(group[src_pos], Tag::of(phase, s as u32)).into_matrix();
-        ctx.mem.with_transient(block.nbytes(), || ());
         let (slo, shi) = plan.feat_range(src_pos);
         let w_rows = w.slice_rows(slo, shi);
-        let part = ctx.compute(|| backend.gemm(&block, &w_rows))?;
-        add_assign(&mut acc, &part);
+        let mut err: Option<anyhow::Error> = None;
+        ctx.recv_stream(group[src_pos], Tag::of(phase, s as u32), |ctx, band, block| {
+            if err.is_some() {
+                return;
+            }
+            ctx.mem.with_transient(block.nbytes(), || ());
+            match ctx.compute(|| backend.gemm(&block, &w_rows)) {
+                Ok(part) => add_assign_rows(&mut acc, band.start, &part),
+                Err(e) => err = Some(e),
+            }
+        });
+        if let Some(e) = err {
+            return Err(e);
+        }
     }
 
-    // ---- Step 3: reverse exchange to restore column partitioning.
+    // ---- Step 3: reverse exchange to restore column partitioning
+    // (chunked the same way; consumption is a copy, so bands just stream
+    // into place).
     let phase2 = phase ^ 0x8000_0000;
     for s in 1..mm {
         let j = (m_idx + s) % mm;
         let block = acc.slice_cols(out_bounds[j], out_bounds[j + 1]);
-        ctx.send(group[j], Tag::of(phase2, s as u32), Payload::Matrix(block));
+        ctx.send_chunked(group[j], Tag::of(phase2, s as u32), block);
     }
     let my_width = out_bounds[m_idx + 1] - out_bounds[m_idx];
     let mut out = Matrix::zeros(rows, my_width);
@@ -104,8 +127,9 @@ pub fn deal_gemm(
     }
     for s in 1..mm {
         let src_pos = (m_idx + mm - s) % mm;
-        let block = ctx.recv(group[src_pos], Tag::of(phase2, s as u32)).into_matrix();
-        out.set_rows(sub[src_pos], &block);
+        ctx.recv_stream(group[src_pos], Tag::of(phase2, s as u32), |_, band, block| {
+            out.set_rows(sub[src_pos] + band.start, &block);
+        });
     }
     ctx.mem.free(acc.nbytes());
     Ok(out)
@@ -158,6 +182,18 @@ fn add_assign(acc: &mut Matrix, other: &Matrix) {
     assert_eq!((acc.rows, acc.cols), (other.rows, other.cols));
     for (a, &b) in acc.data.iter_mut().zip(&other.data) {
         *a += b;
+    }
+}
+
+/// `acc[row_off + r] += other[r]`: the streamed ring stage lands each row
+/// band exactly once, preserving the monolithic add's per-element order.
+fn add_assign_rows(acc: &mut Matrix, row_off: usize, other: &Matrix) {
+    assert_eq!(acc.cols, other.cols);
+    for r in 0..other.rows {
+        let dst = acc.row_mut(row_off + r);
+        for (a, &b) in dst.iter_mut().zip(other.row(r)) {
+            *a += b;
+        }
     }
 }
 
@@ -214,6 +250,20 @@ mod tests {
         let (got, _) = run_gemm(&plan, &h, &w, false);
         let expect = h.matmul(&w);
         assert_close(&got.data, &expect.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn chunked_gemm_bit_identical_across_chunk_sizes() {
+        let mut rng = Rng::new(12);
+        let plan = PartitionPlan::new(96, 32, 2, 4);
+        let h = Matrix::random(96, 32, 1.0, &mut rng);
+        let w = Matrix::random(32, 24, 1.0, &mut rng);
+        let base = crate::cluster::net::with_chunk_rows(0, || run_gemm(&plan, &h, &w, true).0);
+        for chunk in [1usize, 3, 16, 4096] {
+            let got =
+                crate::cluster::net::with_chunk_rows(chunk, || run_gemm(&plan, &h, &w, true).0);
+            assert_eq!(got, base, "chunk_rows={}", chunk);
+        }
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub struct EdgeGroup {
 }
 
 impl EdgeGroup {
+    /// Number of non-zeros assigned to this group.
     pub fn n_edges(&self) -> usize {
         self.edges.len()
     }

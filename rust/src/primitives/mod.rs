@@ -19,10 +19,15 @@
 //! - [`costs`] — the closed-form memory/communication models of
 //!   Tables 1–3, validated against measured byte counters.
 
+/// Closed-form memory/communication/overlap cost models (Tables 1–3, §4).
 pub mod costs;
+/// Deal's ring GEMM and the CAGNET-style all-reduce baseline.
 pub mod gemm;
+/// §3.5 non-zero group partitioning shared by SPMM and SDDMM.
 pub mod groups;
+/// Output-oriented distributed SDDMM, approaches (i) and (ii).
 pub mod sddmm;
+/// Feature-exchange distributed SPMM and its baselines.
 pub mod spmm;
 
 use crate::partition::PartitionPlan;
@@ -45,6 +50,7 @@ pub enum ExecMode {
 }
 
 impl ExecMode {
+    /// All modes, in ablation order (benches and property tests sweep it).
     pub const ALL: [ExecMode; 4] = [
         ExecMode::Naive,
         ExecMode::Monolithic,
@@ -52,6 +58,7 @@ impl ExecMode {
         ExecMode::Pipelined,
     ];
 
+    /// The config-file / CLI spelling of this mode.
     pub fn name(&self) -> &'static str {
         match self {
             ExecMode::Naive => "naive",

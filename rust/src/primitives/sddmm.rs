@@ -17,9 +17,13 @@
 //!
 //! Fetches use the same concurrent feature server as SPMM; the §3.5
 //! execution modes (monolithic / grouped / pipelined) schedule the
-//! per-source-partition column groups.
+//! per-source-partition column groups. Responses stream as row-band
+//! chunks (`pipeline.chunk_rows`, §4): a group's `M` column-slice streams
+//! are consumed in lock step, and each completed band's dot products run
+//! while later chunks are still in flight — bit-identical at every chunk
+//! size because scores are per-edge single writes.
 
-use crate::cluster::{Ctx, Payload, Tag};
+use crate::cluster::{Ctx, MatrixStream, Payload, Tag};
 use crate::graph::Csr;
 use crate::partition::PartitionPlan;
 use crate::runtime::par;
@@ -35,6 +39,46 @@ use super::ExecMode;
 
 const COUNT_SEQ: u32 = u32::MAX;
 const RESP_BIT: u32 = 0x8000_0000;
+
+/// Dot products for `g.edges[erange]`: band-parallel on the `runtime::par`
+/// pool into a group-ordered scratch, then a serial scatter to global edge
+/// ids. One full-width dot and one write per edge, so neither chunk
+/// boundaries nor band boundaries can change a score — bit-identical at
+/// every chunk size and thread count.
+#[allow(clippy::too_many_arguments)]
+fn dot_band(
+    g: &super::groups::EdgeGroup,
+    erange: std::ops::Range<usize>,
+    dst_full: &Matrix,
+    src_full: &Matrix,
+    feature_dim: usize,
+    eid_base: usize,
+    scores: &mut [f32],
+) {
+    let n_e = erange.len();
+    if n_e == 0 {
+        return;
+    }
+    let work = n_e as u64 * feature_dim as u64;
+    let bounds = par::plan_bands(n_e, work, MIN_SDDMM_WORK);
+    let mut tmp = vec![0.0f32; n_e];
+    let parts = par::split_rows(&mut tmp, &bounds, 1);
+    par::run_parts(parts, |_, (rows, band)| {
+        for i in rows.clone() {
+            let (r, ci) = g.edges[erange.start + i];
+            let d = dst_full.row(r as usize);
+            let s = src_full.row(ci as usize);
+            let mut acc = 0.0f32;
+            for (a, b) in d.iter().zip(s) {
+                acc += a * b;
+            }
+            band[i - rows.start] = acc;
+        }
+    });
+    for (i, &score) in tmp.iter().enumerate() {
+        scores[eid_base + g.eids[erange.start + i] as usize] = score;
+    }
+}
 
 /// Inputs for one machine's SDDMM call.
 pub struct SddmmInput<'a> {
@@ -153,7 +197,7 @@ pub fn sddmm(
             }
             for (i, &(rank, s)) in dst_reqs.iter().enumerate() {
                 let j = if i < m_idx { i } else { i + 1 }; // part index of this response
-                let block = ctx.recv(rank, Tag::of(phase, s | RESP_BIT)).into_matrix();
+                let block = ctx.recv_matrix(rank, Tag::of(phase, s | RESP_BIT));
                 let (flo, fhi) = plan.feat_range(j);
                 for r in 0..block.rows {
                     dst_full.row_mut(r)[flo..fhi].copy_from_slice(block.row(r));
@@ -219,39 +263,69 @@ pub fn sddmm(
                         src_full.row_mut(i)[flo..fhi].copy_from_slice(h.row(c as usize - row_lo));
                     }
                 }
-                for &(rank, s, j) in &req_seq[gi] {
-                    let block = ctx.recv(rank, Tag::of(phase, s | RESP_BIT)).into_matrix();
-                    let (flo, fhi) = plan.feat_range(j);
-                    for r in 0..block.rows {
-                        src_full.row_mut(r)[flo..fhi].copy_from_slice(block.row(r));
-                    }
-                }
-                // dot products: band-parallel over this group's edges into
-                // a group-ordered buffer (disjoint contiguous writes), then
-                // a serial O(edges) scatter to global edge ids. One dot per
-                // edge either way — bit-identical to the scalar loop.
-                ctx.compute(|| {
-                    let n_e = g.edges.len();
-                    let work = n_e as u64 * plan.feature_dim as u64;
-                    let bounds = par::plan_bands(n_e, work, MIN_SDDMM_WORK);
-                    let mut tmp = vec![0.0f32; n_e];
-                    let parts = par::split_rows(&mut tmp, &bounds, 1);
-                    par::run_parts(parts, |_, (erange, band)| {
-                        for e in erange.clone() {
-                            let (r, ci) = g.edges[e];
-                            let d = dst_full.row(r as usize);
-                            let s = src_full.row(ci as usize);
-                            let mut acc = 0.0f32;
-                            for (a, b) in d.iter().zip(s) {
-                                acc += a * b;
-                            }
-                            band[e - erange.start] = acc;
-                        }
+                // One stream per remote column slice. Every slice covers
+                // the same `g.cols` rows with the same chunk plan, so row
+                // band `c` of `src_full` is complete as soon as every
+                // stream has delivered its chunk `c` — that band's dots
+                // run while the later chunks are still in flight (§4).
+                let mut streams: Vec<(MatrixStream, usize, usize)> = req_seq[gi]
+                    .iter()
+                    .map(|&(rank, s, j)| {
+                        let st = ctx.open_stream(rank, Tag::of(phase, s | RESP_BIT));
+                        let (flo, fhi) = plan.feat_range(j);
+                        (st, flo, fhi)
+                    })
+                    .collect();
+                let mut e_at = 0usize;
+                if streams.is_empty() {
+                    // fully local group (M = 1): no transfers to overlap
+                    ctx.compute(|| {
+                        dot_band(
+                            g,
+                            0..g.edges.len(),
+                            &dst_full,
+                            &src_full,
+                            plan.feature_dim,
+                            eid_base,
+                            &mut scores,
+                        )
                     });
-                    for (e, &score) in tmp.iter().enumerate() {
-                        scores[eid_base + g.eids[e] as usize] = score;
+                } else {
+                    loop {
+                        let mut band_end: Option<usize> = None;
+                        for (st, flo, fhi) in streams.iter_mut() {
+                            let Some((band, chunk)) = st.next(ctx) else { continue };
+                            for r in 0..chunk.rows {
+                                src_full.row_mut(band.start + r)[*flo..*fhi]
+                                    .copy_from_slice(chunk.row(r));
+                            }
+                            // completed prefix = min over this round's
+                            // deliveries (streams already drained are
+                            // fully present and stop constraining)
+                            band_end = Some(band_end.map_or(band.end, |e| e.min(band.end)));
+                        }
+                        let Some(end) = band_end else { break };
+                        let e_lo = e_at;
+                        while e_at < g.edges.len() && (g.edges[e_at].1 as usize) < end {
+                            e_at += 1;
+                        }
+                        let e_hi = e_at;
+                        if e_lo < e_hi {
+                            ctx.compute(|| {
+                                dot_band(
+                                    g,
+                                    e_lo..e_hi,
+                                    &dst_full,
+                                    &src_full,
+                                    plan.feature_dim,
+                                    eid_base,
+                                    &mut scores,
+                                )
+                            });
+                        }
                     }
-                });
+                    assert_eq!(e_at, g.edges.len(), "streamed SDDMM under-consumed its edges");
+                }
                 ctx.mem.free(sb);
             }
             ctx.mem.free(dst_full.nbytes());
@@ -419,6 +493,24 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn chunked_sddmm_bit_identical_across_chunk_sizes() {
+        let el = rmat(7, 500, RmatParams::paper(), 29);
+        let g = Csr::from(&el);
+        let mut rng = Rng::new(8);
+        let h = Matrix::random(g.n_cols, 12, 1.0, &mut rng);
+        let plan = PartitionPlan::new(g.n_rows, 12, 2, 2);
+        let base = crate::cluster::net::with_chunk_rows(0, || {
+            run_sddmm(&plan, &g, &h, SddmmAlgo::Split, ExecMode::Pipelined, 16).0
+        });
+        for chunk in [1usize, 3, 16, 4096] {
+            let got = crate::cluster::net::with_chunk_rows(chunk, || {
+                run_sddmm(&plan, &g, &h, SddmmAlgo::Split, ExecMode::Pipelined, 16).0
+            });
+            assert_eq!(got, base, "chunk_rows={}", chunk);
+        }
     }
 
     #[test]

@@ -17,6 +17,12 @@
 //! - `Pipelined` (Fig. 12b+c): ids run two groups ahead and the local
 //!   (no-communication) group is computed first to cover the pipe fill.
 //!
+//! Orthogonally to the mode, feature responses stream as row-band
+//! **chunks** (`pipeline.chunk_rows`; paper §4): grouped/pipelined
+//! requesters feed each arriving band's edge run straight into the
+//! accumulation while later bands are in flight, which is bit-identical
+//! to the monolithic receive because group edges are sorted by column.
+//!
 //! **Exchange-G0 baseline**: ship the sparse tile + edge values to the
 //! feature owners and get partial results back (its second phase moves
 //! dense partials, which is why Table 2 ranks it worse).
@@ -104,8 +110,15 @@ impl<'a> SpmmInput<'a> {
 /// requests against `h` (rows are this machine's partition, `row_lo`
 /// global offset). Each peer first sends a COUNT message (its number of
 /// requests), then that many id lists; the server replies with the
-/// gathered rows.
-pub fn feature_server(sctx: &mut ServerCtx, h: &Matrix, row_lo: usize, expected_peers: usize, phase: u32) {
+/// gathered rows, streamed as row-band chunks (`ServerCtx::send_chunked`)
+/// so the requester can fold compute into the tail of each response.
+pub fn feature_server(
+    sctx: &mut ServerCtx,
+    h: &Matrix,
+    row_lo: usize,
+    expected_peers: usize,
+    phase: u32,
+) {
     let mut counts_pending = expected_peers;
     let mut to_serve: u64 = 0;
     let mut served: u64 = 0;
@@ -123,7 +136,7 @@ pub fn feature_server(sctx: &mut ServerCtx, h: &Matrix, row_lo: usize, expected_
             let idx: Vec<usize> = ids.iter().map(|&c| c as usize - row_lo).collect();
             h.gather_rows(&idx)
         });
-        sctx.send(msg.src, Tag::of(phase, seq | RESP_BIT), Payload::Matrix(gathered));
+        sctx.send_chunked(msg.src, Tag::of(phase, seq | RESP_BIT), gathered);
         served += 1;
     }
 }
@@ -266,7 +279,10 @@ fn run_monolithic(
     for (seq, g) in groups.iter().enumerate() {
         if !g.local {
             let server = plan.rank_of(g.src_part, m_idx);
-            let m = ctx.recv(server, Tag::of(phase, seq as u32 | RESP_BIT)).into_matrix();
+            // assembled receive: the monolithic mode deliberately keeps
+            // its all-comm-then-all-compute shape (the Fig. 3b baseline),
+            // even when the wire protocol streams chunks under it
+            let m = ctx.recv_matrix(server, Tag::of(phase, seq as u32 | RESP_BIT));
             held_bytes += m.nbytes();
             ctx.mem.alloc(m.nbytes());
             feats[seq] = Some(m);
@@ -321,11 +337,11 @@ fn run_grouped(
         }
         let g = &groups[gi];
         let server = plan.rank_of(g.src_part, m_idx);
-        let feats = ctx.recv(server, Tag::of(phase, gi as u32 | RESP_BIT)).into_matrix();
-        let fb = feats.nbytes();
-        ctx.mem.alloc(fb);
-        ctx.compute(|| acc.accumulate_group(g, Some(&feats), h, row_lo, out));
-        ctx.mem.free(fb);
+        // Streamed consume: each arriving column band feeds its edge run
+        // straight into the accumulation while later bands are in flight
+        // (§4 chunk-level overlap; order-preserving, so bit-identical to
+        // the monolithic receive — see `Accum::consume_stream`).
+        acc.consume_stream(ctx, server, Tag::of(phase, gi as u32 | RESP_BIT), g, h, row_lo, out);
     }
     if !local_first {
         // Fig. 12(a): local group last (as drawn: group 6 at the end).
@@ -337,16 +353,76 @@ fn run_grouped(
 
 /// Group accumulation: `out[row] += E[edge] * feat_row`. Local groups read
 /// from the local tile (`h`), remote groups from the fetched buffer (rows
-/// aligned with `group.cols`). Scalar edge values on an accelerated
-/// backend are routed through its `spmm_tile` (gather + weighted
-/// segment-sum — the AOT-compiled Pallas kernel); the per-head (GAT
-/// three-tensor) form and the native backend use the in-place loop.
+/// aligned with `group.cols`) — either whole (`accumulate_group`) or as
+/// streamed column bands fed into the kernel chunk by chunk
+/// (`consume_stream`, the §4 pipelined path). Scalar edge values on an
+/// accelerated backend are routed through its `spmm_tile` (gather +
+/// weighted segment-sum — the AOT-compiled Pallas kernel); the per-head
+/// (GAT three-tensor) form and the native backend use the in-place loop.
 struct Accum<'a> {
     values: &'a EdgeValues<'a>,
     backend: &'a dyn Backend,
 }
 
 impl<'a> Accum<'a> {
+    /// True when scalar edge values route through the backend's fused
+    /// `spmm_tile`. The AOT tile is a monolithic kernel, so streamed
+    /// chunks are gathered first and the tile fires once per group —
+    /// keeping its output bit-identical at every chunk size — while the
+    /// gather (the expensive memory traffic) still overlaps the wire.
+    fn uses_tile(&self) -> bool {
+        matches!(self.values, EdgeValues::Scalar(_)) && self.backend.name() != "native"
+    }
+
+    /// Accumulate `group.edges[erange]` into `out`. `fetched` carries the
+    /// feature rows for group columns `col_lo..` (`None` = read the local
+    /// tile). Group edges are sorted by column index, so consuming
+    /// ascending column bands as contiguous edge runs reproduces the
+    /// monolithic loop's per-destination accumulation order *exactly* —
+    /// this is what makes chunked consumption bit-identical.
+    fn accumulate_edges(
+        &self,
+        group: &EdgeGroup,
+        erange: std::ops::Range<usize>,
+        fetched: Option<(&Matrix, usize)>,
+        h: &Matrix,
+        row_lo: usize,
+        out: &mut Matrix,
+    ) {
+        let row_of = |ci: u32| -> &[f32] {
+            match fetched {
+                None => h.row(group.cols[ci as usize] as usize - row_lo),
+                Some((f, col_lo)) => f.row(ci as usize - col_lo),
+            }
+        };
+        match self.values {
+            EdgeValues::Scalar(_) => {
+                for e in erange {
+                    let (r, ci) = group.edges[e];
+                    let v = group.vals[e];
+                    let src_row = row_of(ci);
+                    let out_row = out.row_mut(r as usize);
+                    for (o, &x) in out_row.iter_mut().zip(src_row) {
+                        *o += v * x;
+                    }
+                }
+            }
+            EdgeValues::PerHead { vals, heads, col_head } => {
+                for e in erange {
+                    let (r, ci) = group.edges[e];
+                    let eid = group.eids[e] as usize;
+                    let ev = &vals[eid * heads..(eid + 1) * heads];
+                    let src_row = row_of(ci);
+                    let out_row = out.row_mut(r as usize);
+                    for j in 0..out_row.len() {
+                        out_row[j] += ev[col_head[j] as usize] * src_row[j];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Accumulate a whole group at once (local groups, monolithic mode).
     fn accumulate_group(
         &self,
         group: &EdgeGroup,
@@ -355,55 +431,84 @@ impl<'a> Accum<'a> {
         row_lo: usize,
         out: &mut Matrix,
     ) {
-        match self.values {
-            EdgeValues::Scalar(_) if self.backend.name() != "native" => {
-                // Gather per-edge source rows, then one tile call.
-                let mut feats = Matrix::zeros(group.n_edges(), out.cols);
-                let mut seg: Vec<u32> = Vec::with_capacity(group.n_edges());
-                for (e, &(r, ci)) in group.edges.iter().enumerate() {
-                    let src_row = match fetched {
-                        None => h.row(group.cols[ci as usize] as usize - row_lo),
-                        Some(f) => f.row(ci as usize),
-                    };
-                    feats.row_mut(e).copy_from_slice(src_row);
-                    seg.push(r);
-                }
-                let partial = self
-                    .backend
-                    .spmm_tile(&feats, &group.vals, &seg, out.rows)
-                    .expect("backend spmm_tile failed");
-                for (o, &v) in out.data.iter_mut().zip(&partial.data) {
-                    *o += v;
-                }
+        if self.uses_tile() {
+            // Gather per-edge source rows, then one tile call.
+            let mut feats = Matrix::zeros(group.n_edges(), out.cols);
+            for (e, &(_, ci)) in group.edges.iter().enumerate() {
+                let src_row = match fetched {
+                    None => h.row(group.cols[ci as usize] as usize - row_lo),
+                    Some(f) => f.row(ci as usize),
+                };
+                feats.row_mut(e).copy_from_slice(src_row);
             }
-            EdgeValues::Scalar(_) => {
-                for (e, &(r, ci)) in group.edges.iter().enumerate() {
-                    let v = group.vals[e];
-                    let src_row = match fetched {
-                        None => h.row(group.cols[ci as usize] as usize - row_lo),
-                        Some(f) => f.row(ci as usize),
-                    };
-                    let out_row = out.row_mut(r as usize);
-                    for (o, &x) in out_row.iter_mut().zip(src_row) {
-                        *o += v * x;
-                    }
-                }
-            }
-            EdgeValues::PerHead { vals, heads, col_head } => {
-                for (e, &(r, ci)) in group.edges.iter().enumerate() {
-                    let eid = group.eids[e] as usize;
-                    let ev = &vals[eid * heads..(eid + 1) * heads];
-                    let src_row = match fetched {
-                        None => h.row(group.cols[ci as usize] as usize - row_lo),
-                        Some(f) => f.row(ci as usize),
-                    };
-                    let out_row = out.row_mut(r as usize);
-                    for j in 0..out_row.len() {
-                        out_row[j] += ev[col_head[j] as usize] * src_row[j];
-                    }
-                }
-            }
+            self.tile_accumulate(&feats, group, out);
+            return;
         }
+        self.accumulate_edges(group, 0..group.n_edges(), fetched.map(|f| (f, 0)), h, row_lo, out);
+    }
+
+    /// One fused `spmm_tile` call over the group's gathered per-edge rows.
+    fn tile_accumulate(&self, feats: &Matrix, group: &EdgeGroup, out: &mut Matrix) {
+        let seg: Vec<u32> = group.edges.iter().map(|&(r, _)| r).collect();
+        let partial = self
+            .backend
+            .spmm_tile(feats, &group.vals, &seg, out.rows)
+            .expect("backend spmm_tile failed");
+        for (o, &v) in out.data.iter_mut().zip(&partial.data) {
+            *o += v;
+        }
+    }
+
+    /// Consume one streamed feature response for `group`: each arriving
+    /// column band is fed straight into the accumulation (native backend)
+    /// or into the tile gather (accelerated backends), with `ctx.compute`
+    /// charging per-band work so simulated time interleaves chunk comm
+    /// and chunk compute. Peak memory holds at most one chunk instead of
+    /// the whole response.
+    fn consume_stream(
+        &self,
+        ctx: &mut Ctx,
+        server: usize,
+        tag: Tag,
+        group: &EdgeGroup,
+        h: &Matrix,
+        row_lo: usize,
+        out: &mut Matrix,
+    ) {
+        let mut e_at = 0usize;
+        if self.uses_tile() {
+            let mut feats = Matrix::zeros(group.n_edges(), out.cols);
+            ctx.recv_stream(server, tag, |ctx, band, chunk| {
+                ctx.mem.with_transient(chunk.nbytes(), || ());
+                let e_lo = e_at;
+                while e_at < group.edges.len() && (group.edges[e_at].1 as usize) < band.end {
+                    e_at += 1;
+                }
+                let e_hi = e_at;
+                ctx.compute(|| {
+                    for e in e_lo..e_hi {
+                        let ci = group.edges[e].1 as usize;
+                        feats.row_mut(e).copy_from_slice(chunk.row(ci - band.start));
+                    }
+                });
+            });
+            debug_assert_eq!(e_at, group.edges.len());
+            ctx.compute(|| self.tile_accumulate(&feats, group, out));
+            return;
+        }
+        ctx.recv_stream(server, tag, |ctx, band, chunk| {
+            ctx.mem.with_transient(chunk.nbytes(), || ());
+            let e_lo = e_at;
+            while e_at < group.edges.len() && (group.edges[e_at].1 as usize) < band.end {
+                e_at += 1;
+            }
+            let e_hi = e_at;
+            if e_lo < e_hi {
+                let fetched = Some((&chunk, band.start));
+                ctx.compute(|| self.accumulate_edges(group, e_lo..e_hi, fetched, h, row_lo, out));
+            }
+        });
+        debug_assert_eq!(e_at, group.edges.len());
     }
 }
 
@@ -595,7 +700,7 @@ pub fn spmm_2d(ctx: &mut Ctx, input: &SpmmInput, phase: u32) -> Matrix {
                     }
                 }
                 for &(rank, s, j) in &reqs {
-                    let block = ctx.recv(rank, Tag::of(phase, s | RESP_BIT)).into_matrix();
+                    let block = ctx.recv_matrix(rank, Tag::of(phase, s | RESP_BIT));
                     let (flo, fhi) = plan.feat_range(j);
                     for r in 0..block.rows {
                         src_full.row_mut(r)[flo..fhi].copy_from_slice(block.row(r));
@@ -789,6 +894,22 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn chunked_spmm_bit_identical_across_chunk_sizes() {
+        let (g, vals, h) = setup(128, 16, 8, 21);
+        let plan = PartitionPlan::new(g.n_rows, h.cols, 2, 2);
+        let algo = Algo::Deal(ExecMode::Pipelined, 16);
+        let base = crate::cluster::net::with_chunk_rows(0, || {
+            run_spmm(&plan, &g, &vals, &h, algo).0
+        });
+        for chunk in [1usize, 3, 16, 4096] {
+            let got = crate::cluster::net::with_chunk_rows(chunk, || {
+                run_spmm(&plan, &g, &vals, &h, algo).0
+            });
+            assert_eq!(got, base, "chunk_rows={}", chunk);
+        }
     }
 
     #[test]
