@@ -14,6 +14,11 @@ pub struct MemTracker {
     peak: u64,
     stage: Option<String>,
     stage_peaks: HashMap<String, u64>,
+    /// Times `free` was asked to release more than was tracked. The
+    /// subtraction saturates either way; the counter makes the accounting
+    /// bug visible instead of silently under-reporting peaks (it surfaces
+    /// in `ClusterReport::summary`).
+    underflow_events: u64,
 }
 
 impl MemTracker {
@@ -31,9 +36,14 @@ impl MemTracker {
         }
     }
 
-    /// Register a free of `bytes`.
+    /// Register a free of `bytes`. Over-freeing saturates to zero in every
+    /// build profile and bumps [`MemTracker::underflow_events`] — debug
+    /// builds used to assert here while release builds saturated silently;
+    /// both now record the same honest counter.
     pub fn free(&mut self, bytes: u64) {
-        debug_assert!(bytes <= self.current, "freeing more than allocated");
+        if bytes > self.current {
+            self.underflow_events += 1;
+        }
         self.current = self.current.saturating_sub(bytes);
     }
 
@@ -68,6 +78,18 @@ impl MemTracker {
     /// High-water mark over the tracker's lifetime, in bytes.
     pub fn peak(&self) -> u64 {
         self.peak
+    }
+
+    /// Times `free` was asked to release more than was tracked (0 = the
+    /// alloc/free ledger balanced).
+    pub fn underflow_events(&self) -> u64 {
+        self.underflow_events
+    }
+
+    /// Fold another tracker's underflow counter into this one (used when
+    /// stage reports are chained into an end-to-end report).
+    pub fn merge_counters(&mut self, other: &MemTracker) {
+        self.underflow_events += other.underflow_events;
     }
 
     /// Peak bytes recorded while `name` was the active stage (0 if never).
@@ -120,5 +142,23 @@ mod tests {
         assert_eq!(m.stage_peak("spmm"), 30);
         assert_eq!(m.stage_peak("missing"), 0);
         assert_eq!(m.peak(), 100);
+    }
+
+    #[test]
+    fn over_free_counts_underflow_and_saturates() {
+        let mut m = MemTracker::default();
+        m.alloc(10);
+        m.free(25); // 15 more than tracked
+        assert_eq!(m.current(), 0);
+        assert_eq!(m.underflow_events(), 1);
+        m.free(1); // still over-freeing the empty ledger
+        assert_eq!(m.underflow_events(), 2);
+        m.alloc(5);
+        m.free(5); // balanced frees don't count
+        assert_eq!(m.underflow_events(), 2);
+        let mut sum = MemTracker::default();
+        sum.merge_counters(&m);
+        sum.merge_counters(&m);
+        assert_eq!(sum.underflow_events(), 4);
     }
 }

@@ -6,6 +6,38 @@
 use super::memory::MemTracker;
 use crate::util::{human_bytes, human_secs};
 
+/// Out-of-core tiered-storage counters (see `crate::storage`): one set per
+/// machine, absorbed from that rank's `PageCache` scopes. Byte counts are
+/// spill-device traffic; `peak_resident_bytes` is the cache's high-water
+/// mark (bounded by the budget plus one in-flight page per stream).
+#[derive(Clone, Debug, Default)]
+pub struct StorageCounters {
+    /// Pages faulted in from the spill device (cache misses).
+    pub page_faults: u64,
+    /// Pages evicted to stay under the byte budget.
+    pub evictions: u64,
+    /// Bytes written to the spill device (staging + dirty write-back).
+    pub spill_bytes_written: u64,
+    /// Bytes read back from the spill device (faults).
+    pub spill_bytes_read: u64,
+    /// High-water mark of cache-resident bytes.
+    pub peak_resident_bytes: u64,
+    /// Effective byte budget the cache ran under (0 = unbounded).
+    pub budget_bytes: u64,
+}
+
+impl StorageCounters {
+    /// Fold another scope's counters in: traffic adds, peaks/budgets max.
+    pub fn add(&mut self, other: &StorageCounters) {
+        self.page_faults += other.page_faults;
+        self.evictions += other.evictions;
+        self.spill_bytes_written += other.spill_bytes_written;
+        self.spill_bytes_read += other.spill_bytes_read;
+        self.peak_resident_bytes = self.peak_resident_bytes.max(other.peak_resident_bytes);
+        self.budget_bytes = self.budget_bytes.max(other.budget_bytes);
+    }
+}
+
 /// Counters accumulated by one simulated machine.
 #[derive(Clone, Debug, Default)]
 pub struct MachineMetrics {
@@ -29,6 +61,9 @@ pub struct MachineMetrics {
     /// Simulated seconds the feature-server thread spent gathering
     /// (concurrent with `sim_compute_secs` — a different core).
     pub sim_serve_secs: f64,
+    /// Out-of-core storage counters for this machine (all zero when the
+    /// run never opened a paged tier).
+    pub storage: StorageCounters,
 }
 
 /// Result of one `Cluster::run`.
@@ -96,6 +131,34 @@ impl ClusterReport {
         self.peak_mem.iter().copied().max().unwrap_or(0)
     }
 
+    /// Total pages faulted in from the spill device across machines.
+    pub fn total_page_faults(&self) -> u64 {
+        self.machines.iter().map(|m| m.storage.page_faults).sum()
+    }
+
+    /// Total spill-device traffic (written + read back) across machines.
+    pub fn total_spill_bytes(&self) -> u64 {
+        self.machines
+            .iter()
+            .map(|m| m.storage.spill_bytes_written + m.storage.spill_bytes_read)
+            .sum()
+    }
+
+    /// Maximum cache-resident high-water mark on any machine.
+    pub fn max_storage_resident(&self) -> u64 {
+        self.machines
+            .iter()
+            .map(|m| m.storage.peak_resident_bytes)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total `MemTracker::free` underflow events across machines (0 = the
+    /// alloc/free ledgers all balanced).
+    pub fn total_underflows(&self) -> u64 {
+        self.mem.iter().map(|m| m.underflow_events()).sum()
+    }
+
     /// Total simulated compute across machines.
     pub fn total_compute(&self) -> f64 {
         self.machines.iter().map(|m| m.sim_compute_secs).sum()
@@ -112,7 +175,7 @@ impl ClusterReport {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "makespan={} comm={} msgs={} chunks={} compute(max)={} wait(max)={} peak_mem(max)={}",
+            "makespan={} comm={} msgs={} chunks={} compute(max)={} wait(max)={} peak_mem(max)={} faults={} spill={} underflow={}",
             human_secs(self.makespan()),
             human_bytes(self.total_bytes()),
             self.total_msgs(),
@@ -125,6 +188,9 @@ impl ClusterReport {
             ),
             human_secs(self.max_comm_wait()),
             human_bytes(self.max_peak_mem()),
+            self.total_page_faults(),
+            human_bytes(self.total_spill_bytes()),
+            self.total_underflows(),
         )
     }
 
@@ -147,6 +213,8 @@ impl ClusterReport {
             a.sim_comm_wait_secs += b.sim_comm_wait_secs;
             a.sim_compute_secs += b.sim_compute_secs;
             a.sim_serve_secs += b.sim_serve_secs;
+            a.storage.add(&b.storage);
+            self.mem[i].merge_counters(&other.mem[i]);
         }
     }
 }
@@ -206,5 +274,40 @@ mod tests {
         let s = r.summary();
         assert!(s.contains("makespan="));
         assert!(s.contains("peak_mem"));
+        assert!(s.contains("faults=0"));
+        assert!(s.contains("underflow=0"));
+    }
+
+    #[test]
+    fn storage_counters_chain_and_surface() {
+        let mut a = ClusterReport::new(2);
+        a.machines[0].storage.page_faults = 3;
+        a.machines[0].storage.spill_bytes_written = 100;
+        a.machines[0].storage.peak_resident_bytes = 40;
+        a.machines[1].storage.page_faults = 1;
+        let mut b = ClusterReport::new(2);
+        b.machines[0].storage.page_faults = 2;
+        b.machines[0].storage.spill_bytes_read = 50;
+        b.machines[0].storage.peak_resident_bytes = 30;
+        b.machines[0].storage.evictions = 4;
+        a.chain(&b);
+        assert_eq!(a.total_page_faults(), 6);
+        assert_eq!(a.total_spill_bytes(), 150);
+        assert_eq!(a.max_storage_resident(), 40, "peaks max, not add");
+        assert_eq!(a.machines[0].storage.evictions, 4);
+        assert!(a.summary().contains("faults=6"));
+    }
+
+    #[test]
+    fn underflows_chain_through_mem_trackers() {
+        let mut a = ClusterReport::new(1);
+        let mut b = ClusterReport::new(1);
+        let mut m = MemTracker::default();
+        m.free(7); // over-free
+        b.record(0, 0.0, MachineMetrics::default(), m);
+        assert_eq!(b.total_underflows(), 1);
+        a.chain(&b);
+        assert_eq!(a.total_underflows(), 1);
+        assert!(a.summary().contains("underflow=1"));
     }
 }

@@ -296,10 +296,13 @@ impl Ctx {
             .service_inbox
             .take()
             .expect("service plane already taken (nested with_server?)");
-        // The server thread inherits the caller's chunk granularity so
-        // its responses follow the same pipelining knob (thread-locals do
-        // not cross the spawn on their own).
+        // The server thread inherits the caller's chunk granularity and
+        // storage knobs so its responses follow the same pipelining and
+        // paging configuration (thread-locals do not cross the spawn on
+        // their own).
         let chunk = net::chunk_rows();
+        let budget = crate::storage::mem_budget();
+        let page_rows = crate::storage::page_rows();
         let mut sctx = ServerCtx {
             rank: self.rank,
             world: self.world,
@@ -313,7 +316,11 @@ impl Ctx {
         };
         let (out, sctx) = std::thread::scope(|scope| {
             let handle = scope.spawn(move || {
-                net::with_chunk_rows(chunk, || server(&mut sctx));
+                net::with_chunk_rows(chunk, || {
+                    crate::storage::with_mem_budget(budget, || {
+                        crate::storage::with_page_rows(page_rows, || server(&mut sctx))
+                    })
+                });
                 sctx
             });
             let out = body(self);
@@ -462,6 +469,13 @@ impl ServerCtx {
         }
     }
 
+    /// Advance the server clock by an explicit duration (modeled costs —
+    /// e.g. simulated spill-device I/O from `crate::storage`).
+    pub fn advance(&mut self, secs: f64) {
+        self.clock += secs;
+        self.metrics.sim_compute_secs += secs;
+    }
+
     /// Run `f`, advancing the server clock by its scaled total CPU time
     /// (same thread-aware accounting as `Ctx::compute`).
     pub fn compute<T>(&mut self, f: impl FnOnce() -> T) -> T {
@@ -592,10 +606,13 @@ impl Cluster {
         // would inflate every measured thread-CPU time). Thread count
         // never changes results — only scheduling.
         let rank_pool = (crate::runtime::par::num_threads() / world).max(1);
-        // Rank threads inherit the caller's chunk granularity (thread
-        // locals don't cross spawns), so `net::with_chunk_rows` sweeps in
-        // tests/benches reach every simulated machine.
+        // Rank threads inherit the caller's chunk granularity and storage
+        // knobs (thread locals don't cross spawns), so `with_chunk_rows` /
+        // `with_mem_budget` / `with_page_rows` sweeps in tests/benches
+        // reach every simulated machine.
         let chunk = net::chunk_rows();
+        let budget = crate::storage::mem_budget();
+        let page_rows = crate::storage::page_rows();
         for rank in 0..world {
             let senders = senders.clone();
             let service_senders = service_senders.clone();
@@ -628,7 +645,11 @@ impl Cluster {
                 // recv), so announce loudly before unwinding.
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     net::with_chunk_rows(chunk, || {
-                        crate::runtime::par::with_threads(rank_pool, || f(&mut ctx))
+                        crate::storage::with_mem_budget(budget, || {
+                            crate::storage::with_page_rows(page_rows, || {
+                                crate::runtime::par::with_threads(rank_pool, || f(&mut ctx))
+                            })
+                        })
                     })
                 }));
                 if result.is_err() {

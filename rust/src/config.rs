@@ -84,6 +84,23 @@ pub struct PipelineCfg {
     pub chunk_rows: usize,
 }
 
+/// Out-of-core tiered storage (`crate::storage`; DESIGN.md
+/// §Out-of-core-storage).
+#[derive(Clone, Debug)]
+pub struct StorageCfg {
+    /// Per-rank page-cache byte budget for the paged feature/activation
+    /// and adjacency tiers. `0` = unbounded (everything stays RAM-resident
+    /// — the pre-storage behavior). Accepts `k`/`m`/`g` suffixes in config
+    /// files and `--set` overrides (`storage.budget_bytes=64m`). Applied
+    /// by the CLI via `storage::set_mem_budget` (`--mem-budget`, or the
+    /// `DEAL_MEM_BUDGET` env for library/test use); results are
+    /// bit-identical at every budget — only page-fault counts change.
+    pub budget_bytes: u64,
+    /// Rows per page for the paged tiers (`storage::page_rows` chain;
+    /// `DEAL_PAGE_ROWS` env for library/test use). Must be >= 1.
+    pub page_rows: usize,
+}
+
 /// Root configuration.
 #[derive(Clone, Debug)]
 pub struct DealConfig {
@@ -92,6 +109,7 @@ pub struct DealConfig {
     pub model: ModelCfg,
     pub exec: ExecCfg,
     pub pipeline: PipelineCfg,
+    pub storage: StorageCfg,
 }
 
 impl Default for DealConfig {
@@ -124,6 +142,10 @@ impl Default for DealConfig {
                 seed: 0xDEA1,
             },
             pipeline: PipelineCfg { chunk_rows: crate::cluster::net::DEFAULT_CHUNK_ROWS },
+            storage: StorageCfg {
+                budget_bytes: 0, // unbounded: in-memory tiers, no paging
+                page_rows: crate::storage::DEFAULT_PAGE_ROWS,
+            },
         }
     }
 }
@@ -165,6 +187,11 @@ impl DealConfig {
             "exec.threads" => self.exec.threads = v.parse()?,
             "exec.seed" => self.exec.seed = v.parse()?,
             "pipeline.chunk_rows" => self.pipeline.chunk_rows = v.parse()?,
+            "storage.budget_bytes" => self.storage.budget_bytes = crate::storage::parse_bytes(v)?,
+            "storage.page_rows" => {
+                self.storage.page_rows = v.parse()?;
+                anyhow::ensure!(self.storage.page_rows >= 1, "storage.page_rows must be >= 1");
+            }
             other => anyhow::bail!("unknown config key '{}'", other),
         }
         Ok(())
@@ -266,6 +293,20 @@ mod tests {
         cfg.set("pipeline.chunk_rows", "0").unwrap();
         assert_eq!(cfg.pipeline.chunk_rows, 0, "0 = monolithic fallback");
         assert!(cfg.set("pipeline.chunk_rows", "x").is_err());
+    }
+
+    #[test]
+    fn storage_keys_parse_with_suffixes() {
+        let mut cfg = DealConfig::default();
+        assert_eq!(cfg.storage.budget_bytes, 0, "default is unbounded");
+        cfg.set("storage.budget_bytes", "64m").unwrap();
+        assert_eq!(cfg.storage.budget_bytes, 64 << 20);
+        cfg.set("storage.budget_bytes", "4096").unwrap();
+        assert_eq!(cfg.storage.budget_bytes, 4096);
+        cfg.set("storage.page_rows", "64").unwrap();
+        assert_eq!(cfg.storage.page_rows, 64);
+        assert!(cfg.set("storage.page_rows", "0").is_err());
+        assert!(cfg.set("storage.budget_bytes", "lots").is_err());
     }
 
     #[test]

@@ -24,6 +24,8 @@ use std::sync::{Arc, Mutex};
 
 use crate::cluster::{Ctx, Payload, Tag};
 use crate::partition::PartitionPlan;
+use crate::runtime::Backend;
+use crate::storage::{PagedMatrix, SharedPageCache};
 use crate::tensor::Matrix;
 use crate::util::even_ranges;
 
@@ -75,6 +77,19 @@ impl SimFs {
         done
     }
 
+    /// Schedule a transfer of `bytes` at the device's current backlog
+    /// front and return its **duration** (not a completion stamp). The
+    /// spill-device accounting (`storage::PageFile`) uses this: callers
+    /// without a simulated clock charge exactly the transfer time, and
+    /// sharing one device still serializes (the backlog advances) without
+    /// ever re-charging another file's backlog.
+    pub fn charge(&self, bytes: u64) -> f64 {
+        let mut busy = self.busy_until.lock().unwrap();
+        let dt = bytes as f64 * 8.0 / (self.aggregate_gbps * 1e9);
+        *busy += dt;
+        dt
+    }
+
     /// Reset between stages/benches.
     pub fn reset(&self) {
         *self.busy_until.lock().unwrap() = 0.0;
@@ -115,6 +130,81 @@ impl FeatureStore {
 }
 
 const PREP_PHASE: u32 = 0xFEA7;
+
+/// Out-of-core fused staging (DESIGN.md §Out-of-core-storage): stream
+/// this rank's loader shard through the first-layer projection into a
+/// paged tier, one page-sized band at a time — read the band's rows from
+/// the shared FS (the band reads serialize on `SimFs` and sum to the
+/// monolithic read time), project `band × W0`, write one page. The raw
+/// shard is never fully resident; the projected table lands behind the
+/// budgeted cache that then serves loader fetches.
+///
+/// Bit-identity: the `Native` projection is row-wise independent and each
+/// output row accumulates its `k` products in the same ascending order
+/// whether the GEMM runs whole-shard or band-wise, so the paged `HW`
+/// equals the in-memory one bit for bit. Accelerated (AOT tile) backends
+/// compile fixed shapes and may accumulate shape-dependently, so for a
+/// non-native backend the projection keeps its single whole-shard GEMM
+/// call (the shard is transient — gathered, projected, paged out, freed)
+/// and only the *output* is paged.
+#[allow(clippy::too_many_arguments)]
+pub fn project_shard_paged(
+    ctx: &mut Ctx,
+    store: &FeatureStore,
+    features: &Matrix,
+    fs: &SimFs,
+    w0: &Matrix,
+    backend: &dyn Backend,
+    cache: &SharedPageCache,
+    page_rows: usize,
+    spill_fs: Arc<SimFs>,
+    tag: &str,
+) -> crate::Result<PagedMatrix> {
+    let mine = store.shard_nodes(ctx.rank);
+    let row_bytes = (features.cols * 4) as u64;
+    let pm = cache.with(|c| {
+        PagedMatrix::create(c, tag, mine.len(), w0.cols, page_rows, spill_fs)
+    })?;
+    if backend.name() != "native" {
+        // shape-preserving path: exactly the in-memory read + one GEMM,
+        // then page the projected table out
+        let done = fs.read(ctx.now(), row_bytes * mine.len() as u64);
+        ctx.advance((done - ctx.now()).max(0.0));
+        let shard = ctx.compute(|| {
+            let idx: Vec<usize> = mine.iter().map(|&v| v as usize).collect();
+            features.gather_rows(&idx)
+        });
+        let hw = ctx.compute(|| backend.gemm(&shard, w0))?;
+        ctx.mem.with_transient(shard.nbytes() + hw.nbytes(), || ());
+        let io = cache.with(|c| -> crate::Result<f64> {
+            pm.write_rows(c, 0, &hw)?;
+            Ok(c.take_io_secs())
+        })?;
+        ctx.advance(io);
+        crate::storage::charge_main(ctx, cache);
+        return Ok(pm);
+    }
+    let mut lo = 0;
+    while lo < mine.len() {
+        let hi = (lo + page_rows).min(mine.len());
+        let done = fs.read(ctx.now(), row_bytes * (hi - lo) as u64);
+        ctx.advance((done - ctx.now()).max(0.0));
+        let band = ctx.compute(|| {
+            let idx: Vec<usize> = mine[lo..hi].iter().map(|&v| v as usize).collect();
+            features.gather_rows(&idx)
+        });
+        let hw_band = ctx.compute(|| backend.gemm(&band, w0))?;
+        ctx.mem.with_transient(band.nbytes() + hw_band.nbytes(), || ());
+        let io = cache.with(|c| -> crate::Result<f64> {
+            pm.write_rows(c, lo, &hw_band)?;
+            Ok(c.take_io_secs())
+        })?;
+        ctx.advance(io);
+        lo = hi;
+    }
+    crate::storage::charge_main(ctx, cache);
+    Ok(pm)
+}
 
 /// Per-machine: run `scan` or `redistribute` preparation, returning this
 /// rank's collaborative tile of `H^(0)`. (`Fused` skips this stage
@@ -209,6 +299,17 @@ mod tests {
         assert!((t2 - 2.0).abs() < 1e-9, "reads must serialize");
         fs.reset();
         assert!((fs.read(0.0, 125_000_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn charge_returns_durations_not_completion_stamps() {
+        let fs = SimFs::new(1.0); // 1 Gbps
+        let d1 = fs.charge(125_000_000); // 1 second of bytes
+        let d2 = fs.charge(125_000_000);
+        assert!((d1 - 1.0).abs() < 1e-9);
+        assert!((d2 - 1.0).abs() < 1e-9, "a second charge must not re-pay the backlog");
+        // stamped reads still queue behind the charged backlog
+        assert!((fs.read(0.0, 125_000_000) - 3.0).abs() < 1e-9);
     }
 
     #[test]

@@ -372,6 +372,14 @@ fn gcn_rest(
 /// chunk-wise accumulation would make the float-add order depend on the
 /// chunk size — forbidden by the determinism contract (DESIGN.md
 /// §Pipelined-communication).
+///
+/// When a storage budget is active (`storage::mem_budget() > 0`) the
+/// whole stage runs out-of-core (the paged twin below): the loader shard
+/// streams through the projection into a paged `HW` tier, the feature
+/// server answers fetches from the budgeted cache, and the aggregation
+/// walks `G_0`'s adjacency bands through a
+/// [`PagedCsr`](crate::storage::PagedCsr) — bit-identical output at every
+/// budget and page size.
 #[allow(clippy::too_many_arguments)]
 pub fn fused_first_layer(
     ctx: &mut Ctx,
@@ -384,6 +392,11 @@ pub fn fused_first_layer(
     backend: &dyn Backend,
     phase: u32,
 ) -> Result<Matrix> {
+    if let Some(scope) = crate::model::gcn::StorageScope::open() {
+        return fused_first_layer_paged(
+            ctx, plan, store, features, fs, part0, weights, backend, phase, &scope,
+        );
+    }
     let (p_idx, m_idx) = plan.coords_of(ctx.rank);
     let (rlo, rhi) = plan.node_range(p_idx);
     let (flo, fhi) = plan.feat_range(m_idx);
@@ -467,6 +480,7 @@ pub fn fused_first_layer(
             // Fetch projected rows (my column window) from loaders.
             let mut fetched: HashMap<u32, usize> = HashMap::new();
             let mut rows: Vec<Matrix> = Vec::new();
+            let mut fetched_bytes = 0u64;
             let mut pending: Vec<(usize, u32, usize)> = Vec::new(); // (rank, seq, bucket)
             for (rank, ids) in by_loader.iter().enumerate() {
                 if ids.is_empty() {
@@ -494,6 +508,7 @@ pub fn fused_first_layer(
             for &(rank, seq, _) in &pending {
                 let block = ctx.recv_matrix(rank, Tag::of(phase, seq | 0x8000_0000));
                 ctx.mem.alloc(block.nbytes());
+                fetched_bytes += block.nbytes();
                 rows.push(block);
                 let bucket = rows.len() - 1;
                 for (i, &v) in by_loader[rank].iter().enumerate() {
@@ -531,10 +546,248 @@ pub fn fused_first_layer(
                     }
                 }
             });
+            // the fetched blocks die with this closure — balance the ledger
+            ctx.mem.free(fetched_bytes);
             Ok(out)
         },
     )?;
     ctx.mem.free(hw.nbytes());
+    Ok(out)
+}
+
+/// The out-of-core twin of [`fused_first_layer`] (DESIGN.md
+/// §Out-of-core-storage). Three paged tiers replace the resident state:
+///
+/// 1. the loader shard streams band-wise through the projection into a
+///    paged `HW` table (`feature_prep::project_shard_paged`) — the raw
+///    shard is never fully resident;
+/// 2. the mapped feature server gathers requested rows *from the
+///    budgeted cache* and streams them into the existing chunked-send
+///    path;
+/// 3. the output-oriented aggregation walks `G_0`'s adjacency through a
+///    [`crate::storage::PagedCsr`], band by band.
+///
+/// Fetched peer blocks stay resident exactly as in the in-memory path
+/// (the whole-buffer aggregation is the PR 4 determinism boundary), so
+/// every destination row accumulates the same values in the same order —
+/// bit-identical at every budget, page size, chunk size, and thread
+/// count.
+///
+/// KEEP IN SYNC with [`fused_first_layer`]: the request protocol
+/// (count tags, seq layout), the `by_loader` bucketing, and the
+/// aggregation arithmetic are deliberately line-for-line twins; any
+/// change to one must land in both or the bit-identity sweep in
+/// `tests/storage.rs` will catch the drift.
+#[allow(clippy::too_many_arguments)]
+fn fused_first_layer_paged(
+    ctx: &mut Ctx,
+    plan: &PartitionPlan,
+    store: &FeatureStore,
+    features: &Matrix,
+    fs: &SimFs,
+    part0: &LayerPart,
+    weights: &ModelWeights,
+    backend: &dyn Backend,
+    phase: u32,
+    scope: &crate::model::gcn::StorageScope,
+) -> Result<Matrix> {
+    use crate::storage::PagedCsr;
+
+    let (p_idx, m_idx) = plan.coords_of(ctx.rank);
+    let (rlo, rhi) = plan.node_range(p_idx);
+    let (flo, fhi) = plan.feat_range(m_idx);
+    let width = fhi - flo;
+    let w0 = weights.layer_w(0);
+    let b0 = &weights.layer_b(0)[flo..fhi];
+    let act = if weights.config.layers == 1 { Act::None } else { Act::Relu };
+    let mine = store.shard_nodes(ctx.rank);
+
+    // 1+2. Stream-read + project the loader shard into the paged tier.
+    let hw = feature_prep::project_shard_paged(
+        ctx,
+        store,
+        features,
+        fs,
+        w0,
+        backend,
+        &scope.cache,
+        scope.page_rows,
+        Arc::clone(&scope.fs),
+        &format!("fused-hw-r{}", ctx.rank),
+    )?;
+    let index: HashMap<u32, usize> = mine.iter().enumerate().map(|(i, &v)| (v, i)).collect();
+
+    // Page G_0's adjacency (ids + mean weights) so the aggregation walks
+    // disk-backed bands instead of the resident CSR.
+    let pcsr = scope.cache.with(|c| {
+        PagedCsr::from_csr(
+            c,
+            &format!("fused-g0-r{}", ctx.rank),
+            &part0.csr,
+            &part0.mean_w,
+            scope.page_rows,
+            Arc::clone(&scope.fs),
+        )
+    })?;
+    crate::storage::charge_main(ctx, &scope.cache);
+
+    // 3. Needed projected rows, bucketed by loader — identical to the
+    // in-memory path.
+    let mut needed: Vec<u32> = part0.csr.distinct_columns();
+    needed.extend((rlo..rhi).map(|v| v as u32));
+    needed.sort_unstable();
+    needed.dedup();
+    let mut by_loader: Vec<Vec<u32>> = vec![Vec::new(); plan.world()];
+    for &v in &needed {
+        by_loader[store.loader_of[v as usize] as usize].push(v);
+    }
+    for rank in 0..plan.world() {
+        if rank != ctx.rank {
+            let n = u32::from(!by_loader[rank].is_empty());
+            ctx.send_service(rank, Tag::of(phase, u32::MAX), Payload::U32(vec![n]));
+        }
+    }
+
+    let expected_peers = plan.world() - 1;
+    let hw_ref = &hw;
+    let cache_ref = &scope.cache;
+    let index_ref = &index;
+    let pcsr_ref = &pcsr;
+    let out = ctx.with_server(
+        move |sctx| {
+            // mapped feature server over the paged tier: gathers fault
+            // pages through the budgeted cache and the response streams
+            // into the chunked-send path.
+            let mut counts_pending = expected_peers;
+            let mut to_serve: u64 = 0;
+            let mut served: u64 = 0;
+            while counts_pending > 0 || served < to_serve {
+                let msg = sctx.recv_any(phase);
+                let seq = (msg.tag & 0xFFFF_FFFF) as u32;
+                if seq == u32::MAX {
+                    to_serve += msg.payload.into_u32()[0] as u64;
+                    counts_pending -= 1;
+                    continue;
+                }
+                let req = msg.payload.into_u32();
+                let (cl, ch) = (req[0] as usize, req[1] as usize);
+                let (gathered, io) = sctx.compute(|| {
+                    let mut out = Matrix::zeros(req.len() - 2, ch - cl);
+                    cache_ref.with(|c| {
+                        let mut buf = vec![0.0f32; hw_ref.cols];
+                        for (i, &v) in req[2..].iter().enumerate() {
+                            let pos = *index_ref.get(&v).expect("row not in shard");
+                            hw_ref.row_copy(c, pos, &mut buf).expect("paged row fetch failed");
+                            out.row_mut(i).copy_from_slice(&buf[cl..ch]);
+                        }
+                        (out, c.take_io_secs())
+                    })
+                });
+                sctx.advance(io);
+                sctx.send_chunked(msg.src, Tag::of(phase, seq | 0x8000_0000), gathered);
+                served += 1;
+            }
+        },
+        |ctx| -> Result<Matrix> {
+            // Fetch projected rows (my column window) from loaders; local
+            // rows come through the cache.
+            let mut fetched: HashMap<u32, usize> = HashMap::new();
+            let mut rows: Vec<Matrix> = Vec::new();
+            let mut fetched_bytes = 0u64;
+            let mut pending: Vec<(usize, u32, usize)> = Vec::new();
+            for (rank, ids) in by_loader.iter().enumerate() {
+                if ids.is_empty() {
+                    continue;
+                }
+                if rank == ctx.rank {
+                    let mut block = Matrix::zeros(ids.len(), width);
+                    let io = cache_ref.with(|c| -> Result<f64> {
+                        let mut buf = vec![0.0f32; hw_ref.cols];
+                        for (i, &v) in ids.iter().enumerate() {
+                            hw_ref.row_copy(c, index_ref[&v], &mut buf)?;
+                            block.row_mut(i).copy_from_slice(&buf[flo..fhi]);
+                        }
+                        Ok(c.take_io_secs())
+                    })?;
+                    ctx.advance(io);
+                    ctx.mem.alloc(block.nbytes());
+                    fetched_bytes += block.nbytes();
+                    rows.push(block);
+                    let bucket = rows.len() - 1;
+                    for (i, &v) in ids.iter().enumerate() {
+                        fetched.insert(v, bucket << 32 | i);
+                    }
+                    continue;
+                }
+                let mut req = Vec::with_capacity(ids.len() + 2);
+                req.push(flo as u32);
+                req.push(fhi as u32);
+                req.extend_from_slice(ids);
+                ctx.send_service(rank, Tag::of(phase, rank as u32), Payload::U32(req));
+                pending.push((rank, rank as u32, 0));
+            }
+            for &(rank, seq, _) in &pending {
+                let block = ctx.recv_matrix(rank, Tag::of(phase, seq | 0x8000_0000));
+                ctx.mem.alloc(block.nbytes());
+                fetched_bytes += block.nbytes();
+                rows.push(block);
+                let bucket = rows.len() - 1;
+                for (i, &v) in by_loader[rank].iter().enumerate() {
+                    fetched.insert(v, bucket << 32 | i);
+                }
+            }
+            // 4. Output-oriented aggregation over paged adjacency bands:
+            // every destination row consumes its edges in CSR order, so
+            // the result matches the resident-CSR loop bit for bit.
+            let mut out = Matrix::zeros(rhi - rlo, width);
+            ctx.mem.alloc(out.nbytes());
+            let row_of = |v: u32| -> &[f32] {
+                let key = fetched[&v];
+                rows[key >> 32].row(key & 0xFFFF_FFFF)
+            };
+            let mut io_total = 0.0f64;
+            ctx.compute(|| {
+                let mut srcs: Vec<u32> = Vec::new();
+                let mut ws: Vec<f32> = Vec::new();
+                for r in 0..pcsr_ref.n_rows {
+                    cache_ref.with(|c| {
+                        pcsr_ref
+                            .row_edges(c, r, &mut srcs, &mut ws)
+                            .expect("paged adjacency fetch failed");
+                        io_total += c.take_io_secs();
+                    });
+                    let orow = out.row_mut(r);
+                    for (k, &src) in srcs.iter().enumerate() {
+                        let srow = row_of(src);
+                        let wv = ws[k];
+                        for (o, &x) in orow.iter_mut().zip(srow) {
+                            *o += wv * x;
+                        }
+                    }
+                    // self loop + bias + act
+                    let srow = row_of((rlo + r) as u32);
+                    let sw = part0.self_w[r];
+                    for j in 0..orow.len() {
+                        let v = orow[j] + sw * srow[j] + b0[j];
+                        orow[j] = match act {
+                            Act::None => v,
+                            Act::Relu => v.max(0.0),
+                        };
+                    }
+                }
+            });
+            ctx.advance(io_total);
+            // the fetched blocks die with this closure — balance the ledger
+            ctx.mem.free(fetched_bytes);
+            Ok(out)
+        },
+    )?;
+    scope.cache.with(|c| {
+        c.remove_file(hw.file);
+        c.remove_file(pcsr.edges.file);
+    });
+    crate::storage::charge_main(ctx, &scope.cache);
+    scope.finish(ctx);
     Ok(out)
 }
 

@@ -59,7 +59,28 @@ pub const REGISTRY: &[DatasetSpec] = &[
         seed: 0xAAE5,
         stands_in_for: "ogbn-papers100M (111M nodes / 1.6B edges, avg deg 14)",
     },
+    // The out-of-core twin: same shape family as papers-sim but sized so
+    // its feature table (2^18 × 128 f32 = 128 MiB at scale 1.0) exceeds a
+    // small per-rank storage budget — the named larger-than-RAM workload
+    // for `crate::storage` (`tests/storage.rs`, `benches/storage_oom.rs`)
+    // rather than a synthetic-only path.
+    DatasetSpec {
+        name: "papers-xl",
+        scale_log2: 18, // 262_144 nodes
+        avg_degree: 15,
+        feature_dim: 128,
+        rmat: RmatParams { a: 0.57, b: 0.19, c: 0.19 },
+        seed: 0xAAE5 ^ 0x11,
+        stands_in_for: "ogbn-papers100M at working-set scale (feature table > storage budget)",
+    },
 ];
+
+/// Bytes of the f32 feature table `spec` materializes at `scale` — the
+/// working-set figure the storage budget is compared against.
+pub fn feature_table_bytes(spec: &DatasetSpec, scale: f64) -> u64 {
+    let n = 1u64 << scaled_log2(spec.scale_log2, scale);
+    n * spec.feature_dim as u64 * 4
+}
 
 /// A materialized dataset: graph + node features.
 pub struct Dataset {
@@ -219,6 +240,21 @@ mod tests {
         assert!(frac > 0.7, "intra-class edge fraction {}", frac);
         let g = Csr::from(&d.edges);
         g.validate().unwrap();
+    }
+
+    #[test]
+    fn papers_xl_outgrows_a_small_budget() {
+        let s = spec("papers-xl").unwrap();
+        // at full scale the feature table alone exceeds a 64 MiB budget
+        assert!(feature_table_bytes(s, 1.0) > 64 << 20);
+        // and even a 1/64-scale test materialization beats a 256 KiB one
+        assert!(feature_table_bytes(s, 1.0 / 64.0) > 256 << 10);
+        let small = load("papers-xl", 1.0 / 64.0).unwrap();
+        assert_eq!(small.edges.n_nodes, 1 << 12);
+        assert_eq!(
+            small.features.rows as u64 * small.features.cols as u64 * 4,
+            feature_table_bytes(s, 1.0 / 64.0)
+        );
     }
 
     #[test]

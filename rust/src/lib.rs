@@ -29,6 +29,7 @@ pub mod primitives;
 pub mod runtime;
 pub mod sampling;
 pub mod serve;
+pub mod storage;
 pub mod tensor;
 pub mod util;
 

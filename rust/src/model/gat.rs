@@ -21,12 +21,15 @@ use crate::cluster::{Ctx, Payload, Tag};
 use crate::partition::PartitionPlan;
 use crate::primitives::gemm::deal_gemm;
 use crate::primitives::groups::build_groups;
-use crate::primitives::spmm::{deal_spmm, feature_server, EdgeValues, SpmmInput};
+use crate::primitives::spmm::{
+    deal_spmm, deal_spmm_paged, feature_server, EdgeValues, PagedSpmmInput, SpmmInput,
+};
 use crate::runtime::{par, Act, Backend};
 use crate::tensor::{leaky_relu, Matrix};
 use crate::util::even_ranges;
 use crate::Result;
 
+use super::gcn::StorageScope;
 use super::{ExecOpts, LayerPart, ModelWeights};
 
 const COUNT_SEQ: u32 = u32::MAX;
@@ -61,6 +64,7 @@ pub fn gat_forward(
     let my_heads = hhi - hlo;
     let col_head: Vec<u8> = (flo..fhi).map(|c| (c / head_dim - hlo) as u8).collect();
 
+    let storage_scope = StorageScope::open();
     let mut h = h;
     ctx.mem.alloc(h.nbytes()); // register the input tile
     let n_layers = weights.config.layers;
@@ -85,34 +89,86 @@ pub fn gat_forward(
         drop(u);
         drop(v);
         drop(v_remote);
-        // 4. Three-tensor SPMM aggregation with α as edge features.
-        let input = SpmmInput {
-            plan,
-            g: &part.csr,
-            vals: EdgeValues::PerHead { vals: &alpha.0, heads: my_heads, col_head: &col_head },
-            h: &z,
-        };
-        let mut agg = deal_spmm(ctx, &input, backend, opts.mode, opts.group_cols, phase + 4);
-        // 5. Self-edge term + bias + activation.
+        // 4. Three-tensor SPMM aggregation with α as edge features, then
+        //    5. the self-edge term + bias + activation.
         let act = if l + 1 == n_layers { Act::None } else { Act::Relu };
         let bias = &weights.layer_b(l)[flo..fhi];
-        ctx.compute(|| {
-            for r in 0..agg.rows {
-                let self_a = &alpha.1[r * my_heads..(r + 1) * my_heads];
-                let zrow = z.row(r);
-                let row = agg.row_mut(r);
-                for j in 0..row.len() {
-                    let val = row[j] + self_a[col_head[j] as usize] * zrow[j] + bias[j];
-                    row[j] = match act {
-                        Act::None => val,
-                        Act::Relu => val.max(0.0),
-                    };
-                }
+        // One definition of the self-edge + bias + act epilogue; the two
+        // arms differ only in where `zrow` is read from (resident tile vs
+        // faulted band) — the shared kernel keeps them bit-identical.
+        let epilogue = |r: usize, zrow: &[f32], row: &mut [f32]| {
+            let self_a = &alpha.1[r * my_heads..(r + 1) * my_heads];
+            for j in 0..row.len() {
+                let val = row[j] + self_a[col_head[j] as usize] * zrow[j] + bias[j];
+                row[j] = match act {
+                    Act::None => val,
+                    Act::Relu => val.max(0.0),
+                };
             }
-        });
+        };
+        let mut agg;
+        match &storage_scope {
+            None => {
+                let input = SpmmInput {
+                    plan,
+                    g: &part.csr,
+                    vals: EdgeValues::PerHead {
+                        vals: &alpha.0,
+                        heads: my_heads,
+                        col_head: &col_head,
+                    },
+                    h: &z,
+                };
+                agg = deal_spmm(ctx, &input, backend, opts.mode, opts.group_cols, phase + 4);
+                ctx.compute(|| {
+                    for r in 0..agg.rows {
+                        epilogue(r, z.row(r), agg.row_mut(r));
+                    }
+                });
+                ctx.mem.free(z.nbytes());
+            }
+            Some(scope) => {
+                // Out-of-core: `Z` (already consumed by the u/v GEMMs and
+                // the attention pass) moves to the paged tier; the SPMM
+                // and the self-edge pass fault rows back through the
+                // budgeted cache. Same arithmetic order → bit-identical.
+                let pz = scope.spill(ctx, &format!("gat-z-r{}-l{}", ctx.rank, l), &z)?;
+                ctx.mem.free(z.nbytes());
+                drop(z);
+                let input = PagedSpmmInput {
+                    plan,
+                    g: &part.csr,
+                    vals: EdgeValues::PerHead {
+                        vals: &alpha.0,
+                        heads: my_heads,
+                        col_head: &col_head,
+                    },
+                    h: &pz,
+                    cache: &scope.cache,
+                };
+                agg = deal_spmm_paged(ctx, &input, backend, opts.mode, opts.group_cols, phase + 4)?;
+                let mut io_total = 0.0f64;
+                let mut r0 = 0usize;
+                while r0 < agg.rows {
+                    let r1 = (r0 + scope.page_rows).min(agg.rows);
+                    let (band, io) = pz.band_shared(&scope.cache, r0, r1)?;
+                    io_total += io;
+                    ctx.compute(|| {
+                        for r in r0..r1 {
+                            epilogue(r, band.row(r - r0), agg.row_mut(r));
+                        }
+                    });
+                    r0 = r1;
+                }
+                ctx.advance(io_total);
+                scope.release(ctx, &pz);
+            }
+        }
         ctx.mem.free((alpha.0.len() * 4) as u64);
-        ctx.mem.free(z.nbytes());
         h = agg;
+    }
+    if let Some(scope) = &storage_scope {
+        scope.finish(ctx);
     }
     Ok(h)
 }
@@ -329,6 +385,66 @@ mod tests {
             let got = gather_tiles(&plan, d, &outs);
             assert_close(&got.data, &expect.data, 2e-3, 2e-3)
                 .unwrap_or_else(|e| panic!("plan ({},{}): {}", p, m, e));
+        }
+    }
+
+    #[test]
+    fn paged_gat_bit_identical_to_ram() {
+        let el = rmat(7, 700, RmatParams::paper(), 41);
+        let g = Csr::from(&el);
+        let d = 16;
+        let heads = 4;
+        let mut rng = Rng::new(19);
+        let h0 = Matrix::random(g.n_rows, d, 1.0, &mut rng);
+        let layers = sample_all_layers(&g, 2, 4, 78);
+        let cfg = ModelConfig::gat(2, d, heads);
+        let weights = Arc::new(ModelWeights::random(&cfg, 13));
+
+        let run = |p: usize, m: usize| -> Matrix {
+            let plan = crate::partition::PartitionPlan::new(g.n_rows, d, p, m);
+            let tiles = Arc::new(scatter(&plan, &h0));
+            let mut parts_by_p: Vec<Vec<LayerPart>> = Vec::new();
+            for pi in 0..plan.p {
+                let (lo, hi) = plan.node_range(pi);
+                parts_by_p.push(
+                    layers.layers.iter().map(|lg| LayerPart::new(lg.slice_rows(lo, hi))).collect(),
+                );
+            }
+            let parts_by_p = Arc::new(parts_by_p);
+            let plan2 = plan.clone();
+            let weights2 = Arc::clone(&weights);
+            let cluster = Cluster::new(plan.world(), NetConfig::default());
+            let (outs, _) = cluster
+                .run(move |ctx| {
+                    let (pi, _) = plan2.coords_of(ctx.rank);
+                    let opts = ExecOpts { mode: ExecMode::Pipelined, group_cols: 8, phase: 0x40 };
+                    gat_forward(
+                        ctx,
+                        &plan2,
+                        &parts_by_p[pi],
+                        tiles[ctx.rank].clone(),
+                        &weights2,
+                        &crate::runtime::Native,
+                        &opts,
+                    )
+                    .unwrap()
+                })
+                .unwrap();
+            gather_tiles(&plan, d, &outs)
+        };
+
+        for (p, m) in [(2usize, 2usize), (1, 4)] {
+            let ram = crate::storage::with_mem_budget(0, || run(p, m));
+            for (budget, page_rows) in [(4096u64, 16usize), (2048, 1)] {
+                let paged = crate::storage::with_mem_budget(budget, || {
+                    crate::storage::with_page_rows(page_rows, || run(p, m))
+                });
+                assert_eq!(
+                    paged, ram,
+                    "plan ({},{}) budget {} page_rows {}",
+                    p, m, budget, page_rows
+                );
+            }
         }
     }
 }

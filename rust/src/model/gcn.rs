@@ -2,16 +2,69 @@
 //! distributed GEMM projection followed by the feature-exchange SPMM mean
 //! aggregation over the sampled layer graph `G_l`, with a local self-loop
 //! contribution and fused bias + ReLU (identity on the last layer).
+//!
+//! When a storage budget is active (`storage::mem_budget() > 0`), each
+//! layer's projected tile `HW_l` is spilled to the rank's paged tier right
+//! after the GEMM: the SPMM feature server, the local aggregation, and the
+//! self-loop pass all fault rows back through the budgeted cache instead
+//! of holding the tile resident. Values are bit-identical to the in-memory
+//! path at every budget and page size (DESIGN.md §Out-of-core-storage).
+
+use std::sync::Arc;
 
 use crate::cluster::Ctx;
+use crate::coordinator::SimFs;
 use crate::partition::PartitionPlan;
 use crate::primitives::gemm::deal_gemm;
-use crate::primitives::spmm::{deal_spmm, EdgeValues, SpmmInput};
+use crate::primitives::spmm::{deal_spmm, deal_spmm_paged, EdgeValues, PagedSpmmInput, SpmmInput};
 use crate::runtime::{Act, Backend};
+use crate::storage::{self, PagedMatrix, SharedPageCache};
 use crate::tensor::Matrix;
 use crate::Result;
 
 use super::{ExecOpts, LayerPart, ModelWeights};
+
+/// Per-rank paged-tier scope for a forward pass: one budgeted cache and
+/// one simulated spill device (NVMe-class, per machine), opened only when
+/// the ambient storage budget is non-zero.
+pub(crate) struct StorageScope {
+    pub cache: SharedPageCache,
+    pub fs: Arc<SimFs>,
+    pub page_rows: usize,
+}
+
+impl StorageScope {
+    /// Open a scope when the ambient budget knob is active.
+    pub fn open() -> Option<StorageScope> {
+        let budget = storage::mem_budget();
+        (budget > 0).then(|| StorageScope {
+            cache: SharedPageCache::new(budget),
+            fs: SimFs::new(storage::DEFAULT_SPILL_GBPS),
+            page_rows: storage::page_rows(),
+        })
+    }
+
+    /// Spill `m` into the scope's paged tier, charging staging I/O and
+    /// mirroring residency into the rank tracker.
+    pub fn spill(&self, ctx: &mut Ctx, tag: &str, m: &Matrix) -> Result<PagedMatrix> {
+        let pm = self
+            .cache
+            .with(|c| PagedMatrix::from_matrix(c, tag, m, self.page_rows, Arc::clone(&self.fs)))?;
+        storage::charge_main(ctx, &self.cache);
+        Ok(pm)
+    }
+
+    /// Drop a spilled tile's file and frames (end of its layer).
+    pub fn release(&self, ctx: &mut Ctx, pm: &PagedMatrix) {
+        self.cache.with(|c| c.remove_file(pm.file));
+        storage::charge_main(ctx, &self.cache);
+    }
+
+    /// Close the scope: absorb counters into the machine's metrics.
+    pub fn finish(&self, ctx: &mut Ctx) {
+        storage::absorb_scope(ctx, &self.cache);
+    }
+}
 
 /// One machine's full GCN forward: `h` is the local `H^(0)` tile; `parts`
 /// holds this partition's slice of each sampled layer graph. Returns the
@@ -27,6 +80,7 @@ pub fn gcn_forward(
 ) -> Result<Matrix> {
     let (_, m_idx) = plan.coords_of(ctx.rank);
     let (flo, fhi) = plan.feat_range(m_idx);
+    let storage_scope = StorageScope::open();
     let mut h = h;
     ctx.mem.alloc(h.nbytes()); // register the input tile
     let n_layers = weights.config.layers;
@@ -37,33 +91,77 @@ pub fn gcn_forward(
         let hw = deal_gemm(ctx, plan, &h, weights.layer_w(l), backend, phase)?;
         ctx.mem.free(h.nbytes());
         drop(h);
-        // Aggregation: mean over sampled in-neighbors…
-        let input = SpmmInput {
-            plan,
-            g: &part.csr,
-            vals: EdgeValues::Scalar(&part.mean_w),
-            h: &hw,
-        };
-        let mut agg = deal_spmm(ctx, &input, backend, opts.mode, opts.group_cols, phase + 1);
-        // …plus the self-loop term (always local) and fused bias + act.
         let act = if l + 1 == n_layers { Act::None } else { Act::Relu };
         let bias = &weights.layer_b(l)[flo..fhi];
-        ctx.compute(|| {
-            for r in 0..agg.rows {
-                let sw = part.self_w[r];
-                let hw_row = hw.row(r);
-                let row = agg.row_mut(r);
-                for j in 0..row.len() {
-                    let v = row[j] + sw * hw_row[j] + bias[j];
-                    row[j] = match act {
-                        Act::None => v,
-                        Act::Relu => v.max(0.0),
-                    };
-                }
+        // One definition of the self-loop + bias + act epilogue; the two
+        // arms differ only in where `hw_row` is read from (resident tile
+        // vs faulted band) — the shared kernel keeps them bit-identical.
+        let epilogue = |r: usize, hw_row: &[f32], row: &mut [f32]| {
+            let sw = part.self_w[r];
+            for j in 0..row.len() {
+                let v = row[j] + sw * hw_row[j] + bias[j];
+                row[j] = match act {
+                    Act::None => v,
+                    Act::Relu => v.max(0.0),
+                };
             }
-        });
-        ctx.mem.free(hw.nbytes());
+        };
+        let mut agg;
+        match &storage_scope {
+            None => {
+                // Aggregation: mean over sampled in-neighbors…
+                let input = SpmmInput {
+                    plan,
+                    g: &part.csr,
+                    vals: EdgeValues::Scalar(&part.mean_w),
+                    h: &hw,
+                };
+                agg = deal_spmm(ctx, &input, backend, opts.mode, opts.group_cols, phase + 1);
+                // …plus the self-loop term (always local) and fused bias + act.
+                ctx.compute(|| {
+                    for r in 0..agg.rows {
+                        epilogue(r, hw.row(r), agg.row_mut(r));
+                    }
+                });
+                ctx.mem.free(hw.nbytes());
+            }
+            Some(scope) => {
+                // Out-of-core: the projected tile moves to the paged tier
+                // and its RAM copy is dropped before the aggregation.
+                let pm = scope.spill(ctx, &format!("gcn-hw-r{}-l{}", ctx.rank, l), &hw)?;
+                ctx.mem.free(hw.nbytes());
+                drop(hw);
+                let input = PagedSpmmInput {
+                    plan,
+                    g: &part.csr,
+                    vals: EdgeValues::Scalar(&part.mean_w),
+                    h: &pm,
+                    cache: &scope.cache,
+                };
+                agg = deal_spmm_paged(ctx, &input, backend, opts.mode, opts.group_cols, phase + 1)?;
+                // Self-loop + bias + act from faulted bands: same rows,
+                // same arithmetic order → bit-identical.
+                let mut io_total = 0.0f64;
+                let mut r0 = 0usize;
+                while r0 < agg.rows {
+                    let r1 = (r0 + scope.page_rows).min(agg.rows);
+                    let (band, io) = pm.band_shared(&scope.cache, r0, r1)?;
+                    io_total += io;
+                    ctx.compute(|| {
+                        for r in r0..r1 {
+                            epilogue(r, band.row(r - r0), agg.row_mut(r));
+                        }
+                    });
+                    r0 = r1;
+                }
+                ctx.advance(io_total);
+                scope.release(ctx, &pm);
+            }
+        }
         h = agg;
+    }
+    if let Some(scope) = &storage_scope {
+        scope.finish(ctx);
     }
     Ok(h)
 }
@@ -132,6 +230,65 @@ mod tests {
             let got = gather_tiles(&plan, d, &outs);
             assert_close(&got.data, &expect.data, 1e-3, 1e-3)
                 .unwrap_or_else(|e| panic!("plan ({},{}): {}", p, m, e));
+        }
+    }
+
+    #[test]
+    fn paged_gcn_bit_identical_to_ram() {
+        let el = rmat(7, 900, RmatParams::paper(), 31);
+        let g = Csr::from(&el);
+        let d = 12;
+        let mut rng = Rng::new(9);
+        let h0 = Matrix::random(g.n_rows, d, 1.0, &mut rng);
+        let layers = sample_all_layers(&g, 2, 4, 77);
+        let cfg = ModelConfig::gcn(2, d);
+        let weights = Arc::new(ModelWeights::random(&cfg, 3));
+
+        let run = |p: usize, m: usize| -> Matrix {
+            let plan = crate::partition::PartitionPlan::new(g.n_rows, d, p, m);
+            let tiles = Arc::new(scatter(&plan, &h0));
+            let mut parts_by_p: Vec<Vec<LayerPart>> = Vec::new();
+            for pi in 0..plan.p {
+                let (lo, hi) = plan.node_range(pi);
+                parts_by_p.push(
+                    layers.layers.iter().map(|lg| LayerPart::new(lg.slice_rows(lo, hi))).collect(),
+                );
+            }
+            let parts_by_p = Arc::new(parts_by_p);
+            let plan2 = plan.clone();
+            let weights2 = Arc::clone(&weights);
+            let cluster = Cluster::new(plan.world(), NetConfig::default());
+            let (outs, _) = cluster
+                .run(move |ctx| {
+                    let (pi, _) = plan2.coords_of(ctx.rank);
+                    let opts = ExecOpts { mode: ExecMode::Pipelined, group_cols: 16, phase: 0x40 };
+                    gcn_forward(
+                        ctx,
+                        &plan2,
+                        &parts_by_p[pi],
+                        tiles[ctx.rank].clone(),
+                        &weights2,
+                        &crate::runtime::Native,
+                        &opts,
+                    )
+                    .unwrap()
+                })
+                .unwrap();
+            gather_tiles(&plan, d, &outs)
+        };
+
+        for (p, m) in [(2usize, 2usize), (1, 2)] {
+            let ram = crate::storage::with_mem_budget(0, || run(p, m));
+            for (budget, page_rows) in [(4096u64, 16usize), (1024, 1), (1 << 20, 4096)] {
+                let paged = crate::storage::with_mem_budget(budget, || {
+                    crate::storage::with_page_rows(page_rows, || run(p, m))
+                });
+                assert_eq!(
+                    paged, ram,
+                    "plan ({},{}) budget {} page_rows {}",
+                    p, m, budget, page_rows
+                );
+            }
         }
     }
 }

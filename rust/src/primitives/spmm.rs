@@ -35,8 +35,10 @@ use crate::cluster::{Ctx, Payload, ServerCtx, Tag};
 use crate::graph::{Csr, NodeId};
 use crate::partition::PartitionPlan;
 use crate::runtime::{par, Backend};
+use crate::storage::{PagedMatrix, SharedPageCache};
 use crate::tensor::Matrix;
 use crate::util::even_ranges;
+use crate::Result;
 
 /// Element-op floor below which the row-parallel CSR kernels stay serial.
 const MIN_SPMM_WORK: u64 = 64 * 1024;
@@ -141,6 +143,44 @@ pub fn feature_server(
     }
 }
 
+/// The out-of-core twin of [`feature_server`]: the serving tile lives in
+/// a [`PagedMatrix`] behind the rank's budgeted [`SharedPageCache`], so
+/// each gather faults in only the pages it touches and the response
+/// streams from the cache straight into the existing chunked-send path
+/// (`ServerCtx::send_chunked`). Gathered values are bit-identical to the
+/// resident tile's; only page-fault counts and simulated I/O time depend
+/// on the budget.
+pub fn paged_feature_server(
+    sctx: &mut ServerCtx,
+    h: &PagedMatrix,
+    cache: &SharedPageCache,
+    row_lo: usize,
+    expected_peers: usize,
+    phase: u32,
+) {
+    let mut counts_pending = expected_peers;
+    let mut to_serve: u64 = 0;
+    let mut served: u64 = 0;
+    while counts_pending > 0 || served < to_serve {
+        let msg = sctx.recv_any(phase);
+        let seq = (msg.tag & 0xFFFF_FFFF) as u32;
+        if seq == COUNT_SEQ {
+            let c = msg.payload.into_u32();
+            to_serve += c[0] as u64;
+            counts_pending -= 1;
+            continue;
+        }
+        let ids = msg.payload.into_u32();
+        let (gathered, io) = sctx.compute(|| {
+            let idx: Vec<usize> = ids.iter().map(|&c| c as usize - row_lo).collect();
+            h.gather_shared(cache, &idx).expect("paged feature gather failed")
+        });
+        sctx.advance(io);
+        sctx.send_chunked(msg.src, Tag::of(phase, seq | RESP_BIT), gathered);
+        served += 1;
+    }
+}
+
 /// Deal's distributed SPMM (per machine). Returns `H1[R_p, F_m]`.
 pub fn deal_spmm(
     ctx: &mut Ctx,
@@ -240,22 +280,206 @@ pub fn deal_spmm(
             ctx.mem.alloc(out.nbytes());
             let acc = Accum { values: &input.vals, backend };
             match mode {
-                ExecMode::Naive | ExecMode::Monolithic => {
-                    run_monolithic(ctx, plan, m_idx, &groups, h, row_lo, &mut out, &acc, phase)
-                }
-                ExecMode::Grouped => {
-                    run_grouped(ctx, plan, m_idx, &groups, h, row_lo, &mut out, &acc, phase, 1, false)
-                }
-                ExecMode::Pipelined => {
-                    run_grouped(ctx, plan, m_idx, &groups, h, row_lo, &mut out, &acc, phase, 2, true)
-                }
+                ExecMode::Naive | ExecMode::Monolithic => run_monolithic(
+                    ctx, plan, m_idx, &groups, h, row_lo, &mut out, &acc, phase, None,
+                ),
+                ExecMode::Grouped => run_grouped(
+                    ctx, plan, m_idx, &groups, h, row_lo, &mut out, &acc, phase, 1, false, None,
+                ),
+                ExecMode::Pipelined => run_grouped(
+                    ctx, plan, m_idx, &groups, h, row_lo, &mut out, &acc, phase, 2, true, None,
+                ),
             }
             out
         },
     )
 }
 
+/// Inputs for one machine's out-of-core SPMM call: the local feature tile
+/// lives in a [`PagedMatrix`] behind the rank's budgeted cache instead of
+/// resident RAM.
+pub struct PagedSpmmInput<'a> {
+    /// Plan whose `feature_dim` equals `H'`'s width.
+    pub plan: &'a PartitionPlan,
+    /// Local partition of the (sampled) graph: `rows_of(p)` rows, global
+    /// columns.
+    pub g: &'a Csr,
+    /// Per-edge aggregation values aligned with `g`.
+    pub vals: EdgeValues<'a>,
+    /// Paged local feature tile, `rows_of(p) × feat_width(m)`.
+    pub h: &'a PagedMatrix,
+    /// The rank's shared page cache holding `h`'s pages.
+    pub cache: &'a SharedPageCache,
+}
+
+/// Deal's distributed SPMM over a **paged** local tile (DESIGN.md
+/// §Out-of-core-storage): the feature server streams gathered rows from
+/// the budgeted cache into the chunked-send path, each local group
+/// gathers its source rows through the cache **right before it
+/// accumulates** (one group's block resident at a time — never the whole
+/// tile), and remote groups stream off the wire exactly as in
+/// [`deal_spmm`]. Every destination row accumulates its edges in the
+/// same order as the in-memory path, so the result is bit-identical at
+/// every budget and page size — only fault counts and simulated I/O
+/// time change.
+pub fn deal_spmm_paged(
+    ctx: &mut Ctx,
+    input: &PagedSpmmInput,
+    backend: &dyn Backend,
+    mode: ExecMode,
+    max_cols_per_group: usize,
+    phase: u32,
+) -> Result<Matrix> {
+    let plan = input.plan;
+    let (p_idx, m_idx) = plan.coords_of(ctx.rank);
+    let width = plan.feat_width(m_idx);
+    let rows = plan.rows_of(p_idx);
+    assert_eq!(input.h.rows, rows);
+    assert_eq!(input.h.cols, width);
+    let row_lo = plan.node_range(p_idx).0;
+
+    // Single graph partition: everything is local — aggregate straight
+    // off the CSR, copying each edge's source row out of the cache into a
+    // reused scratch buffer. No server runs at p = 1, so one lock covers
+    // the whole serial pass (per-edge work happens on page-resident
+    // frames). Every destination row consumes its edges in CSR order,
+    // the same per-destination order as the banded in-memory kernel, so
+    // the result is bit-identical; the serial schedule is the honest
+    // price of reading through the cache.
+    if plan.p == 1 {
+        let g = input.g;
+        let h = input.h;
+        let mut out = Matrix::zeros(rows, width);
+        ctx.mem.alloc(out.nbytes());
+        let mut io_total = 0.0f64;
+        let vals_ref = &input.vals;
+        ctx.compute(|| {
+            input.cache.with(|c| {
+                for r in 0..g.n_rows {
+                    let (lo, hi) = (g.indptr[r] as usize, g.indptr[r + 1] as usize);
+                    if lo == hi {
+                        continue;
+                    }
+                    let orow = out.row_mut(r);
+                    for e in lo..hi {
+                        let sr = g.indices[e] as usize - row_lo;
+                        // borrow the source row in the resident frame —
+                        // no per-edge copy, faults only on page misses
+                        let src = c
+                            .read_row(h.file, sr)
+                            .expect("paged SPMM gather failed");
+                        match vals_ref {
+                            EdgeValues::Scalar(vals) => {
+                                let v = vals[e];
+                                for (o, &x) in orow.iter_mut().zip(src) {
+                                    *o += v * x;
+                                }
+                            }
+                            EdgeValues::PerHead { vals, heads, col_head } => {
+                                let ev = &vals[e * heads..(e + 1) * heads];
+                                for j in 0..orow.len() {
+                                    orow[j] += ev[col_head[j] as usize] * src[j];
+                                }
+                            }
+                        }
+                    }
+                }
+                io_total = c.take_io_secs();
+            });
+        });
+        ctx.advance(io_total);
+        crate::storage::charge_main(ctx, input.cache);
+        return Ok(out);
+    }
+
+    // Group construction: identical to the in-memory path.
+    let gvals = input.vals.group_vals(input.g.n_edges());
+    let groups = ctx.compute(|| match mode {
+        ExecMode::Naive => super::groups::build_naive_groups(input.g, &gvals, plan, p_idx),
+        ExecMode::Monolithic => build_groups(input.g, &gvals, plan, p_idx, 0),
+        _ => build_groups(input.g, &gvals, plan, p_idx, max_cols_per_group),
+    });
+
+    let mut per_peer: Vec<u32> = vec![0; plan.p];
+    for g in &groups {
+        if !g.local {
+            per_peer[g.src_part] += 1;
+        }
+    }
+    for q in 0..plan.p {
+        if q != p_idx {
+            ctx.send_service(
+                plan.rank_of(q, m_idx),
+                Tag::of(phase, COUNT_SEQ),
+                Payload::U32(vec![per_peer[q]]),
+            );
+        }
+    }
+
+    let store = *input.h;
+    let cache = input.cache.clone();
+    let paged_local = PagedLocal { store: input.h, cache: input.cache, row_lo };
+    let expected_peers = plan.p - 1;
+    // remote groups always accumulate from fetched/streamed blocks and
+    // local groups gather on demand through `paged_local`, so the
+    // resident-tile argument is never read — a width-matched empty
+    // matrix stands in for it.
+    let empty = Matrix::zeros(0, width);
+    let out = ctx.with_server(
+        |sctx| paged_feature_server(sctx, &store, &cache, row_lo, expected_peers, phase),
+        |ctx| {
+            let mut out = Matrix::zeros(rows, width);
+            ctx.mem.alloc(out.nbytes());
+            let acc = Accum { values: &input.vals, backend };
+            match mode {
+                ExecMode::Naive | ExecMode::Monolithic => run_monolithic(
+                    ctx, plan, m_idx, &groups, &empty, row_lo, &mut out, &acc, phase,
+                    Some(&paged_local),
+                ),
+                ExecMode::Grouped => run_grouped(
+                    ctx, plan, m_idx, &groups, &empty, row_lo, &mut out, &acc, phase, 1, false,
+                    Some(&paged_local),
+                ),
+                ExecMode::Pipelined => run_grouped(
+                    ctx, plan, m_idx, &groups, &empty, row_lo, &mut out, &acc, phase, 2, true,
+                    Some(&paged_local),
+                ),
+            }
+            out
+        },
+    );
+    crate::storage::charge_main(ctx, input.cache);
+    Ok(out)
+}
+
+/// On-demand local-group source for the paged SPMM: gathers one group's
+/// rows through the budgeted cache right before that group accumulates,
+/// so at most one local block is resident at a time (the out-of-core
+/// twin of reading the resident tile in place; same values, same order).
+struct PagedLocal<'a> {
+    store: &'a PagedMatrix,
+    cache: &'a SharedPageCache,
+    row_lo: usize,
+}
+
+impl PagedLocal<'_> {
+    /// Gather `g.cols`' rows (block layout = the fetched-group layout
+    /// `accumulate_group` expects), charging the I/O to `ctx`.
+    fn gather_group(&self, ctx: &mut Ctx, g: &EdgeGroup) -> Matrix {
+        let idx: Vec<usize> = g.cols.iter().map(|&c| c as usize - self.row_lo).collect();
+        let (block, io) = self
+            .store
+            .gather_shared(self.cache, &idx)
+            .expect("paged SPMM local gather failed");
+        ctx.advance(io);
+        block
+    }
+}
+
 /// Monolithic: all requests, all responses, then all compute.
+/// `paged_local` (the out-of-core path) gathers each local group's rows
+/// through the budgeted cache right before accumulating it; `None` reads
+/// the resident tile `h` directly.
 #[allow(clippy::too_many_arguments)]
 fn run_monolithic(
     ctx: &mut Ctx,
@@ -267,6 +491,7 @@ fn run_monolithic(
     out: &mut Matrix,
     acc: &Accum,
     phase: u32,
+    paged_local: Option<&PagedLocal>,
 ) {
     for (seq, g) in groups.iter().enumerate() {
         if !g.local {
@@ -289,14 +514,25 @@ fn run_monolithic(
         }
     }
     for (seq, g) in groups.iter().enumerate() {
-        let feats_ref = feats[seq].as_ref();
+        let local_block = match paged_local {
+            Some(p) if g.local => Some(p.gather_group(ctx, g)),
+            _ => None,
+        };
+        if let Some(b) = &local_block {
+            ctx.mem.alloc(b.nbytes());
+        }
+        let feats_ref = feats[seq].as_ref().or(local_block.as_ref());
         ctx.compute(|| acc.accumulate_group(g, feats_ref, h, row_lo, out));
+        if let Some(b) = &local_block {
+            ctx.mem.free(b.nbytes());
+        }
     }
     ctx.mem.free(held_bytes);
 }
 
 /// Grouped / pipelined: `lookahead` groups of ids in flight; optionally
-/// compute the local group first (Fig. 12c).
+/// compute the local group first (Fig. 12c). `paged_local` as in
+/// [`run_monolithic`].
 #[allow(clippy::too_many_arguments)]
 fn run_grouped(
     ctx: &mut Ctx,
@@ -310,6 +546,7 @@ fn run_grouped(
     phase: u32,
     lookahead: usize,
     local_first: bool,
+    paged_local: Option<&PagedLocal>,
 ) {
     // Split group indices into local and remote, preserving order.
     let local_idx: Vec<usize> = (0..groups.len()).filter(|&i| groups[i].local).collect();
@@ -325,10 +562,22 @@ fn run_grouped(
     for &gi in remote_idx.iter().take(lookahead) {
         send_ids(ctx, gi);
     }
+    let run_local = |ctx: &mut Ctx, out: &mut Matrix, gi: usize| {
+        let block = paged_local.map(|p| p.gather_group(ctx, &groups[gi]));
+        if let Some(b) = &block {
+            ctx.mem.alloc(b.nbytes());
+        }
+        let feats = block.as_ref();
+        ctx.compute(|| acc.accumulate_group(&groups[gi], feats, h, row_lo, out));
+        if let Some(b) = &block {
+            ctx.mem.free(b.nbytes());
+        }
+    };
+
     if local_first {
         // Fig. 12(c): the no-communication group covers the fill time.
         for &gi in &local_idx {
-            ctx.compute(|| acc.accumulate_group(&groups[gi], None, h, row_lo, out));
+            run_local(ctx, out, gi);
         }
     }
     for (pos, &gi) in remote_idx.iter().enumerate() {
@@ -346,7 +595,7 @@ fn run_grouped(
     if !local_first {
         // Fig. 12(a): local group last (as drawn: group 6 at the end).
         for &gi in &local_idx {
-            ctx.compute(|| acc.accumulate_group(&groups[gi], None, h, row_lo, out));
+            run_local(ctx, out, gi);
         }
     }
 }
@@ -909,6 +1158,94 @@ mod tests {
                 run_spmm(&plan, &g, &vals, &h, algo).0
             });
             assert_eq!(got, base, "chunk_rows={}", chunk);
+        }
+    }
+
+    fn run_spmm_paged(
+        plan: &PartitionPlan,
+        g: &Csr,
+        vals: &[f32],
+        h: &Matrix,
+        mode: ExecMode,
+        maxc: usize,
+        budget: u64,
+        page_rows: usize,
+    ) -> (Matrix, ClusterReport) {
+        use crate::coordinator::SimFs;
+        use crate::storage::{PagedMatrix, SharedPageCache};
+        let tiles = Arc::new(scatter(plan, h));
+        let mut subs: Vec<(Csr, Vec<f32>)> = Vec::new();
+        for p in 0..plan.p {
+            let (lo, hi) = plan.node_range(p);
+            let sub = g.slice_rows(lo, hi);
+            let vlo = g.indptr[lo] as usize;
+            let vhi = g.indptr[hi] as usize;
+            subs.push((sub, vals[vlo..vhi].to_vec()));
+        }
+        let subs = Arc::new(subs);
+        let plan2 = plan.clone();
+        let cluster = Cluster::new(plan.world(), NetConfig::default());
+        let (outs, report) = cluster
+            .run(move |ctx| {
+                let (p_idx, _m) = plan2.coords_of(ctx.rank);
+                let (sub, svals) = &subs[p_idx];
+                let cache = SharedPageCache::new(budget);
+                let fs = SimFs::new(crate::storage::DEFAULT_SPILL_GBPS);
+                let pm = cache
+                    .with(|c| {
+                        PagedMatrix::from_matrix(
+                            c,
+                            &format!("spmm-test-r{}", ctx.rank),
+                            &tiles[ctx.rank],
+                            page_rows,
+                            fs,
+                        )
+                    })
+                    .unwrap();
+                let input = PagedSpmmInput {
+                    plan: &plan2,
+                    g: sub,
+                    vals: EdgeValues::Scalar(svals),
+                    h: &pm,
+                    cache: &cache,
+                };
+                let out =
+                    deal_spmm_paged(ctx, &input, &crate::runtime::Native, mode, maxc, 7).unwrap();
+                crate::storage::absorb_scope(ctx, &cache);
+                out
+            })
+            .unwrap();
+        (gather_tiles(plan, h.cols, &outs), report)
+    }
+
+    #[test]
+    fn paged_spmm_bit_identical_to_ram_at_every_budget() {
+        let (g, vals, h) = setup(96, 8, 6, 5);
+        for (p, m) in [(2usize, 2usize), (1, 2), (4, 1)] {
+            let plan = PartitionPlan::new(g.n_rows, h.cols, p, m);
+            for mode in [ExecMode::Monolithic, ExecMode::Pipelined] {
+                let (ram, _) = run_spmm(&plan, &g, &vals, &h, Algo::Deal(mode, 8));
+                for (budget, page_rows) in [(0u64, 16usize), (2048, 4), (512, 1), (4096, 4096)]
+                {
+                    let (paged, rep) =
+                        run_spmm_paged(&plan, &g, &vals, &h, mode, 8, budget, page_rows);
+                    assert_eq!(
+                        paged, ram,
+                        "paged != ram at ({},{}) mode {:?} budget {} page_rows {}",
+                        p, m, mode, budget, page_rows
+                    );
+                    if budget > 0 {
+                        assert!(
+                            rep.max_storage_resident() <= budget.max((page_rows * 8 * 4) as u64)
+                                + (page_rows * 8 * 4) as u64,
+                            "residency {} blew the budget {} (page_rows {})",
+                            rep.max_storage_resident(),
+                            budget,
+                            page_rows
+                        );
+                    }
+                }
+            }
         }
     }
 

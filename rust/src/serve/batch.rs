@@ -105,9 +105,11 @@ impl SimilarBatch {
         let qt = queries.transpose();
         // One full-tile GEMM per shard, shards mapped over the intra-rank
         // pool (each GEMM runs serial inside a worker — no nested fan-out).
+        // `shard_dense` hands out the resident Arc for RAM shards and
+        // materializes spilled shards through their budgeted cache.
         let panels: Vec<Matrix> =
             crate::runtime::par::map_indexed(table.num_shards(), |s| {
-                backend.gemm(table.shard(s), &qt)
+                backend.gemm(&table.shard_dense(s), &qt)
             })
             .into_iter()
             .collect::<Result<_>>()?;

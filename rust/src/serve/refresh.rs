@@ -89,13 +89,25 @@ pub struct RefreshReport {
 /// Periodic refresh driver: one inference pipeline feeding one cell.
 pub struct Refresher {
     pipeline: Pipeline,
+    /// Spill-mode budget for the incoming epoch's table (0 = resident).
+    /// With a budget set, refresh double-buffers **on disk**: the old
+    /// epoch keeps serving while the new one stages on the paged tier at
+    /// `budget` resident bytes instead of doubling table RAM
+    /// (DESIGN.md §Out-of-core-storage).
+    spill_budget: u64,
 }
 
 impl Refresher {
     pub fn new(mut pipeline: Pipeline) -> Refresher {
         // the refresher exists to harvest the embeddings
         pipeline.keep_embeddings = true;
-        Refresher { pipeline }
+        Refresher { pipeline, spill_budget: 0 }
+    }
+
+    /// Publish future epochs as spilled tables under `budget_bytes`.
+    pub fn with_spill(mut self, budget_bytes: u64) -> Refresher {
+        self.spill_budget = budget_bytes;
+        self
     }
 
     pub fn pipeline(&self) -> &Pipeline {
@@ -112,7 +124,16 @@ impl Refresher {
             .embeddings
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("pipeline kept no embeddings"))?;
-        let table = ShardedTable::from_inference_plan(&report.plan, embeddings, 0);
+        let table = if self.spill_budget > 0 {
+            ShardedTable::from_inference_plan_spilled(
+                &report.plan,
+                embeddings,
+                0,
+                self.spill_budget,
+            )?
+        } else {
+            ShardedTable::from_inference_plan(&report.plan, embeddings, 0)
+        };
         let (nodes, dim) = (table.n_nodes(), table.dim());
         let epoch = cell.publish(table);
         let (mut net_bytes, mut net_msgs) = (0u64, 0u64);
@@ -244,6 +265,30 @@ mod tests {
         assert_eq!(rep2.epoch, 2);
         assert_eq!(rep2.updated_rows, 0);
         assert_eq!(cell.load().to_full(), *state.embeddings());
+    }
+
+    #[test]
+    fn spilled_refresh_serves_the_same_epoch() {
+        let mut cfg = DealConfig::default();
+        cfg.dataset.scale = 1.0 / 256.0; // 256 nodes
+        cfg.cluster.machines = 4;
+        cfg.model.layers = 2;
+        cfg.model.fanout = 5;
+        let resident = Refresher::new(Pipeline::new(cfg.clone()));
+        let cell_a = TableCell::new(constant_table(4, 2, 0.0));
+        resident.refresh(&cell_a).unwrap();
+        // 8 KiB budget < the 256 × d table → the spilled epoch pages
+        let spilled = Refresher::new(Pipeline::new(cfg)).with_spill(8 << 10);
+        let cell_b = TableCell::new(constant_table(4, 2, 0.0));
+        let rep = spilled.refresh(&cell_b).unwrap();
+        assert_eq!(rep.nodes, 256);
+        let a = cell_a.load();
+        let b = cell_b.load();
+        assert!(b.is_spilled());
+        assert!(!a.is_spilled());
+        assert_eq!(b.to_full(), a.to_full(), "spilled epoch serves identical embeddings");
+        assert!(b.resident_bytes() < a.resident_bytes(), "spill bounds the new epoch's RAM");
+        assert!(b.storage_counters().spill_bytes_written > 0);
     }
 
     #[test]

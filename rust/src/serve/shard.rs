@@ -7,12 +7,57 @@
 //! the inference tier and the serving tier. A [`ShardedTable`] is an
 //! immutable epoch snapshot: refresh publishes a whole new table and the
 //! worker pool pins the old one per batch (`refresh::TableCell`).
+//!
+//! **Spill mode** (DESIGN.md §Out-of-core-storage): a table built with
+//! [`ShardedTable::from_full_spilled`] /
+//! [`ShardedTable::from_inference_plan_spilled`] stages its shards on the
+//! paged storage tier behind one budgeted [`SharedPageCache`] instead of
+//! holding them resident. Epoch refresh then double-buffers **on disk**:
+//! while the old epoch keeps serving from RAM (or its own cache), the
+//! incoming epoch costs at most `budget` resident bytes instead of a full
+//! second table. Reads fault pages in on demand — gathered values are
+//! bit-identical to the resident table's; only fault counts and spill
+//! traffic change. Delta patches promote a touched spilled shard to a
+//! resident copy (copy-on-write, untouched shards stay shared).
 
 use std::sync::Arc;
 
+use crate::cluster::metrics::StorageCounters;
+use crate::coordinator::SimFs;
 use crate::partition::PartitionPlan;
+use crate::storage::{self, PagedMatrix, SharedPageCache};
 use crate::tensor::Matrix;
 use crate::Result;
+
+/// One shard's backing: resident RAM or the paged spill tier.
+#[derive(Clone, Debug)]
+enum ShardData {
+    Ram(Arc<Matrix>),
+    Spilled(Arc<SpilledShard>),
+}
+
+/// A shard staged on the paged tier; all of a table's spilled shards
+/// share one budgeted cache (and one simulated spill device).
+pub struct SpilledShard {
+    store: PagedMatrix,
+    cache: SharedPageCache,
+}
+
+impl SpilledShard {
+    fn copy_row(&self, r: usize, out: &mut [f32]) -> Result<()> {
+        self.cache.with(|c| self.store.row_copy(c, r, out))
+    }
+
+    fn to_matrix(&self) -> Result<Matrix> {
+        self.cache.with(|c| self.store.to_matrix(c))
+    }
+}
+
+impl std::fmt::Debug for SpilledShard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SpilledShard {{ rows: {}, cols: {} }}", self.store.rows, self.store.cols)
+    }
+}
 
 /// One immutable epoch of the serving table, row-sharded `S` ways.
 #[derive(Clone, Debug)]
@@ -23,7 +68,7 @@ pub struct ShardedTable {
     /// `plan.p` row blocks; shard `s` holds rows `plan.node_range(s)`.
     /// `Arc`-held so a delta epoch (`patched`) shares untouched shards
     /// with its predecessor and copies only the shards it writes.
-    shards: Vec<Arc<Matrix>>,
+    shards: Vec<ShardData>,
     /// Refresh epoch this table was published at (0 = initial load).
     epoch: u64,
 }
@@ -36,7 +81,7 @@ impl ShardedTable {
         let blocks = (0..shards)
             .map(|s| {
                 let (lo, hi) = plan.node_range(s);
-                Arc::new(full.slice_rows(lo, hi))
+                ShardData::Ram(Arc::new(full.slice_rows(lo, hi)))
             })
             .collect();
         ShardedTable { plan, shards: blocks, epoch }
@@ -52,10 +97,68 @@ impl ShardedTable {
         let blocks = (0..serving.p)
             .map(|s| {
                 let (lo, hi) = serving.node_range(s);
-                Arc::new(full.slice_rows(lo, hi))
+                ShardData::Ram(Arc::new(full.slice_rows(lo, hi)))
             })
             .collect();
         ShardedTable { plan: serving, shards: blocks, epoch }
+    }
+
+    /// Stage the shards of `serving_plan`'s layout on the paged tier
+    /// under one `budget_bytes` cache (page granularity from the ambient
+    /// `storage::page_rows` chain).
+    fn spill_blocks(
+        serving: PartitionPlan,
+        full: &Matrix,
+        epoch: u64,
+        budget_bytes: u64,
+    ) -> Result<ShardedTable> {
+        let cache = SharedPageCache::new(budget_bytes);
+        let fs = SimFs::new(storage::DEFAULT_SPILL_GBPS);
+        let page_rows = storage::page_rows();
+        let mut blocks = Vec::with_capacity(serving.p);
+        for s in 0..serving.p {
+            let (lo, hi) = serving.node_range(s);
+            let block = full.slice_rows(lo, hi);
+            let store = cache.with(|c| {
+                PagedMatrix::from_matrix(
+                    c,
+                    &format!("serve-e{}-s{}", epoch, s),
+                    &block,
+                    page_rows,
+                    Arc::clone(&fs),
+                )
+            })?;
+            blocks.push(ShardData::Spilled(Arc::new(SpilledShard {
+                store,
+                cache: cache.clone(),
+            })));
+        }
+        Ok(ShardedTable { plan: serving, shards: blocks, epoch })
+    }
+
+    /// [`ShardedTable::from_full`], spilled to the paged tier under a
+    /// `budget_bytes` cache.
+    pub fn from_full_spilled(
+        full: &Matrix,
+        shards: usize,
+        epoch: u64,
+        budget_bytes: u64,
+    ) -> Result<ShardedTable> {
+        assert!(shards >= 1 && shards <= full.rows.max(1), "bad shard count {}", shards);
+        let plan = PartitionPlan::new(full.rows, full.cols.max(1), shards, 1);
+        Self::spill_blocks(plan, full, epoch, budget_bytes)
+    }
+
+    /// [`ShardedTable::from_inference_plan`], spilled to the paged tier —
+    /// the disk-side half of the double-buffered refresh.
+    pub fn from_inference_plan_spilled(
+        plan: &PartitionPlan,
+        full: &Matrix,
+        epoch: u64,
+        budget_bytes: u64,
+    ) -> Result<ShardedTable> {
+        assert_eq!(full.rows, plan.n_nodes, "embedding rows != plan nodes");
+        Self::spill_blocks(plan.serving(full.cols), full, epoch, budget_bytes)
     }
 
     pub fn n_nodes(&self) -> usize {
@@ -63,10 +166,10 @@ impl ShardedTable {
     }
 
     pub fn dim(&self) -> usize {
-        if let Some(s) = self.shards.first() {
-            s.cols
-        } else {
-            0
+        match self.shards.first() {
+            Some(ShardData::Ram(m)) => m.cols,
+            Some(ShardData::Spilled(sp)) => sp.store.cols,
+            None => 0,
         }
     }
 
@@ -83,9 +186,37 @@ impl ShardedTable {
         self.epoch = epoch;
     }
 
-    /// Shard `s`'s row block.
+    /// True if any shard lives on the paged spill tier.
+    pub fn is_spilled(&self) -> bool {
+        self.shards.iter().any(|s| matches!(s, ShardData::Spilled(_)))
+    }
+
+    /// Shard `s`'s resident row block. Panics for a spilled shard — use
+    /// [`ShardedTable::shard_dense`] when the table may be in spill mode.
     pub fn shard(&self, s: usize) -> &Matrix {
-        self.shards[s].as_ref()
+        match &self.shards[s] {
+            ShardData::Ram(m) => m.as_ref(),
+            ShardData::Spilled(_) => {
+                panic!("shard {} is spilled; use shard_dense for paged tables", s)
+            }
+        }
+    }
+
+    /// Shard `s` as a resident matrix: RAM shards hand out their `Arc`,
+    /// spilled shards materialize through the cache (faulting pages,
+    /// counted in [`ShardedTable::storage_counters`]). Materialization is
+    /// deliberately **per call, not cached**: pinning a dense copy would
+    /// silently hold the whole shard resident and defeat the budget.
+    /// Spill mode trades Similar-batch GEMM cost (full-shard fault sweep
+    /// + a transient dense copy per batch) for bounded refresh RAM —
+    /// Similar-heavy deployments should serve from resident tables.
+    pub fn shard_dense(&self, s: usize) -> Arc<Matrix> {
+        match &self.shards[s] {
+            ShardData::Ram(m) => Arc::clone(m),
+            ShardData::Spilled(sp) => {
+                Arc::new(sp.to_matrix().expect("spilled shard materialization failed"))
+            }
+        }
     }
 
     /// Global row range `[lo, hi)` held by shard `s`.
@@ -93,11 +224,38 @@ impl ShardedTable {
         self.plan.node_range(s)
     }
 
-    /// Embedding of global node `v` (panics if out of range).
+    /// Embedding of global node `v` (panics if out of range). Only valid
+    /// for resident shards — spill-mode callers go through
+    /// [`ShardedTable::try_gather`] / [`ShardedTable::copy_row_into`].
     pub fn row(&self, v: u32) -> &[f32] {
         let s = self.plan.node_owner(v);
         let (lo, _) = self.plan.node_range(s);
-        self.shards[s].row(v as usize - lo)
+        match &self.shards[s] {
+            ShardData::Ram(m) => m.row(v as usize - lo),
+            ShardData::Spilled(_) => {
+                panic!("node {}'s shard is spilled; use copy_row_into/try_gather", v)
+            }
+        }
+    }
+
+    /// Copy node `v`'s embedding into `out`, faulting its page in when
+    /// the owning shard is spilled.
+    pub fn copy_row_into(&self, v: u32, out: &mut [f32]) -> Result<()> {
+        anyhow::ensure!(
+            (v as usize) < self.n_nodes(),
+            "node id {} out of range (table has {} nodes)",
+            v,
+            self.n_nodes()
+        );
+        let s = self.plan.node_owner(v);
+        let (lo, _) = self.plan.node_range(s);
+        match &self.shards[s] {
+            ShardData::Ram(m) => {
+                out.copy_from_slice(m.row(v as usize - lo));
+                Ok(())
+            }
+            ShardData::Spilled(sp) => sp.copy_row(v as usize - lo, out),
+        }
     }
 
     /// Gather rows by global node id, routing each id to its owning shard.
@@ -105,13 +263,7 @@ impl ShardedTable {
     pub fn try_gather(&self, ids: &[u32]) -> Result<Matrix> {
         let mut out = Matrix::zeros(ids.len(), self.dim());
         for (i, &v) in ids.iter().enumerate() {
-            anyhow::ensure!(
-                (v as usize) < self.n_nodes(),
-                "node id {} out of range (table has {} nodes)",
-                v,
-                self.n_nodes()
-            );
-            out.row_mut(i).copy_from_slice(self.row(v));
+            self.copy_row_into(v, out.row_mut(i))?;
         }
         Ok(out)
     }
@@ -121,7 +273,8 @@ impl ShardedTable {
     /// whole table from a full recompute, only the rows an update batch
     /// affected are patched into the next double-buffered epoch. Shards
     /// are copy-on-write: untouched shards are shared with this table, so
-    /// the patch costs O(touched shards), not O(N). `values` holds one
+    /// the patch costs O(touched shards), not O(N); a touched *spilled*
+    /// shard is promoted to a resident copy first. `values` holds one
     /// row per id, in order. The receiver keeps this table's epoch stamp;
     /// `TableCell::publish` re-stamps on swap.
     pub fn patched(&self, ids: &[u32], values: &Matrix) -> Result<ShardedTable> {
@@ -147,22 +300,80 @@ impl ShardedTable {
             );
             let s = next.plan.node_owner(v);
             let (lo, _) = next.plan.node_range(s);
-            Arc::make_mut(&mut next.shards[s])
-                .row_mut(v as usize - lo)
-                .copy_from_slice(values.row(i));
+            if let ShardData::Spilled(sp) = &next.shards[s] {
+                // promote: the patched epoch's touched shard is resident
+                next.shards[s] = ShardData::Ram(Arc::new(sp.to_matrix()?));
+            }
+            match &mut next.shards[s] {
+                ShardData::Ram(m) => Arc::make_mut(m)
+                    .row_mut(v as usize - lo)
+                    .copy_from_slice(values.row(i)),
+                ShardData::Spilled(_) => unreachable!("promoted above"),
+            }
         }
         Ok(next)
     }
 
     /// Reassemble the full matrix (tests / debugging).
     pub fn to_full(&self) -> Matrix {
-        let refs: Vec<&Matrix> = self.shards.iter().map(|s| s.as_ref()).collect();
+        let dense: Vec<Arc<Matrix>> = (0..self.num_shards()).map(|s| self.shard_dense(s)).collect();
+        let refs: Vec<&Matrix> = dense.iter().map(|m| m.as_ref()).collect();
         Matrix::vcat(&refs)
     }
 
-    /// Total bytes across shards (capacity accounting).
+    /// Total bytes across shards (capacity accounting: data bytes,
+    /// wherever they live).
     pub fn nbytes(&self) -> u64 {
-        self.shards.iter().map(|s| s.nbytes()).sum()
+        self.shards
+            .iter()
+            .map(|s| match s {
+                ShardData::Ram(m) => m.nbytes(),
+                ShardData::Spilled(sp) => sp.store.nbytes(),
+            })
+            .sum()
+    }
+
+    /// Bytes actually resident in RAM: full blocks for RAM shards plus
+    /// the (shared) cache residency of the spilled ones.
+    pub fn resident_bytes(&self) -> u64 {
+        let mut ram = 0u64;
+        let mut cache_seen = false;
+        let mut cached = 0u64;
+        for s in &self.shards {
+            match s {
+                ShardData::Ram(m) => ram += m.nbytes(),
+                ShardData::Spilled(sp) => {
+                    // all spilled shards of a table share one cache —
+                    // count it once
+                    if !cache_seen {
+                        cached = sp.cache.with(|c| c.used_bytes());
+                        cache_seen = true;
+                    }
+                }
+            }
+        }
+        ram + cached
+    }
+
+    /// Storage counters of the spill tier (zeros for a fully resident
+    /// table).
+    pub fn storage_counters(&self) -> StorageCounters {
+        for s in &self.shards {
+            if let ShardData::Spilled(sp) = s {
+                return sp.cache.with(|c| c.stats().clone());
+            }
+        }
+        StorageCounters::default()
+    }
+
+    /// True when shard `s` of both tables is the same shared block (the
+    /// copy-on-write check used by the delta tests).
+    pub fn shares_shard_with(&self, other: &ShardedTable, s: usize) -> bool {
+        match (&self.shards[s], &other.shards[s]) {
+            (ShardData::Ram(a), ShardData::Ram(b)) => Arc::ptr_eq(a, b),
+            (ShardData::Spilled(a), ShardData::Spilled(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
     }
 }
 
@@ -186,6 +397,7 @@ mod tests {
         assert_eq!(t.dim(), 7);
         assert_eq!(t.epoch(), 3);
         assert_eq!(t.to_full(), full);
+        assert!(!t.is_spilled());
         let mut covered = 0;
         for s in 0..4 {
             let (lo, hi) = t.shard_range(s);
@@ -233,7 +445,7 @@ mod tests {
             let (lo, hi) = t.shard_range(s);
             let touched = (lo..hi).contains(&3) || (lo..hi).contains(&27);
             assert_eq!(
-                Arc::ptr_eq(&t.shards[s], &p.shards[s]),
+                t.shares_shard_with(&p, s),
                 !touched,
                 "shard {} sharing is wrong",
                 s
@@ -258,5 +470,55 @@ mod tests {
         for s in 0..plan.p {
             assert_eq!(t.shard_range(s), plan.node_range(s));
         }
+    }
+
+    #[test]
+    fn spilled_table_serves_identically() {
+        let mut rng = Rng::new(21);
+        let full = Matrix::random(96, 6, 1.0, &mut rng);
+        // budget of ~two pages at 8-row granularity → constant eviction
+        let t = crate::storage::with_page_rows(8, || {
+            ShardedTable::from_full_spilled(&full, 3, 1, 2 * 8 * 6 * 4).unwrap()
+        });
+        assert!(t.is_spilled());
+        assert_eq!(t.dim(), 6);
+        assert_eq!(t.nbytes(), full.nbytes());
+        assert!(t.resident_bytes() < full.nbytes(), "budget bounds residency");
+        // gathers are bit-identical to the resident table
+        let ids: Vec<u32> = vec![95, 0, 12, 12, 63, 31];
+        let got = t.try_gather(&ids).unwrap();
+        let idx: Vec<usize> = ids.iter().map(|&v| v as usize).collect();
+        assert_eq!(got, full.gather_rows(&idx));
+        assert_eq!(t.to_full(), full);
+        let counters = t.storage_counters();
+        assert!(counters.page_faults > 0, "cold reads must fault");
+        assert!(counters.evictions > 0, "tiny budget must evict");
+        assert!(counters.spill_bytes_written >= full.nbytes(), "staging spilled the table");
+        // row() is the resident-only fast path
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = t.row(0);
+        }));
+        assert!(r.is_err(), "row() must refuse spilled shards");
+    }
+
+    #[test]
+    fn spilled_patch_promotes_touched_shard_only() {
+        let mut rng = Rng::new(22);
+        let full = Matrix::random(40, 4, 1.0, &mut rng);
+        let t = ShardedTable::from_full_spilled(&full, 4, 0, 0).unwrap();
+        let patch = Matrix::from_vec(1, 4, vec![5.0; 4]);
+        let p = t.patched(&[2], &patch).unwrap();
+        assert_eq!(p.try_gather(&[2]).unwrap().row(0), patch.row(0));
+        // untouched spilled shards stay shared; the touched one promoted
+        for s in 0..4 {
+            let (lo, hi) = t.shard_range(s);
+            let touched = (lo..hi).contains(&2);
+            assert_eq!(t.shares_shard_with(&p, s), !touched, "shard {}", s);
+        }
+        // source table unchanged
+        assert_eq!(t.to_full(), full);
+        let mut expect = full.clone();
+        expect.row_mut(2).copy_from_slice(patch.row(0));
+        assert_eq!(p.to_full(), expect);
     }
 }

@@ -1,0 +1,497 @@
+//! The budgeted page cache over one rank's [`PageFile`]s.
+//!
+//! [`PageCache`] owns a set of page files and a byte-budgeted pool of
+//! decoded page frames. Eviction is **deterministic logical-clock LRU**:
+//! every hit or fault stamps the frame with a monotonically increasing
+//! tick; when the budget forces an eviction the minimum-stamp frame goes.
+//! LRU is a stack algorithm (Mattson's inclusion property), so for a fixed
+//! access sequence the fault count is monotone non-increasing as the
+//! budget grows — clock/second-chance policies can exhibit Belady's
+//! anomaly, which would break the budget-sweep contract `tests/storage.rs`
+//! pins.
+//!
+//! Peak residency is bounded by construction: room is made *before* a
+//! page loads (evict-until-fit), so resident bytes never exceed
+//! `max(budget, page_bytes) + page_bytes` transiently — "budget plus one
+//! page per active stream", since a shared cache serializes loads behind
+//! its mutex.
+//!
+//! Dirty frames (written through [`PageCache::write_row`] /
+//! [`PageCache::write_page`]) are written back on eviction and on
+//! [`PageCache::flush`]; reads after eviction re-fault the page from the
+//! file, which is why values can never depend on eviction order.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::memory::MemTracker;
+use crate::cluster::metrics::StorageCounters;
+use crate::coordinator::SimFs;
+use crate::Result;
+
+use super::pagefile::PageFile;
+
+/// Handle to a file registered in a [`PageCache`] (index into its table;
+/// stable for the cache's lifetime).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FileId(pub u32);
+
+/// One decoded page resident in the cache.
+#[derive(Debug)]
+struct Frame {
+    file: u32,
+    page: u32,
+    /// Logical access clock stamp (LRU key).
+    stamp: u64,
+    dirty: bool,
+    bytes: u64,
+    data: Vec<f32>,
+}
+
+/// A byte-budgeted cache of decoded pages over owned [`PageFile`]s.
+#[derive(Debug)]
+pub struct PageCache {
+    /// Byte budget (0 = unbounded).
+    budget: u64,
+    files: Vec<Option<PageFile>>,
+    frames: Vec<Option<Frame>>,
+    free_slots: Vec<usize>,
+    map: HashMap<(u32, u32), usize>,
+    /// LRU index: access stamp → frame slot (stamps are unique ticks, so
+    /// `pop_first` yields the deterministic minimum-stamp victim in
+    /// O(log n) instead of a full frame scan per eviction).
+    lru: BTreeMap<u64, usize>,
+    tick: u64,
+    used: u64,
+    /// Pending simulated I/O seconds (drained by `take_io_secs`).
+    io_pending: f64,
+    /// Resident bytes last mirrored into a `MemTracker` (see `sync_mem`).
+    mem_synced: u64,
+    stats: StorageCounters,
+}
+
+impl PageCache {
+    /// A cache with the given byte budget (`0` = unbounded).
+    pub fn new(budget_bytes: u64) -> PageCache {
+        PageCache {
+            budget: budget_bytes,
+            files: Vec::new(),
+            frames: Vec::new(),
+            free_slots: Vec::new(),
+            map: HashMap::new(),
+            lru: BTreeMap::new(),
+            tick: 0,
+            used: 0,
+            io_pending: 0.0,
+            mem_synced: 0,
+            stats: StorageCounters { budget_bytes, ..StorageCounters::default() },
+        }
+    }
+
+    /// The configured byte budget (0 = unbounded).
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Currently resident bytes.
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    /// High-water mark of resident bytes since the last `take_stats`.
+    pub fn peak_used(&self) -> u64 {
+        self.stats.peak_resident_bytes
+    }
+
+    /// Storage counters accumulated so far.
+    pub fn stats(&self) -> &StorageCounters {
+        &self.stats
+    }
+
+    /// Clone-and-reset the counters (peak resets to the current residency)
+    /// — used when a scope's counters are absorbed into machine metrics.
+    pub fn take_stats(&mut self) -> StorageCounters {
+        let out = self.stats.clone();
+        self.stats = StorageCounters {
+            budget_bytes: self.budget,
+            peak_resident_bytes: self.used,
+            ..StorageCounters::default()
+        };
+        out
+    }
+
+    /// Drain the pending simulated I/O seconds. Every multi-operation
+    /// helper drains before releasing the cache lock, so each thread
+    /// charges exactly its own I/O to its own simulated clock.
+    pub fn take_io_secs(&mut self) -> f64 {
+        std::mem::take(&mut self.io_pending)
+    }
+
+    /// Mirror the resident-byte delta since the last sync into `mem`.
+    /// Single-writer by contract: only the rank's main thread syncs (the
+    /// server thread shares the cache but never the tracker).
+    pub fn sync_mem(&mut self, mem: &mut MemTracker) {
+        if self.used >= self.mem_synced {
+            mem.alloc(self.used - self.mem_synced);
+        } else {
+            mem.free(self.mem_synced - self.used);
+        }
+        self.mem_synced = self.used;
+    }
+
+    /// Register a new zero-filled page file owned by this cache.
+    pub fn create_file(
+        &mut self,
+        tag: &str,
+        rows: usize,
+        cols: usize,
+        page_rows: usize,
+        fs: Arc<SimFs>,
+    ) -> Result<FileId> {
+        let pf = PageFile::create(tag, rows, cols, page_rows, fs)?;
+        self.files.push(Some(pf));
+        Ok(FileId(self.files.len() as u32 - 1))
+    }
+
+    /// Shape of a registered file.
+    pub fn file_shape(&self, f: FileId) -> (usize, usize, usize) {
+        let pf = self.files[f.0 as usize].as_ref().expect("file removed");
+        (pf.rows, pf.cols, pf.page_rows)
+    }
+
+    /// Drop a file and every frame it has resident (no write-back — the
+    /// contents are dead). The id is retired, not reused.
+    pub fn remove_file(&mut self, f: FileId) {
+        for slot in 0..self.frames.len() {
+            let matches = self.frames[slot]
+                .as_ref()
+                .is_some_and(|fr| fr.file == f.0);
+            if matches {
+                let fr = self.frames[slot].take().unwrap();
+                self.used -= fr.bytes;
+                self.map.remove(&(fr.file, fr.page));
+                self.lru.remove(&fr.stamp);
+                self.free_slots.push(slot);
+            }
+        }
+        self.files[f.0 as usize] = None; // Drop deletes the temp file
+    }
+
+    /// Drop every resident frame without write-back (scope teardown).
+    pub fn drop_all_frames(&mut self) {
+        for slot in 0..self.frames.len() {
+            if let Some(fr) = self.frames[slot].take() {
+                self.used -= fr.bytes;
+                self.map.remove(&(fr.file, fr.page));
+                self.free_slots.push(slot);
+            }
+        }
+        self.lru.clear();
+        debug_assert_eq!(self.used, 0);
+    }
+
+    /// Evict least-recently-stamped frames until `incoming` more bytes fit
+    /// under the budget (or nothing is left to evict).
+    fn ensure_room(&mut self, incoming: u64) -> Result<()> {
+        if self.budget == 0 {
+            return Ok(());
+        }
+        while self.used + incoming > self.budget && !self.map.is_empty() {
+            // deterministic LRU victim: minimum logical-clock stamp
+            let (_, victim) = self
+                .lru
+                .pop_first()
+                .expect("map non-empty implies an LRU entry exists");
+            let fr = self.frames[victim].take().unwrap();
+            if fr.dirty {
+                let pf = self.files[fr.file as usize]
+                    .as_mut()
+                    .expect("file removed with live dirty frame");
+                self.io_pending += pf.write_page(fr.page as usize, &fr.data)?;
+                self.stats.spill_bytes_written += fr.bytes;
+            }
+            self.used -= fr.bytes;
+            self.map.remove(&(fr.file, fr.page));
+            self.free_slots.push(victim);
+            self.stats.evictions += 1;
+        }
+        Ok(())
+    }
+
+    /// Locate (or fault in) the frame for `(f, page)` and return its slot.
+    /// `load` = read the page from disk on a miss (false = the caller
+    /// overwrites the whole page, so a zero frame suffices and no fault
+    /// is counted).
+    fn frame_slot(&mut self, f: FileId, page: usize, load: bool) -> Result<usize> {
+        let key = (f.0, page as u32);
+        self.tick += 1;
+        if let Some(&slot) = self.map.get(&key) {
+            let fr = self.frames[slot].as_mut().expect("mapped frame");
+            self.lru.remove(&fr.stamp);
+            fr.stamp = self.tick;
+            self.lru.insert(self.tick, slot);
+            return Ok(slot);
+        }
+        let bytes = {
+            let pf = self.files[f.0 as usize].as_ref().expect("file removed");
+            pf.page_nbytes(page)
+        };
+        self.ensure_room(bytes)?;
+        let mut data = Vec::new();
+        if load {
+            let pf = self.files[f.0 as usize].as_mut().expect("file removed");
+            self.io_pending += pf.read_page(page, &mut data)?;
+            self.stats.page_faults += 1;
+            self.stats.spill_bytes_read += bytes;
+        } else {
+            let pf = self.files[f.0 as usize].as_ref().expect("file removed");
+            data = vec![0.0; pf.page_len(page)];
+        }
+        let stamp = self.tick;
+        let frame = Frame { file: f.0, page: page as u32, stamp, dirty: false, bytes, data };
+        let slot = match self.free_slots.pop() {
+            Some(s) => {
+                self.frames[s] = Some(frame);
+                s
+            }
+            None => {
+                self.frames.push(Some(frame));
+                self.frames.len() - 1
+            }
+        };
+        self.map.insert(key, slot);
+        self.lru.insert(stamp, slot);
+        self.used += bytes;
+        if self.used > self.stats.peak_resident_bytes {
+            self.stats.peak_resident_bytes = self.used;
+        }
+        Ok(slot)
+    }
+
+    /// Read page `p` of file `f` (faulting it in if absent).
+    pub fn read_page(&mut self, f: FileId, p: usize) -> Result<&[f32]> {
+        let slot = self.frame_slot(f, p, true)?;
+        Ok(&self.frames[slot].as_ref().unwrap().data)
+    }
+
+    /// Read row `r` of file `f` through the cache.
+    pub fn read_row(&mut self, f: FileId, r: usize) -> Result<&[f32]> {
+        let (rows, cols, page_rows) = self.file_shape(f);
+        anyhow::ensure!(r < rows, "row {} out of {} rows", r, rows);
+        let page = r / page_rows;
+        let slot = self.frame_slot(f, page, true)?;
+        let off = (r - page * page_rows) * cols;
+        Ok(&self.frames[slot].as_ref().unwrap().data[off..off + cols])
+    }
+
+    /// Copy row `r` of file `f` into `out` (`out.len() == cols`).
+    pub fn copy_row(&mut self, f: FileId, r: usize, out: &mut [f32]) -> Result<()> {
+        let row = self.read_row(f, r)?;
+        anyhow::ensure!(out.len() == row.len(), "row width {} != buffer {}", row.len(), out.len());
+        out.copy_from_slice(row);
+        Ok(())
+    }
+
+    /// Write row `r` of file `f` through the cache (read-modify-write;
+    /// the page is marked dirty and written back on eviction or flush).
+    pub fn write_row(&mut self, f: FileId, r: usize, row: &[f32]) -> Result<()> {
+        let (rows, cols, page_rows) = self.file_shape(f);
+        anyhow::ensure!(r < rows, "row {} out of {} rows", r, rows);
+        anyhow::ensure!(row.len() == cols, "row width {} != {} cols", row.len(), cols);
+        let page = r / page_rows;
+        let slot = self.frame_slot(f, page, true)?;
+        let fr = self.frames[slot].as_mut().unwrap();
+        let off = (r - page * page_rows) * cols;
+        fr.data[off..off + cols].copy_from_slice(row);
+        fr.dirty = true;
+        Ok(())
+    }
+
+    /// Overwrite the whole page `p` of file `f` (no fault — the prior
+    /// contents are irrelevant). The staging fast path for sequential
+    /// builds: `PagedMatrix::from_matrix` and band writers use this.
+    pub fn write_page(&mut self, f: FileId, p: usize, data: &[f32]) -> Result<()> {
+        {
+            let pf = self.files[f.0 as usize].as_ref().expect("file removed");
+            anyhow::ensure!(
+                data.len() == pf.page_len(p),
+                "page {} holds {} elements, got {}",
+                p,
+                pf.page_len(p),
+                data.len()
+            );
+        }
+        let slot = self.frame_slot(f, p, false)?;
+        let fr = self.frames[slot].as_mut().unwrap();
+        fr.data.clear();
+        fr.data.extend_from_slice(data);
+        fr.dirty = true;
+        Ok(())
+    }
+
+    /// Write every dirty frame back to its file.
+    pub fn flush(&mut self) -> Result<()> {
+        for slot in 0..self.frames.len() {
+            let needs = self.frames[slot].as_ref().is_some_and(|fr| fr.dirty);
+            if !needs {
+                continue;
+            }
+            let fr = self.frames[slot].as_mut().unwrap();
+            let pf = self.files[fr.file as usize]
+                .as_mut()
+                .expect("file removed with live dirty frame");
+            self.io_pending += pf.write_page(fr.page as usize, &fr.data)?;
+            self.stats.spill_bytes_written += fr.bytes;
+            fr.dirty = false;
+        }
+        for pf in self.files.iter_mut().flatten() {
+            pf.sync()?;
+        }
+        Ok(())
+    }
+}
+
+/// A [`PageCache`] behind a mutex, shared between a machine's main thread
+/// and its feature-server thread (and, in the serving tier, pool
+/// workers). Every helper drains its own simulated I/O before releasing
+/// the lock, so clock attribution stays per-thread.
+#[derive(Clone)]
+pub struct SharedPageCache {
+    inner: Arc<Mutex<PageCache>>,
+}
+
+impl SharedPageCache {
+    /// A shared cache with the given byte budget (`0` = unbounded).
+    pub fn new(budget_bytes: u64) -> SharedPageCache {
+        SharedPageCache { inner: Arc::new(Mutex::new(PageCache::new(budget_bytes))) }
+    }
+
+    /// Run `f` with the cache locked.
+    pub fn with<R>(&self, f: impl FnOnce(&mut PageCache) -> R) -> R {
+        f(&mut self.inner.lock().unwrap())
+    }
+}
+
+impl std::fmt::Debug for SharedPageCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (budget, used) = self.with(|c| (c.budget(), c.used_bytes()));
+        write!(f, "SharedPageCache {{ budget: {}, used: {} }}", budget, used)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fs() -> Arc<SimFs> {
+        SimFs::new(crate::storage::DEFAULT_SPILL_GBPS)
+    }
+
+    fn filled(cache: &mut PageCache, rows: usize, cols: usize, page_rows: usize) -> FileId {
+        let f = cache.create_file("t", rows, cols, page_rows, fs()).unwrap();
+        for r in 0..rows {
+            let row: Vec<f32> = (0..cols).map(|c| (r * cols + c) as f32).collect();
+            cache.write_row(f, r, &row).unwrap();
+        }
+        f
+    }
+
+    #[test]
+    fn rows_read_back_through_evictions() {
+        // budget of exactly two 2-row pages over an 8-row file
+        let page_bytes = 2 * 3 * 4;
+        let mut cache = PageCache::new(2 * page_bytes);
+        let f = filled(&mut cache, 8, 3, 2);
+        cache.flush().unwrap();
+        assert!(cache.used_bytes() <= 2 * page_bytes);
+        for r in (0..8).rev() {
+            let row = cache.read_row(f, r).unwrap().to_vec();
+            let expect: Vec<f32> = (0..3).map(|c| (r * 3 + c) as f32).collect();
+            assert_eq!(row, expect, "row {} after eviction churn", r);
+        }
+        assert!(cache.stats().evictions > 0, "tiny budget must evict");
+        assert!(cache.stats().page_faults > 0);
+        assert!(cache.peak_used() <= 2 * page_bytes, "evict-before-load bounds residency");
+        assert!(cache.take_io_secs() > 0.0);
+    }
+
+    #[test]
+    fn dirty_pages_write_back_on_eviction() {
+        let page_bytes = 2 * 2 * 4;
+        let mut cache = PageCache::new(page_bytes); // one page resident
+        let f = cache.create_file("wb", 4, 2, 2, fs()).unwrap();
+        cache.write_row(f, 0, &[1.0, 2.0]).unwrap();
+        cache.write_row(f, 3, &[7.0, 8.0]).unwrap(); // evicts dirty page 0
+        assert!(cache.stats().spill_bytes_written >= page_bytes);
+        assert_eq!(cache.read_row(f, 0).unwrap(), &[1.0, 2.0], "written-back row survives");
+        cache.flush().unwrap();
+        assert_eq!(cache.read_row(f, 3).unwrap(), &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_stamped() {
+        let page_bytes = 2 * 4; // one-row pages, two f32 cols
+        let mut cache = PageCache::new(2 * page_bytes);
+        let f = filled(&mut cache, 3, 2, 1);
+        cache.flush().unwrap();
+        cache.drop_all_frames();
+        let faults0 = cache.stats().page_faults;
+        let _ = cache.read_row(f, 0).unwrap(); // pages: {0}
+        let _ = cache.read_row(f, 1).unwrap(); // {0, 1}
+        let _ = cache.read_row(f, 0).unwrap(); // hit, 0 freshened
+        let _ = cache.read_row(f, 2).unwrap(); // evicts 1 (LRU), {0, 2}
+        let _ = cache.read_row(f, 0).unwrap(); // hit — 0 must still be resident
+        assert_eq!(cache.stats().page_faults - faults0, 3, "exactly pages 0, 1, 2 faulted");
+        let _ = cache.read_row(f, 1).unwrap(); // refault
+        assert_eq!(cache.stats().page_faults - faults0, 4);
+    }
+
+    #[test]
+    fn unbounded_budget_never_evicts() {
+        let mut cache = PageCache::new(0);
+        let f = filled(&mut cache, 64, 4, 8);
+        for r in 0..64 {
+            let _ = cache.read_row(f, r).unwrap();
+        }
+        assert_eq!(cache.stats().evictions, 0);
+        assert_eq!(cache.used_bytes(), 64 * 4 * 4);
+    }
+
+    #[test]
+    fn mem_sync_mirrors_residency() {
+        let mut cache = PageCache::new(0);
+        let mut mem = MemTracker::default();
+        let f = filled(&mut cache, 4, 2, 2);
+        cache.sync_mem(&mut mem);
+        assert_eq!(mem.current(), 4 * 2 * 4);
+        cache.drop_all_frames();
+        cache.sync_mem(&mut mem);
+        assert_eq!(mem.current(), 0);
+        assert_eq!(mem.underflow_events(), 0);
+        let _ = f;
+    }
+
+    #[test]
+    fn remove_file_frees_frames_and_retires_id() {
+        let mut cache = PageCache::new(0);
+        let f = filled(&mut cache, 4, 2, 2);
+        let g = filled(&mut cache, 2, 2, 2);
+        cache.remove_file(f);
+        assert_eq!(cache.used_bytes(), 2 * 2 * 4, "only g's frames remain");
+        let row = cache.read_row(g, 1).unwrap();
+        assert_eq!(row, &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn take_stats_resets_and_keeps_budget() {
+        let mut cache = PageCache::new(1024);
+        let f = filled(&mut cache, 4, 2, 2);
+        let _ = cache.read_row(f, 0).unwrap();
+        let s = cache.take_stats();
+        assert_eq!(s.budget_bytes, 1024);
+        assert!(s.peak_resident_bytes > 0);
+        let s2 = cache.stats();
+        assert_eq!(s2.page_faults, 0, "counters reset");
+        assert_eq!(s2.budget_bytes, 1024, "budget survives the reset");
+    }
+}

@@ -1,0 +1,262 @@
+//! Out-of-core tiered storage: paged feature/activation and adjacency
+//! tiers behind a budgeted page cache (DESIGN.md §Out-of-core-storage).
+//!
+//! The paper's headline regime is multi-billion-edge graphs where memory,
+//! not compute, is the binding constraint (Fig. 3b); InferTurbo
+//! (arXiv:2307.00228) and DGI (arXiv:2211.15082) both bound inference
+//! memory by staging state on disk and restricting the per-layer working
+//! set. This module gives the repo those knobs:
+//!
+//! - [`PageFile`] — a tempfile-backed grid of fixed-size row-band pages
+//!   with explicit read/write/flush and simulated I/O time from the
+//!   existing [`SimFs`](crate::coordinator::SimFs) cost model (the spill
+//!   device is modeled like a link with an aggregate bandwidth).
+//! - [`PageCache`] — a per-rank byte-budgeted cache of decoded pages with
+//!   **deterministic logical-clock (LRU) eviction**: every access stamps a
+//!   monotonically increasing tick and eviction always takes the
+//!   minimum-stamp frame. LRU is a stack algorithm (inclusion property),
+//!   so page-fault counts are monotone non-increasing as the budget grows
+//!   — the property `tests/storage.rs` asserts. Eviction order can change
+//!   *I/O counts only*: a faulted page is re-read bit-for-bit from the
+//!   page file, so values never depend on what was cached.
+//! - [`PagedMatrix`] / [`PagedCsr`] — the typed tiers: feature/activation
+//!   rows and layer-graph adjacency bands.
+//!
+//! The byte budget follows the PR 3/4 knob-chain pattern:
+//! [`with_mem_budget`] scope → [`set_mem_budget`] global
+//! (`storage.budget_bytes` config / `--mem-budget` CLI) →
+//! `DEAL_MEM_BUDGET` env → unbounded (`0`). Page granularity:
+//! [`with_page_rows`] → [`set_page_rows`] (`storage.page_rows`) →
+//! `DEAL_PAGE_ROWS` → [`DEFAULT_PAGE_ROWS`]. `Cluster::run` and
+//! `Ctx::with_server` capture the caller's effective values, so a pinned
+//! sweep reaches every simulated machine and its server thread.
+//!
+//! **Determinism contract**: at every budget, page size, chunk size, and
+//! thread count the computed values are bit-identical to the in-memory
+//! path. The tiers only ever change *where bytes live* and *when
+//! simulated time is charged*; every consumer reads rows in the same
+//! order it would have read them from a resident matrix.
+
+pub mod cache;
+pub mod pagefile;
+pub mod paged;
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::cluster::Ctx;
+
+pub use cache::{FileId, PageCache, SharedPageCache};
+pub use pagefile::PageFile;
+pub use paged::{PagedCsr, PagedMatrix};
+
+/// Default rows per page for the paged tiers: 256 rows of a 128-wide f32
+/// tile is 128 KiB per page — large enough to amortize per-page I/O,
+/// small enough that a handful of pages fit tight budgets.
+pub const DEFAULT_PAGE_ROWS: usize = 256;
+
+/// Simulated aggregate bandwidth of the per-rank spill device in Gbps
+/// (NVMe-class: 16 Gbps = 2 GB/s), fed to the [`SimFs`] cost model each
+/// paged scope creates. The shared *feature* filesystem stays at the
+/// EFS-like 4 Gbps the coordinator already uses.
+pub const DEFAULT_SPILL_GBPS: f64 = 16.0;
+
+/// Sentinel for "no override" in the knob chains (`0` is a meaningful
+/// budget — unbounded — so unset needs its own marker).
+const BUDGET_UNSET: u64 = u64::MAX;
+const PAGE_ROWS_UNSET: usize = usize::MAX;
+
+static GLOBAL_BUDGET: AtomicU64 = AtomicU64::new(BUDGET_UNSET);
+static GLOBAL_PAGE_ROWS: AtomicUsize = AtomicUsize::new(PAGE_ROWS_UNSET);
+
+thread_local! {
+    static LOCAL_BUDGET: Cell<u64> = const { Cell::new(BUDGET_UNSET) };
+    static LOCAL_PAGE_ROWS: Cell<usize> = const { Cell::new(PAGE_ROWS_UNSET) };
+}
+
+/// Set the process-global storage byte budget (`0` = unbounded). Wired to
+/// `DealConfig.storage.budget_bytes` and the `--mem-budget` CLI flag;
+/// `u64::MAX` resets to auto (env or unbounded).
+pub fn set_mem_budget(bytes: u64) {
+    GLOBAL_BUDGET.store(bytes, Ordering::Relaxed);
+}
+
+/// Run `f` with the storage budget pinned to `bytes` on this thread
+/// (`0` = unbounded). `Cluster::run` and `Ctx::with_server` capture the
+/// caller's effective value, so a pinned sweep reaches every simulated
+/// machine — the storage parity tests rely on this.
+pub fn with_mem_budget<T>(bytes: u64, f: impl FnOnce() -> T) -> T {
+    let prev = LOCAL_BUDGET.with(|c| c.replace(bytes));
+    let out = f();
+    LOCAL_BUDGET.with(|c| c.set(prev));
+    out
+}
+
+fn env_budget() -> u64 {
+    static ENV: OnceLock<u64> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("DEAL_MEM_BUDGET")
+            .ok()
+            .and_then(|v| parse_bytes(&v).ok())
+            .unwrap_or(0)
+    })
+}
+
+/// Effective storage byte budget for paged scopes opened on this thread:
+/// [`with_mem_budget`] scope → [`set_mem_budget`] global (config/CLI) →
+/// `DEAL_MEM_BUDGET` env → `0` (unbounded — the in-memory tiers). The
+/// budget never changes results — only page-fault counts and simulated
+/// I/O time (DESIGN.md §Out-of-core-storage).
+pub fn mem_budget() -> u64 {
+    let local = LOCAL_BUDGET.with(|c| c.get());
+    if local != BUDGET_UNSET {
+        return local;
+    }
+    let global = GLOBAL_BUDGET.load(Ordering::Relaxed);
+    if global != BUDGET_UNSET {
+        return global;
+    }
+    env_budget()
+}
+
+/// Set the process-global page granularity in rows (`usize::MAX` resets
+/// to auto). Wired to `DealConfig.storage.page_rows`.
+pub fn set_page_rows(n: usize) {
+    GLOBAL_PAGE_ROWS.store(n, Ordering::Relaxed);
+}
+
+/// Run `f` with the page granularity pinned to `n` rows on this thread.
+pub fn with_page_rows<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    let prev = LOCAL_PAGE_ROWS.with(|c| c.replace(n));
+    let out = f();
+    LOCAL_PAGE_ROWS.with(|c| c.set(prev));
+    out
+}
+
+fn env_page_rows() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("DEAL_PAGE_ROWS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_PAGE_ROWS)
+    })
+}
+
+/// Effective rows-per-page for paged tiers created on this thread:
+/// [`with_page_rows`] scope → [`set_page_rows`] global → `DEAL_PAGE_ROWS`
+/// env → [`DEFAULT_PAGE_ROWS`]; clamped to at least 1. Page size never
+/// changes results — only page counts and fault granularity.
+pub fn page_rows() -> usize {
+    let local = LOCAL_PAGE_ROWS.with(|c| c.get());
+    if local != PAGE_ROWS_UNSET {
+        return local.max(1);
+    }
+    let global = GLOBAL_PAGE_ROWS.load(Ordering::Relaxed);
+    if global != PAGE_ROWS_UNSET {
+        return global.max(1);
+    }
+    env_page_rows().max(1)
+}
+
+/// Parse a byte count with optional binary suffix: `4096`, `256k`,
+/// `64m`, `2g` (also `kb`/`kib` spellings, case-insensitive). Used by the
+/// `storage.budget_bytes` config key, the `--mem-budget` CLI flag, and
+/// the `DEAL_MEM_BUDGET` env var.
+pub fn parse_bytes(s: &str) -> crate::Result<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    const SUFFIXES: &[(&str, u64)] = &[
+        ("gib", 1 << 30),
+        ("mib", 1 << 20),
+        ("kib", 1 << 10),
+        ("gb", 1 << 30),
+        ("mb", 1 << 20),
+        ("kb", 1 << 10),
+        ("g", 1 << 30),
+        ("m", 1 << 20),
+        ("k", 1 << 10),
+        ("b", 1),
+    ];
+    let (num, mult) = SUFFIXES
+        .iter()
+        .find_map(|&(suf, mult)| t.strip_suffix(suf).map(|n| (n.trim(), mult)))
+        .unwrap_or((t.as_str(), 1));
+    anyhow::ensure!(!num.is_empty(), "empty byte count '{}'", s);
+    let n: u64 = num
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad byte count '{}'", s))?;
+    n.checked_mul(mult)
+        .ok_or_else(|| anyhow::anyhow!("byte count '{}' overflows u64", s))
+}
+
+// ---------------------------------------------------------- Ctx adapters
+
+/// Drain a paged scope's pending simulated I/O time into `ctx`'s clock
+/// and mirror the cache's resident-byte delta into the rank's
+/// `MemTracker`. Call after a batch of storage operations on the
+/// machine's main thread. Server threads never call this: they drain
+/// their own I/O inline (the `*_shared` helpers return it) and advance
+/// their own clock via `ServerCtx::advance`, but never touch the rank
+/// tracker — the alloc/free ledger stays single-writer.
+pub fn charge_main(ctx: &mut Ctx, cache: &SharedPageCache) {
+    let io = cache.with(|c| {
+        c.sync_mem(&mut ctx.mem);
+        c.take_io_secs()
+    });
+    ctx.advance(io);
+}
+
+/// Close a paged scope: drop every cached frame (no write-back — scope
+/// files are dead), free the tracked resident bytes, and absorb the
+/// scope's storage counters into the machine's metrics. The cache can be
+/// reused for another scope afterwards.
+pub fn absorb_scope(ctx: &mut Ctx, cache: &SharedPageCache) {
+    let (io, stats) = cache.with(|c| {
+        c.drop_all_frames();
+        c.sync_mem(&mut ctx.mem);
+        let stats = c.take_stats();
+        (c.take_io_secs(), stats)
+    });
+    ctx.advance(io);
+    ctx.metrics.storage.add(&stats);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_bytes_suffixes() {
+        assert_eq!(parse_bytes("4096").unwrap(), 4096);
+        assert_eq!(parse_bytes("256k").unwrap(), 256 << 10);
+        assert_eq!(parse_bytes("64m").unwrap(), 64 << 20);
+        assert_eq!(parse_bytes("2g").unwrap(), 2 << 30);
+        assert_eq!(parse_bytes("64MB").unwrap(), 64 << 20);
+        assert_eq!(parse_bytes("64MiB").unwrap(), 64 << 20);
+        assert_eq!(parse_bytes(" 8 k ").unwrap(), 8 << 10);
+        assert_eq!(parse_bytes("123b").unwrap(), 123);
+        assert!(parse_bytes("").is_err());
+        assert!(parse_bytes("m").is_err());
+        assert!(parse_bytes("1.5g").is_err());
+        assert!(parse_bytes("99999999999999999999g").is_err());
+    }
+
+    #[test]
+    fn budget_chain_resolution_order() {
+        with_mem_budget(1234, || {
+            assert_eq!(mem_budget(), 1234);
+            with_mem_budget(0, || assert_eq!(mem_budget(), 0, "0 = unbounded, still a value"));
+            assert_eq!(mem_budget(), 1234);
+        });
+        // outside any scope: global/env/default — just resolvable
+        let _ = mem_budget();
+    }
+
+    #[test]
+    fn page_rows_chain_clamps_to_one() {
+        with_page_rows(7, || assert_eq!(page_rows(), 7));
+        with_page_rows(0, || assert_eq!(page_rows(), 1, "granularity clamps to >= 1"));
+        assert!(page_rows() >= 1);
+    }
+}

@@ -1,0 +1,328 @@
+//! The typed tiers over the page cache: [`PagedMatrix`] (feature and
+//! activation rows) and [`PagedCsr`] (layer-graph adjacency bands).
+//!
+//! Both are thin descriptors — the bytes live in a [`PageCache`]-owned
+//! [`PageFile`](super::PageFile) — so they are `Copy`-cheap to pass
+//! around and safe to share with a feature-server thread alongside a
+//! [`SharedPageCache`] clone.
+//!
+//! [`PagedCsr`] keeps its `indptr` index RAM-resident (8 bytes per row —
+//! every out-of-core graph system keeps the index hot) and pages the
+//! edge payload as an `n_edges × 2` grid of `[source-id bits, weight]`
+//! rows: node ids travel as `f32::from_bits` bit patterns, which the
+//! page file round-trips exactly (no float arithmetic ever touches
+//! them).
+
+use crate::graph::{Csr, NodeId};
+use crate::tensor::Matrix;
+use crate::Result;
+
+use super::cache::{FileId, PageCache, SharedPageCache};
+
+/// A `rows × cols` f32 matrix stored in row-band pages behind a cache.
+#[derive(Clone, Copy, Debug)]
+pub struct PagedMatrix {
+    pub file: FileId,
+    pub rows: usize,
+    pub cols: usize,
+    pub page_rows: usize,
+}
+
+impl PagedMatrix {
+    /// A zero-filled paged matrix.
+    pub fn create(
+        cache: &mut PageCache,
+        tag: &str,
+        rows: usize,
+        cols: usize,
+        page_rows: usize,
+        fs: std::sync::Arc<crate::coordinator::SimFs>,
+    ) -> Result<PagedMatrix> {
+        let page_rows = page_rows.max(1);
+        let file = cache.create_file(tag, rows, cols, page_rows, fs)?;
+        Ok(PagedMatrix { file, rows, cols, page_rows })
+    }
+
+    /// Stage a resident matrix into a paged one, page by page (the pages
+    /// land dirty in the cache and spill to disk under budget pressure or
+    /// on flush — a working set larger than the budget streams through).
+    pub fn from_matrix(
+        cache: &mut PageCache,
+        tag: &str,
+        m: &Matrix,
+        page_rows: usize,
+        fs: std::sync::Arc<crate::coordinator::SimFs>,
+    ) -> Result<PagedMatrix> {
+        let pm = PagedMatrix::create(cache, tag, m.rows, m.cols, page_rows, fs)?;
+        for p in 0..pm.n_pages() {
+            let (lo, hi) = pm.page_row_range(p);
+            cache.write_page(pm.file, p, &m.data[lo * m.cols..hi * m.cols])?;
+        }
+        Ok(pm)
+    }
+
+    /// Number of pages.
+    pub fn n_pages(&self) -> usize {
+        self.rows.div_ceil(self.page_rows)
+    }
+
+    /// Row range `[lo, hi)` covered by page `p`.
+    pub fn page_row_range(&self, p: usize) -> (usize, usize) {
+        let lo = p * self.page_rows;
+        (lo, (lo + self.page_rows).min(self.rows))
+    }
+
+    /// Total bytes of the full grid (on the spill device).
+    pub fn nbytes(&self) -> u64 {
+        (self.rows * self.cols * 4) as u64
+    }
+
+    /// Bytes of one full page (the residency granularity).
+    pub fn page_nbytes(&self) -> u64 {
+        (self.page_rows * self.cols * 4) as u64
+    }
+
+    /// Write one row through the cache.
+    pub fn write_row(&self, cache: &mut PageCache, r: usize, row: &[f32]) -> Result<()> {
+        cache.write_row(self.file, r, row)
+    }
+
+    /// Write rows `[at, at + block.rows)` through the cache, page-aligned
+    /// writes taking the overwrite fast path.
+    pub fn write_rows(&self, cache: &mut PageCache, at: usize, block: &Matrix) -> Result<()> {
+        anyhow::ensure!(block.cols == self.cols, "width mismatch");
+        anyhow::ensure!(at + block.rows <= self.rows, "rows overrun");
+        let mut r = 0;
+        while r < block.rows {
+            let gr = at + r;
+            let page = gr / self.page_rows;
+            let (plo, phi) = self.page_row_range(page);
+            if gr == plo && at + block.rows >= phi {
+                // whole page covered: overwrite without faulting
+                cache.write_page(self.file, page, &block.data[r * self.cols..(r + phi - plo) * self.cols])?;
+                r += phi - plo;
+            } else {
+                cache.write_row(self.file, gr, block.row(r))?;
+                r += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy row `r` into `out`.
+    pub fn row_copy(&self, cache: &mut PageCache, r: usize, out: &mut [f32]) -> Result<()> {
+        cache.copy_row(self.file, r, out)
+    }
+
+    /// Gather rows by index into a resident matrix (the paged twin of
+    /// `Matrix::gather_rows` — same output for the same indices).
+    pub fn gather(&self, cache: &mut PageCache, idx: &[usize]) -> Result<Matrix> {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            cache.copy_row(self.file, r, out.row_mut(i))?;
+        }
+        Ok(out)
+    }
+
+    /// Assemble rows `[lo, hi)` into a resident matrix.
+    pub fn band(&self, cache: &mut PageCache, lo: usize, hi: usize) -> Result<Matrix> {
+        anyhow::ensure!(lo <= hi && hi <= self.rows, "bad band {}..{}", lo, hi);
+        let mut out = Matrix::zeros(hi - lo, self.cols);
+        for r in lo..hi {
+            cache.copy_row(self.file, r, out.row_mut(r - lo))?;
+        }
+        Ok(out)
+    }
+
+    /// Assemble the whole grid (tests / spilled-shard materialization).
+    pub fn to_matrix(&self, cache: &mut PageCache) -> Result<Matrix> {
+        self.band(cache, 0, self.rows)
+    }
+
+    // ---- SharedPageCache conveniences: lock, operate, drain I/O --------
+
+    /// [`PagedMatrix::gather`] through a shared cache; returns the
+    /// simulated I/O seconds this call incurred (charge them to the
+    /// calling thread's clock).
+    pub fn gather_shared(&self, cache: &SharedPageCache, idx: &[usize]) -> Result<(Matrix, f64)> {
+        cache.with(|c| {
+            let m = self.gather(c, idx)?;
+            Ok((m, c.take_io_secs()))
+        })
+    }
+
+    /// [`PagedMatrix::band`] through a shared cache (+ I/O seconds).
+    pub fn band_shared(&self, cache: &SharedPageCache, lo: usize, hi: usize) -> Result<(Matrix, f64)> {
+        cache.with(|c| {
+            let m = self.band(c, lo, hi)?;
+            Ok((m, c.take_io_secs()))
+        })
+    }
+}
+
+/// A CSR whose adjacency (source ids + per-edge weights) lives in paged
+/// row bands; the `indptr` index stays resident.
+#[derive(Clone, Debug)]
+pub struct PagedCsr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Resident row index: edges of row `r` are `indptr[r]..indptr[r+1]`.
+    pub indptr: Vec<u64>,
+    /// `n_edges × 2` paged grid of `[source-id bits, weight]`.
+    pub edges: PagedMatrix,
+}
+
+impl PagedCsr {
+    /// Stage a resident CSR (+ aligned per-edge weights) into the paged
+    /// form. `edges_per_page` is the adjacency band granularity.
+    pub fn from_csr(
+        cache: &mut PageCache,
+        tag: &str,
+        g: &Csr,
+        weights: &[f32],
+        edges_per_page: usize,
+        fs: std::sync::Arc<crate::coordinator::SimFs>,
+    ) -> Result<PagedCsr> {
+        anyhow::ensure!(weights.len() == g.n_edges(), "weights misaligned with edges");
+        let edges =
+            PagedMatrix::create(cache, tag, g.n_edges(), 2, edges_per_page.max(1), fs)?;
+        for p in 0..edges.n_pages() {
+            let (lo, hi) = edges.page_row_range(p);
+            let mut data = Vec::with_capacity((hi - lo) * 2);
+            for e in lo..hi {
+                data.push(f32::from_bits(g.indices[e]));
+                data.push(weights[e]);
+            }
+            cache.write_page(edges.file, p, &data)?;
+        }
+        Ok(PagedCsr {
+            n_rows: g.n_rows,
+            n_cols: g.n_cols,
+            indptr: g.indptr.clone(),
+            edges,
+        })
+    }
+
+    /// Total edge count.
+    pub fn n_edges(&self) -> usize {
+        self.edges.rows
+    }
+
+    /// Fetch row `r`'s adjacency into `srcs`/`ws` (cleared first), in CSR
+    /// order — the same source order the resident CSR iterates, so
+    /// accumulation over these edges is bit-identical to the in-memory
+    /// loop. Edges are copied out one touched *page frame* at a time
+    /// (O(pages) cache operations per row, not O(edges)).
+    pub fn row_edges(
+        &self,
+        cache: &mut PageCache,
+        r: usize,
+        srcs: &mut Vec<NodeId>,
+        ws: &mut Vec<f32>,
+    ) -> Result<()> {
+        srcs.clear();
+        ws.clear();
+        let (lo, hi) = (self.indptr[r] as usize, self.indptr[r + 1] as usize);
+        let mut e = lo;
+        while e < hi {
+            let page = e / self.edges.page_rows;
+            let (plo, phi) = self.edges.page_row_range(page);
+            let pend = hi.min(phi);
+            let frame = cache.read_page(self.edges.file, page)?;
+            for k in e..pend {
+                let off = (k - plo) * 2;
+                srcs.push(frame[off].to_bits());
+                ws.push(frame[off + 1]);
+            }
+            e = pend;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SimFs;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn fs() -> Arc<SimFs> {
+        SimFs::new(crate::storage::DEFAULT_SPILL_GBPS)
+    }
+
+    #[test]
+    fn matrix_roundtrip_and_band_bits() {
+        let mut rng = Rng::new(77);
+        let mut m = Matrix::random(33, 5, 1.0, &mut rng);
+        m.set(0, 0, -0.0); // sign of zero must survive
+        m.set(7, 3, f32::MIN_POSITIVE / 4.0); // subnormal
+        for page_rows in [1usize, 4, 64] {
+            let mut cache = PageCache::new(3 * (page_rows * 5 * 4) as u64);
+            let pm = PagedMatrix::from_matrix(&mut cache, "rt", &m, page_rows, fs()).unwrap();
+            let back = pm.to_matrix(&mut cache).unwrap();
+            let a: Vec<u32> = m.data.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = back.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "page_rows={}", page_rows);
+            let band = pm.band(&mut cache, 5, 19).unwrap();
+            assert_eq!(band, m.slice_rows(5, 19));
+            let gathered = pm.gather(&mut cache, &[31, 0, 7, 7]).unwrap();
+            assert_eq!(gathered, m.gather_rows(&[31, 0, 7, 7]));
+        }
+    }
+
+    #[test]
+    fn write_rows_spans_pages() {
+        let mut cache = PageCache::new(0);
+        let pm = PagedMatrix::create(&mut cache, "wr", 10, 2, 4, fs()).unwrap();
+        let mut rng = Rng::new(5);
+        let block = Matrix::random(7, 2, 1.0, &mut rng);
+        pm.write_rows(&mut cache, 2, &block).unwrap(); // straddles pages 0..2
+        let full = pm.to_matrix(&mut cache).unwrap();
+        assert_eq!(full.slice_rows(2, 9), block);
+        assert_eq!(full.row(0), &[0.0, 0.0]);
+        assert_eq!(full.row(9), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn paged_csr_matches_resident_csr() {
+        let edges: Vec<(NodeId, NodeId)> =
+            vec![(1, 0), (2, 0), (0, 1), (2, 2), (1, 2), (0, 2), (2, 0)];
+        let g = Csr::from_edges(3, &edges);
+        let w: Vec<f32> = (0..g.n_edges()).map(|e| 0.5 + e as f32).collect();
+        for epp in [1usize, 3, 100] {
+            let mut cache = PageCache::new(4 * (epp * 2 * 4) as u64);
+            let pg = PagedCsr::from_csr(&mut cache, "csr", &g, &w, epp, fs()).unwrap();
+            assert_eq!(pg.n_edges(), g.n_edges());
+            let (mut srcs, mut ws) = (Vec::new(), Vec::new());
+            for r in 0..g.n_rows {
+                pg.row_edges(&mut cache, r, &mut srcs, &mut ws).unwrap();
+                let (lo, hi) = (g.indptr[r] as usize, g.indptr[r + 1] as usize);
+                assert_eq!(srcs, &g.indices[lo..hi], "row {} (epp {})", r, epp);
+                assert_eq!(ws, &w[lo..hi]);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_helpers_report_io() {
+        let shared = SharedPageCache::new(0);
+        let mut rng = Rng::new(9);
+        let m = Matrix::random(16, 4, 1.0, &mut rng);
+        let pm = shared
+            .with(|c| PagedMatrix::from_matrix(c, "sh", &m, 4, fs()))
+            .unwrap();
+        // flush + drop so reads must fault (and therefore cost I/O)
+        shared.with(|c| {
+            c.flush().unwrap();
+            c.drop_all_frames();
+            let _ = c.take_io_secs();
+        });
+        let (band, io) = pm.band_shared(&shared, 0, 8).unwrap();
+        assert_eq!(band, m.slice_rows(0, 8));
+        assert!(io > 0.0, "cold band read must charge simulated I/O");
+        let (again, io2) = pm.band_shared(&shared, 0, 8).unwrap();
+        assert_eq!(again, band);
+        assert_eq!(io2, 0.0, "warm re-read is free");
+    }
+}

@@ -1,0 +1,242 @@
+//! Tempfile-backed page files: the spill device under the paged tiers.
+//!
+//! A [`PageFile`] is an `rows × cols` f32 grid stored row-major in a real
+//! temporary file, split into fixed-size row-band pages (`page_rows` rows
+//! each; the last page may be short). Reads and writes move real bytes
+//! through the filesystem *and* charge simulated I/O time through the
+//! existing [`SimFs`] cost model — the spill device is a link with an
+//! aggregate bandwidth, exactly like the shared feature filesystem, just
+//! (by default) an NVMe-class faster one
+//! ([`DEFAULT_SPILL_GBPS`](crate::storage::DEFAULT_SPILL_GBPS)).
+//!
+//! Values round-trip bit-exactly: f32s are stored as their little-endian
+//! bit patterns, so a page read back after eviction is indistinguishable
+//! from the page that was written — the foundation of the storage
+//! determinism contract (eviction changes I/O counts, never values).
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::SimFs;
+use crate::Result;
+
+/// Process-wide uniquifier for spill-file names (many ranks and scopes
+/// create files concurrently).
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn spill_path(tag: &str) -> PathBuf {
+    let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "deal-spill-{}-{}-{}.bin",
+        std::process::id(),
+        seq,
+        tag
+    ))
+}
+
+/// A tempfile-backed `rows × cols` f32 grid in fixed row-band pages.
+/// Deleted from disk on drop.
+pub struct PageFile {
+    path: PathBuf,
+    file: File,
+    /// Total rows in the grid.
+    pub rows: usize,
+    /// Columns per row.
+    pub cols: usize,
+    /// Rows per page (last page may be short).
+    pub page_rows: usize,
+    fs: Arc<SimFs>,
+    /// Raw bytes written to / read from the backing file.
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+}
+
+impl PageFile {
+    /// Create a zero-filled `rows × cols` page file under the system temp
+    /// directory. `tag` names the file for debuggability; `fs` is the
+    /// simulated spill device the I/O time is charged to.
+    pub fn create(
+        tag: &str,
+        rows: usize,
+        cols: usize,
+        page_rows: usize,
+        fs: Arc<SimFs>,
+    ) -> Result<PageFile> {
+        anyhow::ensure!(page_rows >= 1, "page_rows must be >= 1");
+        let path = spill_path(tag);
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)?;
+        // Pre-size so unwritten pages read back as zeros (set_len
+        // zero-fills the extension).
+        file.set_len((rows * cols * 4) as u64)?;
+        Ok(PageFile {
+            path,
+            file,
+            rows,
+            cols,
+            page_rows,
+            fs,
+            bytes_written: 0,
+            bytes_read: 0,
+        })
+    }
+
+    /// Number of pages ( ⌈rows / page_rows⌉; 0 for an empty grid).
+    pub fn n_pages(&self) -> usize {
+        self.rows.div_ceil(self.page_rows)
+    }
+
+    /// Row range `[lo, hi)` covered by page `p`.
+    pub fn page_row_range(&self, p: usize) -> (usize, usize) {
+        let lo = p * self.page_rows;
+        (lo, (lo + self.page_rows).min(self.rows))
+    }
+
+    /// Elements in page `p` (short for the last page).
+    pub fn page_len(&self, p: usize) -> usize {
+        let (lo, hi) = self.page_row_range(p);
+        (hi - lo) * self.cols
+    }
+
+    /// Bytes page `p` occupies on the spill device.
+    pub fn page_nbytes(&self, p: usize) -> u64 {
+        self.page_len(p) as u64 * 4
+    }
+
+    /// Total bytes of the full grid.
+    pub fn nbytes(&self) -> u64 {
+        (self.rows * self.cols * 4) as u64
+    }
+
+    /// Charge `bytes` of traffic to the spill device; returns the
+    /// transfer's duration (`SimFs::charge`: the shared device backlog
+    /// advances so concurrent files serialize, but no file is ever
+    /// re-charged backlog another file already paid for).
+    fn charge(&mut self, bytes: u64) -> f64 {
+        self.fs.charge(bytes)
+    }
+
+    /// Read page `p` into `out` (clearing it first). Returns the
+    /// simulated I/O seconds charged.
+    pub fn read_page(&mut self, p: usize, out: &mut Vec<f32>) -> Result<f64> {
+        let len = self.page_len(p);
+        let bytes = len as u64 * 4;
+        let mut buf = vec![0u8; len * 4];
+        self.file
+            .seek(SeekFrom::Start((p * self.page_rows * self.cols * 4) as u64))?;
+        self.file.read_exact(&mut buf)?;
+        out.clear();
+        out.reserve(len);
+        for c in buf.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        self.bytes_read += bytes;
+        Ok(self.charge(bytes))
+    }
+
+    /// Write page `p` from `data` (must be exactly the page's length).
+    /// Returns the simulated I/O seconds charged.
+    pub fn write_page(&mut self, p: usize, data: &[f32]) -> Result<f64> {
+        let len = self.page_len(p);
+        anyhow::ensure!(
+            data.len() == len,
+            "page {} holds {} elements, got {}",
+            p,
+            len,
+            data.len()
+        );
+        let bytes = len as u64 * 4;
+        let mut buf = Vec::with_capacity(len * 4);
+        for v in data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.file
+            .seek(SeekFrom::Start((p * self.page_rows * self.cols * 4) as u64))?;
+        self.file.write_all(&buf)?;
+        self.bytes_written += bytes;
+        Ok(self.charge(bytes))
+    }
+
+    /// Sync written data to the backing file (explicit durability point;
+    /// the cache's `flush` writes dirty pages first, then calls this).
+    /// `sync_data` — `File`'s `Write::flush` is a no-op.
+    pub fn sync(&mut self) -> Result<()> {
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for PageFile {
+    // manual impl: `SimFs` (a mutex'd timeline) carries no Debug
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PageFile {{ path: {:?}, rows: {}, cols: {}, page_rows: {} }}",
+            self.path, self.rows, self.cols, self.page_rows
+        )
+    }
+}
+
+impl Drop for PageFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fs() -> Arc<SimFs> {
+        SimFs::new(crate::storage::DEFAULT_SPILL_GBPS)
+    }
+
+    #[test]
+    fn page_geometry() {
+        let f = PageFile::create("geom", 10, 3, 4, fs()).unwrap();
+        assert_eq!(f.n_pages(), 3);
+        assert_eq!(f.page_row_range(0), (0, 4));
+        assert_eq!(f.page_row_range(2), (8, 10), "last page is short");
+        assert_eq!(f.page_len(2), 6);
+        assert_eq!(f.nbytes(), 120);
+        let empty = PageFile::create("geom0", 0, 3, 4, fs()).unwrap();
+        assert_eq!(empty.n_pages(), 0);
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_and_charges_io() {
+        let mut f = PageFile::create("rt", 6, 2, 4, fs()).unwrap();
+        // include sign-of-zero and subnormals: bit patterns must survive
+        let page0 = vec![1.5, -0.0, f32::MIN_POSITIVE / 2.0, -3.25e-7, 0.0, 7.0, -1.0, 2.0];
+        let io_w = f.write_page(0, &page0).unwrap();
+        assert!(io_w > 0.0, "writes cost simulated time");
+        let mut back = Vec::new();
+        let io_r = f.read_page(0, &mut back).unwrap();
+        assert!(io_r > 0.0);
+        let a: Vec<u32> = page0.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = back.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "bit-exact round trip");
+        // unwritten (short) last page reads back as zeros
+        f.read_page(1, &mut back).unwrap();
+        assert_eq!(back, vec![0.0; 4]);
+        assert_eq!(f.bytes_written, 32);
+        assert_eq!(f.bytes_read, 32 + 16);
+        // wrong-size write is rejected
+        assert!(f.write_page(1, &[0.0; 8]).is_err());
+    }
+
+    #[test]
+    fn file_is_removed_on_drop() {
+        let path = {
+            let f = PageFile::create("drop", 2, 2, 2, fs()).unwrap();
+            f.path.clone()
+        };
+        assert!(!path.exists());
+    }
+}

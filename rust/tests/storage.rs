@@ -1,0 +1,230 @@
+//! Out-of-core storage parity suite (DESIGN.md §Out-of-core-storage).
+//!
+//! The contract under test: at every byte budget, page size, and thread
+//! count, the paged tiers produce **bit-identical** results to the
+//! in-memory path — eviction order may change page-fault counts and
+//! simulated I/O time, never values — and the deterministic logical-clock
+//! LRU gives monotone non-increasing fault counts as the budget grows.
+//!
+//! Budgets and page sizes here are pinned with the thread-local knob
+//! scopes (`with_mem_budget` / `with_page_rows`), so the sweep is immune
+//! to the process-global and `DEAL_MEM_BUDGET` env settings CI uses.
+
+use deal::config::DealConfig;
+use deal::coordinator::{Pipeline, SimFs};
+use deal::graph::datasets;
+use deal::runtime::par;
+use deal::storage::{with_mem_budget, with_page_rows, PageCache, PagedMatrix};
+use deal::tensor::Matrix;
+use deal::util::rng::Rng;
+
+fn small_cfg(kind: &str, prep: &str) -> DealConfig {
+    let mut cfg = DealConfig::default();
+    cfg.dataset.name = "products-sim".into();
+    cfg.dataset.scale = 1.0 / 256.0; // 256 nodes, 100-dim features
+    cfg.cluster.machines = 4;
+    cfg.cluster.feature_parts = 2;
+    cfg.model.kind = kind.into();
+    cfg.model.layers = 2;
+    cfg.model.fanout = 5;
+    cfg.exec.feature_prep = prep.into();
+    cfg
+}
+
+fn run_pipeline(cfg: &DealConfig, budget: u64, page_rows: usize) -> deal::coordinator::RunReport {
+    with_mem_budget(budget, || {
+        with_page_rows(page_rows, || Pipeline::new(cfg.clone()).run().unwrap())
+    })
+}
+
+/// The acceptance sweep: GCN (fused prep) and GAT (redistribute) runs
+/// under byte budgets smaller than the dataset's feature table produce
+/// embeddings bit-identical to the unbounded in-memory run, at every
+/// page granularity.
+#[test]
+fn e2e_bit_identical_across_budgets_and_page_sizes() {
+    // feature table: 256 × 100 × 4 = 100 KiB; budgets sit well below it
+    let table_bytes =
+        datasets::feature_table_bytes(datasets::spec("products-sim").unwrap(), 1.0 / 256.0);
+    let budgets = [table_bytes / 6, table_bytes / 2];
+    for (kind, prep) in [("gcn", "fused"), ("gcn", "redistribute"), ("gat", "redistribute")] {
+        let cfg = small_cfg(kind, prep);
+        let base = run_pipeline(&cfg, 0, 64); // unbounded = in-memory path
+        let base_emb = base.embeddings.as_ref().unwrap();
+        for &budget in &budgets {
+            assert!(budget < table_bytes, "budget must undercut the feature table");
+            for page_rows in [1usize, 64, 4096] {
+                let report = run_pipeline(&cfg, budget, page_rows);
+                assert_eq!(
+                    report.embeddings.as_ref().unwrap(),
+                    base_emb,
+                    "{}/{} diverged at budget {} page_rows {}",
+                    kind,
+                    prep,
+                    budget,
+                    page_rows
+                );
+            }
+        }
+    }
+}
+
+/// Same contract across intra-rank pool sizes: the paged path is
+/// bit-identical at every thread count (and to the in-memory run).
+#[test]
+fn e2e_bit_identical_across_threads() {
+    let cfg = small_cfg("gcn", "fused");
+    let base = par::with_threads(1, || run_pipeline(&cfg, 0, 64));
+    let base_emb = base.embeddings.as_ref().unwrap();
+    for threads in [1usize, 4] {
+        for budget in [16 << 10, 0u64] {
+            let report = par::with_threads(threads, || run_pipeline(&cfg, budget, 64));
+            assert_eq!(
+                report.embeddings.as_ref().unwrap(),
+                base_emb,
+                "diverged at threads {} budget {}",
+                threads,
+                budget
+            );
+        }
+    }
+}
+
+/// Storage metrics surface per rank, residency honors the budget (+ one
+/// page per active stream), and the unbounded run never evicts.
+#[test]
+fn budget_bounds_residency_and_metrics_surface() {
+    let cfg = small_cfg("gcn", "fused");
+    let page_rows = 16usize;
+    let budget = 8u64 << 10; // 8 KiB — far below the per-rank tiles
+    let report = run_pipeline(&cfg, budget, page_rows);
+    let infer = report
+        .stages
+        .0
+        .iter()
+        .find(|s| s.name == "inference")
+        .and_then(|s| s.cluster.as_ref())
+        .expect("inference cluster report");
+    assert!(infer.total_page_faults() > 0, "tiny budget must fault");
+    assert!(infer.total_spill_bytes() > 0, "tiny budget must move spill bytes");
+    // page bytes bound: fused pages are page_rows × 100-dim f32 rows
+    let page_bytes = (page_rows * 100 * 4) as u64;
+    for (rank, m) in infer.machines.iter().enumerate() {
+        assert_eq!(m.storage.budget_bytes, budget, "rank {} budget recorded", rank);
+        assert!(
+            m.storage.peak_resident_bytes <= budget.max(page_bytes) + page_bytes,
+            "rank {} resident {} exceeds budget {} + page {}",
+            rank,
+            m.storage.peak_resident_bytes,
+            budget,
+            page_bytes
+        );
+        assert!(m.storage.evictions > 0, "rank {} must evict under 8 KiB", rank);
+    }
+    assert_eq!(infer.total_underflows(), 0, "alloc/free ledgers must balance");
+    assert!(infer.summary().contains("faults="));
+
+    // unbounded: the engine is bypassed entirely — no paging at all
+    let free = run_pipeline(&cfg, 0, page_rows);
+    let infer_free = free
+        .stages
+        .0
+        .iter()
+        .find(|s| s.name == "inference")
+        .and_then(|s| s.cluster.as_ref())
+        .unwrap();
+    assert_eq!(infer_free.total_page_faults(), 0);
+    assert_eq!(infer_free.total_spill_bytes(), 0);
+}
+
+/// The named out-of-core dataset: a papers-xl run under a budget smaller
+/// than its (scaled) feature table completes and matches the unbounded
+/// run bit for bit.
+#[test]
+fn papers_xl_runs_under_budget() {
+    let mut cfg = DealConfig::default();
+    cfg.dataset.name = "papers-xl".into();
+    cfg.dataset.scale = 1.0 / 512.0; // 512 nodes at test scale
+    cfg.cluster.machines = 4;
+    cfg.cluster.feature_parts = 2;
+    cfg.model.layers = 2;
+    cfg.model.fanout = 5;
+    cfg.exec.feature_prep = "fused".into();
+    let table_bytes =
+        datasets::feature_table_bytes(datasets::spec("papers-xl").unwrap(), 1.0 / 512.0);
+    let base = run_pipeline(&cfg, 0, 64);
+    let report = run_pipeline(&cfg, table_bytes / 8, 64);
+    assert_eq!(report.embeddings.unwrap(), *base.embeddings.as_ref().unwrap());
+}
+
+/// LRU is a stack algorithm: for a fixed access sequence, fault counts
+/// are monotone non-increasing as the budget grows — per page size.
+#[test]
+fn fault_counts_monotone_in_budget() {
+    let mut rng = Rng::new(31);
+    let m = Matrix::random(512, 8, 1.0, &mut rng);
+    // a deterministic, re-visiting access pattern
+    let pattern: Vec<usize> = (0..2048).map(|i| (i * 97 + (i * i) % 13) % 512).collect();
+    for page_rows in [1usize, 64, 4096] {
+        let page_bytes = (page_rows.min(512) * 8 * 4) as u64;
+        let mut last_faults = u64::MAX;
+        for mult in [1u64, 2, 4, 8, 0] {
+            // 0 = unbounded (every page fits)
+            let budget = if mult == 0 { 0 } else { mult * page_bytes };
+            let mut cache = PageCache::new(budget);
+            let fs = SimFs::new(deal::storage::DEFAULT_SPILL_GBPS);
+            let pm = PagedMatrix::from_matrix(&mut cache, "mono", &m, page_rows, fs).unwrap();
+            cache.flush().unwrap();
+            cache.drop_all_frames();
+            let _ = cache.take_stats(); // reset staging counters
+            let mut buf = vec![0.0f32; 8];
+            for &r in &pattern {
+                pm.row_copy(&mut cache, r, &mut buf).unwrap();
+                assert_eq!(buf, m.row(r), "row {} corrupted", r);
+            }
+            let faults = cache.stats().page_faults;
+            assert!(
+                faults <= last_faults,
+                "faults {} grew over {} at budget {} (page_rows {})",
+                faults,
+                last_faults,
+                budget,
+                page_rows
+            );
+            last_faults = faults;
+        }
+        // unbounded: exactly one fault per distinct touched page
+        let touched: std::collections::HashSet<usize> =
+            pattern.iter().map(|r| r / page_rows).collect();
+        assert_eq!(last_faults, touched.len() as u64, "page_rows {}", page_rows);
+    }
+}
+
+/// The serving spill tier matches resident serving byte-for-byte while
+/// keeping the new epoch's residency under budget (double-buffer on
+/// disk).
+#[test]
+fn spilled_serving_epoch_matches_resident() {
+    use deal::serve::{ShardedTable, TableCell};
+    let mut rng = Rng::new(77);
+    let full = Matrix::random(300, 16, 1.0, &mut rng);
+    let resident = ShardedTable::from_full(&full, 4, 0);
+    let budget = 4 << 10; // 4 KiB of a 18.75 KiB table
+    let spilled = with_page_rows(8, || {
+        ShardedTable::from_full_spilled(&full, 4, 0, budget).unwrap()
+    });
+    let ids: Vec<u32> = (0..300u32).rev().step_by(7).collect();
+    assert_eq!(
+        spilled.try_gather(&ids).unwrap(),
+        resident.try_gather(&ids).unwrap(),
+        "spilled gathers must be bit-identical"
+    );
+    assert!(spilled.resident_bytes() <= budget + (8 * 16 * 4) as u64);
+    assert!(spilled.storage_counters().page_faults > 0);
+    // double-buffered swap: old epoch survives the publish untouched
+    let cell = TableCell::new(resident);
+    let pinned = cell.load();
+    cell.publish(spilled);
+    assert_eq!(pinned.to_full(), full);
+    assert_eq!(cell.load().to_full(), full);
+}
