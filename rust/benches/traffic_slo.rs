@@ -1,0 +1,356 @@
+//! Production traffic SLO gates (EXPERIMENTS.md §Traffic): replay a
+//! deterministic Zipfian trace **open-loop** against the serving pool —
+//! arrivals follow the trace schedule and never wait for completions, so
+//! queueing collapse shows up in the tail instead of being absorbed by a
+//! self-throttling driver — with delta-churn epochs published mid-flight,
+//! and gate the per-class p50/p99/p999 latencies and goodput.
+//!
+//! Three audits ride along, and stay **hard asserts even under lax
+//! mode** (they are correctness, not performance):
+//! - determinism: the same seed + config serializes byte-identically,
+//!   and a different seed diverges;
+//! - conservation: every dispatched request lands in exactly one
+//!   counter bucket (served / rejected / failed), per class;
+//! - parity: replaying the same trace `Sequenced` under every batch
+//!   policy yields identical per-request response digests.
+//!
+//! `DEAL_TRAFFIC_BENCH_LAX=1` downgrades only the latency/goodput SLO
+//! gates to warnings (CI smoke on contended runners).
+//!
+//! Emits `target/bench_results/BENCH_traffic.json`.
+//!
+//! Run: `cargo bench --bench traffic_slo [-- --full]`
+
+use std::sync::Arc;
+
+use deal::config::DealConfig;
+use deal::coordinator::delta::DeltaState;
+use deal::runtime::Native;
+use deal::serve::{BatchPolicy, PoolOpts, RequestClass, ServePool, ShardedTable, TableCell};
+use deal::traffic::{
+    churn_into_cell, replay, ReplayMode, ReplayOpts, ReplayReport, Trace, TraceConfig,
+};
+use deal::util::bench::{BenchArgs, Report, Table};
+use deal::util::human_secs;
+
+fn delta_cfg(scale: f64) -> DealConfig {
+    let mut cfg = DealConfig::default();
+    cfg.dataset.name = "products-sim".into();
+    cfg.dataset.scale = scale;
+    cfg.cluster.machines = 4;
+    cfg.cluster.feature_parts = 2;
+    cfg.model.layers = 2;
+    cfg.model.fanout = 5;
+    cfg
+}
+
+/// One SLO gate: `value` must stay on the right side of `limit`.
+struct Gate {
+    name: &'static str,
+    value: f64,
+    limit: f64,
+    /// true: pass iff value <= limit; false: pass iff value >= limit.
+    upper_bound: bool,
+}
+
+impl Gate {
+    fn pass(&self) -> bool {
+        if self.upper_bound {
+            self.value <= self.limit
+        } else {
+            self.value >= self.limit
+        }
+    }
+}
+
+fn gate(name: &'static str, value: f64, limit: f64, upper_bound: bool) -> Gate {
+    Gate { name, value, limit, upper_bound }
+}
+
+fn class_latency(rep: &ReplayReport, class: RequestClass, which: &str) -> f64 {
+    let lat = rep.stats.class(class).latency.as_ref();
+    match (lat, which) {
+        (Some(s), "p50") => s.p50,
+        (Some(s), "p99") => s.p99,
+        (Some(s), "p999") => s.p999,
+        _ => f64::INFINITY, // a class that served nothing fails its gates
+    }
+}
+
+/// `{:.6}`-formatted, or `null` for a non-finite value (a class that
+/// served nothing has no latency summary) — keeps the JSON parseable.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{:.6}", v)
+    } else {
+        "null".into()
+    }
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let lax = std::env::var("DEAL_TRAFFIC_BENCH_LAX").map_or(false, |v| v != "0");
+    // quick: 256-node table, 10k requests (the acceptance floor);
+    // full: 1024 nodes, 30k requests.
+    let (scale, requests, speed) =
+        args.pick((1.0 / 256.0, 10_000usize, 25.0), (1.0 / 64.0, 30_000, 20.0));
+    let (workers, queue, max_batch) = (4usize, 4096usize, 64usize);
+    let churn_batches = 4usize;
+
+    let mut report = Report::new("traffic_slo");
+
+    // ---- the table under test: a delta-capable embedding state ---------
+    // (the sweep below inits its own copies — churn mutates the state)
+    let mut state = DeltaState::init(delta_cfg(scale)).expect("delta state");
+    let n = state.embeddings().rows;
+    let d = state.embeddings().cols;
+
+    let tcfg = TraceConfig {
+        seed: 0x7F1C,
+        n_nodes: n,
+        requests,
+        base_rate: 2500.0,
+        zipf_s: 1.0,
+        similar_fraction: 0.25,
+        churn_batches,
+        ..TraceConfig::default()
+    };
+    report.note(format!(
+        "table {} × {} | {} requests @ {}x replay speed | zipf s={} | burst {}x | {} churn epochs | {} workers | queue {} | lax={}",
+        n, d, requests, speed, tcfg.zipf_s, tcfg.burst_factor, churn_batches, workers, queue, lax
+    ));
+
+    // ---- determinism audit (hard assert, lax or not) -------------------
+    let trace = Trace::generate(&tcfg);
+    let bytes = trace.to_bytes();
+    assert_eq!(
+        Trace::generate(&tcfg).to_bytes(),
+        bytes,
+        "same seed + config must serialize byte-identically"
+    );
+    let other = Trace::generate(&TraceConfig { seed: tcfg.seed ^ 1, ..tcfg.clone() });
+    assert_ne!(other.to_bytes(), bytes, "a distinct seed must produce a distinct trace");
+    assert_eq!(trace.n_requests(), requests);
+    assert_eq!(trace.n_churn(), churn_batches);
+    report.note(format!(
+        "determinism: trace of {} bytes is bit-identical across regeneration; seed^1 diverges",
+        bytes.len()
+    ));
+
+    // ---- open-loop replay with mid-flight churn ------------------------
+    let cell = Arc::new(TableCell::new(ShardedTable::from_inference_plan(
+        state.plan(),
+        state.embeddings(),
+        0,
+    )));
+    let opts = PoolOpts { workers, queue_capacity: queue, max_batch, ..PoolOpts::default() };
+    let pool = ServePool::spawn(Arc::clone(&cell), Arc::new(Native), opts);
+    let replay_opts = ReplayOpts { mode: ReplayMode::OpenLoop { speed }, keep_responses: false };
+    let rep = replay(&pool, &trace, &replay_opts, churn_into_cell(&mut state, &cell))
+        .expect("open-loop replay");
+    pool.shutdown();
+
+    // conservation audit (hard assert, lax or not)
+    assert_eq!(rep.dispatched, requests as u64);
+    assert_eq!(rep.stats.failed, 0, "no request may fail");
+    let mut total_submitted = 0u64;
+    for c in &rep.stats.per_class {
+        total_submitted += c.counters.submitted;
+        assert_eq!(
+            c.counters.accounted(),
+            c.counters.submitted,
+            "{} class leaked requests: {:?}",
+            c.class.name(),
+            c.counters
+        );
+    }
+    assert_eq!(total_submitted, requests as u64);
+    assert_eq!(rep.churn_epochs, (1..=churn_batches as u64).collect::<Vec<_>>());
+
+    let mut lat_table = Table::new(
+        "open-loop per-class latency (pool-side worker timestamps)",
+        &["class", "submitted", "served", "rejected", "p50", "p99", "p999"],
+    );
+    for class in RequestClass::ALL {
+        let c = rep.stats.class(class);
+        lat_table.row(&[
+            class.name().to_string(),
+            c.counters.submitted.to_string(),
+            c.counters.served.to_string(),
+            c.counters.rejected.to_string(),
+            human_secs(class_latency(&rep, class, "p50")),
+            human_secs(class_latency(&rep, class, "p99")),
+            human_secs(class_latency(&rep, class, "p999")),
+        ]);
+    }
+    report.add_table(lat_table);
+    report.note(format!(
+        "goodput {:.0} responses/s | wall {} | max dispatch lag {}",
+        rep.goodput,
+        human_secs(rep.wall_secs),
+        human_secs(rep.max_dispatch_lag_secs)
+    ));
+
+    // ---- SLO gates (generous absolute bounds; lax downgrades to warn) --
+    let served_frac = rep.stats.served as f64 / requests as f64;
+    let lat = |class: RequestClass, which: &str| class_latency(&rep, class, which);
+    let gates = vec![
+        gate("embed_p50_s", lat(RequestClass::Embed, "p50"), 0.010, true),
+        gate("embed_p99_s", lat(RequestClass::Embed, "p99"), 0.050, true),
+        gate("embed_p999_s", lat(RequestClass::Embed, "p999"), 0.250, true),
+        gate("similar_p50_s", lat(RequestClass::Similar, "p50"), 0.020, true),
+        gate("similar_p99_s", lat(RequestClass::Similar, "p99"), 0.100, true),
+        gate("similar_p999_s", lat(RequestClass::Similar, "p999"), 0.500, true),
+        gate("served_fraction", served_frac, 0.95, false),
+        gate("goodput_rps", rep.goodput, 1000.0, false),
+    ];
+    let mut gate_table = Table::new(
+        "SLO gates (DEAL_TRAFFIC_BENCH_LAX=1 downgrades failures to warnings)",
+        &["gate", "value", "bound", "pass"],
+    );
+    for g in &gates {
+        gate_table.row(&[
+            g.name.to_string(),
+            format!("{:.6}", g.value),
+            format!("{} {:.6}", if g.upper_bound { "<=" } else { ">=" }, g.limit),
+            if g.pass() { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    report.add_table(gate_table);
+    let failed_gates: Vec<&str> = gates.iter().filter(|g| !g.pass()).map(|g| g.name).collect();
+    if !failed_gates.is_empty() {
+        if lax {
+            eprintln!("[lax] SLO gates failed (contended runner?): {:?}", failed_gates);
+        } else {
+            panic!("SLO gates failed: {:?}", failed_gates);
+        }
+    }
+
+    // ---- policy parity sweep (Sequenced; hard assert, lax or not) ------
+    let policies = [
+        ("depth", BatchPolicy::DepthFirst),
+        ("deadline:200", BatchPolicy::Deadline { max_wait_us: 200 }),
+        ("size:256", BatchPolicy::SizeCapped { max_ids: 256 }),
+    ];
+    let mut sweep_table = Table::new(
+        "batch-policy parity sweep (Sequenced replay, same trace + initial state)",
+        &["policy", "served", "batches", "max batch", "coalesced", "wall"],
+    );
+    let mut baseline: Option<Vec<u64>> = None;
+    let mut violations = 0usize;
+    for (label, policy) in policies {
+        // a fresh state per policy: churn mutates it during the replay
+        let mut st = DeltaState::init(delta_cfg(scale)).expect("delta state");
+        let cell = Arc::new(TableCell::new(ShardedTable::from_inference_plan(
+            st.plan(),
+            st.embeddings(),
+            0,
+        )));
+        let opts = PoolOpts {
+            workers,
+            queue_capacity: requests,
+            max_batch,
+            policy,
+            ..PoolOpts::default()
+        };
+        let pool = ServePool::spawn(Arc::clone(&cell), Arc::new(Native), opts);
+        let seq = ReplayOpts { mode: ReplayMode::Sequenced, keep_responses: false };
+        let r = replay(&pool, &trace, &seq, churn_into_cell(&mut st, &cell))
+            .expect("sequenced replay");
+        let stats = pool.shutdown();
+        assert!(r.digests.iter().all(|&x| x != 0), "{}: queue sized for the whole trace", label);
+        match &baseline {
+            None => baseline = Some(r.digests),
+            Some(base) => {
+                violations += base.iter().zip(&r.digests).filter(|(a, b)| a != b).count();
+            }
+        }
+        sweep_table.row(&[
+            label.to_string(),
+            stats.served.to_string(),
+            stats.batches.to_string(),
+            stats.max_batch_seen.to_string(),
+            stats.coalesced_similar.to_string(),
+            human_secs(r.wall_secs),
+        ]);
+    }
+    report.add_table(sweep_table);
+    assert_eq!(violations, 0, "batch policies must produce bit-identical responses");
+    report.note(format!(
+        "parity: {} policies × {} requests, 0 digest violations",
+        policies.len(),
+        requests
+    ));
+
+    // ---- machine-readable summary (schema: EXPERIMENTS.md §Traffic) ----
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"traffic_slo\",\n");
+    json.push_str(&format!(
+        "  \"trace\": {{\n    \"seed\": {},\n    \"n_nodes\": {},\n    \"requests\": {},\n    \"base_rate\": {},\n    \"zipf_s\": {},\n    \"similar_fraction\": {},\n    \"burst_factor\": {},\n    \"churn_batches\": {},\n    \"duration_secs\": {:.6},\n    \"bytes\": {}\n  }},\n",
+        tcfg.seed,
+        n,
+        requests,
+        tcfg.base_rate,
+        tcfg.zipf_s,
+        tcfg.similar_fraction,
+        tcfg.burst_factor,
+        churn_batches,
+        trace.duration_secs(),
+        bytes.len()
+    ));
+    json.push_str(
+        "  \"determinism\": { \"bit_identical\": true, \"distinct_seed_diverges\": true },\n",
+    );
+    json.push_str(&format!(
+        "  \"open_loop\": {{\n    \"speed\": {},\n    \"wall_secs\": {:.6},\n    \"goodput_rps\": {:.1},\n    \"max_dispatch_lag_secs\": {:.6},\n    \"served\": {},\n    \"rejected\": {},\n    \"failed\": {},\n    \"churn_epochs\": {},\n",
+        speed,
+        rep.wall_secs,
+        rep.goodput,
+        rep.max_dispatch_lag_secs,
+        rep.stats.served,
+        rep.stats.rejected,
+        rep.stats.failed,
+        rep.churn_epochs.len()
+    ));
+    json.push_str("    \"classes\": {\n");
+    for (i, class) in RequestClass::ALL.into_iter().enumerate() {
+        let c = rep.stats.class(class);
+        json.push_str(&format!(
+            "      \"{}\": {{ \"submitted\": {}, \"served\": {}, \"rejected\": {}, \"failed\": {}, \"p50_s\": {}, \"p99_s\": {}, \"p999_s\": {} }}{}\n",
+            class.name(),
+            c.counters.submitted,
+            c.counters.served,
+            c.counters.rejected,
+            c.counters.failed,
+            json_f64(class_latency(&rep, class, "p50")),
+            json_f64(class_latency(&rep, class, "p99")),
+            json_f64(class_latency(&rep, class, "p999")),
+            if i + 1 < RequestClass::ALL.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("    }\n  },\n");
+    json.push_str("  \"slo\": [\n");
+    for (i, g) in gates.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{ \"gate\": \"{}\", \"value\": {}, \"bound\": {:.6}, \"upper_bound\": {}, \"pass\": {} }}{}\n",
+            g.name,
+            json_f64(g.value),
+            g.limit,
+            g.upper_bound,
+            g.pass(),
+            if i + 1 < gates.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"parity\": {{ \"policies\": [\"depth\", \"deadline:200\", \"size:256\"], \"requests\": {}, \"violations\": 0 }},\n",
+        requests
+    ));
+    json.push_str(&format!("  \"lax\": {}\n}}\n", lax));
+    let dir = std::path::PathBuf::from("target/bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    let json_path = dir.join("BENCH_traffic.json");
+    std::fs::write(&json_path, &json).expect("write BENCH_traffic.json");
+    report.note(format!("wrote {}", json_path.display()));
+    report.finish();
+}

@@ -26,6 +26,10 @@ USAGE:
   deal stream [--config FILE] [--set section.key=value]...
               [--batches N] [--churn F] [--feat-churn F] [--verify]
                                                           replay streaming updates
+  deal traffic [--config FILE] [--set section.key=value]...
+               [--requests N] [--rate R] [--policy P] [--speed S]
+               [--workers W] [--queue Q] [--sweep]
+               [--trace-out PATH] [--trace-in PATH]       replay production traffic
   deal gen-dataset --name NAME [--scale S] --out PATH     write an edge file
   deal gen-labelled [--nodes N] [--classes C] [--degree D]
                     [--dim F] [--seed S] --out DIR        write the SBM study set
@@ -44,6 +48,18 @@ fraction of feature rows), publishing a *delta epoch* per batch — only
 affected rows are re-inferred and patched into the serving table.
 `--verify` finishes with a from-scratch full recompute and asserts the
 incremental state matches it.
+
+`traffic` generates (or loads, `--trace-in`) a deterministic production
+trace — Zipfian key skew, diurnal + bursty Poisson arrivals, interleaved
+churn batches — and replays it against the serving pool in **open-loop**
+mode: requests are injected on the trace's schedule whether or not the
+pool keeps up, so overload sheds load at admission instead of silently
+slowing the generator. Reports per-class (embed/similar)
+p50/p99/p999 latency, goodput, and admission rejects. `--policy` picks
+the batch-formation policy (`depth`, `deadline[:US]`, `size[:IDS]`);
+`--sweep` instead replays the trace in sequenced mode under every policy
+and asserts bit-identical responses. `--trace-out` writes the versioned
+trace artifact (byte-identical for the same seed + config).
 
 Every computing command (run, serve, stream, gen-dataset, gen-labelled)
 accepts `--threads N`: the intra-rank pool size for the parallel kernels
@@ -74,7 +90,10 @@ Config keys (see rust/src/config.rs): dataset.name, dataset.scale,
 cluster.machines, cluster.feature_parts, cluster.bandwidth_gbps,
 cluster.latency_us, model.kind, model.layers, model.fanout, model.weights,
 exec.mode, exec.group_cols, exec.backend, exec.feature_prep, exec.threads,
-exec.seed, pipeline.chunk_rows, storage.budget_bytes, storage.page_rows
+exec.seed, pipeline.chunk_rows, storage.budget_bytes, storage.page_rows,
+traffic.requests, traffic.rate, traffic.zipf_s, traffic.diurnal,
+traffic.burst, traffic.similar_frac, traffic.churn_batches,
+traffic.policy, traffic.speed
 ";
 
 /// Entry point used by `main.rs`. Exits the process on error.
@@ -92,6 +111,7 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         Some("run") => cmd_run(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("stream") => cmd_stream(&args[1..]),
+        Some("traffic") => cmd_traffic(&args[1..]),
         Some("gen-dataset") => cmd_gen_dataset(&args[1..]),
         Some("gen-labelled") => cmd_gen_labelled(&args[1..]),
         Some("datasets") => cmd_datasets(),
@@ -425,6 +445,178 @@ fn cmd_stream(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Build the trace generator's config from the deal config: the
+/// `traffic.*` section plus `exec.seed` as the master seed and the live
+/// table's node count as the id universe. Trace-shape details without a
+/// config key (burst window length, ids per request, churn batch sizes)
+/// keep `TraceConfig`'s defaults.
+fn trace_config_from(cfg: &DealConfig, n_nodes: usize) -> crate::traffic::TraceConfig {
+    crate::traffic::TraceConfig {
+        seed: cfg.exec.seed,
+        n_nodes,
+        requests: cfg.traffic.requests,
+        base_rate: cfg.traffic.rate,
+        zipf_s: cfg.traffic.zipf_s,
+        diurnal_amplitude: cfg.traffic.diurnal,
+        burst_factor: cfg.traffic.burst,
+        similar_fraction: cfg.traffic.similar_frac,
+        churn_batches: cfg.traffic.churn_batches,
+        ..crate::traffic::TraceConfig::default()
+    }
+}
+
+fn cmd_traffic(args: &[String]) -> Result<()> {
+    use crate::coordinator::delta::DeltaState;
+    use crate::runtime::backend_from_config;
+    use crate::serve::{BatchPolicy, PoolOpts, ServePool, ShardedTable, TableCell};
+    use crate::traffic::{churn_into_cell, replay, ReplayMode, ReplayOpts, Trace};
+    use std::sync::Arc;
+
+    let mut cfg = cfg_from_args(args)?;
+    apply_threads(&cfg);
+    if let Some(v) = flag_value(args, "--requests") {
+        cfg.traffic.requests = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--rate") {
+        cfg.traffic.rate = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--policy") {
+        cfg.traffic.policy = v.into();
+    }
+    if let Some(v) = flag_value(args, "--speed") {
+        cfg.traffic.speed = v.parse()?;
+    }
+    let workers: usize = flag_value(args, "--workers").unwrap_or("4").parse()?;
+    let queue: usize = flag_value(args, "--queue").unwrap_or("1024").parse()?;
+    let sweep = args.iter().any(|a| a == "--sweep");
+    anyhow::ensure!(cfg.traffic.requests > 0, "traffic.requests must be > 0");
+    anyhow::ensure!(cfg.traffic.speed > 0.0, "traffic.speed must be > 0");
+    // validate early, before the pipeline runs
+    let policy = BatchPolicy::parse(&cfg.traffic.policy)?;
+
+    println!(
+        "deal traffic: dataset={} scale={} machines={} backend={} workers={} queue={} policy={}",
+        cfg.dataset.name,
+        cfg.dataset.scale,
+        cfg.cluster.machines,
+        cfg.exec.backend,
+        workers,
+        queue,
+        policy.name(),
+    );
+
+    // Baseline state: the trace's churn events mutate it mid-replay.
+    let mut state = DeltaState::init(cfg.clone())?;
+    let n = state.n_nodes();
+    let trace = match flag_value(args, "--trace-in") {
+        Some(p) => {
+            let t = Trace::load(std::path::Path::new(p))?;
+            anyhow::ensure!(
+                t.config.n_nodes == n,
+                "trace was generated for {} nodes but the table has {}",
+                t.config.n_nodes,
+                n
+            );
+            t
+        }
+        None => Trace::generate(&trace_config_from(&cfg, n)),
+    };
+    if let Some(p) = flag_value(args, "--trace-out") {
+        trace.save(std::path::Path::new(p))?;
+        println!("wrote trace artifact to {}", p);
+    }
+    println!(
+        "trace: {} requests + {} churn events over {:.2} simulated secs (zipf s={}, burst ×{})",
+        trace.n_requests(),
+        trace.n_churn(),
+        trace.duration_secs(),
+        trace.config.zipf_s,
+        trace.config.burst_factor,
+    );
+    let backend = backend_from_config(&cfg.exec.backend, &cfg.artifacts_dir())?;
+
+    if sweep {
+        // Parity sweep: the same trace, sequenced, under every policy —
+        // responses must be bit-identical (digest-equal) across them.
+        let mut baseline: Option<Vec<u64>> = None;
+        for spec in ["depth", "deadline:200", "size:256"] {
+            let policy = BatchPolicy::parse(spec)?;
+            // fresh deterministic state per policy: churn mutates it
+            let mut st = DeltaState::init(cfg.clone())?;
+            let table = ShardedTable::from_inference_plan(st.plan(), st.embeddings(), 0);
+            let cell = Arc::new(TableCell::new(table));
+            let pool = ServePool::spawn(
+                Arc::clone(&cell),
+                Arc::clone(&backend),
+                PoolOpts { workers, queue_capacity: queue, policy, ..PoolOpts::default() },
+            );
+            let opts = ReplayOpts { mode: ReplayMode::Sequenced, ..ReplayOpts::default() };
+            let rep = replay(&pool, &trace, &opts, churn_into_cell(&mut st, &cell))?;
+            let stats = pool.shutdown();
+            println!(
+                "policy {:<12} served={} batches={} max_batch={} coalesced_similar={}",
+                spec, stats.served, stats.batches, stats.max_batch_seen, stats.coalesced_similar,
+            );
+            match &baseline {
+                None => baseline = Some(rep.digests),
+                Some(b) => {
+                    let diverged = b.iter().zip(&rep.digests).filter(|(x, y)| x != y).count();
+                    anyhow::ensure!(
+                        diverged == 0,
+                        "policy {} changed {} of {} responses",
+                        spec,
+                        diverged,
+                        b.len()
+                    );
+                }
+            }
+        }
+        println!("parity: all policies produced bit-identical responses");
+        return Ok(());
+    }
+
+    // Open-loop replay: inject on the trace schedule, never waiting for
+    // completions; overload sheds at admission and shows up as rejects.
+    let table = ShardedTable::from_inference_plan(state.plan(), state.embeddings(), 0);
+    let cell = Arc::new(TableCell::new(table));
+    let pool = ServePool::spawn(
+        Arc::clone(&cell),
+        backend,
+        PoolOpts { workers, queue_capacity: queue, policy, ..PoolOpts::default() },
+    );
+    let opts = ReplayOpts {
+        mode: ReplayMode::OpenLoop { speed: cfg.traffic.speed },
+        ..ReplayOpts::default()
+    };
+    let rep = replay(&pool, &trace, &opts, churn_into_cell(&mut state, &cell))?;
+    for c in &rep.stats.per_class {
+        let (p50, p99, p999) = c
+            .latency
+            .as_ref()
+            .map_or((0.0, 0.0, 0.0), |l| (l.p50, l.p99, l.p999));
+        println!(
+            "class {:<8} submitted={:<6} served={:<6} rejected={:<5} failed={:<3} p50 {} | p99 {} | p999 {}",
+            c.class.name(),
+            c.counters.submitted,
+            c.counters.served,
+            c.counters.rejected,
+            c.counters.failed,
+            human_secs(p50),
+            human_secs(p99),
+            human_secs(p999),
+        );
+    }
+    println!(
+        "goodput {:.0} resp/s | wall {} | max dispatch lag {} | churn epochs {:?}",
+        rep.goodput,
+        human_secs(rep.wall_secs),
+        human_secs(rep.max_dispatch_lag_secs),
+        rep.churn_epochs,
+    );
+    anyhow::ensure!(rep.stats.failed == 0, "{} requests failed", rep.stats.failed);
+    Ok(())
+}
+
 /// Honor `--threads` on the config-less generator commands too.
 fn apply_threads_flag(args: &[String]) -> Result<()> {
     if let Some(t) = flag_value(args, "--threads") {
@@ -665,6 +857,52 @@ mod tests {
         let r = crate::storage::with_mem_budget(0, || dispatch(&args));
         crate::storage::set_mem_budget(u64::MAX);
         crate::storage::set_page_rows(usize::MAX);
+        r.unwrap();
+    }
+
+    #[test]
+    fn traffic_smoke() {
+        // tiny end-to-end: generate a 60-request trace with one churn
+        // batch over a 256-node table, write the artifact, replay it
+        // open-loop, then replay the saved trace in a 3-policy parity
+        // sweep (bit-identical responses asserted by the command)
+        let trace_path =
+            std::env::temp_dir().join(format!("deal-traffic-{}.trace", std::process::id()));
+        let base: Vec<String> = [
+            "traffic",
+            "--requests",
+            "60",
+            "--speed",
+            "200",
+            "--workers",
+            "2",
+            "--set",
+            "traffic.churn_batches=1",
+            "--set",
+            "dataset.scale=0.00390625",
+            "--set",
+            "model.layers=2",
+            "--set",
+            "model.fanout=5",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let mut open_loop = base.clone();
+        open_loop.extend(["--trace-out".into(), trace_path.display().to_string()]);
+        let mut sweep = base;
+        sweep.extend([
+            "--trace-in".into(),
+            trace_path.display().to_string(),
+            "--sweep".into(),
+        ]);
+        let r = crate::storage::with_mem_budget(0, || {
+            dispatch(&open_loop)?;
+            dispatch(&sweep)
+        });
+        crate::storage::set_mem_budget(u64::MAX);
+        crate::storage::set_page_rows(usize::MAX);
+        let _ = std::fs::remove_file(&trace_path);
         r.unwrap();
     }
 

@@ -38,6 +38,52 @@ impl StorageCounters {
     }
 }
 
+/// Per-service-class request counters — the serving-tier axis (one set
+/// per `serve::RequestClass`), as opposed to the per-machine axis of
+/// [`MachineMetrics`]. `ServePool` keeps one per class and the traffic
+/// harness (`traffic::replay`, `deal traffic`) reports SLO gates over
+/// them; the invariant the overload tests pin is conservation:
+/// `submitted == served + rejected + failed` once a workload drains —
+/// overload *rejects*, it never silently drops.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServiceClassCounters {
+    /// Requests offered to admission control.
+    pub submitted: u64,
+    /// Requests answered successfully.
+    pub served: u64,
+    /// Requests shed (queue full, id out of range, stale after shrink).
+    pub rejected: u64,
+    /// Requests answered with an error.
+    pub failed: u64,
+}
+
+impl ServiceClassCounters {
+    /// Fold another window's counters in.
+    pub fn add(&mut self, other: &ServiceClassCounters) {
+        self.submitted += other.submitted;
+        self.served += other.served;
+        self.rejected += other.rejected;
+        self.failed += other.failed;
+    }
+
+    /// Counters accumulated since `mark` (element-wise difference; the
+    /// mark must be an earlier snapshot of the same counter set).
+    pub fn since(&self, mark: &ServiceClassCounters) -> ServiceClassCounters {
+        ServiceClassCounters {
+            submitted: self.submitted - mark.submitted,
+            served: self.served - mark.served,
+            rejected: self.rejected - mark.rejected,
+            failed: self.failed - mark.failed,
+        }
+    }
+
+    /// `served + rejected + failed` — equals `submitted` once every
+    /// admitted request has been answered (the conservation invariant).
+    pub fn accounted(&self) -> u64 {
+        self.served + self.rejected + self.failed
+    }
+}
+
 /// Counters accumulated by one simulated machine.
 #[derive(Clone, Debug, Default)]
 pub struct MachineMetrics {
@@ -222,6 +268,17 @@ impl ClusterReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn service_class_counters_add_diff_and_conserve() {
+        let mut a = ServiceClassCounters { submitted: 10, served: 6, rejected: 3, failed: 1 };
+        assert_eq!(a.accounted(), a.submitted, "drained window conserves");
+        let mark = a;
+        a.add(&ServiceClassCounters { submitted: 5, served: 5, rejected: 0, failed: 0 });
+        let w = a.since(&mark);
+        assert_eq!(w, ServiceClassCounters { submitted: 5, served: 5, rejected: 0, failed: 0 });
+        assert_eq!(a.accounted(), 15);
+    }
 
     #[test]
     fn makespan_is_max_clock() {

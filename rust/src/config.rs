@@ -101,6 +101,34 @@ pub struct StorageCfg {
     pub page_rows: usize,
 }
 
+/// Traffic-harness knobs for `deal traffic` (`crate::traffic`;
+/// DESIGN.md §Traffic). These parameterize the generated trace and the
+/// replay; trace shape details (`zipf_s`, burst windows, …) live in
+/// `traffic::TraceConfig` with `exec.seed` as the master seed.
+#[derive(Clone, Debug)]
+pub struct TrafficCfg {
+    /// Requests in the generated trace.
+    pub requests: usize,
+    /// Base arrival rate, requests per simulated second.
+    pub rate: f64,
+    /// Zipf exponent of the key-popularity skew (0 = uniform).
+    pub zipf_s: f64,
+    /// Diurnal modulation amplitude in `[0, 1)`.
+    pub diurnal: f64,
+    /// Rate multiplier inside burst windows (1 = no bursts).
+    pub burst: f64,
+    /// Fraction of requests that are `Similar` queries.
+    pub similar_frac: f64,
+    /// Churn batches interleaved across the trace (0 = static graph).
+    pub churn_batches: usize,
+    /// Batch-formation policy spec (`depth`, `deadline[:US]`,
+    /// `size[:IDS]` — `serve::BatchPolicy::parse`).
+    pub policy: String,
+    /// Open-loop time compression: simulated seconds replayed per
+    /// wall-clock second.
+    pub speed: f64,
+}
+
 /// Root configuration.
 #[derive(Clone, Debug)]
 pub struct DealConfig {
@@ -110,6 +138,7 @@ pub struct DealConfig {
     pub exec: ExecCfg,
     pub pipeline: PipelineCfg,
     pub storage: StorageCfg,
+    pub traffic: TrafficCfg,
 }
 
 impl Default for DealConfig {
@@ -145,6 +174,17 @@ impl Default for DealConfig {
             storage: StorageCfg {
                 budget_bytes: 0, // unbounded: in-memory tiers, no paging
                 page_rows: crate::storage::DEFAULT_PAGE_ROWS,
+            },
+            traffic: TrafficCfg {
+                requests: 4096,
+                rate: 2000.0,
+                zipf_s: 1.0,
+                diurnal: 0.5,
+                burst: 4.0,
+                similar_frac: 0.25,
+                churn_batches: 2,
+                policy: "depth".into(),
+                speed: 20.0,
             },
         }
     }
@@ -192,6 +232,15 @@ impl DealConfig {
                 self.storage.page_rows = v.parse()?;
                 anyhow::ensure!(self.storage.page_rows >= 1, "storage.page_rows must be >= 1");
             }
+            "traffic.requests" => self.traffic.requests = v.parse()?,
+            "traffic.rate" => self.traffic.rate = v.parse()?,
+            "traffic.zipf_s" => self.traffic.zipf_s = v.parse()?,
+            "traffic.diurnal" => self.traffic.diurnal = v.parse()?,
+            "traffic.burst" => self.traffic.burst = v.parse()?,
+            "traffic.similar_frac" => self.traffic.similar_frac = v.parse()?,
+            "traffic.churn_batches" => self.traffic.churn_batches = v.parse()?,
+            "traffic.policy" => self.traffic.policy = v.into(),
+            "traffic.speed" => self.traffic.speed = v.parse()?,
             other => anyhow::bail!("unknown config key '{}'", other),
         }
         Ok(())
@@ -307,6 +356,20 @@ mod tests {
         assert_eq!(cfg.storage.page_rows, 64);
         assert!(cfg.set("storage.page_rows", "0").is_err());
         assert!(cfg.set("storage.budget_bytes", "lots").is_err());
+    }
+
+    #[test]
+    fn traffic_keys_parse() {
+        let mut cfg = DealConfig::default();
+        cfg.set("traffic.requests", "10000").unwrap();
+        cfg.set("traffic.rate", "2500").unwrap();
+        cfg.set("traffic.zipf_s", "1.2").unwrap();
+        cfg.set("traffic.policy", "deadline:500").unwrap();
+        cfg.set("traffic.speed", "50").unwrap();
+        assert_eq!(cfg.traffic.requests, 10_000);
+        assert_eq!(cfg.traffic.rate, 2500.0);
+        assert_eq!(cfg.traffic.policy, "deadline:500");
+        assert!(cfg.set("traffic.burst", "fast").is_err());
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub mod sampling;
 pub mod serve;
 pub mod storage;
 pub mod tensor;
+pub mod traffic;
 pub mod util;
 
 /// Crate-wide result type.

@@ -24,6 +24,69 @@ use crate::Result;
 
 use super::shard::ShardedTable;
 
+/// Batch-formation policy: *which queued requests coalesce into one
+/// batch*. Mirrors the Deal artifact's scheduler split
+/// (`BaseScheduler` / `RingScheduler` / `SrcSortScheduler`): request
+/// ordering/grouping is a first-class serving knob that trades latency
+/// against tile fullness — while the **results stay bit-identical**
+/// under every policy (the coalescing contract above), so policies can
+/// be swept under one replayed trace with response parity asserted
+/// (`traffic::replay`, `benches/traffic_slo.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// Greedy depth-first drain (the `BaseScheduler` analogue and the
+    /// historical behavior): pop one request, then take everything
+    /// already queued, up to `max_batch`. Minimum latency under light
+    /// load; batch depth tracks instantaneous queue depth.
+    #[default]
+    DepthFirst,
+    /// Deadline-driven: after the first request, hold the batch open up
+    /// to `max_wait_us` microseconds for stragglers (still capped by
+    /// `max_batch`). Trades a bounded latency add for fuller GEMM tiles
+    /// — the `RingScheduler` analogue (synchronize arrivals to fill the
+    /// pipeline).
+    Deadline { max_wait_us: u64 },
+    /// Size-capped: close the batch once the summed *id* count reaches
+    /// `max_ids` (the request that crosses the cap is included). Bounds
+    /// the per-batch gather width the way `SrcSortScheduler` bounds the
+    /// per-step source range, keeping worst-case batch service time flat
+    /// under bursts of wide requests.
+    SizeCapped { max_ids: usize },
+}
+
+impl BatchPolicy {
+    /// Parse a CLI/config spelling: `depth`, `deadline` / `deadline:US`,
+    /// `size` / `size:IDS`.
+    pub fn parse(s: &str) -> Result<BatchPolicy> {
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (s, None),
+        };
+        match name {
+            "depth" | "base" => Ok(BatchPolicy::DepthFirst),
+            "deadline" => Ok(BatchPolicy::Deadline {
+                max_wait_us: arg.map_or(Ok(200), str::parse)?,
+            }),
+            "size" => Ok(BatchPolicy::SizeCapped {
+                max_ids: arg.map_or(Ok(256), str::parse)?,
+            }),
+            other => anyhow::bail!(
+                "unknown batch policy '{}' (expected depth | deadline[:us] | size[:ids])",
+                other
+            ),
+        }
+    }
+
+    /// Short name for reports and sweep labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchPolicy::DepthFirst => "depth",
+            BatchPolicy::Deadline { .. } => "deadline",
+            BatchPolicy::SizeCapped { .. } => "size",
+        }
+    }
+}
+
 /// Ranking order shared by the sequential and batched paths: descending
 /// score, ascending node id on ties.
 #[inline]
@@ -152,6 +215,28 @@ mod tests {
     use crate::runtime::Native;
     use crate::serve::{EmbeddingServer, Request, Response};
     use crate::util::rng::Rng;
+
+    #[test]
+    fn batch_policy_parses_spellings() {
+        assert_eq!(BatchPolicy::parse("depth").unwrap(), BatchPolicy::DepthFirst);
+        assert_eq!(BatchPolicy::parse("base").unwrap(), BatchPolicy::DepthFirst);
+        assert_eq!(
+            BatchPolicy::parse("deadline").unwrap(),
+            BatchPolicy::Deadline { max_wait_us: 200 }
+        );
+        assert_eq!(
+            BatchPolicy::parse("deadline:750").unwrap(),
+            BatchPolicy::Deadline { max_wait_us: 750 }
+        );
+        assert_eq!(BatchPolicy::parse("size").unwrap(), BatchPolicy::SizeCapped { max_ids: 256 });
+        assert_eq!(
+            BatchPolicy::parse("size:64").unwrap(),
+            BatchPolicy::SizeCapped { max_ids: 64 }
+        );
+        assert!(BatchPolicy::parse("bogus").is_err());
+        assert!(BatchPolicy::parse("size:x").is_err());
+        assert_eq!(BatchPolicy::default().name(), "depth");
+    }
 
     #[test]
     fn top_k_orders_and_breaks_ties_by_id() {

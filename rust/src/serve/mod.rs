@@ -29,8 +29,8 @@ pub mod pool;
 pub mod refresh;
 pub mod shard;
 
-pub use batch::{top_k, SimilarBatch};
-pub use pool::{PoolOpts, PoolStats, ServePool, StatsMark, Ticket};
+pub use batch::{top_k, BatchPolicy, SimilarBatch};
+pub use pool::{ClassStats, PoolOpts, PoolStats, ServePool, StatsMark, Ticket};
 pub use refresh::{refresh_delta, DeltaRefreshReport, RefreshReport, Refresher, TableCell};
 pub use shard::ShardedTable;
 
@@ -50,12 +50,101 @@ pub enum Request {
     Similar { ids: Vec<u32>, k: usize },
 }
 
+impl Request {
+    /// The node ids this request touches (admission validation, batch
+    /// sizing under [`BatchPolicy::SizeCapped`]).
+    pub fn ids(&self) -> &[u32] {
+        match self {
+            Request::Embed(ids) => ids,
+            Request::Similar { ids, .. } => ids,
+        }
+    }
+
+    /// The request's service class (per-class latency accounting).
+    pub fn class(&self) -> RequestClass {
+        match self {
+            Request::Embed(_) => RequestClass::Embed,
+            Request::Similar { .. } => RequestClass::Similar,
+        }
+    }
+}
+
+/// Service class of a request — the axis the traffic harness reports
+/// latency percentiles and SLO gates on. `Embed` is the memory-bound
+/// gather path, `Similar` the GEMM-bound scoring path; a single p99 over
+/// the mix would let the cheap class mask tail collapse in the expensive
+/// one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestClass {
+    Embed,
+    Similar,
+}
+
+impl RequestClass {
+    /// Every class, in `index` order.
+    pub const ALL: [RequestClass; 2] = [RequestClass::Embed, RequestClass::Similar];
+
+    /// Dense index for per-class counter arrays.
+    pub fn index(self) -> usize {
+        match self {
+            RequestClass::Embed => 0,
+            RequestClass::Similar => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestClass::Embed => "embed",
+            RequestClass::Similar => "similar",
+        }
+    }
+}
+
 /// A response.
 #[derive(Clone, Debug)]
 pub enum Response {
     Embeddings(Matrix),
     /// Per query: (node id, score), best first.
     Similar(Vec<Vec<(u32, f32)>>),
+}
+
+/// Order-independent 64-bit digest of a response's exact bit content
+/// (FNV-1a over the structure; `f32` scores hashed by bit pattern).
+/// Replaying one trace under two batch-formation policies must produce
+/// equal digests per request — the parity contract `tests/properties.rs`
+/// and `benches/traffic_slo.rs` assert.
+pub fn response_digest(resp: &Response) -> u64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    match resp {
+        Response::Embeddings(m) => {
+            eat(b"E");
+            eat(&(m.rows as u64).to_le_bytes());
+            eat(&(m.cols as u64).to_le_bytes());
+            for v in &m.data {
+                eat(&v.to_bits().to_le_bytes());
+            }
+        }
+        Response::Similar(lists) => {
+            eat(b"S");
+            eat(&(lists.len() as u64).to_le_bytes());
+            for list in lists {
+                eat(&(list.len() as u64).to_le_bytes());
+                for &(id, score) in list {
+                    eat(&id.to_le_bytes());
+                    eat(&score.to_bits().to_le_bytes());
+                }
+            }
+        }
+    }
+    h
 }
 
 /// The single-copy reference serving table.

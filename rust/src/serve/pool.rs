@@ -12,17 +12,18 @@
 //! refresh swaps tear-free.
 
 use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
-use std::sync::mpsc::{Receiver, Sender, SyncSender, TrySendError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::cluster::metrics::ServiceClassCounters;
 use crate::runtime::Backend;
 use crate::util::stats::{Reservoir, Summary};
 use crate::Result;
 
-use super::batch::SimilarBatch;
+use super::batch::{BatchPolicy, SimilarBatch};
 use super::refresh::TableCell;
-use super::{Request, Response};
+use super::{Request, RequestClass, Response};
 
 /// Worker-pool configuration.
 #[derive(Clone, Copy, Debug)]
@@ -40,6 +41,10 @@ pub struct PoolOpts {
     /// sample of this many replies (memory stays O(1) on a long-lived
     /// pool while p50/p99 keep describing the whole reply stream).
     pub latency_reservoir: usize,
+    /// Batch-formation policy ([`BatchPolicy`]): which queued requests
+    /// coalesce into one batch. Every policy produces bit-identical
+    /// responses — only latency and grouping differ.
+    pub policy: BatchPolicy,
 }
 
 impl Default for PoolOpts {
@@ -50,6 +55,7 @@ impl Default for PoolOpts {
             max_batch: 64,
             start_paused: false,
             latency_reservoir: 1 << 16,
+            policy: BatchPolicy::DepthFirst,
         }
     }
 }
@@ -108,6 +114,14 @@ struct MetricsInner {
     /// percentiles keep describing the *whole* reply stream, however long
     /// the pool lives.
     latencies: Reservoir,
+    /// Per-class request counters, indexed by `RequestClass::index`.
+    /// Accounted at the pool (not by replay clients), so per-class
+    /// latency timestamps are the worker's — a slow trace collector can
+    /// never inflate a class's tail.
+    class_counts: [ServiceClassCounters; RequestClass::ALL.len()],
+    /// Per-class latency reservoirs (same observations as `latencies`,
+    /// split by class).
+    class_lat: [Reservoir; RequestClass::ALL.len()],
 }
 
 impl MetricsInner {
@@ -119,6 +133,11 @@ impl MetricsInner {
             max_batch_seen: 0,
             coalesced_similar: 0,
             latencies: Reservoir::new(reservoir_cap, LATENCY_RNG_SEED),
+            class_counts: Default::default(),
+            class_lat: [
+                Reservoir::new(reservoir_cap, LATENCY_RNG_SEED ^ 1),
+                Reservoir::new(reservoir_cap, LATENCY_RNG_SEED ^ 2),
+            ],
         }
     }
 }
@@ -135,6 +154,23 @@ pub struct StatsMark {
     /// Reply-stream position: replies observed after the mark carry a
     /// reservoir sequence number `>= latency_seen`.
     latency_seen: u64,
+    /// Per-class counter snapshot, indexed by `RequestClass::index`.
+    class_counts: [ServiceClassCounters; RequestClass::ALL.len()],
+    /// Per-class reply-stream positions.
+    class_latency_seen: [u64; RequestClass::ALL.len()],
+}
+
+/// Per-class serving statistics (one request class's slice of a
+/// [`PoolStats`] window).
+#[derive(Clone, Debug)]
+pub struct ClassStats {
+    pub class: RequestClass,
+    /// submitted / served / rejected / failed for this class; on a
+    /// drained window `counters.accounted() == counters.submitted`.
+    pub counters: ServiceClassCounters,
+    /// Enqueue-to-reply latency summary for this class (None before any
+    /// reply in the window).
+    pub latency: Option<Summary>,
 }
 
 /// Serving statistics snapshot.
@@ -153,6 +189,15 @@ pub struct PoolStats {
     pub coalesced_similar: u64,
     /// Enqueue-to-reply latency summary (None before any reply).
     pub latency: Option<Summary>,
+    /// Per-class breakdown, in `RequestClass::ALL` order.
+    pub per_class: Vec<ClassStats>,
+}
+
+impl PoolStats {
+    /// This window's statistics for one request class.
+    pub fn class(&self, class: RequestClass) -> &ClassStats {
+        &self.per_class[class.index()]
+    }
 }
 
 struct Shared {
@@ -163,6 +208,7 @@ struct Shared {
     metrics: Mutex<MetricsInner>,
     rejected: AtomicU64,
     max_batch: usize,
+    policy: BatchPolicy,
 }
 
 /// The serving worker pool.
@@ -188,6 +234,7 @@ impl ServePool {
             metrics: Mutex::new(MetricsInner::new(opts.latency_reservoir)),
             rejected: AtomicU64::new(0),
             max_batch: opts.max_batch.max(1),
+            policy: opts.policy,
         });
         if !opts.start_paused {
             shared.gate.open();
@@ -219,14 +266,14 @@ impl ServePool {
 
     /// Non-blocking admission: validate, then enqueue or reject.
     pub fn submit(&self, req: Request) -> Result<Ticket> {
+        let class = req.class();
+        self.class_mut(class, |c| c.submitted += 1);
         let table = self.shared.table.load();
         let n = table.n_nodes();
-        let ids = match &req {
-            Request::Embed(ids) => ids,
-            Request::Similar { ids, .. } => ids,
-        };
+        let ids = req.ids();
         if let Some(&bad) = ids.iter().find(|&&v| v as usize >= n) {
             self.shared.rejected.fetch_add(1, AtomicOrdering::Relaxed);
+            self.class_mut(class, |c| c.rejected += 1);
             anyhow::bail!("rejected: node id {} out of range ({} nodes)", bad, n);
         }
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
@@ -235,10 +282,17 @@ impl ServePool {
             Ok(()) => Ok(Ticket { rx: reply_rx }),
             Err(TrySendError::Full(_)) => {
                 self.shared.rejected.fetch_add(1, AtomicOrdering::Relaxed);
+                self.class_mut(class, |c| c.rejected += 1);
                 anyhow::bail!("rejected: serving queue full")
             }
             Err(TrySendError::Disconnected(_)) => anyhow::bail!("serving pool is down"),
         }
+    }
+
+    /// Mutate one class's counters under the metrics lock.
+    fn class_mut(&self, class: RequestClass, f: impl FnOnce(&mut ServiceClassCounters)) {
+        let mut m = self.shared.metrics.lock().unwrap();
+        f(&mut m.class_counts[class.index()]);
     }
 
     /// Blocking call: submit and wait for the response.
@@ -253,7 +307,16 @@ impl ServePool {
 
     /// Statistics snapshot (cumulative over the pool's lifetime).
     pub fn stats(&self) -> PoolStats {
-        self.stats_from(0, 0, 0, 0, 0, 0)
+        self.stats_from(&StatsMark {
+            served: 0,
+            failed: 0,
+            rejected: 0,
+            batches: 0,
+            coalesced_similar: 0,
+            latency_seen: 0,
+            class_counts: Default::default(),
+            class_latency_seen: [0; RequestClass::ALL.len()],
+        })
     }
 
     /// Mark the current counters so a later `stats_since` attributes only
@@ -267,6 +330,8 @@ impl ServePool {
             batches: m.batches,
             coalesced_similar: m.coalesced_similar,
             latency_seen: m.latencies.seen(),
+            class_counts: m.class_counts,
+            class_latency_seen: [m.class_lat[0].seen(), m.class_lat[1].seen()],
         }
     }
 
@@ -278,46 +343,65 @@ impl ServePool {
     /// pool-lifetime maximum (a windowed max is not reconstructible from
     /// counters).
     pub fn stats_since(&self, mark: &StatsMark) -> PoolStats {
-        self.stats_from(
-            mark.served,
-            mark.rejected,
-            mark.failed,
-            mark.batches,
-            mark.coalesced_similar,
-            mark.latency_seen,
-        )
+        self.stats_from(mark)
     }
 
-    fn stats_from(
-        &self,
-        served0: u64,
-        rejected0: u64,
-        failed0: u64,
-        batches0: u64,
-        coalesced0: u64,
-        latency_seen0: u64,
-    ) -> PoolStats {
+    fn stats_from(&self, mark: &StatsMark) -> PoolStats {
         // Copy the window out under the lock; sort/scan outside it so a
         // stats poll never stalls worker batch accounting.
-        let (served, failed, batches, max_batch_seen, coalesced, lats) = {
+        let (served, failed, batches, max_batch_seen, coalesced, lats, classes, class_lats) = {
             let m = self.shared.metrics.lock().unwrap();
             (
-                m.served - served0,
-                m.failed - failed0,
-                m.batches - batches0,
+                m.served - mark.served,
+                m.failed - mark.failed,
+                m.batches - mark.batches,
                 m.max_batch_seen,
-                m.coalesced_similar - coalesced0,
-                m.latencies.values_since(latency_seen0),
+                m.coalesced_similar - mark.coalesced_similar,
+                m.latencies.values_since(mark.latency_seen),
+                [
+                    m.class_counts[0].since(&mark.class_counts[0]),
+                    m.class_counts[1].since(&mark.class_counts[1]),
+                ],
+                [
+                    m.class_lat[0].values_since(mark.class_latency_seen[0]),
+                    m.class_lat[1].values_since(mark.class_latency_seen[1]),
+                ],
             )
         };
+        let per_class = RequestClass::ALL
+            .iter()
+            .map(|&class| ClassStats {
+                class,
+                counters: classes[class.index()],
+                latency: Summary::of(&class_lats[class.index()]),
+            })
+            .collect();
         PoolStats {
             served,
-            rejected: self.shared.rejected.load(AtomicOrdering::Relaxed) - rejected0,
+            rejected: self.shared.rejected.load(AtomicOrdering::Relaxed) - mark.rejected,
             failed,
             batches,
             max_batch_seen,
             coalesced_similar: coalesced,
             latency: Summary::of(&lats),
+            per_class,
+        }
+    }
+
+    /// Block until every request submitted so far has been accounted
+    /// (served, rejected, or failed) — the queue is drained and no batch
+    /// is in flight. Spin-waits with a short sleep; meant for drain
+    /// barriers (trace replay, tests), not hot paths. A paused pool with
+    /// queued work never quiesces — resume it first.
+    pub fn quiesce(&self) {
+        loop {
+            {
+                let m = self.shared.metrics.lock().unwrap();
+                if m.class_counts.iter().all(|c| c.accounted() >= c.submitted) {
+                    return;
+                }
+            }
+            std::thread::sleep(Duration::from_micros(200));
         }
     }
 
@@ -347,8 +431,10 @@ impl Drop for ServePool {
 fn worker_main(shared: &Shared) {
     loop {
         shared.gate.wait_open();
-        // One worker at a time forms a batch: pop one job (blocking),
-        // then drain whatever else is already queued.
+        // One worker at a time forms a batch (the queue lock serializes
+        // formation, so a deadline wait also holds back sibling formers —
+        // by design: the policy decides one batch at a time): pop one job
+        // (blocking), then extend it per the batch-formation policy.
         let batch: Vec<Job> = {
             let rx = match shared.queue.lock() {
                 Ok(rx) => rx,
@@ -358,17 +444,59 @@ fn worker_main(shared: &Shared) {
                 Ok(j) => j,
                 Err(_) => return, // queue closed and empty: shutdown
             };
-            let mut batch = vec![first];
-            while batch.len() < shared.max_batch {
+            form_batch(&rx, first, shared.max_batch, shared.policy)
+        };
+        serve_batch(shared, batch);
+    }
+}
+
+/// Extend `first` into a batch according to `policy`. Every policy caps
+/// at `max_batch` requests; they differ in *when the batch closes*:
+/// depth-first closes on an empty queue, deadline holds the batch open
+/// for stragglers, size-capped closes on summed id width. Grouping never
+/// changes responses (the `SimilarBatch` parity contract), so the policy
+/// only moves latency.
+fn form_batch(rx: &Receiver<Job>, first: Job, max_batch: usize, policy: BatchPolicy) -> Vec<Job> {
+    let mut batch = vec![first];
+    match policy {
+        BatchPolicy::DepthFirst => {
+            while batch.len() < max_batch {
                 match rx.try_recv() {
                     Ok(j) => batch.push(j),
                     Err(_) => break,
                 }
             }
-            batch
-        };
-        serve_batch(shared, batch);
+        }
+        BatchPolicy::Deadline { max_wait_us } => {
+            let deadline = Instant::now() + Duration::from_micros(max_wait_us);
+            while batch.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(j) => batch.push(j),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+        BatchPolicy::SizeCapped { max_ids } => {
+            let mut ids = batch[0].req.ids().len();
+            // the request that crosses the cap is included, so a single
+            // over-wide request still forms a (singleton) batch
+            while batch.len() < max_batch && ids < max_ids.max(1) {
+                match rx.try_recv() {
+                    Ok(j) => {
+                        ids += j.req.ids().len();
+                        batch.push(j);
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
     }
+    batch
 }
 
 /// Answer one coalesced batch against a single epoch snapshot.
@@ -380,15 +508,14 @@ fn serve_batch(shared: &Shared, batch: Vec<Job>) {
     // submit time may be stale if a refresh changed the node count. Such
     // requests are *rejections* (the client raced a shrink), not serving
     // failures — the zero-failures refresh guarantee stays intact.
-    let (batch, stale): (Vec<Job>, Vec<Job>) = batch.into_iter().partition(|job| {
-        let ids = match &job.req {
-            Request::Embed(ids) => ids,
-            Request::Similar { ids, .. } => ids,
-        };
-        ids.iter().all(|&v| (v as usize) < n)
-    });
+    let (batch, stale): (Vec<Job>, Vec<Job>) =
+        batch.into_iter().partition(|job| job.req.ids().iter().all(|&v| (v as usize) < n));
     for job in stale {
         shared.rejected.fetch_add(1, AtomicOrdering::Relaxed);
+        {
+            let mut m = shared.metrics.lock().unwrap();
+            m.class_counts[job.req.class().index()].rejected += 1;
+        }
         let _ = job.reply.send(Err(anyhow::anyhow!(
             "rejected: node id out of range for epoch {} ({} nodes)",
             table.epoch(),
@@ -445,16 +572,20 @@ fn serve_batch(shared: &Shared, batch: Vec<Job>) {
     let coalesced = if similar_jobs.len() > 1 { similar_jobs.len() as u64 } else { 0 };
     let mut served = 0u64;
     let mut failed = 0u64;
+    let mut class_delta = [ServiceClassCounters::default(); RequestClass::ALL.len()];
     let mut lats = Vec::with_capacity(batch.len());
     let mut to_send = Vec::with_capacity(batch.len());
     for (job, reply) in batch.into_iter().zip(replies) {
         let reply = reply.expect("reply filled");
+        let class = job.req.class();
         if reply.is_err() {
             failed += 1;
+            class_delta[class.index()].failed += 1;
         } else {
             served += 1;
+            class_delta[class.index()].served += 1;
         }
-        lats.push(job.enqueued.elapsed().as_secs_f64());
+        lats.push((class, job.enqueued.elapsed().as_secs_f64()));
         to_send.push((job.reply, reply));
     }
     // Account *before* replying: a caller that has observed the last
@@ -466,8 +597,12 @@ fn serve_batch(shared: &Shared, batch: Vec<Job>) {
         m.batches += 1;
         m.max_batch_seen = m.max_batch_seen.max(n_jobs);
         m.coalesced_similar += coalesced;
-        for l in lats {
+        for i in 0..class_delta.len() {
+            m.class_counts[i].add(&class_delta[i]);
+        }
+        for (class, l) in lats {
             m.latencies.push(l);
+            m.class_lat[class.index()].push(l);
         }
     }
     for (tx, reply) in to_send {
@@ -565,6 +700,92 @@ mod tests {
         assert!(window.n >= 1 && window.n <= 16, "window n={}", window.n);
         let lifetime = pool.shutdown().latency.expect("lifetime latency");
         assert!(lifetime.n <= 16, "reservoir must stay bounded, n={}", lifetime.n);
+    }
+
+    #[test]
+    fn per_class_stats_conserve_and_split_latency() {
+        let (_, cell) = setup(32, 4, 2);
+        let opts = PoolOpts { workers: 1, queue_capacity: 64, ..PoolOpts::default() };
+        let pool = ServePool::spawn(cell, Arc::new(Native), opts);
+        for i in 0..6 {
+            pool.call(Request::Embed(vec![i])).unwrap();
+        }
+        for i in 0..3 {
+            pool.call(Request::Similar { ids: vec![i], k: 2 }).unwrap();
+        }
+        // one admission reject lands on the embed class
+        assert!(pool.submit(Request::Embed(vec![99])).is_err());
+        let stats = pool.stats();
+        let embed = stats.class(RequestClass::Embed);
+        let sim = stats.class(RequestClass::Similar);
+        assert_eq!(embed.counters.submitted, 7);
+        assert_eq!(embed.counters.served, 6);
+        assert_eq!(embed.counters.rejected, 1);
+        assert_eq!(embed.counters.accounted(), embed.counters.submitted);
+        assert_eq!(sim.counters.submitted, 3);
+        assert_eq!(sim.counters.served, 3);
+        assert_eq!(sim.counters.accounted(), 3);
+        assert_eq!(embed.latency.as_ref().unwrap().n, 6);
+        assert_eq!(sim.latency.as_ref().unwrap().n, 3);
+        // a windowed mark attributes only post-mark per-class work
+        let mark = pool.mark();
+        pool.call(Request::Similar { ids: vec![1], k: 1 }).unwrap();
+        let since = pool.stats_since(&mark);
+        assert_eq!(since.class(RequestClass::Embed).counters.submitted, 0);
+        assert_eq!(since.class(RequestClass::Similar).counters.served, 1);
+    }
+
+    #[test]
+    fn size_capped_policy_bounds_batch_id_width() {
+        let (_, cell) = setup(64, 4, 2);
+        let opts = PoolOpts {
+            workers: 1,
+            queue_capacity: 64,
+            max_batch: 64,
+            start_paused: true,
+            policy: BatchPolicy::SizeCapped { max_ids: 16 },
+            ..PoolOpts::default()
+        };
+        let pool = ServePool::spawn(cell, Arc::new(Native), opts);
+        // 4 × 8-id embeds: the cap closes each batch at two requests
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|_| pool.submit(Request::Embed((0..8).collect())).unwrap())
+            .collect();
+        pool.resume();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let stats = pool.shutdown();
+        assert_eq!(stats.served, 4);
+        assert_eq!(stats.batches, 2, "16-id cap splits the backlog in two: {:?}", stats);
+        assert_eq!(stats.max_batch_seen, 2);
+    }
+
+    #[test]
+    fn deadline_policy_coalesces_a_queued_backlog() {
+        let (_, cell) = setup(64, 8, 2);
+        let opts = PoolOpts {
+            workers: 1,
+            queue_capacity: 64,
+            max_batch: 64,
+            start_paused: true,
+            policy: BatchPolicy::Deadline { max_wait_us: 100 },
+            ..PoolOpts::default()
+        };
+        let pool = ServePool::spawn(cell, Arc::new(Native), opts);
+        let tickets: Vec<Ticket> = (0..10)
+            .map(|i| pool.submit(Request::Similar { ids: vec![i as u32], k: 3 }).unwrap())
+            .collect();
+        pool.resume();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let stats = pool.shutdown();
+        assert_eq!(stats.served, 10);
+        // an already-queued backlog coalesces without waiting out the
+        // deadline (recv_timeout returns immediately on a non-empty queue)
+        assert_eq!(stats.batches, 1, "stats: {:?}", stats);
+        assert_eq!(stats.coalesced_similar, 10);
     }
 
     #[test]

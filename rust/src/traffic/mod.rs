@@ -1,0 +1,24 @@
+//! Production-traffic harness for the serving tier (DESIGN.md §Traffic).
+//!
+//! The serving benchmarks up to PR 5 measured *throughput*: feed the pool
+//! as fast as it drains. Production load is nothing like that — arrivals
+//! are skewed, diurnal, bursty, and **do not slow down when the server
+//! does**. This module makes that workload a first-class, reproducible
+//! artifact:
+//!
+//! - [`trace`] — seeded trace generation (Zipfian key skew, diurnal +
+//!   bursty nonhomogeneous Poisson arrivals, interleaved churn batches)
+//!   and the versioned on-disk trace format;
+//! - [`replay`] — the open-loop replay driver (inject on the trace
+//!   schedule, never wait for completions) and the sequenced
+//!   deterministic mode that the batch-policy parity sweep uses.
+//!
+//! `deal traffic` (cli) drives both; `benches/traffic_slo.rs` turns the
+//! replay's per-class p50/p99/p999 into SLO gates and emits
+//! `BENCH_traffic.json` (EXPERIMENTS.md §Traffic).
+
+pub mod replay;
+pub mod trace;
+
+pub use replay::{churn_into_cell, replay, ReplayMode, ReplayOpts, ReplayReport};
+pub use trace::{ChurnEvent, Trace, TraceConfig, TraceEvent, ZipfSampler};

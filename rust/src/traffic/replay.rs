@@ -1,0 +1,328 @@
+//! Trace replay against a live [`ServePool`] (DESIGN.md §Traffic).
+//!
+//! Two modes, two questions:
+//!
+//! - [`ReplayMode::OpenLoop`] — *"what does production latency look
+//!   like?"* Requests are injected on the trace's simulated-arrival
+//!   schedule, **never waiting for completions**: if the pool falls
+//!   behind, the queue fills and admission control sheds load, exactly
+//!   as a real front end would. A closed-loop driver (wait for each
+//!   response before sending the next) self-throttles under overload
+//!   and hides tail collapse; open loop is what makes the p99/p999 SLO
+//!   gates in `benches/traffic_slo.rs` meaningful.
+//! - [`ReplayMode::Sequenced`] — *"are the answers right?"* Timing is
+//!   ignored; events run in trace order with a full drain barrier
+//!   around every churn event, so each request's response is a pure
+//!   function of (trace, initial state). Replaying one trace under two
+//!   batch-formation policies must then produce identical
+//!   [`response_digest`]s per request — the parity sweep's contract.
+//!
+//! Latency is accounted **pool-side** (worker timestamps, per class);
+//! the replay collector thread only drains tickets and folds digests,
+//! so a slow collector can never inflate a class's tail.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::delta::DeltaState;
+use crate::serve::{
+    refresh_delta, response_digest, PoolStats, Response, ServePool, TableCell, Ticket,
+};
+use crate::util::rng::Rng;
+use crate::Result;
+
+use super::trace::{ChurnEvent, Trace, TraceEvent};
+
+/// How the driver maps trace time onto wall-clock time.
+#[derive(Clone, Copy, Debug)]
+pub enum ReplayMode {
+    /// Open-loop: dispatch each event at `start + at_secs / speed`
+    /// wall-clock, regardless of completions. `speed` > 1 compresses the
+    /// trace (a 10 s trace at speed 10 replays in ~1 s).
+    OpenLoop { speed: f64 },
+    /// In-order, untimed, with drain barriers around churn — the
+    /// deterministic mode parity sweeps use.
+    Sequenced,
+}
+
+/// Replay options.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplayOpts {
+    pub mode: ReplayMode,
+    /// Keep every accepted response in the report (tear-free epoch
+    /// checks); costs memory proportional to the trace.
+    pub keep_responses: bool,
+}
+
+impl Default for ReplayOpts {
+    fn default() -> Self {
+        ReplayOpts { mode: ReplayMode::OpenLoop { speed: 1.0 }, keep_responses: false }
+    }
+}
+
+/// Outcome of one replay run.
+#[derive(Debug)]
+pub struct ReplayReport {
+    /// Wall-clock seconds from first dispatch to last response.
+    pub wall_secs: f64,
+    /// Request events dispatched (accepted + rejected).
+    pub dispatched: u64,
+    /// Pool statistics for exactly this replay's window (per-class
+    /// counters and latency summaries included).
+    pub stats: PoolStats,
+    /// Per request (trace order): FNV-1a digest of the response, or 0 if
+    /// the request was rejected/failed. Two runs of the same trace over
+    /// the same initial state in `Sequenced` mode must produce equal
+    /// vectors, whatever the batch policy.
+    pub digests: Vec<u64>,
+    /// Accepted responses in trace order (`None` = rejected/failed);
+    /// empty unless `keep_responses`.
+    pub responses: Vec<Option<Response>>,
+    /// Epoch published by each churn event, in trace order.
+    pub churn_epochs: Vec<u64>,
+    /// Worst dispatcher lateness vs. the trace schedule (open loop only;
+    /// large values mean the driver itself — not the pool — was the
+    /// bottleneck and the measured tail is suspect).
+    pub max_dispatch_lag_secs: f64,
+    /// Served responses per wall-clock second.
+    pub goodput: f64,
+}
+
+/// Replay `trace` against `pool`, calling `on_churn` for every churn
+/// event (in the dispatcher thread; return the published epoch). Use
+/// [`churn_into_cell`] for the standard `DeltaState` hook, or pass
+/// `|_| Ok(0)` for a static-table replay.
+pub fn replay(
+    pool: &ServePool,
+    trace: &Trace,
+    opts: &ReplayOpts,
+    mut on_churn: impl FnMut(&ChurnEvent) -> Result<u64>,
+) -> Result<ReplayReport> {
+    let n_requests = trace.n_requests();
+    let mark = pool.mark();
+    let keep = opts.keep_responses;
+
+    // Collector: drains tickets in dispatch order, folding digests (and
+    // optionally responses). Tickets buffer replies, so FIFO waiting here
+    // never blocks the pool — and latency is measured pool-side anyway.
+    let (tx, rx) = mpsc::channel::<(usize, Option<Ticket>)>();
+    let collector = std::thread::Builder::new()
+        .name("traffic-collector".into())
+        .spawn(move || {
+            let mut digests = vec![0u64; n_requests];
+            let mut responses: Vec<Option<Response>> =
+                if keep { (0..n_requests).map(|_| None).collect() } else { Vec::new() };
+            for (idx, ticket) in rx {
+                if let Some(t) = ticket {
+                    if let Ok(resp) = t.wait() {
+                        digests[idx] = response_digest(&resp);
+                        if keep {
+                            responses[idx] = Some(resp);
+                        }
+                    }
+                }
+            }
+            (digests, responses)
+        })
+        .expect("spawn traffic collector");
+
+    let mut churn_epochs = Vec::new();
+    let mut dispatched = 0u64;
+    let mut max_lag = 0.0f64;
+    let t0 = Instant::now();
+    let result = (|| -> Result<()> {
+        match opts.mode {
+            ReplayMode::OpenLoop { speed } => {
+                anyhow::ensure!(speed > 0.0, "replay speed must be positive");
+                let mut idx = 0usize;
+                for ev in &trace.events {
+                    let target = Duration::from_secs_f64(ev.at_secs() / speed);
+                    let now = t0.elapsed();
+                    if now < target {
+                        std::thread::sleep(target - now);
+                    } else {
+                        max_lag = max_lag.max((now - target).as_secs_f64());
+                    }
+                    match ev {
+                        TraceEvent::Request { req, .. } => {
+                            // open loop: an admission reject is data, not
+                            // an error — record and move on
+                            let ticket = pool.submit(req.clone()).ok();
+                            tx.send((idx, ticket)).expect("collector alive");
+                            idx += 1;
+                            dispatched += 1;
+                        }
+                        TraceEvent::Churn(c) => {
+                            // no drain: churn lands mid-flight, exactly
+                            // like a production delta refresh
+                            churn_epochs.push(on_churn(c)?);
+                        }
+                    }
+                }
+            }
+            ReplayMode::Sequenced => {
+                let mut idx = 0usize;
+                let mut pending: Vec<(usize, Option<Ticket>)> = Vec::new();
+                for ev in &trace.events {
+                    match ev {
+                        TraceEvent::Request { req, .. } => {
+                            pending.push((idx, pool.submit(req.clone()).ok()));
+                            idx += 1;
+                            dispatched += 1;
+                        }
+                        TraceEvent::Churn(c) => {
+                            // drain barrier: every in-flight request
+                            // resolves against the pre-churn epoch, so
+                            // responses are reproducible run to run
+                            for (i, t) in pending.drain(..) {
+                                tx.send((i, t)).expect("collector alive");
+                            }
+                            pool.quiesce();
+                            churn_epochs.push(on_churn(c)?);
+                        }
+                    }
+                }
+                for (i, t) in pending.drain(..) {
+                    tx.send((i, t)).expect("collector alive");
+                }
+            }
+        }
+        Ok(())
+    })();
+    drop(tx); // close the channel so the collector finishes
+    let (digests, responses) = collector.join().expect("collector panicked");
+    result?;
+    // wait for the pool to finish everything we injected, so the stats
+    // window is drained (submitted == accounted per class)
+    pool.quiesce();
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let stats = pool.stats_since(&mark);
+    let goodput = stats.served as f64 / wall_secs.max(1e-12);
+    Ok(ReplayReport {
+        wall_secs,
+        dispatched,
+        stats,
+        digests,
+        responses,
+        churn_epochs,
+        max_dispatch_lag_secs: max_lag,
+        goodput,
+    })
+}
+
+/// The standard churn hook: synthesize the event's update batch from its
+/// seed and sizes via [`DeltaState::synth_batch`], apply it, and publish
+/// a delta epoch into `cell` ([`refresh_delta`]). Returns the published
+/// epoch.
+pub fn churn_into_cell<'a>(
+    state: &'a mut DeltaState,
+    cell: &'a TableCell,
+) -> impl FnMut(&ChurnEvent) -> Result<u64> + 'a {
+    move |ev: &ChurnEvent| {
+        let mut rng = Rng::new(ev.seed);
+        let batch = state.synth_batch(
+            &mut rng,
+            ev.edge_adds as usize,
+            ev.edge_removes as usize,
+            ev.feat_updates as usize,
+        );
+        let rep = refresh_delta(state, &batch, cell)?;
+        Ok(rep.epoch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::runtime::Native;
+    use crate::serve::shard::ShardedTable;
+    use crate::serve::{BatchPolicy, PoolOpts};
+    use crate::tensor::Matrix;
+    use crate::traffic::trace::TraceConfig;
+
+    fn table_cell(n: usize, d: usize) -> Arc<TableCell> {
+        let mut rng = Rng::new(123);
+        let full = Matrix::random(n, d, 1.0, &mut rng);
+        Arc::new(TableCell::new(ShardedTable::from_full(&full, 2, 0)))
+    }
+
+    fn tiny_trace() -> Trace {
+        Trace::generate(&TraceConfig {
+            seed: 5,
+            n_nodes: 48,
+            requests: 120,
+            base_rate: 50_000.0, // compress simulated time for the test
+            churn_batches: 0,
+            ..TraceConfig::default()
+        })
+    }
+
+    #[test]
+    fn open_loop_replay_accounts_every_request() {
+        let cell = table_cell(48, 8);
+        let pool = ServePool::spawn(cell, Arc::new(Native), PoolOpts::default());
+        let trace = tiny_trace();
+        let opts =
+            ReplayOpts { mode: ReplayMode::OpenLoop { speed: 100.0 }, ..ReplayOpts::default() };
+        let rep = replay(&pool, &trace, &opts, |_| Ok(0)).unwrap();
+        assert_eq!(rep.dispatched, 120);
+        assert_eq!(rep.digests.len(), 120);
+        let mut total = 0u64;
+        for c in &rep.stats.per_class {
+            total += c.counters.submitted;
+            assert_eq!(
+                c.counters.accounted(),
+                c.counters.submitted,
+                "{} class leaks requests: {:?}",
+                c.class.name(),
+                c.counters
+            );
+        }
+        assert_eq!(total, 120);
+        // everything fit in the (big) queue: no rejects, digests nonzero
+        assert_eq!(rep.stats.rejected, 0);
+        assert!(rep.digests.iter().all(|&d| d != 0));
+        assert!(rep.goodput > 0.0);
+    }
+
+    #[test]
+    fn sequenced_replay_is_policy_invariant() {
+        let trace = tiny_trace();
+        let policies = [
+            BatchPolicy::DepthFirst,
+            BatchPolicy::Deadline { max_wait_us: 100 },
+            BatchPolicy::SizeCapped { max_ids: 16 },
+        ];
+        let mut all: Vec<Vec<u64>> = Vec::new();
+        for policy in policies {
+            let cell = table_cell(48, 8);
+            let pool = ServePool::spawn(
+                cell,
+                Arc::new(Native),
+                PoolOpts { workers: 2, policy, ..PoolOpts::default() },
+            );
+            let opts = ReplayOpts { mode: ReplayMode::Sequenced, ..ReplayOpts::default() };
+            let rep = replay(&pool, &trace, &opts, |_| Ok(0)).unwrap();
+            assert!(rep.digests.iter().all(|&d| d != 0));
+            all.push(rep.digests);
+        }
+        assert_eq!(all[0], all[1], "deadline policy changed responses");
+        assert_eq!(all[0], all[2], "size-capped policy changed responses");
+    }
+
+    #[test]
+    fn keep_responses_returns_them_in_trace_order() {
+        let cell = table_cell(48, 8);
+        let pool = ServePool::spawn(cell, Arc::new(Native), PoolOpts::default());
+        let trace = tiny_trace();
+        let opts = ReplayOpts { mode: ReplayMode::Sequenced, keep_responses: true };
+        let rep = replay(&pool, &trace, &opts, |_| Ok(0)).unwrap();
+        assert_eq!(rep.responses.len(), 120);
+        for (i, (resp, &digest)) in rep.responses.iter().zip(&rep.digests).enumerate() {
+            let resp = resp.as_ref().unwrap_or_else(|| panic!("request {} dropped", i));
+            assert_eq!(response_digest(resp), digest);
+        }
+    }
+}

@@ -1,0 +1,603 @@
+//! Deterministic production-traffic traces (DESIGN.md §Traffic).
+//!
+//! A [`Trace`] is a reproducible artifact: the full request schedule a
+//! replay run injects against the serving tier, generated from a seeded
+//! [`TraceConfig`] and serialized to a **versioned** on-disk format. The
+//! same seed + config always produces byte-identical bytes
+//! (`tests/traffic_props.rs`), so a latency regression seen in CI can be
+//! replayed locally from the identical workload.
+//!
+//! The generator models the three production phenomena the paper's
+//! serving story cares about:
+//! - **key skew** — node-id popularity is Zipfian (rank `r` drawn with
+//!   probability ∝ `1/(r+1)^s`), with ranks mapped to node ids through a
+//!   seeded permutation so hot keys scatter across table shards;
+//! - **rate shape** — arrivals follow a nonhomogeneous Poisson process by
+//!   thinning: a diurnal sinusoid modulates the base rate and Poisson
+//!   burst windows multiply it (`λ(t) = base · (1 + a·sin(2πt/T)) ·
+//!   burst?·F`), so a replay exercises both troughs and overload;
+//! - **churn** — [`ChurnEvent`]s interleave with requests; each carries a
+//!   seed plus update-batch sizes, and the replay driver synthesizes the
+//!   graph update from exactly those, keeping the trace self-contained.
+//!
+//! Arrival timestamps are *simulated seconds*; the open-loop replay
+//! driver ([`super::replay`]) maps them onto wall-clock time.
+
+use std::path::Path;
+
+use crate::serve::Request;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Magic prefix of the on-disk trace format.
+pub const TRACE_MAGIC: &[u8; 8] = b"DEALTRAC";
+/// Current trace format version. Bump on any layout change; `from_bytes`
+/// rejects versions it does not know.
+pub const TRACE_VERSION: u32 = 1;
+
+/// Everything that determines a trace, bit for bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceConfig {
+    /// Master seed; every derived stream (arrivals, ids, churn) forks it.
+    pub seed: u64,
+    /// Node-id universe the requests draw from (the serving table size).
+    pub n_nodes: usize,
+    /// Number of requests to generate.
+    pub requests: usize,
+    /// Base arrival rate in requests per simulated second.
+    pub base_rate: f64,
+    /// Zipf exponent `s` of the key-popularity distribution (0 = uniform).
+    pub zipf_s: f64,
+    /// Diurnal modulation amplitude `a` in `[0, 1)`.
+    pub diurnal_amplitude: f64,
+    /// Diurnal period `T` in simulated seconds.
+    pub diurnal_period_secs: f64,
+    /// Rate multiplier inside a burst window (1 = bursts disabled).
+    pub burst_factor: f64,
+    /// Burst onset rate in bursts per simulated second (Poisson).
+    pub burst_rate_hz: f64,
+    /// Burst window length in simulated seconds.
+    pub burst_secs: f64,
+    /// Fraction of requests that are `Similar` (the GEMM-bound class);
+    /// the rest are `Embed` (the gather-bound class).
+    pub similar_fraction: f64,
+    /// Ids per `Embed` request.
+    pub embed_ids: usize,
+    /// Ids per `Similar` request.
+    pub similar_ids: usize,
+    /// `k` of each `Similar` request.
+    pub similar_k: usize,
+    /// Churn batches interleaved across the trace (0 = static graph).
+    pub churn_batches: usize,
+    /// Edge insertions per churn batch.
+    pub churn_edge_adds: usize,
+    /// Edge deletions per churn batch.
+    pub churn_edge_removes: usize,
+    /// Feature updates per churn batch.
+    pub churn_feat_updates: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            seed: 0xDEA1,
+            n_nodes: 1024,
+            requests: 2048,
+            base_rate: 2000.0,
+            zipf_s: 1.0,
+            diurnal_amplitude: 0.5,
+            diurnal_period_secs: 1.0,
+            burst_factor: 4.0,
+            burst_rate_hz: 1.0,
+            burst_secs: 0.05,
+            similar_fraction: 0.25,
+            embed_ids: 8,
+            similar_ids: 2,
+            similar_k: 8,
+            churn_batches: 0,
+            churn_edge_adds: 24,
+            churn_edge_removes: 24,
+            churn_feat_updates: 2,
+        }
+    }
+}
+
+/// One interleaved graph-update point. The event carries *how to
+/// synthesize* the update (sizes + a seed), not the update itself, so the
+/// trace stays small and self-contained; replay feeds these to
+/// `DeltaState::synth_batch` and `refresh_delta`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnEvent {
+    /// Simulated arrival time.
+    pub at_secs: f64,
+    pub edge_adds: u32,
+    pub edge_removes: u32,
+    pub feat_updates: u32,
+    /// Seed for synthesizing this batch's update.
+    pub seed: u64,
+}
+
+/// One trace event, in nondecreasing `at_secs` order.
+#[derive(Clone, Debug)]
+pub enum TraceEvent {
+    /// Inject `req` at simulated time `at_secs`.
+    Request { at_secs: f64, req: Request },
+    /// Apply a graph-update batch.
+    Churn(ChurnEvent),
+}
+
+impl TraceEvent {
+    pub fn at_secs(&self) -> f64 {
+        match self {
+            TraceEvent::Request { at_secs, .. } => *at_secs,
+            TraceEvent::Churn(c) => c.at_secs,
+        }
+    }
+}
+
+/// A generated (or loaded) trace: the config that made it plus the event
+/// schedule.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub config: TraceConfig,
+    pub events: Vec<TraceEvent>,
+}
+
+/// Zipfian rank sampler over `[0, n)` by inverse-CDF binary search, with
+/// a seeded permutation mapping popularity rank → node id (so the hot
+/// keys are not simply ids 0, 1, 2, … — they scatter across shards the
+/// way real hot entities do).
+pub struct ZipfSampler {
+    /// cdf[r] = P(rank <= r); cdf[n-1] == 1.
+    cdf: Vec<f64>,
+    /// rank → node id.
+    perm: Vec<u32>,
+}
+
+impl ZipfSampler {
+    pub fn new(n: usize, s: f64, rng: &mut Rng) -> ZipfSampler {
+        assert!(n >= 1, "zipf needs a nonempty universe");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for r in 0..n {
+            acc += 1.0 / ((r + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in &mut cdf {
+            *v /= total;
+        }
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut perm);
+        ZipfSampler { cdf, perm }
+    }
+
+    /// Draw one node id.
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        let u = rng.next_f64();
+        // first rank whose cdf exceeds u
+        let rank = self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1);
+        self.perm[rank]
+    }
+
+    /// The node id holding popularity rank `r` (tests compare observed
+    /// frequencies against the theoretical ranks).
+    pub fn id_of_rank(&self, r: usize) -> u32 {
+        self.perm[r]
+    }
+
+    /// Theoretical probability of rank `r`.
+    pub fn rank_probability(&self, r: usize) -> f64 {
+        let prev = if r == 0 { 0.0 } else { self.cdf[r - 1] };
+        self.cdf[r] - prev
+    }
+}
+
+/// Exponential(rate) draw; `rate` must be positive.
+fn exponential(rng: &mut Rng, rate: f64) -> f64 {
+    -(1.0 - rng.next_f64()).max(f64::MIN_POSITIVE).ln() / rate
+}
+
+impl Trace {
+    /// Generate the trace for `config`. Deterministic: the same config
+    /// (seed included) always yields byte-identical `to_bytes` output.
+    pub fn generate(config: &TraceConfig) -> Trace {
+        assert!(config.n_nodes >= 1, "trace needs nodes");
+        assert!(config.base_rate > 0.0, "base_rate must be positive");
+        assert!(
+            (0.0..1.0).contains(&config.diurnal_amplitude),
+            "diurnal amplitude must be in [0, 1)"
+        );
+        assert!(config.burst_factor >= 1.0, "burst factor must be >= 1");
+        let base = Rng::new(config.seed);
+        let mut perm_rng = base.fork(1);
+        let mut arrival_rng = base.fork(2);
+        let mut id_rng = base.fork(3);
+        let mut churn_rng = base.fork(4);
+        let zipf = ZipfSampler::new(config.n_nodes, config.zipf_s, &mut perm_rng);
+
+        // Nonhomogeneous Poisson arrivals by thinning at λ_max.
+        let bursts_on = config.burst_factor > 1.0 && config.burst_rate_hz > 0.0;
+        let lambda_max = config.base_rate
+            * (1.0 + config.diurnal_amplitude)
+            * if bursts_on { config.burst_factor } else { 1.0 };
+        let mut t = 0.0f64;
+        // Burst windows are a renewal process: each onset is the previous
+        // window's end plus an Exponential(burst_rate_hz) gap.
+        let mut burst_onset = if bursts_on {
+            exponential(&mut arrival_rng, config.burst_rate_hz)
+        } else {
+            f64::INFINITY
+        };
+        let mut requests: Vec<(f64, Request)> = Vec::with_capacity(config.requests);
+        while requests.len() < config.requests {
+            t += exponential(&mut arrival_rng, lambda_max);
+            while bursts_on && t >= burst_onset + config.burst_secs {
+                burst_onset +=
+                    config.burst_secs + exponential(&mut arrival_rng, config.burst_rate_hz);
+            }
+            let in_burst = bursts_on && t >= burst_onset;
+            let diurnal = 1.0
+                + config.diurnal_amplitude
+                    * (2.0 * std::f64::consts::PI * t / config.diurnal_period_secs.max(1e-9))
+                        .sin();
+            let lambda = config.base_rate
+                * diurnal
+                * if in_burst { config.burst_factor } else { 1.0 };
+            if arrival_rng.next_f64() >= lambda / lambda_max {
+                continue; // thinned: candidate rejected
+            }
+            let req = if id_rng.next_f64() < config.similar_fraction {
+                Request::Similar {
+                    ids: (0..config.similar_ids.max(1))
+                        .map(|_| zipf.sample(&mut id_rng))
+                        .collect(),
+                    k: config.similar_k.max(1),
+                }
+            } else {
+                Request::Embed(
+                    (0..config.embed_ids.max(1)).map(|_| zipf.sample(&mut id_rng)).collect(),
+                )
+            };
+            requests.push((t, req));
+        }
+
+        // Interleave churn: batch b lands just before request b·stride, at
+        // that request's timestamp (replay applies churn first at a tie).
+        let mut events = Vec::with_capacity(requests.len() + config.churn_batches);
+        let stride = if config.churn_batches > 0 {
+            (config.requests / (config.churn_batches + 1)).max(1)
+        } else {
+            usize::MAX
+        };
+        let mut emitted_churn = 0usize;
+        for (i, (at_secs, req)) in requests.into_iter().enumerate() {
+            if emitted_churn < config.churn_batches
+                && i > 0
+                && i % stride == 0
+                && i / stride == emitted_churn + 1
+            {
+                events.push(TraceEvent::Churn(ChurnEvent {
+                    at_secs,
+                    edge_adds: config.churn_edge_adds as u32,
+                    edge_removes: config.churn_edge_removes as u32,
+                    feat_updates: config.churn_feat_updates as u32,
+                    seed: churn_rng.next_u64(),
+                }));
+                emitted_churn += 1;
+            }
+            events.push(TraceEvent::Request { at_secs, req });
+        }
+        Trace { config: config.clone(), events }
+    }
+
+    /// Number of request events.
+    pub fn n_requests(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Request { .. }))
+            .count()
+    }
+
+    /// Number of churn events.
+    pub fn n_churn(&self) -> usize {
+        self.events.len() - self.n_requests()
+    }
+
+    /// Simulated length: last event's arrival time (0 for an empty trace).
+    pub fn duration_secs(&self) -> f64 {
+        self.events.last().map_or(0.0, |e| e.at_secs())
+    }
+
+    /// Serialize to the versioned on-disk format (EXPERIMENTS.md §Traffic
+    /// documents the layout): `DEALTRAC` magic, `u32` version, the config
+    /// echoed field by field, the event list, and a trailing FNV-1a
+    /// checksum over everything before it. All integers little-endian;
+    /// floats as IEEE-754 bit patterns.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(64 + self.events.len() * 48);
+        buf.extend_from_slice(TRACE_MAGIC);
+        put_u32(&mut buf, TRACE_VERSION);
+        let c = &self.config;
+        put_u64(&mut buf, c.seed);
+        put_u64(&mut buf, c.n_nodes as u64);
+        put_u64(&mut buf, c.requests as u64);
+        put_f64(&mut buf, c.base_rate);
+        put_f64(&mut buf, c.zipf_s);
+        put_f64(&mut buf, c.diurnal_amplitude);
+        put_f64(&mut buf, c.diurnal_period_secs);
+        put_f64(&mut buf, c.burst_factor);
+        put_f64(&mut buf, c.burst_rate_hz);
+        put_f64(&mut buf, c.burst_secs);
+        put_f64(&mut buf, c.similar_fraction);
+        put_u64(&mut buf, c.embed_ids as u64);
+        put_u64(&mut buf, c.similar_ids as u64);
+        put_u64(&mut buf, c.similar_k as u64);
+        put_u64(&mut buf, c.churn_batches as u64);
+        put_u64(&mut buf, c.churn_edge_adds as u64);
+        put_u64(&mut buf, c.churn_edge_removes as u64);
+        put_u64(&mut buf, c.churn_feat_updates as u64);
+        put_u64(&mut buf, self.events.len() as u64);
+        for ev in &self.events {
+            match ev {
+                TraceEvent::Request { at_secs, req: Request::Embed(ids) } => {
+                    buf.push(0);
+                    put_f64(&mut buf, *at_secs);
+                    put_u32(&mut buf, ids.len() as u32);
+                    for &id in ids {
+                        put_u32(&mut buf, id);
+                    }
+                }
+                TraceEvent::Request { at_secs, req: Request::Similar { ids, k } } => {
+                    buf.push(1);
+                    put_f64(&mut buf, *at_secs);
+                    put_u32(&mut buf, ids.len() as u32);
+                    for &id in ids {
+                        put_u32(&mut buf, id);
+                    }
+                    put_u32(&mut buf, *k as u32);
+                }
+                TraceEvent::Churn(c) => {
+                    buf.push(2);
+                    put_f64(&mut buf, c.at_secs);
+                    put_u32(&mut buf, c.edge_adds);
+                    put_u32(&mut buf, c.edge_removes);
+                    put_u32(&mut buf, c.feat_updates);
+                    put_u64(&mut buf, c.seed);
+                }
+            }
+        }
+        let sum = fnv1a(&buf);
+        put_u64(&mut buf, sum);
+        buf
+    }
+
+    /// Parse a serialized trace, validating magic, version, and checksum.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Trace> {
+        let mut r = Reader { bytes, pos: 0 };
+        let magic = r.take(8)?;
+        anyhow::ensure!(magic == TRACE_MAGIC, "not a deal trace (bad magic)");
+        let version = r.u32()?;
+        anyhow::ensure!(
+            version == TRACE_VERSION,
+            "trace format version {} (this build reads {})",
+            version,
+            TRACE_VERSION
+        );
+        anyhow::ensure!(bytes.len() >= 8, "trace truncated");
+        let body = &bytes[..bytes.len() - 8];
+        let mut tail = Reader { bytes, pos: bytes.len() - 8 };
+        let expect = tail.u64()?;
+        let got = fnv1a(body);
+        anyhow::ensure!(
+            expect == got,
+            "trace checksum mismatch (stored {:#018x}, computed {:#018x})",
+            expect,
+            got
+        );
+        let config = TraceConfig {
+            seed: r.u64()?,
+            n_nodes: r.u64()? as usize,
+            requests: r.u64()? as usize,
+            base_rate: r.f64()?,
+            zipf_s: r.f64()?,
+            diurnal_amplitude: r.f64()?,
+            diurnal_period_secs: r.f64()?,
+            burst_factor: r.f64()?,
+            burst_rate_hz: r.f64()?,
+            burst_secs: r.f64()?,
+            similar_fraction: r.f64()?,
+            embed_ids: r.u64()? as usize,
+            similar_ids: r.u64()? as usize,
+            similar_k: r.u64()? as usize,
+            churn_batches: r.u64()? as usize,
+            churn_edge_adds: r.u64()? as usize,
+            churn_edge_removes: r.u64()? as usize,
+            churn_feat_updates: r.u64()? as usize,
+        };
+        let n_events = r.u64()? as usize;
+        let mut events = Vec::with_capacity(n_events.min(1 << 22));
+        for _ in 0..n_events {
+            let tag = r.take(1)?[0];
+            let ev = match tag {
+                0 | 1 => {
+                    let at_secs = r.f64()?;
+                    let n_ids = r.u32()? as usize;
+                    let mut ids = Vec::with_capacity(n_ids.min(1 << 20));
+                    for _ in 0..n_ids {
+                        ids.push(r.u32()?);
+                    }
+                    let req = if tag == 0 {
+                        Request::Embed(ids)
+                    } else {
+                        Request::Similar { ids, k: r.u32()? as usize }
+                    };
+                    TraceEvent::Request { at_secs, req }
+                }
+                2 => TraceEvent::Churn(ChurnEvent {
+                    at_secs: r.f64()?,
+                    edge_adds: r.u32()?,
+                    edge_removes: r.u32()?,
+                    feat_updates: r.u32()?,
+                    seed: r.u64()?,
+                }),
+                other => anyhow::bail!("unknown trace event tag {}", other),
+            };
+            events.push(ev);
+        }
+        anyhow::ensure!(r.pos == bytes.len() - 8, "trailing bytes after trace events");
+        Ok(Trace { config, events })
+    }
+
+    /// Write the serialized trace to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| anyhow::anyhow!("write trace {}: {}", path.display(), e))
+    }
+
+    /// Load a trace from `path`.
+    pub fn load(path: &Path) -> Result<Trace> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("read trace {}: {}", path.display(), e))?;
+        Trace::from_bytes(&bytes)
+    }
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// FNV-1a over a byte slice (the trace checksum; same constants as
+/// `serve::response_digest`).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(self.pos + n <= self.bytes.len(), "trace truncated");
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> TraceConfig {
+        TraceConfig {
+            seed: 11,
+            n_nodes: 64,
+            requests: 200,
+            churn_batches: 3,
+            ..TraceConfig::default()
+        }
+    }
+
+    #[test]
+    fn roundtrips_and_checks() {
+        let trace = Trace::generate(&small_cfg());
+        assert_eq!(trace.n_requests(), 200);
+        assert_eq!(trace.n_churn(), 3);
+        let bytes = trace.to_bytes();
+        let back = Trace::from_bytes(&bytes).unwrap();
+        assert_eq!(back.config, trace.config);
+        assert_eq!(back.to_bytes(), bytes, "reserialization is identity");
+        // corruption is caught by the checksum
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        let err = Trace::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "err: {}", err);
+        // wrong magic is caught before anything else
+        let mut nomagic = bytes.clone();
+        nomagic[0] = b'X';
+        assert!(Trace::from_bytes(&nomagic).is_err());
+        // truncation is caught
+        assert!(Trace::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn events_are_time_ordered_and_churn_precedes_its_request() {
+        let trace = Trace::generate(&small_cfg());
+        let mut last = 0.0;
+        for ev in &trace.events {
+            assert!(ev.at_secs() >= last, "events out of order");
+            last = ev.at_secs();
+        }
+        // churn seeds are distinct (forked stream draws)
+        let seeds: Vec<u64> = trace
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Churn(c) => Some(c.seed),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(seeds.len(), 3);
+        assert!(seeds[0] != seeds[1] && seeds[1] != seeds[2]);
+    }
+
+    #[test]
+    fn zipf_sampler_is_skewed_and_in_range() {
+        let mut rng = Rng::new(7);
+        let z = ZipfSampler::new(100, 1.2, &mut rng);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        let top = z.id_of_rank(0) as usize;
+        let bottom = z.id_of_rank(99) as usize;
+        assert!(
+            counts[top] > 10 * counts[bottom].max(1),
+            "rank 0 ({}) vs rank 99 ({})",
+            counts[top],
+            counts[bottom]
+        );
+        let p0 = z.rank_probability(0);
+        let obs = counts[top] as f64 / 20_000.0;
+        assert!((obs - p0).abs() < 0.05, "obs {} vs theory {}", obs, p0);
+    }
+
+    #[test]
+    fn ids_stay_in_universe() {
+        let trace = Trace::generate(&small_cfg());
+        for ev in &trace.events {
+            if let TraceEvent::Request { req, .. } = ev {
+                assert!(req.ids().iter().all(|&id| (id as usize) < 64));
+            }
+        }
+    }
+}

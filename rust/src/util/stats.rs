@@ -14,6 +14,10 @@ pub struct Summary {
     pub p50: f64,
     pub p90: f64,
     pub p99: f64,
+    /// 99.9th percentile — the tail the traffic SLO gates bound. With
+    /// fewer than ~1000 samples this interpolates toward `max`, which is
+    /// the conservative (pessimistic) direction for a gate.
+    pub p999: f64,
     pub max: f64,
 }
 
@@ -37,6 +41,7 @@ impl Summary {
             p50: percentile_sorted(&sorted, 0.50),
             p90: percentile_sorted(&sorted, 0.90),
             p99: percentile_sorted(&sorted, 0.99),
+            p999: percentile_sorted(&sorted, 0.999),
             max: sorted[n - 1],
         })
     }
@@ -145,6 +150,15 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert!(s.p999 >= s.p99 && s.p999 <= s.max, "p999={}", s.p999);
+    }
+
+    #[test]
+    fn p999_orders_between_p99_and_max() {
+        let xs: Vec<f64> = (0..10_000).map(|i| i as f64).collect();
+        let s = Summary::of(&xs).unwrap();
+        assert!(s.p99 <= s.p999 && s.p999 <= s.max);
+        assert!((s.p999 - 9989.001).abs() < 1e-6, "p999={}", s.p999);
     }
 
     #[test]

@@ -10,9 +10,15 @@
 //! recomputed from cached values. The triangle inequality bounds their
 //! mutual distance by twice that.
 
+use std::sync::Arc;
+
 use deal::config::DealConfig;
 use deal::coordinator::delta::{DeltaState, UpdateBatch};
 use deal::coordinator::Pipeline;
+use deal::runtime::Native;
+use deal::serve::{refresh_delta, PoolOpts, Response, ServePool, ShardedTable, TableCell};
+use deal::tensor::Matrix;
+use deal::traffic::{replay, ReplayMode, ReplayOpts, Trace, TraceConfig, TraceEvent};
 use deal::util::prop::assert_close;
 use deal::util::rng::Rng;
 
@@ -57,6 +63,106 @@ fn replay_and_check(kind: &str, batches: usize, seed: u64) {
                 panic!("{} delta vs full recompute ({} prep): {}", kind, prep, e)
             });
     }
+}
+
+/// Replay an embed-only trace open-loop while churn events publish delta
+/// epochs mid-flight, and assert every response is **tear-free**: all of
+/// a response's rows must come from one single published epoch (epochs
+/// share unchanged rows, so more than one epoch may match — a torn read
+/// mixing rows of two epochs matches none). Runs against a resident
+/// table (`spill_budget == 0`) or a paged one.
+fn replay_is_tear_free(spill_budget: u64) {
+    let mut state = DeltaState::init(stream_cfg("gcn", "redistribute")).unwrap();
+    let table = if spill_budget > 0 {
+        ShardedTable::from_inference_plan_spilled(state.plan(), state.embeddings(), 0, spill_budget)
+            .unwrap()
+    } else {
+        ShardedTable::from_inference_plan(state.plan(), state.embeddings(), 0)
+    };
+    assert_eq!(table.is_spilled(), spill_budget > 0);
+    let cell = Arc::new(TableCell::new(table));
+    let n = cell.load().n_nodes();
+    let d = cell.load().dim();
+
+    let trace = Trace::generate(&TraceConfig {
+        seed: 0x7EA2,
+        n_nodes: n,
+        requests: 160,
+        base_rate: 50_000.0, // compress simulated time for the test
+        similar_fraction: 0.0, // embed-only: rows compare bitwise
+        churn_batches: 3,
+        ..TraceConfig::default()
+    });
+    assert_eq!(trace.n_churn(), 3);
+
+    let opts = PoolOpts { workers: 3, queue_capacity: 256, max_batch: 8, ..PoolOpts::default() };
+    let pool = ServePool::spawn(Arc::clone(&cell), Arc::new(Native), opts);
+
+    // one full-table snapshot per published epoch, starting at epoch 0
+    let mut snaps: Vec<Matrix> = vec![cell.load().to_full()];
+    let replay_opts =
+        ReplayOpts { mode: ReplayMode::OpenLoop { speed: 100.0 }, keep_responses: true };
+    let rep = replay(&pool, &trace, &replay_opts, |ev| {
+        let mut rng = Rng::new(ev.seed);
+        let batch = state.synth_batch(
+            &mut rng,
+            ev.edge_adds as usize,
+            ev.edge_removes as usize,
+            ev.feat_updates as usize,
+        );
+        let r = refresh_delta(&mut state, &batch, &cell)?;
+        snaps.push(cell.load().to_full());
+        Ok(r.epoch)
+    })
+    .unwrap();
+
+    assert_eq!(rep.churn_epochs, vec![1, 2, 3]);
+    assert_eq!(snaps.len(), 4);
+    assert_eq!(rep.stats.failed, 0);
+    assert_eq!(rep.stats.rejected, 0, "queue sized to admit the whole trace");
+
+    // every response's rows must sit inside a single epoch snapshot
+    let requests: Vec<&deal::serve::Request> = trace
+        .events
+        .iter()
+        .filter_map(|ev| match ev {
+            TraceEvent::Request { req, .. } => Some(req),
+            TraceEvent::Churn(_) => None,
+        })
+        .collect();
+    assert_eq!(requests.len(), rep.responses.len());
+    for (i, (req, resp)) in requests.iter().zip(&rep.responses).enumerate() {
+        let m = match resp.as_ref().unwrap_or_else(|| panic!("request {} dropped", i)) {
+            Response::Embeddings(m) => m,
+            _ => panic!("embed-only trace returned a similar response"),
+        };
+        let ids = req.ids();
+        assert_eq!(m.rows, ids.len());
+        assert_eq!(m.cols, d);
+        let whole_epoch = |s: &Matrix| {
+            ids.iter().enumerate().all(|(j, &id)| {
+                m.data[j * d..(j + 1) * d] == s.data[id as usize * d..(id as usize + 1) * d]
+            })
+        };
+        assert!(
+            snaps.iter().any(whole_epoch),
+            "request {} returned a torn response: rows match no single epoch",
+            i
+        );
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn open_loop_churn_epochs_are_tear_free_in_memory() {
+    replay_is_tear_free(0);
+}
+
+#[test]
+fn open_loop_churn_epochs_are_tear_free_spilled() {
+    // 8 KiB budget < the 256-row table: the initial epoch serves from the
+    // paged tier, and patched epochs promote touched shards on write.
+    replay_is_tear_free(8 << 10);
 }
 
 #[test]

@@ -329,6 +329,78 @@ fn distributed_pipeline_bit_identical_across_pool_sizes() {
 }
 
 #[test]
+fn batch_policies_bit_identical_on_replayed_traces() {
+    // The batch-formation policy seam (serve::BatchPolicy) may only move
+    // latency — never change responses. Replay random traces in
+    // sequenced mode under every policy and require digest-equal
+    // responses, and equality with the sequential EmbeddingServer oracle.
+    use deal::runtime::Native;
+    use deal::serve::{
+        response_digest, BatchPolicy, EmbeddingServer, PoolOpts, ServePool, ShardedTable,
+        TableCell,
+    };
+    use deal::traffic::{replay, ReplayMode, ReplayOpts, Trace, TraceConfig, TraceEvent};
+
+    run(Config::default().cases(4), |rng| {
+        let n = rng.range(16, 96);
+        let d = rng.range(2, 12);
+        let full = Matrix::random(n, d, 1.0, rng);
+        let trace = Trace::generate(&TraceConfig {
+            seed: rng.next_u64(),
+            n_nodes: n,
+            requests: rng.range(20, 120),
+            zipf_s: rng.next_f64() * 1.5,
+            similar_fraction: 0.3 + rng.next_f64() * 0.4,
+            churn_batches: 0, // static table: the oracle below has no churn
+            ..TraceConfig::default()
+        });
+
+        // sequential oracle digests
+        let server = EmbeddingServer::new(full.clone());
+        let oracle: Vec<u64> = trace
+            .events
+            .iter()
+            .filter_map(|ev| match ev {
+                TraceEvent::Request { req, .. } => Some(req),
+                TraceEvent::Churn(_) => None,
+            })
+            .map(|req| response_digest(&server.handle(req, &Native).unwrap()))
+            .collect();
+
+        let policies = [
+            BatchPolicy::DepthFirst,
+            BatchPolicy::Deadline { max_wait_us: rng.range(1, 500) as u64 },
+            BatchPolicy::SizeCapped { max_ids: rng.range(1, 64) },
+        ];
+        for policy in policies {
+            let shards = rng.range(1, 5);
+            let cell =
+                std::sync::Arc::new(TableCell::new(ShardedTable::from_full(&full, shards, 0)));
+            let pool = ServePool::spawn(
+                cell,
+                std::sync::Arc::new(Native),
+                PoolOpts { workers: rng.range(1, 4), policy, ..PoolOpts::default() },
+            );
+            let opts = ReplayOpts { mode: ReplayMode::Sequenced, ..ReplayOpts::default() };
+            let rep = replay(&pool, &trace, &opts, |_| Ok(0)).map_err(|e| e.to_string())?;
+            if rep.digests != oracle {
+                let diverged = rep.digests.iter().zip(&oracle).filter(|(a, b)| a != b).count();
+                return Err(format!(
+                    "policy {:?} diverged from the sequential oracle on {}/{} responses (n={} d={} shards={})",
+                    policy,
+                    diverged,
+                    oracle.len(),
+                    n,
+                    d,
+                    shards
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn partition_plans_compose_with_rng() {
     // smoke: plans built from random configs always validate
     let mut rng = Rng::new(1);

@@ -8,8 +8,8 @@ use std::sync::Arc;
 
 use deal::runtime::Native;
 use deal::serve::{
-    serve_workload_pooled, EmbeddingServer, PoolOpts, Request, Response, ServePool, ShardedTable,
-    TableCell,
+    serve_workload_pooled, EmbeddingServer, PoolOpts, Request, RequestClass, Response, ServePool,
+    ShardedTable, TableCell,
 };
 use deal::tensor::Matrix;
 use deal::util::rng::Rng;
@@ -219,6 +219,86 @@ fn admission_control_rejects_only_when_queue_is_full() {
     assert_eq!(stats.served, 4);
     assert_eq!(stats.rejected, 1);
     assert_eq!(stats.failed, 0);
+}
+
+#[test]
+fn burst_overload_sheds_load_without_losing_accounting() {
+    // A 10x admission burst against a gated single worker: every request
+    // must land in exactly one counter bucket (served / rejected /
+    // failed) — overload sheds load, it never silently drops requests —
+    // and the latency summary over the served survivors stays finite.
+    let n = 96;
+    let full = random_table(n, 8, 41);
+    let cell = Arc::new(TableCell::new(ShardedTable::from_full(&full, 2, 0)));
+    let capacity = 16;
+    let opts = PoolOpts {
+        workers: 1,
+        queue_capacity: capacity,
+        max_batch: 8,
+        start_paused: true, // gate the worker: the burst outruns service
+        ..PoolOpts::default()
+    };
+    let pool = ServePool::spawn(cell, Arc::new(Native), opts);
+
+    // 10x the queue capacity, alternating classes so both service
+    // classes see admissions *and* rejections.
+    let burst = 10 * capacity;
+    let mut tickets = Vec::new();
+    let mut admitted = [0u64; 2];
+    let mut bounced = [0u64; 2];
+    for i in 0..burst {
+        let (req, class) = if i % 2 == 0 {
+            (Request::Embed(vec![(i % n) as u32]), RequestClass::Embed)
+        } else {
+            (Request::Similar { ids: vec![(i % n) as u32], k: 3 }, RequestClass::Similar)
+        };
+        match pool.submit(req) {
+            Ok(t) => {
+                tickets.push(t);
+                admitted[class.index()] += 1;
+            }
+            Err(e) => {
+                assert!(e.to_string().contains("queue full"), "got: {}", e);
+                bounced[class.index()] += 1;
+            }
+        }
+    }
+    // the gated worker drained nothing, so admission is exact
+    assert_eq!(tickets.len(), capacity);
+    assert_eq!(bounced[0] + bounced[1], (burst - capacity) as u64);
+
+    pool.resume();
+    for t in tickets {
+        t.wait().expect("admitted requests still complete under overload");
+    }
+    let stats = pool.shutdown();
+
+    // conservation: submitted == served + rejected + failed, overall...
+    assert_eq!(stats.served + stats.rejected + stats.failed, burst as u64);
+    assert_eq!(stats.served, capacity as u64);
+    assert_eq!(stats.rejected, (burst - capacity) as u64);
+    assert_eq!(stats.failed, 0);
+    // ...and per class, with rejects attributed to the right class
+    for class in RequestClass::ALL {
+        let c = stats.class(class).counters;
+        assert_eq!(c.submitted, admitted[class.index()] + bounced[class.index()]);
+        assert_eq!(c.accounted(), c.submitted, "{} class leaked requests", class.name());
+        assert_eq!(c.rejected, bounced[class.index()]);
+        assert_eq!(c.served, admitted[class.index()]);
+        assert_eq!(c.failed, 0);
+    }
+
+    // the tail over the served survivors is a real, finite number — the
+    // overload shows up in admission counters, not in a poisoned summary
+    let lat = stats.latency.expect("served requests recorded latency");
+    assert_eq!(lat.n, capacity);
+    assert!(lat.p50.is_finite() && lat.p99.is_finite() && lat.p999.is_finite());
+    assert!(lat.p50 <= lat.p99 && lat.p99 <= lat.p999);
+    for class in RequestClass::ALL {
+        let cl = stats.class(class).latency.as_ref().expect("per-class latency");
+        assert_eq!(cl.n as u64, admitted[class.index()]);
+        assert!(cl.p99.is_finite());
+    }
 }
 
 #[test]

@@ -1,0 +1,225 @@
+//! Property tests on the traffic harness (ISSUE: trace determinism, skew
+//! and rate tolerances, format integrity). The trace is a *reproducible
+//! artifact*: identical seed + config must serialize byte-identically,
+//! distinct seeds must diverge, and the generated workload must actually
+//! exhibit the configured Zipf skew and aggregate arrival rate.
+
+use std::collections::HashMap;
+
+use deal::traffic::{Trace, TraceConfig, TraceEvent};
+use deal::util::prop::{run, Config};
+
+fn cfg_with(seed: u64, requests: usize) -> TraceConfig {
+    TraceConfig { seed, requests, n_nodes: 256, ..TraceConfig::default() }
+}
+
+#[test]
+fn same_seed_and_config_serialize_byte_identically() {
+    run(Config::default().cases(8), |rng| {
+        let cfg = TraceConfig {
+            seed: rng.next_u64(),
+            n_nodes: rng.range(4, 512),
+            requests: rng.range(1, 400),
+            zipf_s: rng.next_f64() * 1.5,
+            similar_fraction: rng.next_f64(),
+            churn_batches: rng.next_below(4),
+            ..TraceConfig::default()
+        };
+        let a = Trace::generate(&cfg).to_bytes();
+        let b = Trace::generate(&cfg).to_bytes();
+        if a != b {
+            return Err(format!("seed {} generated two different traces", cfg.seed));
+        }
+        // parse → reserialize is the identity (no information loss)
+        let back = Trace::from_bytes(&a).map_err(|e| e.to_string())?;
+        if back.to_bytes() != a {
+            return Err("roundtrip changed the bytes".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn distinct_seeds_produce_distinct_traces() {
+    run(Config::default().cases(8), |rng| {
+        let seed = rng.next_u64();
+        let a = Trace::generate(&cfg_with(seed, 64)).to_bytes();
+        let b = Trace::generate(&cfg_with(seed ^ 1, 64)).to_bytes();
+        if a == b {
+            return Err(format!("seeds {} and {} collided", seed, seed ^ 1));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zipf_skew_matches_theory_within_tolerance() {
+    // s = 1.0 over 256 nodes: the hottest key's theoretical share is
+    // 1/H_256 ≈ 0.163. Count ids across all requests and compare.
+    let cfg = TraceConfig {
+        zipf_s: 1.0,
+        similar_fraction: 0.0, // embed-only: 8 ids per request
+        ..cfg_with(0xBEEF, 4000)
+    };
+    let trace = Trace::generate(&cfg);
+    let mut counts: HashMap<u32, u64> = HashMap::new();
+    let mut total = 0u64;
+    for ev in &trace.events {
+        if let TraceEvent::Request { req, .. } = ev {
+            for &id in req.ids() {
+                *counts.entry(id).or_insert(0) += 1;
+                total += 1;
+            }
+        }
+    }
+    let h256: f64 = (1..=256).map(|k| 1.0 / k as f64).sum();
+    let theory = 1.0 / h256;
+    let top = *counts.values().max().unwrap() as f64 / total as f64;
+    assert!(
+        (theory * 0.6..theory * 1.4).contains(&top),
+        "top-key share {:.4} vs theoretical {:.4}",
+        top,
+        theory
+    );
+    // a mid-tail key is far colder than the head
+    let distinct = counts.len();
+    assert!(distinct > 64, "skewed draw still covers the universe, got {}", distinct);
+}
+
+#[test]
+fn zipf_s_zero_is_near_uniform() {
+    let cfg = TraceConfig {
+        zipf_s: 0.0,
+        similar_fraction: 0.0,
+        n_nodes: 64,
+        ..cfg_with(0xFEED, 3000)
+    };
+    let trace = Trace::generate(&cfg);
+    let mut counts = vec![0u64; 64];
+    let mut total = 0u64;
+    for ev in &trace.events {
+        if let TraceEvent::Request { req, .. } = ev {
+            for &id in req.ids() {
+                counts[id as usize] += 1;
+                total += 1;
+            }
+        }
+    }
+    let max_share = *counts.iter().max().unwrap() as f64 / total as f64;
+    // uniform share is 1/64 ≈ 0.0156; allow 2x sampling noise
+    assert!(max_share < 0.032, "max share {:.4} too skewed for s=0", max_share);
+}
+
+#[test]
+fn aggregate_rate_tracks_base_rate() {
+    // With bursts off, the thinned nonhomogeneous process must average
+    // the base rate over whole diurnal periods.
+    let cfg = TraceConfig {
+        base_rate: 1000.0,
+        burst_factor: 1.0,
+        diurnal_amplitude: 0.5,
+        diurnal_period_secs: 0.25,
+        ..cfg_with(0xCAFE, 4000)
+    };
+    let trace = Trace::generate(&cfg);
+    let duration = trace.duration_secs();
+    let rate = trace.n_requests() as f64 / duration;
+    assert!(
+        (850.0..1150.0).contains(&rate),
+        "aggregate rate {:.0}/s strays >15% from base 1000/s over {:.2}s",
+        rate,
+        duration
+    );
+}
+
+#[test]
+fn bursts_raise_local_density() {
+    // Same seedled arrivals with an aggressive burst profile: peak
+    // short-window arrival counts must exceed the burstless trace's.
+    let calm = Trace::generate(&TraceConfig {
+        burst_factor: 1.0,
+        diurnal_amplitude: 0.0,
+        ..cfg_with(0xB00, 3000)
+    });
+    let bursty = Trace::generate(&TraceConfig {
+        burst_factor: 8.0,
+        // frequent onsets: the short trace is guaranteed to hold bursts
+        burst_rate_hz: 20.0,
+        burst_secs: 0.05,
+        diurnal_amplitude: 0.0,
+        ..cfg_with(0xB00, 3000)
+    });
+    let peak_window = |t: &Trace| {
+        let times: Vec<f64> = t
+            .events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Request { .. }))
+            .map(|e| e.at_secs())
+            .collect();
+        let w = 0.02; // 20 ms window
+        let mut best = 0usize;
+        let mut lo = 0usize;
+        for hi in 0..times.len() {
+            while times[hi] - times[lo] > w {
+                lo += 1;
+            }
+            best = best.max(hi - lo + 1);
+        }
+        best
+    };
+    let calm_peak = peak_window(&calm);
+    let bursty_peak = peak_window(&bursty);
+    assert!(
+        bursty_peak as f64 > calm_peak as f64 * 1.5,
+        "burst peak {} not denser than calm peak {}",
+        bursty_peak,
+        calm_peak
+    );
+}
+
+#[test]
+fn churn_events_interleave_and_order() {
+    let cfg = TraceConfig { churn_batches: 4, ..cfg_with(0xD1CE, 1000) };
+    let trace = Trace::generate(&cfg);
+    assert_eq!(trace.n_churn(), 4);
+    assert_eq!(trace.n_requests(), 1000);
+    let mut last = 0.0;
+    let mut churn_positions = Vec::new();
+    for (i, ev) in trace.events.iter().enumerate() {
+        assert!(ev.at_secs() >= last, "event {} out of order", i);
+        last = ev.at_secs();
+        if let TraceEvent::Churn(c) = ev {
+            churn_positions.push(i);
+            assert!(c.edge_adds > 0);
+        }
+    }
+    // churn spreads across the trace, not clumped at the ends
+    assert!(churn_positions[0] > 100);
+    assert!(*churn_positions.last().unwrap() < trace.events.len() - 100);
+    // the artifact roundtrips through disk
+    let path = std::env::temp_dir().join(format!("deal-trace-props-{}.bin", std::process::id()));
+    trace.save(&path).unwrap();
+    let back = Trace::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(back.to_bytes(), trace.to_bytes());
+}
+
+#[test]
+fn corruption_version_and_truncation_are_rejected() {
+    let bytes = Trace::generate(&cfg_with(3, 50)).to_bytes();
+    // flip one payload byte → checksum failure
+    let mut corrupt = bytes.clone();
+    let mid = corrupt.len() / 2;
+    corrupt[mid] ^= 0x01;
+    let err = Trace::from_bytes(&corrupt).unwrap_err().to_string();
+    assert!(err.contains("checksum"), "unexpected error: {}", err);
+    // unknown version → version failure (before the checksum check bytes
+    // must be patched so only the version differs)
+    let mut vers = bytes.clone();
+    vers[8] = 99; // version u32 LE starts at offset 8
+    let err = Trace::from_bytes(&vers).unwrap_err().to_string();
+    assert!(err.contains("version"), "unexpected error: {}", err);
+    // truncation
+    assert!(Trace::from_bytes(&bytes[..10]).is_err());
+    assert!(Trace::from_bytes(&[]).is_err());
+}
