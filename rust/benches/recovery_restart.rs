@@ -1,0 +1,149 @@
+//! Warm restart vs cold recompute (EXPERIMENTS.md §Recovery): after a
+//! crash, `Pipeline::warm_restart` must rebuild the serving table from
+//! the durable store's log-over-checkpoint **bit-identically** (a hard
+//! assert, even under lax mode — it is correctness, not performance) and
+//! measurably faster than re-running the inference pipeline.
+//!
+//! The run: one cold pipeline (the thing restart avoids), a durable
+//! store checkpointing its embeddings, a few journaled patch epochs on
+//! top (so recovery replays a real log, not just a checkpoint read),
+//! then a timed warm restart.
+//!
+//! `DEAL_RECOVERY_BENCH_LAX=1` downgrades only the warm<cold speed gate
+//! to a warning (CI smoke on contended runners).
+//!
+//! Emits `target/bench_results/BENCH_recovery.json`.
+//!
+//! Run: `cargo bench --bench recovery_restart [-- --full]`
+
+use deal::config::DealConfig;
+use deal::coordinator::Pipeline;
+use deal::graph::delta::UpdateBatch;
+use deal::storage::{DurableOptions, DurableStore};
+use deal::tensor::Matrix;
+use deal::util::bench::{time_once, BenchArgs, Report, Table};
+use deal::util::human_secs;
+use deal::util::rng::Rng;
+
+const JOURNALED_EPOCHS: u64 = 3;
+
+fn cfg(scale: f64) -> DealConfig {
+    let mut c = DealConfig::default();
+    c.dataset.name = "products-sim".into();
+    c.dataset.scale = scale;
+    c.cluster.machines = 4;
+    c.cluster.feature_parts = 2;
+    c.model.layers = 2;
+    c.model.fanout = 5;
+    c
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let lax = std::env::var("DEAL_RECOVERY_BENCH_LAX").map_or(false, |v| v != "0");
+    // quick: 256-node graph; full: 1024 nodes
+    let scale = args.pick(1.0 / 256.0, 1.0 / 64.0);
+    let cfg = cfg(scale);
+
+    let mut report = Report::new("recovery_restart");
+
+    // ---- cold: the full inference pipeline (what restart avoids) -------
+    let pipeline = Pipeline::new(cfg.clone());
+    let (cold, cold_secs) = time_once(|| pipeline.run());
+    let cold = cold.expect("cold pipeline");
+    let embeddings = cold.embeddings.clone().expect("embeddings kept");
+    let (n, d) = (embeddings.rows, embeddings.cols);
+    report.note(format!(
+        "cold pipeline: {} × {} embeddings in {}",
+        n,
+        d,
+        human_secs(cold_secs)
+    ));
+
+    // ---- durable store: checkpoint + a journaled patch trail -----------
+    let dir = std::env::temp_dir().join(format!("deal-recov-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut store =
+        DurableStore::create(&dir, cfg.exec.seed, &embeddings, DurableOptions::default())
+            .expect("create store");
+    let mut expected = embeddings;
+    let mut rng = Rng::new(0xBE5C);
+    for epoch in 1..=JOURNALED_EPOCHS {
+        // a synthetic patch epoch: ~4% of rows get fresh values — what a
+        // delta refresh journals, minus the inference that produced it
+        let rows: Vec<u32> = (0..(n / 25).max(8)).map(|_| rng.next_below(n) as u32).collect();
+        let values = Matrix::random(rows.len(), d, 0.5, &mut rng);
+        store
+            .journal_delta(epoch, &UpdateBatch::default(), &rows, &values)
+            .expect("journal patch");
+        for (i, &r) in rows.iter().enumerate() {
+            expected.row_mut(r as usize).copy_from_slice(values.row(i));
+        }
+    }
+    let wal_records = store.wal_records();
+    report.note(format!(
+        "store: gen {} | {} wal records | {} journaled epochs",
+        store.generation(),
+        wal_records,
+        JOURNALED_EPOCHS
+    ));
+    drop(store);
+
+    // ---- warm: rebuild the serving state from disk ---------------------
+    let (warm, warm_secs) = time_once(|| pipeline.warm_restart(&dir));
+    let (warm_report, store, rec) = warm.expect("warm restart");
+    assert_eq!(rec.epoch, JOURNALED_EPOCHS, "recovered to the journaled tip");
+    assert_eq!(store.last_epoch(), JOURNALED_EPOCHS);
+
+    // hard assert, no tolerance: recovery is bit-identical
+    let recovered = warm_report.embeddings.as_ref().expect("recovered embeddings");
+    assert_eq!((recovered.rows, recovered.cols), (n, d), "recovered shape");
+    let a: Vec<u32> = recovered.data.iter().map(|v| v.to_bits()).collect();
+    let b: Vec<u32> = expected.data.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(a, b, "warm restart is not bit-identical to the pre-crash table");
+    report.note("bit-identity: recovered table == checkpoint + replayed patches (exact)");
+
+    let speedup = cold_secs / warm_secs.max(1e-12);
+    let mut t = Table::new("warm restart vs cold recompute", &["path", "wall", "speedup"]);
+    t.row(&["cold pipeline".into(), human_secs(cold_secs), "1.00x".into()]);
+    t.row(&["warm restart".into(), human_secs(warm_secs), format!("{:.2}x", speedup)]);
+    report.add_table(t);
+
+    let pass = warm_secs < cold_secs;
+    if !pass {
+        let msg = format!(
+            "warm restart ({}) not faster than cold recompute ({})",
+            human_secs(warm_secs),
+            human_secs(cold_secs)
+        );
+        if lax {
+            report.note(format!("LAX: {}", msg));
+        } else {
+            panic!("{}", msg);
+        }
+    }
+
+    // ---- machine-readable summary (schema: EXPERIMENTS.md §Recovery) ---
+    let json = format!(
+        "{{\n  \"bench\": \"recovery_restart\",\n  \"quick\": {},\n  \"nodes\": {},\n  \"dim\": {},\n  \"epochs\": {},\n  \"wal_records\": {},\n  \"cold_secs\": {:.6},\n  \"warm_secs\": {:.6},\n  \"speedup\": {:.3},\n  \"bit_identical\": true,\n  \"recovery_sim_secs\": {:.6},\n  \"pass\": {},\n  \"lax\": {}\n}}\n",
+        args.quick,
+        n,
+        d,
+        JOURNALED_EPOCHS,
+        wal_records,
+        cold_secs,
+        warm_secs,
+        speedup,
+        rec.sim_secs,
+        pass,
+        lax
+    );
+    let out = std::path::PathBuf::from("target/bench_results");
+    let _ = std::fs::create_dir_all(&out);
+    let json_path = out.join("BENCH_recovery.json");
+    std::fs::write(&json_path, &json).expect("write BENCH_recovery.json");
+    report.note(format!("wrote {}", json_path.display()));
+
+    let _ = std::fs::remove_dir_all(&dir);
+    report.finish();
+}

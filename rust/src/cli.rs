@@ -22,7 +22,7 @@ USAGE:
   deal run [--config FILE] [--set section.key=value]...   run the pipeline
   deal serve [--config FILE] [--set section.key=value]...
              [--requests N] [--workers W] [--batch B] [--refresh R]
-                                                          refresh + serve the table
+             [--storage-dir DIR] [--resume]               refresh + serve the table
   deal stream [--config FILE] [--set section.key=value]...
               [--batches N] [--churn F] [--feat-churn F] [--verify]
                                                           replay streaming updates
@@ -48,6 +48,16 @@ fraction of feature rows), publishing a *delta epoch* per batch — only
 affected rows are re-inferred and patched into the serving table.
 `--verify` finishes with a from-scratch full recompute and asserts the
 incremental state matches it.
+
+With `--storage-dir DIR` (sugar for `--set storage.dir=DIR`; the
+`DEAL_STORAGE_DIR` env works too) `serve` runs **durably**: the refreshed
+table is checkpointed into DIR and every published epoch — full refreshes
+and delta patches alike — is journaled to a checksummed write-ahead log
+*before* it becomes visible, so no client-visible state can be lost to a
+crash. `deal serve --resume` then skips the inference pipeline entirely:
+it replays log-over-checkpoint from DIR and rebuilds the exact (bit-
+identical) pre-crash serving table. The same directory also hosts the
+out-of-core tier's spill pages.
 
 `traffic` generates (or loads, `--trace-in`) a deterministic production
 trace — Zipfian key skew, diurnal + bursty Poisson arrivals, interleaved
@@ -91,7 +101,7 @@ cluster.machines, cluster.feature_parts, cluster.bandwidth_gbps,
 cluster.latency_us, model.kind, model.layers, model.fanout, model.weights,
 exec.mode, exec.group_cols, exec.backend, exec.feature_prep, exec.threads,
 exec.seed, pipeline.chunk_rows, storage.budget_bytes, storage.page_rows,
-traffic.requests, traffic.rate, traffic.zipf_s, traffic.diurnal,
+storage.dir, traffic.requests, traffic.rate, traffic.zipf_s, traffic.diurnal,
 traffic.burst, traffic.similar_frac, traffic.churn_batches,
 traffic.policy, traffic.speed
 ";
@@ -167,6 +177,10 @@ fn cfg_from_args(args: &[String]) -> Result<DealConfig> {
     if let Some(b) = flag_value(args, "--mem-budget") {
         cfg.storage.budget_bytes = crate::storage::parse_bytes(b)?;
     }
+    // `--storage-dir D` is sugar for `--set storage.dir=D`.
+    if let Some(d) = flag_value(args, "--storage-dir") {
+        cfg.storage.dir = d.to_string();
+    }
     Ok(cfg)
 }
 
@@ -179,6 +193,7 @@ fn apply_threads(cfg: &DealConfig) {
     crate::cluster::net::set_chunk_rows(cfg.pipeline.chunk_rows);
     crate::storage::set_mem_budget(cfg.storage.budget_bytes);
     crate::storage::set_page_rows(cfg.storage.page_rows);
+    crate::storage::set_storage_dir(&cfg.storage.dir);
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {
@@ -239,8 +254,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         serve_workload, serve_workload_pooled, synthetic_workload, EmbeddingServer, PoolOpts,
         Refresher, ServePool, TableCell,
     };
+    use crate::storage::{DurableOptions, DurableStore};
     use crate::util::rng::Rng;
-    use std::sync::Arc;
+    use std::sync::{Arc, Mutex};
 
     let cfg = cfg_from_args(args)?;
     apply_threads(&cfg);
@@ -248,6 +264,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let workers: usize = flag_value(args, "--workers").unwrap_or("4").parse()?;
     let max_batch: usize = flag_value(args, "--batch").unwrap_or("64").parse()?;
     let refreshes: usize = flag_value(args, "--refresh").unwrap_or("1").parse()?;
+    let resume = args.iter().any(|a| a == "--resume");
     anyhow::ensure!(requests > 0, "--requests must be > 0");
     anyhow::ensure!(workers > 0, "--workers must be > 0");
     anyhow::ensure!(max_batch > 0, "--batch must be > 0");
@@ -257,10 +274,49 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         cfg.dataset.name, cfg.dataset.scale, cfg.cluster.machines, cfg.exec.backend, workers, max_batch,
     );
 
-    // ---- epoch 0: refresh the table through the inference pipeline
+    // ---- epoch 0: refresh the table through the inference pipeline,
+    // or rebuild it from the durable store (`--resume`)
     let spill_budget = cfg.storage.budget_bytes;
+    let store_dir = crate::storage::storage_dir();
     let pipeline = Pipeline::new(cfg.clone());
-    let report = pipeline.run()?;
+    let (report, durable) = if resume {
+        let dir = store_dir.clone().ok_or_else(|| {
+            anyhow::anyhow!(
+                "--resume requires a storage directory (--storage-dir, storage.dir, or DEAL_STORAGE_DIR)"
+            )
+        })?;
+        anyhow::ensure!(DurableStore::exists(&dir), "--resume: no durable store in {:?}", dir);
+        let (report, store, rec) = pipeline.warm_restart(&dir)?;
+        println!(
+            "warm restart from {:?}: gen {} watermark {} epoch {} ({} wal records replayed{}, sim {})",
+            dir,
+            store.generation(),
+            rec.watermark,
+            rec.epoch,
+            rec.records_replayed,
+            if rec.trimmed_at.is_some() { ", torn tail trimmed" } else { "" },
+            human_secs(rec.sim_secs),
+        );
+        (report, Some((store, rec.epoch)))
+    } else {
+        let report = pipeline.run()?;
+        match &store_dir {
+            Some(dir) => {
+                let emb = report
+                    .embeddings
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("pipeline kept no embeddings"))?;
+                let store =
+                    DurableStore::create(dir, cfg.exec.seed, emb, DurableOptions::default())?;
+                println!("durable store created in {:?} (gen 0, epoch 0)", dir);
+                (report, Some((store, 0)))
+            }
+            None => (report, None),
+        }
+    };
+    let start_epoch = durable.as_ref().map_or(0, |(_, e)| *e);
+    let durable: Option<Arc<Mutex<DurableStore>>> =
+        durable.map(|(s, _)| Arc::new(Mutex::new(s)));
     let embeddings = report
         .embeddings
         .clone()
@@ -271,18 +327,20 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         crate::serve::ShardedTable::from_inference_plan_spilled(
             &report.plan,
             &embeddings,
-            0,
+            start_epoch,
             spill_budget,
         )?
     } else {
-        report.serving_table().expect("embeddings kept")
+        crate::serve::ShardedTable::from_inference_plan(&report.plan, &embeddings, start_epoch)
     };
     println!(
-        "refreshed {} × {} embeddings into {} shards{} (pipeline sim {})",
+        "{} {} × {} embeddings into {} shards{} at epoch {} (sim {})",
+        if resume { "recovered" } else { "refreshed" },
         table.n_nodes(),
         table.dim(),
         table.num_shards(),
         if table.is_spilled() { " [spilled]" } else { "" },
+        start_epoch,
         human_secs(report.stages.total()),
     );
     let cell = Arc::new(TableCell::new(table));
@@ -311,6 +369,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let mut refresher = Refresher::new(pipeline);
     if spill_budget > 0 {
         refresher = refresher.with_spill(spill_budget);
+    }
+    if let Some(store) = &durable {
+        refresher = refresher.with_durable(Arc::clone(store));
     }
     let (pooled, refresh_reports) = std::thread::scope(|scope| {
         let handle = (refreshes > 0).then(|| {
@@ -365,6 +426,19 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             c.page_faults,
             c.evictions,
             human_bytes(c.spill_bytes_written + c.spill_bytes_read),
+        );
+    }
+    if let Some(store) = &durable {
+        let s = store.lock().expect("durable store lock poisoned");
+        let c = s.counters();
+        println!(
+            "durable store: gen {} watermark {} epoch {} | wal {} | checkpoints {} | recoveries {}",
+            s.generation(),
+            s.watermark(),
+            s.last_epoch(),
+            human_bytes(c.wal_bytes),
+            c.checkpoints,
+            c.recoveries,
         );
     }
     anyhow::ensure!(final_stats.failed == 0, "{} requests failed", final_stats.failed);
@@ -786,13 +860,18 @@ mod tests {
         .iter()
         .map(|s| s.to_string())
         .collect();
-        // thread-local pin: this test's effective storage config stays
-        // resident even if a parallel test writes the process globals
-        let r = crate::storage::with_mem_budget(0, || dispatch(&args));
+        // thread-local pins: this test's effective storage config stays
+        // resident and ephemeral even if a parallel test writes the
+        // process globals or CI exports DEAL_STORAGE_DIR (a shared store
+        // dir across concurrent serves would clobber ckpt files)
+        let r = crate::storage::with_storage_dir("", || {
+            crate::storage::with_mem_budget(0, || dispatch(&args))
+        });
         // undo the process-global knob writes (`apply_threads`) so the
         // env-driven storage configuration of parallel tests survives
         crate::storage::set_mem_budget(u64::MAX);
         crate::storage::set_page_rows(usize::MAX);
+        crate::storage::set_storage_dir("");
         r.unwrap();
     }
 
@@ -820,15 +899,79 @@ mod tests {
         .iter()
         .map(|s| s.to_string())
         .collect();
-        // thread-local pin: the spilled run keeps its 16 KiB budget even
-        // if a parallel CLI test writes the process globals mid-flight
-        // (the paged tiers are guaranteed active, never silently vacuous)
-        let r = crate::storage::with_mem_budget(16 << 10, || dispatch(&args));
+        // thread-local pins: the spilled run keeps its 16 KiB budget and
+        // an ephemeral store even if a parallel CLI test writes the
+        // process globals mid-flight (the paged tiers are guaranteed
+        // active, never silently vacuous)
+        let r = crate::storage::with_storage_dir("", || {
+            crate::storage::with_mem_budget(16 << 10, || dispatch(&args))
+        });
         // reset the process-global knobs so parallel lib tests keep their
         // own (thread-local / env) storage configuration
         crate::storage::set_mem_budget(u64::MAX);
         crate::storage::set_page_rows(usize::MAX);
+        crate::storage::set_storage_dir("");
         r.unwrap();
+    }
+
+    #[test]
+    fn serve_resume_smoke() {
+        // durable round trip: a cold serve journals into --storage-dir,
+        // then `serve --resume` rebuilds the table from disk (no
+        // pipeline run) and keeps serving + journaling on top of it
+        let dir = std::env::temp_dir()
+            .join(format!("deal-serve-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let base: Vec<String> = [
+            "serve",
+            "--requests",
+            "30",
+            "--workers",
+            "2",
+            "--refresh",
+            "1",
+            "--storage-dir",
+            &dir.display().to_string(),
+            "--set",
+            "dataset.scale=0.00390625",
+            "--set",
+            "model.layers=2",
+            "--set",
+            "model.fanout=5",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let mut resume = base.clone();
+        resume.push("--resume".into());
+        // the thread-local pin beats any CI-wide DEAL_STORAGE_DIR, so
+        // this test's store is private to it
+        let r = crate::storage::with_storage_dir(&dir.display().to_string(), || {
+            crate::storage::with_mem_budget(0, || {
+                dispatch(&base)?;
+                anyhow::ensure!(
+                    crate::storage::DurableStore::exists(&dir),
+                    "cold serve left no durable store in {:?}",
+                    dir
+                );
+                dispatch(&resume)
+            })
+        });
+        crate::storage::set_mem_budget(u64::MAX);
+        crate::storage::set_page_rows(usize::MAX);
+        crate::storage::set_storage_dir("");
+        let _ = std::fs::remove_dir_all(&dir);
+        r.unwrap();
+        // --resume without any storage directory is a hard error
+        let bare: Vec<String> =
+            ["serve", "--resume"].iter().map(|s| s.to_string()).collect();
+        let err = crate::storage::with_storage_dir("", || {
+            crate::storage::with_mem_budget(0, || dispatch(&bare))
+        });
+        crate::storage::set_mem_budget(u64::MAX);
+        crate::storage::set_page_rows(usize::MAX);
+        crate::storage::set_storage_dir("");
+        assert!(err.is_err(), "--resume without a dir must fail");
     }
 
     #[test]
@@ -854,9 +997,12 @@ mod tests {
         .iter()
         .map(|s| s.to_string())
         .collect();
-        let r = crate::storage::with_mem_budget(0, || dispatch(&args));
+        let r = crate::storage::with_storage_dir("", || {
+            crate::storage::with_mem_budget(0, || dispatch(&args))
+        });
         crate::storage::set_mem_budget(u64::MAX);
         crate::storage::set_page_rows(usize::MAX);
+        crate::storage::set_storage_dir("");
         r.unwrap();
     }
 
@@ -896,12 +1042,15 @@ mod tests {
             trace_path.display().to_string(),
             "--sweep".into(),
         ]);
-        let r = crate::storage::with_mem_budget(0, || {
-            dispatch(&open_loop)?;
-            dispatch(&sweep)
+        let r = crate::storage::with_storage_dir("", || {
+            crate::storage::with_mem_budget(0, || {
+                dispatch(&open_loop)?;
+                dispatch(&sweep)
+            })
         });
         crate::storage::set_mem_budget(u64::MAX);
         crate::storage::set_page_rows(usize::MAX);
+        crate::storage::set_storage_dir("");
         let _ = std::fs::remove_file(&trace_path);
         r.unwrap();
     }

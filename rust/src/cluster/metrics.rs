@@ -24,6 +24,12 @@ pub struct StorageCounters {
     pub peak_resident_bytes: u64,
     /// Effective byte budget the cache ran under (0 = unbounded).
     pub budget_bytes: u64,
+    /// Bytes appended (and fsync'd) to the durable write-ahead log.
+    pub wal_bytes: u64,
+    /// Checkpoints written by the durable store (create + compactions).
+    pub checkpoints: u64,
+    /// Recoveries performed (log-over-checkpoint replays on open).
+    pub recoveries: u64,
 }
 
 impl StorageCounters {
@@ -35,6 +41,9 @@ impl StorageCounters {
         self.spill_bytes_read += other.spill_bytes_read;
         self.peak_resident_bytes = self.peak_resident_bytes.max(other.peak_resident_bytes);
         self.budget_bytes = self.budget_bytes.max(other.budget_bytes);
+        self.wal_bytes += other.wal_bytes;
+        self.checkpoints += other.checkpoints;
+        self.recoveries += other.recoveries;
     }
 }
 
@@ -205,6 +214,21 @@ impl ClusterReport {
         self.mem.iter().map(|m| m.underflow_events()).sum()
     }
 
+    /// Total bytes fsync'd into durable write-ahead logs across machines.
+    pub fn total_wal_bytes(&self) -> u64 {
+        self.machines.iter().map(|m| m.storage.wal_bytes).sum()
+    }
+
+    /// Total durable checkpoints written across machines.
+    pub fn total_checkpoints(&self) -> u64 {
+        self.machines.iter().map(|m| m.storage.checkpoints).sum()
+    }
+
+    /// Total durable-store recoveries performed across machines.
+    pub fn total_recoveries(&self) -> u64 {
+        self.machines.iter().map(|m| m.storage.recoveries).sum()
+    }
+
     /// Total simulated compute across machines.
     pub fn total_compute(&self) -> f64 {
         self.machines.iter().map(|m| m.sim_compute_secs).sum()
@@ -221,7 +245,7 @@ impl ClusterReport {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "makespan={} comm={} msgs={} chunks={} compute(max)={} wait(max)={} peak_mem(max)={} faults={} spill={} underflow={}",
+            "makespan={} comm={} msgs={} chunks={} compute(max)={} wait(max)={} peak_mem(max)={} faults={} spill={} underflow={} wal={} ckpts={} recov={}",
             human_secs(self.makespan()),
             human_bytes(self.total_bytes()),
             self.total_msgs(),
@@ -237,6 +261,9 @@ impl ClusterReport {
             self.total_page_faults(),
             human_bytes(self.total_spill_bytes()),
             self.total_underflows(),
+            human_bytes(self.total_wal_bytes()),
+            self.total_checkpoints(),
+            self.total_recoveries(),
         )
     }
 
@@ -353,6 +380,24 @@ mod tests {
         assert_eq!(a.max_storage_resident(), 40, "peaks max, not add");
         assert_eq!(a.machines[0].storage.evictions, 4);
         assert!(a.summary().contains("faults=6"));
+    }
+
+    #[test]
+    fn durability_counters_chain_and_surface() {
+        let mut a = ClusterReport::new(2);
+        a.machines[0].storage.wal_bytes = 2048;
+        a.machines[0].storage.checkpoints = 2;
+        a.machines[1].storage.recoveries = 1;
+        let mut b = ClusterReport::new(2);
+        b.machines[0].storage.wal_bytes = 1024;
+        b.machines[0].storage.checkpoints = 1;
+        a.chain(&b);
+        assert_eq!(a.total_wal_bytes(), 3072);
+        assert_eq!(a.total_checkpoints(), 3);
+        assert_eq!(a.total_recoveries(), 1);
+        let s = a.summary();
+        assert!(s.contains("wal=3.00 KiB"), "{}", s);
+        assert!(s.contains("ckpts=3") && s.contains("recov=1"), "{}", s);
     }
 
     #[test]

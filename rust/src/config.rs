@@ -99,6 +99,13 @@ pub struct StorageCfg {
     /// Rows per page for the paged tiers (`storage::page_rows` chain;
     /// `DEAL_PAGE_ROWS` env for library/test use). Must be >= 1.
     pub page_rows: usize,
+    /// Durable storage directory (`storage::storage_dir` chain;
+    /// `--storage-dir` CLI sugar, `DEAL_STORAGE_DIR` env for
+    /// library/test use). Empty = ephemeral: spill files are
+    /// per-process tempfiles and nothing survives exit. Non-empty roots
+    /// the log-structured store `deal serve --resume` recovers from
+    /// (DESIGN.md §Durability).
+    pub dir: String,
 }
 
 /// Traffic-harness knobs for `deal traffic` (`crate::traffic`;
@@ -174,6 +181,7 @@ impl Default for DealConfig {
             storage: StorageCfg {
                 budget_bytes: 0, // unbounded: in-memory tiers, no paging
                 page_rows: crate::storage::DEFAULT_PAGE_ROWS,
+                dir: String::new(), // ephemeral: no durable store
             },
             traffic: TrafficCfg {
                 requests: 4096,
@@ -228,6 +236,7 @@ impl DealConfig {
             "exec.seed" => self.exec.seed = v.parse()?,
             "pipeline.chunk_rows" => self.pipeline.chunk_rows = v.parse()?,
             "storage.budget_bytes" => self.storage.budget_bytes = crate::storage::parse_bytes(v)?,
+            "storage.dir" => self.storage.dir = v.to_string(),
             "storage.page_rows" => {
                 self.storage.page_rows = v.parse()?;
                 anyhow::ensure!(self.storage.page_rows >= 1, "storage.page_rows must be >= 1");
@@ -356,6 +365,9 @@ mod tests {
         assert_eq!(cfg.storage.page_rows, 64);
         assert!(cfg.set("storage.page_rows", "0").is_err());
         assert!(cfg.set("storage.budget_bytes", "lots").is_err());
+        assert_eq!(cfg.storage.dir, "", "default is ephemeral");
+        cfg.set("storage.dir", "/tmp/deal-store").unwrap();
+        assert_eq!(cfg.storage.dir, "/tmp/deal-store");
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod delta;
 pub mod feature_prep;
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::cluster::{Cluster, ClusterReport, Ctx, Payload, Tag};
@@ -332,6 +332,62 @@ impl Pipeline {
             None
         };
         Ok(RunReport { stages, plan, embeddings, max_peak_mem: max_peak })
+    }
+
+    /// Rebuild the serving state from a durable store instead of
+    /// recomputing it: open `dir`, replay log-over-checkpoint, and wrap
+    /// the recovered table in a [`RunReport`] shaped like [`run`]'s (one
+    /// `"recovery"` stage whose cluster report carries the store's
+    /// durability counters), so `deal serve --resume` and the restart
+    /// bench reuse every downstream path unchanged.
+    ///
+    /// Returns the report, the reopened store (ready for further
+    /// journaling), and the recovery details — with [`Recovered::table`]
+    /// moved into `report.embeddings` (the `Recovered` copy is emptied).
+    ///
+    /// [`run`]: Pipeline::run
+    pub fn warm_restart(
+        &self,
+        dir: &Path,
+    ) -> Result<(RunReport, crate::storage::DurableStore, crate::storage::Recovered)> {
+        use crate::storage::{DurableOptions, DurableStore};
+
+        let (p, m) = self.cfg.parts()?;
+        let (opened, wall) = time_once(|| DurableStore::open(dir, DurableOptions::default()));
+        let (store, mut rec) = opened?;
+        anyhow::ensure!(
+            store.seed() == self.cfg.exec.seed,
+            "durable store in {:?} was written with seed {}, config says {}",
+            dir,
+            store.seed(),
+            self.cfg.exec.seed
+        );
+        let table = std::mem::replace(&mut rec.table, Matrix::zeros(0, 0));
+        anyhow::ensure!(
+            table.rows > 0 && table.cols >= m,
+            "recovered table {}x{} cannot shard over {} feature parts",
+            table.rows,
+            table.cols,
+            m
+        );
+        let plan = PartitionPlan::new(table.rows, table.cols, p, m);
+        let mut cluster = ClusterReport::new(1);
+        cluster.machines[0].storage = store.counters();
+        cluster.final_clocks[0] = rec.sim_secs;
+        let mut stages = Stages::default();
+        stages.push(StageReport {
+            name: "recovery",
+            wall_secs: wall,
+            sim_secs: rec.sim_secs,
+            cluster: Some(cluster),
+        });
+        let report = RunReport {
+            stages,
+            plan,
+            embeddings: Some(table),
+            max_peak_mem: 0,
+        };
+        Ok((report, store, rec))
     }
 }
 

@@ -31,7 +31,9 @@ pub mod shard;
 
 pub use batch::{top_k, BatchPolicy, SimilarBatch};
 pub use pool::{ClassStats, PoolOpts, PoolStats, ServePool, StatsMark, Ticket};
-pub use refresh::{refresh_delta, DeltaRefreshReport, RefreshReport, Refresher, TableCell};
+pub use refresh::{
+    refresh_delta, refresh_delta_durable, DeltaRefreshReport, RefreshReport, Refresher, TableCell,
+};
 pub use shard::ShardedTable;
 
 use std::time::Instant;

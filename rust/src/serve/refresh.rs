@@ -25,10 +25,11 @@
 //! patch.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::coordinator::delta::{DeltaState, UpdateBatch};
 use crate::coordinator::Pipeline;
+use crate::storage::DurableStore;
 use crate::Result;
 
 use super::shard::ShardedTable;
@@ -95,18 +96,28 @@ pub struct Refresher {
     /// `budget` resident bytes instead of doubling table RAM
     /// (DESIGN.md §Out-of-core-storage).
     spill_budget: u64,
+    /// Journal target: every published epoch is made durable *before*
+    /// the swap (DESIGN.md §Durability). `None` = ephemeral serving.
+    durable: Option<Arc<Mutex<DurableStore>>>,
 }
 
 impl Refresher {
     pub fn new(mut pipeline: Pipeline) -> Refresher {
         // the refresher exists to harvest the embeddings
         pipeline.keep_embeddings = true;
-        Refresher { pipeline, spill_budget: 0 }
+        Refresher { pipeline, spill_budget: 0, durable: None }
     }
 
     /// Publish future epochs as spilled tables under `budget_bytes`.
     pub fn with_spill(mut self, budget_bytes: u64) -> Refresher {
         self.spill_budget = budget_bytes;
+        self
+    }
+
+    /// Journal every future epoch into `store` before publishing it, so
+    /// a crash between two refreshes recovers the last published table.
+    pub fn with_durable(mut self, store: Arc<Mutex<DurableStore>>) -> Refresher {
+        self.durable = Some(store);
         self
     }
 
@@ -116,7 +127,9 @@ impl Refresher {
 
     /// Run the full pipeline and atomically publish the new epoch into
     /// `cell`. In-flight requests keep being served from the old epoch
-    /// throughout.
+    /// throughout. In durable mode the new table is checkpointed and its
+    /// publish journaled *before* the swap — the epoch becomes visible
+    /// only once it is recoverable.
     pub fn refresh(&self, cell: &TableCell) -> Result<RefreshReport> {
         let t0 = std::time::Instant::now();
         let report = self.pipeline.run()?;
@@ -135,6 +148,10 @@ impl Refresher {
             ShardedTable::from_inference_plan(&report.plan, embeddings, 0)
         };
         let (nodes, dim) = (table.n_nodes(), table.dim());
+        if let Some(store) = &self.durable {
+            let mut s = store.lock().expect("durable store lock poisoned");
+            s.journal_publish(cell.epoch() + 1, embeddings)?;
+        }
         let epoch = cell.publish(table);
         let (mut net_bytes, mut net_msgs) = (0u64, 0u64);
         for stage in &report.stages.0 {
@@ -184,12 +201,48 @@ pub fn refresh_delta(
     batch: &UpdateBatch,
     cell: &TableCell,
 ) -> Result<DeltaRefreshReport> {
+    refresh_delta_inner(state, batch, cell, None)
+}
+
+/// [`refresh_delta`] with journal-before-publish: the batch and the row
+/// patch it produced are fsync'd into `store` before the epoch becomes
+/// visible, and the store compacts (checkpoint + WAL rotation) once its
+/// log passes the configured record budget. A crash at any point loses
+/// only the epoch that was never published (DESIGN.md §Durability).
+pub fn refresh_delta_durable(
+    state: &mut DeltaState,
+    batch: &UpdateBatch,
+    cell: &TableCell,
+    store: &Mutex<DurableStore>,
+) -> Result<DeltaRefreshReport> {
+    refresh_delta_inner(state, batch, cell, Some(store))
+}
+
+fn refresh_delta_inner(
+    state: &mut DeltaState,
+    batch: &UpdateBatch,
+    cell: &TableCell,
+    store: Option<&Mutex<DurableStore>>,
+) -> Result<DeltaRefreshReport> {
     let t0 = std::time::Instant::now();
     let rep = state.apply(batch)?;
     let idx: Vec<usize> = rep.updated_rows.iter().map(|&v| v as usize).collect();
     let values = state.embeddings().gather_rows(&idx);
     let next = cell.load().patched(&rep.updated_rows, &values)?;
+    if let Some(store) = store {
+        let mut s = store.lock().expect("durable store lock poisoned");
+        s.journal_delta(cell.epoch() + 1, batch, &rep.updated_rows, &values)?;
+    }
     let epoch = cell.publish(next);
+    if let Some(store) = store {
+        let mut s = store.lock().expect("durable store lock poisoned");
+        if s.should_compact() {
+            // compaction snapshots the *published* table, shifting the
+            // watermark up to the epoch the WAL was journaling
+            let full = cell.load().to_full();
+            s.compact(epoch, &full)?;
+        }
+    }
     Ok(DeltaRefreshReport {
         epoch,
         updated_rows: rep.updated_rows.len(),
@@ -289,6 +342,59 @@ mod tests {
         assert_eq!(b.to_full(), a.to_full(), "spilled epoch serves identical embeddings");
         assert!(b.resident_bytes() < a.resident_bytes(), "spill bounds the new epoch's RAM");
         assert!(b.storage_counters().spill_bytes_written > 0);
+    }
+
+    #[test]
+    fn durable_delta_refresh_journals_and_survives_reopen() {
+        use crate::storage::{DurableOptions, DurableStore};
+        use crate::util::rng::Rng;
+
+        let dir = std::env::temp_dir()
+            .join(format!("deal-refresh-durable-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let mut cfg = DealConfig::default();
+        cfg.dataset.scale = 1.0 / 256.0; // 256 nodes
+        cfg.cluster.machines = 4;
+        cfg.model.layers = 2;
+        cfg.model.fanout = 5;
+        let mut state = DeltaState::init(cfg).unwrap();
+        let store = DurableStore::create(
+            &dir,
+            0,
+            state.embeddings(),
+            DurableOptions { compact_every: 2 },
+        )
+        .unwrap();
+        let store = Mutex::new(store);
+        let table =
+            ShardedTable::from_inference_plan(state.plan(), state.embeddings(), 0);
+        let cell = TableCell::new(table);
+
+        let mut rng = Rng::new(0xD00D);
+        for _ in 0..3 {
+            let batch = state.synth_batch(&mut rng, 10, 10, 1);
+            refresh_delta_durable(&mut state, &batch, &cell, &store).unwrap();
+        }
+        assert_eq!(cell.epoch(), 3);
+        {
+            let s = store.lock().unwrap();
+            // 3 deltas with compact_every=2 → one compaction happened
+            assert!(s.generation() >= 1, "gen {}", s.generation());
+            assert!(s.watermark() >= 2);
+            assert_eq!(s.last_epoch(), 3);
+            assert!(s.counters().wal_bytes > 0);
+            assert!(s.counters().checkpoints >= 2); // create + compaction
+        }
+        drop(store);
+
+        let rec = DurableStore::open(&dir, DurableOptions::default()).unwrap().1;
+        assert_eq!(rec.epoch, 3);
+        let a: Vec<u32> = rec.table.data.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> =
+            state.embeddings().data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "recovered table must be bit-identical to live state");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! Checkpoints: page-written table snapshots with an atomic commit.
+//!
+//! A checkpoint is two files per generation: `ckpt-<gen>.pages` — the raw
+//! row-major f32 grid, written page-by-page through a *durable*
+//! [`PageFile`] (so checkpoint I/O is charged to the same simulated spill
+//! device as every other storage tier) — and `ckpt-<gen>.meta`, the
+//! **commit point**: a small, checksummed header binding the generation,
+//! epoch, geometry, seed, and a whole-grid FNV digest of the pages file.
+//! A generation is live iff its meta file exists and self-checksums; a
+//! crash anywhere before the meta write leaves only ignorable debris,
+//! and a crash *during* it leaves a meta that fails its own checksum and
+//! is likewise ignored. Recovery therefore picks the newest generation
+//! with a valid meta and verifies the pages digest (a valid commit over
+//! rotten pages is real corruption and fails loudly).
+//!
+//! The pages digest is computed incrementally during the write — the
+//! bytes hashed are exactly the bytes written, in order.
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::coordinator::SimFs;
+use crate::storage::PageFile;
+use crate::tensor::Matrix;
+use crate::util::{fnv1a, fnv1a_extend, FNV_OFFSET};
+use crate::Result;
+
+use super::crash::{self, CrashPoint};
+
+/// Checkpoint meta-file magic.
+pub const CKPT_MAGIC: [u8; 8] = *b"DEALCKPT";
+/// Checkpoint format version.
+pub const CKPT_VERSION: u32 = 1;
+/// Meta-file length: magic + version + gen + epoch + rows + cols +
+/// page_rows + seed + pages digest + trailing self-checksum.
+pub const META_LEN: usize = 8 + 4 + 8 + 8 + 8 + 4 + 4 + 8 + 8 + 8;
+
+/// Path of generation `gen`'s meta (commit-point) file.
+pub fn meta_path(dir: &Path, gen: u64) -> PathBuf {
+    dir.join(format!("ckpt-{}.meta", gen))
+}
+
+/// Path of generation `gen`'s pages file.
+pub fn pages_path(dir: &Path, gen: u64) -> PathBuf {
+    dir.join(format!("ckpt-{}.pages", gen))
+}
+
+/// A committed checkpoint's decoded meta file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CheckpointMeta {
+    /// Generation number (file-name echo).
+    pub gen: u64,
+    /// Serving epoch the snapshot captures.
+    pub epoch: u64,
+    /// Table rows.
+    pub rows: u64,
+    /// Table columns (embedding width).
+    pub cols: u32,
+    /// Page granularity the pages file was written with.
+    pub page_rows: u32,
+    /// Pipeline seed echoed for mismatch detection.
+    pub seed: u64,
+    /// FNV-1a over the pages file's f32 little-endian bytes, in order.
+    pub pages_fnv: u64,
+}
+
+/// Write generation `gen`'s checkpoint of `table` at `epoch` and commit
+/// it. Every page write is a [`CrashPoint::CheckpointWrite`]; the meta
+/// write is *the* [`CrashPoint::CheckpointCommit`]. Returns (bytes
+/// written, simulated I/O seconds).
+pub fn write(
+    dir: &Path,
+    gen: u64,
+    epoch: u64,
+    table: &Matrix,
+    seed: u64,
+    fs: &Arc<SimFs>,
+) -> Result<(u64, f64)> {
+    std::fs::create_dir_all(dir)?;
+    // clobber any debris from a previously crashed attempt at this gen
+    let _ = std::fs::remove_file(meta_path(dir, gen));
+    let page_rows = crate::storage::page_rows();
+    let mut pf = PageFile::create_durable(
+        &pages_path(dir, gen),
+        table.rows,
+        table.cols,
+        page_rows,
+        Arc::clone(fs),
+    )?;
+    let mut io = 0.0;
+    let mut digest = FNV_OFFSET;
+    for p in 0..pf.n_pages() {
+        crash::step(CrashPoint::CheckpointWrite)?;
+        let (lo, hi) = pf.page_row_range(p);
+        let band = &table.data[lo * table.cols..hi * table.cols];
+        io += pf.write_page(p, band)?;
+        for v in band {
+            digest = fnv1a_extend(digest, &v.to_le_bytes());
+        }
+    }
+    pf.sync()?;
+    let bytes = pf.bytes_written;
+
+    crash::step(CrashPoint::CheckpointCommit)?;
+    let mut meta = Vec::with_capacity(META_LEN);
+    meta.extend_from_slice(&CKPT_MAGIC);
+    meta.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+    meta.extend_from_slice(&gen.to_le_bytes());
+    meta.extend_from_slice(&epoch.to_le_bytes());
+    meta.extend_from_slice(&(table.rows as u64).to_le_bytes());
+    meta.extend_from_slice(&(table.cols as u32).to_le_bytes());
+    meta.extend_from_slice(&(page_rows as u32).to_le_bytes());
+    meta.extend_from_slice(&seed.to_le_bytes());
+    meta.extend_from_slice(&digest.to_le_bytes());
+    meta.extend_from_slice(&fnv1a(&meta).to_le_bytes());
+    let mut f = OpenOptions::new()
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .open(meta_path(dir, gen))?;
+    f.write_all(&meta)?;
+    f.sync_data()?;
+    Ok((bytes + meta.len() as u64, io + fs.charge(meta.len() as u64)))
+}
+
+/// Read and validate generation `gen`'s meta file. An unreadable or
+/// checksum-failing meta means the commit never completed — callers
+/// treat that generation as absent, not corrupt.
+pub fn read_meta(dir: &Path, gen: u64) -> Result<CheckpointMeta> {
+    let bytes = std::fs::read(meta_path(dir, gen))?;
+    anyhow::ensure!(
+        bytes.len() == META_LEN && bytes[..8] == CKPT_MAGIC,
+        "checkpoint meta gen {}: wrong length or magic",
+        gen
+    );
+    let stored = u64::from_le_bytes(bytes[META_LEN - 8..].try_into().unwrap());
+    anyhow::ensure!(
+        fnv1a(&bytes[..META_LEN - 8]) == stored,
+        "checkpoint meta gen {}: checksum mismatch (incomplete commit)",
+        gen
+    );
+    let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+    let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+    let version = u32_at(8);
+    anyhow::ensure!(
+        version == CKPT_VERSION,
+        "checkpoint meta gen {}: version {} (this build reads {})",
+        gen,
+        version,
+        CKPT_VERSION
+    );
+    let meta = CheckpointMeta {
+        gen: u64_at(12),
+        epoch: u64_at(20),
+        rows: u64_at(28),
+        cols: u32_at(36),
+        page_rows: u32_at(40),
+        seed: u64_at(44),
+        pages_fnv: u64_at(52),
+    };
+    anyhow::ensure!(
+        meta.gen == gen,
+        "checkpoint meta gen {}: file claims gen {}",
+        gen,
+        meta.gen
+    );
+    Ok(meta)
+}
+
+/// Load generation `gen`'s table: read the pages back through a durable
+/// [`PageFile`] and verify the whole-grid digest against the committed
+/// meta. A digest mismatch *here* is corruption (the commit was valid),
+/// so it fails hard. Returns (meta, table, simulated I/O seconds).
+pub fn read(dir: &Path, gen: u64, fs: &Arc<SimFs>) -> Result<(CheckpointMeta, Matrix, f64)> {
+    let meta = read_meta(dir, gen)?;
+    let mut pf = PageFile::open_durable(
+        &pages_path(dir, gen),
+        meta.cols as usize,
+        (meta.page_rows as usize).max(1),
+        Arc::clone(fs),
+    )?;
+    anyhow::ensure!(
+        pf.rows as u64 == meta.rows,
+        "checkpoint gen {}: pages file holds {} rows, meta says {}",
+        gen,
+        pf.rows,
+        meta.rows
+    );
+    let mut data = Vec::with_capacity(meta.rows as usize * meta.cols as usize);
+    let mut buf = Vec::new();
+    let mut io = 0.0;
+    for p in 0..pf.n_pages() {
+        io += pf.read_page(p, &mut buf)?;
+        data.extend_from_slice(&buf);
+    }
+    let mut digest = FNV_OFFSET;
+    for v in &data {
+        digest = fnv1a_extend(digest, &v.to_le_bytes());
+    }
+    anyhow::ensure!(
+        digest == meta.pages_fnv,
+        "checkpoint gen {}: pages digest {:#018x} != committed {:#018x} (pages file corrupt)",
+        gen,
+        digest,
+        meta.pages_fnv
+    );
+    Ok((meta, Matrix::from_vec(meta.rows as usize, meta.cols as usize, data), io))
+}
+
+/// Generations present in `dir` (by meta file name, committed or not),
+/// newest first.
+pub fn list_gens(dir: &Path) -> Result<Vec<u64>> {
+    let mut gens = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(gens), // absent dir = no checkpoints
+    };
+    for entry in entries {
+        let name = entry?.file_name();
+        let name = name.to_string_lossy();
+        if let Some(g) = name
+            .strip_prefix("ckpt-")
+            .and_then(|s| s.strip_suffix(".meta"))
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            gens.push(g);
+        }
+    }
+    gens.sort_unstable_by(|a, b| b.cmp(a));
+    Ok(gens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("deal-ckpt-{}-{}", std::process::id(), tag));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn write_read_roundtrip_is_bit_exact() {
+        let dir = tmp_dir("rt");
+        let fs = SimFs::new(16.0);
+        let table = Matrix::from_vec(5, 3, (0..15).map(|i| (i as f32) * -0.5).collect());
+        let (bytes, io) = crate::storage::with_page_rows(2, || {
+            write(&dir, 3, 7, &table, 0x5EED, &fs)
+        })
+        .unwrap();
+        assert!(bytes >= table.nbytes() && io > 0.0);
+        let (meta, back, _) = read(&dir, 3, &fs).unwrap();
+        assert_eq!(
+            (meta.gen, meta.epoch, meta.rows, meta.cols, meta.seed),
+            (3, 7, 5, 3, 0x5EED)
+        );
+        let a: Vec<u32> = table.data.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = back.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+        assert_eq!(list_gens(&dir).unwrap(), vec![3]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_commit_is_absent_but_rotten_pages_are_corrupt() {
+        let dir = tmp_dir("commit");
+        let fs = SimFs::new(16.0);
+        let table = Matrix::from_vec(4, 2, vec![1.0; 8]);
+        write(&dir, 0, 1, &table, 9, &fs).unwrap();
+        // truncated meta = crashed commit: not an error, just not live
+        let mp = meta_path(&dir, 0);
+        let full = std::fs::read(&mp).unwrap();
+        std::fs::write(&mp, &full[..full.len() - 3]).unwrap();
+        assert!(read_meta(&dir, 0).is_err());
+        // restore the commit, then rot the pages: now it is corruption
+        std::fs::write(&mp, &full).unwrap();
+        read(&dir, 0, &fs).unwrap();
+        let pp = pages_path(&dir, 0);
+        let mut pages = std::fs::read(&pp).unwrap();
+        pages[5] ^= 0x40;
+        std::fs::write(&pp, &pages).unwrap();
+        let err = read(&dir, 0, &fs).unwrap_err();
+        assert!(format!("{:#}", err).contains("corrupt"), "{:#}", err);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_dir_lists_no_generations() {
+        let dir = tmp_dir("empty");
+        assert!(list_gens(&dir).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(list_gens(&dir).unwrap().is_empty(), "absent dir too");
+    }
+}

@@ -1,0 +1,162 @@
+//! Deterministic crash-point injection for the durable store.
+//!
+//! Durability claims are only as good as the crashes they survive, so the
+//! fault hook is part of the subsystem, not the test suite: every
+//! irreversible step of the log-structured store — each WAL append, each
+//! checkpoint page write, the checkpoint commit, the WAL rotation, the
+//! old-generation cleanup — calls [`step`] before doing its work. Arming
+//! the hook with [`arm`]`(n)` makes the `n`-th step on this thread fail
+//! with a [`CrashInjected`] error instead of completing, which is how
+//! `tests/recovery.rs` kills a run at *every* crash point in turn and
+//! proves recovery is bit-identical from each one.
+//!
+//! The counter is thread-local, so parallel test binaries never perturb
+//! each other, and the schedule is a plain count — same run, same points,
+//! every time (the repo's determinism contract extended to its faults).
+//! A WAL-append injection additionally writes *half* the record before
+//! failing, so the on-disk state is a genuinely torn write, not a clean
+//! absence.
+
+use std::cell::Cell;
+use std::fmt;
+
+/// The irreversible steps the durable store announces to the fault hook.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashPoint {
+    /// A WAL record append (torn: half the record reaches the disk).
+    WalAppend,
+    /// One page write of a checkpoint under construction.
+    CheckpointWrite,
+    /// The checkpoint commit (meta-file write) that makes a generation live.
+    CheckpointCommit,
+    /// Creation of the fresh WAL after a checkpoint commit.
+    WalRotate,
+    /// Deletion of the previous generation's files.
+    Cleanup,
+}
+
+impl CrashPoint {
+    /// Stable name for messages and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            CrashPoint::WalAppend => "wal-append",
+            CrashPoint::CheckpointWrite => "checkpoint-write",
+            CrashPoint::CheckpointCommit => "checkpoint-commit",
+            CrashPoint::WalRotate => "wal-rotate",
+            CrashPoint::Cleanup => "cleanup",
+        }
+    }
+}
+
+/// The error an armed crash point fails with. Distinguishable from real
+/// I/O errors via [`is_injected`], so tests can assert the *right* crash
+/// happened.
+#[derive(Debug)]
+pub struct CrashInjected {
+    /// Which step was killed.
+    pub point: CrashPoint,
+    /// 1-based ordinal of the step since [`arm`]/[`reset_count`].
+    pub ordinal: u64,
+}
+
+impl fmt::Display for CrashInjected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "injected crash at {} (step {})",
+            self.point.name(),
+            self.ordinal
+        )
+    }
+}
+
+impl std::error::Error for CrashInjected {}
+
+thread_local! {
+    // 0 = disarmed; otherwise the 1-based step ordinal to kill.
+    static TARGET: Cell<u64> = const { Cell::new(0) };
+    static COUNTER: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Arm the hook: the `nth` (1-based) crash point stepped on this thread
+/// after this call fails with [`CrashInjected`]. Resets the step counter.
+pub fn arm(nth: u64) {
+    assert!(nth >= 1, "crash points are 1-based");
+    COUNTER.with(|c| c.set(0));
+    TARGET.with(|t| t.set(nth));
+}
+
+/// Disarm the hook (crash points become no-ops again).
+pub fn disarm() {
+    TARGET.with(|t| t.set(0));
+}
+
+/// Reset the step counter without changing the armed target. Used to
+/// exclude setup work (e.g. store creation) from a sweep's numbering.
+pub fn reset_count() {
+    COUNTER.with(|c| c.set(0));
+}
+
+/// Crash points stepped on this thread since the last [`arm`] /
+/// [`reset_count`]. A disarmed full run measures the sweep's extent.
+pub fn count() -> u64 {
+    COUNTER.with(|c| c.get())
+}
+
+/// Announce an irreversible step. Returns `Err(CrashInjected)` when this
+/// is the armed step, `Ok(())` otherwise (including when disarmed — the
+/// counter still advances so [`count`] stays meaningful).
+pub(crate) fn step(point: CrashPoint) -> crate::Result<()> {
+    let ordinal = COUNTER.with(|c| {
+        let v = c.get() + 1;
+        c.set(v);
+        v
+    });
+    let target = TARGET.with(|t| t.get());
+    if target != 0 && ordinal == target {
+        return Err(anyhow::Error::new(CrashInjected { point, ordinal }));
+    }
+    Ok(())
+}
+
+/// True when `err` (anywhere in its chain) is an injected crash rather
+/// than a real failure.
+pub fn is_injected(err: &anyhow::Error) -> bool {
+    err.chain()
+        .any(|e| e.downcast_ref::<CrashInjected>().is_some())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_kills_exactly_the_nth_step() {
+        arm(3);
+        assert!(step(CrashPoint::WalAppend).is_ok());
+        assert!(step(CrashPoint::CheckpointWrite).is_ok());
+        let err = step(CrashPoint::CheckpointCommit).unwrap_err();
+        assert!(is_injected(&err));
+        let inj = err.downcast_ref::<CrashInjected>().unwrap();
+        assert_eq!((inj.point, inj.ordinal), (CrashPoint::CheckpointCommit, 3));
+        // past the target: steps succeed again
+        assert!(step(CrashPoint::WalRotate).is_ok());
+        assert_eq!(count(), 4);
+        disarm();
+        arm(1);
+        assert!(step(CrashPoint::Cleanup).is_err(), "re-arm resets the counter");
+        disarm();
+    }
+
+    #[test]
+    fn disarmed_steps_count_but_never_fail() {
+        disarm();
+        reset_count();
+        for _ in 0..5 {
+            step(CrashPoint::WalAppend).unwrap();
+        }
+        assert_eq!(count(), 5);
+        let real = anyhow::anyhow!("disk on fire");
+        assert!(!is_injected(&real));
+    }
+}

@@ -1,0 +1,581 @@
+//! Durable log-structured storage with crash recovery (DESIGN.md
+//! §Durability).
+//!
+//! PR 5's spill tier dies with the process; this module is the tier
+//! below it that doesn't. A [`DurableStore`] owns one directory holding,
+//! per checkpoint *generation* `G`:
+//!
+//! ```text
+//! ckpt-G.pages   raw row-major f32 table snapshot (durable PageFile)
+//! ckpt-G.meta    the commit point: geometry + whole-grid digest, checksummed
+//! wal-G.log      checksummed record log extending generation G
+//! ```
+//!
+//! The **checkpoint/watermark split**: the checkpoint holds the table as
+//! of its *watermark* epoch; the WAL holds everything after it. Writes
+//! journal-then-publish — a delta epoch's batch *and* the row patch it
+//! produced are fsync'd to the WAL before the epoch becomes visible in
+//! the serving [`TableCell`](crate::serve::TableCell), and a full-refresh
+//! publish compacts (checkpoint + WAL rotation) *before* the swap. A
+//! crash therefore loses only epochs that were never client-visible, and
+//! recovery ([`DurableStore::open`]) replays log-over-checkpoint to the
+//! exact pre-crash table — bit-identical, which is how the repo's
+//! determinism contract extends across process death.
+//!
+//! Compaction is generation-numbered rather than rename-based: a new
+//! generation's files are written beside the old ones and the old
+//! generation is deleted only after the new WAL exists. Every
+//! irreversible step announces itself to the [`crash`] hook, and
+//! `tests/recovery.rs` kills a churn schedule at every one of those
+//! points in turn, proving each recovers bit-identically.
+
+pub mod crash;
+
+mod checkpoint;
+mod wal;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::cluster::metrics::StorageCounters;
+use crate::coordinator::SimFs;
+use crate::graph::delta::UpdateBatch;
+use crate::storage::DEFAULT_SPILL_GBPS;
+use crate::tensor::Matrix;
+use crate::util::{fnv1a_extend, FNV_OFFSET};
+use crate::Result;
+
+pub use checkpoint::CheckpointMeta;
+pub use wal::{WalRecord, WalScan, REC_HEADER_LEN, WAL_HEADER_LEN};
+
+use crash::CrashPoint;
+
+/// Tuning for a [`DurableStore`].
+#[derive(Debug, Clone, Copy)]
+pub struct DurableOptions {
+    /// Compact (checkpoint + WAL rotation) after this many WAL records.
+    pub compact_every: u64,
+}
+
+impl Default for DurableOptions {
+    fn default() -> Self {
+        DurableOptions { compact_every: 64 }
+    }
+}
+
+/// FNV-1a digest of a table's geometry and exact f32 bit patterns; the
+/// integrity check `Publish` WAL records carry.
+pub fn table_digest(table: &Matrix) -> u64 {
+    let mut h = fnv1a_extend(FNV_OFFSET, &(table.rows as u64).to_le_bytes());
+    h = fnv1a_extend(h, &(table.cols as u64).to_le_bytes());
+    for v in &table.data {
+        h = fnv1a_extend(h, &v.to_le_bytes());
+    }
+    h
+}
+
+/// What [`DurableStore::open`] rebuilt from disk.
+pub struct Recovered {
+    /// Last journaled epoch (what serving resumes at).
+    pub epoch: u64,
+    /// The live checkpoint's epoch (everything after it came from the WAL).
+    pub watermark: u64,
+    /// The recovered table: checkpoint + replayed WAL patches,
+    /// bit-identical to the pre-crash state.
+    pub table: Matrix,
+    /// The replayed delta batches `(epoch, batch)`, oldest first — the
+    /// logical audit trail (parity tests replay them through the
+    /// in-memory path).
+    pub deltas: Vec<(u64, UpdateBatch)>,
+    /// Total WAL records replayed (deltas + publishes).
+    pub records_replayed: usize,
+    /// Byte offset a torn WAL tail was trimmed at, if one was found.
+    pub trimmed_at: Option<u64>,
+    /// Simulated I/O seconds the recovery read charged.
+    pub sim_secs: f64,
+}
+
+/// A directory-rooted, WAL + checkpoint store for one serving table.
+pub struct DurableStore {
+    dir: PathBuf,
+    fs: Arc<SimFs>,
+    wal: wal::Wal,
+    gen: u64,
+    watermark: u64,
+    last_epoch: u64,
+    records_since_ckpt: u64,
+    opts: DurableOptions,
+    counters: StorageCounters,
+    sim_secs: f64,
+}
+
+fn store_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(out),
+    };
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let is_store = (name.starts_with("ckpt-")
+            && (name.ends_with(".meta") || name.ends_with(".pages")))
+            || (name.starts_with("wal-") && name.ends_with(".log"));
+        if is_store {
+            out.push(entry.path());
+        }
+    }
+    Ok(out)
+}
+
+fn gen_of(path: &Path) -> Option<u64> {
+    let name = path.file_name()?.to_string_lossy();
+    name.strip_prefix("ckpt-")
+        .and_then(|s| s.strip_suffix(".meta").or_else(|| s.strip_suffix(".pages")))
+        .or_else(|| name.strip_prefix("wal-").and_then(|s| s.strip_suffix(".log")))
+        .and_then(|s| s.parse().ok())
+}
+
+impl DurableStore {
+    /// Start a fresh store in `dir` (clearing any previous store files):
+    /// checkpoint `baseline` as generation 0 / epoch 0 and open an empty
+    /// WAL. `seed` is the pipeline seed, echoed into every file header
+    /// so a resume against the wrong config fails loudly.
+    pub fn create(
+        dir: &Path,
+        seed: u64,
+        baseline: &Matrix,
+        opts: DurableOptions,
+    ) -> Result<DurableStore> {
+        anyhow::ensure!(opts.compact_every >= 1, "compact_every must be >= 1");
+        std::fs::create_dir_all(dir)?;
+        for stale in store_files(dir)? {
+            std::fs::remove_file(&stale)?;
+        }
+        let fs = SimFs::new(DEFAULT_SPILL_GBPS);
+        let mut counters = StorageCounters::default();
+        let (bytes, io) = checkpoint::write(dir, 0, 0, baseline, seed, &fs)?;
+        counters.checkpoints += 1;
+        counters.spill_bytes_written += bytes;
+        let wal = wal::Wal::create(dir, 0, baseline.rows as u64, baseline.cols, seed)?;
+        counters.wal_bytes += wal.bytes_appended;
+        let sim_secs = io + fs.charge(wal.bytes_appended);
+        Ok(DurableStore {
+            dir: dir.to_path_buf(),
+            fs,
+            wal,
+            gen: 0,
+            watermark: 0,
+            last_epoch: 0,
+            records_since_ckpt: 0,
+            opts,
+            counters,
+            sim_secs,
+        })
+    }
+
+    /// True when `dir` holds a store a resume could recover (at least one
+    /// checkpoint meta file, committed or not — `open` decides validity).
+    pub fn exists(dir: &Path) -> bool {
+        checkpoint::list_gens(dir)
+            .map(|g| !g.is_empty())
+            .unwrap_or(false)
+    }
+
+    /// Recover: pick the newest committed generation, load and verify its
+    /// checkpoint, scan its WAL (trimming a torn tail), replay the log
+    /// over the checkpoint, verify any `Publish` digest against the
+    /// rebuilt table, clean stale generations, and reopen for appending.
+    pub fn open(dir: &Path, opts: DurableOptions) -> Result<(DurableStore, Recovered)> {
+        anyhow::ensure!(opts.compact_every >= 1, "compact_every must be >= 1");
+        let fs = SimFs::new(DEFAULT_SPILL_GBPS);
+        let gens = checkpoint::list_gens(dir)?;
+        anyhow::ensure!(!gens.is_empty(), "no durable store in {:?}", dir);
+        // newest generation whose commit (meta) is valid; an invalid meta
+        // is a crashed commit — fall back, never fail, unless nothing at
+        // all committed
+        let mut live = None;
+        for &g in &gens {
+            if let Ok(meta) = checkpoint::read_meta(dir, g) {
+                live = Some((g, meta));
+                break;
+            }
+        }
+        let (gen, meta) =
+            live.ok_or_else(|| anyhow::anyhow!("no committed checkpoint generation in {:?}", dir))?;
+        let (_, mut table, ckpt_io) = checkpoint::read(dir, gen, &fs)?;
+        let mut counters = StorageCounters::default();
+        counters.recoveries += 1;
+        counters.spill_bytes_read += table.nbytes();
+        let mut sim_secs = ckpt_io;
+
+        // scan + replay the generation's WAL (absent = crashed between
+        // commit and rotation: an empty log, recreated below)
+        let wpath = wal::wal_path(dir, gen);
+        let (records, trimmed_at, scanned) = if wpath.exists() {
+            let scan = wal::scan(&wpath)?;
+            anyhow::ensure!(
+                scan.gen == gen
+                    && scan.dim == meta.cols as usize
+                    && scan.n_nodes == meta.rows
+                    && scan.seed == meta.seed,
+                "wal {:?} does not match checkpoint gen {} (gen/dim/nodes/seed {:?} vs ({}, {}, {}, {}))",
+                wpath,
+                gen,
+                (scan.gen, scan.dim, scan.n_nodes, scan.seed),
+                gen,
+                meta.cols,
+                meta.rows,
+                meta.seed
+            );
+            counters.spill_bytes_read += scan.bytes;
+            sim_secs += fs.charge(scan.bytes);
+            (scan.records, scan.trimmed_at, true)
+        } else {
+            (Vec::new(), None, false)
+        };
+
+        let mut epoch = meta.epoch;
+        let mut deltas = Vec::new();
+        let records_replayed = records.len();
+        for rec in records {
+            // journal_* sequences epochs: a Delta is always the next
+            // epoch; a Publish seals the compaction that just rotated
+            // this WAL, so it carries the checkpoint's own epoch.
+            let expected_next = match &rec {
+                WalRecord::Delta { .. } => rec.epoch() == epoch + 1,
+                WalRecord::Publish { .. } => rec.epoch() == epoch,
+            };
+            anyhow::ensure!(
+                expected_next,
+                "wal {:?}: epoch {} replayed after epoch {} (log out of order)",
+                wpath,
+                rec.epoch(),
+                epoch
+            );
+            match rec {
+                WalRecord::Delta {
+                    epoch: e,
+                    batch,
+                    rows,
+                    values,
+                } => {
+                    for (i, &r) in rows.iter().enumerate() {
+                        anyhow::ensure!(
+                            (r as usize) < table.rows,
+                            "wal {:?}: patch row {} outside table of {} rows",
+                            wpath,
+                            r,
+                            table.rows
+                        );
+                        table.row_mut(r as usize).copy_from_slice(values.row(i));
+                    }
+                    deltas.push((e, batch));
+                    epoch = e;
+                }
+                WalRecord::Publish {
+                    epoch: e, digest, ..
+                } => {
+                    // the table this publish swapped in is the checkpoint
+                    // this WAL extends; re-verify it end to end
+                    anyhow::ensure!(
+                        digest == table_digest(&table),
+                        "wal {:?}: publish at epoch {} digests {:#018x}, recovered table {:#018x}",
+                        wpath,
+                        e,
+                        digest,
+                        table_digest(&table)
+                    );
+                    epoch = e;
+                }
+            }
+        }
+
+        // stale generations (and any uncommitted debris) are dead weight
+        for stale in store_files(dir)? {
+            if gen_of(&stale) != Some(gen) {
+                std::fs::remove_file(&stale)?;
+            }
+        }
+
+        let wal = if scanned {
+            let scan_again = WalScan {
+                gen,
+                n_nodes: meta.rows,
+                dim: meta.cols as usize,
+                seed: meta.seed,
+                records: Vec::new(),
+                trimmed_at: None,
+                bytes: 0,
+            };
+            let mut w = wal::Wal::open_for_append(&wpath, &scan_again)?;
+            w.records = records_replayed as u64;
+            w
+        } else {
+            wal::Wal::create(dir, gen, meta.rows, meta.cols as usize, meta.seed)?
+        };
+
+        let store = DurableStore {
+            dir: dir.to_path_buf(),
+            fs,
+            wal,
+            gen,
+            watermark: meta.epoch,
+            last_epoch: epoch,
+            records_since_ckpt: records_replayed as u64,
+            opts,
+            counters,
+            sim_secs,
+        };
+        let recovered = Recovered {
+            epoch,
+            watermark: meta.epoch,
+            table,
+            deltas,
+            records_replayed,
+            trimmed_at,
+            sim_secs,
+        };
+        Ok((store, recovered))
+    }
+
+    /// Journal one delta epoch — the batch and the patch it produced —
+    /// fsync'd before the caller publishes the epoch. `epoch` must be
+    /// exactly `last_epoch + 1` (the journal is the epoch sequencer).
+    pub fn journal_delta(
+        &mut self,
+        epoch: u64,
+        batch: &UpdateBatch,
+        rows: &[u32],
+        values: &Matrix,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            epoch == self.last_epoch + 1,
+            "journal_delta: epoch {} after {}",
+            epoch,
+            self.last_epoch
+        );
+        let rec = WalRecord::Delta {
+            epoch,
+            batch: batch.clone(),
+            rows: rows.to_vec(),
+            values: values.clone(),
+        };
+        let (bytes, io) = self.wal.append(&rec, &self.fs)?;
+        self.counters.wal_bytes += bytes;
+        self.sim_secs += io;
+        self.records_since_ckpt += 1;
+        self.last_epoch = epoch;
+        Ok(())
+    }
+
+    /// Journal a full-table publish: compact (checkpoint `table` at
+    /// `epoch`, rotate the WAL) *then* append the `Publish` record
+    /// carrying the table digest. Called before the serving swap, so a
+    /// crash anywhere in here loses nothing a client ever saw.
+    pub fn journal_publish(&mut self, epoch: u64, table: &Matrix) -> Result<()> {
+        anyhow::ensure!(
+            epoch == self.last_epoch + 1,
+            "journal_publish: epoch {} after {}",
+            epoch,
+            self.last_epoch
+        );
+        self.compact(epoch, table)?;
+        let rec = WalRecord::Publish {
+            epoch,
+            digest: table_digest(table),
+            rows: table.rows as u64,
+            dim: table.cols as u32,
+        };
+        let (bytes, io) = self.wal.append(&rec, &self.fs)?;
+        self.counters.wal_bytes += bytes;
+        self.sim_secs += io;
+        self.records_since_ckpt += 1;
+        self.last_epoch = epoch;
+        Ok(())
+    }
+
+    /// True when the WAL has grown past `compact_every` records since the
+    /// live checkpoint.
+    pub fn should_compact(&self) -> bool {
+        self.records_since_ckpt >= self.opts.compact_every
+    }
+
+    /// Compact: checkpoint `table` at `epoch` as generation `gen + 1`,
+    /// rotate to a fresh WAL, delete the old generation. Crash points:
+    /// every checkpoint page write, the commit, the rotation, the
+    /// cleanup; a crash at any of them recovers to either the old or the
+    /// new generation — both bit-identical to a table the caller held.
+    pub fn compact(&mut self, epoch: u64, table: &Matrix) -> Result<()> {
+        anyhow::ensure!(
+            epoch >= self.last_epoch,
+            "compact: epoch {} behind journaled {}",
+            epoch,
+            self.last_epoch
+        );
+        anyhow::ensure!(
+            table.rows as u64 == self.wal.n_nodes && table.cols == self.wal.dim,
+            "compact: table {}x{} does not match store {}x{}",
+            table.rows,
+            table.cols,
+            self.wal.n_nodes,
+            self.wal.dim
+        );
+        let next = self.gen + 1;
+        let (bytes, io) =
+            checkpoint::write(&self.dir, next, epoch, table, self.wal.seed, &self.fs)?;
+        self.counters.checkpoints += 1;
+        self.counters.spill_bytes_written += bytes;
+        self.sim_secs += io;
+
+        crash::step(CrashPoint::WalRotate)?;
+        let wal = wal::Wal::create(&self.dir, next, self.wal.n_nodes, self.wal.dim, self.wal.seed)?;
+        self.counters.wal_bytes += wal.bytes_appended;
+        self.sim_secs += self.fs.charge(wal.bytes_appended);
+        self.wal = wal;
+
+        crash::step(CrashPoint::Cleanup)?;
+        for stale in store_files(&self.dir)? {
+            if gen_of(&stale) != Some(next) {
+                std::fs::remove_file(&stale)?;
+            }
+        }
+        self.gen = next;
+        self.watermark = epoch;
+        self.last_epoch = epoch;
+        self.records_since_ckpt = 0;
+        Ok(())
+    }
+
+    /// Directory this store lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Live checkpoint generation.
+    pub fn generation(&self) -> u64 {
+        self.gen
+    }
+
+    /// Epoch of the live checkpoint.
+    pub fn watermark(&self) -> u64 {
+        self.watermark
+    }
+
+    /// Latest journaled epoch.
+    pub fn last_epoch(&self) -> u64 {
+        self.last_epoch
+    }
+
+    /// Records in the live WAL (replayed + appended).
+    pub fn wal_records(&self) -> u64 {
+        self.wal.records
+    }
+
+    /// Pipeline seed echoed through every store file — resume validates
+    /// it against the run config.
+    pub fn seed(&self) -> u64 {
+        self.wal.seed
+    }
+
+    /// Durability counters (WAL bytes, checkpoints, recoveries, spill
+    /// traffic) for rolling into a machine's metrics.
+    pub fn counters(&self) -> StorageCounters {
+        self.counters.clone()
+    }
+
+    /// Simulated I/O seconds this store has charged so far.
+    pub fn sim_secs(&self) -> f64 {
+        self.sim_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("deal-durable-{}-{}", std::process::id(), tag));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn patch(table: &mut Matrix, rows: &[u32], values: &Matrix) {
+        for (i, &r) in rows.iter().enumerate() {
+            table.row_mut(r as usize).copy_from_slice(values.row(i));
+        }
+    }
+
+    #[test]
+    fn create_journal_reopen_replays_to_the_exact_table() {
+        let dir = tmp_dir("basic");
+        let mut table = Matrix::from_vec(4, 2, vec![0.5; 8]);
+        let mut store =
+            DurableStore::create(&dir, 42, &table, DurableOptions::default()).unwrap();
+        assert!(DurableStore::exists(&dir));
+        assert!(store.counters().checkpoints == 1 && store.counters().wal_bytes > 0);
+        assert!(store.sim_secs() > 0.0, "durability costs simulated time");
+
+        let rows = vec![1u32, 3];
+        let values = Matrix::from_vec(2, 2, vec![9.0, -0.0, 3.5, 1.25e-9]);
+        store
+            .journal_delta(1, &UpdateBatch::default(), &rows, &values)
+            .unwrap();
+        patch(&mut table, &rows, &values);
+        // out-of-order epochs are rejected
+        assert!(store
+            .journal_delta(5, &UpdateBatch::default(), &[], &Matrix::zeros(0, 2))
+            .is_err());
+        drop(store);
+
+        let (store, rec) = DurableStore::open(&dir, DurableOptions::default()).unwrap();
+        assert_eq!((rec.epoch, rec.watermark, rec.records_replayed), (1, 0, 1));
+        assert_eq!(rec.deltas.len(), 1);
+        let a: Vec<u32> = table.data.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = rec.table.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "log-over-checkpoint replay is bit-identical");
+        assert_eq!(store.counters().recoveries, 1);
+        assert_eq!((store.last_epoch(), store.generation()), (1, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn publish_compacts_rotates_and_cleans() {
+        let dir = tmp_dir("publish");
+        let t0 = Matrix::from_vec(3, 2, vec![1.0; 6]);
+        let mut store = DurableStore::create(&dir, 7, &t0, DurableOptions::default()).unwrap();
+        let t1 = Matrix::from_vec(3, 2, vec![2.0; 6]);
+        store.journal_publish(1, &t1).unwrap();
+        assert_eq!((store.generation(), store.watermark(), store.last_epoch()), (1, 1, 1));
+        assert!(
+            !wal::wal_path(&dir, 0).exists() && !checkpoint::meta_path(&dir, 0).exists(),
+            "old generation cleaned"
+        );
+        let (_, rec) = DurableStore::open(&dir, DurableOptions::default()).unwrap();
+        assert_eq!((rec.epoch, rec.watermark), (1, 1));
+        assert_eq!(rec.table.data, t1.data);
+        assert_eq!(rec.records_replayed, 1, "the publish record is in the new wal");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn should_compact_follows_the_record_budget() {
+        let dir = tmp_dir("budget");
+        let t = Matrix::from_vec(2, 2, vec![0.0; 4]);
+        let mut store =
+            DurableStore::create(&dir, 1, &t, DurableOptions { compact_every: 2 }).unwrap();
+        let v = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        store.journal_delta(1, &UpdateBatch::default(), &[0], &v).unwrap();
+        assert!(!store.should_compact());
+        store.journal_delta(2, &UpdateBatch::default(), &[1], &v).unwrap();
+        assert!(store.should_compact());
+        let mut full = t.clone();
+        full.row_mut(0).copy_from_slice(&v.data);
+        full.row_mut(1).copy_from_slice(&v.data);
+        store.compact(2, &full).unwrap();
+        assert!(!store.should_compact());
+        assert_eq!(store.counters().checkpoints, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,551 @@
+//! The write-ahead log: checksummed, versioned, generation-numbered.
+//!
+//! One WAL file exists per checkpoint generation (`wal-<gen>.log`). The
+//! file opens with a fixed 40-byte header binding it to its store
+//! (magic, format version, embedding dim, generation, node count, seed),
+//! then carries a sequence of self-delimiting records:
+//!
+//! ```text
+//! [u32 body_len][u64 fnv1a(body)][body]
+//! ```
+//!
+//! Two record kinds exist (u8 tag leading the body): `Delta` — a PR 2
+//! [`UpdateBatch`] plus the patch it produced (updated row ids and their
+//! new values), i.e. *physiological* logging: the batch is the logical
+//! audit trail, the patch lets recovery rebuild the table without
+//! re-running inference — and `Publish` — a full-table serving-epoch
+//! publish, journaled *after* its checkpoint committed, carrying the
+//! table digest recovery re-verifies.
+//!
+//! Every append is `sync_data`'d before it returns (the
+//! journal-before-publish contract: a record that wasn't durably on disk
+//! was never client-visible) and charges the simulated spill device.
+//!
+//! [`scan`] distinguishes the two ways a log can be damaged: a record
+//! extending past end-of-file is a **torn tail** — the expected residue
+//! of a crash mid-append — and is trimmed back to the last record
+//! boundary, while a fully-present record whose checksum mismatches is
+//! **corruption** and fails recovery with the record's byte offset.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::SimFs;
+use crate::graph::delta::UpdateBatch;
+use crate::tensor::Matrix;
+use crate::util::fnv1a;
+use crate::Result;
+
+use super::crash::{self, CrashPoint};
+
+/// WAL file magic (8 bytes; last byte doubles as a format generation).
+pub const WAL_MAGIC: [u8; 8] = *b"DEALWAL\x01";
+/// WAL format version.
+pub const WAL_VERSION: u32 = 1;
+/// Fixed file-header bytes: magic + version + dim + gen + n_nodes + seed.
+pub const WAL_HEADER_LEN: u64 = 8 + 4 + 4 + 8 + 8 + 8;
+/// Per-record framing bytes: u32 body length + u64 body checksum.
+pub const REC_HEADER_LEN: usize = 4 + 8;
+
+/// Path of generation `gen`'s WAL file.
+pub fn wal_path(dir: &Path, gen: u64) -> PathBuf {
+    dir.join(format!("wal-{}.log", gen))
+}
+
+/// A decoded WAL record.
+#[derive(Debug, Clone)]
+pub enum WalRecord {
+    /// An incremental update: the batch (audit) and the patch it produced
+    /// (recovery applies `values` to rows `rows` — no inference rerun).
+    Delta {
+        /// Serving epoch this delta produced.
+        epoch: u64,
+        /// The logical update, exactly as applied.
+        batch: UpdateBatch,
+        /// Row ids the delta path recomputed.
+        rows: Vec<u32>,
+        /// New values for those rows (`rows.len() × dim`).
+        values: Matrix,
+    },
+    /// A full-table publish (epoch swap from a complete refresh). The
+    /// table itself lives in the checkpoint committed just before this
+    /// record; the digest lets recovery verify it.
+    Publish {
+        /// Serving epoch published.
+        epoch: u64,
+        /// FNV-1a digest of the published table (see `table_digest`).
+        digest: u64,
+        /// Table geometry at publish time.
+        rows: u64,
+        /// Embedding width at publish time.
+        dim: u32,
+    },
+}
+
+impl WalRecord {
+    /// Serving epoch this record produced.
+    pub fn epoch(&self) -> u64 {
+        match self {
+            WalRecord::Delta { epoch, .. } => *epoch,
+            WalRecord::Publish { epoch, .. } => *epoch,
+        }
+    }
+
+    fn encode(&self, dim: usize) -> Result<Vec<u8>> {
+        let mut b = Vec::new();
+        match self {
+            WalRecord::Delta {
+                epoch,
+                batch,
+                rows,
+                values,
+            } => {
+                anyhow::ensure!(
+                    values.cols == dim && values.rows == rows.len(),
+                    "delta patch shape {}x{} does not match {} rows x dim {}",
+                    values.rows,
+                    values.cols,
+                    rows.len(),
+                    dim
+                );
+                b.push(1u8);
+                b.extend_from_slice(&epoch.to_le_bytes());
+                b.extend_from_slice(&(batch.add_edges.len() as u32).to_le_bytes());
+                for &(s, d) in &batch.add_edges {
+                    b.extend_from_slice(&s.to_le_bytes());
+                    b.extend_from_slice(&d.to_le_bytes());
+                }
+                b.extend_from_slice(&(batch.remove_edges.len() as u32).to_le_bytes());
+                for &(s, d) in &batch.remove_edges {
+                    b.extend_from_slice(&s.to_le_bytes());
+                    b.extend_from_slice(&d.to_le_bytes());
+                }
+                b.extend_from_slice(&(batch.feature_updates.len() as u32).to_le_bytes());
+                for (id, row) in &batch.feature_updates {
+                    b.extend_from_slice(&id.to_le_bytes());
+                    b.extend_from_slice(&(row.len() as u32).to_le_bytes());
+                    for v in row {
+                        b.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                b.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+                for r in rows {
+                    b.extend_from_slice(&r.to_le_bytes());
+                }
+                for v in &values.data {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            WalRecord::Publish {
+                epoch,
+                digest,
+                rows,
+                dim: d,
+            } => {
+                b.push(2u8);
+                b.extend_from_slice(&epoch.to_le_bytes());
+                b.extend_from_slice(&digest.to_le_bytes());
+                b.extend_from_slice(&rows.to_le_bytes());
+                b.extend_from_slice(&d.to_le_bytes());
+            }
+        }
+        Ok(b)
+    }
+
+    fn decode(body: &[u8], dim: usize) -> Result<WalRecord> {
+        let mut r = Reader { bytes: body, pos: 0 };
+        let kind = r.u8()?;
+        let rec = match kind {
+            1 => {
+                let epoch = r.u64()?;
+                let mut batch = UpdateBatch::default();
+                for _ in 0..r.u32()? {
+                    batch.add_edges.push((r.u32()?, r.u32()?));
+                }
+                for _ in 0..r.u32()? {
+                    batch.remove_edges.push((r.u32()?, r.u32()?));
+                }
+                for _ in 0..r.u32()? {
+                    let id = r.u32()?;
+                    let n = r.u32()? as usize;
+                    let mut row = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        row.push(r.f32()?);
+                    }
+                    batch.feature_updates.push((id, row));
+                }
+                let n_rows = r.u32()? as usize;
+                let mut rows = Vec::with_capacity(n_rows);
+                for _ in 0..n_rows {
+                    rows.push(r.u32()?);
+                }
+                let mut data = Vec::with_capacity(n_rows * dim);
+                for _ in 0..n_rows * dim {
+                    data.push(r.f32()?);
+                }
+                WalRecord::Delta {
+                    epoch,
+                    batch,
+                    rows,
+                    values: Matrix::from_vec(n_rows, dim, data),
+                }
+            }
+            2 => WalRecord::Publish {
+                epoch: r.u64()?,
+                digest: r.u64()?,
+                rows: r.u64()?,
+                dim: r.u32()?,
+            },
+            k => anyhow::bail!("wal record: unknown kind {}", k),
+        };
+        anyhow::ensure!(r.pos == body.len(), "wal record: {} trailing bytes", body.len() - r.pos);
+        Ok(rec)
+    }
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Reader<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        anyhow::ensure!(self.pos + n <= self.bytes.len(), "wal record truncated");
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+}
+
+/// An open, appendable WAL file.
+pub struct Wal {
+    file: File,
+    /// Path of the backing file.
+    pub path: PathBuf,
+    /// Checkpoint generation this log extends.
+    pub gen: u64,
+    /// Embedding width every `Delta` patch in this log carries.
+    pub dim: usize,
+    /// Node count of the table this log describes.
+    pub n_nodes: u64,
+    /// Pipeline seed echoed for mismatch detection on recovery.
+    pub seed: u64,
+    /// Records currently in the log (replayed + appended).
+    pub records: u64,
+    /// Bytes appended through this handle (records + header if created).
+    pub bytes_appended: u64,
+}
+
+fn encode_header(gen: u64, n_nodes: u64, dim: usize, seed: u64) -> Vec<u8> {
+    let mut h = Vec::with_capacity(WAL_HEADER_LEN as usize);
+    h.extend_from_slice(&WAL_MAGIC);
+    h.extend_from_slice(&WAL_VERSION.to_le_bytes());
+    h.extend_from_slice(&(dim as u32).to_le_bytes());
+    h.extend_from_slice(&gen.to_le_bytes());
+    h.extend_from_slice(&n_nodes.to_le_bytes());
+    h.extend_from_slice(&seed.to_le_bytes());
+    h
+}
+
+impl Wal {
+    /// Create (truncating) generation `gen`'s WAL and sync its header.
+    pub fn create(dir: &Path, gen: u64, n_nodes: u64, dim: usize, seed: u64) -> Result<Wal> {
+        std::fs::create_dir_all(dir)?;
+        let path = wal_path(dir, gen);
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)?;
+        let header = encode_header(gen, n_nodes, dim, seed);
+        file.write_all(&header)?;
+        file.sync_data()?;
+        Ok(Wal {
+            file,
+            path,
+            gen,
+            dim,
+            n_nodes,
+            seed,
+            records: 0,
+            bytes_appended: header.len() as u64,
+        })
+    }
+
+    /// Reopen a scanned WAL for appending. `scan` must have run first (it
+    /// trims any torn tail back to a record boundary).
+    pub fn open_for_append(path: &Path, scan: &WalScan) -> Result<Wal> {
+        let file = OpenOptions::new().read(true).append(true).open(path)?;
+        Ok(Wal {
+            file,
+            path: path.to_path_buf(),
+            gen: scan.gen,
+            dim: scan.dim,
+            n_nodes: scan.n_nodes,
+            seed: scan.seed,
+            records: scan.records.len() as u64,
+            bytes_appended: 0,
+        })
+    }
+
+    /// Append and fsync one record; returns (bytes written, simulated
+    /// I/O seconds). This is a [`CrashPoint::WalAppend`] — when armed,
+    /// half the framed record reaches the disk (a real torn write) and
+    /// the append fails.
+    pub fn append(&mut self, rec: &WalRecord, fs: &SimFs) -> Result<(u64, f64)> {
+        let body = rec.encode(self.dim)?;
+        let mut buf = Vec::with_capacity(REC_HEADER_LEN + body.len());
+        buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&fnv1a(&body).to_le_bytes());
+        buf.extend_from_slice(&body);
+        if let Err(e) = crash::step(CrashPoint::WalAppend) {
+            self.file.write_all(&buf[..buf.len() / 2])?;
+            self.file.sync_data()?;
+            return Err(e);
+        }
+        self.file.write_all(&buf)?;
+        self.file.sync_data()?;
+        self.records += 1;
+        self.bytes_appended += buf.len() as u64;
+        Ok((buf.len() as u64, fs.charge(buf.len() as u64)))
+    }
+}
+
+/// Result of scanning (and, when needed, tail-trimming) a WAL file.
+pub struct WalScan {
+    /// Generation from the file header.
+    pub gen: u64,
+    /// Node count from the file header.
+    pub n_nodes: u64,
+    /// Embedding width from the file header.
+    pub dim: usize,
+    /// Seed echo from the file header.
+    pub seed: u64,
+    /// Every intact record, in append order.
+    pub records: Vec<WalRecord>,
+    /// Byte offset a torn tail was truncated at, if one was found.
+    pub trimmed_at: Option<u64>,
+    /// Valid bytes (post-trim), i.e. the scan's read volume.
+    pub bytes: u64,
+}
+
+/// Scan a WAL file: validate the header, checksum every record, trim a
+/// torn tail in place (crash residue — expected, not fatal), and fail
+/// with the offending record's byte offset on checksum corruption.
+pub fn scan(path: &Path) -> Result<WalScan> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(
+        bytes.len() as u64 >= WAL_HEADER_LEN && bytes[..8] == WAL_MAGIC,
+        "wal {:?}: missing or foreign header",
+        path
+    );
+    let mut r = Reader {
+        bytes: &bytes,
+        pos: 8,
+    };
+    let version = r.u32()?;
+    anyhow::ensure!(
+        version == WAL_VERSION,
+        "wal {:?}: version {} (this build reads {})",
+        path,
+        version,
+        WAL_VERSION
+    );
+    let dim = r.u32()? as usize;
+    let gen = r.u64()?;
+    let n_nodes = r.u64()?;
+    let seed = r.u64()?;
+
+    let mut records = Vec::new();
+    let mut trimmed_at = None;
+    let mut pos = WAL_HEADER_LEN as usize;
+    while pos < bytes.len() {
+        if pos + REC_HEADER_LEN > bytes.len() {
+            trimmed_at = Some(pos as u64);
+            break;
+        }
+        let len = u32::from_le_bytes([bytes[pos], bytes[pos + 1], bytes[pos + 2], bytes[pos + 3]])
+            as usize;
+        let stored = u64::from_le_bytes([
+            bytes[pos + 4],
+            bytes[pos + 5],
+            bytes[pos + 6],
+            bytes[pos + 7],
+            bytes[pos + 8],
+            bytes[pos + 9],
+            bytes[pos + 10],
+            bytes[pos + 11],
+        ]);
+        let body_start = pos + REC_HEADER_LEN;
+        if body_start + len > bytes.len() {
+            // the record never fully reached the disk: torn tail
+            trimmed_at = Some(pos as u64);
+            break;
+        }
+        let body = &bytes[body_start..body_start + len];
+        let actual = fnv1a(body);
+        anyhow::ensure!(
+            actual == stored,
+            "wal {:?}: corrupt record at offset {} (stored checksum {:#018x}, computed {:#018x})",
+            path,
+            pos,
+            stored,
+            actual
+        );
+        records.push(
+            WalRecord::decode(body, dim)
+                .map_err(|e| e.context(format!("wal {:?}: record at offset {}", path, pos)))?,
+        );
+        pos = body_start + len;
+    }
+    if let Some(at) = trimmed_at {
+        // trim so future appends extend from a record boundary
+        OpenOptions::new().write(true).open(path)?.set_len(at)?;
+    }
+    Ok(WalScan {
+        gen,
+        n_nodes,
+        dim,
+        seed,
+        records,
+        trimmed_at,
+        bytes: trimmed_at.unwrap_or(bytes.len() as u64),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("deal-wal-{}-{}", std::process::id(), tag));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_delta(epoch: u64) -> WalRecord {
+        let mut batch = UpdateBatch::default();
+        batch.add_edges.push((1, 2));
+        batch.remove_edges.push((3, 4));
+        batch.feature_updates.push((5, vec![0.5, -0.25]));
+        WalRecord::Delta {
+            epoch,
+            batch,
+            rows: vec![2, 5],
+            values: Matrix::from_vec(2, 3, vec![1.0, -0.0, 2.5e-8, 4.0, 5.0, -6.0]),
+        }
+    }
+
+    #[test]
+    fn records_roundtrip_bit_exact() {
+        let dir = tmp_dir("rt");
+        let fs = SimFs::new(16.0);
+        let mut wal = Wal::create(&dir, 0, 100, 3, 0xABC).unwrap();
+        let (b1, io1) = wal.append(&sample_delta(1), &fs).unwrap();
+        assert!(b1 > 0 && io1 > 0.0, "appends cost bytes and simulated time");
+        wal.append(
+            &WalRecord::Publish {
+                epoch: 2,
+                digest: 0xDEAD,
+                rows: 100,
+                dim: 3,
+            },
+            &fs,
+        )
+        .unwrap();
+        drop(wal);
+        let scan = scan(&wal_path(&dir, 0)).unwrap();
+        assert_eq!((scan.gen, scan.n_nodes, scan.dim, scan.seed), (0, 100, 3, 0xABC));
+        assert_eq!(scan.records.len(), 2);
+        assert!(scan.trimmed_at.is_none());
+        match &scan.records[0] {
+            WalRecord::Delta {
+                epoch,
+                batch,
+                rows,
+                values,
+            } => {
+                assert_eq!(*epoch, 1);
+                assert_eq!(batch.add_edges, vec![(1, 2)]);
+                assert_eq!(batch.remove_edges, vec![(3, 4)]);
+                assert_eq!(batch.feature_updates, vec![(5, vec![0.5, -0.25])]);
+                assert_eq!(rows, &vec![2, 5]);
+                let bits: Vec<u32> = values.data.iter().map(|v| v.to_bits()).collect();
+                let want: Vec<u32> = [1.0f32, -0.0, 2.5e-8, 4.0, 5.0, -6.0]
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                assert_eq!(bits, want, "patch values survive bit-exactly (signed zero too)");
+            }
+            other => panic!("wrong record: {:?}", other),
+        }
+        match scan.records[1] {
+            WalRecord::Publish { epoch, digest, .. } => {
+                assert_eq!((epoch, digest), (2, 0xDEAD));
+            }
+            ref other => panic!("wrong record: {:?}", other),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_trimmed_and_corruption_is_an_offset_error() {
+        let dir = tmp_dir("tear");
+        let fs = SimFs::new(16.0);
+        let path = wal_path(&dir, 0);
+        {
+            let mut wal = Wal::create(&dir, 0, 10, 2, 7).unwrap();
+            wal.append(&sample_delta(1), &fs).unwrap();
+            wal.append(&sample_delta(2), &fs).unwrap();
+        }
+        let full = std::fs::metadata(&path).unwrap().len();
+        // tear the second record: drop its last 5 bytes
+        OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_len(full - 5)
+            .unwrap();
+        let s = scan(&path).unwrap();
+        assert_eq!(s.records.len(), 1, "torn record dropped, not fatal");
+        assert!(s.trimmed_at.is_some());
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            s.trimmed_at.unwrap(),
+            "file physically trimmed to the record boundary"
+        );
+        let again = scan(&path).unwrap();
+        assert!(again.trimmed_at.is_none(), "trim is persistent");
+
+        // now flip one bit inside the first record's body: corruption
+        let mut bytes = std::fs::read(&path).unwrap();
+        let body = WAL_HEADER_LEN as usize + REC_HEADER_LEN;
+        bytes[body + 3] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = scan(&path).unwrap_err();
+        let msg = format!("{:#}", err);
+        assert!(
+            msg.contains(&format!("offset {}", WAL_HEADER_LEN)),
+            "corruption error must name the record offset: {}",
+            msg
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

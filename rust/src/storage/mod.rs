@@ -29,7 +29,11 @@
 //! [`with_page_rows`] → [`set_page_rows`] (`storage.page_rows`) →
 //! `DEAL_PAGE_ROWS` → [`DEFAULT_PAGE_ROWS`]. `Cluster::run` and
 //! `Ctx::with_server` capture the caller's effective values, so a pinned
-//! sweep reaches every simulated machine and its server thread.
+//! sweep reaches every simulated machine and its server thread. The
+//! storage *directory* follows the same chain ([`with_storage_dir`] →
+//! [`set_storage_dir`] / `storage.dir` / `--storage-dir` →
+//! `DEAL_STORAGE_DIR` → ephemeral tempdir) and additionally roots the
+//! [`durable`] log-structured store (DESIGN.md §Durability).
 //!
 //! **Determinism contract**: at every budget, page size, chunk size, and
 //! thread count the computed values are bit-identical to the in-memory
@@ -38,16 +42,19 @@
 //! order it would have read them from a resident matrix.
 
 pub mod cache;
+pub mod durable;
 pub mod pagefile;
 pub mod paged;
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Mutex, OnceLock};
 
 use crate::cluster::Ctx;
 
 pub use cache::{FileId, PageCache, SharedPageCache};
+pub use durable::{DurableOptions, DurableStore, Recovered};
 pub use pagefile::PageFile;
 pub use paged::{PagedCsr, PagedMatrix};
 
@@ -160,6 +167,69 @@ pub fn page_rows() -> usize {
     env_page_rows().max(1)
 }
 
+// ------------------------------------------------------- storage.dir knob
+
+static GLOBAL_STORAGE_DIR: Mutex<Option<String>> = Mutex::new(None);
+
+thread_local! {
+    // tri-state: None = unset (fall through), Some("") = pinned ephemeral
+    // (overrides global/env — tests use this to opt out of a CI-wide
+    // DEAL_STORAGE_DIR), Some(dir) = pinned directory.
+    static LOCAL_STORAGE_DIR: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+/// Set the process-global storage directory (`storage.dir` config /
+/// `--storage-dir` CLI). Empty string resets to auto (env or ephemeral).
+pub fn set_storage_dir(dir: &str) {
+    let mut g = GLOBAL_STORAGE_DIR.lock().expect("storage dir lock");
+    *g = if dir.is_empty() {
+        None
+    } else {
+        Some(dir.to_string())
+    };
+}
+
+/// Run `f` with the storage directory pinned on this thread. An empty
+/// string pins *ephemeral* mode (tempdir spills, no durable store) even
+/// when a global or `DEAL_STORAGE_DIR` value is set — tests that must
+/// not share an ambient directory rely on this.
+pub fn with_storage_dir<T>(dir: &str, f: impl FnOnce() -> T) -> T {
+    let prev = LOCAL_STORAGE_DIR.with(|c| c.replace(Some(dir.to_string())));
+    let out = f();
+    LOCAL_STORAGE_DIR.with(|c| *c.borrow_mut() = prev);
+    out
+}
+
+fn env_storage_dir() -> Option<&'static str> {
+    static ENV: OnceLock<Option<String>> = OnceLock::new();
+    ENV.get_or_init(|| std::env::var("DEAL_STORAGE_DIR").ok().filter(|v| !v.is_empty()))
+        .as_deref()
+}
+
+/// Effective durable-storage directory for this thread:
+/// [`with_storage_dir`] scope → [`set_storage_dir`] global
+/// (`storage.dir` / `--storage-dir`) → `DEAL_STORAGE_DIR` env → `None`
+/// (ephemeral: spill files are per-process tempfiles and nothing
+/// survives exit). `Some(dir)` roots both the durable store
+/// (`<dir>/ckpt-*.{pages,meta}`, `<dir>/wal-*.log`) and spill files.
+pub fn storage_dir() -> Option<PathBuf> {
+    let local = LOCAL_STORAGE_DIR.with(|c| c.borrow().clone());
+    if let Some(pin) = local {
+        return if pin.is_empty() {
+            None
+        } else {
+            Some(PathBuf::from(pin))
+        };
+    }
+    {
+        let g = GLOBAL_STORAGE_DIR.lock().expect("storage dir lock");
+        if let Some(dir) = g.as_ref() {
+            return Some(PathBuf::from(dir));
+        }
+    }
+    env_storage_dir().map(PathBuf::from)
+}
+
 /// Parse a byte count with optional binary suffix: `4096`, `256k`,
 /// `64m`, `2g` (also `kb`/`kib` spellings, case-insensitive). Used by the
 /// `storage.budget_bytes` config key, the `--mem-budget` CLI flag, and
@@ -258,5 +328,17 @@ mod tests {
         with_page_rows(7, || assert_eq!(page_rows(), 7));
         with_page_rows(0, || assert_eq!(page_rows(), 1, "granularity clamps to >= 1"));
         assert!(page_rows() >= 1);
+    }
+
+    #[test]
+    fn storage_dir_chain_pins_and_overrides() {
+        with_storage_dir("/tmp/deal-sd-test", || {
+            assert_eq!(storage_dir(), Some(PathBuf::from("/tmp/deal-sd-test")));
+            // nested empty pin = ephemeral, even under an outer pin
+            with_storage_dir("", || assert_eq!(storage_dir(), None));
+            assert_eq!(storage_dir(), Some(PathBuf::from("/tmp/deal-sd-test")));
+        });
+        // outside any pin: global/env/ephemeral — just resolvable
+        let _ = storage_dir();
     }
 }

@@ -16,7 +16,7 @@
 
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -29,7 +29,8 @@ static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
 
 fn spill_path(tag: &str) -> PathBuf {
     let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
-    std::env::temp_dir().join(format!(
+    let dir = crate::storage::storage_dir().unwrap_or_else(std::env::temp_dir);
+    dir.join(format!(
         "deal-spill-{}-{}-{}.bin",
         std::process::id(),
         seq,
@@ -37,8 +38,12 @@ fn spill_path(tag: &str) -> PathBuf {
     ))
 }
 
-/// A tempfile-backed `rows × cols` f32 grid in fixed row-band pages.
-/// Deleted from disk on drop.
+/// A file-backed `rows × cols` f32 grid in fixed row-band pages. In the
+/// default (ephemeral) mode the backing file is a per-process tempfile
+/// deleted on drop; in *durable* mode ([`PageFile::create_durable`] /
+/// [`PageFile::open_durable`]) the file lives at a caller-named path that
+/// survives both drop and process death — the checkpoint tier of the
+/// durable store is built on it.
 pub struct PageFile {
     path: PathBuf,
     file: File,
@@ -49,6 +54,8 @@ pub struct PageFile {
     /// Rows per page (last page may be short).
     pub page_rows: usize,
     fs: Arc<SimFs>,
+    /// Durable files are never deleted on drop.
+    durable: bool,
     /// Raw bytes written to / read from the backing file.
     pub bytes_written: u64,
     pub bytes_read: u64,
@@ -67,6 +74,10 @@ impl PageFile {
     ) -> Result<PageFile> {
         anyhow::ensure!(page_rows >= 1, "page_rows must be >= 1");
         let path = spill_path(tag);
+        if let Some(parent) = path.parent() {
+            // a pinned storage.dir may not exist yet
+            std::fs::create_dir_all(parent)?;
+        }
         let file = OpenOptions::new()
             .read(true)
             .write(true)
@@ -82,9 +93,82 @@ impl PageFile {
             cols,
             page_rows,
             fs,
+            durable: false,
             bytes_written: 0,
             bytes_read: 0,
         })
+    }
+
+    /// Create (truncating any existing file) a zero-filled durable page
+    /// file at `path`. Unlike [`PageFile::create`], the file survives
+    /// drop — removal is the caller's (the durable store's) job.
+    pub fn create_durable(
+        path: &Path,
+        rows: usize,
+        cols: usize,
+        page_rows: usize,
+        fs: Arc<SimFs>,
+    ) -> Result<PageFile> {
+        anyhow::ensure!(page_rows >= 1, "page_rows must be >= 1");
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        file.set_len((rows * cols * 4) as u64)?;
+        Ok(PageFile {
+            path: path.to_path_buf(),
+            file,
+            rows,
+            cols,
+            page_rows,
+            fs,
+            durable: true,
+            bytes_written: 0,
+            bytes_read: 0,
+        })
+    }
+
+    /// Open an existing durable page file. The row count comes from the
+    /// file's length, which must be an exact multiple of the row stride.
+    pub fn open_durable(
+        path: &Path,
+        cols: usize,
+        page_rows: usize,
+        fs: Arc<SimFs>,
+    ) -> Result<PageFile> {
+        anyhow::ensure!(page_rows >= 1, "page_rows must be >= 1");
+        anyhow::ensure!(cols >= 1, "cols must be >= 1");
+        let file = OpenOptions::new().read(true).write(true).open(path)?;
+        let len = file.metadata()?.len();
+        let stride = (cols * 4) as u64;
+        anyhow::ensure!(
+            len % stride == 0,
+            "page file {:?}: length {} is not a multiple of the {}-byte row stride",
+            path,
+            len,
+            stride
+        );
+        Ok(PageFile {
+            path: path.to_path_buf(),
+            file,
+            rows: (len / stride) as usize,
+            cols,
+            page_rows,
+            fs,
+            durable: true,
+            bytes_written: 0,
+            bytes_read: 0,
+        })
+    }
+
+    /// Path of the backing file.
+    pub fn path(&self) -> &Path {
+        &self.path
     }
 
     /// Number of pages ( ⌈rows / page_rows⌉; 0 for an empty grid).
@@ -185,7 +269,9 @@ impl std::fmt::Debug for PageFile {
 
 impl Drop for PageFile {
     fn drop(&mut self) {
-        let _ = std::fs::remove_file(&self.path);
+        if !self.durable {
+            let _ = std::fs::remove_file(&self.path);
+        }
     }
 }
 
@@ -238,5 +324,58 @@ mod tests {
             f.path.clone()
         };
         assert!(!path.exists());
+    }
+
+    #[test]
+    fn durable_file_survives_drop_and_reopens_bit_exact() {
+        let dir = std::env::temp_dir().join(format!("deal-pf-durable-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("grid.pages");
+        let vals = vec![1.5f32, -0.0, 2.5e-8, -4.0, 0.0, 9.0];
+        {
+            let mut f = PageFile::create_durable(&path, 3, 2, 2, fs()).unwrap();
+            f.write_page(0, &vals[..4]).unwrap();
+            f.write_page(1, &vals[4..]).unwrap();
+            f.sync().unwrap();
+        }
+        assert!(path.exists(), "durable files survive drop");
+        let mut f = PageFile::open_durable(&path, 2, 2, fs()).unwrap();
+        assert_eq!((f.rows, f.n_pages()), (3, 2), "rows recovered from file length");
+        let mut back = Vec::new();
+        f.read_page(0, &mut back).unwrap();
+        let mut tail = Vec::new();
+        f.read_page(1, &mut tail).unwrap();
+        back.extend_from_slice(&tail);
+        let a: Vec<u32> = vals.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = back.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "bit-exact across process-lifetime boundary");
+        // ragged length is rejected
+        drop(f);
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_len(23)
+            .unwrap();
+        assert!(PageFile::open_durable(&path, 2, 2, fs()).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_files_land_in_the_pinned_storage_dir() {
+        let dir = std::env::temp_dir().join(format!("deal-pf-sd-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        crate::storage::with_storage_dir(dir.to_str().unwrap(), || {
+            let f = PageFile::create("pinned", 2, 2, 2, fs()).unwrap();
+            assert!(f.path().starts_with(&dir), "spill path {:?}", f.path());
+        });
+        crate::storage::with_storage_dir("", || {
+            let f = PageFile::create("ephemeral", 2, 2, 2, fs()).unwrap();
+            assert!(
+                f.path().starts_with(std::env::temp_dir()),
+                "empty pin falls back to the tempdir"
+            );
+        });
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

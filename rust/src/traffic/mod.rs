@@ -20,5 +20,7 @@
 pub mod replay;
 pub mod trace;
 
-pub use replay::{churn_into_cell, replay, ReplayMode, ReplayOpts, ReplayReport};
+pub use replay::{
+    churn_into_cell, churn_into_cell_durable, replay, ReplayMode, ReplayOpts, ReplayReport,
+};
 pub use trace::{ChurnEvent, Trace, TraceConfig, TraceEvent, ZipfSampler};

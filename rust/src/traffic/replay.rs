@@ -21,13 +21,15 @@
 //! the replay collector thread only drains tickets and folds digests,
 //! so a slow collector can never inflate a class's tail.
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::delta::DeltaState;
 use crate::serve::{
-    refresh_delta, response_digest, PoolStats, Response, ServePool, TableCell, Ticket,
+    refresh_delta, refresh_delta_durable, response_digest, PoolStats, Response, ServePool,
+    TableCell, Ticket,
 };
+use crate::storage::DurableStore;
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -227,6 +229,29 @@ pub fn churn_into_cell<'a>(
             ev.feat_updates as usize,
         );
         let rep = refresh_delta(state, &batch, cell)?;
+        Ok(rep.epoch)
+    }
+}
+
+/// [`churn_into_cell`] with journal-before-publish: every churn epoch is
+/// fsync'd into `store` before it becomes visible ([`refresh_delta_durable`]),
+/// so killing the replay at any point recovers the last published table
+/// bit-identically. The parity test in `tests/recovery.rs` runs the same
+/// trace through both hooks and asserts identical response digests.
+pub fn churn_into_cell_durable<'a>(
+    state: &'a mut DeltaState,
+    cell: &'a TableCell,
+    store: &'a Mutex<DurableStore>,
+) -> impl FnMut(&ChurnEvent) -> Result<u64> + 'a {
+    move |ev: &ChurnEvent| {
+        let mut rng = Rng::new(ev.seed);
+        let batch = state.synth_batch(
+            &mut rng,
+            ev.edge_adds as usize,
+            ev.edge_removes as usize,
+            ev.feat_updates as usize,
+        );
+        let rep = refresh_delta_durable(state, &batch, cell, store)?;
         Ok(rep.epoch)
     }
 }

@@ -476,15 +476,9 @@ fn put_f64(buf: &mut Vec<u8>, v: f64) {
 }
 
 /// FNV-1a over a byte slice (the trace checksum; same constants as
-/// `serve::response_digest`).
-pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
+/// `serve::response_digest`). Re-exported from [`crate::util::fnv1a`],
+/// which the durable store's WAL/checkpoint formats share.
+pub use crate::util::fnv1a;
 
 struct Reader<'a> {
     bytes: &'a [u8],

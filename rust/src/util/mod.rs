@@ -39,6 +39,29 @@ pub fn human_secs(secs: f64) -> String {
     }
 }
 
+/// FNV-1a offset basis: the seed for an incremental [`fnv1a_extend`]
+/// chain (`fnv1a(b) == fnv1a_extend(FNV_OFFSET, b)`).
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// 64-bit FNV-1a over `bytes` — the checksum used by every versioned
+/// on-disk format in the repo (traffic traces, WAL records, checkpoint
+/// metadata). Not cryptographic; guards against torn writes and bit
+/// flips, not adversaries.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_extend(FNV_OFFSET, bytes)
+}
+
+/// Extend an FNV-1a hash state with more bytes (start from
+/// [`FNV_OFFSET`]). Lets large payloads be hashed in streamed chunks
+/// without materializing one contiguous buffer.
+pub fn fnv1a_extend(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// Integer ceiling division.
 #[inline]
 pub fn div_ceil(a: usize, b: usize) -> usize {
@@ -79,6 +102,20 @@ mod tests {
         assert_eq!(human_secs(0.5e-9 * 20.0), "10.0 ns");
         assert_eq!(human_secs(2.5e-3), "2.50 ms");
         assert_eq!(human_secs(3.0), "3.00 s");
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors_and_extends() {
+        // canonical FNV-1a test vectors
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+        // incremental chaining equals one-shot hashing at any split
+        let data = b"deal-durable-wal";
+        for split in 0..=data.len() {
+            let h = fnv1a_extend(fnv1a(&data[..split]), &data[split..]);
+            assert_eq!(h, fnv1a(data), "split {}", split);
+        }
     }
 
     #[test]

@@ -1,0 +1,473 @@
+//! Crash-recovery integration (DESIGN.md §Durability): the durable store
+//! must extend the repo's bit-identical determinism contract across
+//! process death.
+//!
+//! The centrepiece is a **crash-point sweep**: a seeded churn schedule is
+//! journaled through the durable store with the deterministic fault hook
+//! (`storage::durable::crash`) armed to kill the run at its 1st, 2nd, …,
+//! Nth irreversible step — every WAL append (torn mid-record), every
+//! checkpoint page write, the checkpoint commit, the WAL rotation, the
+//! stale-generation cleanup. After every single injected crash, recovery
+//! must rebuild exactly the table of the last *published* epoch —
+//! asserted bit-for-bit, no tolerance — and the run must be able to
+//! continue on top of the recovered store to the same final table as an
+//! uninterrupted run.
+//!
+//! Alongside the sweep: torn-tail truncation is trimmed (not fatal),
+//! bit-flip corruption is rejected with the record's offset, the
+//! log-over-checkpoint replay agrees with the in-memory delta path and
+//! the Sequenced traffic digests (resident and spilled), and
+//! `Pipeline::warm_restart` rebuilds a serving report from disk.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use deal::config::DealConfig;
+use deal::coordinator::delta::DeltaState;
+use deal::coordinator::Pipeline;
+use deal::graph::delta::UpdateBatch;
+use deal::runtime::Native;
+use deal::serve::{refresh_delta_durable, PoolOpts, ServePool, ShardedTable, TableCell};
+use deal::storage::durable::{crash, table_digest, REC_HEADER_LEN, WAL_HEADER_LEN};
+use deal::storage::{with_page_rows, DurableOptions, DurableStore};
+use deal::tensor::Matrix;
+use deal::traffic::{
+    churn_into_cell, churn_into_cell_durable, replay, ReplayMode, ReplayOpts, Trace, TraceConfig,
+};
+use deal::util::rng::Rng;
+
+/// 256-node / 2-layer config shared by every test (and by the truth run
+/// and every crash run, so the delta states evolve identically).
+fn small_cfg() -> DealConfig {
+    let mut cfg = DealConfig::default();
+    cfg.dataset.scale = 1.0 / 256.0; // 256 nodes
+    cfg.cluster.machines = 4;
+    cfg.model.layers = 2;
+    cfg.model.fanout = 5;
+    cfg
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("deal-recov-{}-{}", std::process::id(), tag));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Bit-exact table equality — the recovery contract has no tolerance.
+fn assert_bits_eq(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{}: shape", what);
+    let ab: Vec<u32> = a.data.iter().map(|v| v.to_bits()).collect();
+    let bb: Vec<u32> = b.data.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(ab, bb, "{}: not bit-identical", what);
+}
+
+fn assert_batch_eq(a: &UpdateBatch, b: &UpdateBatch, what: &str) {
+    assert_eq!(a.add_edges, b.add_edges, "{}: add_edges", what);
+    assert_eq!(a.remove_edges, b.remove_edges, "{}: remove_edges", what);
+    assert_eq!(a.feature_updates.len(), b.feature_updates.len(), "{}: feat count", what);
+    for ((na, ra), (nb, rb)) in a.feature_updates.iter().zip(&b.feature_updates) {
+        assert_eq!(na, nb, "{}: feat node", what);
+        let ba: Vec<u32> = ra.iter().map(|v| v.to_bits()).collect();
+        let bbits: Vec<u32> = rb.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ba, bbits, "{}: feat row bits", what);
+    }
+}
+
+/// The seeded churn schedule: `batches` synthesized sequentially from the
+/// evolving state (batch i+1 depends on batch i having been applied) and
+/// `snapshots[e]` = the embeddings after epoch `e` (snapshots[0] is the
+/// baseline) — the ground truth every crash run is checked against.
+struct Schedule {
+    batches: Vec<UpdateBatch>,
+    snapshots: Vec<Matrix>,
+}
+
+const SCHED_BATCHES: usize = 4;
+/// Compact after 3 WAL records → the sweep crosses a full compaction
+/// (checkpoint pages + commit + rotation + cleanup) mid-schedule.
+const COMPACT_EVERY: u64 = 3;
+
+fn build_schedule() -> Schedule {
+    let mut state = DeltaState::init(small_cfg()).unwrap();
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut batches = Vec::new();
+    let mut snapshots = vec![state.embeddings().clone()];
+    for _ in 0..SCHED_BATCHES {
+        let batch = state.synth_batch(&mut rng, 12, 12, 2);
+        state.apply(&batch).unwrap();
+        batches.push(batch);
+        snapshots.push(state.embeddings().clone());
+    }
+    Schedule { batches, snapshots }
+}
+
+/// Journal the schedule through a fresh durable store in `dir`,
+/// optionally armed to crash at the `arm`-th crash point (1-based; store
+/// creation itself is excluded — `crash::arm` resets the step counter
+/// after the store exists). Returns the run outcome, the number of crash
+/// points the run stepped through, and the number of epochs that were
+/// **published** (became client-visible) before the crash — the state
+/// recovery is never allowed to lose.
+fn run_schedule(
+    dir: &PathBuf,
+    sched: &Schedule,
+    arm: Option<u64>,
+) -> (deal::Result<()>, u64, u64) {
+    let mut published = 0u64;
+    let out = with_page_rows(64, || {
+        let mut state = DeltaState::init(small_cfg())?;
+        let store = DurableStore::create(
+            dir,
+            small_cfg().exec.seed,
+            state.embeddings(),
+            DurableOptions { compact_every: COMPACT_EVERY },
+        )?;
+        match arm {
+            Some(n) => crash::arm(n),
+            None => crash::reset_count(),
+        }
+        let store = Mutex::new(store);
+        let cell = TableCell::new(ShardedTable::from_inference_plan(
+            state.plan(),
+            state.embeddings(),
+            0,
+        ));
+        for batch in &sched.batches {
+            let rep = refresh_delta_durable(&mut state, batch, &cell, &store)?;
+            // the publish happened even if the post-publish compaction
+            // dies next — the journal already covers this epoch
+            published = rep.epoch;
+        }
+        Ok(())
+    });
+    let steps = crash::count();
+    crash::disarm();
+    (out, steps, published)
+}
+
+/// Recover `dir`, continue the rest of the schedule on top of the
+/// recovered state, and assert bit-identity at every stage. Returns the
+/// epoch the store had recovered to.
+fn recover_check_and_continue(dir: &PathBuf, sched: &Schedule, what: &str) -> u64 {
+    let (store, rec) = with_page_rows(64, || DurableStore::open(dir, DurableOptions::default()))
+        .unwrap_or_else(|e| panic!("{}: recovery failed: {:#}", what, e));
+    let e = rec.epoch as usize;
+    assert!(e <= SCHED_BATCHES, "{}: recovered epoch {} out of range", what, e);
+    assert_eq!(store.counters().recoveries, 1, "{}: recovery counted", what);
+
+    // 1) recovered table == the truth snapshot of the recovered epoch
+    assert_bits_eq(&rec.table, &sched.snapshots[e], &format!("{}: recovered table", what));
+
+    // 2) the journaled batches are a faithful audit trail: replaying them
+    // through a fresh in-memory state reproduces the same table
+    let mut state = DeltaState::init(small_cfg()).unwrap();
+    for (i, batch) in sched.batches[..e].iter().enumerate() {
+        state.apply(batch).unwrap_or_else(|err| {
+            panic!("{}: replaying truth batch {}: {:#}", what, i, err)
+        });
+    }
+    assert_bits_eq(state.embeddings(), &rec.table, &format!("{}: audit replay", what));
+    for (ep, batch) in &rec.deltas {
+        let idx = (*ep - 1) as usize;
+        assert!(
+            *ep > rec.watermark && idx < e,
+            "{}: delta epoch {} outside (watermark {}, recovered {}]",
+            what,
+            ep,
+            rec.watermark,
+            e
+        );
+        assert_batch_eq(batch, &sched.batches[idx], &format!("{}: wal delta {}", what, ep));
+    }
+
+    // 3) the run continues on the recovered store to the same final table
+    // as an uninterrupted run
+    with_page_rows(64, || -> deal::Result<()> {
+        let store = Mutex::new(store);
+        let cell = TableCell::new(ShardedTable::from_full(&rec.table, 2, rec.epoch));
+        for batch in &sched.batches[e..] {
+            refresh_delta_durable(&mut state, batch, &cell, &store)?;
+        }
+        assert_bits_eq(
+            &cell.load().to_full(),
+            &sched.snapshots[SCHED_BATCHES],
+            &format!("{}: continued serving table", what),
+        );
+        Ok(())
+    })
+    .unwrap();
+    assert_bits_eq(
+        state.embeddings(),
+        &sched.snapshots[SCHED_BATCHES],
+        &format!("{}: continued state", what),
+    );
+
+    // 4) ... and that continuation is itself durable
+    let (_, rec2) =
+        with_page_rows(64, || DurableStore::open(dir, DurableOptions::default())).unwrap();
+    assert_eq!(rec2.epoch, SCHED_BATCHES as u64, "{}: reopen after continue", what);
+    assert_bits_eq(
+        &rec2.table,
+        &sched.snapshots[SCHED_BATCHES],
+        &format!("{}: reopened table", what),
+    );
+    rec.epoch
+}
+
+/// The tentpole: kill the schedule at every crash point in turn; every
+/// single one must recover bit-identically and be able to finish the
+/// schedule.
+#[test]
+fn crash_point_sweep_recovers_bit_identical_tables() {
+    let sched = build_schedule();
+
+    // uninterrupted run: counts the crash points and fixes the baseline
+    let dir0 = fresh_dir("sweep-base");
+    let (ok, total, published) = run_schedule(&dir0, &sched, None);
+    ok.unwrap();
+    assert_eq!(published, SCHED_BATCHES as u64);
+    // 4 WAL appends + one full compaction (4 checkpoint pages at
+    // page_rows=64 over 256 rows, commit, rotation, cleanup)
+    assert!(
+        total >= SCHED_BATCHES as u64 + 4,
+        "schedule only crossed {} crash points — sweep would be vacuous",
+        total
+    );
+    let e0 = recover_check_and_continue(&dir0, &sched, "uninterrupted");
+    assert_eq!(e0, SCHED_BATCHES as u64);
+    let _ = std::fs::remove_dir_all(&dir0);
+
+    let mut recovered_epochs = Vec::new();
+    for n in 1..=total {
+        let what = format!("crash point {}/{}", n, total);
+        let dir = fresh_dir(&format!("sweep-{}", n));
+        let (out, steps, published) = run_schedule(&dir, &sched, Some(n));
+        let err = out.expect_err(&format!("{}: armed run must die", what));
+        assert!(
+            crash::is_injected(&err),
+            "{}: died of the wrong cause: {:#}",
+            what,
+            err
+        );
+        assert_eq!(steps, n, "{}: crashed at the armed step", what);
+        let e = recover_check_and_continue(&dir, &sched, &what);
+        // the journal-before-publish contract: no client-visible epoch
+        // is ever lost; a crash can only leave the store one epoch
+        // *ahead* of the caller (journaled, not yet returned)
+        assert!(
+            e == published || e == published + 1,
+            "{}: {} epochs were published but recovery produced epoch {}",
+            what,
+            published,
+            e
+        );
+        recovered_epochs.push(e);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    // the sweep crossed every phase: early crashes lose epochs (recover
+    // behind the full schedule), late ones keep them all
+    assert!(recovered_epochs.iter().any(|&e| e < SCHED_BATCHES as u64));
+    assert!(recovered_epochs.iter().any(|&e| e >= COMPACT_EVERY));
+}
+
+#[test]
+fn torn_wal_tail_is_trimmed_not_fatal() {
+    let sched = build_schedule();
+    let dir = fresh_dir("torn");
+    // no compaction: both deltas stay in wal-0.log
+    with_page_rows(64, || -> deal::Result<()> {
+        let mut state = DeltaState::init(small_cfg())?;
+        let store = DurableStore::create(
+            &dir,
+            small_cfg().exec.seed,
+            state.embeddings(),
+            DurableOptions { compact_every: 1_000_000 },
+        )?;
+        let store = Mutex::new(store);
+        let cell =
+            TableCell::new(ShardedTable::from_inference_plan(state.plan(), state.embeddings(), 0));
+        for batch in &sched.batches[..2] {
+            refresh_delta_durable(&mut state, batch, &cell, &store)?;
+        }
+        Ok(())
+    })
+    .unwrap();
+
+    // tear the tail: chop 5 bytes off the last record
+    let wal = dir.join("wal-0.log");
+    let len = std::fs::metadata(&wal).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&wal).unwrap();
+    f.set_len(len - 5).unwrap();
+    drop(f);
+
+    let (_, rec) = DurableStore::open(&dir, DurableOptions::default()).unwrap();
+    assert_eq!(rec.epoch, 1, "the torn epoch-2 record is lost, epoch 1 survives");
+    let trim = rec.trimmed_at.expect("the scan must report the trim");
+    assert!(trim >= WAL_HEADER_LEN && trim < len - 5, "trim inside the log body");
+    assert_bits_eq(&rec.table, &sched.snapshots[1], "torn-tail recovery");
+
+    // the trim is persistent: a second recovery sees a clean log
+    let (_, rec2) = DurableStore::open(&dir, DurableOptions::default()).unwrap();
+    assert_eq!(rec2.trimmed_at, None, "second open finds no torn tail");
+    assert_eq!(rec2.epoch, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_wal_record_is_rejected_with_offset() {
+    let sched = build_schedule();
+    let dir = fresh_dir("corrupt");
+    with_page_rows(64, || -> deal::Result<()> {
+        let mut state = DeltaState::init(small_cfg())?;
+        let store = DurableStore::create(
+            &dir,
+            small_cfg().exec.seed,
+            state.embeddings(),
+            DurableOptions { compact_every: 1_000_000 },
+        )?;
+        let store = Mutex::new(store);
+        let cell =
+            TableCell::new(ShardedTable::from_inference_plan(state.plan(), state.embeddings(), 0));
+        refresh_delta_durable(&mut state, &sched.batches[0], &cell, &store)?;
+        Ok(())
+    })
+    .unwrap();
+
+    // flip one bit inside the first record's *body* (not the length
+    // field, which would read as a torn tail instead)
+    let wal = dir.join("wal-0.log");
+    let mut bytes = std::fs::read(&wal).unwrap();
+    let at = WAL_HEADER_LEN as usize + REC_HEADER_LEN + 3;
+    bytes[at] ^= 0x10;
+    std::fs::write(&wal, &bytes).unwrap();
+
+    let err = DurableStore::open(&dir, DurableOptions::default()).unwrap_err();
+    let msg = format!("{:#}", err);
+    assert!(
+        msg.contains(&format!("corrupt record at offset {}", WAL_HEADER_LEN)),
+        "corruption must be rejected with the record's offset, got: {}",
+        msg
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Property: for random seeds, replaying one traffic trace through the
+/// durable churn hook produces (a) the same per-request Sequenced
+/// response digests, (b) the same final embeddings, and (c) a store that
+/// recovers to exactly those embeddings — resident or spilled.
+fn replay_parity(seed: u64, spill_budget: u64, tag: &str) {
+    let trace = Trace::generate(&TraceConfig {
+        seed,
+        n_nodes: 256,
+        requests: 100,
+        base_rate: 50_000.0,
+        churn_batches: 2,
+        ..TraceConfig::default()
+    });
+    let opts = ReplayOpts { mode: ReplayMode::Sequenced, keep_responses: false };
+    let pool_opts = PoolOpts { workers: 2, queue_capacity: 256, ..PoolOpts::default() };
+
+    // path A: the PR 2 in-memory delta path
+    let mut st_a = DeltaState::init(small_cfg()).unwrap();
+    let cell_a = Arc::new(TableCell::new(ShardedTable::from_inference_plan(
+        st_a.plan(),
+        st_a.embeddings(),
+        0,
+    )));
+    let pool_a = ServePool::spawn(Arc::clone(&cell_a), Arc::new(Native), pool_opts.clone());
+    let rep_a = replay(&pool_a, &trace, &opts, churn_into_cell(&mut st_a, &cell_a)).unwrap();
+    pool_a.shutdown();
+
+    // path B: journal-before-publish through the durable store,
+    // compacting after every record to cross checkpoints mid-trace
+    let dir = fresh_dir(tag);
+    let mut st_b = DeltaState::init(small_cfg()).unwrap();
+    let store = Mutex::new(
+        DurableStore::create(
+            &dir,
+            seed,
+            st_b.embeddings(),
+            DurableOptions { compact_every: 1 },
+        )
+        .unwrap(),
+    );
+    let table_b = if spill_budget > 0 {
+        ShardedTable::from_inference_plan_spilled(st_b.plan(), st_b.embeddings(), 0, spill_budget)
+            .unwrap()
+    } else {
+        ShardedTable::from_inference_plan(st_b.plan(), st_b.embeddings(), 0)
+    };
+    assert_eq!(table_b.is_spilled(), spill_budget > 0);
+    let cell_b = Arc::new(TableCell::new(table_b));
+    let pool_b = ServePool::spawn(Arc::clone(&cell_b), Arc::new(Native), pool_opts);
+    let churn_b = churn_into_cell_durable(&mut st_b, &cell_b, &store);
+    let rep_b = replay(&pool_b, &trace, &opts, churn_b).unwrap();
+    pool_b.shutdown();
+
+    assert_eq!(rep_a.churn_epochs, rep_b.churn_epochs, "{}: same epochs", tag);
+    assert_eq!(
+        rep_a.digests, rep_b.digests,
+        "{}: durable journaling changed a response digest",
+        tag
+    );
+    assert_bits_eq(st_a.embeddings(), st_b.embeddings(), &format!("{}: final state", tag));
+    assert_bits_eq(
+        &cell_b.load().to_full(),
+        st_b.embeddings(),
+        &format!("{}: served table", tag),
+    );
+
+    // the store recovers to exactly the traffic run's final table
+    drop(store);
+    let (_, rec) = DurableStore::open(&dir, DurableOptions::default()).unwrap();
+    assert_eq!(rec.epoch, trace.n_churn() as u64, "{}: recovered epoch", tag);
+    assert_bits_eq(&rec.table, st_b.embeddings(), &format!("{}: recovered table", tag));
+    assert_eq!(
+        table_digest(&rec.table),
+        table_digest(st_b.embeddings()),
+        "{}: digest helper agrees",
+        tag
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn durable_replay_matches_in_memory_seed_a1() {
+    replay_parity(0xA1, 0, "parity-a1");
+}
+
+#[test]
+fn durable_replay_matches_in_memory_seed_7e57() {
+    replay_parity(0x7E57, 0, "parity-7e57");
+}
+
+#[test]
+fn durable_replay_matches_in_memory_spilled() {
+    // 16 KiB budget < the 256-row table: path B serves from the paged
+    // tier while journaling — durability and spill must compose
+    replay_parity(0xA1, 16 << 10, "parity-spill");
+}
+
+#[test]
+fn warm_restart_rebuilds_report_from_disk() {
+    let sched = build_schedule();
+    let dir = fresh_dir("warm");
+    let (ok, _, _) = run_schedule(&dir, &sched, None);
+    ok.unwrap();
+
+    let pipeline = Pipeline::new(small_cfg());
+    let (report, store, rec) = pipeline.warm_restart(&dir).unwrap();
+    assert_eq!(rec.epoch, SCHED_BATCHES as u64);
+    assert_eq!(report.stages.0.len(), 1);
+    assert_eq!(report.stages.0[0].name, "recovery");
+    assert!(report.stages.0[0].sim_secs > 0.0, "recovery charges simulated I/O");
+    let summary = report.stages.0[0].cluster.as_ref().unwrap().summary();
+    assert!(summary.contains("recov=1"), "summary surfaces the recovery: {}", summary);
+    assert_eq!(store.last_epoch(), SCHED_BATCHES as u64);
+
+    let emb = report.embeddings.as_ref().expect("warm restart keeps embeddings");
+    assert_bits_eq(emb, &sched.snapshots[SCHED_BATCHES], "warm-restart embeddings");
+    let table = report.serving_table().expect("serving table reconstructs");
+    assert_bits_eq(&table.to_full(), &sched.snapshots[SCHED_BATCHES], "warm-restart table");
+    let _ = std::fs::remove_dir_all(&dir);
+}
