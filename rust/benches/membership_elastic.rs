@@ -1,0 +1,176 @@
+//! Elastic membership migration cost (EXPERIMENTS.md §Membership):
+//! incremental re-sharding must move **strictly fewer bytes** than a
+//! naive full re-shard for the same membership event (a hard assert —
+//! it is the tentpole's core claim, not a timing gate), and a killed
+//! rank's band must come back from its per-shard durable store instead
+//! of being re-shipped over the wire.
+//!
+//! The run: twin elastic clusters over the same table walk the same
+//! shrink event in `Incremental` vs `FullReshard` mode; then a kill is
+//! recovered once with durable shard stores and once wire-only. Every
+//! resulting table is checked bit-identical to the fixed-world
+//! reference before any number is reported.
+//!
+//! `DEAL_MEMBERSHIP_BENCH_LAX=1` downgrades only the incremental-vs-full
+//! *wall-time* gate to a warning (CI smoke on contended runners); the
+//! byte and bit-identity gates always hard-fail.
+//!
+//! Emits `target/bench_results/BENCH_membership.json`.
+//!
+//! Run: `cargo bench --bench membership_elastic [-- --full]`
+
+use deal::cluster::membership::{ElasticCluster, ElasticOpts, MembershipEvent, MigrationMode};
+use deal::tensor::Matrix;
+use deal::util::bench::{time_once, BenchArgs, Report, Table};
+use deal::util::rng::Rng;
+use deal::util::{human_bytes, human_secs};
+
+fn main() {
+    let args = BenchArgs::parse();
+    let lax = std::env::var("DEAL_MEMBERSHIP_BENCH_LAX").map_or(false, |v| v != "0");
+    // quick: 2k × 64 table on 8 ranks; full: 8k × 128 on 12
+    let (nodes, dim, world) = if args.quick { (2048, 64, 8) } else { (8192, 128, 12) };
+
+    let mut report = Report::new("membership_elastic");
+    let mut rng = Rng::new(0x3_1A57_1C);
+    let full_table = Matrix::random(nodes, dim, 1.0, &mut rng);
+    report.note(format!("table: {} × {} on {} ranks", nodes, dim, world));
+
+    // ---- shrink: incremental vs naive full re-shard --------------------
+    let ev = MembershipEvent::Leave { rank: world - 1 };
+    let mut inc =
+        ElasticCluster::new(&full_table, world, ElasticOpts::default()).expect("cluster");
+    let mut naive =
+        ElasticCluster::new(&full_table, world, ElasticOpts::default()).expect("cluster");
+    let (s_inc, inc_wall) = time_once(|| inc.apply_mode(ev, MigrationMode::Incremental));
+    let s_inc = s_inc.expect("incremental migration");
+    let (s_full, full_wall) = time_once(|| naive.apply_mode(ev, MigrationMode::FullReshard));
+    let s_full = s_full.expect("full re-shard");
+    inc.verify_against(&full_table).expect("incremental table bit-identical");
+    naive.verify_against(&full_table).expect("full-reshard table bit-identical");
+    report.note("bit-identity: both migration modes reproduce the fixed-world table (exact)");
+
+    // the core claim, hard-asserted: only the bands changing owner move
+    assert!(
+        s_inc.bytes_on_wire < s_full.bytes_on_wire,
+        "incremental migration moved {} >= full re-shard's {}",
+        s_inc.bytes_on_wire,
+        s_full.bytes_on_wire
+    );
+    assert!(s_inc.rows_moved < s_full.rows_moved);
+    assert_eq!(s_full.rows_moved, nodes, "a full re-shard ships every row");
+    let byte_ratio = s_full.bytes_on_wire as f64 / s_inc.bytes_on_wire.max(1) as f64;
+
+    let mut t = Table::new(
+        &format!("shrink {} → {} ranks ({})", world, world - 1, ev),
+        &["mode", "rows moved", "wire bytes", "msgs", "sim", "wall"],
+    );
+    t.row(&[
+        "incremental".into(),
+        s_inc.rows_moved.to_string(),
+        human_bytes(s_inc.bytes_on_wire),
+        s_inc.msgs.to_string(),
+        human_secs(s_inc.sim_secs),
+        human_secs(inc_wall),
+    ]);
+    t.row(&[
+        "full re-shard".into(),
+        s_full.rows_moved.to_string(),
+        human_bytes(s_full.bytes_on_wire),
+        s_full.msgs.to_string(),
+        human_secs(s_full.sim_secs),
+        human_secs(full_wall),
+    ]);
+    report.add_table(t);
+    report.note(format!("incremental moves {:.2}x fewer wire bytes", byte_ratio));
+
+    let wall_pass = inc_wall <= full_wall;
+    if !wall_pass {
+        let msg = format!(
+            "incremental wall time ({}) exceeded full re-shard ({})",
+            human_secs(inc_wall),
+            human_secs(full_wall)
+        );
+        if lax {
+            report.note(format!("LAX: {}", msg));
+        } else {
+            panic!("{}", msg);
+        }
+    }
+
+    // ---- kill: durable shard recovery vs wire-only rebuild -------------
+    let dir = std::env::temp_dir().join(format!("deal-member-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let kill = MembershipEvent::Kill { rank: world / 2 };
+    let opts = ElasticOpts { durable_root: Some(dir.clone()), ..ElasticOpts::default() };
+    let mut durable = ElasticCluster::new(&full_table, world, opts).expect("cluster");
+    let mut wire_only =
+        ElasticCluster::new(&full_table, world, ElasticOpts::default()).expect("cluster");
+    let (s_dur, dur_wall) = time_once(|| durable.apply(kill));
+    let s_dur = s_dur.expect("durable kill recovery");
+    let (s_wire, wire_wall) = time_once(|| wire_only.apply(kill));
+    let s_wire = s_wire.expect("wire kill rebuild");
+    durable.verify_against(&full_table).expect("durable recovery bit-identical");
+    wire_only.verify_against(&full_table).expect("wire rebuild bit-identical");
+    assert!(s_dur.recovered_from_durable, "durable path did not use the shard store");
+    assert!(s_dur.rows_recovered > 0);
+    assert!(
+        s_dur.bytes_on_wire < s_wire.bytes_on_wire,
+        "durable recovery moved {} >= wire rebuild's {}",
+        s_dur.bytes_on_wire,
+        s_wire.bytes_on_wire
+    );
+
+    let mut t = Table::new(
+        &format!("kill rank {} on {} ranks", world / 2, world),
+        &["recovery", "rows recovered", "rows shipped", "wire bytes", "sim", "wall"],
+    );
+    t.row(&[
+        "durable shard store".into(),
+        s_dur.rows_recovered.to_string(),
+        s_dur.rows_moved.to_string(),
+        human_bytes(s_dur.bytes_on_wire),
+        human_secs(s_dur.sim_secs),
+        human_secs(dur_wall),
+    ]);
+    t.row(&[
+        "wire-only rebuild".into(),
+        s_wire.rows_recovered.to_string(),
+        s_wire.rows_moved.to_string(),
+        human_bytes(s_wire.bytes_on_wire),
+        human_secs(s_wire.sim_secs),
+        human_secs(wire_wall),
+    ]);
+    report.add_table(t);
+
+    // ---- machine-readable summary (schema: EXPERIMENTS.md §Membership) -
+    let json = format!(
+        "{{\n  \"bench\": \"membership_elastic\",\n  \"quick\": {},\n  \"nodes\": {},\n  \"dim\": {},\n  \"world\": {},\n  \"shrink_incremental_bytes\": {},\n  \"shrink_full_bytes\": {},\n  \"shrink_byte_ratio\": {:.3},\n  \"shrink_incremental_rows\": {},\n  \"shrink_full_rows\": {},\n  \"shrink_incremental_sim_secs\": {:.6},\n  \"shrink_full_sim_secs\": {:.6},\n  \"kill_durable_bytes\": {},\n  \"kill_wire_bytes\": {},\n  \"kill_rows_recovered\": {},\n  \"kill_durable_sim_secs\": {:.6},\n  \"kill_wire_sim_secs\": {:.6},\n  \"bit_identical\": true,\n  \"pass\": {},\n  \"lax\": {}\n}}\n",
+        args.quick,
+        nodes,
+        dim,
+        world,
+        s_inc.bytes_on_wire,
+        s_full.bytes_on_wire,
+        byte_ratio,
+        s_inc.rows_moved,
+        s_full.rows_moved,
+        s_inc.sim_secs,
+        s_full.sim_secs,
+        s_dur.bytes_on_wire,
+        s_wire.bytes_on_wire,
+        s_dur.rows_recovered,
+        s_dur.sim_secs,
+        s_wire.sim_secs,
+        wall_pass,
+        lax
+    );
+    let out = std::path::PathBuf::from("target/bench_results");
+    let _ = std::fs::create_dir_all(&out);
+    let json_path = out.join("BENCH_membership.json");
+    std::fs::write(&json_path, &json).expect("write BENCH_membership.json");
+    report.note(format!("wrote {}", json_path.display()));
+
+    let _ = std::fs::remove_dir_all(&dir);
+    report.finish();
+}

@@ -22,7 +22,8 @@ USAGE:
   deal run [--config FILE] [--set section.key=value]...   run the pipeline
   deal serve [--config FILE] [--set section.key=value]...
              [--requests N] [--workers W] [--batch B] [--refresh R]
-             [--storage-dir DIR] [--resume]               refresh + serve the table
+             [--storage-dir DIR] [--resume]
+             [--membership-schedule S]                    refresh + serve the table
   deal stream [--config FILE] [--set section.key=value]...
               [--batches N] [--churn F] [--feat-churn F] [--verify]
                                                           replay streaming updates
@@ -58,6 +59,17 @@ crash. `deal serve --resume` then skips the inference pipeline entirely:
 it replays log-over-checkpoint from DIR and rebuilds the exact (bit-
 identical) pre-crash serving table. The same directory also hosts the
 out-of-core tier's spill pages.
+
+`deal serve --membership-schedule \"leave:2,join:2,kill:1\"` finishes with
+an elastic-membership phase: the refreshed table is re-hosted on a
+simulated cluster whose world then shrinks, grows, and kills ranks per
+the schedule. Each event bumps an epoch-fenced membership epoch,
+migrates only the row bands changing owner (a killed rank's band is
+rebuilt from its durable shard store when a storage directory is set),
+and hands the reassembled table to the serving pool through the same
+double-buffered epoch swap a refresh uses. The command re-serves a
+pinned workload after every event and hard-fails unless responses stay
+bit-identical across all membership epochs.
 
 `traffic` generates (or loads, `--trace-in`) a deterministic production
 trace — Zipfian key skew, diurnal + bursty Poisson arrivals, interleaved
@@ -251,8 +263,8 @@ fn cmd_run(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     use crate::runtime::backend_from_config;
     use crate::serve::{
-        serve_workload, serve_workload_pooled, synthetic_workload, EmbeddingServer, PoolOpts,
-        Refresher, ServePool, TableCell,
+        response_digest, serve_workload, serve_workload_pooled, synthetic_workload,
+        EmbeddingServer, PoolOpts, Refresher, ServePool, TableCell,
     };
     use crate::storage::{DurableOptions, DurableStore};
     use crate::util::rng::Rng;
@@ -265,6 +277,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let max_batch: usize = flag_value(args, "--batch").unwrap_or("64").parse()?;
     let refreshes: usize = flag_value(args, "--refresh").unwrap_or("1").parse()?;
     let resume = args.iter().any(|a| a == "--resume");
+    // parse the membership schedule up front so a typo fails before the
+    // pipeline runs
+    let membership = flag_value(args, "--membership-schedule")
+        .map(|s| {
+            crate::cluster::membership::parse_schedule(s)
+                .map_err(|e| anyhow::anyhow!("--membership-schedule: {}", e))
+                .map(|evs| (s, evs))
+        })
+        .transpose()?;
+    if let Some((s, evs)) = &membership {
+        anyhow::ensure!(!evs.is_empty(), "--membership-schedule '{}' names no events", s);
+    }
     anyhow::ensure!(requests > 0, "--requests must be > 0");
     anyhow::ensure!(workers > 0, "--workers must be > 0");
     anyhow::ensure!(max_batch > 0, "--batch must be > 0");
@@ -352,6 +376,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let reqs = synthetic_workload(&mut rng, n, requests, false);
 
     // ---- sequential single-copy baseline
+    let emb_for_membership = membership.as_ref().map(|_| embeddings.clone());
     let server = EmbeddingServer::new(embeddings);
     let base = serve_workload(&server, &reqs, backend.as_ref())?;
     println!(
@@ -442,6 +467,65 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         );
     }
     anyhow::ensure!(final_stats.failed == 0, "{} requests failed", final_stats.failed);
+
+    // ---- elastic membership phase: re-host the table on a simulated
+    // cluster, walk the schedule, and prove serving stays bit-identical
+    if let Some((sched, events)) = membership {
+        use crate::cluster::membership::{ElasticCluster, ElasticOpts};
+
+        let emb = emb_for_membership.expect("embeddings kept for membership phase");
+        let world = cfg.cluster.machines;
+        let opts = ElasticOpts {
+            net: cfg.net(),
+            seed: cfg.exec.seed,
+            durable_root: store_dir.as_ref().map(|d| d.join("membership")),
+            ..ElasticOpts::default()
+        };
+        let mut cluster = ElasticCluster::new(&emb, world, opts)?;
+        println!(
+            "\nmembership: world {} | schedule {} | durable shards {}",
+            world,
+            sched,
+            if store_dir.is_some() { "on" } else { "off" },
+        );
+        let mpool = ServePool::spawn(
+            cluster.cell(),
+            Arc::clone(&backend),
+            PoolOpts { workers, queue_capacity: requests, max_batch, ..PoolOpts::default() },
+        );
+        let mut mrng = Rng::new(cfg.exec.seed ^ 0x3E3B);
+        let mreqs = synthetic_workload(&mut mrng, emb.rows, requests.min(128), false);
+        let (base_resp, _) = serve_workload_pooled(&mpool, &mreqs)?;
+        let base_digests: Vec<u64> = base_resp.iter().map(response_digest).collect();
+        for ev in events {
+            let stats = cluster.apply(ev)?;
+            println!(
+                "  {} → epoch {} | world {} | moved {} rows ({} on the wire, {} msgs) | recovered {} rows{} | sim {}",
+                stats.event,
+                stats.epoch,
+                stats.world_after,
+                stats.rows_moved,
+                human_bytes(stats.bytes_on_wire),
+                stats.msgs,
+                stats.rows_recovered,
+                if stats.recovered_from_durable { " [durable]" } else { "" },
+                human_secs(stats.sim_secs),
+            );
+            let (resp, _) = serve_workload_pooled(&mpool, &mreqs)?;
+            let digests: Vec<u64> = resp.iter().map(response_digest).collect();
+            anyhow::ensure!(
+                digests == base_digests,
+                "serving responses changed across membership epoch {}",
+                cluster.epoch(),
+            );
+        }
+        cluster.verify_against(&emb)?;
+        mpool.shutdown();
+        println!(
+            "  responses bit-identical across {} membership epochs; table matches the reference",
+            cluster.history().len(),
+        );
+    }
     Ok(())
 }
 
@@ -972,6 +1056,48 @@ mod tests {
         crate::storage::set_page_rows(usize::MAX);
         crate::storage::set_storage_dir("");
         assert!(err.is_err(), "--resume without a dir must fail");
+    }
+
+    #[test]
+    fn serve_membership_smoke() {
+        // elastic phase: refresh a 256-node table, then walk a
+        // leave/join/kill schedule; the command hard-asserts responses
+        // stay bit-identical across every membership epoch
+        let args: Vec<String> = [
+            "serve",
+            "--requests",
+            "30",
+            "--workers",
+            "2",
+            "--refresh",
+            "0",
+            "--membership-schedule",
+            "leave:2,join:2,kill:1",
+            "--set",
+            "cluster.machines=3",
+            "--set",
+            "dataset.scale=0.00390625",
+            "--set",
+            "model.layers=2",
+            "--set",
+            "model.fanout=5",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let r = crate::storage::with_storage_dir("", || {
+            crate::storage::with_mem_budget(0, || dispatch(&args))
+        });
+        crate::storage::set_mem_budget(u64::MAX);
+        crate::storage::set_page_rows(usize::MAX);
+        crate::storage::set_storage_dir("");
+        r.unwrap();
+        // a malformed schedule fails before the pipeline runs
+        let bad: Vec<String> = ["serve", "--membership-schedule", "explode:1"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(dispatch(&bad).is_err(), "bad schedule must be rejected up front");
     }
 
     #[test]

@@ -1,0 +1,1005 @@
+//! Elastic cluster membership (DESIGN.md §Membership).
+//!
+//! The paper's deployment assumes a fixed 16-machine world; ROADMAP open
+//! item 1 asks for the production-shaped counterpart: ranks that join,
+//! leave, or die under load without changing a single served bit. The
+//! design is Sui-style epoch-fenced reconfiguration:
+//!
+//! - [`Membership`] is the driver-side state machine. Each rank is
+//!   `Joining`, `Active`, `Draining`, or `Dead`; every transition
+//!   consumes one **membership epoch**. Transitions are two-phase:
+//!   `begin` bumps the epoch and marks the subject, `commit` finalizes,
+//!   `abort` reverts the subject but *never rewinds the epoch* — an
+//!   epoch, once consumed, fences out every message stamped with it.
+//! - [`fence`] is the rejection point: migration traffic carries its
+//!   epoch in an in-band header and a receiver drops a mismatched epoch
+//!   deterministically ([`StaleEpoch`]) before touching the payload.
+//! - [`ElasticCluster`] owns the serving table across transitions. Re-
+//!   sharding is **incremental**: `PartitionPlan::band_diff` yields only
+//!   the row bands whose owner changes, and only those rows ride the
+//!   PR 4 chunked streams. The new table is published through the
+//!   double-buffered [`TableCell`] (`serve/refresh.rs`), so in-flight
+//!   reads keep their epoch snapshot — the same swap discipline as a
+//!   daily refresh.
+//! - A **killed** rank's band is rebuilt without recompute: each rank
+//!   checkpoints its band in a per-shard [`DurableStore`]
+//!   (`storage/durable`), and the kill transition replays that store's
+//!   WAL + checkpoint (`DurableStore::open`). Recovered rows are
+//!   bit-verified against the last published epoch before reuse; a
+//!   stale or missing store falls back to re-shipping the rows from the
+//!   published snapshot held by a surviving peer. A later `join` of the
+//!   same rank reuses its grave the same way (rejoin-from-durable).
+//!
+//! **Why values never depend on the schedule:** embeddings are computed
+//! once and only *placed*; every transition moves, recovers, or keeps
+//! exact row copies (verified by bit comparison on the durable path),
+//! and the serving swap is atomic. Simulated time, byte counts, and
+//! ownership change with the schedule — the served bits cannot. The
+//! crash-point sweep in `tests/membership.rs` enforces this at every
+//! armed transport boundary (`net::fault`) of every transition.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::cluster::{Cluster, NetConfig, Payload, Tag};
+use crate::partition::PartitionPlan;
+use crate::serve::{ShardedTable, TableCell};
+use crate::storage::durable::{shard_dir, DurableOptions, DurableStore};
+use crate::tensor::Matrix;
+use crate::Result;
+
+/// Tag phase of epoch-fence headers on the migration wire.
+const FENCE_PHASE: u32 = 0x004D_454D; // "MEM"
+/// Tag phase of migrated band data.
+const DATA_PHASE: u32 = 0x004D_4544; // "MED"
+
+/// Lifecycle of one rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RankState {
+    /// Mid-join: receiving its band; serves nothing yet.
+    Joining,
+    /// Full member: owns a band, serves traffic.
+    Active,
+    /// Mid-leave: shipping its band out; still alive.
+    Draining,
+    /// Not a member (never joined, left, or killed).
+    Dead,
+}
+
+/// One reconfiguration request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MembershipEvent {
+    /// Rank enters (or re-enters) the cluster.
+    Join { rank: usize },
+    /// Rank leaves gracefully: it ships its own band before going dead.
+    Leave { rank: usize },
+    /// Rank dies without warning: its band is rebuilt from its durable
+    /// store (or re-shipped from the published snapshot by a peer).
+    Kill { rank: usize },
+}
+
+impl MembershipEvent {
+    /// The rank the event is about.
+    pub fn rank(&self) -> usize {
+        match *self {
+            MembershipEvent::Join { rank }
+            | MembershipEvent::Leave { rank }
+            | MembershipEvent::Kill { rank } => rank,
+        }
+    }
+
+    /// Schedule-token spelling of the action.
+    pub fn action(&self) -> &'static str {
+        match self {
+            MembershipEvent::Join { .. } => "join",
+            MembershipEvent::Leave { .. } => "leave",
+            MembershipEvent::Kill { .. } => "kill",
+        }
+    }
+}
+
+impl std::fmt::Display for MembershipEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}", self.action(), self.rank())
+    }
+}
+
+/// Parse a `"join:4,kill:2,leave:0"` schedule (the CLI's
+/// `--membership-schedule` format; whitespace around tokens is ignored).
+pub fn parse_schedule(s: &str) -> std::result::Result<Vec<MembershipEvent>, String> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|tok| {
+            let (kind, rank) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("bad membership event '{}' (want action:rank)", tok))?;
+            let rank: usize = rank
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad rank in membership event '{}'", tok))?;
+            match kind.trim() {
+                "join" => Ok(MembershipEvent::Join { rank }),
+                "leave" => Ok(MembershipEvent::Leave { rank }),
+                "kill" => Ok(MembershipEvent::Kill { rank }),
+                other => Err(format!("unknown membership action '{}'", other)),
+            }
+        })
+        .collect()
+}
+
+/// A message carried an epoch that is not the fence's — rejected before
+/// its payload is looked at, deterministically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StaleEpoch {
+    pub got: u64,
+    pub want: u64,
+}
+
+impl std::fmt::Display for StaleEpoch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "stale membership epoch {} (fence is at {})", self.got, self.want)
+    }
+}
+
+impl std::error::Error for StaleEpoch {}
+
+/// The fence check: traffic stamped `got` passes only a fence at exactly
+/// the same epoch. Aborted transitions keep their epoch consumed, so
+/// their traffic can never pass a later fence.
+pub fn fence(got: u64, want: u64) -> std::result::Result<(), StaleEpoch> {
+    if got == want {
+        Ok(())
+    } else {
+        Err(StaleEpoch { got, want })
+    }
+}
+
+/// Driver-side membership state machine: per-rank lifecycle plus the
+/// monotone epoch counter every transition consumes.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    epoch: u64,
+    states: Vec<RankState>,
+    min_active: usize,
+    /// In-flight transition: the event and the subject's prior state
+    /// (restored by `abort`).
+    pending: Option<(MembershipEvent, RankState)>,
+}
+
+impl Membership {
+    /// A fixed world of `world` active ranks at epoch 0. `min_active` is
+    /// the floor no leave/kill may shrink the cluster below.
+    pub fn new(world: usize, min_active: usize) -> Membership {
+        assert!(world >= 1, "empty cluster");
+        assert!((1..=world).contains(&min_active), "bad active floor {}", min_active);
+        Membership {
+            epoch: 0,
+            states: vec![RankState::Active; world],
+            min_active,
+            pending: None,
+        }
+    }
+
+    /// Current membership epoch (bumped by every `begin`, kept by
+    /// `abort`).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// State of `rank` (`Dead` for ranks never seen).
+    pub fn state(&self, rank: usize) -> RankState {
+        self.states.get(rank).copied().unwrap_or(RankState::Dead)
+    }
+
+    /// Ranks currently serving (Active), ascending.
+    pub fn active(&self) -> Vec<usize> {
+        self.ranks_in(|s| s == RankState::Active)
+    }
+
+    /// Ranks that own a band *after* the in-flight transition commits:
+    /// Active plus Joining, minus Draining/Dead, ascending.
+    pub fn target(&self) -> Vec<usize> {
+        self.ranks_in(|s| matches!(s, RankState::Active | RankState::Joining))
+    }
+
+    fn ranks_in(&self, pred: impl Fn(RankState) -> bool) -> Vec<usize> {
+        self.states
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| pred(s))
+            .map(|(r, _)| r)
+            .collect()
+    }
+
+    fn n_active(&self) -> usize {
+        self.states.iter().filter(|&&s| s == RankState::Active).count()
+    }
+
+    /// True while a transition is between `begin` and `commit`/`abort`.
+    pub fn in_transition(&self) -> bool {
+        self.pending.is_some()
+    }
+
+    /// Start a transition: validate, consume the next epoch, and mark the
+    /// subject (`Joining`, `Draining`, or `Dead`). Returns the new epoch.
+    pub fn begin(&mut self, ev: MembershipEvent) -> std::result::Result<u64, String> {
+        if let Some((pending, _)) = &self.pending {
+            return Err(format!("transition {} already in flight", pending));
+        }
+        let r = ev.rank();
+        let prior;
+        match ev {
+            MembershipEvent::Join { .. } => {
+                if r >= self.states.len() {
+                    self.states.resize(r + 1, RankState::Dead);
+                }
+                prior = self.states[r];
+                if prior != RankState::Dead {
+                    return Err(format!("rank {} cannot join: already {:?}", r, prior));
+                }
+                self.states[r] = RankState::Joining;
+            }
+            MembershipEvent::Leave { .. } | MembershipEvent::Kill { .. } => {
+                prior = self.state(r);
+                if prior != RankState::Active {
+                    return Err(format!("rank {} cannot {}: not active", r, ev.action()));
+                }
+                if self.n_active() - 1 < self.min_active {
+                    return Err(format!(
+                        "cannot {} rank {}: {} active ranks is the floor",
+                        ev.action(),
+                        r,
+                        self.min_active
+                    ));
+                }
+                self.states[r] = match ev {
+                    MembershipEvent::Leave { .. } => RankState::Draining,
+                    _ => RankState::Dead,
+                };
+            }
+        }
+        self.epoch += 1;
+        self.pending = Some((ev, prior));
+        Ok(self.epoch)
+    }
+
+    /// Finalize the in-flight transition: `Joining` becomes `Active`,
+    /// `Draining` becomes `Dead`, a kill stays `Dead`.
+    pub fn commit(&mut self) {
+        let (ev, _) = self.pending.take().expect("no transition to commit");
+        self.states[ev.rank()] = match ev {
+            MembershipEvent::Join { .. } => RankState::Active,
+            MembershipEvent::Leave { .. } | MembershipEvent::Kill { .. } => RankState::Dead,
+        };
+    }
+
+    /// Cancel the in-flight transition: the subject reverts to its prior
+    /// state but the epoch stays consumed — fences never rewind, so any
+    /// traffic stamped with the aborted epoch is stale forever.
+    pub fn abort(&mut self) {
+        let (ev, prior) = self.pending.take().expect("no transition to abort");
+        self.states[ev.rank()] = prior;
+    }
+}
+
+/// How a transition moves the rows that change owner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MigrationMode {
+    /// Ship only `band_diff` segments; unchanged bands stay put and the
+    /// durable tier substitutes for the wire where it can (default).
+    Incremental,
+    /// Naive baseline: every row of the new layout goes over the wire,
+    /// durable recovery disabled — what `benches/membership_elastic.rs`
+    /// compares against.
+    FullReshard,
+}
+
+/// What one committed transition did (one entry per event in
+/// [`ElasticCluster::history`]).
+#[derive(Clone, Debug)]
+pub struct MigrationStats {
+    pub event: MembershipEvent,
+    /// Membership epoch the transition was fenced at.
+    pub epoch: u64,
+    /// Serving epoch `TableCell::handoff` published the new table at.
+    pub serving_epoch: u64,
+    /// Band-owning ranks after the commit.
+    pub world_after: usize,
+    /// Rows shipped over the simulated wire.
+    pub rows_moved: usize,
+    /// Rows rebuilt from a per-shard durable store (never on the wire).
+    pub rows_recovered: usize,
+    /// Wire bytes of the migration (fence headers + chunked bands).
+    pub bytes_on_wire: u64,
+    /// Wire messages of the migration.
+    pub msgs: u64,
+    /// Simulated seconds: migration makespan plus durable replay I/O.
+    pub sim_secs: f64,
+    /// True when the durable path supplied at least one row.
+    pub recovered_from_durable: bool,
+}
+
+/// Knobs for an [`ElasticCluster`].
+#[derive(Clone, Debug)]
+pub struct ElasticOpts {
+    /// Link model for migration traffic.
+    pub net: NetConfig,
+    /// Cores per simulated machine.
+    pub cores: f64,
+    /// Seed stamped into per-shard durable stores.
+    pub seed: u64,
+    /// Floor the membership machine refuses to shrink below.
+    pub min_active: usize,
+    /// Root directory for per-shard durable stores (`shard_dir`); `None`
+    /// disables the durable recovery path (kills rebuild from peers).
+    pub durable_root: Option<PathBuf>,
+}
+
+impl Default for ElasticOpts {
+    fn default() -> Self {
+        ElasticOpts {
+            // the paper's testbed link: 25 Gbps, 100 µs
+            net: NetConfig { bandwidth_gbps: 25.0, latency_secs: 100e-6 },
+            cores: 64.0,
+            seed: 0,
+            min_active: 1,
+            durable_root: None,
+        }
+    }
+}
+
+/// A rank's band as recovered from its per-shard durable store.
+struct LoadedShard {
+    lo: usize,
+    hi: usize,
+    table: Matrix,
+    sim_secs: f64,
+}
+
+impl LoadedShard {
+    fn covers(&self, lo: usize, hi: usize) -> bool {
+        self.lo <= lo && hi <= self.hi
+    }
+}
+
+/// One row band changing hands over the wire.
+struct WireMove {
+    lo: usize,
+    hi: usize,
+    src: usize,
+    dst: usize,
+    data: Matrix,
+}
+
+/// The serving table under elastic membership: owns the band layout, the
+/// per-rank primary copies, the per-shard durable stores, and the
+/// [`TableCell`] swap point. [`ElasticCluster::apply`] runs one
+/// epoch-fenced transition end to end.
+pub struct ElasticCluster {
+    membership: Membership,
+    /// Current layout: one row band per owning rank (`p = |owners|`,
+    /// `m = 1` — the serving shape).
+    plan: PartitionPlan,
+    /// Part index → rank id owning that band.
+    owners: Vec<usize>,
+    /// Rank id → its resident band (primary copy); `None` for non-members.
+    shards: Vec<Option<Matrix>>,
+    cell: Arc<TableCell>,
+    opts: ElasticOpts,
+    n_nodes: usize,
+    dim: usize,
+    history: Vec<MigrationStats>,
+}
+
+impl ElasticCluster {
+    /// A fixed world of `world` active ranks serving `embeddings`, all at
+    /// membership epoch 0. With a `durable_root`, every rank checkpoints
+    /// its band immediately (the recovery source for later kills).
+    pub fn new(embeddings: &Matrix, world: usize, opts: ElasticOpts) -> Result<ElasticCluster> {
+        anyhow::ensure!(world >= 1, "empty cluster");
+        anyhow::ensure!(
+            world <= embeddings.rows,
+            "{} ranks for {} table rows",
+            world,
+            embeddings.rows
+        );
+        let plan = PartitionPlan::new(embeddings.rows, embeddings.cols.max(1), world, 1);
+        let shards: Vec<Option<Matrix>> = (0..world)
+            .map(|p_idx| {
+                let (lo, hi) = plan.node_range(p_idx);
+                Some(embeddings.slice_rows(lo, hi))
+            })
+            .collect();
+        let cell = Arc::new(TableCell::new(ShardedTable::from_full(embeddings, world, 0)));
+        let ec = ElasticCluster {
+            membership: Membership::new(world, opts.min_active),
+            plan,
+            owners: (0..world).collect(),
+            shards,
+            cell,
+            opts,
+            n_nodes: embeddings.rows,
+            dim: embeddings.cols,
+            history: Vec::new(),
+        };
+        for (p_idx, &rank) in ec.owners.iter().enumerate() {
+            let (lo, hi) = ec.plan.node_range(p_idx);
+            let band = ec.shards[rank].as_ref().expect("initial owner has a band");
+            ec.persist_shard(rank, lo, hi, band)?;
+        }
+        Ok(ec)
+    }
+
+    /// Current membership epoch.
+    pub fn epoch(&self) -> u64 {
+        self.membership.epoch()
+    }
+
+    /// Serving epoch of the published table.
+    pub fn serving_epoch(&self) -> u64 {
+        self.cell.epoch()
+    }
+
+    /// The swap point, for wiring a `ServePool` over this cluster.
+    pub fn cell(&self) -> Arc<TableCell> {
+        Arc::clone(&self.cell)
+    }
+
+    /// Snapshot of the published serving table.
+    pub fn table(&self) -> Arc<ShardedTable> {
+        self.cell.load()
+    }
+
+    /// The membership state machine (read-only).
+    pub fn membership(&self) -> &Membership {
+        &self.membership
+    }
+
+    /// Current band layout.
+    pub fn plan(&self) -> &PartitionPlan {
+        &self.plan
+    }
+
+    /// Band-owning ranks, in part order.
+    pub fn owners(&self) -> &[usize] {
+        &self.owners
+    }
+
+    /// Committed transitions, oldest first.
+    pub fn history(&self) -> &[MigrationStats] {
+        &self.history
+    }
+
+    /// Hard bit-identity check of the published table against the
+    /// fixed-world reference (the repo's determinism contract extended to
+    /// membership schedules).
+    pub fn verify_against(&self, reference: &Matrix) -> Result<()> {
+        let full = self.cell.load().to_full();
+        anyhow::ensure!(
+            full.rows == reference.rows && full.cols == reference.cols,
+            "served table is {}x{}, reference {}x{}",
+            full.rows,
+            full.cols,
+            reference.rows,
+            reference.cols
+        );
+        anyhow::ensure!(
+            bits_equal(&full, reference),
+            "served table diverged from the fixed-world reference"
+        );
+        Ok(())
+    }
+
+    /// Run one transition end to end: `begin` (epoch fence), migrate the
+    /// changed bands, publish through the double-buffered cell, `commit`.
+    /// On any migration failure — including an injected rank kill — the
+    /// transition aborts: the old table keeps serving, the subject
+    /// reverts, and the consumed epoch fences out the aborted traffic.
+    pub fn apply(&mut self, ev: MembershipEvent) -> Result<MigrationStats> {
+        self.apply_mode(ev, MigrationMode::Incremental)
+    }
+
+    /// [`ElasticCluster::apply`] with an explicit [`MigrationMode`] (the
+    /// bench uses `FullReshard` as its naive baseline).
+    pub fn apply_mode(&mut self, ev: MembershipEvent, mode: MigrationMode) -> Result<MigrationStats> {
+        let epoch = self.membership.begin(ev).map_err(anyhow::Error::msg)?;
+        match self.migrate(ev, epoch, mode) {
+            Ok(stats) => {
+                self.membership.commit();
+                self.history.push(stats.clone());
+                Ok(stats)
+            }
+            Err(e) => {
+                self.membership.abort();
+                Err(e)
+            }
+        }
+    }
+
+    /// The migration itself: plan the new layout, classify every band
+    /// segment (keep / recover-from-durable / ship), run the epoch-fenced
+    /// transfer on the simulated cluster, assemble, hand off, persist.
+    fn migrate(
+        &mut self,
+        ev: MembershipEvent,
+        epoch: u64,
+        mode: MigrationMode,
+    ) -> Result<MigrationStats> {
+        let new_owners = self.membership.target();
+        anyhow::ensure!(!new_owners.is_empty(), "no live ranks left");
+        anyhow::ensure!(
+            new_owners.len() <= self.n_nodes,
+            "{} live ranks for {} table rows",
+            new_owners.len(),
+            self.n_nodes
+        );
+        let new_plan = self
+            .plan
+            .refactor_world(new_owners.len(), 1)
+            .map_err(anyhow::Error::msg)?;
+        let snapshot = self.cell.load();
+        let dead = match ev {
+            MembershipEvent::Kill { rank } => Some(rank),
+            _ => None,
+        };
+        // The subject's durable band, if one is on disk: a killed rank's
+        // grave, or a rejoiner's band from before it left.
+        let subject_store = match mode {
+            MigrationMode::Incremental => self.load_shard(ev.rank()),
+            MigrationMode::FullReshard => None,
+        };
+
+        // Classify segments.
+        let mut keeps: Vec<(usize, usize, usize)> = Vec::new(); // (lo, hi, rank)
+        let mut recovered: Vec<(usize, Matrix)> = Vec::new(); // (lo, rows)
+        let mut moves: Vec<WireMove> = Vec::new();
+        let mut rows_recovered = 0usize;
+        let mut snapshot_full: Option<Matrix> = None;
+        for seg in self.plan.band_segments(&new_plan) {
+            let from = self.owners[seg.old_part];
+            let to = new_owners[seg.new_part];
+            if from == to && mode == MigrationMode::Incremental {
+                keeps.push((seg.lo, seg.hi, to));
+                continue;
+            }
+            // Durable substitution: a killed primary's rows, or rows a
+            // rejoiner already holds, come from the store — but only
+            // after a bit-exact check against the last published epoch,
+            // so a stale store can never smuggle in old values.
+            let durable_applies = match (&subject_store, ev) {
+                (Some(st), MembershipEvent::Kill { rank }) => {
+                    from == rank && st.covers(seg.lo, seg.hi)
+                }
+                (Some(st), MembershipEvent::Join { rank }) => {
+                    to == rank && st.covers(seg.lo, seg.hi)
+                }
+                _ => false,
+            };
+            if durable_applies {
+                let st = subject_store.as_ref().unwrap();
+                let cand = st.table.slice_rows(seg.lo - st.lo, seg.hi - st.lo);
+                let truth = snapshot_full.get_or_insert_with(|| snapshot.to_full());
+                if bits_equal(&cand, &truth.slice_rows(seg.lo, seg.hi)) {
+                    rows_recovered += cand.rows;
+                    recovered.push((seg.lo, cand));
+                    continue;
+                }
+                // stale store — fall through to the wire
+            }
+            // Wire path. A live source ships its own band; a dead
+            // source's rows are re-shipped from the published snapshot by
+            // a surviving peer (the serving tier still holds the full
+            // last epoch).
+            let (src, data) = if Some(from) == dead {
+                let peer = new_owners.iter().copied().find(|&r| r != to).unwrap_or(to);
+                let truth = snapshot_full.get_or_insert_with(|| snapshot.to_full());
+                (peer, truth.slice_rows(seg.lo, seg.hi))
+            } else {
+                let band = self.shards[from].as_ref().expect("live owner without a band");
+                let (band_lo, _) = self.plan.node_range(seg.old_part);
+                (from, band.slice_rows(seg.lo - band_lo, seg.hi - band_lo))
+            };
+            moves.push(WireMove { lo: seg.lo, hi: seg.hi, src, dst: to, data });
+        }
+
+        // The epoch-fenced transfer. Every move is announced with a
+        // fence header carrying the membership epoch; receivers reject a
+        // stale fence deterministically before touching the band, which
+        // then arrives as a PR 4 chunked stream.
+        let rows_moved: usize = moves.iter().map(|m| m.hi - m.lo).sum();
+        let span = self
+            .owners
+            .iter()
+            .chain(new_owners.iter())
+            .copied()
+            .max()
+            .unwrap_or(0)
+            + 1;
+        let moves = Arc::new(moves);
+        let mv = Arc::clone(&moves);
+        let cluster = Cluster::new(span, self.opts.net)
+            .with_cores(self.opts.cores)
+            .at_epoch(epoch);
+        let (outs, report) = cluster.run(move |ctx| -> Result<Vec<(usize, Matrix)>> {
+            for (i, m) in mv.iter().enumerate() {
+                if m.src == ctx.rank {
+                    let hdr = vec![epoch as u32, (epoch >> 32) as u32, i as u32];
+                    ctx.send(m.dst, Tag::of(FENCE_PHASE, i as u32), Payload::U32(hdr));
+                    ctx.send_chunked(m.dst, Tag::of(DATA_PHASE, i as u32), m.data.clone());
+                }
+            }
+            let mut got = Vec::new();
+            for (i, m) in mv.iter().enumerate() {
+                if m.dst == ctx.rank {
+                    let hdr = ctx.recv(m.src, Tag::of(FENCE_PHASE, i as u32)).into_u32();
+                    anyhow::ensure!(hdr.len() == 3, "malformed fence header");
+                    fence(hdr[0] as u64 | ((hdr[1] as u64) << 32), epoch)?;
+                    anyhow::ensure!(hdr[2] as usize == i, "fence header move index mismatch");
+                    got.push((i, ctx.recv_matrix(m.src, Tag::of(DATA_PHASE, i as u32))));
+                }
+            }
+            Ok(got)
+        })?;
+        let mut received: Vec<(usize, Matrix)> = Vec::new();
+        for out in outs {
+            received.extend(out?);
+        }
+
+        // Assemble the new bands from keeps + recoveries + arrivals.
+        let mut bands: Vec<Matrix> = (0..new_plan.p)
+            .map(|pi| Matrix::zeros(new_plan.rows_of(pi), self.dim))
+            .collect();
+        for &(lo, hi, rank) in &keeps {
+            let old_pi = self.plan.node_owner(lo as u32);
+            let (old_lo, _) = self.plan.node_range(old_pi);
+            let band = self.shards[rank].as_ref().expect("keeper without a band");
+            place(&new_plan, &mut bands, lo, &band.slice_rows(lo - old_lo, hi - old_lo));
+        }
+        for (lo, data) in &recovered {
+            place(&new_plan, &mut bands, *lo, data);
+        }
+        for (i, data) in &received {
+            let m = &moves[*i];
+            anyhow::ensure!(
+                data.rows == m.hi - m.lo && data.cols == self.dim,
+                "move {} arrived as {}x{}, want {}x{}",
+                i,
+                data.rows,
+                data.cols,
+                m.hi - m.lo,
+                self.dim
+            );
+            place(&new_plan, &mut bands, m.lo, data);
+        }
+
+        // Hand off through the double-buffered serving machinery: the old
+        // epoch keeps serving in-flight reads, new loads see the new one.
+        let table = ShardedTable::from_bands(new_plan.clone(), bands.clone(), 0)?;
+        let serving_epoch = self.cell.handoff(table)?;
+
+        // Persist changed bands (store shape is pinned to its band, so a
+        // changed band re-creates its store). A departed rank's store is
+        // deliberately left behind — it is the grave a kill recovers from
+        // and a later rejoin reuses.
+        let mut changed: Vec<(usize, usize, usize, usize)> = Vec::new(); // (rank, pi, lo, hi)
+        for (pi, &r) in new_owners.iter().enumerate() {
+            let (lo, hi) = new_plan.node_range(pi);
+            let unchanged = self
+                .owners
+                .iter()
+                .position(|&o| o == r)
+                .map(|old_pi| self.plan.node_range(old_pi) == (lo, hi))
+                .unwrap_or(false);
+            if !unchanged {
+                changed.push((r, pi, lo, hi));
+            }
+        }
+        for &(r, pi, lo, hi) in &changed {
+            self.persist_shard(r, lo, hi, &bands[pi])?;
+        }
+
+        // Install the new world.
+        let max_rank = new_owners.iter().copied().max().unwrap_or(0);
+        if self.shards.len() <= max_rank {
+            self.shards.resize(max_rank + 1, None);
+        }
+        for &r in &self.owners {
+            if !new_owners.contains(&r) {
+                self.shards[r] = None;
+            }
+        }
+        for (pi, band) in bands.into_iter().enumerate() {
+            self.shards[new_owners[pi]] = Some(band);
+        }
+        self.plan = new_plan;
+        self.owners = new_owners;
+
+        let recover_sim = if rows_recovered > 0 {
+            subject_store.as_ref().map(|s| s.sim_secs).unwrap_or(0.0)
+        } else {
+            0.0
+        };
+        Ok(MigrationStats {
+            event: ev,
+            epoch,
+            serving_epoch,
+            world_after: self.owners.len(),
+            rows_moved,
+            rows_recovered,
+            bytes_on_wire: report.total_bytes(),
+            msgs: report.total_msgs(),
+            sim_secs: report.makespan() + recover_sim,
+            recovered_from_durable: rows_recovered > 0,
+        })
+    }
+
+    /// Checkpoint `band` as rank `rank`'s per-shard durable store (no-op
+    /// without a `durable_root`). The store's WAL pins the band shape, so
+    /// a changed band is a fresh `create`; the `band.meta` sidecar (which
+    /// `create`'s cleanup leaves alone) records the global row range.
+    fn persist_shard(&self, rank: usize, lo: usize, hi: usize, band: &Matrix) -> Result<()> {
+        let root = match &self.opts.durable_root {
+            Some(r) => r,
+            None => return Ok(()),
+        };
+        let dir = shard_dir(root, rank);
+        let store = DurableStore::create(&dir, self.opts.seed, band, DurableOptions::default())?;
+        drop(store);
+        write_band_meta(&dir, lo, hi)
+    }
+
+    /// Replay rank `rank`'s per-shard store, if one is on disk and its
+    /// geometry is coherent. `None` means "use the wire".
+    fn load_shard(&self, rank: usize) -> Option<LoadedShard> {
+        let root = self.opts.durable_root.as_ref()?;
+        let dir = shard_dir(root, rank);
+        if !DurableStore::exists(&dir) {
+            return None;
+        }
+        let (lo, hi) = read_band_meta(&dir)?;
+        let (store, rec) = DurableStore::open(&dir, DurableOptions::default()).ok()?;
+        drop(store);
+        if rec.table.rows != hi - lo || rec.table.cols != self.dim {
+            return None;
+        }
+        Some(LoadedShard { lo, hi, table: rec.table, sim_secs: rec.sim_secs })
+    }
+}
+
+/// Write `data` (rows `[lo, lo + data.rows)` of the full table) into the
+/// new layout's band that owns it. Segments never straddle a band cut.
+fn place(plan: &PartitionPlan, bands: &mut [Matrix], lo: usize, data: &Matrix) {
+    let pi = plan.node_owner(lo as u32);
+    let (band_lo, band_hi) = plan.node_range(pi);
+    assert!(
+        lo >= band_lo && lo + data.rows <= band_hi,
+        "segment [{}, {}) escapes band {} [{}, {})",
+        lo,
+        lo + data.rows,
+        pi,
+        band_lo,
+        band_hi
+    );
+    bands[pi].set_rows(lo - band_lo, data);
+}
+
+/// Exact-bit matrix equality (stricter than `PartialEq`: `-0.0 != 0.0`,
+/// NaN payloads compare).
+fn bits_equal(a: &Matrix, b: &Matrix) -> bool {
+    a.rows == b.rows
+        && a.cols == b.cols
+        && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn band_meta_path(dir: &Path) -> PathBuf {
+    dir.join("band.meta")
+}
+
+fn write_band_meta(dir: &Path, lo: usize, hi: usize) -> Result<()> {
+    std::fs::write(band_meta_path(dir), format!("{} {}\n", lo, hi))?;
+    Ok(())
+}
+
+fn read_band_meta(dir: &Path) -> Option<(usize, usize)> {
+    let s = std::fs::read_to_string(band_meta_path(dir)).ok()?;
+    let mut it = s.split_whitespace();
+    let lo: usize = it.next()?.parse().ok()?;
+    let hi: usize = it.next()?.parse().ok()?;
+    (lo <= hi).then_some((lo, hi))
+}
+
+/// `HashMap<rank, part>` views come up in callers; kept here so the CLI
+/// and tests agree on the mapping.
+pub fn part_of_rank(owners: &[usize]) -> HashMap<usize, usize> {
+    owners.iter().enumerate().map(|(pi, &r)| (r, pi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn net() -> NetConfig {
+        NetConfig { bandwidth_gbps: 25.0, latency_secs: 100e-6 }
+    }
+
+    fn opts() -> ElasticOpts {
+        ElasticOpts { net: net(), cores: 64.0, seed: 7, min_active: 1, durable_root: None }
+    }
+
+    fn reference(n: usize, d: usize) -> Matrix {
+        let mut rng = Rng::new(11);
+        Matrix::random(n, d, 1.0, &mut rng)
+    }
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("deal-member-{}-{}", std::process::id(), tag));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn state_machine_fences_epochs() {
+        let mut m = Membership::new(3, 2);
+        assert_eq!(m.epoch(), 0);
+        assert_eq!(m.active(), vec![0, 1, 2]);
+        // begin consumes an epoch and marks the subject
+        let e = m.begin(MembershipEvent::Leave { rank: 1 }).unwrap();
+        assert_eq!(e, 1);
+        assert_eq!(m.state(1), RankState::Draining);
+        assert_eq!(m.target(), vec![0, 2]);
+        assert!(m.in_transition());
+        // a second begin is rejected while one is in flight
+        assert!(m.begin(MembershipEvent::Join { rank: 5 }).is_err());
+        m.commit();
+        assert_eq!(m.state(1), RankState::Dead);
+        // the floor: 2 active ranks, min_active 2 → no more departures
+        assert!(m.begin(MembershipEvent::Leave { rank: 0 }).is_err());
+        assert!(m.begin(MembershipEvent::Kill { rank: 2 }).is_err());
+        // abort reverts the subject but keeps the epoch consumed
+        let e = m.begin(MembershipEvent::Join { rank: 1 }).unwrap();
+        assert_eq!(e, 2);
+        m.abort();
+        assert_eq!(m.state(1), RankState::Dead);
+        assert_eq!(m.epoch(), 2, "aborted epochs stay consumed");
+        // the fence rejects exactly the mismatches
+        assert!(fence(2, 2).is_ok());
+        assert_eq!(fence(1, 2), Err(StaleEpoch { got: 1, want: 2 }));
+        // a join may target a brand-new rank id
+        let e = m.begin(MembershipEvent::Join { rank: 7 }).unwrap();
+        assert_eq!(e, 3);
+        m.commit();
+        assert_eq!(m.active(), vec![0, 2, 7]);
+        // an active rank cannot join again
+        assert!(m.begin(MembershipEvent::Join { rank: 7 }).is_err());
+        // a dead rank cannot leave
+        assert!(m.begin(MembershipEvent::Leave { rank: 1 }).is_err());
+    }
+
+    #[test]
+    fn schedule_parsing() {
+        let evs = parse_schedule("join:4, kill:2 ,leave:0").unwrap();
+        assert_eq!(
+            evs,
+            vec![
+                MembershipEvent::Join { rank: 4 },
+                MembershipEvent::Kill { rank: 2 },
+                MembershipEvent::Leave { rank: 0 },
+            ]
+        );
+        assert_eq!(format!("{}", evs[1]), "kill:2");
+        assert!(parse_schedule("grow:1").is_err());
+        assert!(parse_schedule("join").is_err());
+        assert!(parse_schedule("join:x").is_err());
+        assert_eq!(parse_schedule("").unwrap(), vec![]);
+    }
+
+    #[test]
+    fn leave_join_grow_keep_bits() {
+        let full = reference(64, 6);
+        let mut ec = ElasticCluster::new(&full, 4, opts()).unwrap();
+        ec.verify_against(&full).unwrap();
+        assert_eq!(ec.serving_epoch(), 0);
+
+        // graceful departure: rank 1 ships its band out
+        let s = ec.apply(MembershipEvent::Leave { rank: 1 }).unwrap();
+        assert_eq!(s.epoch, 1);
+        assert_eq!(s.world_after, 3);
+        assert_eq!(ec.owners(), &[0, 2, 3]);
+        assert!(s.rows_moved > 0, "a departure must move rows");
+        assert!(s.bytes_on_wire > 0);
+        ec.verify_against(&full).unwrap();
+        assert_eq!(ec.serving_epoch(), 1, "handoff published one epoch");
+
+        // rejoin (no durable root → rows come back over the wire)
+        let s = ec.apply(MembershipEvent::Join { rank: 1 }).unwrap();
+        assert_eq!(s.epoch, 2);
+        assert_eq!(ec.owners(), &[0, 1, 2, 3]);
+        assert_eq!(s.rows_recovered, 0);
+        ec.verify_against(&full).unwrap();
+
+        // grow beyond the original world
+        let s = ec.apply(MembershipEvent::Join { rank: 4 }).unwrap();
+        assert_eq!(s.world_after, 5);
+        assert_eq!(ec.owners(), &[0, 1, 2, 3, 4]);
+        ec.verify_against(&full).unwrap();
+        assert_eq!(ec.history().len(), 3);
+    }
+
+    #[test]
+    fn kill_recovers_from_durable_and_rejoin_reuses_grave() {
+        let root = tmp_root("kill");
+        let full = reference(60, 5);
+        let mut o = opts();
+        o.durable_root = Some(root.clone());
+        let mut ec = ElasticCluster::new(&full, 3, o).unwrap();
+
+        // the victim's whole band comes back from its store, not the wire
+        let victim = 2usize;
+        let victim_rows = ec.plan().rows_of(2);
+        let s = ec.apply(MembershipEvent::Kill { rank: victim }).unwrap();
+        assert!(s.recovered_from_durable);
+        assert_eq!(s.rows_recovered, victim_rows, "the grave supplies the whole lost band");
+        assert!(s.sim_secs > 0.0);
+        ec.verify_against(&full).unwrap();
+
+        // rejoin-from-durable: the rank's grave still covers part of its
+        // new band, so some rows never touch the wire on the way back
+        let s = ec.apply(MembershipEvent::Join { rank: victim }).unwrap();
+        assert!(s.recovered_from_durable, "rejoin must reuse the grave");
+        assert!(s.rows_recovered > 0);
+        ec.verify_against(&full).unwrap();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn kill_without_durable_rebuilds_from_peers() {
+        let full = reference(48, 4);
+        let mut ec = ElasticCluster::new(&full, 3, opts()).unwrap();
+        let victim_rows = ec.plan().rows_of(1);
+        let s = ec.apply(MembershipEvent::Kill { rank: 1 }).unwrap();
+        assert!(!s.recovered_from_durable);
+        assert_eq!(s.rows_recovered, 0);
+        assert!(s.rows_moved >= victim_rows, "the lost band must ride the wire");
+        ec.verify_against(&full).unwrap();
+    }
+
+    #[test]
+    fn incremental_moves_strictly_less_than_full_reshard() {
+        let full = reference(96, 8);
+        let mut inc = ElasticCluster::new(&full, 4, opts()).unwrap();
+        let mut naive = ElasticCluster::new(&full, 4, opts()).unwrap();
+        let ev = MembershipEvent::Leave { rank: 3 };
+        let si = inc.apply_mode(ev, MigrationMode::Incremental).unwrap();
+        let sf = naive.apply_mode(ev, MigrationMode::FullReshard).unwrap();
+        assert!(si.rows_moved < sf.rows_moved, "inc={} full={}", si.rows_moved, sf.rows_moved);
+        assert!(
+            si.bytes_on_wire < sf.bytes_on_wire,
+            "inc={} full={}",
+            si.bytes_on_wire,
+            sf.bytes_on_wire
+        );
+        inc.verify_against(&full).unwrap();
+        naive.verify_against(&full).unwrap();
+        assert_eq!(sf.rows_moved, full.rows, "naive baseline re-ships every row");
+    }
+
+    #[test]
+    fn floor_and_world_invariants_hold() {
+        let full = reference(20, 3);
+        let mut o = opts();
+        o.min_active = 2;
+        let mut ec = ElasticCluster::new(&full, 2, o).unwrap();
+        // shrinking below the floor is refused before any epoch is spent
+        assert!(ec.apply(MembershipEvent::Leave { rank: 0 }).is_err());
+        assert_eq!(ec.epoch(), 0, "a refused transition consumes no epoch");
+        ec.verify_against(&full).unwrap();
+        // the part → rank map is coherent
+        let map = part_of_rank(ec.owners());
+        assert_eq!(map.len(), 2);
+        assert_eq!(map[&0], 0);
+    }
+}

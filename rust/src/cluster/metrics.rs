@@ -6,6 +6,49 @@
 use super::memory::MemTracker;
 use crate::util::{human_bytes, human_secs};
 
+/// Structured failure of one simulated machine, surfaced by
+/// `Cluster::run` instead of a join-handle panic: the rank that failed
+/// and the membership epoch the cluster was fenced at
+/// (`Cluster::at_epoch`). Injected transport kills (`net::fault`) carry
+/// their boundary name and ordinal; organic panics carry neither.
+/// Downcast via [`RankFailed::find`].
+#[derive(Clone, Debug)]
+pub struct RankFailed {
+    /// Rank of the machine whose body failed.
+    pub rank: usize,
+    /// Membership epoch the run was fenced at (0 when the caller never
+    /// set one).
+    pub epoch: u64,
+    /// Transport boundary an injected kill fired at, `None` for an
+    /// organic panic.
+    pub point: Option<&'static str>,
+    /// 1-based boundary ordinal for injected kills (0 for organic).
+    pub ordinal: u64,
+}
+
+impl std::fmt::Display for RankFailed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.point {
+            Some(p) => write!(
+                f,
+                "rank {} failed at membership epoch {} (killed at {} boundary #{})",
+                self.rank, self.epoch, p, self.ordinal
+            ),
+            None => write!(f, "rank {} failed at membership epoch {} (panicked)", self.rank, self.epoch),
+        }
+    }
+}
+
+impl std::error::Error for RankFailed {}
+
+impl RankFailed {
+    /// The `RankFailed` in `err`'s chain, if any — how failure tests
+    /// assert on rank and epoch without string matching.
+    pub fn find(err: &anyhow::Error) -> Option<&RankFailed> {
+        err.chain().find_map(|c| c.downcast_ref())
+    }
+}
+
 /// Out-of-core tiered-storage counters (see `crate::storage`): one set per
 /// machine, absorbed from that rank's `PageCache` scopes. Byte counts are
 /// spill-device traffic; `peak_resident_bytes` is the cache's high-water

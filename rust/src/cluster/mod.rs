@@ -46,10 +46,15 @@ use std::sync::{Arc, Barrier, Mutex};
 
 use crate::tensor::Matrix;
 use crate::Result;
+/// Elastic membership: epoch-fenced join/leave/kill state machine,
+/// incremental shard migration, and kill-and-rejoin recovery.
+pub mod membership;
+
 pub use memory::MemTracker;
-pub use metrics::{ClusterReport, MachineMetrics};
+pub use metrics::{ClusterReport, MachineMetrics, RankFailed};
 pub use net::{
-    chunk_rows, set_chunk_rows, with_chunk_rows, LinkTable, Message, NetConfig, Payload, Tag,
+    chunk_rows, set_chunk_rows, with_chunk_rows, LinkTable, Message, NetConfig, Payload, PeerDied,
+    Tag,
 };
 
 /// Per-machine execution context handed to the closure running on each
@@ -117,9 +122,13 @@ impl Ctx {
     }
 
     /// Non-blocking send of `payload` to machine `dst` under `tag`.
+    /// A transport fault boundary (`net::fault`): an armed kill fires
+    /// here; an armed delay adds simulated latency to the transfer.
     pub fn send(&mut self, dst: usize, tag: Tag, payload: Payload) {
+        net::fault::step(self.rank, net::fault::FaultPoint::Send);
         let bytes = payload.nbytes();
-        let ready_at = self.links.schedule(self.rank, dst, self.clock, bytes);
+        let ready_at =
+            self.links.schedule(self.rank, dst, self.clock, bytes) + net::fault::send_delay(self.rank);
         self.metrics.bytes_sent += bytes;
         self.metrics.msgs_sent += 1;
         let msg = Message { src: self.rank, tag: tag.0, ready_at, payload };
@@ -130,7 +139,10 @@ impl Ctx {
 
     /// Blocking receive of the next message from `src` with `tag`.
     /// Advances the simulated clock to the transfer completion time.
+    /// A transport fault boundary (`net::fault`), checked before
+    /// blocking.
     pub fn recv(&mut self, src: usize, tag: Tag) -> Payload {
+        net::fault::step(self.rank, net::fault::FaultPoint::Recv);
         let msg = self.wait_for(src, tag.0);
         let wait = (msg.ready_at - self.clock).max(0.0);
         self.metrics.sim_comm_wait_secs += wait;
@@ -150,6 +162,12 @@ impl Ctx {
         }
         loop {
             let m = self.inbox.recv().expect("cluster channel closed");
+            if m.tag == net::POISON_TAG {
+                // A peer died mid-protocol; the data this rank is blocked
+                // on will never arrive. Abort (collateral, not root cause
+                // — see `Cluster::run`) instead of stalling the cluster.
+                std::panic::resume_unwind(Box::new(PeerDied { src: m.src }));
+            }
             if m.src == src && m.tag == tag {
                 return m;
             }
@@ -267,8 +285,10 @@ impl Ctx {
     }
 
     /// Send a request to machine `dst`'s *service plane* (its feature
-    /// server thread, if one is running — see `spawn_server`).
+    /// server thread, if one is running — see `spawn_server`). A
+    /// transport fault boundary (`net::fault`).
     pub fn send_service(&mut self, dst: usize, tag: Tag, payload: Payload) {
+        net::fault::step(self.rank, net::fault::FaultPoint::ServiceSend);
         let bytes = payload.nbytes();
         let ready_at = self.links.schedule(self.rank, dst, self.clock, bytes);
         self.metrics.bytes_sent += bytes;
@@ -458,6 +478,9 @@ impl ServerCtx {
         }
         loop {
             let msg = self.inbox.recv().expect("service channel closed");
+            if msg.tag == net::POISON_TAG {
+                std::panic::resume_unwind(Box::new(PeerDied { src: msg.src }));
+            }
             if (msg.tag >> 32) as u32 != phase {
                 self.stash.push_back(msg);
                 continue;
@@ -555,19 +578,30 @@ pub struct Cluster {
     /// Cores per simulated machine (compute-time divisor). Default 64 —
     /// the paper's 64-vCPU R5.16xlarge machines.
     pub cores: f64,
+    /// Membership epoch this run is fenced at (stamped into any
+    /// [`RankFailed`] the run surfaces). 0 for fixed-world runs.
+    pub epoch: u64,
 }
 
 impl Cluster {
     /// A cluster of `world` machines over `net`-modeled links.
     pub fn new(world: usize, net: NetConfig) -> Self {
         assert!(world >= 1);
-        Cluster { world, net, cores: 64.0 }
+        Cluster { world, net, cores: 64.0, epoch: 0 }
     }
 
     /// Override the per-machine core count (compute-time divisor).
     pub fn with_cores(mut self, cores: f64) -> Self {
         assert!(cores >= 1.0);
         self.cores = cores;
+        self
+    }
+
+    /// Fence this run at membership epoch `epoch` — failures it surfaces
+    /// carry the epoch, so a reconfiguration driver can tell which
+    /// transition a dead rank belonged to.
+    pub fn at_epoch(mut self, epoch: u64) -> Self {
+        self.epoch = epoch;
         self
     }
 
@@ -613,6 +647,7 @@ impl Cluster {
         let chunk = net::chunk_rows();
         let budget = crate::storage::mem_budget();
         let page_rows = crate::storage::page_rows();
+        let fault_spec = net::fault::capture();
         for rank in 0..world {
             let senders = senders.clone();
             let service_senders = service_senders.clone();
@@ -623,7 +658,9 @@ impl Cluster {
             let barrier_clock = Arc::clone(&barrier_clock);
             let f = Arc::clone(&f);
             let cores = self.cores;
+            let fault_spec = fault_spec.clone();
             handles.push(std::thread::spawn(move || {
+                net::fault::install(fault_spec);
                 let mut ctx = Ctx {
                     rank,
                     world,
@@ -641,8 +678,6 @@ impl Cluster {
                     mem: MemTracker::default(),
                     metrics: MachineMetrics::default(),
                 };
-                // A panicking machine would starve its peers (they block in
-                // recv), so announce loudly before unwinding.
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     net::with_chunk_rows(chunk, || {
                         crate::storage::with_mem_budget(budget, || {
@@ -652,27 +687,78 @@ impl Cluster {
                         })
                     })
                 }));
-                if result.is_err() {
-                    eprintln!("[cluster] machine {} panicked — peers will stall", rank);
+                if let Err(payload) = &result {
+                    // A dead machine must not starve peers blocked in
+                    // `recv`: poison both planes so they abort (see
+                    // `PeerDied`) instead of stalling. Injected kills and
+                    // collateral aborts are expected under fault sweeps;
+                    // only organic panics get announced.
+                    if !payload.is::<net::fault::RankKilled>() && !payload.is::<net::PeerDied>() {
+                        eprintln!("[cluster] machine {} panicked", rank);
+                    }
+                    for dst in 0..world {
+                        if dst == rank {
+                            continue;
+                        }
+                        let poison = || Message {
+                            src: rank,
+                            tag: net::POISON_TAG,
+                            ready_at: ctx.clock,
+                            payload: Payload::Empty,
+                        };
+                        let _ = ctx.senders[dst].send(poison());
+                        let _ = ctx.service_senders[dst].send(poison());
+                    }
                 }
                 // End-of-run rendezvous: nobody drops its channels until
                 // every machine has finished its body, otherwise a fast
                 // machine's exit would break slower peers' sends.
                 ctx.barrier.wait();
-                let value = result.unwrap_or_else(|payload| std::panic::resume_unwind(payload));
-                (value, ctx.clock, ctx.metrics, ctx.mem)
+                (result, ctx.clock, ctx.metrics, ctx.mem)
             }));
         }
 
         let mut values = Vec::with_capacity(world);
         let mut report = ClusterReport::new(world);
+        // Classification: an injected kill is always the root cause; an
+        // organic panic is the root cause among organic panics (lowest
+        // rank wins); `PeerDied` aborts are collateral of whichever rank
+        // poisoned them and are never reported as failures of their own.
+        let mut injected: Option<RankFailed> = None;
+        let mut organic: Option<RankFailed> = None;
         for (rank, h) in handles.into_iter().enumerate() {
-            let (value, clock, metrics, mem) = h
+            let (result, clock, metrics, mem) = h
                 .join()
-                .map_err(|_| anyhow::anyhow!("machine {} panicked", rank))?;
-            values.push(value);
+                .map_err(|_| anyhow::anyhow!("machine {} thread died outside its body", rank))?;
             report.record(rank, clock, metrics, mem);
+            match result {
+                Ok(v) => values.push(v),
+                Err(payload) => {
+                    if let Some(k) = payload.downcast_ref::<net::fault::RankKilled>() {
+                        injected.get_or_insert(RankFailed {
+                            rank: k.rank,
+                            epoch: self.epoch,
+                            point: Some(k.point.name()),
+                            ordinal: k.ordinal,
+                        });
+                    } else if !payload.is::<net::PeerDied>() {
+                        organic.get_or_insert(RankFailed {
+                            rank,
+                            epoch: self.epoch,
+                            point: None,
+                            ordinal: 0,
+                        });
+                    }
+                }
+            }
         }
+        if let Some(failed) = injected.or(organic) {
+            return Err(anyhow::Error::new(failed));
+        }
+        anyhow::ensure!(
+            values.len() == world,
+            "every rank aborted as collateral with no root failure (poison without a source)"
+        );
         Ok((values, report))
     }
 }

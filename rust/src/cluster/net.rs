@@ -122,6 +122,208 @@ pub(crate) fn chunk_plan(rows: usize, cols: usize) -> Option<(Vec<u32>, Vec<usiz
     Some((vec![n as u32, rows as u32, cols as u32], bounds))
 }
 
+/// Tag value reserved for the poison marker a dying rank broadcasts on
+/// both planes (see `Cluster::run`): peers blocked in `recv` abort with
+/// [`PeerDied`] instead of stalling forever. Real tags are composed from
+/// 32-bit phase/sequence halves and can never collide with it.
+pub(crate) const POISON_TAG: u64 = u64::MAX;
+
+/// Panic payload a rank aborts with when a peer's poison marker lands in
+/// its inbox: the peer died mid-protocol, so blocking for its data would
+/// deadlock the cluster. `Cluster::run` treats these as collateral of
+/// the root failure, not failures of their own.
+#[derive(Clone, Copy, Debug)]
+pub struct PeerDied {
+    /// Rank of the peer that died.
+    pub src: usize,
+}
+
+/// Deterministic transport fault injection, mirroring
+/// `storage::durable::crash`: tests arm a kill (or a delay) at the n-th
+/// transport boundary a chosen rank crosses, so a membership sweep can
+/// kill a rank at *every* send/recv boundary — not just between epochs.
+///
+/// Arming is thread-local to the driver thread; `Cluster::run` captures
+/// the armed spec (like the chunk/storage knobs) and installs it in
+/// every rank thread, so concurrent tests in one process cannot
+/// contaminate each other. Only the armed rank's own thread advances the
+/// shared counter, so ordinals are deterministic. A fired kill unwinds
+/// with [`RankKilled`] via `resume_unwind` (no panic-hook noise);
+/// `Cluster::run` catches it and surfaces a structured
+/// `metrics::RankFailed`.
+pub mod fault {
+    use std::cell::RefCell;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    /// Transport boundaries a fault can fire at.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum FaultPoint {
+        /// Entry of `Ctx::send` (covers every chunk of `send_chunked`).
+        Send,
+        /// Entry of `Ctx::recv` (before blocking).
+        Recv,
+        /// Entry of `Ctx::send_service` (service-plane requests).
+        ServiceSend,
+    }
+
+    impl FaultPoint {
+        /// Stable name for reports and assertions.
+        pub fn name(self) -> &'static str {
+            match self {
+                FaultPoint::Send => "send",
+                FaultPoint::Recv => "recv",
+                FaultPoint::ServiceSend => "service-send",
+            }
+        }
+    }
+
+    /// Panic payload [`step`] kills the armed rank with.
+    #[derive(Clone, Copy, Debug)]
+    pub struct RankKilled {
+        /// The rank that was killed.
+        pub rank: usize,
+        /// The boundary the kill fired at.
+        pub point: FaultPoint,
+        /// 1-based ordinal of that boundary in the rank's execution.
+        pub ordinal: u64,
+    }
+
+    /// One armed fault configuration (kill and/or delay), shared between
+    /// the driver thread and the rank threads of the runs it launches.
+    #[derive(Clone, Debug, Default)]
+    pub struct FaultSpec {
+        /// Rank whose transport boundaries are counted (and killed).
+        kill_rank: Option<usize>,
+        /// Fire the kill at this 1-based boundary; 0 = probe (count only).
+        kill_step: u64,
+        /// Boundary crossings by `kill_rank` so far.
+        counter: Arc<AtomicU64>,
+        /// Rank whose n-th send is delayed.
+        delay_rank: Option<usize>,
+        delay_step: u64,
+        delay_secs: f64,
+        delay_counter: Arc<AtomicU64>,
+    }
+
+    thread_local! {
+        static ARMED: RefCell<Option<FaultSpec>> = const { RefCell::new(None) };
+    }
+
+    fn with_spec(f: impl FnOnce(&mut FaultSpec)) {
+        ARMED.with(|a| {
+            let mut a = a.borrow_mut();
+            f(a.get_or_insert_with(FaultSpec::default));
+        });
+    }
+
+    /// Kill `rank` at the `nth` (1-based) transport boundary it crosses.
+    /// Resets the boundary counter.
+    pub fn arm_kill(rank: usize, nth: u64) {
+        assert!(nth >= 1, "kill ordinal is 1-based");
+        with_spec(|s| {
+            s.kill_rank = Some(rank);
+            s.kill_step = nth;
+            s.counter = Arc::new(AtomicU64::new(0));
+        });
+    }
+
+    /// Count `rank`'s transport boundaries without firing — the sweep
+    /// extent: a disarmed probe run's [`count`] is how many kill points
+    /// the schedule has.
+    pub fn probe(rank: usize) {
+        with_spec(|s| {
+            s.kill_rank = Some(rank);
+            s.kill_step = 0;
+            s.counter = Arc::new(AtomicU64::new(0));
+        });
+    }
+
+    /// Add `secs` of simulated latency to the `nth` (1-based) send of
+    /// `rank` — a message-delay point. Delays change simulated time,
+    /// never values (the determinism contract's time/value split).
+    pub fn arm_delay(rank: usize, nth: u64, secs: f64) {
+        assert!(nth >= 1, "delay ordinal is 1-based");
+        with_spec(|s| {
+            s.delay_rank = Some(rank);
+            s.delay_step = nth;
+            s.delay_secs = secs;
+            s.delay_counter = Arc::new(AtomicU64::new(0));
+        });
+    }
+
+    /// Disarm everything on this thread.
+    pub fn disarm() {
+        ARMED.with(|a| *a.borrow_mut() = None);
+    }
+
+    /// Boundary crossings by the armed/probed rank in runs launched since
+    /// the last `arm_kill`/`probe` on this thread.
+    pub fn count() -> u64 {
+        ARMED.with(|a| {
+            a.borrow().as_ref().map_or(0, |s| s.counter.load(Ordering::Relaxed))
+        })
+    }
+
+    /// Capture this thread's armed spec (`Cluster::run` calls this on the
+    /// driver, like the chunk-rows capture).
+    pub(crate) fn capture() -> Option<FaultSpec> {
+        ARMED.with(|a| a.borrow().clone())
+    }
+
+    /// Install a captured spec in a rank thread.
+    pub(crate) fn install(spec: Option<FaultSpec>) {
+        ARMED.with(|a| *a.borrow_mut() = spec);
+    }
+
+    /// Called by `Ctx` at every transport boundary of `rank`. Counts the
+    /// crossing when `rank` is the armed target and unwinds with
+    /// [`RankKilled`] at the armed ordinal.
+    pub(crate) fn step(rank: usize, point: FaultPoint) {
+        let fire = ARMED.with(|a| {
+            let a = a.borrow();
+            let Some(s) = a.as_ref() else { return None };
+            if s.kill_rank != Some(rank) {
+                return None;
+            }
+            let n = s.counter.fetch_add(1, Ordering::Relaxed) + 1;
+            (s.kill_step != 0 && n == s.kill_step).then_some(n)
+        });
+        if let Some(ordinal) = fire {
+            std::panic::resume_unwind(Box::new(RankKilled { rank, point, ordinal }));
+        }
+    }
+
+    /// Extra simulated seconds to add to this send of `rank` (0.0 unless
+    /// an armed delay's ordinal matches).
+    pub(crate) fn send_delay(rank: usize) -> f64 {
+        ARMED.with(|a| {
+            let a = a.borrow();
+            let Some(s) = a.as_ref() else { return 0.0 };
+            if s.delay_rank != Some(rank) {
+                return 0.0;
+            }
+            let n = s.delay_counter.fetch_add(1, Ordering::Relaxed) + 1;
+            if n == s.delay_step {
+                s.delay_secs
+            } else {
+                0.0
+            }
+        })
+    }
+
+    /// True when `err` (from `Cluster::run`) is an injected transport
+    /// kill — the membership sweep's "this failure was mine" check.
+    pub fn is_injected(err: &anyhow::Error) -> bool {
+        err.chain().any(|c| {
+            matches!(
+                c.downcast_ref::<super::super::metrics::RankFailed>(),
+                Some(f) if f.point.is_some()
+            )
+        })
+    }
+}
+
 /// Network parameters. Defaults mirror the paper's testbed (25 Gbps
 /// Ethernet between EC2 instances; 100 µs is a typical same-AZ RTT/2 plus
 /// stack overhead).

@@ -79,6 +79,19 @@ impl RunReport {
             .as_ref()
             .map(|e| crate::serve::ShardedTable::from_inference_plan(&self.plan, e, 0))
     }
+
+    /// Re-plan this run's serving layout for an elastic world of `ranks`
+    /// band owners (`cluster::membership`): same node set, `ranks` row
+    /// shards, one feature part. The membership layer diffs this against
+    /// the current layout (`PartitionPlan::band_diff`) to move only the
+    /// rows whose owner changes.
+    pub fn replan_serving(
+        &self,
+        ranks: usize,
+        out_dim: usize,
+    ) -> std::result::Result<PartitionPlan, String> {
+        self.plan.serving(out_dim).refactor_world(ranks, 1)
+    }
 }
 
 /// The end-to-end pipeline.

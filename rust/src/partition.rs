@@ -128,6 +128,65 @@ impl PartitionPlan {
         PartitionPlan::new(self.n_nodes, self.feature_dim, p, m)
     }
 
+    /// Re-shard for an **elastic** world of `p × m` machines — unlike
+    /// [`refactor`](PartitionPlan::refactor) the world may grow or shrink
+    /// (a membership transition's target layout). Node set and feature
+    /// width are preserved; the new layout is validated instead of
+    /// asserted so a bad target (zero parts, more feature parts than
+    /// columns) is a recoverable error for the membership driver.
+    pub fn refactor_world(&self, p: usize, m: usize) -> Result<PartitionPlan, String> {
+        if p < 1 || m < 1 {
+            return Err(format!("elastic layout needs p,m >= 1 (got {}x{})", p, m));
+        }
+        if self.feature_dim < m {
+            return Err(format!(
+                "feature dim {} cannot split into {} parts",
+                self.feature_dim, m
+            ));
+        }
+        let plan = PartitionPlan::new(self.n_nodes, self.feature_dim, p, m);
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Row segments of the merged band structure of `self` and `new`
+    /// (same node set): every maximal row interval on which both plans'
+    /// ownership is constant, with the owning graph part under each. The
+    /// union of the segments covers `[0, n)` exactly once; segments whose
+    /// owner *part* is unchanged are what an incremental re-shard keeps
+    /// in place (modulo the part→rank mapping, which the membership
+    /// layer applies).
+    pub fn band_segments(&self, new: &PartitionPlan) -> Vec<BandSegment> {
+        assert_eq!(self.n_nodes, new.n_nodes, "band diff needs one node set");
+        let mut cuts: Vec<usize> = self
+            .node_bounds
+            .iter()
+            .chain(new.node_bounds.iter())
+            .copied()
+            .collect();
+        cuts.sort_unstable();
+        cuts.dedup();
+        cuts.windows(2)
+            .filter(|w| w[1] > w[0])
+            .map(|w| BandSegment {
+                lo: w[0],
+                hi: w[1],
+                old_part: self.node_owner(w[0] as NodeId),
+                new_part: new.node_owner(w[0] as NodeId),
+            })
+            .collect()
+    }
+
+    /// The segments of [`band_segments`](PartitionPlan::band_segments)
+    /// whose owning part changes — the minimal move set of an incremental
+    /// re-shard between two same-world plans.
+    pub fn band_diff(&self, new: &PartitionPlan) -> Vec<BandSegment> {
+        self.band_segments(new)
+            .into_iter()
+            .filter(|s| s.old_part != s.new_part)
+            .collect()
+    }
+
     /// Structural invariants (used by property tests).
     pub fn validate(&self) -> Result<(), String> {
         if self.node_bounds.len() != self.p + 1 || self.feat_bounds.len() != self.m + 1 {
@@ -153,6 +212,24 @@ impl PartitionPlan {
             return Err("rank missing from row groups".into());
         }
         Ok(())
+    }
+}
+
+/// One row interval of the merged band structure of two plans (see
+/// [`PartitionPlan::band_segments`]): rows `[lo, hi)` belong to graph
+/// part `old_part` under the old plan and `new_part` under the new one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BandSegment {
+    pub lo: usize,
+    pub hi: usize,
+    pub old_part: usize,
+    pub new_part: usize,
+}
+
+impl BandSegment {
+    /// Rows in the segment.
+    pub fn rows(&self) -> usize {
+        self.hi - self.lo
     }
 }
 
@@ -206,6 +283,82 @@ mod tests {
         s.validate().unwrap();
         // zero-width embeddings still produce a valid layout
         assert_eq!(plan.serving(0).feature_dim, 1);
+    }
+
+    #[test]
+    fn refactor_world_handles_p_or_m_of_one() {
+        let plan = PartitionPlan::new(100, 64, 4, 2);
+        let p1 = plan.refactor_world(1, 1).unwrap();
+        assert_eq!(p1.world(), 1);
+        assert_eq!(p1.node_range(0), (0, 100));
+        p1.validate().unwrap();
+        let m1 = plan.refactor_world(5, 1).unwrap();
+        assert_eq!(m1.world(), 5);
+        m1.validate().unwrap();
+        let tall = plan.refactor_world(1, 8).unwrap();
+        assert_eq!((tall.p, tall.m), (1, 8));
+        tall.validate().unwrap();
+    }
+
+    #[test]
+    fn refactor_world_rejects_degenerate_shrink() {
+        let plan = PartitionPlan::new(100, 4, 4, 2);
+        // shrinking to zero ranks, or below the feature replica count
+        // (more column parts than columns), is a recoverable error
+        assert!(plan.refactor_world(0, 1).is_err());
+        assert!(plan.refactor_world(1, 0).is_err());
+        assert!(plan.refactor_world(1, 5).is_err(), "4 columns cannot split 5 ways");
+        // growth past the old world is fine — that's the elastic point
+        assert_eq!(plan.refactor_world(16, 1).unwrap().world(), 16);
+    }
+
+    #[test]
+    fn refactor_world_keeps_uneven_row_bands_covering() {
+        // 10 rows over 3 then 4 parts: bands are uneven in both layouts;
+        // the segments must still tile [0, n) exactly once.
+        let a = PartitionPlan::new(10, 8, 3, 1);
+        let b = a.refactor_world(4, 1).unwrap();
+        assert_eq!(a.node_bounds, vec![0, 4, 7, 10], "ceil-heavy front bands");
+        let segs = a.band_segments(&b);
+        assert_eq!(segs.first().unwrap().lo, 0);
+        assert_eq!(segs.last().unwrap().hi, 10);
+        for w in segs.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo, "segments must tile without gaps");
+        }
+        // each segment's owner matches both plans row by row
+        for s in &segs {
+            for v in s.lo..s.hi {
+                assert_eq!(a.node_owner(v as NodeId), s.old_part);
+                assert_eq!(b.node_owner(v as NodeId), s.new_part);
+            }
+        }
+        // and the diff is a strict subset: unchanged-part segments stay home
+        let moved: usize = a.band_diff(&b).iter().map(|s| s.rows()).sum();
+        assert!(moved < 10, "incremental diff must not move every row");
+        assert!(moved > 0, "3 -> 4 parts must move something");
+    }
+
+    #[test]
+    fn refactor_then_refactor_round_trip_preserves_node_owner() {
+        let plan = PartitionPlan::new(137, 32, 4, 2);
+        let grown = plan.refactor_world(6, 2).unwrap();
+        let back = grown.refactor_world(4, 2).unwrap();
+        assert_eq!(back, plan, "round trip reproduces the layout exactly");
+        for v in 0..137usize {
+            assert_eq!(back.node_owner(v as NodeId), plan.node_owner(v as NodeId));
+        }
+        // and a same-world refactor round trip through the legacy path
+        let re = plan.refactor(8, 1).refactor(4, 2);
+        assert_eq!(re, plan);
+    }
+
+    #[test]
+    fn band_diff_empty_for_identical_plans() {
+        let plan = PartitionPlan::new(64, 16, 4, 1);
+        let same = plan.refactor_world(4, 1).unwrap();
+        assert!(plan.band_diff(&same).is_empty());
+        let segs = plan.band_segments(&same);
+        assert_eq!(segs.len(), 4, "one segment per unchanged band");
     }
 
     #[test]

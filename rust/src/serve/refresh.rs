@@ -68,6 +68,24 @@ impl TableCell {
         self.epoch.store(next, Ordering::Release);
         next
     }
+
+    /// A membership-transition publish (`cluster::membership`): identical
+    /// swap discipline to [`TableCell::publish`], but validated — the
+    /// incoming table must cover the same node set at the same width,
+    /// because re-sharding may only *move* rows, never change them. The
+    /// shard count is free to differ (that is the point of the handoff).
+    pub fn handoff(&self, table: ShardedTable) -> Result<u64> {
+        let current = self.load();
+        anyhow::ensure!(
+            table.n_nodes() == current.n_nodes() && table.dim() == current.dim(),
+            "handoff table is {}x{}, serving {}x{}",
+            table.n_nodes(),
+            table.dim(),
+            current.n_nodes(),
+            current.dim()
+        );
+        Ok(self.publish(table))
+    }
 }
 
 /// Outcome of one refresh cycle.

@@ -87,6 +87,46 @@ impl ShardedTable {
         ShardedTable { plan, shards: blocks, epoch }
     }
 
+    /// Assemble a table directly from per-part row bands under `plan` —
+    /// the elastic-membership handoff path (`cluster::membership`), where
+    /// the bands already live on their owning ranks and concatenating
+    /// them into a full matrix first would defeat incremental migration.
+    /// `plan` must be serving-shaped (`m == 1`) and `bands[s]` must be
+    /// exactly `plan.node_range(s)` rows.
+    pub fn from_bands(plan: PartitionPlan, bands: Vec<Matrix>, epoch: u64) -> Result<ShardedTable> {
+        anyhow::ensure!(plan.m == 1, "serving tables have one feature part, got {}", plan.m);
+        anyhow::ensure!(
+            bands.len() == plan.p,
+            "{} bands for a {}-part plan",
+            bands.len(),
+            plan.p
+        );
+        let dim = bands.first().map(|b| b.cols).unwrap_or(0);
+        let blocks = bands
+            .into_iter()
+            .enumerate()
+            .map(|(s, band)| {
+                let (lo, hi) = plan.node_range(s);
+                anyhow::ensure!(
+                    band.rows == hi - lo,
+                    "band {} has {} rows, plan wants {}",
+                    s,
+                    band.rows,
+                    hi - lo
+                );
+                anyhow::ensure!(
+                    band.cols == dim,
+                    "band {} is {} wide, others are {}",
+                    s,
+                    band.cols,
+                    dim
+                );
+                Ok(ShardData::Ram(Arc::new(band)))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardedTable { plan, shards: blocks, epoch })
+    }
+
     /// Shard a full matrix with the row ownership of an *inference* plan,
     /// so serving layout matches inference layout (the paper's daily
     /// refresh hands each inference partition's rows to the same serving

@@ -74,6 +74,15 @@ pub fn table_digest(table: &Matrix) -> u64 {
     h
 }
 
+/// Directory of rank `rank`'s per-shard store under `root`. The elastic
+/// membership layer (`cluster::membership`) keeps one store per rank so a
+/// killed rank's band can be rebuilt from its own WAL + checkpoint
+/// (`DurableStore::open`) instead of recomputed; naming is centralized
+/// here so the CLI, tests, and the membership layer agree on the layout.
+pub fn shard_dir(root: &Path, rank: usize) -> PathBuf {
+    root.join(format!("shard-{:04}", rank))
+}
+
 /// What [`DurableStore::open`] rebuilt from disk.
 pub struct Recovered {
     /// Last journaled epoch (what serving resumes at).

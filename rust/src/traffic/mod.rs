@@ -13,6 +13,12 @@
 //!   schedule, never wait for completions) and the sequenced
 //!   deterministic mode that the batch-policy parity sweep uses.
 //!
+//! Trace format v2 adds membership events (`join:4,kill:2` schedules in
+//! [`TraceConfig::membership_schedule`]), so a replay can shrink, grow,
+//! or kill-and-recover the serving cluster *mid-load* via
+//! [`replay_elastic`] and an `ElasticCluster` hook — the SLO gates then
+//! cover reconfiguration windows, not just steady state.
+//!
 //! `deal traffic` (cli) drives both; `benches/traffic_slo.rs` turns the
 //! replay's per-class p50/p99/p999 into SLO gates and emits
 //! `BENCH_traffic.json` (EXPERIMENTS.md §Traffic).
@@ -21,6 +27,7 @@ pub mod replay;
 pub mod trace;
 
 pub use replay::{
-    churn_into_cell, churn_into_cell_durable, replay, ReplayMode, ReplayOpts, ReplayReport,
+    churn_into_cell, churn_into_cell_durable, replay, replay_elastic, ReplayMode, ReplayOpts,
+    ReplayReport,
 };
 pub use trace::{ChurnEvent, Trace, TraceConfig, TraceEvent, ZipfSampler};

@@ -34,6 +34,7 @@ use crate::util::rng::Rng;
 use crate::Result;
 
 use super::trace::{ChurnEvent, Trace, TraceEvent};
+use crate::cluster::membership::MembershipEvent;
 
 /// How the driver maps trace time onto wall-clock time.
 #[derive(Clone, Copy, Debug)]
@@ -82,6 +83,11 @@ pub struct ReplayReport {
     pub responses: Vec<Option<Response>>,
     /// Epoch published by each churn event, in trace order.
     pub churn_epochs: Vec<u64>,
+    /// Membership epoch committed by each membership event, in trace
+    /// order. Empty unless the trace carries membership events *and* the
+    /// replay was driven through [`replay_elastic`] (plain [`replay`]
+    /// skips them: a static-table replay).
+    pub membership_epochs: Vec<u64>,
     /// Worst dispatcher lateness vs. the trace schedule (open loop only;
     /// large values mean the driver itself — not the pool — was the
     /// bottleneck and the measured tail is suspect).
@@ -93,12 +99,42 @@ pub struct ReplayReport {
 /// Replay `trace` against `pool`, calling `on_churn` for every churn
 /// event (in the dispatcher thread; return the published epoch). Use
 /// [`churn_into_cell`] for the standard `DeltaState` hook, or pass
-/// `|_| Ok(0)` for a static-table replay.
+/// `|_| Ok(0)` for a static-table replay. Membership events in the
+/// trace (format v2) are skipped — the world stays fixed; use
+/// [`replay_elastic`] to drive reconfiguration mid-load.
 pub fn replay(
     pool: &ServePool,
     trace: &Trace,
     opts: &ReplayOpts,
     mut on_churn: impl FnMut(&ChurnEvent) -> Result<u64>,
+) -> Result<ReplayReport> {
+    replay_inner(pool, trace, opts, &mut on_churn, None)
+}
+
+/// [`replay`] plus a membership hook: every [`TraceEvent::Membership`]
+/// calls `on_membership` from the dispatcher thread (return the
+/// committed membership epoch — typically `ElasticCluster::apply`
+/// followed by `epoch()`). In open loop the hook runs on schedule while
+/// requests are in flight, so SLO gates cover the reconfiguration
+/// window; in [`ReplayMode::Sequenced`] a drain barrier wraps the hook
+/// exactly like churn, keeping responses a pure function of the trace.
+pub fn replay_elastic(
+    pool: &ServePool,
+    trace: &Trace,
+    opts: &ReplayOpts,
+    mut on_churn: impl FnMut(&ChurnEvent) -> Result<u64>,
+    mut on_membership: impl FnMut(&MembershipEvent) -> Result<u64>,
+) -> Result<ReplayReport> {
+    replay_inner(pool, trace, opts, &mut on_churn, Some(&mut on_membership))
+}
+
+#[allow(clippy::type_complexity)]
+fn replay_inner(
+    pool: &ServePool,
+    trace: &Trace,
+    opts: &ReplayOpts,
+    on_churn: &mut dyn FnMut(&ChurnEvent) -> Result<u64>,
+    mut on_membership: Option<&mut dyn FnMut(&MembershipEvent) -> Result<u64>>,
 ) -> Result<ReplayReport> {
     let n_requests = trace.n_requests();
     let mark = pool.mark();
@@ -129,6 +165,7 @@ pub fn replay(
         .expect("spawn traffic collector");
 
     let mut churn_epochs = Vec::new();
+    let mut membership_epochs = Vec::new();
     let mut dispatched = 0u64;
     let mut max_lag = 0.0f64;
     let t0 = Instant::now();
@@ -159,6 +196,13 @@ pub fn replay(
                             // like a production delta refresh
                             churn_epochs.push(on_churn(c)?);
                         }
+                        TraceEvent::Membership { event, .. } => {
+                            // no drain either: reconfiguration happens
+                            // under load, tails and all
+                            if let Some(ref mut hook) = on_membership {
+                                membership_epochs.push(hook(event)?);
+                            }
+                        }
                     }
                 }
             }
@@ -181,6 +225,17 @@ pub fn replay(
                             }
                             pool.quiesce();
                             churn_epochs.push(on_churn(c)?);
+                        }
+                        TraceEvent::Membership { event, .. } => {
+                            // same barrier as churn: each request reads a
+                            // table from exactly one membership epoch
+                            if let Some(ref mut hook) = on_membership {
+                                for (i, t) in pending.drain(..) {
+                                    tx.send((i, t)).expect("collector alive");
+                                }
+                                pool.quiesce();
+                                membership_epochs.push(hook(event)?);
+                            }
                         }
                     }
                 }
@@ -207,6 +262,7 @@ pub fn replay(
         digests,
         responses,
         churn_epochs,
+        membership_epochs,
         max_dispatch_lag_secs: max_lag,
         goodput,
     })
@@ -335,6 +391,46 @@ mod tests {
         }
         assert_eq!(all[0], all[1], "deadline policy changed responses");
         assert_eq!(all[0], all[2], "size-capped policy changed responses");
+    }
+
+    #[test]
+    fn elastic_replay_reconfigures_without_changing_answers() {
+        use crate::cluster::membership::{ElasticCluster, ElasticOpts};
+
+        let trace = Trace::generate(&TraceConfig {
+            seed: 5,
+            n_nodes: 48,
+            requests: 120,
+            base_rate: 50_000.0,
+            churn_batches: 0,
+            membership_schedule: "leave:3,join:3".into(),
+            ..TraceConfig::default()
+        });
+        assert_eq!(trace.n_membership(), 2);
+        let opts = ReplayOpts { mode: ReplayMode::Sequenced, ..ReplayOpts::default() };
+
+        // fixed-world reference: same trace, membership events skipped
+        let cell = table_cell(48, 8);
+        let pool = ServePool::spawn(cell, Arc::new(Native), PoolOpts::default());
+        let reference = replay(&pool, &trace, &opts, |_| Ok(0)).unwrap();
+        assert!(reference.membership_epochs.is_empty(), "plain replay skips membership");
+
+        // elastic run: the same trace shrinks then regrows the world
+        let mut rng = Rng::new(123);
+        let full = Matrix::random(48, 8, 1.0, &mut rng);
+        let mut cluster = ElasticCluster::new(&full, 4, ElasticOpts::default()).unwrap();
+        let pool = ServePool::spawn(cluster.cell(), Arc::new(Native), PoolOpts::default());
+        let rep = replay_elastic(&pool, &trace, &opts, |_| Ok(0), |ev| {
+            cluster.apply(*ev)?;
+            Ok(cluster.epoch())
+        })
+        .unwrap();
+        assert_eq!(rep.membership_epochs, vec![1, 2]);
+        assert!(rep.digests.iter().all(|&d| d != 0));
+        // the serving values never depended on the membership schedule —
+        // but the reference pool was seeded from ShardedTable::from_full
+        // over the same matrix, so digests must agree request for request
+        assert_eq!(rep.digests, reference.digests);
     }
 
     #[test]

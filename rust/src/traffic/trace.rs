@@ -25,6 +25,7 @@
 
 use std::path::Path;
 
+use crate::cluster::membership::{self, MembershipEvent};
 use crate::serve::Request;
 use crate::util::rng::Rng;
 use crate::Result;
@@ -32,8 +33,12 @@ use crate::Result;
 /// Magic prefix of the on-disk trace format.
 pub const TRACE_MAGIC: &[u8; 8] = b"DEALTRAC";
 /// Current trace format version. Bump on any layout change; `from_bytes`
-/// rejects versions it does not know.
-pub const TRACE_VERSION: u32 = 1;
+/// rejects versions it does not know. v2 added membership events
+/// (`TraceEvent::Membership`, tag 3) and the `membership_schedule` config
+/// field; v1 traces still load (empty schedule, no tag-3 events).
+pub const TRACE_VERSION: u32 = 2;
+/// Oldest version `from_bytes` still reads.
+pub const TRACE_MIN_VERSION: u32 = 1;
 
 /// Everything that determines a trace, bit for bit.
 #[derive(Clone, Debug, PartialEq)]
@@ -75,6 +80,13 @@ pub struct TraceConfig {
     pub churn_edge_removes: usize,
     /// Feature updates per churn batch.
     pub churn_feat_updates: usize,
+    /// Membership events to interleave across the trace, in
+    /// `cluster::membership::parse_schedule` format (`"join:4,kill:2"`);
+    /// empty = fixed world. Events are spread evenly over the request
+    /// stream like churn batches, so open-loop replay drives
+    /// join/leave/kill mid-load and the SLO gates cover reconfiguration
+    /// windows. (Trace format v2.)
+    pub membership_schedule: String,
 }
 
 impl Default for TraceConfig {
@@ -98,6 +110,7 @@ impl Default for TraceConfig {
             churn_edge_adds: 24,
             churn_edge_removes: 24,
             churn_feat_updates: 2,
+            membership_schedule: String::new(),
         }
     }
 }
@@ -124,6 +137,10 @@ pub enum TraceEvent {
     Request { at_secs: f64, req: Request },
     /// Apply a graph-update batch.
     Churn(ChurnEvent),
+    /// Reconfigure the cluster mid-load (trace format v2): the replay
+    /// driver hands `event` to its membership hook (an `ElasticCluster`
+    /// in production-shaped runs).
+    Membership { at_secs: f64, event: MembershipEvent },
 }
 
 impl TraceEvent {
@@ -131,8 +148,27 @@ impl TraceEvent {
         match self {
             TraceEvent::Request { at_secs, .. } => *at_secs,
             TraceEvent::Churn(c) => c.at_secs,
+            TraceEvent::Membership { at_secs, .. } => *at_secs,
         }
     }
+}
+
+/// Wire code of a membership action (trace event tag 3).
+fn action_code(ev: &MembershipEvent) -> u8 {
+    match ev {
+        MembershipEvent::Join { .. } => 0,
+        MembershipEvent::Leave { .. } => 1,
+        MembershipEvent::Kill { .. } => 2,
+    }
+}
+
+fn action_from(code: u8, rank: usize) -> Result<MembershipEvent> {
+    Ok(match code {
+        0 => MembershipEvent::Join { rank },
+        1 => MembershipEvent::Leave { rank },
+        2 => MembershipEvent::Kill { rank },
+        other => anyhow::bail!("unknown membership action code {}", other),
+    })
 }
 
 /// A generated (or loaded) trace: the config that made it plus the event
@@ -264,13 +300,24 @@ impl Trace {
 
         // Interleave churn: batch b lands just before request b·stride, at
         // that request's timestamp (replay applies churn first at a tie).
-        let mut events = Vec::with_capacity(requests.len() + config.churn_batches);
+        // Membership events get the same even spacing with their own
+        // stride, so a trace can drive join/leave/kill mid-load.
+        let schedule = membership::parse_schedule(&config.membership_schedule)
+            .expect("invalid membership_schedule in trace config");
+        let mut events =
+            Vec::with_capacity(requests.len() + config.churn_batches + schedule.len());
         let stride = if config.churn_batches > 0 {
             (config.requests / (config.churn_batches + 1)).max(1)
         } else {
             usize::MAX
         };
+        let m_stride = if !schedule.is_empty() {
+            (config.requests / (schedule.len() + 1)).max(1)
+        } else {
+            usize::MAX
+        };
         let mut emitted_churn = 0usize;
+        let mut emitted_membership = 0usize;
         for (i, (at_secs, req)) in requests.into_iter().enumerate() {
             if emitted_churn < config.churn_batches
                 && i > 0
@@ -285,6 +332,17 @@ impl Trace {
                     seed: churn_rng.next_u64(),
                 }));
                 emitted_churn += 1;
+            }
+            if emitted_membership < schedule.len()
+                && i > 0
+                && i % m_stride == 0
+                && i / m_stride == emitted_membership + 1
+            {
+                events.push(TraceEvent::Membership {
+                    at_secs,
+                    event: schedule[emitted_membership],
+                });
+                emitted_membership += 1;
             }
             events.push(TraceEvent::Request { at_secs, req });
         }
@@ -301,7 +359,18 @@ impl Trace {
 
     /// Number of churn events.
     pub fn n_churn(&self) -> usize {
-        self.events.len() - self.n_requests()
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Churn(_)))
+            .count()
+    }
+
+    /// Number of membership events (0 for v1 traces).
+    pub fn n_membership(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Membership { .. }))
+            .count()
     }
 
     /// Simulated length: last event's arrival time (0 for an empty trace).
@@ -337,6 +406,9 @@ impl Trace {
         put_u64(&mut buf, c.churn_edge_adds as u64);
         put_u64(&mut buf, c.churn_edge_removes as u64);
         put_u64(&mut buf, c.churn_feat_updates as u64);
+        // v2 config tail: length-prefixed membership schedule string.
+        put_u32(&mut buf, c.membership_schedule.len() as u32);
+        buf.extend_from_slice(c.membership_schedule.as_bytes());
         put_u64(&mut buf, self.events.len() as u64);
         for ev in &self.events {
             match ev {
@@ -365,6 +437,12 @@ impl Trace {
                     put_u32(&mut buf, c.feat_updates);
                     put_u64(&mut buf, c.seed);
                 }
+                TraceEvent::Membership { at_secs, event } => {
+                    buf.push(3);
+                    put_f64(&mut buf, *at_secs);
+                    buf.push(action_code(event));
+                    put_u32(&mut buf, event.rank() as u32);
+                }
             }
         }
         let sum = fnv1a(&buf);
@@ -379,9 +457,10 @@ impl Trace {
         anyhow::ensure!(magic == TRACE_MAGIC, "not a deal trace (bad magic)");
         let version = r.u32()?;
         anyhow::ensure!(
-            version == TRACE_VERSION,
-            "trace format version {} (this build reads {})",
+            (TRACE_MIN_VERSION..=TRACE_VERSION).contains(&version),
+            "trace format version {} (this build reads {}..={})",
             version,
+            TRACE_MIN_VERSION,
             TRACE_VERSION
         );
         anyhow::ensure!(bytes.len() >= 8, "trace truncated");
@@ -414,6 +493,14 @@ impl Trace {
             churn_edge_adds: r.u64()? as usize,
             churn_edge_removes: r.u64()? as usize,
             churn_feat_updates: r.u64()? as usize,
+            membership_schedule: if version >= 2 {
+                let len = r.u32()? as usize;
+                anyhow::ensure!(len <= 1 << 16, "membership schedule oversized ({len} bytes)");
+                String::from_utf8(r.take(len)?.to_vec())
+                    .map_err(|e| anyhow::anyhow!("membership schedule not utf-8: {}", e))?
+            } else {
+                String::new() // v1 predates membership events
+            },
         };
         let n_events = r.u64()? as usize;
         let mut events = Vec::with_capacity(n_events.min(1 << 22));
@@ -441,7 +528,17 @@ impl Trace {
                     feat_updates: r.u32()?,
                     seed: r.u64()?,
                 }),
-                other => anyhow::bail!("unknown trace event tag {}", other),
+                3 if version >= 2 => {
+                    let at_secs = r.f64()?;
+                    let code = r.take(1)?[0];
+                    let rank = r.u32()? as usize;
+                    TraceEvent::Membership { at_secs, event: action_from(code, rank)? }
+                }
+                other => anyhow::bail!(
+                    "unknown trace event tag {} for format version {}",
+                    other,
+                    version
+                ),
             };
             events.push(ev);
         }
@@ -593,5 +690,92 @@ mod tests {
                 assert!(req.ids().iter().all(|&id| (id as usize) < 64));
             }
         }
+    }
+
+    // Offset of the v2 membership-schedule length field: 8 magic + 4
+    // version + 144 bytes of v1 config (3 u64 + 8 f64 + 7 u64).
+    const SCHEDULE_OFF: usize = 8 + 4 + 144;
+
+    /// Strip a v2 buffer down to v1 layout: rewrite the version word,
+    /// splice out the schedule field, recompute the checksum.
+    fn downgrade_to_v1(bytes: &[u8], schedule_len: usize) -> Vec<u8> {
+        let mut v1 = bytes[..bytes.len() - 8].to_vec(); // drop checksum
+        v1[8..12].copy_from_slice(&1u32.to_le_bytes());
+        v1.drain(SCHEDULE_OFF..SCHEDULE_OFF + 4 + schedule_len);
+        let sum = fnv1a(&v1);
+        put_u64(&mut v1, sum);
+        v1
+    }
+
+    #[test]
+    fn membership_events_roundtrip() {
+        let cfg = TraceConfig {
+            membership_schedule: "join:4,kill:2,leave:0".into(),
+            ..small_cfg()
+        };
+        let trace = Trace::generate(&cfg);
+        assert_eq!(trace.n_requests(), 200);
+        assert_eq!(trace.n_membership(), 3);
+        let got: Vec<MembershipEvent> = trace
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Membership { event, .. } => Some(*event),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            got,
+            vec![
+                MembershipEvent::Join { rank: 4 },
+                MembershipEvent::Kill { rank: 2 },
+                MembershipEvent::Leave { rank: 0 },
+            ],
+            "schedule order survives interleaving"
+        );
+        // time-ordered alongside requests and churn
+        let mut last = 0.0;
+        for ev in &trace.events {
+            assert!(ev.at_secs() >= last);
+            last = ev.at_secs();
+        }
+        let bytes = trace.to_bytes();
+        let back = Trace::from_bytes(&bytes).unwrap();
+        assert_eq!(back.config, trace.config);
+        assert_eq!(back.n_membership(), 3);
+        assert_eq!(back.to_bytes(), bytes, "reserialization is identity");
+    }
+
+    #[test]
+    fn reads_v1_traces() {
+        // A membership-free v2 trace differs from its v1 form only by the
+        // version word and the empty schedule-length field; hand-patch it
+        // into v1 layout and check the reader accepts it.
+        let trace = Trace::generate(&small_cfg());
+        assert!(trace.config.membership_schedule.is_empty());
+        let v1 = downgrade_to_v1(&trace.to_bytes(), 0);
+        let back = Trace::from_bytes(&v1).unwrap();
+        assert_eq!(back.config, trace.config, "v1 read defaults to empty schedule");
+        assert_eq!(back.events.len(), trace.events.len());
+        assert_eq!(back.to_bytes(), trace.to_bytes(), "v1 loads re-save as v2");
+    }
+
+    #[test]
+    fn v1_rejects_membership_events_and_future_versions_fail() {
+        let cfg = TraceConfig { membership_schedule: "kill:1".into(), ..small_cfg() };
+        let trace = Trace::generate(&cfg);
+        // Same downgrade surgery, but the body still carries tag-3 events:
+        // a v1 reader must refuse them rather than misparse.
+        let v1 = downgrade_to_v1(&trace.to_bytes(), "kill:1".len());
+        let err = Trace::from_bytes(&v1).unwrap_err().to_string();
+        assert!(err.contains("tag 3"), "err: {}", err);
+        // and an unknown future version is refused up front
+        let mut future = trace.to_bytes();
+        future[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let body_len = future.len() - 8;
+        let sum = fnv1a(&future[..body_len]);
+        future[body_len..].copy_from_slice(&sum.to_le_bytes());
+        let err = Trace::from_bytes(&future).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "err: {}", err);
     }
 }

@@ -127,7 +127,7 @@ fn replay_is_tear_free(spill_budget: u64) {
         .iter()
         .filter_map(|ev| match ev {
             TraceEvent::Request { req, .. } => Some(req),
-            TraceEvent::Churn(_) => None,
+            _ => None,
         })
         .collect();
     assert_eq!(requests.len(), rep.responses.len());

@@ -1,0 +1,347 @@
+//! Elastic membership integration (DESIGN.md §Membership): epoch-fenced
+//! join/leave/kill must extend the repo's bit-identical determinism
+//! contract to *any* membership schedule.
+//!
+//! The centrepiece is a **kill-point sweep** in the style of
+//! `tests/recovery.rs`: the transport fault hook (`cluster::net::fault`)
+//! first probes how many send/recv boundaries a rank crosses during a
+//! migration, then re-runs the migration killing that rank at boundary
+//! 1, 2, …, N. After every single injected kill the transition must
+//! abort cleanly — the old table keeps serving, bit-identical; the
+//! consumed membership epoch never rewinds (fencing out the aborted
+//! traffic) — and the schedule must then complete on top of the abort to
+//! the exact fixed-world table.
+//!
+//! Alongside the sweep: a seeded join/leave/kill schedule preserves
+//! served-response digests with and without durable shard stores, a
+//! killed rank's band is rebuilt from its per-shard durable store (and a
+//! rejoiner reuses its own grave) instead of being recomputed or
+//! re-shipped, stale-epoch traffic is rejected deterministically, and
+//! injected message delays change simulated time but never values.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use deal::cluster::membership::{
+    fence, parse_schedule, ElasticCluster, ElasticOpts, MembershipEvent, MigrationMode,
+};
+use deal::cluster::net::fault;
+use deal::cluster::RankFailed;
+use deal::runtime::Native;
+use deal::serve::{
+    response_digest, serve_workload_pooled, synthetic_workload, PoolOpts, Request, ServePool,
+    ShardedTable, TableCell,
+};
+use deal::tensor::Matrix;
+use deal::util::rng::Rng;
+
+const ROWS: usize = 96;
+const DIM: usize = 8;
+const WORLD: usize = 4;
+
+/// The fixed-world reference table every schedule is checked against.
+fn reference_table() -> Matrix {
+    let mut rng = Rng::new(0xE1A5_71C);
+    Matrix::random(ROWS, DIM, 1.0, &mut rng)
+}
+
+/// The pinned workload replayed after every transition.
+fn workload() -> Vec<Request> {
+    let mut rng = Rng::new(0xBEEF);
+    synthetic_workload(&mut rng, ROWS, 64, false)
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("deal-member-{}-{}", std::process::id(), tag));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn opts(durable_root: Option<PathBuf>) -> ElasticOpts {
+    ElasticOpts { durable_root, ..ElasticOpts::default() }
+}
+
+/// Bit-exact matrix equality — the membership contract has no tolerance.
+fn assert_bits_eq(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{}: shape", what);
+    let ab: Vec<u32> = a.data.iter().map(|v| v.to_bits()).collect();
+    let bb: Vec<u32> = b.data.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(ab, bb, "{}: not bit-identical", what);
+}
+
+/// Serve `reqs` through a pool over `cell` and fold per-request digests.
+fn served_digests(cell: Arc<TableCell>, reqs: &[Request]) -> Vec<u64> {
+    let pool = ServePool::spawn(cell, Arc::new(Native), PoolOpts::default());
+    let (resp, _) = serve_workload_pooled(&pool, reqs).expect("workload served");
+    let digests = resp.iter().map(response_digest).collect();
+    pool.shutdown();
+    digests
+}
+
+/// Reference digests from a plain fixed-world sharded table (no elastic
+/// machinery at all).
+fn reference_digests(full: &Matrix, reqs: &[Request]) -> Vec<u64> {
+    let cell = Arc::new(TableCell::new(ShardedTable::from_full(full, WORLD, 0)));
+    served_digests(cell, reqs)
+}
+
+/// A seeded schedule with every event kind, including a kill-and-rejoin
+/// and a grow past the original world.
+fn seeded_schedule() -> Vec<MembershipEvent> {
+    parse_schedule("leave:3,kill:2,join:2,join:3,join:4,leave:0").expect("valid schedule")
+}
+
+// ---------------------------------------------------------------------
+// schedule sweep: embeddings and served responses bit-identical to the
+// fixed world, with and without durable shard stores
+// ---------------------------------------------------------------------
+
+fn run_schedule(durable_root: Option<PathBuf>) {
+    let full = reference_table();
+    let reqs = workload();
+    let reference = reference_digests(&full, &reqs);
+    let durable = durable_root.is_some();
+
+    let mut cluster = ElasticCluster::new(&full, WORLD, opts(durable_root)).expect("cluster");
+    assert_eq!(served_digests(cluster.cell(), &reqs), reference, "epoch 0 digests");
+
+    for (i, ev) in seeded_schedule().into_iter().enumerate() {
+        let stats = cluster.apply(ev).unwrap_or_else(|e| panic!("apply {}: {:#}", ev, e));
+        assert_eq!(stats.epoch, i as u64 + 1, "membership epochs are dense");
+        assert_eq!(stats.serving_epoch, cluster.serving_epoch(), "handoff epoch recorded");
+        // the full contract, after every single transition: the published
+        // table and the served responses match the fixed world bit for bit
+        cluster.verify_against(&full).expect("table bit-identical");
+        assert_eq!(
+            served_digests(cluster.cell(), &reqs),
+            reference,
+            "served digests diverged after {} (epoch {})",
+            ev,
+            stats.epoch
+        );
+        if durable {
+            match ev {
+                // the killed rank's band comes back from its durable
+                // store, not the wire and not a recompute
+                MembershipEvent::Kill { .. } => {
+                    assert!(stats.recovered_from_durable, "kill should recover from durable");
+                    assert!(stats.rows_recovered > 0, "kill recovered no rows");
+                }
+                // the first rejoin reuses the rejoiner's own grave
+                MembershipEvent::Join { rank: 2 } => {
+                    assert!(stats.recovered_from_durable, "rejoin should reuse the grave");
+                }
+                _ => {}
+            }
+        }
+    }
+    assert_eq!(cluster.history().len(), 6);
+    // world is back to 4 active ranks (0 left at the end, 4 joined)
+    assert_eq!(cluster.membership().active().len(), WORLD);
+}
+
+#[test]
+fn schedule_preserves_bits_without_durable() {
+    run_schedule(None);
+}
+
+#[test]
+fn schedule_preserves_bits_with_durable() {
+    let dir = fresh_dir("sched");
+    run_schedule(Some(dir.clone()));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// the kill-point sweep: a rank dies at every armed transport boundary
+// ---------------------------------------------------------------------
+
+/// Sweep `victim` through every transport boundary it crosses while the
+/// cluster applies `ev` from a fresh world. After each injected kill the
+/// transition must abort with a structured, injected `RankFailed`, the
+/// serving table must be untouched, the epoch must stay consumed, and the
+/// retried event must complete to the fixed-world table.
+fn sweep_kills(ev: MembershipEvent, victim: usize, root: &std::path::Path) {
+    let full = reference_table();
+    let reqs = workload();
+    let reference = reference_digests(&full, &reqs);
+    let mk = |tag: &str| {
+        let dir = root.join(tag);
+        let _ = std::fs::remove_dir_all(&dir);
+        ElasticCluster::new(&full, WORLD, opts(Some(dir))).expect("cluster")
+    };
+
+    // probe run: count the victim's boundaries without firing
+    fault::probe(victim);
+    let mut scratch = mk("probe");
+    scratch.apply(ev).expect("probe run completes");
+    let total = fault::count();
+    fault::disarm();
+    assert!(total >= 1, "victim {} crosses no transport boundary during {}", victim, ev);
+
+    for nth in 1..=total {
+        let mut cluster = mk(&format!("kill-{}-{}", victim, nth));
+        let before = cluster.table().to_full();
+        fault::arm_kill(victim, nth);
+        let err = cluster
+            .apply(ev)
+            .expect_err(&format!("kill {}@{} must fail the transition", victim, nth));
+        fault::disarm();
+
+        // structured failure: the injected kill is the root cause
+        assert!(fault::is_injected(&err), "boundary {}: not injected: {:#}", nth, err);
+        let rf = RankFailed::find(&err).expect("RankFailed in chain");
+        assert_eq!(rf.rank, victim, "boundary {}: wrong rank", nth);
+        assert_eq!(rf.epoch, 1, "boundary {}: wrong epoch", nth);
+        assert!(rf.point.is_some() && rf.ordinal == nth, "boundary {}: {:?}", nth, rf);
+
+        // abort semantics: the old table keeps serving, bit-identical;
+        // the consumed epoch never rewinds; nothing was handed off
+        assert_bits_eq(&cluster.table().to_full(), &before, "aborted table");
+        cluster.verify_against(&full).expect("aborted table matches reference");
+        assert_eq!(cluster.epoch(), 1, "fences never rewind");
+        assert_eq!(cluster.serving_epoch(), 0, "no handoff on abort");
+        assert!(cluster.history().is_empty(), "aborted transition recorded");
+        assert!(!cluster.membership().in_transition(), "abort left a pending event");
+
+        // and the cluster is still usable: the retried event completes to
+        // the fixed world, serving the exact reference responses
+        let stats = cluster.apply(ev).expect("retry after abort");
+        assert_eq!(stats.epoch, 2, "retry consumed the next epoch");
+        cluster.verify_against(&full).expect("retried table matches reference");
+        assert_eq!(
+            served_digests(cluster.cell(), &reqs),
+            reference,
+            "digests diverged after kill@{} + retry",
+            nth
+        );
+    }
+}
+
+#[test]
+fn kill_sweep_during_kill_migration() {
+    // Kill{2} moves one band over the wire (rank 1 → rank 0) and
+    // recovers the victim's band from its durable grave. Sweep both the
+    // sender and the receiver through every boundary they cross.
+    let root = fresh_dir("sweep-kill");
+    for victim in [0usize, 1] {
+        sweep_kills(MembershipEvent::Kill { rank: 2 }, victim, &root);
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn kill_sweep_during_join_migration() {
+    // Join{4} ships band slices from the incumbents to the joiner: the
+    // joiner crosses recv boundaries, rank 3 sends. Sweep both.
+    let root = fresh_dir("sweep-join");
+    for victim in [3usize, 4] {
+        sweep_kills(MembershipEvent::Join { rank: 4 }, victim, &root);
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------
+// durable recovery: rebuilt, not recomputed and not re-shipped
+// ---------------------------------------------------------------------
+
+#[test]
+fn kill_recovers_from_durable_not_the_wire() {
+    let dir = fresh_dir("durable-kill");
+    let full = reference_table();
+    let mut with_store =
+        ElasticCluster::new(&full, WORLD, opts(Some(dir.clone()))).expect("cluster");
+    let mut wire_only = ElasticCluster::new(&full, WORLD, opts(None)).expect("cluster");
+
+    let s_durable = with_store.apply(MembershipEvent::Kill { rank: 2 }).expect("kill");
+    let s_wire = wire_only.apply(MembershipEvent::Kill { rank: 2 }).expect("kill");
+    with_store.verify_against(&full).expect("durable path bits");
+    wire_only.verify_against(&full).expect("wire path bits");
+
+    // same final table, but the durable path moved strictly fewer bytes:
+    // the dead rank's rows came off disk, not over the wire
+    assert!(s_durable.recovered_from_durable);
+    assert!(!s_wire.recovered_from_durable);
+    assert!(s_durable.rows_recovered > 0);
+    assert_eq!(s_wire.rows_recovered, 0);
+    assert!(
+        s_durable.bytes_on_wire < s_wire.bytes_on_wire,
+        "durable recovery still shipped everything: {} vs {}",
+        s_durable.bytes_on_wire,
+        s_wire.bytes_on_wire
+    );
+    assert_eq!(
+        s_durable.rows_moved + s_durable.rows_recovered,
+        s_wire.rows_moved,
+        "the recovered rows are exactly the rows the wire path shipped extra"
+    );
+
+    // rejoin: the rank's own grave still covers its band, so the rejoin
+    // also recovers from disk
+    let s_rejoin = with_store.apply(MembershipEvent::Join { rank: 2 }).expect("rejoin");
+    assert!(s_rejoin.recovered_from_durable, "rejoin should reuse the grave");
+    with_store.verify_against(&full).expect("rejoined bits");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn incremental_migration_moves_less_than_full_reshard() {
+    let full = reference_table();
+    let mut inc = ElasticCluster::new(&full, WORLD, opts(None)).expect("cluster");
+    let mut naive = ElasticCluster::new(&full, WORLD, opts(None)).expect("cluster");
+    let ev = MembershipEvent::Leave { rank: 3 };
+    let si = inc.apply_mode(ev, MigrationMode::Incremental).expect("incremental");
+    let sf = naive.apply_mode(ev, MigrationMode::FullReshard).expect("full reshard");
+    inc.verify_against(&full).expect("incremental bits");
+    naive.verify_against(&full).expect("full-reshard bits");
+    assert_eq!(sf.rows_moved, ROWS, "a full reshard ships every row");
+    assert!(si.rows_moved < sf.rows_moved, "{} vs {}", si.rows_moved, sf.rows_moved);
+    assert!(
+        si.bytes_on_wire < sf.bytes_on_wire,
+        "incremental must move strictly fewer bytes: {} vs {}",
+        si.bytes_on_wire,
+        sf.bytes_on_wire
+    );
+}
+
+// ---------------------------------------------------------------------
+// fencing and delays
+// ---------------------------------------------------------------------
+
+#[test]
+fn stale_epoch_traffic_is_rejected_deterministically() {
+    assert!(fence(3, 3).is_ok());
+    let err = fence(2, 3).expect_err("stale epoch must be rejected");
+    assert_eq!((err.got, err.want), (2, 3));
+    // newer-than-expected is just as fatal: fences are exact
+    assert!(fence(4, 3).is_err());
+}
+
+#[test]
+fn delays_change_time_never_bits() {
+    let full = reference_table();
+    let ev = MembershipEvent::Leave { rank: 3 };
+
+    let mut calm = ElasticCluster::new(&full, WORLD, opts(None)).expect("cluster");
+    let s_calm = calm.apply(ev).expect("calm run");
+
+    // 5 simulated seconds on the first send of rank 3 (the band source)
+    fault::arm_delay(3, 1, 5.0);
+    let mut slow = ElasticCluster::new(&full, WORLD, opts(None)).expect("cluster");
+    let s_slow = slow.apply(ev).expect("delayed run");
+    fault::disarm();
+
+    assert!(
+        s_slow.sim_secs > s_calm.sim_secs + 4.0,
+        "delay not reflected in simulated time: {} vs {}",
+        s_slow.sim_secs,
+        s_calm.sim_secs
+    );
+    assert_eq!(s_slow.bytes_on_wire, s_calm.bytes_on_wire, "delays move no extra bytes");
+    assert_bits_eq(
+        &slow.table().to_full(),
+        &calm.table().to_full(),
+        "delayed migration values",
+    );
+    slow.verify_against(&full).expect("delayed bits");
+}

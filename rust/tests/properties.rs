@@ -362,7 +362,7 @@ fn batch_policies_bit_identical_on_replayed_traces() {
             .iter()
             .filter_map(|ev| match ev {
                 TraceEvent::Request { req, .. } => Some(req),
-                TraceEvent::Churn(_) => None,
+                _ => None,
             })
             .map(|req| response_digest(&server.handle(req, &Native).unwrap()))
             .collect();
