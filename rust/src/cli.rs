@@ -19,7 +19,8 @@ use crate::Result;
 const USAGE: &str = "deal — Distributed End-to-End GNN Inference for All Nodes
 
 USAGE:
-  deal run [--config FILE] [--set section.key=value]...   run the pipeline
+  deal run [--config FILE] [--set section.key=value]...
+           [--autotune]                                   run the pipeline
   deal serve [--config FILE] [--set section.key=value]...
              [--requests N] [--workers W] [--batch B] [--refresh R]
              [--storage-dir DIR] [--resume]
@@ -108,14 +109,24 @@ from `storage.page_rows` / `DEAL_PAGE_ROWS`. Results are bit-identical
 at every budget and page size — only page-fault counts and simulated
 I/O time change.
 
+`run` also accepts `--autotune` (sugar for `--set exec.autotune=1`): the
+coordinator runs a short seeded micro-calibration pass (cached in a
+versioned, checksummed sidecar — `DEAL_AUTOTUNE_CACHE`, default
+`target/autotune/calibration.json` — so repeat runs skip it), then plans
+exec mode, chunk granularity, ring direction, pool width, and page size
+per layer from the measured constants and the run's cost model instead
+of the fixed defaults. Library and test runs can use the `DEAL_AUTOTUNE`
+env instead. Plans change simulated and wall time only — outputs stay
+bit-identical to every fixed configuration.
+
 Config keys (see rust/src/config.rs): dataset.name, dataset.scale,
 cluster.machines, cluster.feature_parts, cluster.bandwidth_gbps,
 cluster.latency_us, model.kind, model.layers, model.fanout, model.weights,
 exec.mode, exec.group_cols, exec.backend, exec.feature_prep, exec.threads,
-exec.seed, pipeline.chunk_rows, storage.budget_bytes, storage.page_rows,
-storage.dir, traffic.requests, traffic.rate, traffic.zipf_s, traffic.diurnal,
-traffic.burst, traffic.similar_frac, traffic.churn_batches,
-traffic.policy, traffic.speed
+exec.autotune, exec.seed, pipeline.chunk_rows, storage.budget_bytes,
+storage.page_rows, storage.dir, traffic.requests, traffic.rate,
+traffic.zipf_s, traffic.diurnal, traffic.burst, traffic.similar_frac,
+traffic.churn_batches, traffic.policy, traffic.speed
 ";
 
 /// Entry point used by `main.rs`. Exits the process on error.
@@ -193,6 +204,10 @@ fn cfg_from_args(args: &[String]) -> Result<DealConfig> {
     if let Some(d) = flag_value(args, "--storage-dir") {
         cfg.storage.dir = d.to_string();
     }
+    // `--autotune` (boolean, no value) is sugar for `--set exec.autotune=1`.
+    if args.iter().any(|a| a == "--autotune") {
+        cfg.exec.autotune = true;
+    }
     Ok(cfg)
 }
 
@@ -206,6 +221,11 @@ fn apply_threads(cfg: &DealConfig) {
     crate::storage::set_mem_budget(cfg.storage.budget_bytes);
     crate::storage::set_page_rows(cfg.storage.page_rows);
     crate::storage::set_storage_dir(&cfg.storage.dir);
+    // Only an explicit opt-in overrides; leaving the knob untouched keeps
+    // the DEAL_AUTOTUNE env fallback live (mirrors threads' 0 = auto).
+    if cfg.exec.autotune {
+        crate::runtime::autotune::set_autotune(true);
+    }
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {

@@ -6,9 +6,102 @@
 //! expressed here over a machine *subgroup* (the M machines sharing one
 //! graph partition's rows).
 
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
 use super::net::{Payload, Tag};
 use super::Ctx;
 use crate::tensor::Matrix;
+
+/// Direction the ring all-to-all walks the subgroup. Both directions move
+/// the same blocks between the same pairs — only the stage at which each
+/// pair communicates changes — so results are bit-identical (the output is
+/// indexed by *source position*, not arrival order). The knob exists as an
+/// execution variant the autotuner can schedule and the oracle tests can
+/// prove direction-invariant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RingDir {
+    /// Stage `s` sends to `(pos + s) mod M` (the default).
+    Forward,
+    /// Stage `s` sends to `(pos - s) mod M`.
+    Reverse,
+}
+
+impl RingDir {
+    pub fn name(self) -> &'static str {
+        match self {
+            RingDir::Forward => "forward",
+            RingDir::Reverse => "reverse",
+        }
+    }
+}
+
+/// Sentinel for "no override" in the u8-encoded knob chain
+/// (0 = Forward, 1 = Reverse, 2 = unset).
+const DIR_UNSET: u8 = 2;
+
+static GLOBAL_RING_DIR: AtomicU8 = AtomicU8::new(DIR_UNSET);
+
+thread_local! {
+    static LOCAL_RING_DIR: Cell<u8> = const { Cell::new(DIR_UNSET) };
+}
+
+fn dir_to_u8(d: RingDir) -> u8 {
+    match d {
+        RingDir::Forward => 0,
+        RingDir::Reverse => 1,
+    }
+}
+
+fn dir_from_u8(v: u8) -> Option<RingDir> {
+    match v {
+        0 => Some(RingDir::Forward),
+        1 => Some(RingDir::Reverse),
+        _ => None,
+    }
+}
+
+/// Set the process-global ring direction.
+pub fn set_ring_dir(dir: RingDir) {
+    GLOBAL_RING_DIR.store(dir_to_u8(dir), Ordering::Relaxed);
+}
+
+/// Reset the process-global ring direction to auto (`DEAL_RING_DIR` env,
+/// else Forward).
+pub fn clear_ring_dir() {
+    GLOBAL_RING_DIR.store(DIR_UNSET, Ordering::Relaxed);
+}
+
+/// Run `f` with the ring direction pinned on this thread (restored on
+/// exit). `Cluster::run` and `Ctx::with_server` capture the caller's
+/// effective direction into spawned rank/server threads.
+pub fn with_ring_dir<T>(dir: RingDir, f: impl FnOnce() -> T) -> T {
+    let prev = LOCAL_RING_DIR.with(|c| c.replace(dir_to_u8(dir)));
+    let out = f();
+    LOCAL_RING_DIR.with(|c| c.set(prev));
+    out
+}
+
+fn env_ring_dir_default() -> RingDir {
+    static ENV: OnceLock<RingDir> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("DEAL_RING_DIR").as_deref() {
+        Ok("reverse") | Ok("1") => RingDir::Reverse,
+        _ => RingDir::Forward,
+    })
+}
+
+/// Effective ring direction for this thread: [`with_ring_dir`] scope →
+/// [`set_ring_dir`] global → `DEAL_RING_DIR` env (`reverse`/`1`) → Forward.
+pub fn ring_dir() -> RingDir {
+    if let Some(d) = dir_from_u8(LOCAL_RING_DIR.with(|c| c.get())) {
+        return d;
+    }
+    if let Some(d) = dir_from_u8(GLOBAL_RING_DIR.load(Ordering::Relaxed)) {
+        return d;
+    }
+    env_ring_dir_default()
+}
 
 /// Ring all-to-all over a subgroup: every member contributes one block for
 /// every other member; block `j` from member `i` reaches member `j` after
@@ -40,17 +133,29 @@ pub fn ring_all_to_all(
     let m = group.len();
     assert_eq!(blocks.len(), m);
     assert_eq!(group[my_pos], ctx.rank);
+    let dir = ring_dir();
     let mut out: Vec<Option<Matrix>> = (0..m).map(|_| None).collect();
-    // Issue all sends up front (non-blocking): stage s sends to (pos+s)%m.
+    // Issue all sends up front (non-blocking): stage s sends to (pos+s)%m
+    // walking forward, (pos-s)%m walking reverse. Every member uses the
+    // same effective direction (installed by the cluster launcher), so the
+    // stage pairings stay symmetric: whoever I send to at stage s is
+    // expecting my block at stage s.
     for s in 1..m {
-        let dst_pos = (my_pos + s) % m;
+        let dst_pos = match dir {
+            RingDir::Forward => (my_pos + s) % m,
+            RingDir::Reverse => (my_pos + m - s) % m,
+        };
         let block = std::mem::replace(&mut blocks[dst_pos], Matrix::zeros(0, 0));
         ctx.send_chunked(group[dst_pos], Tag::of(phase, s as u32), block);
     }
     out[my_pos] = Some(std::mem::replace(&mut blocks[my_pos], Matrix::zeros(0, 0)));
-    // Receive stage by stage: at stage s we hear from (pos-s) mod m.
+    // Receive stage by stage from the mirror of the send mapping. Output
+    // is indexed by source position, so direction never changes values.
     for s in 1..m {
-        let src_pos = (my_pos + m - s) % m;
+        let src_pos = match dir {
+            RingDir::Forward => (my_pos + m - s) % m,
+            RingDir::Reverse => (my_pos + s) % m,
+        };
         out[src_pos] = Some(ctx.recv_matrix(group[src_pos], Tag::of(phase, s as u32)));
     }
     out.into_iter().map(|b| b.unwrap()).collect()
@@ -163,6 +268,46 @@ mod tests {
         assert_eq!(mono_rep.total_chunks(), 0);
         // each rank sends 2 remote blocks of 4 chunks each
         assert_eq!(rep.total_chunks(), 3 * 2 * 4);
+    }
+
+    #[test]
+    fn ring_all_to_all_direction_invariant() {
+        // Reverse walks the ring the other way (different wire schedule)
+        // but must deliver bit-identical blocks: output is indexed by
+        // source position, not arrival order.
+        let run = |dir: RingDir| {
+            with_ring_dir(dir, || {
+                Cluster::new(4, NetConfig::default())
+                    .run(|ctx| {
+                        let group: Vec<usize> = (0..ctx.world).collect();
+                        let blocks: Vec<Matrix> = (0..ctx.world)
+                            .map(|j| {
+                                let mut m = Matrix::zeros(8, 3);
+                                for (i, v) in m.data.iter_mut().enumerate() {
+                                    *v = (ctx.rank * 1000 + j * 100 + i) as f32;
+                                }
+                                m
+                            })
+                            .collect();
+                        ring_all_to_all(ctx, &group, ctx.rank, blocks, 9)
+                    })
+                    .unwrap()
+            })
+        };
+        let (fwd, _) = run(RingDir::Forward);
+        let (rev, _) = run(RingDir::Reverse);
+        assert_eq!(fwd, rev);
+    }
+
+    #[test]
+    fn ring_dir_knob_chain_resolves() {
+        assert_eq!(ring_dir(), RingDir::Forward, "default forward");
+        with_ring_dir(RingDir::Reverse, || {
+            assert_eq!(ring_dir(), RingDir::Reverse);
+            with_ring_dir(RingDir::Forward, || assert_eq!(ring_dir(), RingDir::Forward));
+            assert_eq!(ring_dir(), RingDir::Reverse);
+        });
+        assert_eq!(ring_dir(), RingDir::Forward);
     }
 
     #[test]

@@ -323,6 +323,8 @@ impl Ctx {
         let chunk = net::chunk_rows();
         let budget = crate::storage::mem_budget();
         let page_rows = crate::storage::page_rows();
+        let ring_dir = collectives::ring_dir();
+        let plan = crate::runtime::autotune::current_plan();
         let mut sctx = ServerCtx {
             rank: self.rank,
             world: self.world,
@@ -337,8 +339,12 @@ impl Ctx {
         let (out, sctx) = std::thread::scope(|scope| {
             let handle = scope.spawn(move || {
                 net::with_chunk_rows(chunk, || {
-                    crate::storage::with_mem_budget(budget, || {
-                        crate::storage::with_page_rows(page_rows, || server(&mut sctx))
+                    collectives::with_ring_dir(ring_dir, || {
+                        crate::runtime::autotune::with_plan(plan, || {
+                            crate::storage::with_mem_budget(budget, || {
+                                crate::storage::with_page_rows(page_rows, || server(&mut sctx))
+                            })
+                        })
                     })
                 });
                 sctx
@@ -647,6 +653,8 @@ impl Cluster {
         let chunk = net::chunk_rows();
         let budget = crate::storage::mem_budget();
         let page_rows = crate::storage::page_rows();
+        let ring_dir = collectives::ring_dir();
+        let plan = crate::runtime::autotune::current_plan();
         let fault_spec = net::fault::capture();
         for rank in 0..world {
             let senders = senders.clone();
@@ -659,6 +667,7 @@ impl Cluster {
             let f = Arc::clone(&f);
             let cores = self.cores;
             let fault_spec = fault_spec.clone();
+            let plan = plan.clone();
             handles.push(std::thread::spawn(move || {
                 net::fault::install(fault_spec);
                 let mut ctx = Ctx {
@@ -680,9 +689,15 @@ impl Cluster {
                 };
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     net::with_chunk_rows(chunk, || {
-                        crate::storage::with_mem_budget(budget, || {
-                            crate::storage::with_page_rows(page_rows, || {
-                                crate::runtime::par::with_threads(rank_pool, || f(&mut ctx))
+                        collectives::with_ring_dir(ring_dir, || {
+                            crate::runtime::autotune::with_plan(plan, || {
+                                crate::storage::with_mem_budget(budget, || {
+                                    crate::storage::with_page_rows(page_rows, || {
+                                        crate::runtime::par::with_threads(rank_pool, || {
+                                            f(&mut ctx)
+                                        })
+                                    })
+                                })
                             })
                         })
                     })

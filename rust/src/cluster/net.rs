@@ -62,6 +62,28 @@ pub fn with_chunk_rows<T>(n: usize, f: impl FnOnce() -> T) -> T {
     out
 }
 
+/// RAII twin of [`with_chunk_rows`] for call sites that can't wrap a
+/// closure — the per-layer autotune overrides in the model forward loops
+/// pin the layer's chunk granularity for the rest of the loop body and
+/// restore the previous value on drop.
+pub struct ChunkRowsGuard {
+    prev: usize,
+}
+
+impl ChunkRowsGuard {
+    /// Pin this thread's chunk granularity to `n` rows until the guard
+    /// drops (`0` = monolithic).
+    pub fn pin(n: usize) -> ChunkRowsGuard {
+        ChunkRowsGuard { prev: LOCAL_CHUNK_ROWS.with(|c| c.replace(n)) }
+    }
+}
+
+impl Drop for ChunkRowsGuard {
+    fn drop(&mut self) {
+        LOCAL_CHUNK_ROWS.with(|c| c.set(self.prev));
+    }
+}
+
 fn env_chunk_default() -> usize {
     static ENV: OnceLock<usize> = OnceLock::new();
     *ENV.get_or_init(|| {
@@ -548,6 +570,21 @@ mod tests {
         });
         // outside any scope: global/env/default, all >= 0 by construction
         let _ = chunk_rows();
+    }
+
+    #[test]
+    fn chunk_rows_guard_pins_and_restores() {
+        with_chunk_rows(11, || {
+            {
+                let _g = ChunkRowsGuard::pin(3);
+                assert_eq!(chunk_rows(), 3);
+                let inner = ChunkRowsGuard::pin(0);
+                assert_eq!(chunk_rows(), 0);
+                drop(inner);
+                assert_eq!(chunk_rows(), 3);
+            }
+            assert_eq!(chunk_rows(), 11);
+        });
     }
 
     #[test]

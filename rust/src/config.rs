@@ -67,6 +67,14 @@ pub struct ExecCfg {
     /// Applied by the CLI via `runtime::par::set_threads`; results are
     /// bit-identical at every value.
     pub threads: usize,
+    /// Cost-model-driven runtime autotuning (`runtime::autotune`;
+    /// DESIGN.md §Autotuning): when on, the coordinator plans exec mode,
+    /// chunk granularity, ring direction, pool width, and page size per
+    /// layer from measured calibration constants instead of the fixed
+    /// knobs above. Applied by the CLI via `autotune::set_autotune`
+    /// (`--autotune`, or the `DEAL_AUTOTUNE` env for library/test use);
+    /// plans change simulated/wall time only, never output values.
+    pub autotune: bool,
     pub seed: u64,
 }
 
@@ -175,6 +183,7 @@ impl Default for DealConfig {
                 feature_prep: "fused".into(),
                 construction: "distributed".into(),
                 threads: 0,
+                autotune: false,
                 seed: 0xDEA1,
             },
             pipeline: PipelineCfg { chunk_rows: crate::cluster::net::DEFAULT_CHUNK_ROWS },
@@ -233,6 +242,16 @@ impl DealConfig {
             "exec.feature_prep" => self.exec.feature_prep = v.into(),
             "exec.construction" => self.exec.construction = v.into(),
             "exec.threads" => self.exec.threads = v.parse()?,
+            "exec.autotune" => {
+                self.exec.autotune = match v {
+                    "1" | "true" | "on" => true,
+                    "0" | "false" | "off" => false,
+                    other => anyhow::bail!(
+                        "exec.autotune must be one of 1/true/on/0/false/off, got '{}'",
+                        other
+                    ),
+                }
+            }
             "exec.seed" => self.exec.seed = v.parse()?,
             "pipeline.chunk_rows" => self.pipeline.chunk_rows = v.parse()?,
             "storage.budget_bytes" => self.storage.budget_bytes = crate::storage::parse_bytes(v)?,
@@ -382,6 +401,21 @@ mod tests {
         assert_eq!(cfg.traffic.rate, 2500.0);
         assert_eq!(cfg.traffic.policy, "deadline:500");
         assert!(cfg.set("traffic.burst", "fast").is_err());
+    }
+
+    #[test]
+    fn autotune_key_parses() {
+        let mut cfg = DealConfig::default();
+        assert!(!cfg.exec.autotune, "default off");
+        for on in ["1", "true", "on"] {
+            cfg.set("exec.autotune", on).unwrap();
+            assert!(cfg.exec.autotune, "'{}' enables", on);
+        }
+        for off in ["0", "false", "off"] {
+            cfg.set("exec.autotune", off).unwrap();
+            assert!(!cfg.exec.autotune, "'{}' disables", off);
+        }
+        assert!(cfg.set("exec.autotune", "maybe").is_err());
     }
 
     #[test]

@@ -68,6 +68,10 @@ pub struct RunReport {
     pub embeddings: Option<Matrix>,
     /// Peak tracked memory across machines (bytes).
     pub max_peak_mem: u64,
+    /// The autotune plan the inference stage ran under (`None` when
+    /// autotuning was off). Choices are schedule-only: a tuned run's
+    /// `embeddings` are bit-identical to any fixed configuration's.
+    pub autotune: Option<std::sync::Arc<crate::runtime::autotune::Plan>>,
 }
 
 impl RunReport {
@@ -257,6 +261,22 @@ impl Pipeline {
         let mode = self.cfg.exec_mode()?;
         let opts = ExecOpts { mode, group_cols: self.cfg.exec.group_cols, phase: 0x1000 };
 
+        // Cost-model-driven autotuning (DESIGN.md §Autotuning): calibrate
+        // (or load the cached sidecar), price this run's shape, and install
+        // the chosen variants around the inference launch. Choices are
+        // schedule-only — embeddings stay bit-identical to every fixed
+        // configuration, which tests/autotune.rs proves exhaustively.
+        let tuned = if self.cfg.exec.autotune || crate::runtime::autotune::enabled() {
+            use crate::runtime::autotune;
+            let (calib, _source) =
+                autotune::Calibration::load_or_measure(&autotune::sidecar_path(), seed);
+            let shape =
+                autotune::ShapeInfo::for_run(&self.cfg, ds.edges.n_nodes, ds.edges.n_edges(), dim)?;
+            Some(Arc::new(autotune::Planner::new(calib).plan(&shape)))
+        } else {
+            None
+        };
+
         // fused is a GCN-shaped optimization; GAT falls back to
         // redistribute (documented in DESIGN.md).
         let effective = if strategy == FeaturePrep::Fused && kind == ModelKind::Gat {
@@ -273,8 +293,9 @@ impl Pipeline {
         let fs2 = Arc::clone(&fs);
         let backend2 = Arc::clone(&backend);
         let cluster = Cluster::new(world, net).with_cores(self.cfg.cluster.cores);
+        let tuned_for_launch = tuned.clone();
         let (res, wall) = time_once(move || {
-            cluster.run(move |ctx| -> Result<Matrix> {
+            let launch = move || cluster.run(move |ctx| -> Result<Matrix> {
                 let (p_idx, _) = plan_arc.coords_of(ctx.rank);
                 let parts = &parts_arc[p_idx];
                 match effective {
@@ -327,7 +348,11 @@ impl Pipeline {
                         }
                     }
                 }
-            })
+            });
+            match &tuned_for_launch {
+                Some(plan) => plan.apply(launch),
+                None => launch(),
+            }
         });
         let (tiles, infer_rep) = res?;
         let tiles: Vec<Matrix> = tiles.into_iter().collect::<Result<_>>()?;
@@ -344,7 +369,7 @@ impl Pipeline {
         } else {
             None
         };
-        Ok(RunReport { stages, plan, embeddings, max_peak_mem: max_peak })
+        Ok(RunReport { stages, plan, embeddings, max_peak_mem: max_peak, autotune: tuned })
     }
 
     /// Rebuild the serving state from a durable store instead of
@@ -399,6 +424,7 @@ impl Pipeline {
             plan,
             embeddings: Some(table),
             max_peak_mem: 0,
+            autotune: None,
         };
         Ok((report, store, rec))
     }

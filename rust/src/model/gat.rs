@@ -70,6 +70,14 @@ pub fn gat_forward(
     let n_layers = weights.config.layers;
     for (l, part) in parts.iter().enumerate() {
         let phase = opts.phase + (l as u32) * 0x10;
+        // Per-layer autotune override (DESIGN.md §Autotuning): an
+        // installed plan's choice replaces the fixed `ExecOpts` mode/tile
+        // and pins the layer's chunk granularity. Schedule-only — every
+        // variant is bit-identical.
+        let choice = crate::runtime::autotune::layer_choice(l);
+        let _chunk_guard = choice.map(|c| crate::cluster::net::ChunkRowsGuard::pin(c.chunk_rows));
+        let (mode, group_cols) =
+            choice.map_or((opts.mode, opts.group_cols), |c| (c.mode, c.group_cols));
         // 1. Projection Z = H W.
         let z = deal_gemm(ctx, plan, &h, weights.layer_w(l), backend, phase)?;
         ctx.mem.free(h.nbytes());
@@ -119,7 +127,7 @@ pub fn gat_forward(
                     },
                     h: &z,
                 };
-                agg = deal_spmm(ctx, &input, backend, opts.mode, opts.group_cols, phase + 4);
+                agg = deal_spmm(ctx, &input, backend, mode, group_cols, phase + 4);
                 ctx.compute(|| {
                     for r in 0..agg.rows {
                         epilogue(r, z.row(r), agg.row_mut(r));
@@ -146,7 +154,7 @@ pub fn gat_forward(
                     h: &pz,
                     cache: &scope.cache,
                 };
-                agg = deal_spmm_paged(ctx, &input, backend, opts.mode, opts.group_cols, phase + 4)?;
+                agg = deal_spmm_paged(ctx, &input, backend, mode, group_cols, phase + 4)?;
                 let mut io_total = 0.0f64;
                 let mut r0 = 0usize;
                 while r0 < agg.rows {

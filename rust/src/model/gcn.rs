@@ -87,6 +87,17 @@ pub fn gcn_forward(
     assert_eq!(parts.len(), n_layers);
     for (l, part) in parts.iter().enumerate() {
         let phase = opts.phase + (l as u32) * 0x10;
+        // Per-layer autotune override (DESIGN.md §Autotuning): when a plan
+        // is installed, its choice for this layer replaces the fixed
+        // `ExecOpts` mode/tile and pins the chunk granularity for the
+        // layer's transfers. All variants are bit-identical — only the
+        // simulated schedule changes. (On the fused path the rest-layers
+        // re-index from 0; all layers share dims, so the clamped lookup
+        // stays representative.)
+        let choice = crate::runtime::autotune::layer_choice(l);
+        let _chunk_guard = choice.map(|c| crate::cluster::net::ChunkRowsGuard::pin(c.chunk_rows));
+        let (mode, group_cols) =
+            choice.map_or((opts.mode, opts.group_cols), |c| (c.mode, c.group_cols));
         // Projection: H W_l (distributed ring GEMM).
         let hw = deal_gemm(ctx, plan, &h, weights.layer_w(l), backend, phase)?;
         ctx.mem.free(h.nbytes());
@@ -116,7 +127,7 @@ pub fn gcn_forward(
                     vals: EdgeValues::Scalar(&part.mean_w),
                     h: &hw,
                 };
-                agg = deal_spmm(ctx, &input, backend, opts.mode, opts.group_cols, phase + 1);
+                agg = deal_spmm(ctx, &input, backend, mode, group_cols, phase + 1);
                 // …plus the self-loop term (always local) and fused bias + act.
                 ctx.compute(|| {
                     for r in 0..agg.rows {
@@ -138,7 +149,7 @@ pub fn gcn_forward(
                     h: &pm,
                     cache: &scope.cache,
                 };
-                agg = deal_spmm_paged(ctx, &input, backend, opts.mode, opts.group_cols, phase + 1)?;
+                agg = deal_spmm_paged(ctx, &input, backend, mode, group_cols, phase + 1)?;
                 // Self-loop + bias + act from faulted bands: same rows,
                 // same arithmetic order → bit-identical.
                 let mut io_total = 0.0f64;

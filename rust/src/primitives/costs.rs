@@ -147,7 +147,9 @@ pub fn chunking_overhead_secs(latency_secs: f64, k: u64) -> f64 {
 /// `pipeline_overlap` bench sweeps around it.
 pub fn optimal_chunks(comm: f64, compute: f64, latency_secs: f64) -> u64 {
     let overlap = comm.min(compute);
-    if overlap <= 0.0 {
+    // NaN must land in the degenerate branch too: `NaN <= 0.0` is false,
+    // and `NaN as u64` is 0 — an invalid chunk count.
+    if overlap.is_nan() || overlap <= 0.0 {
         return 1;
     }
     (overlap / latency_secs.max(1e-9)).sqrt().round().max(1.0) as u64
@@ -232,6 +234,50 @@ mod tests {
         let kstar = optimal_chunks(c, x, lat);
         assert!(total(kstar) < total(1));
         assert!(total(kstar) < total(10_000));
+    }
+
+    #[test]
+    fn optimal_chunks_edge_cases_never_return_zero() {
+        // comm ≈ 0: nothing to overlap → monolithic
+        assert_eq!(optimal_chunks(0.0, 1.0, 100e-6), 1);
+        assert_eq!(optimal_chunks(f64::MIN_POSITIVE, 1.0, 100e-6), 1);
+        // compute ≈ 0: likewise
+        assert_eq!(optimal_chunks(1.0, 0.0, 100e-6), 1);
+        assert_eq!(optimal_chunks(1.0, -1.0, 100e-6), 1);
+        // latency ≈ 0: clamped to 1 ns, finite and ≥ 1 — no div-by-zero
+        let k = optimal_chunks(1.0, 1.0, 0.0);
+        assert!(k >= 1);
+        assert_eq!(k, (1.0f64 / 1e-9).sqrt().round() as u64);
+        // NaN inputs (a cost model fed garbage) degrade to monolithic,
+        // not to the invalid chunk count 0 that `NaN as u64` produces
+        assert_eq!(optimal_chunks(f64::NAN, 1.0, 100e-6), 1);
+        assert_eq!(optimal_chunks(1.0, f64::NAN, 100e-6), 1);
+        assert_eq!(optimal_chunks(f64::NAN, f64::NAN, 0.0), 1);
+        // and the result is always at least 1 across a broad sweep
+        for &c in &[0.0, 1e-12, 1e-6, 1.0, 1e3] {
+            for &x in &[0.0, 1e-12, 1e-6, 1.0, 1e3] {
+                for &l in &[0.0, 1e-9, 1e-6, 1e-3] {
+                    assert!(optimal_chunks(c, x, l) >= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunking_overhead_zero_chunks_saturates() {
+        // k = 0 is a degenerate caller value: saturating_sub keeps the
+        // overhead at zero instead of underflowing to u64::MAX latencies.
+        assert_eq!(chunking_overhead_secs(100e-6, 0), 0.0);
+        assert_eq!(chunking_overhead_secs(0.0, 0), 0.0);
+    }
+
+    #[test]
+    fn intra_rank_compute_fractional_cores_clamp() {
+        // cores < 1 (bad config) clamps to one core, never divides by a
+        // fraction (which would *inflate* simulated time) or by zero
+        assert_eq!(intra_rank_compute_secs(2.0, 0, 0.5), 2.0);
+        assert_eq!(intra_rank_compute_secs(2.0, 0, -4.0), 2.0);
+        assert!(intra_rank_compute_secs(2.0, 0, 0.0).is_finite());
     }
 
     #[test]

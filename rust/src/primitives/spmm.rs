@@ -14,8 +14,18 @@
 //! - `Grouped` (Fig. 12a): non-zeros split into column groups; ids for
 //!   group g+1 go out right before features for g are consumed — partial
 //!   overlap, bounded memory, but an ids→features serialization bubble.
-//! - `Pipelined` (Fig. 12b+c): ids run two groups ahead and the local
-//!   (no-communication) group is computed first to cover the pipe fill.
+//! - `Pipelined` (Fig. 12b+c): ids run two groups ahead so the pipe
+//!   stays full behind the local compute.
+//!
+//! All three production modes accumulate in one **canonical order** —
+//! local groups first, then remote groups in group-sequence order (the
+//! order [`build_groups`] emits, local partition leading). Since float
+//! accumulation is order-sensitive, sharing the order is what makes the
+//! mode choice value-invariant: the runtime autotuner may switch modes
+//! per layer and the outputs stay bit-identical. The modes differ only
+//! in *scheduling* — when ids go out and responses are consumed.
+//! `Naive` (per-edge groups in raw partition order) sits outside this
+//! family and is never selected by the autotuner.
 //!
 //! Orthogonally to the mode, feature responses stream as row-band
 //! **chunks** (`pipeline.chunk_rows`; paper §4): grouped/pipelined
@@ -284,10 +294,10 @@ pub fn deal_spmm(
                     ctx, plan, m_idx, &groups, h, row_lo, &mut out, &acc, phase, None,
                 ),
                 ExecMode::Grouped => run_grouped(
-                    ctx, plan, m_idx, &groups, h, row_lo, &mut out, &acc, phase, 1, false, None,
+                    ctx, plan, m_idx, &groups, h, row_lo, &mut out, &acc, phase, 1, None,
                 ),
                 ExecMode::Pipelined => run_grouped(
-                    ctx, plan, m_idx, &groups, h, row_lo, &mut out, &acc, phase, 2, true, None,
+                    ctx, plan, m_idx, &groups, h, row_lo, &mut out, &acc, phase, 2, None,
                 ),
             }
             out
@@ -437,11 +447,11 @@ pub fn deal_spmm_paged(
                     Some(&paged_local),
                 ),
                 ExecMode::Grouped => run_grouped(
-                    ctx, plan, m_idx, &groups, &empty, row_lo, &mut out, &acc, phase, 1, false,
+                    ctx, plan, m_idx, &groups, &empty, row_lo, &mut out, &acc, phase, 1,
                     Some(&paged_local),
                 ),
                 ExecMode::Pipelined => run_grouped(
-                    ctx, plan, m_idx, &groups, &empty, row_lo, &mut out, &acc, phase, 2, true,
+                    ctx, plan, m_idx, &groups, &empty, row_lo, &mut out, &acc, phase, 2,
                     Some(&paged_local),
                 ),
             }
@@ -530,9 +540,12 @@ fn run_monolithic(
     ctx.mem.free(held_bytes);
 }
 
-/// Grouped / pipelined: `lookahead` groups of ids in flight; optionally
-/// compute the local group first (Fig. 12c). `paged_local` as in
-/// [`run_monolithic`].
+/// Grouped / pipelined: `lookahead` groups of ids in flight; the local
+/// (no-communication) groups are always computed first so they cover
+/// the pipe-fill time (Fig. 12c) *and* so every mode shares the
+/// canonical accumulation order (see the module doc — this is what
+/// keeps the autotuner's per-layer mode choice value-invariant).
+/// `paged_local` as in [`run_monolithic`].
 #[allow(clippy::too_many_arguments)]
 fn run_grouped(
     ctx: &mut Ctx,
@@ -545,7 +558,6 @@ fn run_grouped(
     acc: &Accum,
     phase: u32,
     lookahead: usize,
-    local_first: bool,
     paged_local: Option<&PagedLocal>,
 ) {
     // Split group indices into local and remote, preserving order.
@@ -574,11 +586,10 @@ fn run_grouped(
         }
     };
 
-    if local_first {
-        // Fig. 12(c): the no-communication group covers the fill time.
-        for &gi in &local_idx {
-            run_local(ctx, out, gi);
-        }
+    // Fig. 12(c): the no-communication groups cover the fill time, and
+    // running them first matches the canonical accumulation order.
+    for &gi in &local_idx {
+        run_local(ctx, out, gi);
     }
     for (pos, &gi) in remote_idx.iter().enumerate() {
         if pos + lookahead < remote_idx.len() {
@@ -591,12 +602,6 @@ fn run_grouped(
         // (§4 chunk-level overlap; order-preserving, so bit-identical to
         // the monolithic receive — see `Accum::consume_stream`).
         acc.consume_stream(ctx, server, Tag::of(phase, gi as u32 | RESP_BIT), g, h, row_lo, out);
-    }
-    if !local_first {
-        // Fig. 12(a): local group last (as drawn: group 6 at the end).
-        for &gi in &local_idx {
-            run_local(ctx, out, gi);
-        }
     }
 }
 
@@ -1158,6 +1163,23 @@ mod tests {
                 run_spmm(&plan, &g, &vals, &h, algo).0
             });
             assert_eq!(got, base, "chunk_rows={}", chunk);
+        }
+    }
+
+    /// The canonical accumulation order (module doc): Monolithic,
+    /// Grouped, and Pipelined must produce bit-identical outputs at any
+    /// group size, so the autotuner's per-layer mode choice never
+    /// changes values. (`Naive` is outside the family by design.)
+    #[test]
+    fn production_modes_bit_identical() {
+        let (g, vals, h) = setup(128, 16, 8, 33);
+        let plan = PartitionPlan::new(g.n_rows, h.cols, 2, 2);
+        let base = run_spmm(&plan, &g, &vals, &h, Algo::Deal(ExecMode::Monolithic, 0)).0;
+        for mode in [ExecMode::Grouped, ExecMode::Pipelined] {
+            for maxc in [0usize, 8, 64] {
+                let got = run_spmm(&plan, &g, &vals, &h, Algo::Deal(mode, maxc)).0;
+                assert_eq!(got, base, "mode={:?} group_cols={}", mode, maxc);
+            }
         }
     }
 

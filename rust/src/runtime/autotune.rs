@@ -1,0 +1,844 @@
+//! Cost-model-driven runtime autotuner (ROADMAP item 1; DESIGN.md
+//! §Autotuning).
+//!
+//! The repo carries closed-form cost models (`primitives::costs`) and a
+//! pile of per-knob execution variants — grouped vs pipelined SPMM, ring
+//! direction, chunk size, page size, paged vs resident tiers — that
+//! historically nothing chose between at runtime: every run used the
+//! hardcoded defaults in `costs.rs` and `net.rs`. This module closes the
+//! loop:
+//!
+//! 1. **[`Calibration`]** replaces the hardcoded constants with *measured*
+//!    ones: a short seeded micro-calibration pass times a dense GEMM tile,
+//!    a sparse aggregation tile, a staging memcpy, and a fork/join round
+//!    trip on the host, yielding throughputs the planner's cost formulas
+//!    consume. The result persists to a **versioned, checksummed JSON
+//!    sidecar** (no serde offline — the format is hand-rolled like the WAL
+//!    and trace artifacts) so repeat runs skip re-measurement; corrupt,
+//!    truncated, or version-mismatched sidecars are rejected with a clear
+//!    error and fall back to a fresh pass.
+//! 2. **[`Planner`]** evaluates the closed forms of `primitives::costs`
+//!    under the measured constants for a concrete run shape
+//!    ([`ShapeInfo`]) and picks, per layer and per partition, among the
+//!    execution variants: `ExecMode::Grouped` vs `Pipelined`, the ring
+//!    direction of `cluster::collectives`, `chunk_rows` via
+//!    `costs::optimal_chunks`, the SpMM column-group tile size, the
+//!    intra-rank pool width, and the paged-vs-resident storage tier.
+//! 3. **[`Plan::apply`]** installs the choices through the *existing* knob
+//!    chains (`net::chunk_rows`, `par::num_threads`, `storage::page_rows`,
+//!    `collectives::ring_dir`) plus a thread-local current-plan slot that
+//!    `Cluster::run` and `Ctx::with_server` capture into every simulated
+//!    machine, where the model forward loops consult
+//!    [`layer_choice`] for their per-layer overrides.
+//!
+//! **Determinism contract (non-negotiable):** every variant the planner
+//! chooses among is schedule-only — chunk size, ring direction, thread
+//! count, page size, and exec mode are all proven bit-identical by the
+//! sweep suites — so planner choices may change simulated and wall time,
+//! never output values. `tests/autotune.rs` re-proves this against an
+//! exhaustive fixed-configuration oracle, and `benches/autotune_planner.rs`
+//! hard-asserts bit-identity to the fixed-default plan.
+
+use std::cell::{Cell, RefCell};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use crate::cluster::collectives::RingDir;
+use crate::cluster::NetConfig;
+use crate::primitives::{costs, ExecMode};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+use crate::Result;
+
+// ------------------------------------------------------------ enable knob
+
+/// Sentinel states for the tri-state enable chain (`0` off, `1` on,
+/// `2` unset — `bool` can't carry "no override").
+const TUNE_UNSET: u8 = 2;
+
+/// Process-global autotune override; `TUNE_UNSET` means "not set".
+static GLOBAL_AUTOTUNE: AtomicU8 = AtomicU8::new(TUNE_UNSET);
+
+thread_local! {
+    /// Thread-local autotune override (`TUNE_UNSET` = no override).
+    static LOCAL_AUTOTUNE: Cell<u8> = const { Cell::new(TUNE_UNSET) };
+
+    /// The plan installed for the current scope (captured into rank and
+    /// server threads by `Cluster::run` / `Ctx::with_server`).
+    static LOCAL_PLAN: RefCell<Option<Arc<Plan>>> = const { RefCell::new(None) };
+}
+
+/// Set the process-global autotune switch. Wired to
+/// `DealConfig.exec.autotune` and the `--autotune` CLI flag.
+pub fn set_autotune(on: bool) {
+    GLOBAL_AUTOTUNE.store(u8::from(on), Ordering::Relaxed);
+}
+
+/// Reset the process-global switch to auto (`DEAL_AUTOTUNE` env, else off).
+pub fn clear_autotune() {
+    GLOBAL_AUTOTUNE.store(TUNE_UNSET, Ordering::Relaxed);
+}
+
+/// Run `f` with autotuning pinned on/off on this thread.
+pub fn with_autotune<T>(on: bool, f: impl FnOnce() -> T) -> T {
+    let prev = LOCAL_AUTOTUNE.with(|c| c.replace(u8::from(on)));
+    let out = f();
+    LOCAL_AUTOTUNE.with(|c| c.set(prev));
+    out
+}
+
+fn env_autotune_default() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("DEAL_AUTOTUNE").map_or(false, |v| v != "0" && !v.is_empty())
+    })
+}
+
+/// Effective autotune switch for this thread: [`with_autotune`] scope →
+/// [`set_autotune`] global (config/CLI) → `DEAL_AUTOTUNE` env → off.
+pub fn enabled() -> bool {
+    let local = LOCAL_AUTOTUNE.with(|c| c.get());
+    if local != TUNE_UNSET {
+        return local == 1;
+    }
+    let global = GLOBAL_AUTOTUNE.load(Ordering::Relaxed);
+    if global != TUNE_UNSET {
+        return global == 1;
+    }
+    env_autotune_default()
+}
+
+// ---------------------------------------------------------- current plan
+
+/// The plan currently installed on this thread, if any.
+pub fn current_plan() -> Option<Arc<Plan>> {
+    LOCAL_PLAN.with(|p| p.borrow().clone())
+}
+
+/// Run `f` with `plan` installed as this thread's current plan (`None`
+/// clears it). `Cluster::run` and `Ctx::with_server` capture the caller's
+/// current plan, so one [`Plan::apply`] reaches every simulated machine.
+pub fn with_plan<T>(plan: Option<Arc<Plan>>, f: impl FnOnce() -> T) -> T {
+    let prev = LOCAL_PLAN.with(|p| p.replace(plan));
+    let out = f();
+    LOCAL_PLAN.with(|p| p.replace(prev));
+    out
+}
+
+/// The current plan's choice for layer `l` (clamped to the last planned
+/// layer, so shifted-weight continuations like `gcn_rest` stay covered).
+/// `None` when no plan is installed — callers fall back to their
+/// `ExecOpts` / ambient knobs.
+pub fn layer_choice(l: usize) -> Option<LayerChoice> {
+    LOCAL_PLAN.with(|p| {
+        p.borrow().as_ref().and_then(|plan| {
+            if plan.layers.is_empty() {
+                return None;
+            }
+            Some(plan.layers[l.min(plan.layers.len() - 1)])
+        })
+    })
+}
+
+// ------------------------------------------------------------ calibration
+
+/// Sidecar format version; bumped on any field or encoding change.
+pub const CALIBRATION_VERSION: u32 = 1;
+
+const CALIBRATION_FORMAT: &str = "deal-autotune-calibration";
+
+/// Measured host constants the planner's cost formulas consume, replacing
+/// the hardcoded defaults in `primitives::costs` / `cluster::net`. All
+/// rates are single-thread (the capacity divisor is applied separately,
+/// exactly as the simulator does).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Calibration {
+    /// Seed of the micro-calibration workload that produced these numbers.
+    pub seed: u64,
+    /// Dense projection throughput: f32 multiply-adds per second.
+    pub gemm_macs_per_sec: f64,
+    /// Sparse aggregation throughput: edge×column multiply-adds per second.
+    pub spmm_macs_per_sec: f64,
+    /// Row-band staging copy throughput, bytes per second.
+    pub copy_bytes_per_sec: f64,
+    /// Measured fork + scoped-join cost per spawned pool worker (the
+    /// measured twin of `costs::FORK_JOIN_OVERHEAD_SECS`).
+    pub fork_join_secs: f64,
+}
+
+impl Calibration {
+    /// Deterministic assumed constants (no measurement): the hardcoded
+    /// model the planner falls back to, and the fixture for tests that
+    /// must not depend on host speed.
+    pub fn assumed(seed: u64) -> Calibration {
+        Calibration {
+            seed,
+            gemm_macs_per_sec: 2.0e9,
+            spmm_macs_per_sec: 5.0e8,
+            copy_bytes_per_sec: 8.0e9,
+            fork_join_secs: costs::FORK_JOIN_OVERHEAD_SECS,
+        }
+    }
+
+    /// Short seeded micro-calibration pass (~tens of milliseconds): times
+    /// a dense GEMM tile, a sparse aggregation tile, a staging memcpy, and
+    /// a fork/join round trip, taking the best of a few reps to shed
+    /// scheduler noise. The measured values are wall-clock facts about the
+    /// host — they steer *predictions* only, never results.
+    pub fn measure(seed: u64) -> Calibration {
+        let mut rng = Rng::new(seed ^ 0xCA11_B8A7E);
+        let best = |reps: usize, mut f: Box<dyn FnMut()>| -> f64 {
+            f(); // warmup
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                f();
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            best.max(1e-9)
+        };
+
+        // Dense tile: 96×96 by 96×96 → 96³ MACs per run.
+        let a = Matrix::random(96, 96, 1.0, &mut rng);
+        let b = Matrix::random(96, 96, 1.0, &mut rng);
+        let gemm_secs = best(
+            3,
+            Box::new(move || {
+                std::hint::black_box(crate::tensor::matmul(&a, &b));
+            }),
+        );
+        let gemm_macs_per_sec = (96.0f64.powi(3) / gemm_secs).max(1e6);
+
+        // Sparse tile: 8192 seeded edges into 1024 segments at 32 cols →
+        // 8192 × 32 MACs per run.
+        let (n_seg, n_edges, cols) = (1024usize, 8192usize, 32usize);
+        let feats = Matrix::random(n_edges, cols, 1.0, &mut rng);
+        let w: Vec<f32> = (0..n_edges).map(|_| rng.next_f32()).collect();
+        let seg: Vec<u32> = (0..n_edges).map(|_| rng.next_below(n_seg) as u32).collect();
+        let spmm_secs = best(
+            3,
+            Box::new(move || {
+                let seg_usize: Vec<usize> = seg.iter().map(|&s| s as usize).collect();
+                std::hint::black_box(crate::tensor::segment_sum_scaled(
+                    &feats, &w, &seg_usize, n_seg,
+                ));
+            }),
+        );
+        let spmm_macs_per_sec = ((n_edges * cols) as f64 / spmm_secs).max(1e6);
+
+        // Staging copy: 4 MiB buffer.
+        let src = vec![1u8; 4 << 20];
+        let copy_secs = best(
+            3,
+            Box::new(move || {
+                std::hint::black_box(src.clone());
+            }),
+        );
+        let copy_bytes_per_sec = ((4 << 20) as f64 / copy_secs).max(1e6);
+
+        // Fork/join: spawn 2 trivial pool workers, charge half the round
+        // trip to each fork.
+        let fork_secs = best(
+            5,
+            Box::new(|| {
+                std::hint::black_box(crate::runtime::par::map_indexed(2, |i| i));
+            }),
+        );
+        let fork_join_secs = (fork_secs / 2.0).clamp(1e-7, 1e-3);
+
+        Calibration {
+            seed,
+            gemm_macs_per_sec,
+            spmm_macs_per_sec,
+            copy_bytes_per_sec,
+            fork_join_secs,
+        }
+    }
+
+    /// Canonical JSON payload (everything but the checksum line). Floats
+    /// print via `Display`, which emits the shortest exactly-round-tripping
+    /// decimal — so save → load → save is byte-identical.
+    fn payload_json(&self) -> String {
+        format!(
+            "{{\n  \"format\": \"{}\",\n  \"version\": {},\n  \"seed\": {},\n  \
+             \"gemm_macs_per_sec\": {},\n  \"spmm_macs_per_sec\": {},\n  \
+             \"copy_bytes_per_sec\": {},\n  \"fork_join_secs\": {},",
+            CALIBRATION_FORMAT,
+            CALIBRATION_VERSION,
+            self.seed,
+            self.gemm_macs_per_sec,
+            self.spmm_macs_per_sec,
+            self.copy_bytes_per_sec,
+            self.fork_join_secs,
+        )
+    }
+
+    /// Serialize to the versioned, checksummed sidecar JSON.
+    pub fn to_json(&self) -> String {
+        let payload = self.payload_json();
+        format!(
+            "{}\n  \"checksum\": \"fnv1a:{:016x}\"\n}}\n",
+            payload,
+            fnv1a(payload.as_bytes())
+        )
+    }
+
+    /// Parse and verify a sidecar produced by [`to_json`]. Rejects
+    /// truncated files, unknown formats, version mismatches, and checksum
+    /// failures with errors naming the cause.
+    pub fn from_json(text: &str) -> Result<Calibration> {
+        let mut fields = std::collections::BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim().trim_end_matches(',');
+            let Some((k, v)) = line.split_once(':') else { continue };
+            let key = k.trim().trim_matches('"');
+            // `fnv1a:<hex>` values contain a colon: re-join the remainder.
+            let val = line[line.find(':').unwrap() + 1..].trim().trim_matches('"');
+            let _ = v;
+            fields.insert(key.to_string(), val.to_string());
+        }
+        let get = |k: &str| -> Result<&String> {
+            fields
+                .get(k)
+                .ok_or_else(|| anyhow::anyhow!("calibration sidecar truncated: missing '{}'", k))
+        };
+        let format = get("format")?;
+        anyhow::ensure!(
+            format == CALIBRATION_FORMAT,
+            "not a calibration sidecar (format '{}')",
+            format
+        );
+        let version: u32 = get("version")?
+            .parse()
+            .map_err(|_| anyhow::anyhow!("calibration sidecar has a non-numeric version"))?;
+        anyhow::ensure!(
+            version == CALIBRATION_VERSION,
+            "calibration sidecar version {} does not match expected version {}",
+            version,
+            CALIBRATION_VERSION
+        );
+        let num = |k: &str| -> Result<f64> {
+            get(k)?
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("calibration sidecar field '{}' is corrupt", k))
+        };
+        let calib = Calibration {
+            seed: get("seed")?
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("calibration sidecar field 'seed' is corrupt"))?,
+            gemm_macs_per_sec: num("gemm_macs_per_sec")?,
+            spmm_macs_per_sec: num("spmm_macs_per_sec")?,
+            copy_bytes_per_sec: num("copy_bytes_per_sec")?,
+            fork_join_secs: num("fork_join_secs")?,
+        };
+        for (k, v) in [
+            ("gemm_macs_per_sec", calib.gemm_macs_per_sec),
+            ("spmm_macs_per_sec", calib.spmm_macs_per_sec),
+            ("copy_bytes_per_sec", calib.copy_bytes_per_sec),
+            ("fork_join_secs", calib.fork_join_secs),
+        ] {
+            anyhow::ensure!(
+                v.is_finite() && v > 0.0,
+                "calibration sidecar field '{}' is corrupt (non-positive or non-finite)",
+                k
+            );
+        }
+        let stored = get("checksum")?;
+        let expect = format!("fnv1a:{:016x}", fnv1a(calib.payload_json().as_bytes()));
+        anyhow::ensure!(
+            *stored == expect,
+            "calibration sidecar checksum mismatch (stored {}, computed {})",
+            stored,
+            expect
+        );
+        Ok(calib)
+    }
+
+    /// Persist to `path` (atomic: temp file + rename, so concurrent
+    /// readers never see a torn sidecar).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        // Unique per process *and* per call: parallel test threads may
+        // save the same sidecar concurrently.
+        static SAVE_SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SAVE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let tmp = path.with_extension(format!("tmp.{}.{}", std::process::id(), n));
+        std::fs::write(&tmp, self.to_json())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load and verify the sidecar at `path`.
+    pub fn load(path: &Path) -> Result<Calibration> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read calibration sidecar {:?}: {}", path, e))?;
+        Self::from_json(&text)
+    }
+
+    /// Load the sidecar if it is valid and was measured for `seed`;
+    /// otherwise run a fresh micro-calibration and (best-effort) persist
+    /// it. Returns the calibration and where it came from — repeat runs
+    /// with an intact sidecar skip the measurement pass entirely.
+    pub fn load_or_measure(path: &Path, seed: u64) -> (Calibration, CalibrationSource) {
+        match Self::load(path) {
+            Ok(c) if c.seed == seed => (c, CalibrationSource::Loaded),
+            Ok(_) | Err(_) => {
+                let c = Self::measure(seed);
+                let _ = c.save(path);
+                (c, CalibrationSource::Measured)
+            }
+        }
+    }
+}
+
+/// Whether a calibration came from the sidecar or a fresh pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CalibrationSource {
+    Loaded,
+    Measured,
+}
+
+/// Default sidecar location: `DEAL_AUTOTUNE_CACHE` env, else
+/// `target/autotune/calibration.json` (alongside the bench artifacts).
+pub fn sidecar_path() -> PathBuf {
+    static ENV: OnceLock<PathBuf> = OnceLock::new();
+    ENV.get_or_init(|| {
+        std::env::var("DEAL_AUTOTUNE_CACHE")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("target/autotune/calibration.json"))
+    })
+    .clone()
+}
+
+/// FNV-1a 64-bit (the same checksum family as the WAL and trace formats).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ----------------------------------------------------------------- shapes
+
+/// The run shape the planner prices: graph size, partition grid, model
+/// depth, sampled density, and the simulated machine parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ShapeInfo {
+    /// Node count `N`.
+    pub n: usize,
+    /// Feature (= hidden) dimension `D`.
+    pub d: usize,
+    /// Graph (row) partitions `P`.
+    pub p: usize,
+    /// Feature (column) partitions `M`.
+    pub m: usize,
+    /// Model layers.
+    pub layers: usize,
+    /// Expected non-zeros per sampled-graph column (≈ min(fanout, degree)).
+    pub z: f64,
+    /// Cores per simulated machine (the compute-capacity divisor).
+    pub cores: f64,
+    /// The simulated network.
+    pub net: NetConfig,
+    /// Active storage budget (`0` = unbounded → resident tiers).
+    pub budget_bytes: u64,
+}
+
+impl ShapeInfo {
+    /// Shape for a configured pipeline run over a graph with `n` nodes,
+    /// `n_edges` edges, and feature dimension `d`.
+    pub fn for_run(
+        cfg: &crate::config::DealConfig,
+        n: usize,
+        n_edges: usize,
+        d: usize,
+    ) -> Result<ShapeInfo> {
+        let (p, m) = cfg.parts()?;
+        let avg_deg = n_edges as f64 / (n as f64).max(1.0);
+        let z = if cfg.model.fanout == 0 {
+            avg_deg
+        } else {
+            avg_deg.min(cfg.model.fanout as f64)
+        };
+        Ok(ShapeInfo {
+            n,
+            d,
+            p,
+            m,
+            layers: cfg.model.layers,
+            z: z.max(1.0),
+            cores: cfg.cluster.cores,
+            net: cfg.net(),
+            budget_bytes: crate::storage::mem_budget(),
+        })
+    }
+}
+
+// ------------------------------------------------------------------ plans
+
+/// The planner's per-layer pick among the execution variants.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerChoice {
+    /// Grouped (lookahead-1) vs pipelined (lookahead-2, local-first) SPMM.
+    pub mode: ExecMode,
+    /// Pipelined-transfer granularity for this layer's exchanges
+    /// (`0` = monolithic).
+    pub chunk_rows: usize,
+    /// SpMM column-group tile size (§3.5's `group_cols`).
+    pub group_cols: usize,
+    /// The cost model's predicted simulated seconds for this layer.
+    pub predicted_secs: f64,
+}
+
+/// Per-partition cost breakdown (the planner prices each row partition
+/// separately — uneven splits bottleneck on the largest one).
+#[derive(Clone, Copy, Debug)]
+pub struct PartitionEstimate {
+    /// Rows owned by this partition.
+    pub rows: usize,
+    /// Predicted per-layer wire seconds for one machine of this partition.
+    pub comm_secs: f64,
+    /// Predicted per-layer simulated compute seconds.
+    pub compute_secs: f64,
+}
+
+/// A complete plan: run-level knob settings plus per-layer choices. All
+/// choices are schedule-only; applying a plan can never change output
+/// values (DESIGN.md §Autotuning).
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// Ring all-to-all direction (cost-symmetric under the fully-connected
+    /// link model; pinned Forward for schedule determinism — the knob
+    /// exists so the oracle can prove direction-invariance).
+    pub ring_dir: RingDir,
+    /// Run-level default chunk granularity (feature prep and any transfer
+    /// outside a planned layer).
+    pub chunk_rows: usize,
+    /// Intra-rank pool width (`0` = inherit the ambient setting).
+    pub threads: usize,
+    /// Whether the run is expected to page (a storage budget is active).
+    pub paged: bool,
+    /// Page granularity for the paged tiers (applied only when `paged`).
+    pub page_rows: usize,
+    /// Per-layer choices, index = layer.
+    pub layers: Vec<LayerChoice>,
+    /// Per-partition cost breakdown for the bottleneck layer.
+    pub partitions: Vec<PartitionEstimate>,
+    /// Total predicted simulated seconds for the inference stage.
+    pub predicted_secs: f64,
+}
+
+impl Plan {
+    /// Run `f` with every plan choice installed through the existing knob
+    /// chains (chunk rows, ring direction, page rows, pool width) plus the
+    /// thread-local plan slot that carries the per-layer choices into the
+    /// forward loops. `Cluster::run` captures all of these into rank
+    /// threads, so one `apply` around a cluster launch tunes the whole
+    /// simulated world.
+    pub fn apply<T>(self: &Arc<Self>, f: impl FnOnce() -> T) -> T {
+        let plan = Arc::clone(self);
+        let body = move || with_plan(Some(plan), f);
+        let body = {
+            let chunk = self.chunk_rows;
+            move || crate::cluster::net::with_chunk_rows(chunk, body)
+        };
+        let body = {
+            let dir = self.ring_dir;
+            move || crate::cluster::collectives::with_ring_dir(dir, body)
+        };
+        if self.paged {
+            let rows = self.page_rows;
+            let body = move || crate::storage::with_page_rows(rows, body);
+            if self.threads > 0 {
+                return crate::runtime::par::with_threads(self.threads, body);
+            }
+            return body();
+        }
+        if self.threads > 0 {
+            return crate::runtime::par::with_threads(self.threads, body);
+        }
+        body()
+    }
+}
+
+// ---------------------------------------------------------------- planner
+
+/// Candidate column-group tile sizes for grouped/pipelined SPMM.
+const GROUP_COLS_CANDIDATES: [usize; 3] = [1024, 4096, 16384];
+
+/// Wall-clock break-even: forks pay off only when a layer's CPU work per
+/// core exceeds this many fork/join overheads (below it the planner pins
+/// the pool to 1 — which also minimizes the simulated fork term).
+const FORK_BREAK_EVEN: f64 = 1024.0;
+
+/// The cost-model-driven planner: prices execution variants with the
+/// closed forms of `primitives::costs` under measured [`Calibration`]
+/// constants and returns the argmin [`Plan`].
+#[derive(Clone, Debug)]
+pub struct Planner {
+    pub calib: Calibration,
+}
+
+impl Planner {
+    pub fn new(calib: Calibration) -> Self {
+        Planner { calib }
+    }
+
+    /// Price one layer for the bottleneck partition and pick its variant.
+    fn plan_layer(&self, s: &ShapeInfo, rows: usize) -> (LayerChoice, PartitionEstimate) {
+        let (n, d, p, m) = (s.n as f64, s.d as f64, s.p as f64, s.m as f64);
+        let lat = s.net.latency_secs;
+        let bytes_per_sec = (s.net.bandwidth_gbps * 1e9 / 8.0).max(1.0);
+        let cp = costs::CostParams { n, d, p, m, z: s.z };
+
+        // Wire: ring GEMM + feature-exchange SPMM elements per machine
+        // (closed forms of Tables 1–2), plus per-message envelope latency.
+        let comm_elems = costs::gemm_ours_comm(&cp) + costs::spmm_ours_comm(&cp);
+        let msgs = (s.m.saturating_sub(1) + s.p.saturating_sub(1)) as f64;
+        let comm_secs = comm_elems * 4.0 / bytes_per_sec + msgs * lat;
+
+        // Compute: dense projection + sparse aggregation MACs per machine,
+        // through the measured single-thread rates, then the simulator's
+        // capacity divisor (`costs::intra_rank_compute_secs`).
+        let gemm_macs = n * d * d / (p * m);
+        let spmm_macs = s.z * n * d / (p * m);
+        let cpu_secs =
+            gemm_macs / self.calib.gemm_macs_per_sec + spmm_macs / self.calib.spmm_macs_per_sec;
+        // Staging copies (scatter/gather of row bands) ride on the copy rate.
+        let cpu_secs = cpu_secs + comm_elems * 4.0 / self.calib.copy_bytes_per_sec;
+        let compute_secs = costs::intra_rank_compute_secs(cpu_secs, 0, s.cores);
+
+        // Chunk granularity: k* balances fill time against per-chunk
+        // latency; expressed in rows of the dominant transfer (a
+        // `rows / m`-row ring block).
+        let kstar = costs::optimal_chunks(comm_secs, compute_secs, lat);
+        let transfer_rows = (rows / s.m.max(1)).max(1);
+        let chunk_rows = if kstar <= 1 || transfer_rows <= 1 {
+            0 // monolithic: chunking buys nothing at this shape
+        } else {
+            transfer_rows.div_ceil(kstar as usize).max(16)
+        };
+        let chunk_comm = comm_secs + costs::chunking_overhead_secs(lat, kstar);
+
+        // Mode: pipelined overlaps at chunk granularity; grouped overlaps
+        // only at column-group granularity (lookahead 1).
+        let mut best: Option<LayerChoice> = None;
+        for &gc in &GROUP_COLS_CANDIDATES {
+            let groups = ((s.d / s.m.max(1)).max(1)).div_ceil(gc).max(1) as u64;
+            let grouped = costs::pipelined_step_secs(
+                comm_secs + costs::chunking_overhead_secs(lat, groups),
+                compute_secs,
+                groups,
+            );
+            let pipelined = costs::pipelined_step_secs(chunk_comm, compute_secs, kstar.max(2));
+            for (mode, secs) in [(ExecMode::Grouped, grouped), (ExecMode::Pipelined, pipelined)] {
+                let cand = LayerChoice { mode, chunk_rows, group_cols: gc, predicted_secs: secs };
+                // strict `<` keeps ties on the earlier candidate, and
+                // Pipelined at the default group size wins exact ties via
+                // candidate order only if strictly better — deterministic
+                // either way.
+                if best.map_or(true, |b| secs < b.predicted_secs) {
+                    best = Some(cand);
+                }
+            }
+        }
+        let choice = best.expect("candidate set is non-empty");
+        (choice, PartitionEstimate { rows, comm_secs, compute_secs })
+    }
+
+    /// Produce the plan for `s`: per-layer variant picks, per-partition
+    /// cost breakdown, and run-level knob settings.
+    pub fn plan(&self, s: &ShapeInfo) -> Plan {
+        // Partition rows mirror `PartitionPlan`'s even split (ceil for the
+        // leading partitions); the bottleneck partition prices the layer.
+        let base = s.n / s.p.max(1);
+        let extra = s.n % s.p.max(1);
+        let partitions: Vec<usize> =
+            (0..s.p.max(1)).map(|i| base + usize::from(i < extra)).collect();
+        let bottleneck = partitions.iter().copied().max().unwrap_or(1);
+
+        let mut layers = Vec::with_capacity(s.layers);
+        let mut parts_est = Vec::with_capacity(partitions.len());
+        let mut predicted = 0.0;
+        for l in 0..s.layers.max(1) {
+            let (choice, _) = self.plan_layer(s, bottleneck);
+            predicted += choice.predicted_secs;
+            if l == 0 {
+                for &rows in &partitions {
+                    let (_, est) = self.plan_layer(s, rows);
+                    parts_est.push(est);
+                }
+            }
+            layers.push(choice);
+        }
+
+        // Pool width: the simulated makespan always pays the fork term, so
+        // forks are worth it only when the per-core CPU work dwarfs the
+        // measured fork/join overhead (then they keep *wall* time sane
+        // without moving the simulated needle).
+        let cpu_per_layer = parts_est
+            .iter()
+            .map(|e| e.compute_secs)
+            .fold(0.0, f64::max);
+        let threads = if cpu_per_layer > FORK_BREAK_EVEN * self.calib.fork_join_secs {
+            0 // big enough: inherit the ambient pool (all cores by default)
+        } else {
+            1 // fork overhead would dominate: stay serial per rank
+        };
+
+        let chunk_rows = layers.first().map_or(0, |c| c.chunk_rows);
+        let paged = s.budget_bytes > 0;
+        let page_rows = if paged {
+            // Align page bands with the transfer granularity so a faulted
+            // page feeds whole chunks; floor at the storage default.
+            chunk_rows.max(64)
+        } else {
+            crate::storage::DEFAULT_PAGE_ROWS
+        };
+
+        Plan {
+            ring_dir: RingDir::Forward,
+            chunk_rows,
+            threads,
+            paged,
+            page_rows,
+            layers,
+            partitions: parts_est,
+            predicted_secs: predicted,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> ShapeInfo {
+        ShapeInfo {
+            n: 4096,
+            d: 128,
+            p: 2,
+            m: 2,
+            layers: 2,
+            z: 10.0,
+            cores: 64.0,
+            net: NetConfig::default(),
+            budget_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn enable_chain_resolves() {
+        // CI runs the suite once with DEAL_AUTOTUNE=1, so the unscoped
+        // default is the env value, not a constant.
+        let env_on = std::env::var("DEAL_AUTOTUNE").map_or(false, |v| v != "0" && !v.is_empty());
+        assert_eq!(enabled(), env_on, "default follows DEAL_AUTOTUNE");
+        with_autotune(true, || assert!(enabled()));
+        with_autotune(false, || assert!(!enabled()));
+        assert_eq!(enabled(), env_on);
+        set_autotune(true);
+        assert!(enabled());
+        with_autotune(false, || assert!(!enabled()));
+        clear_autotune();
+        assert_eq!(enabled(), env_on, "clear restores the env default");
+    }
+
+    #[test]
+    fn calibration_json_roundtrips_exactly() {
+        let c = Calibration {
+            seed: 0xDEA1,
+            gemm_macs_per_sec: 1.234567890123456e9,
+            spmm_macs_per_sec: 9.87654321e8,
+            copy_bytes_per_sec: 1.0e10 / 3.0,
+            fork_join_secs: 2.5e-5,
+        };
+        let json = c.to_json();
+        let back = Calibration::from_json(&json).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.to_json(), json, "re-emit must be byte-identical");
+    }
+
+    #[test]
+    fn calibration_rejects_bad_sidecars() {
+        let c = Calibration::assumed(7);
+        let good = c.to_json();
+        // checksum corruption: damage a digit of a measured rate
+        let bad = good.replacen("2000000000", "2000000001", 1);
+        assert_ne!(bad, good);
+        let err = Calibration::from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "got: {}", err);
+        // version mismatch
+        let vbad = good.replace("\"version\": 1", "\"version\": 999");
+        let err = Calibration::from_json(&vbad).unwrap_err().to_string();
+        assert!(err.contains("version"), "got: {}", err);
+        // truncation
+        let half = &good[..good.len() / 2];
+        assert!(Calibration::from_json(half).is_err());
+        // non-numeric field
+        let nbad = good.replacen("2000000000", "fast", 1);
+        assert!(Calibration::from_json(&nbad).is_err());
+    }
+
+    #[test]
+    fn measured_calibration_is_sane() {
+        let c = Calibration::measure(1);
+        assert!(c.gemm_macs_per_sec >= 1e6);
+        assert!(c.spmm_macs_per_sec >= 1e6);
+        assert!(c.copy_bytes_per_sec >= 1e6);
+        assert!(c.fork_join_secs > 0.0 && c.fork_join_secs <= 1e-3);
+        // and it survives its own sidecar round trip
+        let back = Calibration::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn planner_produces_consistent_plan() {
+        let plan = Planner::new(Calibration::assumed(1)).plan(&shape());
+        assert_eq!(plan.layers.len(), 2);
+        assert_eq!(plan.partitions.len(), 2);
+        assert_eq!(plan.ring_dir, RingDir::Forward);
+        assert!(!plan.paged);
+        assert!(plan.predicted_secs > 0.0);
+        for c in &plan.layers {
+            assert!(c.mode == ExecMode::Grouped || c.mode == ExecMode::Pipelined);
+            assert!(c.group_cols >= 1024);
+            assert!(c.predicted_secs.is_finite());
+        }
+        // uneven split: bottleneck partition gets the ceil share
+        let mut s = shape();
+        s.n = 4097;
+        let plan = Planner::new(Calibration::assumed(1)).plan(&s);
+        assert_eq!(plan.partitions[0].rows, 2049);
+        assert_eq!(plan.partitions[1].rows, 2048);
+    }
+
+    #[test]
+    fn plan_budget_turns_on_paging() {
+        let mut s = shape();
+        s.budget_bytes = 1 << 20;
+        let plan = Planner::new(Calibration::assumed(1)).plan(&s);
+        assert!(plan.paged);
+        assert!(plan.page_rows >= 64);
+    }
+
+    #[test]
+    fn layer_choice_visible_under_apply() {
+        let plan = Arc::new(Planner::new(Calibration::assumed(1)).plan(&shape()));
+        assert!(layer_choice(0).is_none(), "no plan installed yet");
+        plan.apply(|| {
+            let c0 = layer_choice(0).expect("plan installed");
+            assert_eq!(c0, plan.layers[0]);
+            // clamped beyond the last layer (gcn_rest continuations)
+            assert_eq!(layer_choice(99).unwrap(), plan.layers[plan.layers.len() - 1]);
+            assert_eq!(crate::cluster::net::chunk_rows(), plan.chunk_rows);
+            assert_eq!(crate::cluster::collectives::ring_dir(), plan.ring_dir);
+        });
+        assert!(layer_choice(0).is_none(), "plan uninstalled on exit");
+    }
+}

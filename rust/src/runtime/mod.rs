@@ -13,6 +13,7 @@
 //! [`Backend`] abstracts the tile ops the model layer needs; `Native` is
 //! the pure-rust oracle used by tests and as the perf comparison baseline.
 
+pub mod autotune;
 pub mod par;
 pub mod service;
 mod weights;

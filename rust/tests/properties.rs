@@ -326,6 +326,25 @@ fn distributed_pipeline_bit_identical_across_pool_sizes() {
     par::set_threads(4);
     let parallel = run_once();
     assert_eq!(serial, parallel, "cluster pipeline diverged across pool sizes");
+
+    // Planner-selected row: an autotune plan (chunk granularity, ring
+    // direction, pool width, per-layer mode) installed around the same
+    // run is covered by the same bit-equality contract as fixed configs.
+    use deal::runtime::autotune::{Calibration, Planner, ShapeInfo};
+    let shape = ShapeInfo {
+        n,
+        d,
+        p: 2,
+        m: 2,
+        layers: 1,
+        z: 5.0,
+        cores: 64.0,
+        net: NetConfig::default(),
+        budget_bytes: 0,
+    };
+    let tuned_plan = Arc::new(Planner::new(Calibration::assumed(0x7EA1)).plan(&shape));
+    let tuned = tuned_plan.apply(run_once);
+    assert_eq!(serial, tuned, "cluster pipeline diverged under autotune plan");
 }
 
 #[test]
