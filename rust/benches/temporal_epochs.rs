@@ -1,0 +1,147 @@
+//! Incremental epoch snapshots vs cold recompute (EXPERIMENTS.md
+//! §Temporal): sealing an epoch through the temporal engine re-infers
+//! only the affected frontier, so it must be measurably cheaper than the
+//! cold full-graph rerun that defines its correctness — while staying
+//! **bit-identical** to it (a hard assert, even under lax mode: identity
+//! is correctness, not performance).
+//!
+//! The run: build the temporal engine at epoch 0, then seal a few epochs
+//! of a deterministic ~1%-churn event stream. Each seal is timed against
+//! a cold `DeltaState::init_with` dense recompute of the same graph, and
+//! the published snapshot is compared to it bit-for-bit.
+//!
+//! `DEAL_TEMPORAL_BENCH_LAX=1` downgrades only the incremental<cold
+//! speed gate to a warning (CI smoke on contended runners).
+//!
+//! Emits `target/bench_results/BENCH_temporal.json`.
+//!
+//! Run: `cargo bench --bench temporal_epochs [-- --full]`
+
+use deal::config::DealConfig;
+use deal::temporal::{TemporalEngine, TemporalOpts};
+use deal::util::bench::{time_once, BenchArgs, Report, Table};
+use deal::util::human_secs;
+
+const EPOCHS: u64 = 4;
+const SNAPSHOT_EVERY: u64 = 8;
+
+fn cfg(scale: f64) -> DealConfig {
+    let mut c = DealConfig::default();
+    c.dataset.name = "products-sim".into();
+    c.dataset.scale = scale;
+    c.cluster.machines = 4;
+    c.cluster.feature_parts = 2;
+    c.model.layers = 2;
+    c.model.fanout = 5;
+    c
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let lax = std::env::var("DEAL_TEMPORAL_BENCH_LAX").map_or(false, |v| v != "0");
+    // quick: 256-node graph; full: 1024 nodes
+    let scale = args.pick(1.0 / 256.0, 1.0 / 64.0);
+    let cfg = cfg(scale);
+
+    let mut report = Report::new("temporal_epochs");
+    let opts = TemporalOpts {
+        snapshot_every: SNAPSHOT_EVERY,
+        retain: EPOCHS as usize + 1,
+        durable_dir: None,
+    };
+    let (eng, build_secs) = time_once(|| TemporalEngine::new(cfg.clone(), &opts));
+    let mut eng = eng.expect("temporal engine");
+    let n = eng.state().n_nodes();
+    report.note(format!(
+        "epoch 0: {} nodes, {} edges, built in {} (model {})",
+        n,
+        eng.state().n_edges(),
+        human_secs(build_secs),
+        cfg.model.kind,
+    ));
+
+    let mut t = Table::new(
+        "incremental seal vs cold recompute per epoch",
+        &["epoch", "events", "rows", "incremental", "cold", "speedup"],
+    );
+    let mut inc_total = 0.0f64;
+    let mut cold_total = 0.0f64;
+    let mut rows_json = String::new();
+    for _ in 0..EPOCHS {
+        // ~1% edge churn + a few feature rewrites, tick-spread over the
+        // window (seed-derived: the stream is identical on every run)
+        let half = (eng.state().n_edges() / 200).max(4);
+        let events = eng.synth_events(half, half, (n / 100).max(1));
+        eng.ingest(&events).expect("ingest");
+        let (sealed, inc_secs) =
+            time_once(|| eng.advance_to((eng.epoch() + 1) * SNAPSHOT_EVERY));
+        let sealed = sealed.expect("seal");
+        assert_eq!(sealed.len(), 1);
+        let rep = &sealed[0];
+        let (cold, cold_secs) = time_once(|| eng.cold_oracle());
+        let cold = cold.expect("cold oracle");
+
+        // hard assert, no tolerance: the snapshot IS the cold rerun
+        let snap = eng.snapshot_at(rep.epoch).expect("snapshot").to_full();
+        let a: Vec<u32> = snap.data.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = cold.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "epoch {} snapshot is not bit-identical to the cold rerun", rep.epoch);
+
+        inc_total += inc_secs;
+        cold_total += cold_secs;
+        t.row(&[
+            format!("{}", rep.epoch),
+            format!("{}", rep.events),
+            format!("{}", rep.updated_rows),
+            human_secs(inc_secs),
+            human_secs(cold_secs),
+            format!("{:.2}x", cold_secs / inc_secs.max(1e-12)),
+        ]);
+        if !rows_json.is_empty() {
+            rows_json.push_str(",\n");
+        }
+        rows_json.push_str(&format!(
+            "    {{\"epoch\": {}, \"events\": {}, \"updated_rows\": {}, \"incremental_secs\": {:.6}, \"cold_secs\": {:.6}}}",
+            rep.epoch, rep.events, rep.updated_rows, inc_secs, cold_secs
+        ));
+    }
+    report.add_table(t);
+    report.note("bit-identity: every published snapshot == cold full-graph rerun (exact)");
+
+    let speedup = cold_total / inc_total.max(1e-12);
+    let pass = inc_total < cold_total;
+    if !pass {
+        let msg = format!(
+            "incremental sealing ({}) not cheaper than cold recompute ({}) over {} epochs",
+            human_secs(inc_total),
+            human_secs(cold_total),
+            EPOCHS
+        );
+        if lax {
+            report.note(format!("LAX: {}", msg));
+        } else {
+            panic!("{}", msg);
+        }
+    }
+
+    // ---- machine-readable summary (schema: EXPERIMENTS.md §Temporal) ---
+    let json = format!(
+        "{{\n  \"bench\": \"temporal_epochs\",\n  \"quick\": {},\n  \"nodes\": {},\n  \"epochs\": {},\n  \"snapshot_every\": {},\n  \"epoch_rows\": [\n{}\n  ],\n  \"incremental_secs_total\": {:.6},\n  \"cold_secs_total\": {:.6},\n  \"speedup\": {:.3},\n  \"bit_identical\": true,\n  \"pass\": {},\n  \"lax\": {}\n}}\n",
+        args.quick,
+        n,
+        EPOCHS,
+        SNAPSHOT_EVERY,
+        rows_json,
+        inc_total,
+        cold_total,
+        speedup,
+        pass,
+        lax
+    );
+    let out = std::path::PathBuf::from("target/bench_results");
+    let _ = std::fs::create_dir_all(&out);
+    let json_path = out.join("BENCH_temporal.json");
+    std::fs::write(&json_path, &json).expect("write BENCH_temporal.json");
+    report.note(format!("wrote {}", json_path.display()));
+    report.finish();
+}

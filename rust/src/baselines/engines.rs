@@ -17,7 +17,7 @@ use std::collections::HashMap;
 
 use crate::cluster::{Cluster, ClusterReport, Ctx, NetConfig, Payload, Tag};
 use crate::graph::{Csr, NodeId};
-use crate::model::{ModelKind, ModelWeights};
+use crate::model::{Aggregator, ModelKind, ModelWeights};
 use crate::partition::PartitionPlan;
 use crate::primitives::spmm::feature_server;
 use crate::runtime::{Act, Backend};
@@ -195,9 +195,10 @@ fn machine_main(
     Ok(out)
 }
 
-/// Layerwise GCN/GAT compute over one merged ego network (dense local
-/// math through the backend, mirroring the distributed model semantics:
-/// mean aggregation with self loop / additive attention with self edge).
+/// Layerwise GCN/GAT/SAGE compute over one merged ego network (dense
+/// local math through the backend, mirroring the distributed model
+/// semantics: mean aggregation with self loop / additive attention with
+/// self edge / SAGE's separate self and neighbor projections).
 fn compute_mfg(
     mfg: &Mfg,
     mut feats: Matrix,
@@ -292,6 +293,68 @@ fn compute_mfg(
                     let src = z.row(sp);
                     for j in 0..d {
                         let v = row[j] + alpha_self[j / head_dim] * src[j] + b[j];
+                        row[j] = match act {
+                            Act::None => v,
+                            Act::Relu => v.max(0.0),
+                        };
+                    }
+                }
+            }
+            ModelKind::Sage => {
+                // neighbor term: mean of W_neigh-projected sources, or
+                // max-pool of relu(W_pool·h + b_pool) pushed through
+                // W_neigh; self term reuses z = feats · W_self.
+                let neigh = match weights.config.aggregator {
+                    Aggregator::Mean => {
+                        let hn = backend.gemm(&feats, weights.layer_w_neigh(l))?;
+                        let mut deg = vec![0u32; next_nodes.len()];
+                        for &(_, dst) in edges {
+                            deg[dst as usize] += 1;
+                        }
+                        let mut acc = Matrix::zeros(next_nodes.len(), d);
+                        for &(s, dst) in edges {
+                            let w = 1.0 / deg[dst as usize] as f32;
+                            let src = hn.row(s as usize);
+                            let row = acc.row_mut(dst as usize);
+                            for (o, &x) in row.iter_mut().zip(src) {
+                                *o += w * x;
+                            }
+                        }
+                        acc
+                    }
+                    Aggregator::Pool => {
+                        let mut hp = backend.gemm(&feats, weights.layer_w_pool(l))?;
+                        let bp = weights.layer_b_pool(l);
+                        for r in 0..hp.rows {
+                            let row = hp.row_mut(r);
+                            for j in 0..d {
+                                row[j] = (row[j] + bp[j]).max(0.0);
+                            }
+                        }
+                        let mut mx = Matrix::zeros(next_nodes.len(), d);
+                        let mut seen = vec![false; next_nodes.len()];
+                        for &(s, dst) in edges {
+                            let src = hp.row(s as usize);
+                            let row = mx.row_mut(dst as usize);
+                            if seen[dst as usize] {
+                                for (o, &x) in row.iter_mut().zip(src) {
+                                    *o = o.max(x);
+                                }
+                            } else {
+                                row.copy_from_slice(src);
+                                seen[dst as usize] = true;
+                            }
+                        }
+                        backend.gemm(&mx, weights.layer_w_neigh(l))?
+                    }
+                };
+                for i in 0..next_nodes.len() {
+                    let sp = mfg.self_pos[l][i] as usize;
+                    let srow = z.row(sp);
+                    let nrow = neigh.row(i);
+                    let row = next.row_mut(i);
+                    for j in 0..d {
+                        let v = nrow[j] + srow[j] + b[j];
                         row[j] = match act {
                             Act::None => v,
                             Act::Relu => v.max(0.0),
@@ -395,15 +458,18 @@ mod tests {
         let mut rng = Rng::new(77);
         let features = Matrix::random(g.n_rows, d, 1.0, &mut rng);
         let layers = sample_all_layers(&g, 2, 0, 1); // full graph
-        for kind in ["gcn", "gat"] {
+        for kind in ["gcn", "gat", "sage-mean", "sage-pool"] {
             let cfg = match kind {
                 "gcn" => ModelConfig::gcn(2, d),
-                _ => ModelConfig::gat(2, d, 4),
+                "gat" => ModelConfig::gat(2, d, 4),
+                "sage-mean" => ModelConfig::sage(2, d, Aggregator::Mean),
+                _ => ModelConfig::sage(2, d, Aggregator::Pool),
             };
             let weights = ModelWeights::random(&cfg, 9);
             let expect = match kind {
                 "gcn" => gcn_reference(&layers, &features, &weights),
-                _ => crate::model::reference::gat_reference(&layers, &features, &weights),
+                "gat" => crate::model::reference::gat_reference(&layers, &features, &weights),
+                _ => crate::model::reference::sage_reference(&layers, &features, &weights),
             };
             for engine in [Engine::Dgi, Engine::SalientPlusPlus] {
                 let opts = BaselineOpts { fanout: 0, batch_size: 16, ..Default::default() };

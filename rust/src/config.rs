@@ -42,6 +42,9 @@ pub struct ModelCfg {
     pub kind: String,
     pub layers: usize,
     pub heads: usize,
+    /// GraphSAGE neighbor aggregator: `mean` | `pool`. Only meaningful for
+    /// `kind = "sage"`; other models must leave it at `mean`.
+    pub aggregator: String,
     /// Neighbors sampled per layer; 0 = full neighborhood.
     pub fanout: usize,
     /// Weights file (empty = deterministic random init).
@@ -169,9 +172,12 @@ impl Default for DealConfig {
                 cores: 64.0,
             },
             model: ModelCfg {
-                kind: "gcn".into(),
+                // DEAL_MODEL lets CI re-run the whole suite under another
+                // zoo member without touching any test's config
+                kind: std::env::var("DEAL_MODEL").unwrap_or_else(|_| "gcn".into()),
                 layers: 3,
                 heads: 4,
+                aggregator: "mean".into(),
                 fanout: 50,
                 weights: String::new(),
             },
@@ -233,6 +239,7 @@ impl DealConfig {
             "model.kind" => self.model.kind = v.into(),
             "model.layers" => self.model.layers = v.parse()?,
             "model.heads" => self.model.heads = v.parse()?,
+            "model.aggregator" => self.model.aggregator = v.into(),
             "model.fanout" => self.model.fanout = v.parse()?,
             "model.weights" => self.model.weights = v.into(),
             "exec.mode" => self.exec.mode = v.into(),
@@ -312,9 +319,40 @@ impl DealConfig {
 
     pub fn model_config(&self, dim: usize) -> Result<ModelConfig> {
         let kind = ModelKind::parse(&self.model.kind)?;
+        anyhow::ensure!(
+            self.model.layers >= 1,
+            "model.layers must be >= 1 (got {})",
+            self.model.layers
+        );
+        if kind != ModelKind::Sage {
+            anyhow::ensure!(
+                self.model.aggregator == "mean",
+                "model.aggregator = '{}' only applies to sage (model.kind = '{}')",
+                self.model.aggregator,
+                self.model.kind
+            );
+        }
         Ok(match kind {
             ModelKind::Gcn => ModelConfig::gcn(self.model.layers, dim),
-            ModelKind::Gat => ModelConfig::gat(self.model.layers, dim, self.model.heads),
+            ModelKind::Gat => {
+                anyhow::ensure!(
+                    self.model.heads >= 1,
+                    "model.heads must be >= 1 for gat (got {})",
+                    self.model.heads
+                );
+                anyhow::ensure!(
+                    dim % self.model.heads == 0,
+                    "feature dim {} is not divisible by model.heads {} — gat splits the \
+                     feature window evenly across heads",
+                    dim,
+                    self.model.heads
+                );
+                ModelConfig::gat(self.model.layers, dim, self.model.heads)
+            }
+            ModelKind::Sage => {
+                let agg = crate::model::Aggregator::parse(&self.model.aggregator)?;
+                ModelConfig::sage(self.model.layers, dim, agg)
+            }
         })
     }
 
@@ -449,6 +487,47 @@ feature_parts = 4
         assert_eq!(cfg.model.kind, "gat");
         assert_eq!(cfg.model.fanout, 10);
         std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn model_config_validates_kind_combos() {
+        let dim = 16;
+        let mut cfg = DealConfig::default();
+        cfg.model.kind = "gcn".into();
+        cfg.model.aggregator = "pool".into();
+        let err = cfg.model_config(dim).unwrap_err().to_string();
+        assert!(err.contains("pool") && err.contains("gcn"), "cause-naming error: {}", err);
+
+        let mut cfg = DealConfig::default();
+        cfg.model.kind = "gat".into();
+        cfg.model.heads = 0;
+        let err = cfg.model_config(dim).unwrap_err().to_string();
+        assert!(err.contains("model.heads"), "cause-naming error: {}", err);
+        cfg.model.heads = 5; // 16 % 5 != 0
+        let err = cfg.model_config(dim).unwrap_err().to_string();
+        assert!(err.contains("16") && err.contains('5'), "cause-naming error: {}", err);
+
+        let mut cfg = DealConfig::default();
+        cfg.model.kind = "sage".into();
+        cfg.model.aggregator = "median".into();
+        let err = cfg.model_config(dim).unwrap_err().to_string();
+        assert!(err.contains("mean") && err.contains("pool"), "valid kinds named: {}", err);
+        cfg.model.aggregator = "pool".into();
+        let mc = cfg.model_config(dim).unwrap();
+        assert_eq!(mc.aggregator, crate::model::Aggregator::Pool);
+
+        let mut cfg = DealConfig::default();
+        cfg.model.kind = "transformer".into();
+        let err = cfg.model_config(dim).unwrap_err().to_string();
+        assert!(err.contains("gcn") && err.contains("gat") && err.contains("sage"), "{}", err);
+    }
+
+    #[test]
+    fn aggregator_key_parses() {
+        let mut cfg = DealConfig::default();
+        assert_eq!(cfg.model.aggregator, "mean");
+        cfg.set("model.aggregator", "pool").unwrap();
+        assert_eq!(cfg.model.aggregator, "pool");
     }
 
     #[test]

@@ -15,23 +15,28 @@
 //!    from-scratch sampling pass over the updated CSR would build.
 //! 3. **Frontier** — `graph::delta::affected_frontier` derives, per GNN
 //!    level, the set of rows whose activations can change.
-//! 4. **Restricted re-inference** — a `p × m` cluster job recomputes only
-//!    the affected rows. The projection runs through a frontier-restricted
-//!    row-group GEMM ([`delta_gemm_rows`]); the aggregation *reuses
-//!    `primitives::spmm::deal_spmm` unchanged*, fed a layer CSR whose
-//!    unaffected rows are empty — the §3.5 group machinery then requests
-//!    exactly the frontier's columns and nothing else. GAT falls back to a
-//!    dense affected-row recompute (`model::reference::gat_layer_rows`),
-//!    mirroring the fused→redistribute precedent: its attention needs
-//!    full-width projected rows before aggregation, which the
-//!    column-partitioned delta GEMM cannot serve without a full SDDMM
-//!    round.
+//! 4. **Restricted re-inference** — GCN runs a `p × m` cluster job that
+//!    recomputes only the affected rows: the projection goes through a
+//!    frontier-restricted row-group GEMM ([`delta_gemm_rows`]); the
+//!    aggregation *reuses `primitives::spmm::deal_spmm` unchanged*, fed a
+//!    layer CSR whose unaffected rows are empty — the §3.5 group machinery
+//!    then requests exactly the frontier's columns and nothing else. Every
+//!    other model (and GCN in *exact mode*, see [`DeltaState::set_exact`])
+//!    goes through [`GnnModel::layer_rows`]: per partition, a sparse
+//!    frontier-restricted recompute against the partition-local layer CSR
+//!    whose output rows are **bit-identical** to the dense layer on the
+//!    stitched graph. (This replaced the PR 2 stopgap that kept a global
+//!    stitched CSR cache just for a dense GAT fallback.)
 //!
 //! Parity contract (tested in `tests/delta_stream.rs`): after any replayed
 //! update trace, `DeltaState::embeddings()` matches a from-scratch
 //! `Pipeline::run` on the updated graph within the end-to-end parity
 //! tolerance — unchanged rows keep their cached values (identical samples
-//! ⇒ identical inputs), affected rows are recomputed from those caches.
+//! ⇒ identical inputs), affected rows are recomputed from those caches. On
+//! the `layer_rows` path the contract is stronger: the state stays
+//! bit-identical to a fresh dense init over the current graph after every
+//! batch — the invariant the temporal engine's snapshot guarantee
+//! (DESIGN.md §Temporal) is built on.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -44,7 +49,6 @@ use crate::graph::delta::{
 };
 pub use crate::graph::delta::UpdateBatch;
 use crate::graph::{datasets, Csr, EdgeList, NodeId};
-use crate::model::reference::{gat_layer, gat_layer_rows, gcn_layer};
 use crate::model::{LayerPart, ModelKind, ModelWeights};
 use crate::partition::PartitionPlan;
 use crate::primitives::scatter;
@@ -96,10 +100,10 @@ pub struct DeltaState {
     partitions: Vec<Csr>,
     /// `[p][l]` sampled layer graphs over partition-local rows.
     layer_csrs: Vec<Vec<Csr>>,
-    /// Global stitched layer graphs, kept only for the GAT fallback path
-    /// (patched incrementally alongside `layer_csrs`, so `gat_delta` never
-    /// re-stitches the whole edge set per batch).
-    stitched: Option<Vec<Csr>>,
+    /// Exact mode: route every model — GCN included — through the
+    /// bit-exact `GnnModel::layer_rows` recompute instead of the
+    /// distributed GCN delta job (see [`DeltaState::set_exact`]).
+    exact: bool,
     /// Cached activations `H^(0) .. H^(k)`, each global `N × d`
     /// (`activations[0]` is the feature matrix).
     activations: Vec<Matrix>,
@@ -163,31 +167,40 @@ impl DeltaState {
             backend,
             partitions,
             layer_csrs,
-            stitched: None,
+            exact: false,
             activations: Vec::new(),
         };
         state.activations = state.forward_all(features, &stitched);
-        if kind == ModelKind::Gat {
-            state.stitched = Some(stitched);
-        }
         Ok(state)
     }
 
-    /// Dense forward over the given stitched layer graphs, keeping every
-    /// level.
+    /// Dense forward over the given stitched layer graphs through the
+    /// model-zoo trait, keeping every level.
     fn forward_all(&self, features: Matrix, layers: &[Csr]) -> Vec<Matrix> {
         let k = self.cfg.model.layers;
+        let model = self.kind.model();
         let mut acts = Vec::with_capacity(k + 1);
         acts.push(features);
         for (l, g) in layers.iter().enumerate() {
             let relu = l + 1 != k;
-            let next = match self.kind {
-                ModelKind::Gcn => gcn_layer(g, &acts[l], &self.weights, l, relu),
-                ModelKind::Gat => gat_layer(g, &acts[l], &self.weights, l, relu),
-            };
+            let next = model.layer(g, &acts[l], &self.weights, l, relu);
             acts.push(next);
         }
         acts
+    }
+
+    /// Route every batch — GCN included — through the bit-exact
+    /// `GnnModel::layer_rows` recompute. In exact mode the cached state is
+    /// bit-identical to a fresh dense init over the current graph after
+    /// *every* apply (unaffected rows by the frontier property, affected
+    /// rows by the `layer_rows` restriction contract) — which is why a
+    /// published temporal snapshot can never depend on how the replayed
+    /// event stream was batched. The distributed GCN delta job trades that
+    /// last bit of exactness (its accumulation order differs from the
+    /// dense oracle's) for simulated-cluster fidelity; models other than
+    /// GCN always take the exact path.
+    pub fn set_exact(&mut self, on: bool) {
+        self.exact = on;
     }
 
     // ---- accessors -----------------------------------------------------
@@ -290,9 +303,6 @@ impl DeltaState {
         let mut dirty_global: Vec<NodeId> = Vec::new();
         let mut edges_added = 0usize;
         let mut edges_removed = 0usize;
-        // Global-row updates for the stitched cache (GAT path only);
-        // partitions iterate in row order, so these stay sorted.
-        let mut stitched_updates: Vec<Vec<(usize, Vec<NodeId>)>> = vec![Vec::new(); k];
         for p_idx in 0..self.plan.p {
             let (rlo, rhi) = self.plan.node_range(p_idx);
             let mut delta = PartitionDelta::new(rlo, rhi);
@@ -314,24 +324,11 @@ impl DeltaState {
                         .zip(&samples)
                         .map(|(&r, per_layer)| (r, per_layer[l].clone()))
                         .collect();
-                    if self.stitched.is_some() {
-                        stitched_updates[l].extend(
-                            updates.iter().map(|(r, row)| (rlo + r, row.clone())),
-                        );
-                    }
                     self.layer_csrs[p_idx][l] = replace_rows(&self.layer_csrs[p_idx][l], &updates);
                 }
             }
             dirty_global.extend(dirty_local.iter().map(|&r| (rlo + r) as NodeId));
             self.partitions[p_idx] = updated;
-        }
-        if let Some(stitched) = &mut self.stitched {
-            for (l, updates) in stitched_updates.iter().enumerate() {
-                if !updates.is_empty() {
-                    let patched = replace_rows(&stitched[l], updates);
-                    stitched[l] = patched;
-                }
-            }
         }
 
         // Feature-row replacements seed level 0 of the frontier.
@@ -367,9 +364,10 @@ impl DeltaState {
         }
 
         // 4: restricted re-inference.
-        let (job_sim, net_bytes, net_msgs) = match self.kind {
-            ModelKind::Gcn => self.gcn_delta(&levels)?,
-            ModelKind::Gat => self.gat_delta(&levels)?,
+        let (job_sim, net_bytes, net_msgs) = if self.kind == ModelKind::Gcn && !self.exact {
+            self.gcn_delta(&levels)?
+        } else {
+            self.trait_delta(&levels)?
         };
 
         Ok(DeltaReport {
@@ -525,13 +523,16 @@ impl DeltaState {
         ))
     }
 
-    /// GAT fallback: dense affected-row recompute per level, charged at
+    /// Frontier-restricted sparse recompute through the model-zoo trait:
+    /// per partition, [`GnnModel::layer_rows`] against the partition-local
+    /// layer CSR over that partition's slice of the affected frontier —
+    /// bit-identical to the dense layer on the stitched graph, charged at
     /// single-machine rate scaled by the configured core count (no
     /// simulated network traffic — see the module docs).
-    fn gat_delta(&mut self, levels: &[Vec<NodeId>]) -> Result<(f64, u64, u64)> {
+    fn trait_delta(&mut self, levels: &[Vec<NodeId>]) -> Result<(f64, u64, u64)> {
         let k = self.cfg.model.layers;
+        let model = self.kind.model();
         let cpu0 = thread_cpu_time();
-        let stitched = self.stitched.as_ref().expect("GAT state caches stitched layers");
         for l in 0..k {
             let aff = &levels[l + 1];
             if aff.is_empty() {
@@ -539,9 +540,27 @@ impl DeltaState {
             }
             let relu = l + 1 != k;
             let (head, tail) = self.activations.split_at_mut(l + 1);
-            let block = gat_layer_rows(&stitched[l], &head[l], &self.weights, l, relu, aff);
-            for (i, &r) in aff.iter().enumerate() {
-                tail[0].row_mut(r as usize).copy_from_slice(block.row(i));
+            let h = &head[l];
+            for pi in 0..self.plan.p {
+                let (rlo, rhi) = self.plan.node_range(pi);
+                let lo = aff.partition_point(|&v| (v as usize) < rlo);
+                let hi = aff.partition_point(|&v| (v as usize) < rhi);
+                if lo == hi {
+                    continue;
+                }
+                let rows = &aff[lo..hi];
+                let block = model.layer_rows(
+                    &self.layer_csrs[pi][l],
+                    rlo,
+                    h,
+                    &self.weights,
+                    l,
+                    relu,
+                    rows,
+                );
+                for (i, &r) in rows.iter().enumerate() {
+                    tail[0].row_mut(r as usize).copy_from_slice(block.row(i));
+                }
             }
         }
         let sim = (thread_cpu_time() - cpu0).max(0.0) / self.cfg.cluster.cores;
@@ -643,6 +662,24 @@ mod tests {
         assert!(diff < tol, "delta vs fresh recompute diverged: {}", diff);
     }
 
+    /// The `layer_rows` path promises more: *every* cached level is
+    /// bit-identical to a fresh dense init over the updated graph.
+    fn assert_matches_fresh_bitwise(state: &DeltaState) {
+        let fresh = DeltaState::init_with(
+            state.cfg.clone(),
+            state.edge_list(),
+            state.features().clone(),
+        )
+        .unwrap();
+        for l in 0..state.activations.len() {
+            assert_eq!(
+                state.activations[l], fresh.activations[l],
+                "level {} diverged from a fresh dense init",
+                l
+            );
+        }
+    }
+
     #[test]
     fn gcn_delta_matches_fresh_recompute() {
         let mut state = DeltaState::init(small_cfg("gcn", 5)).unwrap();
@@ -659,14 +696,88 @@ mod tests {
     }
 
     #[test]
-    fn gat_delta_matches_fresh_recompute() {
+    fn gcn_exact_mode_is_bitwise() {
+        let mut state = DeltaState::init(small_cfg("gcn", 5)).unwrap();
+        state.set_exact(true);
+        let mut rng = Rng::new(0xE6AC);
+        for _ in 0..2 {
+            let batch = state.synth_batch(&mut rng, 35, 35, 3);
+            let rep = state.apply(&batch).unwrap();
+            assert_eq!(rep.net_bytes, 0, "exact mode stays off the cluster");
+        }
+        assert_matches_fresh_bitwise(&state);
+    }
+
+    #[test]
+    fn gat_delta_matches_fresh_bitwise() {
         let mut state = DeltaState::init(small_cfg("gat", 5)).unwrap();
         let mut rng = Rng::new(0x6A7);
         for _ in 0..2 {
             let batch = state.synth_batch(&mut rng, 30, 30, 2);
             state.apply(&batch).unwrap();
         }
-        assert_matches_fresh(&state, 2e-3);
+        assert_matches_fresh_bitwise(&state);
+    }
+
+    #[test]
+    fn sage_delta_matches_fresh_bitwise_both_aggregators() {
+        for agg in ["mean", "pool"] {
+            let mut cfg = small_cfg("sage", 5);
+            cfg.model.aggregator = agg.into();
+            let mut state = DeltaState::init(cfg).unwrap();
+            let mut rng = Rng::new(0x5A6E);
+            for _ in 0..2 {
+                let batch = state.synth_batch(&mut rng, 30, 30, 2);
+                state.apply(&batch).unwrap();
+            }
+            assert_matches_fresh_bitwise(&state);
+        }
+    }
+
+    /// Parity of the per-partition sparse recompute against the dense
+    /// stitched-graph fallback it replaced: restricting row-by-row inside
+    /// each partition CSR must reproduce, bit for bit, `gat_layer_rows`
+    /// over the stitched global layer graph.
+    #[test]
+    fn partitioned_layer_rows_matches_stitched_dense_rows() {
+        use crate::model::reference::gat_layer_rows;
+        let state = DeltaState::init(small_cfg("gat", 5)).unwrap();
+        let k = state.cfg.model.layers;
+        let stitched = stitch_layers(&state.layer_csrs, k);
+        let model = state.kind.model();
+        let n = state.n_nodes();
+        let rows: Vec<NodeId> = (0..n as NodeId).step_by(3).collect();
+        for l in 0..k {
+            let relu = l + 1 != k;
+            let h = &state.activations[l];
+            let dense = gat_layer_rows(&stitched[l], 0, h, &state.weights, l, relu, &rows);
+            for pi in 0..state.plan.p {
+                let (rlo, rhi) = state.plan.node_range(pi);
+                let lo = rows.partition_point(|&v| (v as usize) < rlo);
+                let hi = rows.partition_point(|&v| (v as usize) < rhi);
+                if lo == hi {
+                    continue;
+                }
+                let block = model.layer_rows(
+                    &state.layer_csrs[pi][l],
+                    rlo,
+                    h,
+                    &state.weights,
+                    l,
+                    relu,
+                    &rows[lo..hi],
+                );
+                for (i, ri) in (lo..hi).enumerate() {
+                    assert_eq!(
+                        block.row(i),
+                        dense.row(ri),
+                        "layer {} row {} diverged between partitioned and stitched recompute",
+                        l,
+                        rows[ri]
+                    );
+                }
+            }
+        }
     }
 
     #[test]

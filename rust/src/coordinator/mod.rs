@@ -14,7 +14,7 @@ use crate::cluster::{Cluster, ClusterReport, Ctx, Payload, Tag};
 use crate::config::DealConfig;
 use crate::graph::builder::{build_distributed, GraphPartition};
 use crate::graph::{datasets, EdgeList};
-use crate::model::{gat::gat_forward, gcn::gcn_forward, ExecOpts, LayerPart, ModelKind, ModelWeights};
+use crate::model::{gcn::gcn_forward, ExecOpts, LayerPart, ModelKind, ModelWeights};
 use crate::partition::PartitionPlan;
 use crate::runtime::{backend_from_config, Act, Backend};
 use crate::tensor::Matrix;
@@ -277,9 +277,9 @@ impl Pipeline {
             None
         };
 
-        // fused is a GCN-shaped optimization; GAT falls back to
-        // redistribute (documented in DESIGN.md).
-        let effective = if strategy == FeaturePrep::Fused && kind == ModelKind::Gat {
+        // fused is a GCN-shaped optimization; every other model falls back
+        // to redistribute (documented in DESIGN.md).
+        let effective = if strategy == FeaturePrep::Fused && kind != ModelKind::Gcn {
             FeaturePrep::Redistribute
         } else {
             strategy
@@ -326,26 +326,17 @@ impl Pipeline {
                             effective,
                         );
                         ctx.barrier();
-                        match kind {
-                            ModelKind::Gcn => gcn_forward(
-                                ctx,
-                                &plan_arc,
-                                parts,
-                                h0,
-                                &weights2,
-                                backend2.as_ref(),
-                                &opts,
-                            ),
-                            ModelKind::Gat => gat_forward(
-                                ctx,
-                                &plan_arc,
-                                parts,
-                                h0,
-                                &weights2,
-                                backend2.as_ref(),
-                                &opts,
-                            ),
-                        }
+                        // model-zoo dispatch: every GnnModel impl shares
+                        // this launch path
+                        kind.model().forward(
+                            ctx,
+                            &plan_arc,
+                            parts,
+                            h0,
+                            &weights2,
+                            backend2.as_ref(),
+                            &opts,
+                        )
                     }
                 }
             });

@@ -30,6 +30,7 @@ pub mod runtime;
 pub mod sampling;
 pub mod serve;
 pub mod storage;
+pub mod temporal;
 pub mod tensor;
 pub mod traffic;
 pub mod util;

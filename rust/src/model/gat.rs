@@ -18,6 +18,7 @@
 //! models with non-separable attention use `primitives::sddmm`.)
 
 use crate::cluster::{Ctx, Payload, Tag};
+use crate::graph::{Csr, NodeId};
 use crate::partition::PartitionPlan;
 use crate::primitives::gemm::deal_gemm;
 use crate::primitives::groups::build_groups;
@@ -30,10 +31,49 @@ use crate::util::even_ranges;
 use crate::Result;
 
 use super::gcn::StorageScope;
-use super::{ExecOpts, LayerPart, ModelWeights};
+use super::{reference, ExecOpts, GnnModel, LayerPart, ModelKind, ModelWeights};
 
 const COUNT_SEQ: u32 = u32::MAX;
 const RESP_BIT: u32 = 0x8000_0000;
+
+/// Model-zoo entry for GAT (see [`crate::model::GnnModel`]).
+pub struct GatModel;
+
+impl GnnModel for GatModel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Gat
+    }
+
+    fn layer(&self, g: &Csr, h: &Matrix, weights: &ModelWeights, l: usize, relu: bool) -> Matrix {
+        reference::gat_layer(g, h, weights, l, relu)
+    }
+
+    fn layer_rows(
+        &self,
+        g: &Csr,
+        row_base: usize,
+        h: &Matrix,
+        weights: &ModelWeights,
+        l: usize,
+        relu: bool,
+        rows: &[NodeId],
+    ) -> Matrix {
+        reference::gat_layer_rows(g, row_base, h, weights, l, relu, rows)
+    }
+
+    fn forward(
+        &self,
+        ctx: &mut Ctx,
+        plan: &PartitionPlan,
+        parts: &[LayerPart],
+        h: Matrix,
+        weights: &ModelWeights,
+        backend: &dyn Backend,
+        opts: &ExecOpts,
+    ) -> Result<Matrix> {
+        gat_forward(ctx, plan, parts, h, weights, backend, opts)
+    }
+}
 
 /// One machine's full GAT forward. Same contract as `gcn_forward`.
 pub fn gat_forward(
@@ -185,8 +225,9 @@ pub fn gat_forward(
 /// partition: one monolithic exchange (v is `heads/M` floats per node, two
 /// orders of magnitude lighter than the feature exchange). Returns
 /// `(sorted remote ids, stacked rows)` per source partition flattened into
-/// lookup vectors.
-fn fetch_v(
+/// lookup vectors. Shape-agnostic over `v.cols` — SAGE's pool aggregator
+/// reuses it to exchange pooled feature-window rows.
+pub(crate) fn fetch_v(
     ctx: &mut Ctx,
     plan: &PartitionPlan,
     part: &LayerPart,

@@ -14,6 +14,7 @@ use std::sync::Arc;
 
 use crate::cluster::Ctx;
 use crate::coordinator::SimFs;
+use crate::graph::{Csr, NodeId};
 use crate::partition::PartitionPlan;
 use crate::primitives::gemm::deal_gemm;
 use crate::primitives::spmm::{deal_spmm, deal_spmm_paged, EdgeValues, PagedSpmmInput, SpmmInput};
@@ -22,7 +23,46 @@ use crate::storage::{self, PagedMatrix, SharedPageCache};
 use crate::tensor::Matrix;
 use crate::Result;
 
-use super::{ExecOpts, LayerPart, ModelWeights};
+use super::{reference, ExecOpts, GnnModel, LayerPart, ModelKind, ModelWeights};
+
+/// Model-zoo entry for GCN (see [`crate::model::GnnModel`]).
+pub struct GcnModel;
+
+impl GnnModel for GcnModel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Gcn
+    }
+
+    fn layer(&self, g: &Csr, h: &Matrix, weights: &ModelWeights, l: usize, relu: bool) -> Matrix {
+        reference::gcn_layer(g, h, weights, l, relu)
+    }
+
+    fn layer_rows(
+        &self,
+        g: &Csr,
+        row_base: usize,
+        h: &Matrix,
+        weights: &ModelWeights,
+        l: usize,
+        relu: bool,
+        rows: &[NodeId],
+    ) -> Matrix {
+        reference::gcn_layer_rows(g, row_base, h, weights, l, relu, rows)
+    }
+
+    fn forward(
+        &self,
+        ctx: &mut Ctx,
+        plan: &PartitionPlan,
+        parts: &[LayerPart],
+        h: Matrix,
+        weights: &ModelWeights,
+        backend: &dyn Backend,
+        opts: &ExecOpts,
+    ) -> Result<Matrix> {
+        gcn_forward(ctx, plan, parts, h, weights, backend, opts)
+    }
+}
 
 /// Per-rank paged-tier scope for a forward pass: one budgeted cache and
 /// one simulated spill device (NVMe-class, per machine), opened only when

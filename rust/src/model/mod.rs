@@ -1,42 +1,146 @@
-//! GNN models assembled from the distributed primitives: GCN (mean
-//! aggregation with self-loops) and GAT (4-head additive attention), the
-//! two models the paper evaluates (§4.1).
+//! The model zoo assembled from the distributed primitives: GCN (mean
+//! aggregation with self-loops), GAT (4-head additive attention) — the
+//! two models the paper evaluates (§4.1) — and GraphSAGE (mean / max-pool
+//! neighbor aggregation, the model every related system benchmarks).
 //!
-//! Both are expressed as *per-machine* forward functions over the
-//! collaborative partition; single-machine dense references live in
-//! [`reference`] and anchor the correctness tests (distributed output must
-//! equal the dense oracle on the same sampled layer graphs).
+//! Every model implements [`GnnModel`]: a *per-machine* distributed
+//! forward over the collaborative partition ([`GnnModel::forward`]), a
+//! single-machine dense layer oracle ([`GnnModel::layer`], backing the
+//! correctness tests and the delta engine's cached activations), and a
+//! frontier-restricted per-row recompute ([`GnnModel::layer_rows`]) whose
+//! output rows are bit-identical to the dense layer's — the property the
+//! delta and temporal engines' exactness contracts stand on. The
+//! coordinator, the delta path, and the paged path all dispatch through
+//! [`ModelKind::model`] instead of hand-wiring per-model layer loops.
 
 pub mod gat;
 pub mod gcn;
 pub mod reference;
+pub mod sage;
 
-use crate::graph::Csr;
+use crate::cluster::Ctx;
+use crate::graph::{Csr, NodeId};
+use crate::partition::PartitionPlan;
 use crate::primitives::ExecMode;
+use crate::runtime::Backend;
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
+use crate::Result;
 
 /// Which model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ModelKind {
     Gcn,
     Gat,
+    Sage,
 }
 
 impl ModelKind {
+    /// Every model in the zoo, in registry order — the end-to-end parity
+    /// matrix sweeps this list, and a trait-coverage guard asserts no
+    /// kind is silently skipped.
+    pub const ALL: [ModelKind; 3] = [ModelKind::Gcn, ModelKind::Gat, ModelKind::Sage];
+
     pub fn parse(s: &str) -> crate::Result<ModelKind> {
         match s {
             "gcn" => Ok(ModelKind::Gcn),
             "gat" => Ok(ModelKind::Gat),
-            other => anyhow::bail!("unknown model '{}' (gcn|gat)", other),
+            "sage" => Ok(ModelKind::Sage),
+            other => anyhow::bail!(
+                "unknown model '{}' (valid kinds: gcn, gat, sage)",
+                other
+            ),
         }
     }
     pub fn name(&self) -> &'static str {
         match self {
             ModelKind::Gcn => "gcn",
             ModelKind::Gat => "gat",
+            ModelKind::Sage => "sage",
         }
     }
+
+    /// The zoo entry for this kind — every dispatch site (coordinator,
+    /// delta, baselines-adjacent tests) goes through this registry.
+    pub fn model(&self) -> &'static dyn GnnModel {
+        match self {
+            ModelKind::Gcn => &gcn::GcnModel,
+            ModelKind::Gat => &gat::GatModel,
+            ModelKind::Sage => &sage::SageModel,
+        }
+    }
+}
+
+/// GraphSAGE neighbor aggregator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Aggregator {
+    /// Mean of neighbor projections (plus a separate self projection).
+    Mean,
+    /// Element-wise max over per-neighbor pooling MLP outputs.
+    Pool,
+}
+
+impl Aggregator {
+    pub fn parse(s: &str) -> crate::Result<Aggregator> {
+        match s {
+            "mean" => Ok(Aggregator::Mean),
+            "pool" => Ok(Aggregator::Pool),
+            other => anyhow::bail!("unknown aggregator '{}' (valid: mean, pool)", other),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Aggregator::Mean => "mean",
+            Aggregator::Pool => "pool",
+        }
+    }
+}
+
+/// One GNN model's three faces (see the module docs). Implementations are
+/// stateless unit structs; all model state lives in [`ModelWeights`].
+///
+/// Contract: for any partition slice `g` of a sampled layer graph whose
+/// local row `i` is global row `row_base + i`, [`GnnModel::layer_rows`]
+/// output row `j` must be **bit-identical** to row `rows[j]` of
+/// [`GnnModel::layer`] over the stitched global graph — restriction may
+/// never change arithmetic. The distributed [`GnnModel::forward`] matches
+/// the dense layer loop within the float-accumulation-order tolerance and
+/// is bit-identical across thread counts, chunk sizes, exec modes, and
+/// memory budgets (the repo-wide determinism contract).
+pub trait GnnModel: Sync {
+    fn kind(&self) -> ModelKind;
+
+    /// One dense layer over sampled graph `g` (global rows == `h.rows`).
+    fn layer(&self, g: &Csr, h: &Matrix, weights: &ModelWeights, l: usize, relu: bool) -> Matrix;
+
+    /// Frontier-restricted recompute of destination rows `rows` (sorted
+    /// global ids, all within `[row_base, row_base + g.n_rows)`) against
+    /// partition-local CSR `g` (local rows, global columns). Output row
+    /// `j` corresponds to global row `rows[j]`.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_rows(
+        &self,
+        g: &Csr,
+        row_base: usize,
+        h: &Matrix,
+        weights: &ModelWeights,
+        l: usize,
+        relu: bool,
+        rows: &[NodeId],
+    ) -> Matrix;
+
+    /// One machine's full distributed forward over the collaborative
+    /// partition (same contract as the historical `gcn_forward`).
+    fn forward(
+        &self,
+        ctx: &mut Ctx,
+        plan: &PartitionPlan,
+        parts: &[LayerPart],
+        h: Matrix,
+        weights: &ModelWeights,
+        backend: &dyn Backend,
+        opts: &ExecOpts,
+    ) -> Result<Matrix>;
 }
 
 /// Model hyper-parameters. The paper sets hidden = input feature dim,
@@ -47,25 +151,36 @@ pub struct ModelConfig {
     pub layers: usize,
     /// Input = hidden = output dimension.
     pub dim: usize,
-    /// GAT heads (must divide `dim`; ignored for GCN).
+    /// GAT heads (must divide `dim`; ignored for GCN and SAGE).
     pub heads: usize,
+    /// GraphSAGE aggregator (ignored for GCN and GAT, which always use
+    /// `Mean` — GCN's fixed mean is baked into `LayerPart`).
+    pub aggregator: Aggregator,
 }
 
 impl ModelConfig {
     pub fn gcn(layers: usize, dim: usize) -> Self {
-        ModelConfig { kind: ModelKind::Gcn, layers, dim, heads: 1 }
+        ModelConfig { kind: ModelKind::Gcn, layers, dim, heads: 1, aggregator: Aggregator::Mean }
     }
 
     pub fn gat(layers: usize, dim: usize, heads: usize) -> Self {
         assert!(dim % heads == 0, "dim {} must be divisible by heads {}", dim, heads);
-        ModelConfig { kind: ModelKind::Gat, layers, dim, heads }
+        ModelConfig { kind: ModelKind::Gat, layers, dim, heads, aggregator: Aggregator::Mean }
+    }
+
+    pub fn sage(layers: usize, dim: usize, aggregator: Aggregator) -> Self {
+        ModelConfig { kind: ModelKind::Sage, layers, dim, heads: 1, aggregator }
     }
 
     /// Tensors per layer in the weights file.
     pub fn tensors_per_layer(&self) -> usize {
         match self.kind {
-            ModelKind::Gcn => 2,              // W, b
-            ModelKind::Gat => 4,              // W, b, a_src, a_dst
+            ModelKind::Gcn => 2, // W, b
+            ModelKind::Gat => 4, // W, b, a_src, a_dst
+            ModelKind::Sage => match self.aggregator {
+                Aggregator::Mean => 3, // W_self, b, W_neigh
+                Aggregator::Pool => 5, // W_self, b, W_neigh, W_pool, b_pool
+            },
         }
     }
 }
@@ -87,11 +202,21 @@ impl ModelWeights {
         let scale = (1.0 / d as f32).sqrt();
         let mut tensors = Vec::new();
         for _ in 0..config.layers {
-            tensors.push(Matrix::random(d, d, scale, &mut rng)); // W
+            tensors.push(Matrix::random(d, d, scale, &mut rng)); // W (self for SAGE)
             tensors.push(Matrix::zeros(1, d)); // b
-            if config.kind == ModelKind::Gat {
-                tensors.push(Matrix::random(d, config.heads, scale, &mut rng)); // a_src
-                tensors.push(Matrix::random(d, config.heads, scale, &mut rng)); // a_dst
+            match config.kind {
+                ModelKind::Gcn => {}
+                ModelKind::Gat => {
+                    tensors.push(Matrix::random(d, config.heads, scale, &mut rng)); // a_src
+                    tensors.push(Matrix::random(d, config.heads, scale, &mut rng)); // a_dst
+                }
+                ModelKind::Sage => {
+                    tensors.push(Matrix::random(d, d, scale, &mut rng)); // W_neigh
+                    if config.aggregator == Aggregator::Pool {
+                        tensors.push(Matrix::random(d, d, scale, &mut rng)); // W_pool
+                        tensors.push(Matrix::zeros(1, d)); // b_pool
+                    }
+                }
             }
         }
         ModelWeights { config: config.clone(), tensors }
@@ -125,6 +250,21 @@ impl ModelWeights {
     pub fn layer_a_dst(&self, l: usize) -> &Matrix {
         assert_eq!(self.config.kind, ModelKind::Gat);
         &self.tensors[l * 4 + 3]
+    }
+    /// SAGE neighbor projection (`layer_w` is the self projection).
+    pub fn layer_w_neigh(&self, l: usize) -> &Matrix {
+        assert_eq!(self.config.kind, ModelKind::Sage);
+        &self.tensors[l * self.config.tensors_per_layer() + 2]
+    }
+    /// SAGE pooling MLP weight (pool aggregator only).
+    pub fn layer_w_pool(&self, l: usize) -> &Matrix {
+        assert_eq!(self.config.aggregator, Aggregator::Pool);
+        &self.tensors[l * self.config.tensors_per_layer() + 3]
+    }
+    /// SAGE pooling MLP bias (pool aggregator only).
+    pub fn layer_b_pool(&self, l: usize) -> &[f32] {
+        assert_eq!(self.config.aggregator, Aggregator::Pool);
+        &self.tensors[l * self.config.tensors_per_layer() + 4].data
     }
 }
 
@@ -200,6 +340,29 @@ mod tests {
     fn model_kind_parse() {
         assert_eq!(ModelKind::parse("gcn").unwrap(), ModelKind::Gcn);
         assert_eq!(ModelKind::parse("gat").unwrap(), ModelKind::Gat);
-        assert!(ModelKind::parse("mlp").is_err());
+        assert_eq!(ModelKind::parse("sage").unwrap(), ModelKind::Sage);
+        let err = ModelKind::parse("mlp").unwrap_err().to_string();
+        assert!(err.contains("gcn") && err.contains("gat") && err.contains("sage"), "{}", err);
+        let err = Aggregator::parse("median").unwrap_err().to_string();
+        assert!(err.contains("mean") && err.contains("pool"), "{}", err);
+    }
+
+    #[test]
+    fn sage_weights_layout() {
+        let mean = ModelWeights::random(&ModelConfig::sage(2, 8, Aggregator::Mean), 1);
+        assert_eq!(mean.tensors.len(), 6);
+        assert_eq!(mean.layer_w_neigh(1).rows, 8);
+        let pool = ModelWeights::random(&ModelConfig::sage(2, 8, Aggregator::Pool), 1);
+        assert_eq!(pool.tensors.len(), 10);
+        assert_eq!(pool.layer_w_pool(1).cols, 8);
+        assert_eq!(pool.layer_b_pool(0).len(), 8);
+    }
+
+    #[test]
+    fn registry_covers_all_kinds() {
+        for kind in ModelKind::ALL {
+            assert_eq!(kind.model().kind(), kind);
+            assert_eq!(ModelKind::parse(kind.name()).unwrap(), kind);
+        }
     }
 }

@@ -1,19 +1,21 @@
-//! Single-machine dense oracles for the GCN and GAT forward passes —
-//! the ground truth the distributed implementations must reproduce
-//! bit-for-bit up to float-accumulation order.
+//! Single-machine dense oracles for the GCN, GAT, and GraphSAGE forward
+//! passes — the ground truth the distributed implementations must
+//! reproduce bit-for-bit up to float-accumulation order.
 //!
-//! The per-layer functions ([`gcn_layer`], [`gat_layer`]) are exposed
-//! separately so the delta-inference state (`coordinator::delta`) can
-//! cache every intermediate `H^(l)`; [`gat_layer_rows`] recomputes just a
-//! set of destination rows — the affected-set fallback path for GAT —
-//! with arithmetic identical to the full layer (projection and attention
-//! are row-independent).
+//! The per-layer functions ([`gcn_layer`], [`gat_layer`], [`sage_layer`])
+//! are exposed separately so the delta-inference state
+//! (`coordinator::delta`) can cache every intermediate `H^(l)`; the
+//! `*_layer_rows` variants recompute just a set of destination rows — the
+//! frontier-restricted recompute behind `GnnModel::layer_rows` — with
+//! arithmetic identical to the full layer (projection, attention, and
+//! pooling are all row-independent, and `Matrix::matmul` computes each
+//! output row independently of the band layout).
 
 use crate::graph::{Csr, NodeId};
 use crate::sampling::LayerGraphs;
 use crate::tensor::{leaky_relu, Matrix};
 
-use super::{ModelKind, ModelWeights};
+use super::{Aggregator, ModelKind, ModelWeights};
 
 /// One dense GCN layer over sampled graph `g`: mean aggregation with a
 /// self loop, bias, and optional ReLU.
@@ -32,6 +34,58 @@ pub fn gcn_layer(g: &Csr, h: &Matrix, weights: &ModelWeights, l: usize, relu: bo
         }
         // self loop
         for (o, &x) in orow.iter_mut().zip(hw.row(r)) {
+            *o += w * x;
+        }
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o += b[j];
+            if relu {
+                *o = o.max(0.0);
+            }
+        }
+    }
+    out
+}
+
+/// Recompute only the destination rows in `rows` (global ids) of
+/// [`gcn_layer`] against a partition-local CSR `g` whose local row `i` is
+/// global row `row_base + i`. Output row `i` is bit-identical to row
+/// `rows[i]` of the full dense layer: the projection is restricted to the
+/// gathered rows (`matmul` rows are band-independent) and the
+/// accumulation replays the full layer's exact op order.
+pub fn gcn_layer_rows(
+    g: &Csr,
+    row_base: usize,
+    h: &Matrix,
+    weights: &ModelWeights,
+    l: usize,
+    relu: bool,
+    rows: &[NodeId],
+) -> Matrix {
+    let mut needed: Vec<usize> = Vec::new();
+    for &r in rows {
+        needed.push(r as usize);
+        needed.extend(g.row(r as usize - row_base).iter().map(|&s| s as usize));
+    }
+    needed.sort_unstable();
+    needed.dedup();
+    let sub = h.gather_rows(&needed);
+    let hw = sub.matmul(weights.layer_w(l));
+    let b = weights.layer_b(l);
+    let at = |global: usize| -> usize {
+        needed.binary_search(&global).expect("source missing from gather")
+    };
+    let mut out = Matrix::zeros(rows.len(), hw.cols);
+    for (i, &r) in rows.iter().enumerate() {
+        let row_nodes = g.row(r as usize - row_base);
+        let w = 1.0 / (row_nodes.len() as f32 + 1.0);
+        let orow = out.row_mut(i);
+        for &s in row_nodes {
+            for (o, &x) in orow.iter_mut().zip(hw.row(at(s as usize))) {
+                *o += w * x;
+            }
+        }
+        // self loop
+        for (o, &x) in orow.iter_mut().zip(hw.row(at(r as usize))) {
             *o += w * x;
         }
         for (j, o) in orow.iter_mut().enumerate() {
@@ -85,13 +139,15 @@ pub fn gat_layer(g: &Csr, h: &Matrix, weights: &ModelWeights, l: usize, relu: bo
     out
 }
 
-/// Recompute only the destination rows in `rows` of [`gat_layer`],
-/// projecting just the sources those rows reference. Output row `i`
-/// equals row `rows[i]` of the full layer (projection and attention
-/// scalars are row-independent, so restricting them changes no
-/// arithmetic).
+/// Recompute only the destination rows in `rows` (global ids) of
+/// [`gat_layer`] against a partition-local CSR `g` whose local row `i` is
+/// global row `row_base + i`, projecting just the sources those rows
+/// reference. Output row `i` equals row `rows[i]` of the full layer
+/// (projection and attention scalars are row-independent, so restricting
+/// them changes no arithmetic). Pass `row_base = 0` for a global CSR.
 pub fn gat_layer_rows(
     g: &Csr,
+    row_base: usize,
     h: &Matrix,
     weights: &ModelWeights,
     l: usize,
@@ -103,7 +159,7 @@ pub fn gat_layer_rows(
     let mut needed: Vec<usize> = Vec::new();
     for &r in rows {
         needed.push(r as usize);
-        needed.extend(g.row(r as usize).iter().map(|&s| s as usize));
+        needed.extend(g.row(r as usize - row_base).iter().map(|&s| s as usize));
     }
     needed.sort_unstable();
     needed.dedup();
@@ -119,7 +175,7 @@ pub fn gat_layer_rows(
     };
     let mut out = Matrix::zeros(rows.len(), d);
     for (i, &r) in rows.iter().enumerate() {
-        let nbrs = g.row(r as usize);
+        let nbrs = g.row(r as usize - row_base);
         gat_row(
             nbrs,
             r as usize,
@@ -212,6 +268,173 @@ pub fn gat_reference(layers: &LayerGraphs, h0: &Matrix, weights: &ModelWeights) 
     h
 }
 
+/// One dense GraphSAGE layer: mean or max-pool neighbor aggregation plus
+/// a separate self projection, bias, optional ReLU. Destinations with no
+/// sampled in-neighbors get a zero neighbor term (mean) / zero pooled
+/// vector (pool).
+pub fn sage_layer(g: &Csr, h: &Matrix, weights: &ModelWeights, l: usize, relu: bool) -> Matrix {
+    let hs = h.matmul(weights.layer_w(l));
+    let b = weights.layer_b(l);
+    let d = hs.cols;
+    let mut out = Matrix::zeros(h.rows, d);
+    match weights.config.aggregator {
+        Aggregator::Mean => {
+            let hn = h.matmul(weights.layer_w_neigh(l));
+            for r in 0..g.n_rows {
+                sage_mean_row(g.row(r), |gid| hn.row(gid), hs.row(r), b, relu, out.row_mut(r));
+            }
+        }
+        Aggregator::Pool => {
+            let hp = pooled_rows(h, weights, l);
+            let mut mx = Matrix::zeros(h.rows, d);
+            for r in 0..g.n_rows {
+                pool_max(g.row(r), |gid| hp.row(gid), mx.row_mut(r));
+            }
+            let mxn = mx.matmul(weights.layer_w_neigh(l));
+            for r in 0..g.n_rows {
+                sage_pool_row(mxn.row(r), hs.row(r), b, relu, out.row_mut(r));
+            }
+        }
+    }
+    out
+}
+
+/// Recompute only the destination rows in `rows` (global ids) of
+/// [`sage_layer`] against a partition-local CSR `g` whose local row `i`
+/// is global row `row_base + i`. Output row `i` is bit-identical to row
+/// `rows[i]` of the full layer (projections and the pooling MLP are
+/// row-wise, and `f32::max` is exactly order-insensitive).
+pub fn sage_layer_rows(
+    g: &Csr,
+    row_base: usize,
+    h: &Matrix,
+    weights: &ModelWeights,
+    l: usize,
+    relu: bool,
+    rows: &[NodeId],
+) -> Matrix {
+    let mut needed: Vec<usize> = Vec::new();
+    for &r in rows {
+        needed.push(r as usize);
+        needed.extend(g.row(r as usize - row_base).iter().map(|&s| s as usize));
+    }
+    needed.sort_unstable();
+    needed.dedup();
+    let sub = h.gather_rows(&needed);
+    let hs = sub.matmul(weights.layer_w(l));
+    let b = weights.layer_b(l);
+    let d = hs.cols;
+    let at = |global: usize| -> usize {
+        needed.binary_search(&global).expect("source missing from gather")
+    };
+    let mut out = Matrix::zeros(rows.len(), d);
+    match weights.config.aggregator {
+        Aggregator::Mean => {
+            let hn = sub.matmul(weights.layer_w_neigh(l));
+            for (i, &r) in rows.iter().enumerate() {
+                let nbrs = g.row(r as usize - row_base);
+                sage_mean_row(
+                    nbrs,
+                    |gid| hn.row(at(gid)),
+                    hs.row(at(r as usize)),
+                    b,
+                    relu,
+                    out.row_mut(i),
+                );
+            }
+        }
+        Aggregator::Pool => {
+            let hp = pooled_rows(&sub, weights, l);
+            let mut mx = Matrix::zeros(rows.len(), d);
+            for (i, &r) in rows.iter().enumerate() {
+                pool_max(g.row(r as usize - row_base), |gid| hp.row(at(gid)), mx.row_mut(i));
+            }
+            let mxn = mx.matmul(weights.layer_w_neigh(l));
+            for (i, &r) in rows.iter().enumerate() {
+                sage_pool_row(mxn.row(i), hs.row(at(r as usize)), b, relu, out.row_mut(i));
+            }
+        }
+    }
+    out
+}
+
+/// Shared per-destination SAGE mean arithmetic: `1/deg`-weighted neighbor
+/// projections in CSR order, then the self projection, bias, activation.
+fn sage_mean_row<'a>(
+    nbrs: &[NodeId],
+    hn_of: impl Fn(usize) -> &'a [f32],
+    self_row: &[f32],
+    b: &[f32],
+    relu: bool,
+    orow: &mut [f32],
+) {
+    if !nbrs.is_empty() {
+        let w = 1.0 / nbrs.len() as f32;
+        for &s in nbrs {
+            for (o, &x) in orow.iter_mut().zip(hn_of(s as usize)) {
+                *o += w * x;
+            }
+        }
+    }
+    for (o, &x) in orow.iter_mut().zip(self_row) {
+        *o += x;
+    }
+    for (j, o) in orow.iter_mut().enumerate() {
+        *o += b[j];
+        if relu {
+            *o = o.max(0.0);
+        }
+    }
+}
+
+/// Pooling MLP applied row-wise: `relu(h W_pool + b_pool)`.
+fn pooled_rows(h: &Matrix, weights: &ModelWeights, l: usize) -> Matrix {
+    let mut hp = h.matmul(weights.layer_w_pool(l));
+    let bp = weights.layer_b_pool(l);
+    let cols = hp.cols;
+    for r in 0..hp.rows {
+        let row = hp.row_mut(r);
+        for j in 0..cols {
+            row[j] = (row[j] + bp[j]).max(0.0);
+        }
+    }
+    hp
+}
+
+/// Element-wise max over pooled source rows; empty neighborhoods stay
+/// zero (`f32::max` is exactly commutative/associative for non-NaN
+/// inputs, so the result is independent of visit order).
+fn pool_max<'a>(nbrs: &[NodeId], hp_of: impl Fn(usize) -> &'a [f32], mrow: &mut [f32]) {
+    if nbrs.is_empty() {
+        return;
+    }
+    mrow.fill(f32::NEG_INFINITY);
+    for &s in nbrs {
+        for (m, &x) in mrow.iter_mut().zip(hp_of(s as usize)) {
+            *m = m.max(x);
+        }
+    }
+}
+
+/// Combine a pooled-aggregate projection row with the self projection.
+fn sage_pool_row(mx_row: &[f32], self_row: &[f32], b: &[f32], relu: bool, orow: &mut [f32]) {
+    for (j, o) in orow.iter_mut().enumerate() {
+        let v = mx_row[j] + self_row[j] + b[j];
+        *o = if relu { v.max(0.0) } else { v };
+    }
+}
+
+/// Dense GraphSAGE forward over the sampled layer graphs.
+pub fn sage_reference(layers: &LayerGraphs, h0: &Matrix, weights: &ModelWeights) -> Matrix {
+    assert_eq!(weights.config.kind, ModelKind::Sage);
+    let n_layers = weights.config.layers;
+    let mut h = h0.clone();
+    for l in 0..n_layers {
+        h = sage_layer(&layers.layers[l], &h, weights, l, l + 1 != n_layers);
+    }
+    h
+}
+
 /// Classification accuracy of argmax(embeddings) vs labels over a mask.
 pub fn accuracy(embeddings: &Matrix, labels: &[u32], mask: impl Fn(usize) -> bool) -> f64 {
     let mut correct = 0usize;
@@ -299,10 +522,73 @@ mod tests {
         let h = Matrix::random(g.n_rows, 8, 1.0, &mut rng);
         let full = gat_layer(&g, &h, &w, 0, true);
         let rows: [NodeId; 4] = [0, 5, 17, (g.n_rows - 1) as NodeId];
-        let got = gat_layer_rows(&g, &h, &w, 0, true, &rows);
+        let got = gat_layer_rows(&g, 0, &h, &w, 0, true, &rows);
         for (i, &r) in rows.iter().enumerate() {
             // row-independent arithmetic: restriction is bit-exact
             assert_eq!(got.row(i), full.row(r as usize), "row {} diverged", r);
+        }
+    }
+
+    #[test]
+    fn sage_reference_runs_and_zero_degree_rows_get_self_only() {
+        // node 2 has no in-edges: its mean output must be h[2]·W_self + b.
+        let g = Csr::from_edges(3, &[(1, 0), (2, 0), (0, 1)]);
+        let layers = LayerGraphs { layers: vec![g] };
+        let cfg = ModelConfig::sage(1, 4, Aggregator::Mean);
+        let w = ModelWeights::random(&cfg, 3);
+        let mut rng = Rng::new(4);
+        let h0 = Matrix::random(3, 4, 1.0, &mut rng);
+        let out = sage_reference(&layers, &h0, &w);
+        let self_only = h0.gather_rows(&[2]).matmul(w.layer_w(0));
+        for j in 0..4 {
+            assert_eq!(out.get(2, j), self_only.get(0, j) + w.layer_b(0)[j]);
+        }
+    }
+
+    #[test]
+    fn layer_rows_partition_slice_bit_exact_all_kinds() {
+        // The GnnModel::layer_rows contract: against a partition-local CSR
+        // slice (local rows, global columns), restricted recompute of any
+        // row set is bit-identical to the full dense layer on the global
+        // graph — for every model in the zoo.
+        let g = Csr::from(&rmat(6, 400, RmatParams::paper(), 9));
+        let n = g.n_rows;
+        let (lo, hi) = (n / 3, 2 * n / 3);
+        let mut edges = Vec::new();
+        for r in lo..hi {
+            for &s in g.row(r) {
+                edges.push((s, (r - lo) as NodeId));
+            }
+        }
+        let slice = Csr::from_edges_rect(hi - lo, n, &edges);
+        for r in lo..hi {
+            assert_eq!(slice.row(r - lo), g.row(r), "slice must preserve row order");
+        }
+        let mut rng = Rng::new(12);
+        let h = Matrix::random(n, 8, 1.0, &mut rng);
+        let configs = [
+            ModelConfig::gcn(1, 8),
+            ModelConfig::gat(1, 8, 4),
+            ModelConfig::sage(1, 8, Aggregator::Mean),
+            ModelConfig::sage(1, 8, Aggregator::Pool),
+        ];
+        for cfg in configs {
+            let w = ModelWeights::random(&cfg, 11);
+            let model = cfg.kind.model();
+            let full = model.layer(&g, &h, &w, 0, true);
+            let rows: Vec<NodeId> =
+                vec![lo as NodeId, (lo + 3) as NodeId, (hi - 1) as NodeId];
+            let got = model.layer_rows(&slice, lo, &h, &w, 0, true, &rows);
+            for (i, &r) in rows.iter().enumerate() {
+                assert_eq!(
+                    got.row(i),
+                    full.row(r as usize),
+                    "{:?}/{:?} row {} diverged",
+                    cfg.kind,
+                    cfg.aggregator,
+                    r
+                );
+            }
         }
     }
 

@@ -1,0 +1,335 @@
+//! Distributed GraphSAGE forward pass.
+//!
+//! Per layer, SAGE separates the self projection `H W_self` from the
+//! neighbor aggregate:
+//!
+//! - **mean**: `act( mean_s(H[s] W_neigh) + H[r] W_self + b )` — a second
+//!   distributed GEMM followed by the feature-exchange SPMM with `1/deg`
+//!   edge weights (destinations with no sampled in-neighbors keep a zero
+//!   neighbor term). Under an active storage budget the neighbor tile is
+//!   spilled to the paged tier exactly like GCN's `HW_l`.
+//! - **pool**: `act( max_s relu(H[s] W_pool + b_pool) · W_neigh + H[r]
+//!   W_self + b )` — the pooling MLP is applied to the local tile, pooled
+//!   rows for remote sources ship over GAT's `fetch_v` exchange (it is
+//!   shape-agnostic over columns), the element-wise max is computed
+//!   locally per destination (`f32::max` is exactly order-insensitive, so
+//!   the result is deterministic regardless of visit order), and the
+//!   pooled aggregate goes through one more distributed GEMM.
+//!
+//! Unlike GAT there is no head-alignment constraint: SAGE runs on any
+//! `(P, M)` grid, which keeps the `DEAL_MODEL=sage` CI sweep unrestricted.
+
+use crate::cluster::Ctx;
+use crate::graph::{Csr, NodeId};
+use crate::partition::PartitionPlan;
+use crate::primitives::gemm::deal_gemm;
+use crate::primitives::spmm::{deal_spmm, deal_spmm_paged, EdgeValues, PagedSpmmInput, SpmmInput};
+use crate::runtime::{Act, Backend};
+use crate::tensor::Matrix;
+use crate::Result;
+
+use super::gat::fetch_v;
+use super::gcn::StorageScope;
+use super::{reference, Aggregator, ExecOpts, GnnModel, LayerPart, ModelKind, ModelWeights};
+
+/// Model-zoo entry for GraphSAGE (see [`crate::model::GnnModel`]).
+pub struct SageModel;
+
+impl GnnModel for SageModel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Sage
+    }
+
+    fn layer(&self, g: &Csr, h: &Matrix, weights: &ModelWeights, l: usize, relu: bool) -> Matrix {
+        reference::sage_layer(g, h, weights, l, relu)
+    }
+
+    fn layer_rows(
+        &self,
+        g: &Csr,
+        row_base: usize,
+        h: &Matrix,
+        weights: &ModelWeights,
+        l: usize,
+        relu: bool,
+        rows: &[NodeId],
+    ) -> Matrix {
+        reference::sage_layer_rows(g, row_base, h, weights, l, relu, rows)
+    }
+
+    fn forward(
+        &self,
+        ctx: &mut Ctx,
+        plan: &PartitionPlan,
+        parts: &[LayerPart],
+        h: Matrix,
+        weights: &ModelWeights,
+        backend: &dyn Backend,
+        opts: &ExecOpts,
+    ) -> Result<Matrix> {
+        sage_forward(ctx, plan, parts, h, weights, backend, opts)
+    }
+}
+
+/// One machine's full GraphSAGE forward. Same contract as `gcn_forward`.
+pub fn sage_forward(
+    ctx: &mut Ctx,
+    plan: &PartitionPlan,
+    parts: &[LayerPart],
+    h: Matrix,
+    weights: &ModelWeights,
+    backend: &dyn Backend,
+    opts: &ExecOpts,
+) -> Result<Matrix> {
+    let (p_idx, m_idx) = plan.coords_of(ctx.rank);
+    let row_lo = plan.node_range(p_idx).0;
+    let (flo, fhi) = plan.feat_range(m_idx);
+    let pool = weights.config.aggregator == Aggregator::Pool;
+    let storage_scope = StorageScope::open();
+    let mut h = h;
+    ctx.mem.alloc(h.nbytes()); // register the input tile
+    let n_layers = weights.config.layers;
+    assert_eq!(parts.len(), n_layers);
+    for (l, part) in parts.iter().enumerate() {
+        let phase = opts.phase + (l as u32) * 0x10;
+        // Per-layer autotune override (DESIGN.md §Autotuning): schedule
+        // only — every variant is bit-identical.
+        let choice = crate::runtime::autotune::layer_choice(l);
+        let _chunk_guard = choice.map(|c| crate::cluster::net::ChunkRowsGuard::pin(c.chunk_rows));
+        let (mode, group_cols) =
+            choice.map_or((opts.mode, opts.group_cols), |c| (c.mode, c.group_cols));
+        let act = if l + 1 == n_layers { Act::None } else { Act::Relu };
+        let bias = &weights.layer_b(l)[flo..fhi];
+        // Self projection H W_self — kept resident, the epilogue reads it.
+        let hs = deal_gemm(ctx, plan, &h, weights.layer_w(l), backend, phase)?;
+        // Neighbor aggregate + self row + bias + act; both storage arms
+        // and both aggregators share it, keeping them bit-identical.
+        let epilogue = |r: usize, srow: &[f32], row: &mut [f32]| {
+            for j in 0..row.len() {
+                let v = row[j] + srow[j] + bias[j];
+                row[j] = match act {
+                    Act::None => v,
+                    Act::Relu => v.max(0.0),
+                };
+            }
+        };
+        let mut agg;
+        if !pool {
+            // -- mean aggregator ------------------------------------------
+            let hn = deal_gemm(ctx, plan, &h, weights.layer_w_neigh(l), backend, phase + 1)?;
+            ctx.mem.free(h.nbytes());
+            drop(h);
+            // Per-edge mean weights `1/deg` (zero-degree rows have no
+            // edges: their neighbor term stays zero).
+            let neigh_w = ctx.compute(|| {
+                let mut w = vec![0.0f32; part.csr.n_edges()];
+                for r in 0..part.csr.n_rows {
+                    let (lo, hi) = (part.csr.indptr[r] as usize, part.csr.indptr[r + 1] as usize);
+                    if hi > lo {
+                        let inv = 1.0 / (hi - lo) as f32;
+                        for e in lo..hi {
+                            w[e] = inv;
+                        }
+                    }
+                }
+                w
+            });
+            match &storage_scope {
+                None => {
+                    let input = SpmmInput {
+                        plan,
+                        g: &part.csr,
+                        vals: EdgeValues::Scalar(&neigh_w),
+                        h: &hn,
+                    };
+                    agg = deal_spmm(ctx, &input, backend, mode, group_cols, phase + 2);
+                    ctx.mem.free(hn.nbytes());
+                }
+                Some(scope) => {
+                    // Out-of-core: the neighbor tile moves to the paged
+                    // tier and its RAM copy is dropped before the SPMM.
+                    let pm = scope.spill(ctx, &format!("sage-hn-r{}-l{}", ctx.rank, l), &hn)?;
+                    ctx.mem.free(hn.nbytes());
+                    drop(hn);
+                    let input = PagedSpmmInput {
+                        plan,
+                        g: &part.csr,
+                        vals: EdgeValues::Scalar(&neigh_w),
+                        h: &pm,
+                        cache: &scope.cache,
+                    };
+                    agg = deal_spmm_paged(ctx, &input, backend, mode, group_cols, phase + 2)?;
+                    scope.release(ctx, &pm);
+                }
+            }
+        } else {
+            // -- pool aggregator ------------------------------------------
+            let mut hp = deal_gemm(ctx, plan, &h, weights.layer_w_pool(l), backend, phase + 1)?;
+            ctx.mem.free(h.nbytes());
+            drop(h);
+            let bp = &weights.layer_b_pool(l)[flo..fhi];
+            ctx.compute(|| {
+                for r in 0..hp.rows {
+                    let row = hp.row_mut(r);
+                    for j in 0..row.len() {
+                        row[j] = (row[j] + bp[j]).max(0.0);
+                    }
+                }
+            });
+            // Pooled rows for remote sources over GAT's v-exchange.
+            let hp_remote = fetch_v(ctx, plan, part, &hp, phase + 2);
+            let mx = ctx.compute(|| {
+                let n_local = hp.rows;
+                let hp_of = |s: usize| -> &[f32] {
+                    if s >= row_lo && s < row_lo + n_local {
+                        hp.row(s - row_lo)
+                    } else {
+                        let i = hp_remote
+                            .0
+                            .binary_search(&(s as u32))
+                            .expect("pooled row not fetched");
+                        hp_remote.1.row(i)
+                    }
+                };
+                let mut mx = Matrix::zeros(part.csr.n_rows, fhi - flo);
+                for r in 0..part.csr.n_rows {
+                    let nbrs = part.csr.row(r);
+                    if nbrs.is_empty() {
+                        continue; // stays zero, matching the dense oracle
+                    }
+                    let mrow = mx.row_mut(r);
+                    mrow.fill(f32::NEG_INFINITY);
+                    for &s in nbrs {
+                        for (m, &x) in mrow.iter_mut().zip(hp_of(s as usize)) {
+                            *m = m.max(x);
+                        }
+                    }
+                }
+                mx
+            });
+            ctx.mem.alloc(mx.nbytes());
+            ctx.mem.free(hp.nbytes() + hp_remote.1.nbytes());
+            drop(hp);
+            drop(hp_remote);
+            agg = deal_gemm(ctx, plan, &mx, weights.layer_w_neigh(l), backend, phase + 3)?;
+            ctx.mem.free(mx.nbytes());
+        }
+        ctx.compute(|| {
+            for r in 0..agg.rows {
+                epilogue(r, hs.row(r), agg.row_mut(r));
+            }
+        });
+        ctx.mem.free(hs.nbytes());
+        h = agg;
+    }
+    if let Some(scope) = &storage_scope {
+        scope.finish(ctx);
+    }
+    Ok(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, NetConfig};
+    use crate::graph::rmat::{rmat, RmatParams};
+    use crate::model::reference::sage_reference;
+    use crate::model::ModelConfig;
+    use crate::primitives::{gather_tiles, scatter, ExecMode};
+    use crate::sampling::sample_all_layers;
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn run_distributed(
+        g: &Csr,
+        layers: &crate::sampling::LayerGraphs,
+        h0: &Matrix,
+        weights: &Arc<ModelWeights>,
+        p: usize,
+        m: usize,
+    ) -> Matrix {
+        let d = weights.config.dim;
+        let plan = crate::partition::PartitionPlan::new(g.n_rows, d, p, m);
+        let tiles = Arc::new(scatter(&plan, h0));
+        let mut parts_by_p: Vec<Vec<LayerPart>> = Vec::new();
+        for pi in 0..plan.p {
+            let (lo, hi) = plan.node_range(pi);
+            parts_by_p
+                .push(layers.layers.iter().map(|lg| LayerPart::new(lg.slice_rows(lo, hi))).collect());
+        }
+        let parts_by_p = Arc::new(parts_by_p);
+        let plan2 = plan.clone();
+        let weights2 = Arc::clone(weights);
+        let cluster = Cluster::new(plan.world(), NetConfig::default());
+        let (outs, _) = cluster
+            .run(move |ctx| {
+                let (pi, _) = plan2.coords_of(ctx.rank);
+                let opts = ExecOpts { mode: ExecMode::Pipelined, group_cols: 16, phase: 0x40 };
+                sage_forward(
+                    ctx,
+                    &plan2,
+                    &parts_by_p[pi],
+                    tiles[ctx.rank].clone(),
+                    &weights2,
+                    &crate::runtime::Native,
+                    &opts,
+                )
+                .unwrap()
+            })
+            .unwrap();
+        gather_tiles(&plan, d, &outs)
+    }
+
+    #[test]
+    fn distributed_sage_matches_dense_reference_both_aggregators() {
+        let el = rmat(7, 900, RmatParams::paper(), 31);
+        let g = Csr::from(&el);
+        let d = 12;
+        let mut rng = Rng::new(9);
+        let h0 = Matrix::random(g.n_rows, d, 1.0, &mut rng);
+        let layers = sample_all_layers(&g, 2, 4, 77);
+        for aggregator in [Aggregator::Mean, Aggregator::Pool] {
+            let cfg = ModelConfig::sage(2, d, aggregator);
+            let weights = Arc::new(ModelWeights::random(&cfg, 3));
+            let expect = sage_reference(&layers, &h0, &weights);
+            for (p, m) in [(2usize, 2usize), (4, 1), (1, 2), (2, 3)] {
+                let got = run_distributed(&g, &layers, &h0, &weights, p, m);
+                assert_close(&got.data, &expect.data, 2e-3, 2e-3).unwrap_or_else(|e| {
+                    panic!("{:?} plan ({},{}): {}", aggregator, p, m, e)
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn paged_sage_bit_identical_to_ram() {
+        let el = rmat(7, 900, RmatParams::paper(), 31);
+        let g = Csr::from(&el);
+        let d = 12;
+        let mut rng = Rng::new(9);
+        let h0 = Matrix::random(g.n_rows, d, 1.0, &mut rng);
+        let layers = sample_all_layers(&g, 2, 4, 77);
+        for aggregator in [Aggregator::Mean, Aggregator::Pool] {
+            let cfg = ModelConfig::sage(2, d, aggregator);
+            let weights = Arc::new(ModelWeights::random(&cfg, 3));
+            for (p, m) in [(2usize, 2usize), (1, 2)] {
+                let ram = crate::storage::with_mem_budget(0, || {
+                    run_distributed(&g, &layers, &h0, &weights, p, m)
+                });
+                for (budget, page_rows) in [(4096u64, 16usize), (1024, 1)] {
+                    let paged = crate::storage::with_mem_budget(budget, || {
+                        crate::storage::with_page_rows(page_rows, || {
+                            run_distributed(&g, &layers, &h0, &weights, p, m)
+                        })
+                    });
+                    assert_eq!(
+                        paged, ram,
+                        "{:?} plan ({},{}) budget {} page_rows {}",
+                        aggregator, p, m, budget, page_rows
+                    );
+                }
+            }
+        }
+    }
+}

@@ -24,6 +24,7 @@
 //! `TableCell` swap point serves both: readers never observe a partial
 //! patch.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
@@ -34,17 +35,61 @@ use crate::Result;
 
 use super::shard::ShardedTable;
 
-/// The atomically swappable serving table.
+/// The atomically swappable serving table, optionally keeping a bounded
+/// index of past epochs for time-travel reads (`crate::temporal`).
 pub struct TableCell {
     current: RwLock<Arc<ShardedTable>>,
     epoch: AtomicU64,
+    /// `Some` when built with [`TableCell::with_retention`]: the last
+    /// `retain` published epochs stay pinned (oldest evicted first).
+    index: Option<Mutex<EpochIndex>>,
+}
+
+/// The bounded epoch deque behind a retaining [`TableCell`].
+struct EpochIndex {
+    retain: usize,
+    retained: VecDeque<(u64, Arc<ShardedTable>)>,
 }
 
 impl TableCell {
     /// Install an initial table; its epoch stamp becomes the cell's.
     pub fn new(table: ShardedTable) -> TableCell {
         let epoch = table.epoch();
-        TableCell { current: RwLock::new(Arc::new(table)), epoch: AtomicU64::new(epoch) }
+        TableCell {
+            current: RwLock::new(Arc::new(table)),
+            epoch: AtomicU64::new(epoch),
+            index: None,
+        }
+    }
+
+    /// Like [`TableCell::new`] but every published epoch — the initial
+    /// table included — is pinned in a bounded index: the cell answers
+    /// [`TableCell::load_at`] for the last `retain` epochs, evicting
+    /// oldest-first. `retain` must be >= 1.
+    pub fn with_retention(table: ShardedTable, retain: usize) -> Result<TableCell> {
+        anyhow::ensure!(retain >= 1, "retention must keep at least 1 epoch (got {})", retain);
+        let epoch = table.epoch();
+        let arc = Arc::new(table);
+        let mut retained = VecDeque::with_capacity(retain);
+        retained.push_back((epoch, Arc::clone(&arc)));
+        Ok(TableCell {
+            current: RwLock::new(arc),
+            epoch: AtomicU64::new(epoch),
+            index: Some(Mutex::new(EpochIndex { retain, retained })),
+        })
+    }
+
+    /// Wrap an already-pinned snapshot without copying it (time-travel
+    /// serving: `crate::temporal` pins a retained epoch here and spawns a
+    /// `ServePool` over it). The cell starts at the snapshot's own epoch
+    /// and shares its memory with every other holder of the `Arc`.
+    pub fn pin(table: Arc<ShardedTable>) -> TableCell {
+        let epoch = table.epoch();
+        TableCell {
+            current: RwLock::new(table),
+            epoch: AtomicU64::new(epoch),
+            index: None,
+        }
     }
 
     /// Snapshot the current epoch's table. The returned `Arc` stays valid
@@ -58,13 +103,64 @@ impl TableCell {
         self.epoch.load(Ordering::Acquire)
     }
 
+    /// Time-travel read: the exact table published at `epoch`, if this
+    /// cell retains it. Fails with a cause-naming error when the epoch
+    /// was evicted (or never published); callers with a durable history
+    /// fall back to `storage::EpochHistory::replay_to`.
+    pub fn load_at(&self, epoch: u64) -> Result<Arc<ShardedTable>> {
+        if epoch == self.epoch() {
+            return Ok(self.load());
+        }
+        let index = self
+            .index
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!(
+                "epoch {} requested but this cell keeps no epoch index (current epoch {})",
+                epoch,
+                self.epoch()
+            ))?;
+        let idx = index.lock().unwrap();
+        idx.retained
+            .iter()
+            .find(|(e, _)| *e == epoch)
+            .map(|(_, t)| Arc::clone(t))
+            .ok_or_else(|| {
+                let held: Vec<u64> = idx.retained.iter().map(|(e, _)| *e).collect();
+                anyhow::anyhow!(
+                    "epoch {} is not retained (retain = {}, held epochs {:?})",
+                    epoch,
+                    idx.retain,
+                    held
+                )
+            })
+    }
+
+    /// Epochs currently answerable by [`TableCell::load_at`], oldest
+    /// first. Empty for a cell without an index.
+    pub fn retained_epochs(&self) -> Vec<u64> {
+        match &self.index {
+            Some(index) => index.lock().unwrap().retained.iter().map(|(e, _)| *e).collect(),
+            None => Vec::new(),
+        }
+    }
+
     /// Publish `table` as the next epoch and return its epoch number.
     /// In-flight readers keep their snapshot; new loads see the new table.
+    /// On a retaining cell the new epoch is pinned into the index (and
+    /// the oldest evicted once past the retention bound).
     pub fn publish(&self, mut table: ShardedTable) -> u64 {
         let mut slot = self.current.write().unwrap();
         let next = self.epoch.load(Ordering::Acquire) + 1;
         table.set_epoch(next);
-        *slot = Arc::new(table);
+        let arc = Arc::new(table);
+        if let Some(index) = &self.index {
+            let mut idx = index.lock().unwrap();
+            idx.retained.push_back((next, Arc::clone(&arc)));
+            while idx.retained.len() > idx.retain {
+                idx.retained.pop_front();
+            }
+        }
+        *slot = arc;
         self.epoch.store(next, Ordering::Release);
         next
     }
@@ -300,6 +396,32 @@ mod tests {
         assert_eq!(new.epoch(), 1);
         let e2 = cell.publish(constant_table(8, 2, 3.0));
         assert_eq!(e2, 2);
+    }
+
+    #[test]
+    fn retention_index_serves_and_evicts_past_epochs() {
+        let cell = TableCell::with_retention(constant_table(8, 2, 0.0), 3).unwrap();
+        for v in 1..=5 {
+            cell.publish(constant_table(8, 2, v as f32));
+        }
+        assert_eq!(cell.epoch(), 5);
+        assert_eq!(cell.retained_epochs(), vec![3, 4, 5]);
+        // retained epochs read back their exact published tables
+        for e in 3..=5u64 {
+            let t = cell.load_at(e).unwrap();
+            assert_eq!(t.epoch(), e);
+            assert_eq!(t.row(0)[0], e as f32);
+        }
+        // evicted epochs fail with a cause-naming error
+        let err = cell.load_at(1).unwrap_err().to_string();
+        assert!(err.contains("not retained") && err.contains("retain = 3"), "{}", err);
+        // an index-free cell still answers the current epoch
+        let plain = TableCell::new(constant_table(4, 2, 7.0));
+        assert_eq!(plain.load_at(0).unwrap().row(0)[0], 7.0);
+        assert!(plain.load_at(1).is_err());
+        assert!(plain.retained_epochs().is_empty());
+        // retention must keep at least one epoch
+        assert!(TableCell::with_retention(constant_table(4, 2, 0.0), 0).is_err());
     }
 
     #[test]

@@ -379,6 +379,33 @@ impl DurableStore {
         Ok(())
     }
 
+    /// Journal a snapshot mark: append a `Publish` record carrying the
+    /// table digest for the epoch that was *just journaled* — without
+    /// compacting. The temporal engine (`crate::temporal`) marks every
+    /// sealed epoch this way, so the WAL keeps the full delta history a
+    /// time-travel replay needs ([`read_history`]) while each published
+    /// snapshot's digest is still durably committed; `journal_publish`
+    /// would fold the history into a checkpoint and destroy replayability.
+    pub fn journal_mark(&mut self, epoch: u64, table: &Matrix) -> Result<()> {
+        anyhow::ensure!(
+            epoch == self.last_epoch,
+            "journal_mark: epoch {} is not the journaled epoch {}",
+            epoch,
+            self.last_epoch
+        );
+        let rec = WalRecord::Publish {
+            epoch,
+            digest: table_digest(table),
+            rows: table.rows as u64,
+            dim: table.cols as u32,
+        };
+        let (bytes, io) = self.wal.append(&rec, &self.fs)?;
+        self.counters.wal_bytes += bytes;
+        self.sim_secs += io;
+        self.records_since_ckpt += 1;
+        Ok(())
+    }
+
     /// Journal a full-table publish: compact (checkpoint `table` at
     /// `epoch`, rotate the WAL) *then* append the `Publish` record
     /// carrying the table digest. Called before the serving swap, so a
@@ -500,6 +527,122 @@ impl DurableStore {
     }
 }
 
+/// Read-only view of a store's epoch history: the live checkpoint plus
+/// every journaled delta and snapshot mark after it, in epoch order.
+/// Unlike [`DurableStore::open`] this touches nothing on disk — no WAL
+/// reopen, no stale-generation cleanup — so it can run against a store
+/// another process (or a live [`DurableStore`]) still owns.
+pub struct EpochHistory {
+    /// Epoch of the checkpoint `baseline` holds (the watermark).
+    pub baseline_epoch: u64,
+    /// The checkpoint table — the state as of `baseline_epoch`.
+    pub baseline: Matrix,
+    /// Pipeline seed echoed through the store files.
+    pub seed: u64,
+    /// Journaled deltas after the checkpoint: `(epoch, batch, patched
+    /// rows, patch values)`, oldest first.
+    pub deltas: Vec<(u64, UpdateBatch, Vec<u32>, Matrix)>,
+    /// Snapshot marks: `(epoch, table digest)` per `Publish` record.
+    pub published: Vec<(u64, u64)>,
+}
+
+impl EpochHistory {
+    /// Scan `dir`'s newest committed generation without mutating it.
+    pub fn read(dir: &Path) -> Result<EpochHistory> {
+        let gens = checkpoint::list_gens(dir)?;
+        anyhow::ensure!(!gens.is_empty(), "no durable store in {:?}", dir);
+        let mut live = None;
+        for &g in &gens {
+            if let Ok(meta) = checkpoint::read_meta(dir, g) {
+                live = Some((g, meta));
+                break;
+            }
+        }
+        let (gen, meta) =
+            live.ok_or_else(|| anyhow::anyhow!("no committed checkpoint generation in {:?}", dir))?;
+        let fs = SimFs::new(DEFAULT_SPILL_GBPS);
+        let (_, baseline, _) = checkpoint::read(dir, gen, &fs)?;
+        let wpath = wal::wal_path(dir, gen);
+        let mut deltas = Vec::new();
+        let mut published = Vec::new();
+        if wpath.exists() {
+            let scan = wal::scan(&wpath)?;
+            anyhow::ensure!(
+                scan.gen == gen && scan.seed == meta.seed,
+                "wal {:?} does not match checkpoint gen {}",
+                wpath,
+                gen
+            );
+            for rec in scan.records {
+                match rec {
+                    WalRecord::Delta { epoch, batch, rows, values } => {
+                        deltas.push((epoch, batch, rows, values));
+                    }
+                    WalRecord::Publish { epoch, digest, .. } => {
+                        published.push((epoch, digest));
+                    }
+                }
+            }
+        }
+        Ok(EpochHistory {
+            baseline_epoch: meta.epoch,
+            baseline,
+            seed: meta.seed,
+            deltas,
+            published,
+        })
+    }
+
+    /// Last journaled epoch in the history.
+    pub fn last_epoch(&self) -> u64 {
+        self.deltas.last().map_or(self.baseline_epoch, |(e, ..)| *e)
+    }
+
+    /// Reconstruct the table as of `epoch` by replaying the journaled
+    /// patches over the checkpoint, verifying the snapshot-mark digest
+    /// when one was journaled for that epoch — the time-travel read path
+    /// for epochs whose resident snapshot was evicted.
+    pub fn replay_to(&self, epoch: u64) -> Result<Matrix> {
+        anyhow::ensure!(
+            epoch >= self.baseline_epoch,
+            "epoch {} predates the checkpoint watermark {} — compacted away",
+            epoch,
+            self.baseline_epoch
+        );
+        anyhow::ensure!(
+            epoch <= self.last_epoch(),
+            "epoch {} is ahead of the journaled history (last epoch {})",
+            epoch,
+            self.last_epoch()
+        );
+        let mut table = self.baseline.clone();
+        for (e, _, rows, values) in &self.deltas {
+            if *e > epoch {
+                break;
+            }
+            for (i, &r) in rows.iter().enumerate() {
+                anyhow::ensure!(
+                    (r as usize) < table.rows,
+                    "history patch row {} outside table of {} rows",
+                    r,
+                    table.rows
+                );
+                table.row_mut(r as usize).copy_from_slice(values.row(i));
+            }
+        }
+        if let Some(&(_, digest)) = self.published.iter().find(|(e, _)| *e == epoch) {
+            anyhow::ensure!(
+                digest == table_digest(&table),
+                "replay to epoch {} digests {:#018x}, journaled mark says {:#018x}",
+                epoch,
+                table_digest(&table),
+                digest
+            );
+        }
+        Ok(table)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -565,6 +708,48 @@ mod tests {
         assert_eq!((rec.epoch, rec.watermark), (1, 1));
         assert_eq!(rec.table.data, t1.data);
         assert_eq!(rec.records_replayed, 1, "the publish record is in the new wal");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_mark_keeps_history_replayable() {
+        let dir = tmp_dir("mark");
+        let t0 = Matrix::from_vec(4, 2, vec![0.25; 8]);
+        let mut store = DurableStore::create(
+            &dir,
+            11,
+            &t0,
+            DurableOptions { compact_every: u64::MAX },
+        )
+        .unwrap();
+        let mut table = t0.clone();
+        let mut snapshots = vec![t0.clone()];
+        for e in 1..=3u64 {
+            let rows = vec![(e % 4) as u32];
+            let values = Matrix::from_vec(1, 2, vec![e as f32, -(e as f32)]);
+            store.journal_delta(e, &UpdateBatch::default(), &rows, &values).unwrap();
+            patch(&mut table, &rows, &values);
+            store.journal_mark(e, &table).unwrap();
+            snapshots.push(table.clone());
+        }
+        // a mark for an epoch that isn't the journaled one is rejected
+        assert!(store.journal_mark(7, &table).is_err());
+        drop(store);
+
+        let hist = EpochHistory::read(&dir).unwrap();
+        assert_eq!((hist.baseline_epoch, hist.last_epoch()), (0, 3));
+        assert_eq!(hist.deltas.len(), 3);
+        assert_eq!(hist.published.len(), 3);
+        for (e, want) in snapshots.iter().enumerate() {
+            let got = hist.replay_to(e as u64).unwrap();
+            assert_eq!(&got, want, "replay to epoch {} diverged", e);
+        }
+        assert!(hist.replay_to(9).is_err(), "future epochs are rejected");
+
+        // a normal reopen also replays the marked WAL cleanly
+        let (_, rec) = DurableStore::open(&dir, DurableOptions::default()).unwrap();
+        assert_eq!(rec.epoch, 3);
+        assert_eq!(rec.table, table);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

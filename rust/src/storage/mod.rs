@@ -54,7 +54,7 @@ use std::sync::{Mutex, OnceLock};
 use crate::cluster::Ctx;
 
 pub use cache::{FileId, PageCache, SharedPageCache};
-pub use durable::{DurableOptions, DurableStore, Recovered};
+pub use durable::{DurableOptions, DurableStore, EpochHistory, Recovered};
 pub use pagefile::PageFile;
 pub use paged::{PagedCsr, PagedMatrix};
 

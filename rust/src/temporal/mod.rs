@@ -1,0 +1,686 @@
+//! Temporal embedding engine (DESIGN.md §Temporal): replay a timestamped
+//! edge stream through the delta engine, seal a **versioned epoch
+//! snapshot** at every tick boundary, and serve time-travel queries
+//! (`embed` / `similar` *at epoch t*) against any retained epoch.
+//!
+//! The engine folds events into one pending [`UpdateBatch`] per epoch
+//! window. Two properties make the published snapshots *exact*:
+//!
+//! 1. **Sequential fold** — an in-window `RemoveEdge` that matches a
+//!    still-pending `AddEdge` cancels it (edge instances are
+//!    indistinguishable), so the single batch the boundary applies is
+//!    semantically identical to applying the events one by one. Any other
+//!    order (`remove` before `add`, repeated feature writes) already
+//!    matches the batch discipline (removals resolve against the
+//!    pre-batch graph, adds append afterwards, feature writes apply in
+//!    order).
+//! 2. **Exact delta mode** — the state runs with
+//!    [`DeltaState::set_exact`], so after *every* apply the cached
+//!    activations are bit-identical to a fresh dense init over the
+//!    current graph. A published snapshot therefore depends only on the
+//!    graph as of its boundary tick — never on how the replayed stream
+//!    was chopped into `ingest` calls — and is bit-identical to a cold
+//!    full-graph rerun at every thread count, chunk size, and memory
+//!    budget (hard-asserted in `tests/temporal.rs`).
+//!
+//! Snapshots publish into a retention-bounded
+//! [`TableCell`](crate::serve::TableCell) (copy-on-write per shard: an
+//! epoch that patched 1% of rows shares the other 99% with its
+//! predecessor). With a durable directory configured, every sealed epoch
+//! is journaled (`DurableStore::journal_delta`) and digest-marked
+//! (`DurableStore::journal_mark`) *before* it publishes — evicted epochs
+//! stay reachable through `storage::EpochHistory::replay_to`, and
+//! [`TemporalEngine::resume`] rebuilds the full epoch index from the
+//! journal after a restart.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::DealConfig;
+use crate::coordinator::delta::{DeltaState, UpdateBatch};
+use crate::graph::NodeId;
+use crate::runtime::Backend;
+use crate::serve::{PoolOpts, Request, Response, ServePool, ShardedTable, TableCell};
+use crate::storage::durable::table_digest;
+use crate::storage::{DurableOptions, DurableStore, EpochHistory};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Per-epoch seed salt for deterministic event synthesis: resuming from
+/// the journal regenerates the exact same future stream.
+const SYNTH_SALT: u64 = 0x7E4C_0DE5_EED5_A17u64;
+
+/// One timestamped graph event.
+#[derive(Clone, Debug)]
+pub struct TemporalEvent {
+    /// Logical timestamp; the stream must be non-decreasing in `tick`.
+    pub tick: u64,
+    pub op: TemporalOp,
+}
+
+/// The event kinds a temporal stream carries.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TemporalOp {
+    /// `(src, dst)`: src becomes an in-neighbor of dst.
+    AddEdge(NodeId, NodeId),
+    /// `(src, dst)`: remove one instance of the edge if present.
+    RemoveEdge(NodeId, NodeId),
+    /// Replace a node's feature row.
+    SetFeature(NodeId, Vec<f32>),
+}
+
+/// Engine knobs (CLI: `deal temporal --snapshot-every --retain`).
+#[derive(Clone, Debug)]
+pub struct TemporalOpts {
+    /// Ticks per epoch window: epoch `e` seals once an event at tick
+    /// `>= e * snapshot_every` arrives (or `advance_to` passes it).
+    pub snapshot_every: u64,
+    /// Resident snapshots kept for time-travel reads (oldest evicted
+    /// first); evicted epochs need a durable history to stay reachable.
+    pub retain: usize,
+    /// Journal directory; `None` = ephemeral (no resume, no eviction
+    /// fallback).
+    pub durable_dir: Option<PathBuf>,
+}
+
+impl Default for TemporalOpts {
+    fn default() -> Self {
+        TemporalOpts { snapshot_every: 8, retain: 4, durable_dir: None }
+    }
+}
+
+/// What sealing one epoch produced.
+#[derive(Clone, Debug)]
+pub struct EpochReport {
+    pub epoch: u64,
+    /// Boundary tick the epoch sealed at (`epoch * snapshot_every`).
+    pub seal_tick: u64,
+    /// Events folded into the epoch's batch.
+    pub events: usize,
+    /// Embedding rows the epoch actually changed.
+    pub updated_rows: usize,
+    /// `storage::durable::table_digest` of the published snapshot.
+    pub digest: u64,
+    /// Simulated seconds of the incremental refresh.
+    pub sim_secs: f64,
+    /// Wall seconds of the seal on this host.
+    pub wall_secs: f64,
+}
+
+/// The temporal engine: a live exact-mode [`DeltaState`], a
+/// retention-bounded epoch index, and an optional durable journal.
+pub struct TemporalEngine {
+    cfg: DealConfig,
+    state: DeltaState,
+    cell: Arc<TableCell>,
+    durable: Option<DurableStore>,
+    snapshot_every: u64,
+    /// Last ingested tick.
+    clock: u64,
+    /// Last sealed (published) epoch.
+    sealed: u64,
+    pending: UpdateBatch,
+    pending_events: usize,
+    reports: Vec<EpochReport>,
+}
+
+impl TemporalEngine {
+    /// Build epoch 0 from the configured dataset: full inference state in
+    /// exact mode, snapshot published (and journaled when durable).
+    pub fn new(cfg: DealConfig, opts: &TemporalOpts) -> Result<TemporalEngine> {
+        anyhow::ensure!(opts.snapshot_every >= 1, "snapshot_every must be >= 1");
+        let mut state = DeltaState::init(cfg.clone())?;
+        state.set_exact(true);
+        let table = ShardedTable::from_inference_plan(state.plan(), state.embeddings(), 0);
+        let cell = Arc::new(TableCell::with_retention(table, opts.retain)?);
+        let durable = match &opts.durable_dir {
+            Some(dir) => {
+                let mut store = DurableStore::create(
+                    dir,
+                    cfg.exec.seed,
+                    state.embeddings(),
+                    DurableOptions { compact_every: u64::MAX },
+                )?;
+                store.journal_mark(0, state.embeddings())?;
+                Some(store)
+            }
+            None => None,
+        };
+        Ok(TemporalEngine {
+            cfg,
+            state,
+            cell,
+            durable,
+            snapshot_every: opts.snapshot_every,
+            clock: 0,
+            sealed: 0,
+            pending: UpdateBatch::default(),
+            pending_events: 0,
+            reports: Vec::new(),
+        })
+    }
+
+    /// Rebuild the engine from a durable journal: fresh baseline from the
+    /// config, then every journaled batch re-applied in epoch order with
+    /// the journal's own patches and digests verified bit-for-bit along
+    /// the way. The restored epoch index (current epoch, retained
+    /// snapshots, digests) is exactly what the pre-restart engine held.
+    pub fn resume(cfg: DealConfig, opts: &TemporalOpts) -> Result<TemporalEngine> {
+        anyhow::ensure!(opts.snapshot_every >= 1, "snapshot_every must be >= 1");
+        let dir = opts.durable_dir.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("resume needs a durable directory (--storage-dir)")
+        })?;
+        let hist = EpochHistory::read(dir)?;
+        anyhow::ensure!(
+            hist.seed == cfg.exec.seed,
+            "durable store in {:?} was written with seed {}, config says {}",
+            dir,
+            hist.seed,
+            cfg.exec.seed
+        );
+        let mut state = DeltaState::init(cfg.clone())?;
+        state.set_exact(true);
+        anyhow::ensure!(
+            table_digest(state.embeddings()) == table_digest(&hist.baseline),
+            "journaled baseline does not match this config's epoch-0 state \
+             ({:#018x} vs {:#018x}) — wrong dataset/model/seed for this store",
+            table_digest(&hist.baseline),
+            table_digest(state.embeddings())
+        );
+        let table = ShardedTable::from_inference_plan(state.plan(), state.embeddings(), 0);
+        let cell = Arc::new(TableCell::with_retention(table, opts.retain)?);
+        let mut reports = Vec::with_capacity(hist.deltas.len());
+        for (epoch, batch, rows, values) in &hist.deltas {
+            let t0 = Instant::now();
+            let events = batch.len();
+            let rep = state.apply(batch)?;
+            anyhow::ensure!(
+                rep.updated_rows == *rows,
+                "epoch {}: replay touched different rows than the journal recorded",
+                epoch
+            );
+            let idx: Vec<usize> = rows.iter().map(|&v| v as usize).collect();
+            let recomputed = state.embeddings().gather_rows(&idx);
+            anyhow::ensure!(
+                recomputed == *values,
+                "epoch {}: replayed patch values diverged from the journal",
+                epoch
+            );
+            let published = cell.publish(cell.load().patched(rows, values)?);
+            anyhow::ensure!(published == *epoch, "epoch numbering drifted during resume");
+            let digest = table_digest(state.embeddings());
+            if let Some(&(_, marked)) = hist.published.iter().find(|(e, _)| e == epoch) {
+                anyhow::ensure!(
+                    marked == digest,
+                    "epoch {}: journaled snapshot digest {:#018x}, replay produced {:#018x}",
+                    epoch,
+                    marked,
+                    digest
+                );
+            }
+            reports.push(EpochReport {
+                epoch: *epoch,
+                seal_tick: epoch * opts.snapshot_every,
+                events,
+                updated_rows: rows.len(),
+                digest,
+                sim_secs: rep.sim_secs,
+                wall_secs: t0.elapsed().as_secs_f64(),
+            });
+        }
+        let (store, rec) = DurableStore::open(dir, DurableOptions { compact_every: u64::MAX })?;
+        anyhow::ensure!(
+            rec.table == *state.embeddings(),
+            "recovered table is not bit-identical to the replayed state"
+        );
+        let sealed = hist.last_epoch();
+        Ok(TemporalEngine {
+            cfg,
+            state,
+            cell,
+            durable: Some(store),
+            snapshot_every: opts.snapshot_every,
+            clock: sealed * opts.snapshot_every,
+            sealed,
+            pending: UpdateBatch::default(),
+            pending_events: 0,
+            reports,
+        })
+    }
+
+    // ---- accessors -----------------------------------------------------
+
+    /// Last sealed epoch.
+    pub fn epoch(&self) -> u64 {
+        self.sealed
+    }
+
+    /// Last ingested tick.
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// The live inference state (current graph, current embeddings).
+    pub fn state(&self) -> &DeltaState {
+        &self.state
+    }
+
+    /// The serving cell holding the retained epoch index.
+    pub fn cell(&self) -> &Arc<TableCell> {
+        &self.cell
+    }
+
+    /// Epochs answerable from resident snapshots, oldest first.
+    pub fn retained_epochs(&self) -> Vec<u64> {
+        self.cell.retained_epochs()
+    }
+
+    /// Seal reports so far, oldest first (resume rebuilds them from the
+    /// journal).
+    pub fn reports(&self) -> &[EpochReport] {
+        &self.reports
+    }
+
+    // ---- the replay loop -----------------------------------------------
+
+    /// Fold a tick-ordered slice of events, sealing every epoch whose
+    /// boundary the stream crosses. Returns the epochs sealed by this
+    /// call, oldest first.
+    pub fn ingest(&mut self, events: &[TemporalEvent]) -> Result<Vec<EpochReport>> {
+        let mut sealed = Vec::new();
+        for ev in events {
+            anyhow::ensure!(
+                ev.tick >= self.clock,
+                "event stream is not tick-ordered: tick {} after tick {}",
+                ev.tick,
+                self.clock
+            );
+            while ev.tick >= (self.sealed + 1) * self.snapshot_every {
+                sealed.push(self.seal()?);
+            }
+            self.clock = ev.tick;
+            match &ev.op {
+                TemporalOp::AddEdge(s, d) => self.pending.add_edges.push((*s, *d)),
+                TemporalOp::RemoveEdge(s, d) => {
+                    // cancel an in-window add instead of queueing a
+                    // removal — the sequential-fold rule (module docs)
+                    if let Some(pos) =
+                        self.pending.add_edges.iter().rposition(|&e| e == (*s, *d))
+                    {
+                        self.pending.add_edges.remove(pos);
+                    } else {
+                        self.pending.remove_edges.push((*s, *d));
+                    }
+                }
+                TemporalOp::SetFeature(v, row) => {
+                    self.pending.feature_updates.push((*v, row.clone()))
+                }
+            }
+            self.pending_events += 1;
+        }
+        Ok(sealed)
+    }
+
+    /// Advance the clock to `tick`, sealing every boundary passed — the
+    /// stream's way of saying "nothing happened until `tick`". Quiet
+    /// epochs still publish (a content-identical snapshot) so the
+    /// epoch↔tick mapping stays dense.
+    pub fn advance_to(&mut self, tick: u64) -> Result<Vec<EpochReport>> {
+        anyhow::ensure!(
+            tick >= self.clock,
+            "cannot advance the clock backwards: tick {} after tick {}",
+            tick,
+            self.clock
+        );
+        let mut sealed = Vec::new();
+        while tick >= (self.sealed + 1) * self.snapshot_every {
+            sealed.push(self.seal()?);
+        }
+        self.clock = tick;
+        Ok(sealed)
+    }
+
+    /// Seal the pending window: apply the folded batch, journal it (when
+    /// durable), publish the snapshot into the epoch index.
+    fn seal(&mut self) -> Result<EpochReport> {
+        let t0 = Instant::now();
+        let epoch = self.sealed + 1;
+        let batch = std::mem::take(&mut self.pending);
+        let events = std::mem::take(&mut self.pending_events);
+        let rep = self.state.apply(&batch)?;
+        let idx: Vec<usize> = rep.updated_rows.iter().map(|&v| v as usize).collect();
+        let values = self.state.embeddings().gather_rows(&idx);
+        let next = self.cell.load().patched(&rep.updated_rows, &values)?;
+        if let Some(store) = &mut self.durable {
+            // journal-then-publish: the epoch becomes visible only once
+            // its batch, patch, and snapshot digest are durable
+            store.journal_delta(epoch, &batch, &rep.updated_rows, &values)?;
+            store.journal_mark(epoch, self.state.embeddings())?;
+        }
+        let published = self.cell.publish(next);
+        debug_assert_eq!(published, epoch);
+        self.sealed = epoch;
+        self.clock = self.clock.max(epoch * self.snapshot_every);
+        let report = EpochReport {
+            epoch,
+            seal_tick: epoch * self.snapshot_every,
+            events,
+            updated_rows: rep.updated_rows.len(),
+            digest: table_digest(self.state.embeddings()),
+            sim_secs: rep.sim_secs,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        };
+        self.reports.push(report.clone());
+        Ok(report)
+    }
+
+    // ---- time travel ---------------------------------------------------
+
+    /// The exact snapshot published at `epoch`: resident if retained,
+    /// otherwise reconstructed from the durable journal with its digest
+    /// mark re-verified. Fails with a cause-naming error when the epoch
+    /// is unreachable.
+    pub fn snapshot_at(&self, epoch: u64) -> Result<Arc<ShardedTable>> {
+        anyhow::ensure!(
+            epoch <= self.sealed,
+            "epoch {} has not been sealed yet (current epoch {})",
+            epoch,
+            self.sealed
+        );
+        let resident = self.cell.load_at(epoch);
+        if let Ok(table) = resident {
+            return Ok(table);
+        }
+        let store = self.durable.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "epoch {} was evicted (retained: {:?}) and no durable history is \
+                 configured — rerun with --storage-dir to keep evicted epochs reachable",
+                epoch,
+                self.retained_epochs()
+            )
+        })?;
+        let hist = EpochHistory::read(store.dir())?;
+        let table = hist.replay_to(epoch)?;
+        let shards = self.state.plan().p;
+        Ok(Arc::new(ShardedTable::from_full(&table, shards, epoch)))
+    }
+
+    /// Serve a batch of requests *as of* `epoch` through the production
+    /// pool path: the snapshot is pinned into a fresh
+    /// [`TableCell`](crate::serve::TableCell) and a short-lived
+    /// [`ServePool`] answers from it — same batching, same admission,
+    /// same response bits as serving that epoch live.
+    pub fn serve_at(
+        &self,
+        epoch: u64,
+        backend: Arc<dyn Backend>,
+        requests: &[Request],
+    ) -> Result<Vec<Response>> {
+        let snapshot = self.snapshot_at(epoch)?;
+        let cell = Arc::new(TableCell::pin(snapshot));
+        let pool = ServePool::spawn(cell, backend, PoolOpts::default());
+        let mut out = Vec::with_capacity(requests.len());
+        for req in requests {
+            out.push(pool.call(req.clone())?);
+        }
+        let _ = pool.shutdown();
+        Ok(out)
+    }
+
+    // ---- deterministic stream synthesis --------------------------------
+
+    /// Synthesize a deterministic event stream for the *next* epoch
+    /// window against the current graph: `removes` removals of existing
+    /// edges, then `adds` insertions, then `feats` feature rewrites,
+    /// tick-spread across the window. The per-epoch seed derivation means
+    /// a resumed engine regenerates the identical future stream.
+    pub fn synth_events(
+        &self,
+        adds: usize,
+        removes: usize,
+        feats: usize,
+    ) -> Vec<TemporalEvent> {
+        let epoch = self.sealed + 1;
+        let mut rng =
+            Rng::new(self.cfg.exec.seed ^ SYNTH_SALT.wrapping_add(epoch.wrapping_mul(0x9E37)));
+        let batch = self.state.synth_batch(&mut rng, adds, removes, feats);
+        let mut ops: Vec<TemporalOp> = Vec::with_capacity(batch.len());
+        ops.extend(batch.remove_edges.iter().map(|&(s, d)| TemporalOp::RemoveEdge(s, d)));
+        ops.extend(batch.add_edges.iter().map(|&(s, d)| TemporalOp::AddEdge(s, d)));
+        ops.extend(
+            batch.feature_updates.into_iter().map(|(v, row)| TemporalOp::SetFeature(v, row)),
+        );
+        let lo = self.clock.max((epoch - 1) * self.snapshot_every);
+        let hi = epoch * self.snapshot_every;
+        let span = hi.saturating_sub(lo).max(1);
+        let n = ops.len().max(1) as u64;
+        ops.into_iter()
+            .enumerate()
+            .map(|(i, op)| TemporalEvent {
+                tick: (lo + (i as u64 * span) / n).min(hi - 1),
+                op,
+            })
+            .collect()
+    }
+
+    /// Fresh full-recompute oracle over the *current* graph: a cold
+    /// `DeltaState::init_with` (dense forward from scratch). The temporal
+    /// contract says the latest published snapshot equals this bitwise.
+    pub fn cold_oracle(&self) -> Result<crate::tensor::Matrix> {
+        let fresh = DeltaState::init_with(
+            self.cfg.clone(),
+            self.state.edge_list(),
+            self.state.features().clone(),
+        )?;
+        Ok(fresh.embeddings().clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::response_digest;
+
+    fn small_cfg(kind: &str) -> DealConfig {
+        let mut cfg = DealConfig::default();
+        cfg.dataset.name = "products-sim".into();
+        cfg.dataset.scale = 1.0 / 256.0; // 256 nodes
+        cfg.cluster.machines = 4;
+        cfg.cluster.feature_parts = 2;
+        cfg.model.kind = kind.into();
+        cfg.model.layers = 2;
+        cfg.model.fanout = 5;
+        cfg
+    }
+
+    fn opts(snapshot_every: u64, retain: usize) -> TemporalOpts {
+        TemporalOpts { snapshot_every, retain, durable_dir: None }
+    }
+
+    #[test]
+    fn epochs_seal_at_tick_boundaries_and_match_cold_rerun() {
+        let mut eng = TemporalEngine::new(small_cfg("gcn"), &opts(10, 8)).unwrap();
+        assert_eq!(eng.epoch(), 0);
+        for _ in 0..3 {
+            let events = eng.synth_events(12, 12, 2);
+            assert!(!events.is_empty());
+            eng.ingest(&events).unwrap();
+            let sealed = eng.advance_to((eng.epoch() + 1) * 10).unwrap();
+            assert_eq!(sealed.len(), 1);
+            // published snapshot == cold full-graph recompute, bitwise
+            let snap = eng.snapshot_at(eng.epoch()).unwrap();
+            assert_eq!(snap.to_full(), eng.cold_oracle().unwrap());
+        }
+        assert_eq!(eng.epoch(), 3);
+        assert_eq!(eng.retained_epochs(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn snapshots_are_invariant_to_ingest_batching() {
+        // one event at a time vs the whole window at once — the fold rule
+        // makes the sealed snapshot identical
+        let mk = || TemporalEngine::new(small_cfg("gcn"), &opts(16, 4)).unwrap();
+        let mut a = mk();
+        let mut b = mk();
+        let events = a.synth_events(20, 20, 3);
+        a.ingest(&events).unwrap();
+        for ev in &events {
+            b.ingest(std::slice::from_ref(ev)).unwrap();
+        }
+        let ra = a.advance_to(16).unwrap();
+        let rb = b.advance_to(16).unwrap();
+        assert_eq!(ra[0].digest, rb[0].digest);
+        assert_eq!(
+            a.snapshot_at(1).unwrap().to_full(),
+            b.snapshot_at(1).unwrap().to_full()
+        );
+    }
+
+    #[test]
+    fn add_then_remove_within_a_window_cancels_exactly() {
+        let mut eng = TemporalEngine::new(small_cfg("gcn"), &opts(8, 2)).unwrap();
+        let before_edges = eng.state().n_edges();
+        let e: (NodeId, NodeId) = (3, 7);
+        eng.ingest(&[
+            TemporalEvent { tick: 1, op: TemporalOp::AddEdge(e.0, e.1) },
+            TemporalEvent { tick: 2, op: TemporalOp::RemoveEdge(e.0, e.1) },
+        ])
+        .unwrap();
+        let rep = &eng.advance_to(8).unwrap()[0];
+        assert_eq!(rep.events, 2);
+        assert_eq!(eng.state().n_edges(), before_edges, "add+remove is a no-op");
+        assert_eq!(
+            eng.snapshot_at(1).unwrap().to_full(),
+            eng.snapshot_at(0).unwrap().to_full()
+        );
+    }
+
+    #[test]
+    fn out_of_order_events_are_rejected() {
+        let mut eng = TemporalEngine::new(small_cfg("gcn"), &opts(8, 2)).unwrap();
+        eng.ingest(&[TemporalEvent { tick: 5, op: TemporalOp::AddEdge(0, 1) }]).unwrap();
+        let err = eng
+            .ingest(&[TemporalEvent { tick: 3, op: TemporalOp::AddEdge(1, 2) }])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tick 3") && err.contains("tick 5"), "{}", err);
+        assert!(eng.advance_to(2).is_err(), "clock cannot move backwards");
+    }
+
+    #[test]
+    fn retention_evicts_but_durable_history_reconstructs() {
+        let dir = std::env::temp_dir()
+            .join(format!("deal-temporal-evict-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let o = TemporalOpts { snapshot_every: 4, retain: 2, durable_dir: Some(dir.clone()) };
+        let mut eng = TemporalEngine::new(small_cfg("gcn"), &o).unwrap();
+        let mut digests = vec![table_digest(eng.state().embeddings())]; // epoch 0
+        for _ in 0..4 {
+            let events = eng.synth_events(8, 8, 1);
+            eng.ingest(&events).unwrap();
+            let rep = &eng.advance_to((eng.epoch() + 1) * 4).unwrap()[0];
+            digests.push(rep.digest);
+        }
+        assert_eq!(eng.retained_epochs(), vec![3, 4], "retain = 2 evicted the rest");
+        // evicted epochs come back through the journal, digest-verified
+        for epoch in 0..=4u64 {
+            let snap = eng.snapshot_at(epoch).unwrap();
+            assert_eq!(table_digest(&snap.to_full()), digests[epoch as usize]);
+        }
+        let err = eng.snapshot_at(9).unwrap_err().to_string();
+        assert!(err.contains("not been sealed"), "{}", err);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ephemeral_eviction_names_the_cause() {
+        let mut eng = TemporalEngine::new(small_cfg("gcn"), &opts(4, 1)).unwrap();
+        for _ in 0..2 {
+            let events = eng.synth_events(5, 5, 1);
+            eng.ingest(&events).unwrap();
+            eng.advance_to((eng.epoch() + 1) * 4).unwrap();
+        }
+        let err = eng.snapshot_at(0).unwrap_err().to_string();
+        assert!(
+            err.contains("evicted") && err.contains("--storage-dir"),
+            "cause-naming error: {}",
+            err
+        );
+    }
+
+    #[test]
+    fn time_travel_serving_answers_from_the_exact_snapshot() {
+        let mut eng = TemporalEngine::new(small_cfg("gcn"), &opts(6, 8)).unwrap();
+        for _ in 0..2 {
+            let events = eng.synth_events(10, 10, 2);
+            eng.ingest(&events).unwrap();
+            eng.advance_to((eng.epoch() + 1) * 6).unwrap();
+        }
+        let backend: Arc<dyn Backend> = Arc::new(crate::runtime::Native);
+        let reqs = vec![
+            Request::Embed(vec![1, 7, 99]),
+            Request::Similar { ids: vec![5], k: 4 },
+        ];
+        for epoch in 0..=2u64 {
+            let responses = eng.serve_at(epoch, Arc::clone(&backend), &reqs).unwrap();
+            let snap = eng.snapshot_at(epoch).unwrap();
+            match &responses[0] {
+                Response::Embeddings(m) => {
+                    assert_eq!(m.row(0), snap.row(1), "epoch {} row mismatch", epoch);
+                    assert_eq!(m.row(2), snap.row(99));
+                }
+                other => panic!("unexpected response {:?}", other),
+            }
+        }
+        // distinct epochs serve distinct bits (the graph churned)
+        let d0 = response_digest(&eng.serve_at(0, Arc::clone(&backend), &reqs).unwrap()[1]);
+        let d2 = response_digest(&eng.serve_at(2, backend, &reqs).unwrap()[1]);
+        assert_ne!(d0, d2, "churn must be visible across epochs");
+    }
+
+    #[test]
+    fn resume_restores_the_epoch_index_bitwise() {
+        let dir = std::env::temp_dir()
+            .join(format!("deal-temporal-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let o = TemporalOpts { snapshot_every: 5, retain: 3, durable_dir: Some(dir.clone()) };
+        let mut eng = TemporalEngine::new(small_cfg("gcn"), &o).unwrap();
+        for _ in 0..3 {
+            let events = eng.synth_events(10, 10, 1);
+            eng.ingest(&events).unwrap();
+            eng.advance_to((eng.epoch() + 1) * 5).unwrap();
+        }
+        let live_digests: Vec<u64> = eng.reports().iter().map(|r| r.digest).collect();
+        let live_retained = eng.retained_epochs();
+        let live_table = eng.state().embeddings().clone();
+        drop(eng);
+
+        let resumed = TemporalEngine::resume(small_cfg("gcn"), &o).unwrap();
+        assert_eq!(resumed.epoch(), 3);
+        assert_eq!(resumed.clock(), 15);
+        assert_eq!(resumed.retained_epochs(), live_retained);
+        let resumed_digests: Vec<u64> = resumed.reports().iter().map(|r| r.digest).collect();
+        assert_eq!(resumed_digests, live_digests);
+        assert_eq!(resumed.state().embeddings(), &live_table, "bit-identical resume");
+        // the resumed engine synthesizes the identical future stream
+        let next = resumed.synth_events(4, 4, 1);
+        assert_eq!(next.len(), 9);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_rejects_a_mismatched_config() {
+        let dir = std::env::temp_dir()
+            .join(format!("deal-temporal-mismatch-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let o = TemporalOpts { snapshot_every: 5, retain: 2, durable_dir: Some(dir.clone()) };
+        let eng = TemporalEngine::new(small_cfg("gcn"), &o).unwrap();
+        drop(eng);
+        let mut wrong = small_cfg("gcn");
+        wrong.exec.seed ^= 1;
+        let err = TemporalEngine::resume(wrong, &o).unwrap_err().to_string();
+        assert!(err.contains("seed"), "cause-naming error: {}", err);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

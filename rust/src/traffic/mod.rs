@@ -30,4 +30,4 @@ pub use replay::{
     churn_into_cell, churn_into_cell_durable, replay, replay_elastic, ReplayMode, ReplayOpts,
     ReplayReport,
 };
-pub use trace::{ChurnEvent, Trace, TraceConfig, TraceEvent, ZipfSampler};
+pub use trace::{temporal_probe, ChurnEvent, Trace, TraceConfig, TraceEvent, ZipfSampler};

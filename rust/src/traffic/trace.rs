@@ -229,6 +229,27 @@ impl ZipfSampler {
     }
 }
 
+/// A deterministic Zipf-skewed probe set for time-travel serving
+/// (`deal temporal --at`, `tests/temporal.rs`): `count` alternating
+/// `Embed`/`Similar` requests over an `n`-node universe. The same
+/// `(seed, n, count)` always yields the same requests, so response
+/// digests are comparable across epochs, retention evictions, and
+/// resumed engines.
+pub fn temporal_probe(seed: u64, n: usize, count: usize) -> Vec<Request> {
+    let mut rng = Rng::new(seed ^ 0x7E4F_0B3Du64);
+    let zipf = ZipfSampler::new(n, 1.1, &mut rng);
+    (0..count)
+        .map(|i| {
+            let ids: Vec<u32> = (0..4).map(|_| zipf.sample(&mut rng)).collect();
+            if i % 2 == 0 {
+                Request::Embed(ids)
+            } else {
+                Request::Similar { ids, k: 8 }
+            }
+        })
+        .collect()
+}
+
 /// Exponential(rate) draw; `rate` must be positive.
 fn exponential(rng: &mut Rng, rate: f64) -> f64 {
     -(1.0 - rng.next_f64()).max(f64::MIN_POSITIVE).ln() / rate

@@ -16,8 +16,8 @@ use deal::cluster::NetConfig;
 use deal::config::DealConfig;
 use deal::coordinator::Pipeline;
 use deal::graph::{datasets, Csr};
-use deal::model::reference::{gat_reference, gcn_reference};
-use deal::model::{ModelConfig, ModelWeights};
+use deal::model::reference::{gat_reference, gcn_reference, sage_reference};
+use deal::model::{Aggregator, ModelConfig, ModelKind, ModelWeights};
 use deal::sampling::{sample_all_layers, LayerGraphs};
 use deal::tensor::Matrix;
 use deal::util::prop::assert_close;
@@ -67,45 +67,88 @@ fn pipeline_layer_graphs(cfg: &DealConfig, g: &Csr) -> LayerGraphs {
     }
 }
 
-/// The dense oracle for `small_cfg` under a model kind.
-fn reference_embeddings(kind: &str) -> Matrix {
+/// The model-zoo parity matrix: every `(model.kind, model.aggregator)`
+/// combination the end-to-end tests drive through the trait-dispatched
+/// pipeline. `parity_matrix_covers_every_model_kind` guards that this
+/// list stays in sync with `ModelKind::ALL`.
+const ZOO: [(&str, &str); 4] =
+    [("gcn", "mean"), ("gat", "mean"), ("sage", "mean"), ("sage", "pool")];
+
+/// The dense oracle for `small_cfg` under a model kind + aggregator.
+fn reference_embeddings(kind: &str, aggregator: &str) -> Matrix {
     let mut cfg = small_cfg();
     cfg.model.kind = kind.into();
+    cfg.model.aggregator = aggregator.into();
     let ds = datasets::load(&cfg.dataset.name, cfg.dataset.scale).unwrap();
     let g = Csr::from(&ds.edges);
     let layers = pipeline_layer_graphs(&cfg, &g);
     let model_cfg = match kind {
         "gcn" => ModelConfig::gcn(cfg.model.layers, ds.feature_dim),
-        _ => ModelConfig::gat(cfg.model.layers, ds.feature_dim, cfg.model.heads),
+        "gat" => ModelConfig::gat(cfg.model.layers, ds.feature_dim, cfg.model.heads),
+        _ => ModelConfig::sage(
+            cfg.model.layers,
+            ds.feature_dim,
+            Aggregator::parse(aggregator).unwrap(),
+        ),
     };
     let weights = ModelWeights::random(&model_cfg, cfg.exec.seed ^ 0xBEEF);
     match kind {
         "gcn" => gcn_reference(&layers, &ds.features, &weights),
-        _ => gat_reference(&layers, &ds.features, &weights),
+        "gat" => gat_reference(&layers, &ds.features, &weights),
+        _ => sage_reference(&layers, &ds.features, &weights),
     }
 }
 
-/// The parity matrix: GCN and GAT × {scan, redistribute, fused} × every
-/// execution mode, each against the dense reference at `PARITY_*`. (For
-/// GAT, `fused` exercises the documented silent fallback to
-/// redistribute.)
+/// The parity matrix: the whole model zoo × {scan, redistribute, fused}
+/// × every execution mode, each against the dense reference at
+/// `PARITY_*`. (For non-GCN kinds, `fused` exercises the documented
+/// silent fallback to redistribute.)
 #[test]
 fn parity_matrix_pipeline_vs_dense_reference() {
-    for kind in ["gcn", "gat"] {
-        let expect = reference_embeddings(kind);
+    for (kind, aggregator) in ZOO {
+        let expect = reference_embeddings(kind, aggregator);
         for prep in ["scan", "redistribute", "fused"] {
             for mode in ["monolithic", "grouped", "pipelined"] {
                 let mut cfg = small_cfg();
                 cfg.model.kind = kind.into();
+                cfg.model.aggregator = aggregator.into();
                 cfg.exec.feature_prep = prep.into();
                 cfg.exec.mode = mode.into();
                 cfg.exec.group_cols = 16;
                 let got = Pipeline::new(cfg).run().unwrap().embeddings.unwrap();
                 assert_close(&got.data, &expect.data, PARITY_ATOL, PARITY_RTOL).unwrap_or_else(
-                    |e| panic!("{} × {} × {} diverged from reference: {}", kind, prep, mode, e),
+                    |e| {
+                        panic!(
+                            "{}/{} × {} × {} diverged from reference: {}",
+                            kind, aggregator, prep, mode, e
+                        )
+                    },
                 );
             }
         }
+    }
+}
+
+/// Trait-coverage guard: every registered `ModelKind` must appear in the
+/// end-to-end parity matrix above. Adding a model to the zoo without
+/// wiring it through the full pipeline parity sweep fails here.
+#[test]
+fn parity_matrix_covers_every_model_kind() {
+    for kind in ModelKind::ALL {
+        assert!(
+            ZOO.iter().any(|(k, _)| *k == kind.name()),
+            "ModelKind::{:?} is registered but missing from the end-to-end \
+             parity matrix — add it to ZOO",
+            kind
+        );
+    }
+    // every aggregator is exercised too
+    for agg in ["mean", "pool"] {
+        assert!(
+            ZOO.iter().any(|(k, a)| *k == "sage" && *a == agg),
+            "sage aggregator '{}' missing from the parity matrix",
+            agg
+        );
     }
 }
 

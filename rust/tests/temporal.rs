@@ -1,0 +1,255 @@
+//! Temporal-engine integration (DESIGN.md §Temporal): the hard contract
+//! is **bit-identity** — every published epoch snapshot must equal a
+//! cold full-graph rerun of the graph as of that epoch's boundary tick,
+//! for every model in the zoo, resident and spilled, at every thread
+//! count. No tolerances anywhere in this file: the delta engine runs in
+//! exact mode under the temporal engine, so parity is `assert_eq` on
+//! `f32` bits.
+
+use std::sync::Arc;
+
+use deal::config::DealConfig;
+use deal::model::ModelKind;
+use deal::runtime::{par, Backend, Native};
+use deal::serve::response_digest;
+use deal::storage::with_mem_budget;
+use deal::temporal::{TemporalEngine, TemporalOpts};
+use deal::traffic::temporal_probe;
+
+fn temporal_cfg(kind: &str, aggregator: &str) -> DealConfig {
+    let mut cfg = DealConfig::default();
+    cfg.dataset.name = "products-sim".into();
+    cfg.dataset.scale = 1.0 / 256.0; // 256 nodes
+    cfg.cluster.machines = 4;
+    cfg.cluster.feature_parts = 2;
+    cfg.model.kind = kind.into();
+    cfg.model.aggregator = aggregator.into();
+    cfg.model.layers = 2;
+    cfg.model.fanout = 5;
+    cfg
+}
+
+/// Run `epochs` windows of the synthetic stream, hard-asserting after
+/// every seal that the published snapshot is bit-identical to a cold
+/// full-graph recompute. Returns the per-epoch snapshot digests.
+fn run_and_check(cfg: &DealConfig, epochs: u64) -> Vec<u64> {
+    let opts = TemporalOpts { snapshot_every: 6, retain: epochs as usize + 1, durable_dir: None };
+    let mut eng = TemporalEngine::new(cfg.clone(), &opts).unwrap();
+    let mut digests = Vec::new();
+    for _ in 0..epochs {
+        let events = eng.synth_events(10, 10, 2);
+        eng.ingest(&events).unwrap();
+        let sealed = eng.advance_to((eng.epoch() + 1) * 6).unwrap();
+        assert_eq!(sealed.len(), 1);
+        let snap = eng.snapshot_at(eng.epoch()).unwrap().to_full();
+        let cold = eng.cold_oracle().unwrap();
+        assert_eq!(
+            snap, cold,
+            "{}/{}: epoch {} snapshot != cold full-graph rerun",
+            cfg.model.kind,
+            cfg.model.aggregator,
+            eng.epoch()
+        );
+        digests.push(sealed[0].digest);
+    }
+    digests
+}
+
+/// The tentpole sweep: every model in the zoo, resident and spilled,
+/// at two thread counts — snapshots bit-identical to cold reruns in
+/// every cell, and digests identical across all cells.
+fn sweep_model(kind: &str, aggregator: &str) {
+    let cfg = temporal_cfg(kind, aggregator);
+    let mut baseline: Option<Vec<u64>> = None;
+    for threads in [1usize, 3] {
+        for budget in [0u64, 48 << 10] {
+            let digests =
+                par::with_threads(threads, || with_mem_budget(budget, || run_and_check(&cfg, 2)));
+            match &baseline {
+                None => baseline = Some(digests),
+                Some(b) => assert_eq!(
+                    &digests, b,
+                    "{}/{}: snapshot digests changed at threads={} budget={}",
+                    kind, aggregator, threads, budget
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn gcn_snapshots_bit_identical_to_cold_rerun_resident_and_spilled() {
+    sweep_model("gcn", "mean");
+}
+
+#[test]
+fn gat_snapshots_bit_identical_to_cold_rerun_resident_and_spilled() {
+    sweep_model("gat", "mean");
+}
+
+#[test]
+fn sage_mean_snapshots_bit_identical_to_cold_rerun_resident_and_spilled() {
+    sweep_model("sage", "mean");
+}
+
+#[test]
+fn sage_pool_snapshots_bit_identical_to_cold_rerun_resident_and_spilled() {
+    sweep_model("sage", "pool");
+}
+
+/// Trait-coverage guard: the sweep above must exercise every registered
+/// `ModelKind` — adding a model to the zoo without extending the parity
+/// matrix fails here, not silently.
+#[test]
+fn parity_matrix_covers_every_model_kind() {
+    let exercised = ["gcn", "gat", "sage"];
+    for kind in ModelKind::ALL {
+        assert!(
+            exercised.contains(&kind.name()),
+            "ModelKind::{:?} is not exercised by the temporal parity matrix — \
+             add a sweep_model case for '{}'",
+            kind,
+            kind.name()
+        );
+    }
+    assert_eq!(exercised.len(), ModelKind::ALL.len(), "stale kinds in the exercised list");
+}
+
+/// Time-travel responses must be bit-stable across retention eviction:
+/// the digest of a probe served at epoch 1 while it is resident equals
+/// the digest served after eviction, when epoch 1 only exists as a
+/// journal replay.
+#[test]
+fn time_travel_digests_survive_retention_eviction() {
+    let dir = std::env::temp_dir().join(format!("deal-temporal-it-evict-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = temporal_cfg("gcn", "mean");
+    let opts = TemporalOpts { snapshot_every: 4, retain: 2, durable_dir: Some(dir.clone()) };
+    let mut eng = TemporalEngine::new(cfg.clone(), &opts).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(Native);
+    let reqs = temporal_probe(cfg.exec.seed, eng.state().n_nodes(), 10);
+
+    let mut seal = |eng: &mut TemporalEngine| {
+        let events = eng.synth_events(8, 8, 1);
+        eng.ingest(&events).unwrap();
+        eng.advance_to((eng.epoch() + 1) * 4).unwrap();
+    };
+    seal(&mut eng);
+    assert!(eng.retained_epochs().contains(&1));
+    let resident: Vec<u64> = eng
+        .serve_at(1, Arc::clone(&backend), &reqs)
+        .unwrap()
+        .iter()
+        .map(response_digest)
+        .collect();
+
+    for _ in 0..3 {
+        seal(&mut eng);
+    }
+    assert!(!eng.retained_epochs().contains(&1), "retain=2 must evict epoch 1");
+    let replayed: Vec<u64> = eng
+        .serve_at(1, Arc::clone(&backend), &reqs)
+        .unwrap()
+        .iter()
+        .map(response_digest)
+        .collect();
+    assert_eq!(resident, replayed, "eviction changed time-travel response bits");
+
+    // every retained epoch still answers directly and exactly
+    for epoch in eng.retained_epochs() {
+        let snap = eng.snapshot_at(epoch).unwrap();
+        match &eng.serve_at(epoch, Arc::clone(&backend), &reqs[..1]).unwrap()[0] {
+            deal::serve::Response::Embeddings(m) => {
+                let id = reqs[0].ids()[0];
+                assert_eq!(m.row(0), snap.row(id), "epoch {} row drift", epoch);
+            }
+            other => panic!("unexpected response {:?}", other),
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--resume` contract: a resumed engine rebuilds the epoch index from
+/// the durable generations bit-for-bit — same digests, same retained
+/// epochs, same time-travel bits — and keeps sealing on top of it.
+#[test]
+fn resume_restores_epoch_index_from_durable_generations() {
+    let dir = std::env::temp_dir().join(format!("deal-temporal-it-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = temporal_cfg("sage", "mean");
+    let opts = TemporalOpts { snapshot_every: 5, retain: 3, durable_dir: Some(dir.clone()) };
+    let backend: Arc<dyn Backend> = Arc::new(Native);
+
+    let mut eng = TemporalEngine::new(cfg.clone(), &opts).unwrap();
+    let reqs = temporal_probe(cfg.exec.seed, eng.state().n_nodes(), 8);
+    for _ in 0..3 {
+        let events = eng.synth_events(9, 9, 1);
+        eng.ingest(&events).unwrap();
+        eng.advance_to((eng.epoch() + 1) * 5).unwrap();
+    }
+    let digests: Vec<u64> = eng.reports().iter().map(|r| r.digest).collect();
+    let retained = eng.retained_epochs();
+    let at2: Vec<u64> = eng
+        .serve_at(2, Arc::clone(&backend), &reqs)
+        .unwrap()
+        .iter()
+        .map(response_digest)
+        .collect();
+    drop(eng);
+
+    let mut resumed = TemporalEngine::resume(cfg.clone(), &opts).unwrap();
+    assert_eq!(resumed.epoch(), 3);
+    assert_eq!(resumed.retained_epochs(), retained);
+    assert_eq!(
+        resumed.reports().iter().map(|r| r.digest).collect::<Vec<_>>(),
+        digests,
+        "resume rebuilt different snapshots"
+    );
+    let at2_resumed: Vec<u64> = resumed
+        .serve_at(2, Arc::clone(&backend), &reqs)
+        .unwrap()
+        .iter()
+        .map(response_digest)
+        .collect();
+    assert_eq!(at2, at2_resumed, "time travel changed bits across the restart");
+
+    // sealing continues exactly where the pre-restart engine would have:
+    // the synthesized stream is seed-derived per epoch, so epoch 4 is
+    // identical to what an unrestarted engine seals
+    let events = resumed.synth_events(9, 9, 1);
+    resumed.ingest(&events).unwrap();
+    resumed.advance_to(20).unwrap();
+    assert_eq!(resumed.epoch(), 4);
+    assert_eq!(
+        resumed.snapshot_at(4).unwrap().to_full(),
+        resumed.cold_oracle().unwrap(),
+        "post-resume epoch is not bit-identical to a cold rerun"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Snapshot bits must not depend on how the event stream is chopped
+/// across `ingest` calls — one call, per-event calls, and a resumed
+/// engine all seal identical epochs (the batching-invariance half of
+/// the temporal contract).
+#[test]
+fn snapshots_never_depend_on_replay_batching() {
+    let cfg = temporal_cfg("gat", "mean");
+    let opts = TemporalOpts { snapshot_every: 12, retain: 4, durable_dir: None };
+    let mut whole = TemporalEngine::new(cfg.clone(), &opts).unwrap();
+    let mut split = TemporalEngine::new(cfg, &opts).unwrap();
+    for _ in 0..2 {
+        let events = whole.synth_events(14, 14, 2);
+        whole.ingest(&events).unwrap();
+        for chunk in events.chunks(3) {
+            split.ingest(chunk).unwrap();
+        }
+        let a = whole.advance_to((whole.epoch() + 1) * 12).unwrap();
+        let b = split.advance_to((split.epoch() + 1) * 12).unwrap();
+        assert_eq!(a[0].digest, b[0].digest, "epoch {} depends on ingest chunking", a[0].epoch);
+        assert_eq!(
+            whole.snapshot_at(whole.epoch()).unwrap().to_full(),
+            split.snapshot_at(split.epoch()).unwrap().to_full()
+        );
+    }
+}
